@@ -1,0 +1,84 @@
+//! Design-space exploration (experiment E2): sweep the accelerator's
+//! (VEC_SIZE, LANE_NUM) grid on both of the paper's devices, print the
+//! Pareto frontier and the chosen design points, and show how the
+//! optimum shifts with batch size.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use ffcnn::fpga::device::{ARRIA10, STRATIX10};
+use ffcnn::fpga::dse;
+use ffcnn::fpga::timing::{
+    ffcnn_arria10_params, ffcnn_stratix10_params,
+};
+use ffcnn::models;
+
+fn main() {
+    let model = models::alexnet();
+    for (device, chosen) in [
+        (&ARRIA10, ffcnn_arria10_params()),
+        (&STRATIX10, ffcnn_stratix10_params()),
+    ] {
+        println!(
+            "=== {} (paper design point: vec={} lane={}) ===",
+            device.device, chosen.vec_size, chosen.lane_num
+        );
+        let pts = dse::explore(&model, device, 1);
+        let feasible = pts.iter().filter(|p| p.feasible).count();
+        println!("{} grid points, {feasible} feasible", pts.len());
+        println!(
+            "{:<6}{:<6}{:>8}{:>11}{:>10}{:>12}",
+            "vec", "lane", "DSPs", "time(ms)", "GOPS", "GOPS/DSP"
+        );
+        for p in dse::pareto(&pts) {
+            let mark = if p.params.vec_size == chosen.vec_size
+                && p.params.lane_num == chosen.lane_num
+            {
+                "  <- paper's point"
+            } else {
+                ""
+            };
+            println!(
+                "{:<6}{:<6}{:>8}{:>11.2}{:>10.1}{:>12.3}{mark}",
+                p.params.vec_size,
+                p.params.lane_num,
+                p.usage.dsps,
+                p.time_ms,
+                p.gops,
+                p.gops_per_dsp
+            );
+        }
+        let lat = dse::best_latency(&pts).unwrap();
+        let den = dse::best_density(&pts).unwrap();
+        println!(
+            "latency-optimal: vec={} lane={} ({:.2} ms, {} DSPs)",
+            lat.params.vec_size, lat.params.lane_num, lat.time_ms,
+            lat.usage.dsps
+        );
+        println!(
+            "density-optimal: vec={} lane={} ({:.3} GOPS/DSP)",
+            den.params.vec_size, den.params.lane_num, den.gops_per_dsp
+        );
+
+        // Batch-size ablation at the paper's design point.
+        println!("\nbatch scaling at the paper's point:");
+        println!("{:<8}{:>11}{:>10}", "batch", "ms/image", "GOPS");
+        for batch in [1usize, 2, 4, 8, 16] {
+            let t = ffcnn::fpga::timing::simulate_model(
+                &model,
+                device,
+                &chosen,
+                batch,
+                ffcnn::fpga::timing::OverlapPolicy::WithinGroup,
+            );
+            println!(
+                "{:<8}{:>11.2}{:>10.1}",
+                batch,
+                t.time_per_image_ms(),
+                t.gops()
+            );
+        }
+        println!();
+    }
+}

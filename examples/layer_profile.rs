@@ -1,0 +1,85 @@
+//! Layer/pipeline profile (experiment E3): per-fused-group breakdown of
+//! compute vs DDR cycles on both devices, the fusion bandwidth saving,
+//! and the analytic-vs-token-simulation agreement, for AlexNet and
+//! ResNet-50.
+//!
+//! ```bash
+//! cargo run --release --example layer_profile
+//! ```
+
+use ffcnn::config::RunConfig;
+use ffcnn::fpga::pipeline::simulate_tokens;
+use ffcnn::fpga::timing::{simulate_model, OverlapPolicy};
+use ffcnn::models;
+
+fn main() {
+    for model_name in ["alexnet", "resnet50"] {
+        let model = models::by_name(model_name).unwrap();
+        for device_name in ["arria10", "stratix10"] {
+            let cfg = RunConfig {
+                model: model_name.into(),
+                device: device_name.into(),
+                ..Default::default()
+            };
+            let d = cfg.device_profile().unwrap();
+            let p = cfg.design_params().unwrap();
+            let t =
+                simulate_model(&model, d, &p, 1, OverlapPolicy::WithinGroup);
+            let tok = simulate_tokens(&model, d, &p, 1);
+            println!(
+                "=== {} on {} === {:.2} ms | {:.1} GOPS | fusion saves \
+                 {:.0}% DDR | token-sim ratio {:.3}",
+                model.name,
+                d.device,
+                t.time_per_image_ms(),
+                t.gops(),
+                t.fusion_traffic_saving() * 100.0,
+                tok.total_cycles as f64 / t.total_cycles as f64,
+            );
+            // Top-5 most expensive groups.
+            let mut idx: Vec<usize> = (0..t.groups.len()).collect();
+            idx.sort_by_key(|&i| std::cmp::Reverse(t.groups[i].cycles));
+            println!(
+                "  {:<34}{:>12}{:>12}{:>10}",
+                "top groups", "compute(cy)", "mem(cy)", "bound"
+            );
+            for &i in idx.iter().take(5) {
+                let g = &t.groups[i];
+                println!(
+                    "  {:<34}{:>12}{:>12}{:>10}",
+                    g.layers.join("+"),
+                    g.compute_cycles,
+                    g.mem_cycles,
+                    format!("{:?}", g.bound)
+                );
+            }
+            // Compute/memory bound split.
+            let mem_bound = t
+                .groups
+                .iter()
+                .filter(|g| {
+                    matches!(g.bound, ffcnn::fpga::timing::Bound::Memory)
+                })
+                .count();
+            println!(
+                "  {} groups total, {mem_bound} memory-bound\n",
+                t.groups.len()
+            );
+        }
+    }
+
+    // Overlap policy ablation (the double-buffering design choice).
+    println!("=== overlap policy ablation (alexnet, stratix10) ===");
+    let model = models::alexnet();
+    let cfg = RunConfig::default();
+    let d = cfg.device_profile().unwrap();
+    let p = cfg.design_params().unwrap();
+    for (name, pol) in [
+        ("no overlap", OverlapPolicy::None),
+        ("within-group (paper)", OverlapPolicy::WithinGroup),
+        ("full prefetch (bound)", OverlapPolicy::Full),
+    ] {
+        let t = simulate_model(&model, d, &p, 1, pol);
+        println!("{name:<24}{:>8.2} ms", t.time_per_image_ms());
+    }
+}

@@ -1,0 +1,78 @@
+//! Quickstart: load an AOT artifact, classify one image, compare the
+//! host numerics path with the simulated FPGA timing.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ffcnn::config::{default_artifacts_dir, RunConfig};
+use ffcnn::data;
+use ffcnn::fpga::timing::simulate_model;
+use ffcnn::models;
+use ffcnn::runtime::Engine;
+use ffcnn::Result;
+
+fn main() -> Result<()> {
+    // 1. The model and the board we are simulating.
+    let cfg = RunConfig {
+        model: "alexnet".into(),
+        device: "stratix10".into(),
+        artifacts_dir: default_artifacts_dir(),
+        ..Default::default()
+    };
+    let model = models::by_name(&cfg.model).unwrap();
+    let device = cfg.device_profile()?;
+    let design = cfg.design_params()?;
+    println!(
+        "FFCNN quickstart: {} ({:.2} GOPs/image) on {}",
+        model.name,
+        model.total_ops() as f64 / 1e9,
+        device.device
+    );
+
+    // 2. Real numerics: the AOT HLO artifact through the PJRT runtime.
+    let engine = Engine::open(&cfg.artifacts_dir)?;
+    let artifact = cfg.artifact_name(1);
+    println!("compiling {artifact} (cached after first run) ...");
+    engine.warm(&artifact)?;
+
+    let image = data::synth_images(1, model.in_shape, 7);
+    let t0 = std::time::Instant::now();
+    let logits = engine.execute(&artifact, &image)?;
+    let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let pred = ffcnn::coordinator::argmax(&logits);
+    println!(
+        "host (PJRT CPU) inference: {host_ms:.1} ms -> class {pred} \
+         (logit {:.4})",
+        logits[pred]
+    );
+
+    // 3. Simulated FPGA timing: what the paper's board would report.
+    let sim = simulate_model(&model, device, &design, 1, cfg.overlap);
+    println!(
+        "simulated {} (vec={} lane={}): {:.2} ms/image, {:.1} GOPS, \
+         DDR {:.1} MB ({}% saved by kernel fusion)",
+        device.name,
+        design.vec_size,
+        design.lane_num,
+        sim.time_per_image_ms(),
+        sim.gops(),
+        sim.dram_bytes as f64 / 1e6,
+        (sim.fusion_traffic_saving() * 100.0).round()
+    );
+
+    // 4. Correctness: the artifact must match its exported golden blob.
+    let meta = engine.manifest().artifact(&artifact)?.clone();
+    if meta.golden.is_some() {
+        let (ginput, gexpect) = engine.manifest().read_golden(&meta)?;
+        let gout = engine.execute(&artifact, &ginput)?;
+        let max_err = gout
+            .iter()
+            .zip(&gexpect)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("golden check: max |err| = {max_err:.2e} (OK)");
+        assert!(max_err < 1e-2, "golden mismatch");
+    }
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! End-to-end serving driver (experiment E4, DESIGN.md §4).
+//!
+//! Boots the full coordinator — boards (PJRT engines + FPGA cycle
+//! model), dynamic batchers, router — loads a real AOT'd model, and
+//! serves batched synthetic requests both closed-loop (burst) and
+//! open-loop (Poisson arrivals), reporting latency percentiles,
+//! throughput and batching effectiveness.  Results recorded in
+//! EXPERIMENTS.md §E4.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_batch
+//! # smaller/faster: FFCNN_SERVE_MODEL=tinynet FFCNN_SERVE_N=32 ...
+//! ```
+
+use ffcnn::config::{default_artifacts_dir, RunConfig};
+use ffcnn::coordinator::{InferenceService, Pace, Policy};
+use ffcnn::data;
+use ffcnn::Result;
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() -> Result<()> {
+    let model = env_or("FFCNN_SERVE_MODEL", "alexnet");
+    let conv_impl = env_or("FFCNN_SERVE_IMPL", "jnp");
+    let n: usize = env_or("FFCNN_SERVE_N", "48").parse()?;
+    let boards: usize = env_or("FFCNN_SERVE_BOARDS", "1").parse()?;
+
+    let mut cfg = RunConfig {
+        model: model.clone(),
+        device: "stratix10".into(),
+        conv_impl,
+        artifacts_dir: default_artifacts_dir(),
+        ..Default::default()
+    };
+    cfg.serving.max_batch = 8;
+    cfg.serving.max_wait_ms = 4;
+    cfg.serving.boards = boards;
+
+    let in_shape = ffcnn::models::by_name(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?
+        .in_shape;
+
+    println!(
+        "serve_batch: model={model} boards={boards} max_batch={} \
+         requests={n}",
+        cfg.serving.max_batch
+    );
+    println!("starting service (compiling artifacts once) ...");
+    let svc = InferenceService::start(&cfg, Pace::None, Policy::LeastOutstanding)?;
+
+    // Warm the pipeline so compile time doesn't pollute latencies.
+    let _ = svc.classify(data::synth_images(1, in_shape, 0))?;
+
+    // --- Phase 1: closed-loop burst (max throughput, max batching) ---
+    println!("\n[phase 1] closed-loop burst of {n} requests");
+    let burst = data::burst_trace(n);
+    let r1 = svc.run_trace(
+        &burst,
+        |id| data::synth_images(1, in_shape, 100 + id),
+        0.0,
+    );
+    println!("{r1}");
+
+    // --- Phase 2: open-loop Poisson arrivals near saturation --------
+    // Rate set to ~80% of the burst throughput.
+    let rate = (r1.throughput_rps * 0.8).max(1.0);
+    println!("\n[phase 2] open-loop Poisson at {rate:.1} req/s");
+    let trace = data::poisson_trace(n, rate, 11);
+    let r2 = svc.run_trace(
+        &trace,
+        |id| data::synth_images(1, in_shape, 500 + id),
+        1.0,
+    );
+    println!("{r2}");
+
+    // --- Phase 3: simulated-FPGA pacing (board-speed serving) -------
+    println!("\n[phase 3] burst with boards paced at simulated FPGA speed");
+    let svc_paced =
+        InferenceService::start(&cfg, Pace::Fpga, Policy::LeastOutstanding)?;
+    let _ = svc_paced.classify(data::synth_images(1, in_shape, 0))?;
+    let r3 = svc_paced.run_trace(
+        &data::burst_trace(n.min(24)),
+        |id| data::synth_images(1, in_shape, 900 + id),
+        0.0,
+    );
+    println!("{r3}");
+
+    // Sanity: everything answered, batching engaged under burst.
+    assert_eq!(r1.errors, 0, "burst phase had errors");
+    assert_eq!(r2.errors, 0, "poisson phase had errors");
+    assert!(r1.mean_batch >= 1.0);
+    println!(
+        "\nE4 summary: burst {:.1} req/s (mean batch {:.2}), poisson \
+         p95 {:.1} ms, paced(sim-fpga) {:.1} req/s",
+        r1.throughput_rps, r1.mean_batch, r2.latency.p95_ms,
+        r3.throughput_rps
+    );
+    Ok(())
+}

@@ -1,0 +1,277 @@
+"""AOT export: lower L2 graphs to HLO text + weight blobs + manifest.
+
+This is the single build-time python entrypoint (``make artifacts``).
+It emits, under ``artifacts/``:
+
+- ``<artifact>.hlo.txt``     — HLO **text** for the rust PJRT runtime.
+  Text, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+  64-bit instruction ids which xla_extension 0.5.1 rejects
+  (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+  round-trips cleanly (see /opt/xla-example/README.md).
+- ``<model>.weights.bin``    — all parameters, float32 little-endian,
+  concatenated in AOT argument order (shared by every batch/impl
+  variant of the model).
+- ``<artifact>.golden.bin``  — deterministic input + expected output
+  blobs for rust integration tests (jnp-impl artifacts only).
+- ``manifest.json``          — artifact index: HLO/weights/golden paths,
+  parameter order + shapes + offsets, input/output shapes, plus the
+  per-model layer tables (MACs/params) the rust IR cross-checks.
+
+The lowered function signature is ``f(*params, image) -> (logits,)``
+(weights are *arguments*, never baked constants — constants would blow
+up the HLO text by hundreds of MB).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import param_order, total_macs, total_params
+from .nets import NETS
+
+DEFAULT_SEED = 20220414  # FFCNN arXiv date
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """One AOT artifact to produce."""
+
+    model: str
+    batch: int
+    impl: str  # "jnp" | "pallas"
+    golden: bool = False  # also emit input/output golden blobs
+
+    @property
+    def name(self) -> str:
+        return f"{self.model}_b{self.batch}_{self.impl}"
+
+
+#: ``make artifacts`` default set.  Full-resolution nets use the jnp conv
+#: path (DESIGN.md §8); the pallas path covers tinynet end-to-end and
+#: full AlexNet at batch 1 (kernel-identical to the paper's pipeline).
+DEFAULT_TARGETS: List[Target] = [
+    Target("tinynet", 1, "pallas", golden=True),
+    Target("tinynet", 2, "pallas", golden=True),
+    Target("tinynet", 1, "jnp", golden=True),
+    Target("alexnet", 1, "jnp", golden=True),
+    Target("alexnet", 4, "jnp", golden=True),
+    Target("alexnet", 8, "jnp"),
+    Target("alexnet", 1, "pallas"),
+    Target("resnet50", 1, "jnp", golden=True),
+    Target("resnet50", 4, "jnp"),
+]
+
+#: fast subset used by pytest smoke tests.
+QUICK_TARGETS: List[Target] = [
+    Target("tinynet", 1, "pallas", golden=True),
+    Target("tinynet", 1, "jnp", golden=True),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def make_input(shape: Tuple[int, ...], seed: int) -> np.ndarray:
+    """Deterministic synthetic image batch (the paper verifies
+    functional correctness, not accuracy — see DESIGN.md §2)."""
+    rng = np.random.RandomState(seed)
+    return (rng.randn(*shape) * 0.1).astype(np.float32)
+
+
+def export_weights(
+    outdir: str, model: str, params: Dict[str, np.ndarray]
+) -> Tuple[str, List[dict]]:
+    """Write the concatenated f32 weight blob; return path + index."""
+    path = os.path.join(outdir, f"{model}.weights.bin")
+    index = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name in param_order(params):
+            a = np.ascontiguousarray(params[name], dtype=np.float32)
+            f.write(a.tobytes())
+            index.append(
+                {
+                    "name": name,
+                    "shape": list(a.shape),
+                    "offset": offset,  # in elements
+                    "numel": int(a.size),
+                }
+            )
+            offset += int(a.size)
+    return os.path.basename(path), index
+
+
+def lower_target(
+    t: Target, params: Dict[str, np.ndarray]
+) -> Tuple[str, Tuple[int, ...], Tuple[int, ...]]:
+    """Lower one artifact; returns (hlo_text, in_shape, out_shape)."""
+    net = NETS[t.model]
+    names = param_order(params)
+    in_shape = (t.batch,) + net.in_shape
+
+    def fn(*args):
+        ps = dict(zip(names, args[:-1]))
+        return (net.forward(ps, args[-1], impl=t.impl, interpret=True),)
+
+    specs = [
+        jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names
+    ] + [jax.ShapeDtypeStruct(in_shape, jnp.float32)]
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+
+    # Output shape from the net's layer table tail (always [N, classes]).
+    out_shape = (t.batch, net.layer_table()[-1].out_shape[-1])
+    return hlo, in_shape, out_shape
+
+
+def run_golden(
+    t: Target, params: Dict[str, np.ndarray], x: np.ndarray
+) -> np.ndarray:
+    """Execute the artifact function once in-process for golden outputs."""
+    net = NETS[t.model]
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    fwd = jax.jit(
+        lambda xx: net.forward(jp, xx, impl=t.impl, interpret=True)
+    )
+    return np.asarray(fwd(jnp.asarray(x)))
+
+
+def build(
+    outdir: str,
+    targets: List[Target],
+    seed: int = DEFAULT_SEED,
+    verbose: bool = True,
+) -> dict:
+    """Produce all artifacts + manifest; returns the manifest dict."""
+    os.makedirs(outdir, exist_ok=True)
+    manifest: dict = {
+        "version": 1,
+        "seed": seed,
+        "artifacts": [],
+        "models": {},
+    }
+
+    # Per-model layer tables (all nets, artifact or not): the accounting
+    # contract cross-checked by rust/src/models tests.
+    for name, net in NETS.items():
+        table = net.layer_table()
+        manifest["models"][name] = {
+            "in_shape": list(net.in_shape),
+            "layers": [i.to_json() for i in table],
+            "total_macs": total_macs(table),
+            "total_params": total_params(table),
+        }
+
+    params_cache: Dict[str, Dict[str, np.ndarray]] = {}
+    weights_meta: Dict[str, Tuple[str, List[dict]]] = {}
+
+    for t in targets:
+        if t.model not in params_cache:
+            params_cache[t.model] = NETS[t.model].init_params(seed)
+            weights_meta[t.model] = export_weights(
+                outdir, t.model, params_cache[t.model]
+            )
+            if verbose:
+                nbytes = sum(
+                    p.size * 4 for p in params_cache[t.model].values()
+                )
+                print(
+                    f"[aot] weights {t.model}: {nbytes / 1e6:.1f} MB "
+                    f"({len(params_cache[t.model])} tensors)"
+                )
+        params = params_cache[t.model]
+
+        if verbose:
+            print(f"[aot] lowering {t.name} ...")
+        hlo, in_shape, out_shape = lower_target(t, params)
+        hlo_name = f"{t.name}.hlo.txt"
+        with open(os.path.join(outdir, hlo_name), "w") as f:
+            f.write(hlo)
+
+        entry = {
+            "name": t.name,
+            "model": t.model,
+            "batch": t.batch,
+            "conv_impl": t.impl,
+            "hlo": hlo_name,
+            "hlo_sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            "weights": weights_meta[t.model][0],
+            "params": weights_meta[t.model][1],
+            "input": {"shape": list(in_shape), "dtype": "f32"},
+            "output": {"shape": list(out_shape), "dtype": "f32"},
+            "golden": None,
+        }
+
+        if t.golden:
+            x = make_input(in_shape, seed ^ (t.batch * 7919))
+            y = run_golden(t, params, x)
+            gname = f"{t.name}.golden.bin"
+            with open(os.path.join(outdir, gname), "wb") as f:
+                f.write(x.tobytes())
+                f.write(np.ascontiguousarray(y, np.float32).tobytes())
+            entry["golden"] = {
+                "file": gname,
+                "input_numel": int(x.size),
+                "output_numel": int(y.size),
+                "output_l2": float(np.linalg.norm(y)),
+                "output_first8": [float(v) for v in y.reshape(-1)[:8]],
+            }
+            if verbose:
+                print(
+                    f"[aot]   golden {t.name}: |y|2={entry['golden']['output_l2']:.4f}"
+                )
+
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"[aot]   wrote {hlo_name} ({len(hlo) / 1e6:.2f} MB)")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+    return manifest
+
+
+def parse_targets(spec: str) -> List[Target]:
+    if spec == "default":
+        return DEFAULT_TARGETS
+    if spec == "quick":
+        return QUICK_TARGETS
+    out = []
+    for part in spec.split(","):
+        model, b, impl = part.rsplit("_", 2)
+        out.append(Target(model, int(b.lstrip("b")), impl, golden=True))
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--targets",
+        default="default",
+        help='"default", "quick", or comma list like "alexnet_b1_jnp"',
+    )
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    args = ap.parse_args(argv)
+    build(args.outdir, parse_targets(args.targets), seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""L1 Pallas kernels for FFCNN.
+
+Each kernel implements one stage of the paper's pipelined OpenCL
+accelerator, re-thought for a TPU-style memory hierarchy (see
+DESIGN.md §6 Hardware Adaptation):
+
+- ``conv``    — the paper's flattened 1-D convolution (Eq. 4) as an
+                im2col GEMM with a fused bias/ReLU epilogue.  The
+                ``VEC_SIZE x LANE_NUM`` DSP multiplier-adder tree maps to
+                one MXU matmul tile; the M20K window buffer maps to the
+                VMEM BlockSpec schedule.
+- ``pool``    — max/average pooling (the paper's Pooling kernel).
+- ``lrn``     — local response normalization (AlexNet).
+- ``fc``      — dense layers as GEMM on the same matmul kernel.
+- ``ref``     — pure-jnp oracles, independent code paths used by pytest.
+
+All pallas_calls run with ``interpret=True`` so they lower to plain HLO
+executable on the CPU PJRT client (real-TPU lowering emits Mosaic
+custom-calls the CPU plugin cannot run).
+"""
+
+from . import conv, eltwise, fc, lrn, pool, ref  # noqa: F401

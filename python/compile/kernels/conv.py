@@ -1,0 +1,278 @@
+"""Flattened 1-D convolution (FFCNN Eq. 4) as a tiled Pallas GEMM.
+
+The paper collapses the 5-deep convolution loop nest (Eq. 3) into a
+2-level loop over ``(f_o, x_i in C*K*K)`` (Eq. 4) so the OpenCL compiler
+can pipeline a multiplier-adder tree fed from a window buffer.  On a
+TPU-shaped target the same flattening is exactly an im2col GEMM:
+
+    W  : [F_o, C*K*K]           (reshaped filter bank)
+    P  : [C*K*K, N*OH*OW]       (im2col patches, batch folded into cols)
+    O  = W @ P (+ bias, ReLU)   (the MAC tree == one MXU tile per step)
+
+Hardware-adaptation mapping (DESIGN.md §6):
+
+- the paper's ``VEC_SIZE x LANE_NUM`` parallel DSP MACs  -> one
+  ``(TM, TK) @ (TK, TN)`` MXU tile per grid step;
+- the M20K window/weight buffers -> the VMEM blocks named by the
+  BlockSpecs: a weight tile is revisited for every pixel tile (j), a
+  patch tile for every filter tile (i) — the paper's data reuse;
+- the channel-fused ReLU stage -> the epilogue in the final k step.
+
+All kernels use ``interpret=True`` so they lower to plain HLO and run on
+the CPU PJRT client (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  TM x TN is the output tile held in VMEM while the
+# reduction streams through in TK chunks.  Chosen in the perf pass
+# (EXPERIMENTS.md §Perf/L1): double-buffered fp32 tiles cost
+# 2*4*(TM*TK + TK*TN + TM*TN) ≈ 3 MiB — comfortably inside a 16 MiB TPU
+# VMEM — while large multiples of the 128-wide MXU edge amortize the
+# per-grid-step dispatch that dominated the old (32,128,128) default
+# (20x faster on AlexNet conv3 under the interpret-mode lowering).
+DEFAULT_TM = 128
+DEFAULT_TN = 512
+DEFAULT_TK = 512
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad2(a: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to [rows, cols]."""
+    pr, pc = rows - a.shape[0], cols - a.shape[1]
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def _matmul_kernel(w_ref, p_ref, b_ref, o_ref, *, nk: int, relu: bool):
+    """One grid step: accumulate a (TM,TN) output tile.
+
+    Grid is (M/TM, N/TN, K/TK) with the reduction innermost; the output
+    BlockSpec ignores the k index so the same VMEM tile accumulates
+    across all k steps — the paper's multiplier-adder tree with its
+    output buffer.  The epilogue (bias + ReLU) runs in the last k step,
+    i.e. fused into the conv kernel exactly like the paper's
+    channel-chained ReLU stage.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        w_ref[...], p_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]  # b tile is [TM, 1], broadcasts
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def matmul_bias_act(
+    w: jnp.ndarray,
+    p: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    relu: bool = False,
+    tm: int = DEFAULT_TM,
+    tn: int = DEFAULT_TN,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``o = act(w @ p + b)`` via the tiled Pallas kernel.
+
+    w: [M, K] filter bank, p: [K, N] patches, b: [M] bias (or None).
+    Shapes are zero-padded up to tile multiples and the result sliced
+    back, so any shape is accepted.
+    """
+    m, kdim = w.shape
+    k2, n = p.shape
+    if kdim != k2:
+        raise ValueError(f"reduction mismatch: w[{m},{kdim}] @ p[{k2},{n}]")
+    if b is None:
+        b = jnp.zeros((m,), dtype=w.dtype)
+    if b.shape != (m,):
+        raise ValueError(f"bias shape {b.shape} != ({m},)")
+
+    # Never tile wider than the (padded) problem.
+    tm = min(tm, _ceil_to(m, 8))
+    tn = min(tn, _ceil_to(n, 8))
+    tk = min(tk, _ceil_to(kdim, 8))
+    mp, np_, kp = _ceil_to(m, tm), _ceil_to(n, tn), _ceil_to(kdim, tk)
+
+    wp = _pad2(w.astype(jnp.float32), mp, kp)
+    pp = _pad2(p.astype(jnp.float32), kp, np_)
+    bp = _pad2(b.astype(jnp.float32).reshape(m, 1), mp, 1)
+
+    grid = (mp // tm, np_ // tn, kp // tk)
+    kernel = functools.partial(_matmul_kernel, nk=grid[2], relu=relu)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),  # weight tile
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),  # patch tile
+            pl.BlockSpec((tm, 1), lambda i, j, k: (i, 0)),  # bias tile
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(wp, pp, bp)
+    return out[:m, :n]
+
+
+def im2col(
+    x: jnp.ndarray,
+    kh: int,
+    kw: int,
+    stride: Tuple[int, int],
+    padding: Tuple[int, int],
+) -> jnp.ndarray:
+    """Extract convolution patches: the paper's MemRd/DataIN kernel.
+
+    x: [N, C, H, W]  ->  [N, C*kh*kw, OH, OW] with (C major, kh, kw)
+    feature ordering, matching ``w.reshape(F, C*kh*kw)``.
+
+    Implemented as kh*kw static strided slices — pure data movement that
+    XLA fuses; this is the software analogue of the FPGA window/line
+    buffer walking the padded input.
+    """
+    n, c, h, w = x.shape
+    sh, sw = stride
+    ph, pw = padding
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w + 2 * pw - kw) // sw + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, :, i : i + sh * oh : sh, j : j + sw * ow : sw])
+    # [N, C, kh*kw, OH, OW] -> [N, C*kh*kw, OH, OW]
+    patches = jnp.stack(cols, axis=2)
+    return patches.reshape(n, c * kh * kw, oh, ow)
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: Tuple[int, int] = (0, 0),
+    relu: bool = False,
+    groups: int = 1,
+    impl: str = "pallas",
+    tm: int = DEFAULT_TM,
+    tn: int = DEFAULT_TN,
+    tk: int = DEFAULT_TK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """2-D convolution, NCHW / OIHW (w: [F, C/groups, kh, kw]).
+
+    impl="pallas": the paper's path — im2col (MemRd) + tiled Pallas GEMM
+    (Conv kernel) with fused bias/ReLU epilogue.
+    impl="jnp": ``lax.conv_general_dilated`` — the fast XLA path used for
+    full-resolution AOT artifacts (DESIGN.md §8); numerically checked
+    against the pallas path and the naive oracle in pytest.
+
+    ``groups=2`` reproduces the original two-column AlexNet convs — the
+    variant whose 1.45 GOP count the paper's Table 1 GOPS figures imply.
+    """
+    n, c, h, wdim = x.shape
+    f, cg, kh, kw = w.shape
+    if c != cg * groups:
+        raise ValueError(
+            f"channel mismatch: x has {c}, w has {cg}*{groups} groups"
+        )
+    if f % groups:
+        raise ValueError(f"filters {f} not divisible by groups {groups}")
+
+    if impl == "jnp":
+        out = jax.lax.conv_general_dilated(
+            x,
+            w,
+            window_strides=stride,
+            padding=[(padding[0], padding[0]), (padding[1], padding[1])],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=groups,
+        )
+        if b is not None:
+            out = out + b.reshape(1, f, 1, 1)
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        return out
+
+    if impl != "pallas":
+        raise ValueError(f"unknown conv impl {impl!r}")
+
+    if groups > 1:
+        # Each group is an independent flattened GEMM — on the FPGA the
+        # two AlexNet columns simply time-share the same Conv kernel.
+        fg = f // groups
+        outs = []
+        for g in range(groups):
+            bg = None if b is None else b[g * fg : (g + 1) * fg]
+            outs.append(
+                conv2d(
+                    x[:, g * cg : (g + 1) * cg],
+                    w[g * fg : (g + 1) * fg],
+                    bg,
+                    stride=stride,
+                    padding=padding,
+                    relu=relu,
+                    groups=1,
+                    impl=impl,
+                    tm=tm,
+                    tn=tn,
+                    tk=tk,
+                    interpret=interpret,
+                )
+            )
+        return jnp.concatenate(outs, axis=1)
+
+    patches = im2col(x, kh, kw, stride, padding)
+    _, kflat, oh, ow = patches.shape
+    # Fold batch into the GEMM column dimension: [K, N*OH*OW].  This is
+    # the paper's batched flattening — one long 1-D MAC stream.
+    pmat = patches.transpose(1, 0, 2, 3).reshape(kflat, n * oh * ow)
+    omat = matmul_bias_act(
+        w.reshape(f, kflat),
+        pmat,
+        b,
+        relu=relu,
+        tm=tm,
+        tn=tn,
+        tk=tk,
+        interpret=interpret,
+    )
+    return omat.reshape(f, n, oh, ow).transpose(1, 0, 2, 3)
+
+
+def conv_out_shape(
+    hw: Tuple[int, int],
+    kh: int,
+    kw: int,
+    stride: Tuple[int, int],
+    padding: Tuple[int, int],
+) -> Tuple[int, int]:
+    """Output spatial size of a conv/pool window — shared shape logic."""
+    h, w = hw
+    oh = (h + 2 * padding[0] - kh) // stride[0] + 1
+    ow = (w + 2 * padding[1] - kw) // stride[1] + 1
+    return oh, ow

@@ -1,0 +1,68 @@
+"""Elementwise shortcut-add (+ ReLU) Pallas kernel.
+
+ResNet's eltwise layers are the one op class in the paper's Table-1
+networks that is neither conv/FC nor pooling/LRN; on the FPGA they run
+on a small vector adder fed by two channels (the block output stream
+and the buffered shortcut).  Here: grid over flat tiles, one fused
+add(+ReLU) per block — used by ``nets.resnet50_forward`` when
+``impl="pallas"`` so the whole residual path stays on L1 kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import _ceil_to
+
+#: elements per grid step (one VMEM lane-block of fp32).
+DEFAULT_TE = 64 * 1024
+
+
+def _eltwise_kernel(a_ref, b_ref, o_ref, *, relu):
+    s = a_ref[...] + b_ref[...]
+    if relu:
+        s = jnp.maximum(s, 0.0)
+    o_ref[...] = s
+
+
+def add(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    relu: bool = False,
+    te: int = DEFAULT_TE,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``relu(a + b)`` elementwise; shapes must match exactly."""
+    if a.shape != b.shape:
+        raise ValueError(f"eltwise shape mismatch: {a.shape} vs {b.shape}")
+    if impl == "jnp":
+        s = a + b
+        return jnp.maximum(s, 0.0) if relu else s
+    if impl != "pallas":
+        raise ValueError(f"unknown eltwise impl {impl!r}")
+
+    shape = a.shape
+    n = a.size
+    te = min(te, _ceil_to(n, 8))
+    npad = _ceil_to(n, te)
+    af = jnp.pad(a.reshape(-1), (0, npad - n))
+    bf = jnp.pad(b.reshape(-1), (0, npad - n))
+    kern = functools.partial(_eltwise_kernel, relu=relu)
+    out = pl.pallas_call(
+        kern,
+        grid=(npad // te,),
+        in_specs=[
+            pl.BlockSpec((te,), lambda i: (i,)),
+            pl.BlockSpec((te,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((te,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), a.dtype),
+        interpret=interpret,
+    )(af, bf)
+    return out[:n].reshape(shape)

@@ -1,0 +1,52 @@
+"""Fully-connected layer on the shared Pallas GEMM kernel.
+
+The paper treats FC layers as matrix-vector products on the same Conv
+engine (Eq. 4 with K=1 and the whole input vector as the reduction).
+We reuse ``conv.matmul_bias_act`` so FC and Conv share one kernel, like
+the single Conv OpenCL kernel serving both layer types in FFCNN.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .conv import matmul_bias_act
+
+
+def fc(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    relu: bool = False,
+    impl: str = "pallas",
+    interpret: bool = True,
+    **tiles,
+) -> jnp.ndarray:
+    """Dense layer: x [N, IN] @ w.T [IN, OUT] + b -> [N, OUT].
+
+    w is stored [OUT, IN] (Caffe/torch convention), matching the
+    flattened conv filter bank layout.
+    """
+    n, din = x.shape
+    dout, din2 = w.shape
+    if din != din2:
+        raise ValueError(f"fc dim mismatch: x[{n},{din}] vs w[{dout},{din2}]")
+
+    if impl == "jnp":
+        out = x @ w.T
+        if b is not None:
+            out = out + b
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        return out
+    if impl != "pallas":
+        raise ValueError(f"unknown fc impl {impl!r}")
+
+    # GEMM with batch on the columns: [OUT, IN] @ [IN, N] -> [OUT, N].
+    out = matmul_bias_act(
+        w, x.T, b, relu=relu, interpret=interpret, **tiles
+    )
+    return out.T

@@ -1,0 +1,85 @@
+"""Local response normalization Pallas kernel (FFCNN's LRN stage).
+
+AlexNet-style across-channel LRN:
+
+    out[c] = x[c] / (k + alpha/n * sum_{c' in window(c)} x[c']^2)^beta
+
+In the FPGA pipeline LRN follows pooling on a channel (Fig. 2).  The
+kernel is grid-parallel over spatial tiles; the full channel axis lives
+in the block (C <= 512 for the nets here) so the cross-channel window is
+a static unrolled sum over shifted views — the FPGA's shift-register
+across feature maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import _ceil_to
+
+#: spatial positions per grid step.
+DEFAULT_TS = 512
+
+
+def _lrn_kernel(x_ref, o_ref, *, n, k, alpha, beta, c):
+    x = x_ref[...]  # [C, TS]
+    sq = x * x
+    half = n // 2
+    # Zero-pad the channel axis; window sum as static shifted adds.
+    sqp = jnp.pad(sq, ((half, half), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for d in range(n):
+        acc = acc + sqp[d : d + c, :]
+    scale = (k + (alpha / n) * acc) ** beta
+    o_ref[...] = x / scale
+
+
+def lrn(
+    x: jnp.ndarray,
+    *,
+    n: int = 5,
+    k: float = 2.0,
+    alpha: float = 1e-4,
+    beta: float = 0.75,
+    ts: int = DEFAULT_TS,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Across-channel LRN, NCHW.  Caffe-convention alpha (divided by n)."""
+    nb, c, h, w = x.shape
+
+    if impl == "jnp":
+        half = n // 2
+        sq = x * x
+        sqp = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+        acc = jnp.zeros_like(x)
+        for d in range(n):
+            acc = acc + sqp[:, d : d + c, :, :]
+        return x / (k + (alpha / n) * acc) ** beta
+    if impl != "pallas":
+        raise ValueError(f"unknown lrn impl {impl!r}")
+
+    s = nb * h * w
+    sp = _ceil_to(s, ts)
+    # [C, N*H*W] layout puts the normalization axis contiguous in the
+    # block and spatial positions on the lanes.
+    xf = x.transpose(1, 0, 2, 3).reshape(c, s)
+    if sp != s:
+        xf = jnp.pad(xf, ((0, 0), (0, sp - s)))
+
+    kern = functools.partial(
+        _lrn_kernel, n=n, k=k, alpha=alpha, beta=beta, c=c
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(sp // ts,),
+        in_specs=[pl.BlockSpec((c, ts), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((c, ts), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((c, sp), x.dtype),
+        interpret=interpret,
+    )(xf)
+    return out[:, :s].reshape(c, nb, h, w).transpose(1, 0, 2, 3)

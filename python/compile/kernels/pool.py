@@ -1,0 +1,114 @@
+"""Pooling Pallas kernel — the paper's Pooling stage.
+
+In FFCNN the pooling kernel sits behind the Conv kernel on an Altera
+channel, consuming output pixels as they stream out so pooled layers
+never round-trip through DDR.  Here the kernel is grid-parallel over
+(N*C) channel tiles; within a tile the window maximum/average is a
+static unrolled reduction over the kh*kw strided views — the same
+line-buffer walk the FPGA does, expressed on a VMEM block.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import _ceil_to, conv_out_shape
+
+#: channels processed per grid step; 8 keeps the block under a VMEM bank
+#: for the largest AlexNet/VGG feature maps (8*227*227*4 B ~ 1.6 MiB).
+DEFAULT_TC = 8
+
+
+def _pool_kernel(x_ref, o_ref, *, kh, kw, sh, sw, oh, ow, mode):
+    x = x_ref[...]  # [TC, H, W]
+    acc = None
+    for i in range(kh):
+        for j in range(kw):
+            v = x[:, i : i + sh * oh : sh, j : j + sw * ow : sw]
+            if acc is None:
+                acc = v
+            elif mode == "max":
+                acc = jnp.maximum(acc, v)
+            else:
+                acc = acc + v
+    if mode == "avg":
+        acc = acc / float(kh * kw)
+    o_ref[...] = acc
+
+
+def pool2d(
+    x: jnp.ndarray,
+    kernel: Tuple[int, int],
+    stride: Tuple[int, int],
+    *,
+    padding: Tuple[int, int] = (0, 0),
+    mode: str = "max",
+    tc: int = DEFAULT_TC,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Max/avg pooling, NCHW.  impl="jnp" uses lax.reduce_window."""
+    if mode not in ("max", "avg"):
+        raise ValueError(f"unknown pool mode {mode!r}")
+    n, c, h, w = x.shape
+    kh, kw = kernel
+    sh, sw = stride
+    ph, pw = padding
+    oh, ow = conv_out_shape((h, w), kh, kw, stride, padding)
+
+    if impl == "jnp":
+        init = -jnp.inf if mode == "max" else 0.0
+        op = jax.lax.max if mode == "max" else jax.lax.add
+        out = jax.lax.reduce_window(
+            x,
+            jnp.array(init, x.dtype),
+            op,
+            (1, 1, kh, kw),
+            (1, 1, sh, sw),
+            [(0, 0), (0, 0), (ph, ph), (pw, pw)],
+        )
+        if mode == "avg":
+            out = out / float(kh * kw)
+        return out
+    if impl != "pallas":
+        raise ValueError(f"unknown pool impl {impl!r}")
+
+    pad_val = -jnp.inf if mode == "max" else 0.0
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (ph, ph), (pw, pw)), constant_values=pad_val
+    )
+    hp, wp = h + 2 * ph, w + 2 * pw
+
+    # Flatten (N, C) and pad the channel axis up to the tile size.
+    nc = n * c
+    ncp = _ceil_to(nc, tc)
+    xf = xp.reshape(nc, hp, wp)
+    if ncp != nc:
+        xf = jnp.pad(xf, ((0, ncp - nc), (0, 0), (0, 0)))
+
+    kern = functools.partial(
+        _pool_kernel, kh=kh, kw=kw, sh=sh, sw=sw, oh=oh, ow=ow, mode=mode
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(ncp // tc,),
+        in_specs=[pl.BlockSpec((tc, hp, wp), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tc, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ncp, oh, ow), x.dtype),
+        interpret=interpret,
+    )(xf)
+    return out[:nc].reshape(n, c, oh, ow)
+
+
+def global_avg_pool(x: jnp.ndarray, *, impl: str = "pallas", **kw) -> jnp.ndarray:
+    """Global average pooling [N,C,H,W] -> [N,C] (ResNet head)."""
+    n, c, h, w = x.shape
+    if impl == "jnp":
+        return jnp.mean(x, axis=(2, 3))
+    out = pool2d(x, (h, w), (h, w), mode="avg", impl=impl, **kw)
+    return out.reshape(n, c)

@@ -1,0 +1,142 @@
+"""Pure-jnp correctness oracles — the role Caffe plays in the paper.
+
+Every oracle takes a deliberately *different* code path from both the
+pallas kernels and the impl="jnp" fast paths:
+
+- ``conv2d_ref``  — explicit gather of shifted views + einsum (no
+  lax.conv, no pallas GEMM);
+- ``pool2d_ref``  — python loop over output pixels with window slices;
+- ``lrn_ref``     — direct formula with a python channel loop;
+- ``fc_ref``      — einsum.
+
+pytest asserts allclose between kernel and oracle across shape sweeps
+(hypothesis) — this is the build-time functional-correctness gate.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: Tuple[int, int] = (0, 0),
+    relu: bool = False,
+    groups: int = 1,
+) -> jnp.ndarray:
+    """Naive convolution: shifted-view gather + einsum, NCHW/OIHW."""
+    if groups > 1:
+        f, cg = w.shape[0], w.shape[1]
+        fg = f // groups
+        outs = []
+        for g in range(groups):
+            bg = None if b is None else b[g * fg : (g + 1) * fg]
+            outs.append(
+                conv2d_ref(
+                    x[:, g * cg : (g + 1) * cg],
+                    w[g * fg : (g + 1) * fg],
+                    bg,
+                    stride=stride,
+                    padding=padding,
+                    relu=relu,
+                )
+            )
+        return jnp.concatenate(outs, axis=1)
+    n, c, h, wd = x.shape
+    f, c2, kh, kw = w.shape
+    assert c == c2, (c, c2)
+    sh, sw = stride
+    ph, pw = padding
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (wd + 2 * pw - kw) // sw + 1
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    acc = jnp.zeros((n, f, oh, ow), dtype=jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            v = xp[:, :, i : i + sh * oh : sh, j : j + sw * ow : sw]
+            acc = acc + jnp.einsum("nchw,fc->nfhw", v, w[:, :, i, j])
+    if b is not None:
+        acc = acc + b.reshape(1, f, 1, 1)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc
+
+
+def pool2d_ref(
+    x: jnp.ndarray,
+    kernel: Tuple[int, int],
+    stride: Tuple[int, int],
+    *,
+    padding: Tuple[int, int] = (0, 0),
+    mode: str = "max",
+) -> jnp.ndarray:
+    """Naive pooling: python loop over output pixels."""
+    n, c, h, wd = x.shape
+    kh, kw = kernel
+    sh, sw = stride
+    ph, pw = padding
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (wd + 2 * pw - kw) // sw + 1
+    pad_val = -jnp.inf if mode == "max" else 0.0
+    xp = jnp.pad(
+        x, ((0, 0), (0, 0), (ph, ph), (pw, pw)), constant_values=pad_val
+    )
+    rows = []
+    for oy in range(oh):
+        cols = []
+        for ox in range(ow):
+            win = xp[:, :, oy * sh : oy * sh + kh, ox * sw : ox * sw + kw]
+            if mode == "max":
+                cols.append(jnp.max(win, axis=(2, 3)))
+            else:
+                cols.append(jnp.mean(win, axis=(2, 3)))
+        rows.append(jnp.stack(cols, axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def lrn_ref(
+    x: jnp.ndarray,
+    *,
+    n: int = 5,
+    k: float = 2.0,
+    alpha: float = 1e-4,
+    beta: float = 0.75,
+) -> jnp.ndarray:
+    """Naive across-channel LRN with a python channel loop."""
+    _, c, _, _ = x.shape
+    half = n // 2
+    outs = []
+    for ci in range(c):
+        lo, hi = max(0, ci - half), min(c, ci + half + 1)
+        s = jnp.sum(x[:, lo:hi, :, :] ** 2, axis=1)
+        outs.append(x[:, ci, :, :] / (k + (alpha / n) * s) ** beta)
+    return jnp.stack(outs, axis=1)
+
+
+def fc_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Naive dense layer via einsum."""
+    out = jnp.einsum("ni,oi->no", x, w)
+    if b is not None:
+        out = out + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax over the last axis."""
+    z = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,266 @@
+"""L2: CNN graph assembly on top of the L1 kernels.
+
+The paper's accelerator executes a CNN as a sequence of layer groups,
+each group flowing MemRd -> Conv -> (ReLU) -> (LRN) -> (Pool) -> MemWr
+through on-chip channels.  This module mirrors that structure in JAX:
+
+- ``LayerSpec``     — one pipeline stage (conv / pool / lrn / fc / ...).
+- ``propagate``     — static shape/MACs/params accounting used for the
+                      manifest, Fig. 1, and the rust-side cross-check.
+- ``chain_forward`` — executes a chain net (AlexNet, VGG) calling the
+                      L1 kernels with the chosen ``impl``.
+
+ResNet's DAG (eltwise shortcuts) is assembled in ``nets.py`` from the
+same kernel calls; its layer table is synthesized with the same
+accounting helpers so every model reports MACs/params identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv as kconv
+from .kernels import fc as kfc
+from .kernels import lrn as klrn
+from .kernels import pool as kpool
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One stage of a chain network.
+
+    kind: conv | pool | lrn | fc | flatten | relu | softmax | dropout
+    Conv/fc carry ``relu`` so the activation fuses into the GEMM
+    epilogue, exactly like the paper's channel-fused ReLU.
+    """
+
+    name: str
+    kind: str
+    out_ch: int = 0  # conv filters / fc outputs
+    kernel: Tuple[int, int] = (1, 1)
+    stride: Tuple[int, int] = (1, 1)
+    padding: Tuple[int, int] = (0, 0)
+    relu: bool = False
+    groups: int = 1
+    pool_mode: str = "max"
+    lrn_n: int = 5
+    lrn_k: float = 2.0
+    lrn_alpha: float = 1e-4
+    lrn_beta: float = 0.75
+
+
+@dataclasses.dataclass
+class LayerInfo:
+    """Accounting row for one layer: the numbers behind Fig. 1 / GOPS."""
+
+    name: str
+    kind: str
+    in_shape: Tuple[int, ...]  # (C, H, W) or (F,)
+    out_shape: Tuple[int, ...]
+    macs: int  # multiply-accumulates (1 MAC = 2 ops, paper counts GOPs)
+    params: int  # weights + biases
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "in_shape": list(self.in_shape),
+            "out_shape": list(self.out_shape),
+            "macs": self.macs,
+            "params": self.params,
+            "ops": self.ops,
+        }
+
+
+def propagate(
+    specs: Sequence[LayerSpec], in_shape: Tuple[int, int, int]
+) -> List[LayerInfo]:
+    """Static shape propagation + exact MAC/param accounting.
+
+    in_shape: (C, H, W) without the batch dimension.  MACs are per
+    single image — multiply by batch for batched GOPs.
+    """
+    infos: List[LayerInfo] = []
+    shape: Tuple[int, ...] = in_shape
+    for s in specs:
+        if s.kind == "conv":
+            c, h, w = shape
+            oh, ow = kconv.conv_out_shape(
+                (h, w), s.kernel[0], s.kernel[1], s.stride, s.padding
+            )
+            out = (s.out_ch, oh, ow)
+            cg = c // s.groups
+            macs = s.out_ch * cg * s.kernel[0] * s.kernel[1] * oh * ow
+            params = s.out_ch * cg * s.kernel[0] * s.kernel[1] + s.out_ch
+        elif s.kind == "pool":
+            c, h, w = shape
+            oh, ow = kconv.conv_out_shape(
+                (h, w), s.kernel[0], s.kernel[1], s.stride, s.padding
+            )
+            out = (c, oh, ow)
+            # comparisons/adds, not MACs; paper counts conv+fc only, we
+            # track pooling work separately as 0 MACs (it shows up in the
+            # cycle model, not the GOPs number).
+            macs = 0
+            params = 0
+        elif s.kind == "lrn":
+            out = shape
+            macs = 0
+            params = 0
+        elif s.kind == "flatten":
+            out = (int(np.prod(shape)),)
+            macs = 0
+            params = 0
+        elif s.kind == "fc":
+            (din,) = shape
+            out = (s.out_ch,)
+            macs = s.out_ch * din
+            params = s.out_ch * din + s.out_ch
+        elif s.kind in ("relu", "softmax", "dropout"):
+            out = shape
+            macs = 0
+            params = 0
+        else:
+            raise ValueError(f"unknown layer kind {s.kind!r}")
+        infos.append(
+            LayerInfo(
+                name=s.name,
+                kind=s.kind,
+                in_shape=tuple(shape),
+                out_shape=tuple(out),
+                macs=macs,
+                params=params,
+            )
+        )
+        shape = out
+    return infos
+
+
+def he_conv(rng: np.random.RandomState, f, c, kh, kw) -> np.ndarray:
+    fan_in = c * kh * kw
+    return (rng.randn(f, c, kh, kw) * np.sqrt(2.0 / fan_in)).astype(
+        np.float32
+    )
+
+
+def he_fc(rng: np.random.RandomState, dout, din) -> np.ndarray:
+    return (rng.randn(dout, din) * np.sqrt(2.0 / din)).astype(np.float32)
+
+
+def init_chain_params(
+    specs: Sequence[LayerSpec],
+    in_shape: Tuple[int, int, int],
+    seed: int,
+) -> Dict[str, np.ndarray]:
+    """He-initialized parameters for a chain net, keyed '<layer>.w/.b'."""
+    rng = np.random.RandomState(seed)
+    infos = propagate(specs, in_shape)
+    params: Dict[str, np.ndarray] = {}
+    for s, info in zip(specs, infos):
+        if s.kind == "conv":
+            c = info.in_shape[0] // s.groups
+            params[f"{s.name}.w"] = he_conv(
+                rng, s.out_ch, c, s.kernel[0], s.kernel[1]
+            )
+            params[f"{s.name}.b"] = np.zeros(s.out_ch, dtype=np.float32)
+        elif s.kind == "fc":
+            (din,) = info.in_shape
+            params[f"{s.name}.w"] = he_fc(rng, s.out_ch, din)
+            params[f"{s.name}.b"] = np.zeros(s.out_ch, dtype=np.float32)
+    return params
+
+
+def chain_forward(
+    specs: Sequence[LayerSpec],
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    *,
+    impl: str = "jnp",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Run a chain network.  x: [N, C, H, W] -> logits [N, classes].
+
+    impl selects the kernel path for every conv/fc/pool/lrn stage:
+    "pallas" is the paper's pipeline on the L1 kernels, "jnp" the fast
+    XLA path used for full-resolution AOT artifacts.
+    """
+    for s in specs:
+        if s.kind == "conv":
+            x = kconv.conv2d(
+                x,
+                params[f"{s.name}.w"],
+                params[f"{s.name}.b"],
+                stride=s.stride,
+                padding=s.padding,
+                relu=s.relu,
+                groups=s.groups,
+                impl=impl,
+                interpret=interpret,
+            )
+        elif s.kind == "pool":
+            x = kpool.pool2d(
+                x,
+                s.kernel,
+                s.stride,
+                padding=s.padding,
+                mode=s.pool_mode,
+                impl=impl,
+                interpret=interpret,
+            )
+        elif s.kind == "lrn":
+            x = klrn.lrn(
+                x,
+                n=s.lrn_n,
+                k=s.lrn_k,
+                alpha=s.lrn_alpha,
+                beta=s.lrn_beta,
+                impl=impl,
+                interpret=interpret,
+            )
+        elif s.kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif s.kind == "fc":
+            x = kfc.fc(
+                x,
+                params[f"{s.name}.w"],
+                params[f"{s.name}.b"],
+                relu=s.relu,
+                impl=impl,
+                interpret=interpret,
+            )
+        elif s.kind == "relu":
+            x = jnp.maximum(x, 0.0)
+        elif s.kind == "softmax":
+            z = x - jnp.max(x, axis=-1, keepdims=True)
+            e = jnp.exp(z)
+            x = e / jnp.sum(e, axis=-1, keepdims=True)
+        elif s.kind == "dropout":
+            pass  # inference: identity
+        else:
+            raise ValueError(f"unknown layer kind {s.kind!r}")
+    return x
+
+
+def param_order(params: Dict[str, np.ndarray]) -> List[str]:
+    """Deterministic parameter ordering for the AOT calling convention.
+
+    Insertion order of the dict (python 3.7+) — the same order the
+    manifest records and the rust runtime feeds literals in.
+    """
+    return list(params.keys())
+
+
+def total_macs(infos: Sequence[LayerInfo]) -> int:
+    return sum(i.macs for i in infos)
+
+
+def total_params(infos: Sequence[LayerInfo]) -> int:
+    return sum(i.params for i in infos)

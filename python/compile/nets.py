@@ -1,0 +1,342 @@
+"""Network definitions: AlexNet, VGG-11/16, ResNet-50, TinyNet.
+
+These are the models the paper evaluates (AlexNet 8 layers, ResNet-50
+50 layers) plus VGG-11 for the Fig. 1 weight/operation distribution and
+a TinyNet used by fast integration tests on the rust side.
+
+Each entry in ``NETS`` provides:
+- ``specs`` / ``forward``   — the jax forward pass over L1 kernels;
+- ``init_params(seed)``     — deterministic He-initialized weights
+                              (numpy, float32) in AOT argument order;
+- ``layer_table(in_shape)`` — accounting rows (MACs, params, shapes)
+                              shared with the manifest and cross-checked
+                              by the rust model IR.
+
+ResNet-50 batch-norms are *folded into the conv weights at init time*
+(inference-only, as the paper deploys), so exported params are plain
+(w, b) pairs.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv as kconv
+from .kernels import eltwise as kelt
+from .kernels import fc as kfc
+from .kernels import pool as kpool
+from .model import (
+    LayerInfo,
+    LayerSpec,
+    chain_forward,
+    he_conv,
+    he_fc,
+    init_chain_params,
+    propagate,
+)
+
+# --------------------------------------------------------------------------
+# AlexNet — original two-column variant (groups=2 on conv2/4/5), 227x227.
+# 0.727 GMACs = 1.45 GOPs, the count the paper's Table 1 GOPS figures
+# imply (45.7 ms @ 31.8 GOPS etc.).  ``alexnet1c`` below is the
+# single-column CaffeNet variant (1.135 GMACs) kept for ablations.
+# --------------------------------------------------------------------------
+
+ALEXNET_IN = (3, 227, 227)
+
+
+def _alexnet_specs(groups: int) -> List[LayerSpec]:
+    g = groups
+    return [
+        LayerSpec("conv1", "conv", 96, (11, 11), (4, 4), (0, 0), relu=True),
+        LayerSpec("norm1", "lrn"),
+        LayerSpec("pool1", "pool", kernel=(3, 3), stride=(2, 2)),
+        LayerSpec(
+            "conv2", "conv", 256, (5, 5), (1, 1), (2, 2), relu=True, groups=g
+        ),
+        LayerSpec("norm2", "lrn"),
+        LayerSpec("pool2", "pool", kernel=(3, 3), stride=(2, 2)),
+        LayerSpec("conv3", "conv", 384, (3, 3), (1, 1), (1, 1), relu=True),
+        LayerSpec(
+            "conv4", "conv", 384, (3, 3), (1, 1), (1, 1), relu=True, groups=g
+        ),
+        LayerSpec(
+            "conv5", "conv", 256, (3, 3), (1, 1), (1, 1), relu=True, groups=g
+        ),
+        LayerSpec("pool5", "pool", kernel=(3, 3), stride=(2, 2)),
+        LayerSpec("flatten", "flatten"),
+        LayerSpec("fc6", "fc", 4096, relu=True),
+        LayerSpec("fc7", "fc", 4096, relu=True),
+        LayerSpec("fc8", "fc", 1000),
+    ]
+
+
+ALEXNET_SPECS = _alexnet_specs(groups=2)
+ALEXNET1C_SPECS = _alexnet_specs(groups=1)
+
+# --------------------------------------------------------------------------
+# VGG-11 (configuration A) and VGG-16 (configuration D), 224x224 input.
+# --------------------------------------------------------------------------
+
+VGG_IN = (3, 224, 224)
+
+
+def _vgg_specs(cfg: List) -> List[LayerSpec]:
+    specs: List[LayerSpec] = []
+    ci = 0
+    pi = 0
+    for v in cfg:
+        if v == "M":
+            pi += 1
+            specs.append(
+                LayerSpec(f"pool{pi}", "pool", kernel=(2, 2), stride=(2, 2))
+            )
+        else:
+            ci += 1
+            specs.append(
+                LayerSpec(
+                    f"conv{ci}", "conv", v, (3, 3), (1, 1), (1, 1), relu=True
+                )
+            )
+    specs += [
+        LayerSpec("flatten", "flatten"),
+        LayerSpec("fc6", "fc", 4096, relu=True),
+        LayerSpec("fc7", "fc", 4096, relu=True),
+        LayerSpec("fc8", "fc", 1000),
+    ]
+    return specs
+
+
+VGG11_SPECS = _vgg_specs(
+    [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+)
+VGG16_SPECS = _vgg_specs(
+    [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+     512, 512, 512, "M", 512, 512, 512, "M"]
+)
+
+# --------------------------------------------------------------------------
+# TinyNet — a fast 2-conv net on 3x16x16 inputs for integration tests.
+# --------------------------------------------------------------------------
+
+TINYNET_IN = (3, 16, 16)
+
+TINYNET_SPECS: List[LayerSpec] = [
+    LayerSpec("conv1", "conv", 8, (3, 3), (1, 1), (1, 1), relu=True),
+    LayerSpec("pool1", "pool", kernel=(2, 2), stride=(2, 2)),
+    LayerSpec("conv2", "conv", 16, (3, 3), (1, 1), (1, 1), relu=True),
+    LayerSpec("pool2", "pool", kernel=(2, 2), stride=(2, 2)),
+    LayerSpec("flatten", "flatten"),
+    LayerSpec("fc1", "fc", 32, relu=True),
+    LayerSpec("fc2", "fc", 10),
+]
+
+# --------------------------------------------------------------------------
+# ResNet-50 (v1, stride on the first 1x1 of a downsampling block).
+# BN folded into conv at init; eltwise-add shortcuts; 224x224 input.
+# --------------------------------------------------------------------------
+
+RESNET50_IN = (3, 224, 224)
+_R50_STAGES = [  # (blocks, mid_channels, out_channels, first_stride)
+    (3, 64, 256, 1),
+    (4, 128, 512, 2),
+    (6, 256, 1024, 2),
+    (3, 512, 2048, 2),
+]
+
+
+def _fold_bn(
+    rng: np.random.RandomState, w: np.ndarray, b: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold a randomly-initialized BN into (w, b).
+
+    Inference-time BN is an affine per-out-channel transform
+    y = gamma*(x-mean)/sqrt(var+eps) + beta; folding multiplies each
+    filter by s=gamma/sqrt(var+eps) and shifts the bias.  Random
+    (but seeded) BN statistics keep the folded network numerically
+    non-trivial.
+    """
+    f = w.shape[0]
+    gamma = rng.uniform(0.5, 1.5, f).astype(np.float32)
+    beta = (rng.randn(f) * 0.05).astype(np.float32)
+    mean = (rng.randn(f) * 0.05).astype(np.float32)
+    var = rng.uniform(0.5, 1.5, f).astype(np.float32)
+    s = gamma / np.sqrt(var + 1e-5)
+    return w * s.reshape(f, 1, 1, 1), (b - mean) * s + beta
+
+
+def _r50_block_names() -> List[Tuple[str, int, int, int, int, bool]]:
+    """(prefix, in_ch, mid, out, stride, has_projection) per block."""
+    rows = []
+    in_ch = 64
+    for si, (blocks, mid, out, stride0) in enumerate(_R50_STAGES, start=1):
+        for bi in range(blocks):
+            stride = stride0 if bi == 0 else 1
+            proj = bi == 0
+            rows.append((f"layer{si}.{bi}", in_ch, mid, out, stride, proj))
+            in_ch = out
+    return rows
+
+
+def resnet50_init_params(seed: int) -> Dict[str, np.ndarray]:
+    rng = np.random.RandomState(seed)
+    p: Dict[str, np.ndarray] = {}
+
+    def conv_bn(name: str, f: int, c: int, k: int) -> None:
+        w = he_conv(rng, f, c, k, k)
+        b = np.zeros(f, dtype=np.float32)
+        p[f"{name}.w"], p[f"{name}.b"] = _fold_bn(rng, w, b)
+
+    conv_bn("conv1", 64, 3, 7)
+    for prefix, in_ch, mid, out, _stride, proj in _r50_block_names():
+        conv_bn(f"{prefix}.conv1", mid, in_ch, 1)
+        conv_bn(f"{prefix}.conv2", mid, mid, 3)
+        conv_bn(f"{prefix}.conv3", out, mid, 1)
+        if proj:
+            conv_bn(f"{prefix}.proj", out, in_ch, 1)
+    p["fc.w"] = he_fc(rng, 1000, 2048)
+    p["fc.b"] = np.zeros(1000, dtype=np.float32)
+    return p
+
+
+def resnet50_forward(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    *,
+    impl: str = "jnp",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """ResNet-50 inference pass over the L1 kernels."""
+
+    def cv(name, x, stride=1, pad=0, relu=False):
+        return kconv.conv2d(
+            x,
+            params[f"{name}.w"],
+            params[f"{name}.b"],
+            stride=(stride, stride),
+            padding=(pad, pad),
+            relu=relu,
+            impl=impl,
+            interpret=interpret,
+        )
+
+    x = cv("conv1", x, stride=2, pad=3, relu=True)
+    x = kpool.pool2d(
+        x, (3, 3), (2, 2), padding=(1, 1), mode="max",
+        impl=impl, interpret=interpret,
+    )
+    for prefix, _in_ch, _mid, _out, stride, proj in _r50_block_names():
+        identity = x
+        y = cv(f"{prefix}.conv1", x, stride=stride, relu=True)
+        y = cv(f"{prefix}.conv2", y, pad=1, relu=True)
+        y = cv(f"{prefix}.conv3", y)
+        if proj:
+            identity = cv(f"{prefix}.proj", x, stride=stride)
+        # eltwise add + ReLU (the pallas kernel when impl="pallas")
+        x = kelt.add(y, identity, relu=True, impl=impl, interpret=interpret)
+    x = kpool.global_avg_pool(x, impl=impl, interpret=interpret)
+    return kfc.fc(
+        x, params["fc.w"], params["fc.b"], impl=impl, interpret=interpret
+    )
+
+
+def resnet50_layer_table(in_shape=RESNET50_IN) -> List[LayerInfo]:
+    """Accounting rows for ResNet-50, same schema as chain nets."""
+    infos: List[LayerInfo] = []
+    c, h, w = in_shape
+
+    def add_conv(name, in_c, out_c, k, stride, pad, hw):
+        oh, ow = kconv.conv_out_shape(hw, k, k, (stride, stride), (pad, pad))
+        infos.append(
+            LayerInfo(
+                name=name,
+                kind="conv",
+                in_shape=(in_c, hw[0], hw[1]),
+                out_shape=(out_c, oh, ow),
+                macs=out_c * in_c * k * k * oh * ow,
+                params=out_c * in_c * k * k + out_c,
+            )
+        )
+        return oh, ow
+
+    hw = (h, w)
+    hw = add_conv("conv1", 3, 64, 7, 2, 3, hw)
+    oh, ow = kconv.conv_out_shape(hw, 3, 3, (2, 2), (1, 1))
+    infos.append(
+        LayerInfo("pool1", "pool", (64,) + hw, (64, oh, ow), 0, 0)
+    )
+    hw = (oh, ow)
+    for prefix, in_ch, mid, out, stride, proj in _r50_block_names():
+        in_hw = hw
+        hw = add_conv(f"{prefix}.conv1", in_ch, mid, 1, stride, 0, hw)
+        hw = add_conv(f"{prefix}.conv2", mid, mid, 3, 1, 1, hw)
+        hw = add_conv(f"{prefix}.conv3", mid, out, 1, 1, 0, hw)
+        if proj:
+            add_conv(f"{prefix}.proj", in_ch, out, 1, stride, 0, in_hw)
+        infos.append(
+            LayerInfo(
+                f"{prefix}.add", "eltwise", (out,) + hw, (out,) + hw, 0, 0
+            )
+        )
+    infos.append(LayerInfo("avgpool", "pool", (2048,) + hw, (2048,), 0, 0))
+    infos.append(
+        LayerInfo(
+            "fc", "fc", (2048,), (1000,),
+            macs=1000 * 2048, params=1000 * 2048 + 1000,
+        )
+    )
+    return infos
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+class Net:
+    """Uniform wrapper: chain nets and ResNet expose the same surface."""
+
+    def __init__(
+        self,
+        name: str,
+        in_shape: Tuple[int, int, int],
+        init_params: Callable[[int], Dict[str, np.ndarray]],
+        forward: Callable,
+        layer_table: Callable[[], List[LayerInfo]],
+    ):
+        self.name = name
+        self.in_shape = in_shape
+        self.init_params = init_params
+        self.forward = forward
+        self.layer_table = layer_table
+
+
+def _chain_net(name, specs, in_shape, seed_base=0) -> Net:
+    return Net(
+        name=name,
+        in_shape=in_shape,
+        init_params=lambda seed: init_chain_params(specs, in_shape, seed),
+        forward=lambda params, x, impl="jnp", interpret=True: chain_forward(
+            specs, params, x, impl=impl, interpret=interpret
+        ),
+        layer_table=lambda: propagate(specs, in_shape),
+    )
+
+
+NETS: Dict[str, Net] = {
+    "alexnet": _chain_net("alexnet", ALEXNET_SPECS, ALEXNET_IN),
+    "alexnet1c": _chain_net("alexnet1c", ALEXNET1C_SPECS, ALEXNET_IN),
+    "vgg11": _chain_net("vgg11", VGG11_SPECS, VGG_IN),
+    "vgg16": _chain_net("vgg16", VGG16_SPECS, VGG_IN),
+    "tinynet": _chain_net("tinynet", TINYNET_SPECS, TINYNET_IN),
+    "resnet50": Net(
+        name="resnet50",
+        in_shape=RESNET50_IN,
+        init_params=resnet50_init_params,
+        forward=resnet50_forward,
+        layer_table=resnet50_layer_table,
+    ),
+}

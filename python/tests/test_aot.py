@@ -1,0 +1,135 @@
+"""AOT export pipeline: manifest schema, weight blobs, golden blobs,
+HLO-text interchange invariants.
+
+Uses the tinynet quick targets into a tmpdir so the test is hermetic
+and fast; the full `make artifacts` output obeys the same schema.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, nets
+from compile.model import param_order
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    outdir = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(
+        outdir, aot.QUICK_TARGETS, seed=aot.DEFAULT_SEED, verbose=False
+    )
+    return outdir, manifest
+
+
+def test_manifest_written_and_loadable(built):
+    outdir, manifest = built
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["version"] == manifest["version"] == 1
+    assert len(on_disk["artifacts"]) == len(aot.QUICK_TARGETS)
+
+
+def test_every_artifact_file_exists(built):
+    outdir, manifest = built
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(outdir, a["hlo"]))
+        assert os.path.exists(os.path.join(outdir, a["weights"]))
+        if a["golden"]:
+            assert os.path.exists(os.path.join(outdir, a["golden"]["file"]))
+
+
+def test_hlo_is_text_with_entry(built):
+    """The interchange format is HLO *text* (xla_extension 0.5.1 rejects
+    jax>=0.5 serialized protos) — must contain an ENTRY computation."""
+    outdir, manifest = built
+    for a in manifest["artifacts"]:
+        with open(os.path.join(outdir, a["hlo"])) as f:
+            text = f.read()
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # weights must be arguments, not constants: count parameters
+        assert text.count("parameter(") >= len(a["params"]) + 1
+
+
+def test_weight_blob_layout(built):
+    """Offsets are contiguous, in param_order, and sum to the file size."""
+    outdir, manifest = built
+    a = manifest["artifacts"][0]
+    order = param_order(nets.NETS[a["model"]].init_params(manifest["seed"]))
+    assert [p["name"] for p in a["params"]] == order
+    expect_off = 0
+    for p in a["params"]:
+        assert p["offset"] == expect_off
+        assert p["numel"] == int(np.prod(p["shape"]))
+        expect_off += p["numel"]
+    size = os.path.getsize(os.path.join(outdir, a["weights"]))
+    assert size == expect_off * 4  # f32
+
+
+def test_golden_blob_roundtrip(built):
+    """input+output blob sizes and the recorded l2 match the contents."""
+    outdir, manifest = built
+    for a in manifest["artifacts"]:
+        g = a["golden"]
+        if not g:
+            continue
+        raw = np.fromfile(
+            os.path.join(outdir, g["file"]), dtype=np.float32
+        )
+        assert raw.size == g["input_numel"] + g["output_numel"]
+        y = raw[g["input_numel"] :]
+        np.testing.assert_allclose(
+            np.linalg.norm(y), g["output_l2"], rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            y[:8], np.asarray(g["output_first8"], np.float32), rtol=1e-5
+        )
+
+
+def test_pallas_and_jnp_goldens_agree(built):
+    """Same model+seed through the two conv paths -> same logits."""
+    outdir, manifest = built
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    pal = by_name["tinynet_b1_pallas"]["golden"]
+    jnp_ = by_name["tinynet_b1_jnp"]["golden"]
+    np.testing.assert_allclose(
+        pal["output_first8"], jnp_["output_first8"], rtol=1e-4, atol=1e-5
+    )
+
+
+def test_models_section_covers_all_nets(built):
+    _, manifest = built
+    assert set(manifest["models"]) == set(nets.NETS)
+    for name, m in manifest["models"].items():
+        assert m["total_macs"] == sum(l["macs"] for l in m["layers"])
+        assert m["total_params"] == sum(l["params"] for l in m["layers"])
+
+
+def test_deterministic_weights_across_builds(built, tmp_path):
+    """Same seed -> byte-identical weight blobs (rust goldens rely on it)."""
+    outdir, manifest = built
+    out2 = str(tmp_path / "again")
+    aot.build(out2, aot.QUICK_TARGETS, seed=manifest["seed"], verbose=False)
+    a = manifest["artifacts"][0]["weights"]
+    b1 = open(os.path.join(outdir, a), "rb").read()
+    b2 = open(os.path.join(out2, a), "rb").read()
+    assert b1 == b2
+
+
+def test_parse_targets():
+    ts = aot.parse_targets("alexnet_b1_jnp,tinynet_b2_pallas")
+    assert ts[0].model == "alexnet" and ts[0].batch == 1
+    assert ts[1].impl == "pallas" and ts[1].batch == 2
+    assert aot.parse_targets("quick") == aot.QUICK_TARGETS
+    assert aot.parse_targets("default") == aot.DEFAULT_TARGETS
+
+
+def test_make_input_deterministic():
+    a = aot.make_input((2, 3, 4, 4), 7)
+    b = aot.make_input((2, 3, 4, 4), 7)
+    c = aot.make_input((2, 3, 4, 4), 8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)

@@ -1,0 +1,86 @@
+"""Eltwise shortcut-add Pallas kernel vs plain jnp."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import eltwise
+
+
+def _rand(shape, seed):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32)
+    )
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize(
+    "shape", [(1, 1, 1, 1), (1, 64, 8, 8), (2, 256, 7, 7), (3, 5)]
+)
+def test_eltwise_vs_jnp(shape, relu):
+    a, b = _rand(shape, 1), _rand(shape, 2)
+    got = eltwise.add(a, b, relu=relu, impl="pallas", te=64)
+    want = eltwise.add(a, b, relu=relu, impl="jnp")
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_eltwise_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="mismatch"):
+        eltwise.add(jnp.zeros((2, 3)), jnp.zeros((3, 2)))
+
+
+@pytest.mark.parametrize("te", [1, 8, 555, 1 << 20])
+def test_eltwise_tile_invariance(te):
+    a, b = _rand((2, 7, 5, 3), 5), _rand((2, 7, 5, 3), 6)
+    got = eltwise.add(a, b, relu=True, impl="pallas", te=te)
+    want = jnp.maximum(a + b, 0.0)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@given(
+    n=st.integers(1, 300),
+    relu=st.booleans(),
+    te=st.sampled_from([8, 64, 4096]),
+    seed=st.integers(0, 99),
+)
+@settings(max_examples=25, deadline=None)
+def test_eltwise_matches_oracle_flat(n, relu, te, seed):
+    a, b = _rand((n,), seed), _rand((n,), seed + 1)
+    got = eltwise.add(a, b, relu=relu, impl="pallas", te=te)
+    want = jnp.maximum(a + b, 0.0) if relu else a + b
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_resnet_block_uses_eltwise_kernel():
+    """The residual join through the pallas kernel equals the jnp path
+    (guards the nets.py wiring)."""
+    from compile import nets
+
+    p = {
+        k: jnp.asarray(v)
+        for k, v in nets.resnet50_init_params(3).items()
+        if k.startswith("layer1.0.") or k.startswith("conv1")
+    }
+    x = _rand((1, 64, 8, 8), 9)
+    from compile.kernels import conv as kconv
+
+    def block(impl):
+        def cv(name, xx, stride=1, pad=0, relu=False):
+            return kconv.conv2d(
+                xx, p[f"layer1.0.{name}.w"], p[f"layer1.0.{name}.b"],
+                stride=(stride, stride), padding=(pad, pad),
+                relu=relu, impl=impl,
+            )
+
+        y = cv("conv1", x, relu=True)
+        y = cv("conv2", y, pad=1, relu=True)
+        y = cv("conv3", y)
+        sc = cv("proj", x)
+        from compile.kernels import eltwise as kelt
+
+        return kelt.add(y, sc, relu=True, impl=impl)
+
+    np.testing.assert_allclose(
+        block("pallas"), block("jnp"), rtol=1e-4, atol=1e-4
+    )

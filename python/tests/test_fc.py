@@ -1,0 +1,65 @@
+"""FC layer on the shared Pallas GEMM vs the einsum oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import fc as kfc
+from compile.kernels import ref
+from compile.kernels.conv import matmul_bias_act
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rand(shape, seed):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32)
+    )
+
+
+FC_CASES = [
+    # (batch, din, dout) — the paper's AlexNet head geometries (scaled)
+    (1, 9216, 128),   # fc6 reduction width, narrow out for speed
+    (1, 256, 1000),   # classifier out width
+    (4, 4096, 64),    # batched
+    (2, 1, 1),        # degenerate
+    (3, 37, 19),      # primes
+]
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("case", FC_CASES, ids=lambda c: f"n{c[0]}i{c[1]}o{c[2]}")
+def test_fc_vs_ref(case, relu):
+    n, din, dout = case
+    x = _rand((n, din), 1)
+    w = _rand((dout, din), 2)
+    b = _rand((dout,), 3)
+    got = kfc.fc(x, w, b, relu=relu, impl="pallas", tm=16, tn=16, tk=64)
+    want = ref.fc_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    got_jnp = kfc.fc(x, w, b, relu=relu, impl="jnp")
+    np.testing.assert_allclose(got_jnp, want, rtol=RTOL, atol=ATOL)
+
+
+def test_fc_conv_share_one_kernel():
+    """FC must be the same GEMM the conv path uses (paper: one Conv
+    engine serves both layer types)."""
+    x = _rand((2, 12), 5)
+    w = _rand((7, 12), 6)
+    via_fc = kfc.fc(x, w, None, impl="pallas", tm=8, tn=8, tk=8)
+    via_gemm = matmul_bias_act(w, x.T, None, tm=8, tn=8, tk=8).T
+    np.testing.assert_allclose(via_fc, via_gemm, rtol=0, atol=0)
+
+
+def test_fc_rejects_dim_mismatch():
+    with pytest.raises(ValueError, match="dim mismatch"):
+        kfc.fc(jnp.zeros((1, 5)), jnp.zeros((3, 4)))
+
+
+@pytest.mark.parametrize("dtype_in", [jnp.float32])
+def test_fc_accumulates_fp32(dtype_in):
+    """Accumulation stays fp32 (paper: full-precision direct compute)."""
+    x = jnp.full((1, 4096), 1e-3, dtype_in)
+    w = jnp.full((1, 4096), 1e-3, dtype_in)
+    got = kfc.fc(x, w, None, impl="pallas")
+    np.testing.assert_allclose(got, [[4096e-6]], rtol=1e-4)

@@ -1,0 +1,130 @@
+"""Property-based shape/param sweeps over the L1 kernels (hypothesis).
+
+Each property asserts kernel == oracle for randomized geometry — the
+breadth pass behind the fixed-geometry tests in test_kernel.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, fc as kfc, lrn as klrn, pool, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(shape, seed):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32)
+    )
+
+
+@st.composite
+def conv_geometry(draw):
+    n = draw(st.integers(1, 3))
+    c = draw(st.integers(1, 8))
+    f = draw(st.integers(1, 12))
+    kh = draw(st.integers(1, 5))
+    kw = draw(st.integers(1, 5))
+    ph = draw(st.integers(0, 2))
+    pw = draw(st.integers(0, 2))
+    sh = draw(st.integers(1, 3))
+    sw = draw(st.integers(1, 3))
+    # input large enough for at least one output pixel
+    h = draw(st.integers(max(1, kh - 2 * ph), 14))
+    w = draw(st.integers(max(1, kw - 2 * pw), 14))
+    h = max(h, kh - 2 * ph)
+    w = max(w, kw - 2 * pw)
+    return (n, c, h, w), (f, c, kh, kw), (sh, sw), (ph, pw)
+
+
+@given(geo=conv_geometry(), relu=st.booleans(), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_conv_matches_oracle(geo, relu, seed):
+    xs, ws, stride, pad = geo
+    x, w, b = _rand(xs, seed), _rand(ws, seed + 1), _rand((ws[0],), seed + 2)
+    got = conv.conv2d(
+        x, w, b, stride=stride, padding=pad, relu=relu,
+        impl="pallas", tm=8, tn=16, tk=8,
+    )
+    want = ref.conv2d_ref(x, w, b, stride=stride, padding=pad, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 60),
+    n=st.integers(1, 40),
+    tm=st.sampled_from([8, 16, 32]),
+    tn=st.sampled_from([8, 16, 32]),
+    tk=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 99),
+)
+@settings(**SETTINGS)
+def test_gemm_tile_padding_never_leaks(m, k, n, tm, tn, tk, seed):
+    """Zero-padding to tile multiples must never change the result."""
+    w, p = _rand((m, k), seed), _rand((k, n), seed + 1)
+    got = conv.matmul_bias_act(w, p, None, tm=tm, tn=tn, tk=tk)
+    want = jnp.matmul(w, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@st.composite
+def pool_geometry(draw):
+    n = draw(st.integers(1, 2))
+    c = draw(st.integers(1, 10))
+    kh = draw(st.integers(1, 4))
+    kw = draw(st.integers(1, 4))
+    sh = draw(st.integers(1, 3))
+    sw = draw(st.integers(1, 3))
+    ph = draw(st.integers(0, 1))
+    pw = draw(st.integers(0, 1))
+    ph, pw = min(ph, kh - 1), min(pw, kw - 1)  # pad < kernel
+    h = draw(st.integers(max(1, kh - 2 * ph), 12))
+    w = draw(st.integers(max(1, kw - 2 * pw), 12))
+    return (n, c, h, w), (kh, kw), (sh, sw), (ph, pw)
+
+
+@given(
+    geo=pool_geometry(),
+    mode=st.sampled_from(["max", "avg"]),
+    tc=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 99),
+)
+@settings(**SETTINGS)
+def test_pool_matches_oracle(geo, mode, tc, seed):
+    xs, k, s, p = geo
+    x = _rand(xs, seed)
+    got = pool.pool2d(x, k, s, padding=p, mode=mode, impl="pallas", tc=tc)
+    want = ref.pool2d_ref(x, k, s, padding=p, mode=mode)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    c=st.integers(1, 24),
+    hw=st.integers(1, 8),
+    n=st.sampled_from([3, 5, 7]),
+    ts=st.sampled_from([1, 16, 512]),
+    seed=st.integers(0, 99),
+)
+@settings(**SETTINGS)
+def test_lrn_matches_oracle(c, hw, n, ts, seed):
+    x = _rand((1, c, hw, hw), seed)
+    got = klrn.lrn(x, n=n, impl="pallas", ts=ts)
+    want = ref.lrn_ref(x, n=n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    n=st.integers(1, 6),
+    din=st.integers(1, 80),
+    dout=st.integers(1, 50),
+    relu=st.booleans(),
+    seed=st.integers(0, 99),
+)
+@settings(**SETTINGS)
+def test_fc_matches_oracle(n, din, dout, relu, seed):
+    x, w, b = _rand((n, din), seed), _rand((dout, din), seed + 1), _rand((dout,), seed + 2)
+    got = kfc.fc(x, w, b, relu=relu, impl="pallas", tm=8, tn=8, tk=16)
+    want = ref.fc_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,162 @@
+"""Pallas conv kernel vs the pure-jnp oracle — the CORE correctness signal.
+
+The flattened 1-D convolution (FFCNN Eq. 4) must agree with the naive
+shifted-view oracle for every (shape, stride, padding, groups, relu)
+combination the paper's networks use, plus adversarial odd shapes that
+stress the tile-padding logic.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import conv, ref
+
+# fp32 GEMM reassociation across tile orders: relative 5e-4 over the
+# deepest reduction the paper's nets use (K = C*kh*kw up to 9216).
+RTOL, ATOL = 5e-4, 1e-3
+
+
+def _rand(shape, seed):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32)
+    )
+
+
+def _check_conv(xs, ws, stride, padding, groups=1, relu=False, seed=0, **tiles):
+    x = _rand(xs, seed)
+    w = _rand(ws, seed + 1)
+    b = _rand((ws[0],), seed + 2)
+    got = conv.conv2d(
+        x, w, b, stride=stride, padding=padding, relu=relu,
+        groups=groups, impl="pallas", **tiles,
+    )
+    want = ref.conv2d_ref(
+        x, w, b, stride=stride, padding=padding, relu=relu, groups=groups
+    )
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    # impl="jnp" (the fast AOT path) must agree with the same oracle.
+    got_jnp = conv.conv2d(
+        x, w, b, stride=stride, padding=padding, relu=relu,
+        groups=groups, impl="jnp",
+    )
+    np.testing.assert_allclose(got_jnp, want, rtol=RTOL, atol=ATOL)
+
+
+# ---- the exact layer geometries of the paper's networks (scaled maps) ----
+
+ALEXNET_LAYERS = [
+    # (x, w, stride, pad, groups) with spatial dims scaled down ~4x so the
+    # interpret-mode kernel stays fast; channel/kernel geometry is exact.
+    ((1, 3, 59, 59), (96, 3, 11, 11), (4, 4), (0, 0), 1),
+    ((1, 96, 13, 13), (256, 48, 5, 5), (1, 1), (2, 2), 2),
+    ((1, 256, 7, 7), (384, 256, 3, 3), (1, 1), (1, 1), 1),
+    ((1, 384, 7, 7), (384, 192, 3, 3), (1, 1), (1, 1), 2),
+    ((1, 384, 7, 7), (256, 192, 3, 3), (1, 1), (1, 1), 2),
+]
+
+RESNET_LAYERS = [
+    ((1, 3, 32, 32), (64, 3, 7, 7), (2, 2), (3, 3), 1),   # conv1
+    ((1, 64, 14, 14), (64, 64, 1, 1), (1, 1), (0, 0), 1),  # bottleneck 1x1
+    ((1, 64, 14, 14), (64, 64, 3, 3), (1, 1), (1, 1), 1),  # bottleneck 3x3
+    ((1, 64, 14, 14), (256, 64, 1, 1), (1, 1), (0, 0), 1),  # expand 1x1
+    ((1, 256, 14, 14), (512, 256, 1, 1), (2, 2), (0, 0), 1),  # strided proj
+]
+
+
+@pytest.mark.parametrize("case", ALEXNET_LAYERS, ids=lambda c: f"x{c[0]}w{c[1]}")
+def test_alexnet_conv_geometry(case):
+    xs, ws, stride, pad, groups = case
+    _check_conv(xs, ws, stride, pad, groups=groups, relu=True)
+
+
+@pytest.mark.parametrize("case", RESNET_LAYERS, ids=lambda c: f"x{c[0]}w{c[1]}")
+def test_resnet_conv_geometry(case):
+    xs, ws, stride, pad, groups = case
+    _check_conv(xs, ws, stride, pad, groups=groups)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 3, 5])
+def test_batch_folding(batch):
+    """Batch folds into GEMM columns; result must be batch-invariant."""
+    _check_conv((batch, 5, 9, 9), (7, 5, 3, 3), (1, 1), (1, 1))
+
+
+@pytest.mark.parametrize(
+    "tiles",
+    [
+        dict(tm=8, tn=8, tk=8),
+        dict(tm=16, tn=32, tk=16),
+        dict(tm=32, tn=128, tk=128),
+        dict(tm=128, tn=128, tk=256),  # tiles larger than the problem
+    ],
+    ids=lambda t: f"tm{t['tm']}tn{t['tn']}tk{t['tk']}",
+)
+def test_tile_size_invariance(tiles):
+    """Any tile choice must give identical numerics (padding logic)."""
+    _check_conv((2, 6, 11, 11), (9, 6, 3, 3), (2, 2), (1, 1), **tiles)
+
+
+@pytest.mark.parametrize(
+    "xs,ws,stride,pad",
+    [
+        ((1, 1, 1, 1), (1, 1, 1, 1), (1, 1), (0, 0)),  # degenerate 1x1
+        ((1, 2, 5, 7), (3, 2, 5, 7), (1, 1), (0, 0)),  # kernel == input
+        ((1, 3, 8, 8), (4, 3, 3, 3), (3, 3), (0, 0)),  # stride > pad
+        ((2, 7, 10, 6), (5, 7, 2, 4), (2, 1), (1, 2)),  # asymmetric all
+        ((1, 13, 9, 9), (17, 13, 3, 3), (1, 1), (1, 1)),  # prime channels
+    ],
+)
+def test_odd_shapes(xs, ws, stride, pad):
+    _check_conv(xs, ws, stride, pad)
+
+
+def test_relu_epilogue_clamps():
+    """The fused epilogue must clamp exactly at zero."""
+    x = -jnp.ones((1, 2, 4, 4), jnp.float32)
+    w = jnp.ones((2, 2, 3, 3), jnp.float32)
+    out = conv.conv2d(x, w, None, padding=(1, 1), relu=True, impl="pallas")
+    assert float(jnp.max(out)) == 0.0
+    assert float(jnp.min(out)) == 0.0
+
+
+def test_bias_none_is_zero_bias():
+    x = _rand((1, 3, 6, 6), 0)
+    w = _rand((4, 3, 3, 3), 1)
+    got = conv.conv2d(x, w, None, impl="pallas")
+    want = conv.conv2d(x, w, jnp.zeros((4,), jnp.float32), impl="pallas")
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_im2col_feature_order_matches_filter_reshape():
+    """im2col must order features (C major, kh, kw) = w.reshape(F,-1)."""
+    x = _rand((1, 3, 5, 5), 3)
+    p = conv.im2col(x, 3, 3, (1, 1), (0, 0))
+    assert p.shape == (1, 27, 3, 3)
+    # feature index c*9 + i*3 + j must equal x[c, y+i, x+j]
+    np.testing.assert_allclose(
+        p[0, 1 * 9 + 2 * 3 + 1, 1, 1], x[0, 1, 1 + 2, 1 + 1], rtol=0, atol=0
+    )
+
+
+def test_matmul_rejects_mismatched_k():
+    with pytest.raises(ValueError, match="reduction mismatch"):
+        conv.matmul_bias_act(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+def test_conv_rejects_channel_mismatch():
+    with pytest.raises(ValueError, match="channel mismatch"):
+        conv.conv2d(jnp.zeros((1, 3, 4, 4)), jnp.zeros((2, 4, 3, 3)))
+
+
+def test_conv_rejects_bad_groups():
+    with pytest.raises(ValueError, match="not divisible"):
+        conv.conv2d(
+            jnp.zeros((1, 4, 4, 4)), jnp.zeros((3, 2, 3, 3)), groups=2
+        )
+
+
+def test_out_shape_helper():
+    assert conv.conv_out_shape((227, 227), 11, 11, (4, 4), (0, 0)) == (55, 55)
+    assert conv.conv_out_shape((13, 13), 3, 3, (1, 1), (1, 1)) == (13, 13)
+    assert conv.conv_out_shape((6, 6), 3, 3, (2, 2), (0, 0)) == (2, 2)

@@ -1,0 +1,192 @@
+"""L2 network assembly: shapes, accounting, and pallas/jnp agreement.
+
+The accounting numbers here are the contract shared with the rust model
+IR (rust/src/models) and the manifest — if these change, the rust
+cross-check tests must change too.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model, nets
+
+
+def _params(net, seed=42):
+    return {k: jnp.asarray(v) for k, v in net.init_params(seed).items()}
+
+
+# --- accounting: literature-known totals ------------------------------------
+
+
+def test_alexnet_totals():
+    """Original (grouped) AlexNet: 0.724 GMACs = 1.45 GOPs, 61M params.
+
+    1.45 GOPs is the count implied by the paper's Table 1 (45.7 ms at
+    31.8 GOPS for FPGA2016a)."""
+    t = nets.NETS["alexnet"].layer_table()
+    assert model.total_macs(t) == 724_406_816
+    assert model.total_params(t) == 60_965_224
+    assert 1.44e9 < 2 * model.total_macs(t) < 1.46e9
+
+
+def test_alexnet1c_totals():
+    """Single-column CaffeNet variant: 1.135 GMACs."""
+    t = nets.NETS["alexnet1c"].layer_table()
+    assert abs(model.total_macs(t) - 1.135e9) < 0.01e9
+
+
+def test_vgg11_totals():
+    """VGG-11 (Fig. 1 model): ~7.6 GMACs, ~132.9M params."""
+    t = nets.NETS["vgg11"].layer_table()
+    assert abs(model.total_macs(t) - 7.609e9) < 0.02e9
+    assert abs(model.total_params(t) - 132.86e6) < 0.1e6
+
+
+def test_vgg16_totals():
+    t = nets.NETS["vgg16"].layer_table()
+    assert abs(model.total_macs(t) - 15.47e9) < 0.05e9
+    assert abs(model.total_params(t) - 138.36e6) < 0.1e6
+
+
+def test_resnet50_totals():
+    """ResNet-50: ~3.86 GMACs, ~25.5M params."""
+    t = nets.NETS["resnet50"].layer_table()
+    assert abs(model.total_macs(t) - 3.858e9) < 0.03e9
+    assert abs(model.total_params(t) - 25.53e6) < 0.2e6
+
+
+def test_fig1_conv_fc_dominate_vgg11():
+    """Fig. 1's claim: conv+fc contribute >99% of weights and ops."""
+    t = nets.NETS["vgg11"].layer_table()
+    conv_fc_params = sum(i.params for i in t if i.kind in ("conv", "fc"))
+    conv_fc_macs = sum(i.macs for i in t if i.kind in ("conv", "fc"))
+    assert conv_fc_params / model.total_params(t) > 0.99
+    assert conv_fc_macs / max(model.total_macs(t), 1) > 0.99
+
+
+def test_fig1_fc_holds_most_weights_conv_most_ops():
+    """Fig. 1's shape: FC dominates weights, conv dominates operations."""
+    t = nets.NETS["vgg11"].layer_table()
+    fc_params = sum(i.params for i in t if i.kind == "fc")
+    conv_macs = sum(i.macs for i in t if i.kind == "conv")
+    assert fc_params / model.total_params(t) > 0.5
+    assert conv_macs / model.total_macs(t) > 0.9
+
+
+# --- shape propagation -------------------------------------------------------
+
+
+def test_alexnet_shapes():
+    t = nets.NETS["alexnet"].layer_table()
+    by = {i.name: i for i in t}
+    assert by["conv1"].out_shape == (96, 55, 55)
+    assert by["pool1"].out_shape == (96, 27, 27)
+    assert by["conv2"].out_shape == (256, 27, 27)
+    assert by["pool2"].out_shape == (256, 13, 13)
+    assert by["conv5"].out_shape == (256, 13, 13)
+    assert by["pool5"].out_shape == (256, 6, 6)
+    assert by["flatten"].out_shape == (9216,)
+    assert by["fc8"].out_shape == (1000,)
+
+
+def test_resnet50_shapes():
+    t = nets.NETS["resnet50"].layer_table()
+    by = {i.name: i for i in t}
+    assert by["conv1"].out_shape == (64, 112, 112)
+    assert by["pool1"].out_shape == (64, 56, 56)
+    assert by["layer1.0.conv3"].out_shape == (256, 56, 56)
+    assert by["layer2.0.conv3"].out_shape == (512, 28, 28)
+    assert by["layer4.2.conv3"].out_shape == (2048, 7, 7)
+    assert by["fc"].out_shape == (1000,)
+    # 53 convs + 1 fc = the "50 layers" counting conv1 + 16*3 + fc
+    assert sum(1 for i in t if i.kind == "conv") == 53
+
+
+def test_resnet50_param_count_matches_table():
+    """init_params tensor sizes must sum to the layer-table total."""
+    p = nets.NETS["resnet50"].init_params(0)
+    n = sum(int(np.prod(v.shape)) for v in p.values())
+    t = nets.NETS["resnet50"].layer_table()
+    assert n == model.total_params(t)
+
+
+@pytest.mark.parametrize("name", ["alexnet", "vgg11", "tinynet"])
+def test_chain_param_count_matches_table(name):
+    p = nets.NETS[name].init_params(0)
+    n = sum(int(np.prod(v.shape)) for v in p.values())
+    t = nets.NETS[name].layer_table()
+    assert n == model.total_params(t)
+
+
+# --- forward passes ----------------------------------------------------------
+
+
+def test_tinynet_forward_pallas_vs_jnp():
+    net = nets.NETS["tinynet"]
+    p = _params(net)
+    x = jnp.asarray(
+        np.random.RandomState(0).randn(2, 3, 16, 16).astype(np.float32)
+    )
+    a = net.forward(p, x, impl="jnp")
+    b = net.forward(p, x, impl="pallas")
+    assert a.shape == (2, 10)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_forward_deterministic():
+    net = nets.NETS["tinynet"]
+    p = _params(net)
+    x = jnp.ones((1, 3, 16, 16), jnp.float32)
+    y1 = net.forward(p, x, impl="pallas")
+    y2 = net.forward(p, x, impl="pallas")
+    np.testing.assert_allclose(y1, y2, rtol=0, atol=0)
+
+
+def test_init_seed_changes_params():
+    net = nets.NETS["tinynet"]
+    a = net.init_params(1)["conv1.w"]
+    b = net.init_params(2)["conv1.w"]
+    assert np.abs(a - b).max() > 0
+
+
+def test_resnet_block_forward_small():
+    """One bottleneck block end-to-end at reduced spatial size."""
+    p = {
+        k: jnp.asarray(v)
+        for k, v in nets.resnet50_init_params(7).items()
+        if k.startswith("layer1.0.") or k.startswith("conv1")
+    }
+    x = jnp.asarray(
+        np.random.RandomState(1).randn(1, 64, 8, 8).astype(np.float32)
+    )
+
+    def block(x, impl):
+        from compile.kernels import conv as kconv
+
+        def cv(name, x, stride=1, pad=0, relu=False):
+            return kconv.conv2d(
+                x, p[f"layer1.0.{name}.w"], p[f"layer1.0.{name}.b"],
+                stride=(stride, stride), padding=(pad, pad),
+                relu=relu, impl=impl,
+            )
+
+        y = cv("conv1", x, relu=True)
+        y = cv("conv2", y, pad=1, relu=True)
+        y = cv("conv3", y)
+        sc = cv("proj", x)
+        return jnp.maximum(y + sc, 0.0)
+
+    a = block(x, "jnp")
+    b = block(x, "pallas")
+    assert a.shape == (1, 256, 8, 8)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_dropout_is_identity_and_softmax_normalizes():
+    from compile.model import LayerSpec, chain_forward
+
+    specs = [LayerSpec("d", "dropout"), LayerSpec("s", "softmax")]
+    x = jnp.asarray([[1.0, 2.0, 3.0]])
+    out = chain_forward(specs, {}, x)
+    np.testing.assert_allclose(float(jnp.sum(out)), 1.0, rtol=1e-6)

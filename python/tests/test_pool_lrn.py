@@ -1,0 +1,110 @@
+"""Pooling and LRN Pallas kernels vs their naive oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import lrn as klrn
+from compile.kernels import pool, ref
+
+RTOL, ATOL = 1e-5, 1e-6
+
+
+def _rand(shape, seed):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32)
+    )
+
+
+# --- pooling ---------------------------------------------------------------
+
+POOL_CASES = [
+    # (shape, kernel, stride, padding) — the geometries in the paper's nets
+    ((1, 4, 13, 13), (3, 3), (2, 2), (0, 0)),  # AlexNet overlapping pool
+    ((2, 8, 14, 14), (2, 2), (2, 2), (0, 0)),  # VGG pool
+    ((1, 6, 15, 15), (3, 3), (2, 2), (1, 1)),  # ResNet stem pool (padded)
+    ((1, 3, 7, 7), (7, 7), (7, 7), (0, 0)),    # global pool
+    ((3, 5, 9, 11), (3, 2), (2, 3), (1, 0)),   # asymmetric everything
+]
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+@pytest.mark.parametrize("case", POOL_CASES, ids=lambda c: f"{c[0]}k{c[1]}")
+def test_pool_vs_ref(case, mode):
+    shape, k, s, p = case
+    x = _rand(shape, 7)
+    got = pool.pool2d(x, k, s, padding=p, mode=mode, impl="pallas", tc=4)
+    want = ref.pool2d_ref(x, k, s, padding=p, mode=mode)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    got_jnp = pool.pool2d(x, k, s, padding=p, mode=mode, impl="jnp")
+    np.testing.assert_allclose(got_jnp, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("tc", [1, 3, 8, 64])
+def test_pool_channel_tile_invariance(tc):
+    """Channel-tile size must not change results (padding logic)."""
+    x = _rand((2, 5, 8, 8), 11)
+    want = ref.pool2d_ref(x, (2, 2), (2, 2))
+    got = pool.pool2d(x, (2, 2), (2, 2), impl="pallas", tc=tc)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_maxpool_padding_uses_neg_inf():
+    """Padded cells must never win the max (even for all-negative x)."""
+    x = -jnp.ones((1, 1, 4, 4), jnp.float32) * 5.0
+    got = pool.pool2d(x, (3, 3), (2, 2), padding=(1, 1), impl="pallas")
+    assert float(jnp.max(got)) == -5.0
+
+
+def test_global_avg_pool():
+    x = _rand((2, 6, 7, 7), 13)
+    got = pool.global_avg_pool(x, impl="pallas", tc=4)
+    np.testing.assert_allclose(
+        got, jnp.mean(x, axis=(2, 3)), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_pool_rejects_bad_mode():
+    with pytest.raises(ValueError, match="unknown pool mode"):
+        pool.pool2d(jnp.zeros((1, 1, 4, 4)), (2, 2), (2, 2), mode="median")
+
+
+# --- LRN -------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("c", [1, 3, 5, 8, 96])
+def test_lrn_channel_counts(c):
+    """Window clamping at channel edges for any C (incl. C < n)."""
+    x = _rand((1, c, 4, 4), c)
+    got = klrn.lrn(x, impl="pallas", ts=8)
+    want = ref.lrn_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("params", [
+    dict(n=5, k=2.0, alpha=1e-4, beta=0.75),   # AlexNet values
+    dict(n=3, k=1.0, alpha=2e-4, beta=0.5),
+    dict(n=7, k=0.5, alpha=1e-3, beta=1.0),
+])
+def test_lrn_hyperparams(params):
+    x = _rand((2, 9, 5, 5), 17)
+    got = klrn.lrn(x, impl="pallas", ts=16, **params)
+    want = ref.lrn_ref(x, **params)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    got_jnp = klrn.lrn(x, impl="jnp", **params)
+    np.testing.assert_allclose(got_jnp, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("ts", [1, 7, 64, 4096])
+def test_lrn_spatial_tile_invariance(ts):
+    x = _rand((1, 6, 6, 6), 19)
+    want = ref.lrn_ref(x)
+    got = klrn.lrn(x, impl="pallas", ts=ts)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_lrn_identity_at_zero_alpha():
+    """alpha=0, k=1 -> output == input (scale is exactly 1)."""
+    x = _rand((1, 5, 3, 3), 23)
+    got = klrn.lrn(x, alpha=0.0, k=1.0, impl="pallas", ts=4)
+    np.testing.assert_allclose(got, x, rtol=0, atol=1e-7)

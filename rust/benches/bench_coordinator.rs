@@ -1,0 +1,65 @@
+//! Bench E4: coordinator throughput — batcher planning, router picks,
+//! and end-to-end service throughput on tinynet (fast) with batching
+//! on and off.
+
+use std::time::Duration;
+
+use ffcnn::config::{default_artifacts_dir, RunConfig};
+use ffcnn::coordinator::{plan_chunks, InferenceService, Pace, Policy, Router};
+use ffcnn::data;
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("coordinator").with_budget(Duration::from_secs(4));
+
+    // Pure host-side logic (no engine).
+    b.run("plan_chunks_1000", || {
+        (0..1000usize).map(|n| plan_chunks(n % 37, &[1, 2, 4, 8]).len()).sum::<usize>()
+    });
+    {
+        let (t1, _r1) = std::sync::mpsc::sync_channel(1024);
+        let (t2, _r2) = std::sync::mpsc::sync_channel(1024);
+        let router = Router::new(vec![t1, t2], Policy::LeastOutstanding);
+        b.run("router_pick_10k", || {
+            (0..10_000).map(|_| router.pick()).sum::<usize>()
+        });
+    }
+
+    // End-to-end service (needs artifacts).
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("no artifacts; skipping service benches");
+        b.finish();
+        return;
+    }
+    let mut cfg = RunConfig {
+        model: "tinynet".into(),
+        conv_impl: "pallas".into(),
+        artifacts_dir: dir,
+        ..Default::default()
+    };
+    cfg.serving.max_batch = 2;
+    cfg.serving.max_wait_ms = 1;
+
+    let svc =
+        InferenceService::start(&cfg, Pace::None, Policy::LeastOutstanding)
+            .unwrap();
+    let img = data::synth_images(1, (3, 16, 16), 9);
+    // warm
+    let _ = svc.classify(img.clone()).unwrap();
+
+    b.run("classify_single", || {
+        svc.classify(img.clone()).unwrap().argmax
+    });
+    b.run("burst_16_batched", || {
+        let trace = data::burst_trace(16);
+        let r = svc.run_trace(
+            &trace,
+            |id| data::synth_images(1, (3, 16, 16), id),
+            0.0,
+        );
+        assert_eq!(r.errors, 0);
+        (r.throughput_rps * 1000.0) as u64
+    });
+    b.finish();
+}

@@ -1,0 +1,50 @@
+//! Bench E2: full design-space exploration on both devices, printing
+//! the chosen points (the paper's "design space fully explored") and
+//! timing the sweep.
+
+use std::time::Duration;
+
+use ffcnn::fpga::device::{ARRIA10, STRATIX10, STRATIXV};
+use ffcnn::fpga::dse;
+use ffcnn::models;
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    let model = models::alexnet();
+
+    for device in [&ARRIA10, &STRATIX10, &STRATIXV] {
+        let pts = dse::explore(&model, device, 1);
+        let lat = dse::best_latency(&pts).unwrap();
+        let den = dse::best_density(&pts).unwrap();
+        println!(
+            "{:<12} {:>3} feasible/{:>3} | latency-opt vec={} lane={} \
+             ({:.2} ms) | density-opt vec={} lane={} ({:.3} GOPS/DSP)",
+            device.name,
+            pts.iter().filter(|p| p.feasible).count(),
+            pts.len(),
+            lat.params.vec_size,
+            lat.params.lane_num,
+            lat.time_ms,
+            den.params.vec_size,
+            den.params.lane_num,
+            den.gops_per_dsp
+        );
+    }
+
+    let mut b = Bench::new("dse").with_budget(Duration::from_secs(4));
+    b.run("explore_alexnet_stratix10", || {
+        dse::explore(&model, &STRATIX10, 1).len()
+    });
+    b.run("explore_alexnet_arria10", || {
+        dse::explore(&model, &ARRIA10, 1).len()
+    });
+    let resnet = models::resnet50();
+    b.run("explore_resnet50_stratix10", || {
+        dse::explore(&resnet, &STRATIX10, 1).len()
+    });
+    b.run("pareto_extraction", || {
+        let pts = dse::explore(&model, &STRATIX10, 1);
+        dse::pareto(&pts).len()
+    });
+    b.finish();
+}

@@ -1,0 +1,20 @@
+//! Bench F1: regenerate Fig. 1 (weights/ops distribution) for VGG-11
+//! (the paper's model) plus AlexNet and ResNet-50.
+
+use std::time::Duration;
+
+use ffcnn::models;
+use ffcnn::report::{fig1_distribution, render_fig1};
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    // The experiment itself.
+    println!("{}", render_fig1(&models::vgg11()));
+
+    let mut b = Bench::new("fig1").with_budget(Duration::from_secs(2));
+    for name in ["vgg11", "alexnet", "resnet50"] {
+        let m = models::by_name(name).unwrap();
+        b.run(&format!("distribution_{name}"), || fig1_distribution(&m));
+    }
+    b.finish();
+}

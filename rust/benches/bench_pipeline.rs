@@ -1,0 +1,67 @@
+//! Bench E3: the FPGA simulator itself — analytic model vs token-level
+//! pipeline simulation, across models, devices and channel depths.
+//!
+//! Prints the layer-breakdown experiment, then times both simulators
+//! (the token sim must stay fast enough for interactive DSE).
+
+use std::time::Duration;
+
+use ffcnn::fpga::device::{ARRIA10, STRATIX10};
+use ffcnn::fpga::pipeline::simulate_tokens;
+use ffcnn::fpga::timing::{
+    ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
+    OverlapPolicy,
+};
+use ffcnn::models;
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    // Experiment output: fusion bandwidth saving + model agreement.
+    for (m, d, p) in [
+        (models::alexnet(), &STRATIX10, ffcnn_stratix10_params()),
+        (models::alexnet(), &ARRIA10, ffcnn_arria10_params()),
+        (models::resnet50(), &STRATIX10, ffcnn_stratix10_params()),
+    ] {
+        let ana = simulate_model(&m, d, &p, 1, OverlapPolicy::WithinGroup);
+        let tok = simulate_tokens(&m, d, &p, 1);
+        println!(
+            "{:<10} {:<12} analytic {:>8.2} ms | token {:>8.2} ms | \
+             fusion saves {:>4.0}% DDR",
+            m.name,
+            d.name,
+            ana.time_per_image_ms(),
+            tok.time_ms(),
+            ana.fusion_traffic_saving() * 100.0
+        );
+    }
+
+    let mut b = Bench::new("pipeline").with_budget(Duration::from_secs(4));
+    let alex = models::alexnet();
+    let resnet = models::resnet50();
+    let p = ffcnn_stratix10_params();
+
+    b.run("analytic_alexnet", || {
+        simulate_model(&alex, &STRATIX10, &p, 1, OverlapPolicy::WithinGroup)
+            .total_cycles
+    });
+    b.run("analytic_resnet50", || {
+        simulate_model(&resnet, &STRATIX10, &p, 1, OverlapPolicy::WithinGroup)
+            .total_cycles
+    });
+    b.run("token_alexnet", || {
+        simulate_tokens(&alex, &STRATIX10, &p, 1).total_cycles
+    });
+    b.run("token_resnet50", || {
+        simulate_tokens(&resnet, &STRATIX10, &p, 1).total_cycles
+    });
+
+    // Channel-depth ablation: deeper channels cost sim time linearly?
+    for depth in [64usize, 512, 2048] {
+        let mut pd = p;
+        pd.channel_depth = depth;
+        b.run(&format!("token_alexnet_depth{depth}"), || {
+            simulate_tokens(&alex, &STRATIX10, &pd, 1).total_cycles
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,59 @@
+//! Bench E5: precision ablation — fp32 (the paper's choice) vs
+//! fixed-16/fixed-8 variants of the same FFCNN design point.
+//!
+//! Table 1's baselines differ on this axis (FPGA2016a is fixed 8-16b);
+//! the ablation quantifies what FFCNN gives up for full precision: the
+//! FC weight stream shrinks with element width and the MAC tree packs
+//! more multipliers per DSP, so fixed point lifts both latency and
+//! GOPS/DSP at batch 1.
+
+use std::time::Duration;
+
+use ffcnn::fpga::device::{ARRIA10, STRATIX10};
+use ffcnn::fpga::resources::resource_usage;
+use ffcnn::fpga::timing::{
+    ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
+    OverlapPolicy, Precision,
+};
+use ffcnn::models;
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    let model = models::alexnet();
+    println!(
+        "{:<12}{:<10}{:>10}{:>12}{:>10}{:>12}",
+        "device", "precision", "DSPs", "time(ms)", "GOPS", "GOPS/DSP"
+    );
+    for (d, base) in [
+        (&ARRIA10, ffcnn_arria10_params()),
+        (&STRATIX10, ffcnn_stratix10_params()),
+    ] {
+        for (name, prec) in [
+            ("fp32", Precision::Fp32),
+            ("fixed16", Precision::Fixed16),
+            ("fixed8", Precision::Fixed8),
+        ] {
+            let p = base.with_precision(prec);
+            let u = resource_usage(&p, d);
+            let t =
+                simulate_model(&model, d, &p, 1, OverlapPolicy::WithinGroup);
+            println!(
+                "{:<12}{:<10}{:>10}{:>12.2}{:>10.1}{:>12.3}",
+                d.name,
+                name,
+                u.dsps,
+                t.time_per_image_ms(),
+                t.gops(),
+                t.gops() / u.dsps as f64
+            );
+        }
+    }
+
+    let mut b = Bench::new("precision").with_budget(Duration::from_secs(2));
+    let p8 = ffcnn_stratix10_params().with_precision(Precision::Fixed8);
+    b.run("simulate_fixed8_alexnet", || {
+        simulate_model(&model, &STRATIX10, &p8, 1, OverlapPolicy::WithinGroup)
+            .total_cycles
+    });
+    b.finish();
+}

@@ -1,0 +1,64 @@
+//! Bench E1: ResNet-50 end-to-end — simulated FPGA time on both
+//! devices across batch sizes, plus real PJRT execution if artifacts
+//! are present.
+
+use std::time::Duration;
+
+use ffcnn::config::default_artifacts_dir;
+use ffcnn::data;
+use ffcnn::fpga::device::{ARRIA10, STRATIX10};
+use ffcnn::fpga::timing::{
+    ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
+    OverlapPolicy,
+};
+use ffcnn::models;
+use ffcnn::runtime::Engine;
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    let model = models::resnet50();
+
+    // Experiment output: the E1 table (simulated classification time).
+    println!(
+        "{:<12}{:>8}{:>12}{:>10}",
+        "device", "batch", "ms/image", "GOPS"
+    );
+    for (d, p) in [
+        (&ARRIA10, ffcnn_arria10_params()),
+        (&STRATIX10, ffcnn_stratix10_params()),
+    ] {
+        for batch in [1usize, 4] {
+            let t =
+                simulate_model(&model, d, &p, batch, OverlapPolicy::WithinGroup);
+            println!(
+                "{:<12}{:>8}{:>12.2}{:>10.1}",
+                d.name,
+                batch,
+                t.time_per_image_ms(),
+                t.gops()
+            );
+        }
+    }
+
+    let mut b = Bench::new("resnet").with_budget(Duration::from_secs(10));
+    let p = ffcnn_stratix10_params();
+    b.run("simulate_b1", || {
+        simulate_model(&model, &STRATIX10, &p, 1, OverlapPolicy::WithinGroup)
+            .total_cycles
+    });
+
+    // Real numerics through PJRT (skipped when artifacts are absent).
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::open(&dir).unwrap();
+        if engine.warm("resnet50_b1_jnp").is_ok() {
+            let input = data::synth_images(1, model.in_shape, 3);
+            b.run("pjrt_execute_b1", || {
+                engine.execute("resnet50_b1_jnp", &input).unwrap().len()
+            });
+        }
+    } else {
+        println!("(no artifacts; skipping PJRT benches)");
+    }
+    b.finish();
+}

@@ -1,0 +1,59 @@
+//! Bench: the PJRT runtime hot path — input upload, execute, download —
+//! for the AOT artifacts (perf-pass instrumentation lives here).
+
+use std::time::Duration;
+
+use ffcnn::config::default_artifacts_dir;
+use ffcnn::data;
+use ffcnn::models;
+use ffcnn::runtime::Engine;
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("no artifacts (run `make artifacts`); nothing to bench");
+        return;
+    }
+    let engine = Engine::open(&dir).unwrap();
+    let mut b = Bench::new("runtime").with_budget(Duration::from_secs(8));
+
+    // Tiny model: measures framework overhead (upload+dispatch+download).
+    engine.warm("tinynet_b1_pallas").unwrap();
+    let tiny_in = data::synth_images(1, models::tinynet().in_shape, 1);
+    b.run("tinynet_b1_pallas", || {
+        engine.execute("tinynet_b1_pallas", &tiny_in).unwrap().len()
+    });
+    engine.warm("tinynet_b1_jnp").unwrap();
+    b.run("tinynet_b1_jnp", || {
+        engine.execute("tinynet_b1_jnp", &tiny_in).unwrap().len()
+    });
+
+    // AlexNet: the paper's benchmark network, batch scaling.
+    let alex_shape = models::alexnet().in_shape;
+    for batch in [1usize, 4, 8] {
+        let name = format!("alexnet_b{batch}_jnp");
+        if engine.warm(&name).is_err() {
+            continue;
+        }
+        let input = data::synth_images(batch, alex_shape, 2);
+        b.run(&name, || engine.execute(&name, &input).unwrap().len());
+    }
+
+    // alexnet_b1_pallas is deliberately NOT benched: the interpret-mode
+    // grid loops make XLA-CPU compilation take tens of minutes (see
+    // EXPERIMENTS.md §E1 notes).  Kernel correctness at full layer
+    // geometry is covered by pytest; end-to-end pallas by tinynet.
+
+    let s = engine.stats();
+    println!(
+        "cumulative: {} execs | upload {:.1} ms | execute {:.1} ms | \
+         download {:.1} ms | compile {:.1} ms",
+        s.executions,
+        s.upload_us as f64 / 1e3,
+        s.execute_us as f64 / 1e3,
+        s.download_us as f64 / 1e3,
+        s.compile_us as f64 / 1e3
+    );
+    b.finish();
+}

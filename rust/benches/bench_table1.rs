@@ -1,0 +1,27 @@
+//! Bench T1: regenerate every Table 1 row and time the cost models.
+//!
+//! The *output* (printed rows) is the experiment; the timings show the
+//! models are cheap enough to sit inside the DSE inner loop.
+
+use std::time::Duration;
+
+use ffcnn::models;
+use ffcnn::report::{render_table1, table1_rows};
+use ffcnn::util::bench::Bench;
+
+fn main() {
+    let model = models::alexnet();
+
+    // The experiment itself: print the reproduced table once.
+    println!("{}", render_table1(&table1_rows(&model)));
+
+    let mut b = Bench::new("table1").with_budget(Duration::from_secs(3));
+    b.run("all_rows_alexnet", || table1_rows(&model));
+    b.run("render", || {
+        let rows = table1_rows(&model);
+        render_table1(&rows).len()
+    });
+    let resnet = models::resnet50();
+    b.run("all_rows_resnet50", || table1_rows(&resnet));
+    b.finish();
+}

@@ -1,0 +1,96 @@
+//! FPGA2016a baseline — Suda et al., "Throughput-Optimized OpenCL-based
+//! FPGA Accelerator for Large-Scale Convolutional Neural Networks"
+//! (FPGA'16).
+//!
+//! Architecture: convolution mapped to a blocked GEMM executed by an
+//! OpenCL SIMD engine on Stratix-V GXA7, 8-16-bit fixed point, 120 MHz.
+//! Their DSE picked a GEMM engine of ~160 parallel MACs; FC layers run
+//! on the same engine and stream 16-bit weights from DDR.
+
+use super::{BaselineModel, DesignReport};
+use crate::fpga::device::STRATIXV;
+use crate::models::Model;
+
+/// GEMM engine width (parallel fixed-point MACs) from their design.
+const PE_MACS: f64 = 160.0;
+/// Pipeline efficiency of the blocked GEMM (their reported utilization).
+const GEMM_EFF: f64 = 0.92;
+/// Their clock (slower than PipeCNN's on the same device).
+const FMAX_MHZ: f64 = 120.0;
+/// Fixed-point weight width, bytes.
+const WEIGHT_BYTES: f64 = 2.0;
+
+pub struct Fpga2016a;
+
+impl BaselineModel for Fpga2016a {
+    fn name(&self) -> &'static str {
+        "FPGA2016a"
+    }
+
+    fn evaluate(&self, model: &Model) -> DesignReport {
+        let dev = &STRATIXV;
+        let infos = model.propagate();
+        let conv_macs: u64 =
+            infos.iter().filter(|i| i.kind == "conv").map(|i| i.macs).sum();
+        let fc_params: u64 =
+            infos.iter().filter(|i| i.kind == "fc").map(|i| i.params).sum();
+
+        // Conv: compute-bound GEMM.
+        let conv_s = conv_macs as f64 / (PE_MACS * GEMM_EFF) / (FMAX_MHZ * 1e6);
+        // FC: memory-bound on 16-bit weight streaming.
+        let bw = dev.ddr_gbps * 1e9 * dev.ddr_efficiency;
+        let fc_s = fc_params as f64 * WEIGHT_BYTES / bw;
+        let time_ms = (conv_s + fc_s) * 1e3;
+
+        DesignReport::new(
+            "FPGA2016a",
+            dev.device,
+            "622K LUTs / 256 DSP",
+            "OpenCL",
+            FMAX_MHZ,
+            "Fixed (8-16b)",
+            time_ms,
+            model.total_ops() as f64,
+            246, // published consumption: 160 MACs + movers on shared DSPs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn alexnet_time_near_published_45_7ms() {
+        let r = Fpga2016a.evaluate(&models::alexnet());
+        assert!(
+            (r.time_ms - 45.7).abs() / 45.7 < 0.25,
+            "modelled {:.2} ms",
+            r.time_ms
+        );
+    }
+
+    #[test]
+    fn gops_near_published_31_8() {
+        let r = Fpga2016a.evaluate(&models::alexnet());
+        assert!((r.gops - 31.8).abs() / 31.8 < 0.3, "gops={:.1}", r.gops);
+    }
+
+    #[test]
+    fn fc_is_memory_bound_fraction() {
+        // FC streaming (117 MB at DDR3 rates) must be a visible chunk
+        // of the total — the reason fixed-point helps them at batch 1.
+        let m = models::alexnet();
+        let r = Fpga2016a.evaluate(&m);
+        let fc_params: u64 = m
+            .propagate()
+            .iter()
+            .filter(|i| i.kind == "fc")
+            .map(|i| i.params)
+            .sum();
+        let bw = STRATIXV.ddr_gbps * 1e9 * STRATIXV.ddr_efficiency;
+        let fc_ms = fc_params as f64 * 2.0 / bw * 1e3;
+        assert!(fc_ms / r.time_ms > 0.15 && fc_ms / r.time_ms < 0.5);
+    }
+}

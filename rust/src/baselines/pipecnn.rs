@@ -1,0 +1,106 @@
+//! FPGA2016b baseline — Wang et al., "PipeCNN: An OpenCL-Based FPGA
+//! Accelerator for Large-Scale Convolution Neuron Networks".
+//!
+//! PipeCNN is the design FFCNN directly extends: the same deeply
+//! pipelined MemRd → Conv → Pool → MemWr kernel chain over Altera
+//! channels, so we evaluate it with the *same* analytic pipeline model
+//! ([`crate::fpga::timing`]) at PipeCNN's published design point
+//! (VEC_SIZE=16, LANE_NUM=12 ≈ 192 fp32 MACs/cycle, 181 MHz on
+//! Stratix-V GXA7).  The differences to FFCNN are the smaller fabric,
+//! the lower DDR bandwidth of the DE5-Net board, and no LRN fusion.
+
+use super::{BaselineModel, DesignReport};
+use crate::fpga::device::{DeviceProfile, STRATIXV};
+use crate::fpga::timing::{simulate_model, DesignParams, OverlapPolicy};
+use crate::models::Model;
+
+/// PipeCNN's published vectorization.
+pub const VEC_SIZE: usize = 16;
+pub const LANE_NUM: usize = 12;
+/// Published DSP consumption (Stratix-V float mode shares multiplier
+/// trees across lanes: ~0.85 DSP per fp32 MAC at this design point).
+const DSPS: u32 = 162;
+
+pub struct PipeCnn;
+
+impl PipeCnn {
+    pub fn params() -> DesignParams {
+        let mut p = DesignParams::new(VEC_SIZE, LANE_NUM);
+        // PipeCNN uses shallower channels than FFCNN.
+        p.channel_depth = 128;
+        p
+    }
+
+    pub fn device() -> &'static DeviceProfile {
+        &STRATIXV
+    }
+}
+
+impl BaselineModel for PipeCnn {
+    fn name(&self) -> &'static str {
+        "FPGA2016b"
+    }
+
+    fn evaluate(&self, model: &Model) -> DesignReport {
+        let t = simulate_model(
+            model,
+            Self::device(),
+            &Self::params(),
+            1,
+            OverlapPolicy::WithinGroup,
+        );
+        DesignReport::new(
+            "FPGA2016b",
+            STRATIXV.device,
+            "622K LUTs / 256 DSP",
+            "OpenCL",
+            STRATIXV.fmax_mhz,
+            "Float",
+            t.time_per_image_ms(),
+            model.total_ops() as f64,
+            DSPS,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn alexnet_time_near_published_43ms() {
+        let r = PipeCnn.evaluate(&models::alexnet());
+        assert!(
+            (r.time_ms - 43.0).abs() / 43.0 < 0.35,
+            "modelled {:.2} ms",
+            r.time_ms
+        );
+    }
+
+    #[test]
+    fn density_near_published_0_21() {
+        let r = PipeCnn.evaluate(&models::alexnet());
+        assert!(
+            (r.gops_per_dsp - 0.21).abs() < 0.12,
+            "density={:.3}",
+            r.gops_per_dsp
+        );
+    }
+
+    #[test]
+    fn same_pipeline_model_as_ffcnn() {
+        // PipeCNN evaluated through the shared simulator must respond
+        // to batching exactly like the FFCNN design does.
+        let m = models::alexnet();
+        let t1 = simulate_model(
+            &m, PipeCnn::device(), &PipeCnn::params(), 1,
+            OverlapPolicy::WithinGroup,
+        );
+        let t4 = simulate_model(
+            &m, PipeCnn::device(), &PipeCnn::params(), 4,
+            OverlapPolicy::WithinGroup,
+        );
+        assert!(t4.gops() > t1.gops());
+    }
+}

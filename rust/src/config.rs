@@ -1,0 +1,292 @@
+//! Run configuration: device + design point + serving parameters.
+//!
+//! Loadable from JSON (`--config run.json`, via the in-tree parser) or
+//! assembled from CLI flags; every example and bench builds one of
+//! these.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::fpga::device::{self, DeviceProfile};
+use crate::fpga::timing::{
+    ffcnn_arria10_params, ffcnn_stratix10_params, DesignParams,
+    OverlapPolicy,
+};
+use crate::util::Json;
+use crate::Result;
+
+/// Serving-side knobs for the coordinator.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Maximum dynamic batch size (bounded by available AOT artifacts).
+    pub max_batch: usize,
+    /// Batching window: flush a partial batch after this many ms.
+    pub max_wait_ms: u64,
+    /// Number of simulated boards behind the router.
+    pub boards: usize,
+    /// Bounded request queue depth (admission control).
+    pub queue_depth: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_batch: 4,
+            max_wait_ms: 2,
+            boards: 1,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Model name (must exist in `models::by_name` and the manifest).
+    pub model: String,
+    /// Device short name (`arria10`, `stratix10`, ...).
+    pub device: String,
+    /// Conv engine design point; `None` = the FFCNN point for the device.
+    pub design: Option<DesignParams>,
+    /// DDR/compute overlap policy.
+    pub overlap: OverlapPolicy,
+    /// Artifact directory produced by `make artifacts`.
+    pub artifacts_dir: PathBuf,
+    /// Conv implementation of the artifact to execute (`jnp`/`pallas`).
+    pub conv_impl: String,
+    pub serving: ServingConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "alexnet".to_string(),
+            device: "stratix10".to_string(),
+            design: None,
+            overlap: OverlapPolicy::WithinGroup,
+            artifacts_dir: default_artifacts_dir(),
+            conv_impl: "jnp".to_string(),
+            serving: ServingConfig::default(),
+        }
+    }
+}
+
+/// `artifacts/` next to the manifest the Makefile produces; falls back
+/// to the crate root so tests work from any cwd.
+pub fn default_artifacts_dir() -> PathBuf {
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    for c in &candidates {
+        if c.join("manifest.json").exists() {
+            return c.clone();
+        }
+    }
+    candidates[0].clone()
+}
+
+fn overlap_to_str(o: OverlapPolicy) -> &'static str {
+    match o {
+        OverlapPolicy::None => "none",
+        OverlapPolicy::WithinGroup => "within_group",
+        OverlapPolicy::Full => "full",
+    }
+}
+
+fn overlap_from_str(s: &str) -> Result<OverlapPolicy> {
+    Ok(match s {
+        "none" => OverlapPolicy::None,
+        "within_group" => OverlapPolicy::WithinGroup,
+        "full" => OverlapPolicy::Full,
+        _ => return Err(anyhow!("unknown overlap policy {s:?}")),
+    })
+}
+
+impl RunConfig {
+    pub fn to_json(&self) -> Json {
+        let design = match self.design {
+            None => Json::Null,
+            Some(d) => Json::obj(vec![
+                ("vec_size", Json::num(d.vec_size as f64)),
+                ("lane_num", Json::num(d.lane_num as f64)),
+                ("channel_depth", Json::num(d.channel_depth as f64)),
+                ("host_us_per_group", Json::num(d.host_us_per_group)),
+            ]),
+        };
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("device", Json::str(&self.device)),
+            ("design", design),
+            ("overlap", Json::str(overlap_to_str(self.overlap))),
+            (
+                "artifacts_dir",
+                Json::str(&self.artifacts_dir.to_string_lossy()),
+            ),
+            ("conv_impl", Json::str(&self.conv_impl)),
+            (
+                "serving",
+                Json::obj(vec![
+                    (
+                        "max_batch",
+                        Json::num(self.serving.max_batch as f64),
+                    ),
+                    (
+                        "max_wait_ms",
+                        Json::num(self.serving.max_wait_ms as f64),
+                    ),
+                    ("boards", Json::num(self.serving.boards as f64)),
+                    (
+                        "queue_depth",
+                        Json::num(self.serving.queue_depth as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        if let Some(m) = v.opt("model") {
+            cfg.model = m.as_str()?.to_string();
+        }
+        if let Some(d) = v.opt("device") {
+            cfg.device = d.as_str()?.to_string();
+        }
+        if let Some(d) = v.opt("design") {
+            let mut p = DesignParams::new(
+                d.get("vec_size")?.as_usize()?,
+                d.get("lane_num")?.as_usize()?,
+            );
+            if let Some(c) = d.opt("channel_depth") {
+                p.channel_depth = c.as_usize()?;
+            }
+            if let Some(h) = d.opt("host_us_per_group") {
+                p.host_us_per_group = h.as_f64()?;
+            }
+            cfg.design = Some(p);
+        }
+        if let Some(o) = v.opt("overlap") {
+            cfg.overlap = overlap_from_str(o.as_str()?)?;
+        }
+        if let Some(a) = v.opt("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(a.as_str()?);
+        }
+        if let Some(c) = v.opt("conv_impl") {
+            cfg.conv_impl = c.as_str()?.to_string();
+        }
+        if let Some(s) = v.opt("serving") {
+            if let Some(x) = s.opt("max_batch") {
+                cfg.serving.max_batch = x.as_usize()?;
+            }
+            if let Some(x) = s.opt("max_wait_ms") {
+                cfg.serving.max_wait_ms = x.as_u64()?;
+            }
+            if let Some(x) = s.opt("boards") {
+                cfg.serving.boards = x.as_usize()?;
+            }
+            if let Some(x) = s.opt("queue_depth") {
+                cfg.serving.queue_depth = x.as_usize()?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Resolve the device profile.
+    pub fn device_profile(&self) -> Result<&'static DeviceProfile> {
+        device::by_name(&self.device)
+            .ok_or_else(|| anyhow!("unknown device {:?}", self.device))
+    }
+
+    /// Resolve the design point (explicit or the per-device default).
+    pub fn design_params(&self) -> Result<DesignParams> {
+        if let Some(d) = self.design {
+            return Ok(d);
+        }
+        Ok(match self.device.as_str() {
+            "arria10" => ffcnn_arria10_params(),
+            "stratix10" => ffcnn_stratix10_params(),
+            // Generic default for other fabrics.
+            _ => DesignParams::new(16, 8),
+        })
+    }
+
+    /// Artifact name for this model at a batch size.
+    pub fn artifact_name(&self, batch: usize) -> String {
+        format!("{}_b{}_{}", self.model, batch, self.conv_impl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let mut c = RunConfig::default();
+        c.design = Some(DesignParams::new(8, 4));
+        c.overlap = OverlapPolicy::Full;
+        let j = c.to_json().to_string();
+        let d = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(d.model, c.model);
+        assert_eq!(d.serving.max_batch, c.serving.max_batch);
+        assert_eq!(d.design.unwrap().vec_size, 8);
+        assert!(matches!(d.overlap, OverlapPolicy::Full));
+    }
+
+    #[test]
+    fn device_profile_resolution() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.device_profile().unwrap().name, "stratix10");
+        c.device = "arria10".into();
+        assert_eq!(c.device_profile().unwrap().fmax_mhz, 167.0);
+        c.device = "nope".into();
+        assert!(c.device_profile().is_err());
+    }
+
+    #[test]
+    fn design_defaults_per_device() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.design_params().unwrap().vec_size, 16);
+        c.device = "arria10".into();
+        assert_eq!(c.design_params().unwrap().vec_size, 32);
+        c.design = Some(DesignParams::new(8, 4));
+        assert_eq!(c.design_params().unwrap().lane_num, 4);
+    }
+
+    #[test]
+    fn artifact_naming() {
+        let c = RunConfig::default();
+        assert_eq!(c.artifact_name(4), "alexnet_b4_jnp");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ffcnn_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        let mut c = RunConfig::default();
+        c.model = "resnet50".into();
+        c.save(&p).unwrap();
+        let d = RunConfig::load(&p).unwrap();
+        assert_eq!(d.model, "resnet50");
+    }
+
+    #[test]
+    fn bad_overlap_rejected() {
+        let j = Json::parse(r#"{"overlap":"sometimes"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

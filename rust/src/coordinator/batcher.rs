@@ -1,0 +1,202 @@
+//! Dynamic batcher: the host-side half of the paper's "very small host
+//! CPU involvement" claim.
+//!
+//! Requests queue per board; the batcher flushes when `max_batch`
+//! requests are waiting or the oldest has waited `max_wait`
+//! (deadline-based, vLLM-router style).  A flush is *planned* into the
+//! batch sizes that actually exist as AOT artifacts (largest-fit,
+//! [`plan_chunks`]) — no padding, no recompilation.
+//!
+//! Pure std threads: the batcher is a thread consuming a bounded mpsc
+//! queue; replies travel over per-request rendezvous channels.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+use super::board::{BatchResult, BoardHandle};
+use crate::Result;
+
+/// One in-flight inference request.
+pub struct Request {
+    pub id: u64,
+    /// Flat NCHW image, numel = C*H*W of the model input.
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: SyncSender<Result<Reply>>,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    /// Batch this request was served in.
+    pub batch: usize,
+    pub board: usize,
+    /// PJRT wall time of the batch (host numerics).
+    pub host_ms: f64,
+    /// Simulated FPGA time of the batch.
+    pub fpga_ms: f64,
+    /// End-to-end latency including queueing, filled by the batcher.
+    pub latency_ms: f64,
+}
+
+/// Batcher configuration (a view of `config::ServingConfig`).
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Batch sizes with an AOT artifact, ascending (must contain 1).
+    pub sizes: Vec<usize>,
+}
+
+/// Split `n` queued requests into artifact-supported chunks,
+/// largest-fit first.  `sizes` must be ascending and contain 1.
+pub fn plan_chunks(mut n: usize, sizes: &[usize]) -> Vec<usize> {
+    debug_assert!(sizes.first() == Some(&1), "need a batch-1 artifact");
+    let mut out = Vec::new();
+    while n > 0 {
+        let best =
+            sizes.iter().rev().find(|&&s| s <= n).copied().unwrap_or(1);
+        out.push(best);
+        n -= best;
+    }
+    out
+}
+
+/// Per-board batching loop: drain the queue, plan chunks, execute,
+/// scatter replies.  Runs until the request channel closes.
+pub fn run_batcher(
+    rx: Receiver<Request>,
+    board: &BoardHandle,
+    cfg: &BatcherConfig,
+    artifact_for_batch: impl Fn(usize) -> String,
+    image_numel: usize,
+    classes: usize,
+) {
+    loop {
+        // Block for the first request of a batch.
+        let Ok(first) = rx.recv() else { break };
+        let mut pending = vec![first];
+
+        // Eagerly drain whatever is already queued (no waiting).
+        while pending.len() < cfg.max_batch {
+            match rx.try_recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+
+        // Latency/throughput tradeoff (perf pass, EXPERIMENTS.md §Perf):
+        // a lone request is served immediately — waiting out the batch
+        // window would only add latency when the system is idle.  Only
+        // when the queue shows concurrent load do we hold the flush
+        // until the deadline to accumulate a fuller batch.
+        if pending.len() > 1 {
+            let deadline = Instant::now() + cfg.max_wait;
+            while pending.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+
+        for chunk in plan_chunks(pending.len(), &cfg.sizes) {
+            let reqs: Vec<Request> = pending.drain(..chunk).collect();
+            let mut input = Vec::with_capacity(chunk * image_numel);
+            for r in &reqs {
+                debug_assert_eq!(r.image.len(), image_numel);
+                input.extend_from_slice(&r.image);
+            }
+            let artifact = artifact_for_batch(chunk);
+            let result = board.execute(artifact, chunk, input);
+            scatter(reqs, result, board.index, classes);
+        }
+    }
+}
+
+/// Deliver a batch result (or error) to each requester.
+fn scatter(
+    reqs: Vec<Request>,
+    result: Result<BatchResult>,
+    board: usize,
+    classes: usize,
+) {
+    match result {
+        Ok(batch) => {
+            for (i, r) in reqs.into_iter().enumerate() {
+                let logits =
+                    batch.logits[i * classes..(i + 1) * classes].to_vec();
+                let argmax = argmax(&logits);
+                let latency_ms =
+                    r.submitted.elapsed().as_secs_f64() * 1e3;
+                let _ = r.reply.send(Ok(Reply {
+                    id: r.id,
+                    logits,
+                    argmax,
+                    batch: batch.batch,
+                    board,
+                    host_ms: batch.host_ms,
+                    fpga_ms: batch.fpga_ms,
+                    latency_ms,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for r in reqs {
+                let _ = r
+                    .reply
+                    .send(Err(anyhow::anyhow!("batch failed: {msg}")));
+            }
+        }
+    }
+}
+
+/// Index of the maximum (non-NaN) logit.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_nan())
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_chunks_largest_fit() {
+        assert_eq!(plan_chunks(9, &[1, 4, 8]), vec![8, 1]);
+        assert_eq!(plan_chunks(7, &[1, 4, 8]), vec![4, 1, 1, 1]);
+        assert_eq!(plan_chunks(4, &[1, 4, 8]), vec![4]);
+        assert_eq!(plan_chunks(3, &[1]), vec![1, 1, 1]);
+        assert_eq!(plan_chunks(0, &[1, 4]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn plan_chunks_conserves_requests() {
+        for n in 0..50 {
+            let total: usize =
+                plan_chunks(n, &[1, 2, 4, 8]).iter().sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+        assert_eq!(argmax(&[]), 0);
+        assert_eq!(argmax(&[0.0, f32::NAN, 2.0]), 2);
+    }
+}

@@ -1,0 +1,256 @@
+//! A simulated accelerator board: one engine thread + one FPGA model.
+//!
+//! The PJRT engine is `!Send`, so each board owns it on a dedicated
+//! worker thread (the paper's host-side device context).  Jobs arrive
+//! over an mpsc channel; results return over per-job reply channels —
+//! all std threads, no async runtime (the build environment is
+//! offline; see `util` for the other in-tree substrates).
+//!
+//! Each executed batch carries *two* timings:
+//! - `host_ms`  — wall-clock of the PJRT execution (numerics, measured);
+//! - `fpga_ms`  — the cycle model's prediction for this batch on the
+//!   board's device/design (simulated — what Table 1 reports).
+//!
+//! With [`Pace::Fpga`] the worker holds the board busy for the
+//! simulated duration, so serving experiments reproduce the *FPGA's*
+//! throughput/queueing behaviour, not the host CPU's.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::fpga::device::DeviceProfile;
+use crate::fpga::timing::{simulate_model, DesignParams, OverlapPolicy};
+use crate::models::Model;
+use crate::runtime::Engine;
+use crate::Result;
+
+/// Board pacing mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pace {
+    /// Return as soon as the host numerics finish (max host speed).
+    None,
+    /// Occupy the board for the simulated FPGA batch time.
+    Fpga,
+}
+
+/// One executed batch.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub host_ms: f64,
+    pub fpga_ms: f64,
+}
+
+struct Job {
+    artifact: String,
+    batch: usize,
+    input: Vec<f32>,
+    reply: mpsc::SyncSender<Result<BatchResult>>,
+}
+
+/// Handle to a board worker thread.
+pub struct BoardHandle {
+    tx: mpsc::Sender<Job>,
+    pub index: usize,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Board construction parameters.
+#[derive(Clone)]
+pub struct BoardSpec {
+    pub index: usize,
+    pub artifacts_dir: PathBuf,
+    pub model: Model,
+    pub device: &'static DeviceProfile,
+    pub design: DesignParams,
+    pub overlap: OverlapPolicy,
+    pub pace: Pace,
+    /// Artifact names to pre-compile at startup (warm cache).
+    pub warm: Vec<String>,
+}
+
+impl BoardHandle {
+    /// Spawn the worker thread; fails fast if the engine cannot open.
+    pub fn spawn(spec: BoardSpec) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let index = spec.index;
+        let join = std::thread::Builder::new()
+            .name(format!("board-{index}"))
+            .spawn(move || worker(spec, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("board-{index} worker died on startup"))??;
+        Ok(BoardHandle { tx, index, join: Some(join) })
+    }
+
+    /// Submit a batch; returns a receiver for the result.
+    pub fn submit(
+        &self,
+        artifact: String,
+        batch: usize,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<BatchResult>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Job { artifact, batch, input, reply })
+            .map_err(|_| anyhow!("board-{} worker gone", self.index))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn execute(
+        &self,
+        artifact: String,
+        batch: usize,
+        input: Vec<f32>,
+    ) -> Result<BatchResult> {
+        self.submit(artifact, batch, input)?
+            .recv()
+            .map_err(|_| anyhow!("board-{} dropped the job", self.index))?
+    }
+}
+
+impl Drop for BoardHandle {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker loop.
+        let (dead_tx, _) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker(
+    spec: BoardSpec,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let engine = match Engine::open(&spec.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    for name in &spec.warm {
+        if let Err(e) = engine.warm(name) {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    }
+    let _ = ready.send(Ok(()));
+
+    while let Ok(job) = rx.recv() {
+        let t0 = Instant::now();
+        let out = engine.execute(&job.artifact, &job.input);
+        let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let fpga_ms = simulate_model(
+            &spec.model,
+            spec.device,
+            &spec.design,
+            job.batch,
+            spec.overlap,
+        )
+        .time_ms();
+        if spec.pace == Pace::Fpga
+            && fpga_ms / 1e3 > t0.elapsed().as_secs_f64()
+        {
+            std::thread::sleep(
+                Duration::from_secs_f64(fpga_ms / 1e3) - t0.elapsed(),
+            );
+        }
+        let result = out.map(|logits| BatchResult {
+            logits,
+            batch: job.batch,
+            host_ms,
+            fpga_ms,
+        });
+        let _ = job.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+    use crate::fpga::device::STRATIX10;
+    use crate::fpga::timing::ffcnn_stratix10_params;
+    use crate::models;
+
+    fn spec_or_skip(pace: Pace) -> Option<BoardSpec> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(BoardSpec {
+            index: 0,
+            artifacts_dir: dir,
+            model: models::tinynet(),
+            device: &STRATIX10,
+            design: ffcnn_stratix10_params(),
+            overlap: OverlapPolicy::WithinGroup,
+            pace,
+            warm: vec!["tinynet_b1_jnp".into()],
+        })
+    }
+
+    #[test]
+    fn board_executes_and_reports_both_timings() {
+        let Some(spec) = spec_or_skip(Pace::None) else { return };
+        let board = BoardHandle::spawn(spec).unwrap();
+        let input = vec![0.05f32; 3 * 16 * 16];
+        let r = board
+            .execute("tinynet_b1_jnp".into(), 1, input)
+            .unwrap();
+        assert_eq!(r.logits.len(), 10);
+        assert!(r.host_ms > 0.0);
+        assert!(r.fpga_ms > 0.0);
+    }
+
+    #[test]
+    fn board_surfaces_engine_errors() {
+        let Some(spec) = spec_or_skip(Pace::None) else { return };
+        let board = BoardHandle::spawn(spec).unwrap();
+        let err = board
+            .execute("tinynet_b1_jnp".into(), 1, vec![0.0; 3])
+            .unwrap_err();
+        assert!(err.to_string().contains("input"));
+    }
+
+    #[test]
+    fn submit_is_asynchronous() {
+        let Some(spec) = spec_or_skip(Pace::None) else { return };
+        let board = BoardHandle::spawn(spec).unwrap();
+        let rx1 = board
+            .submit("tinynet_b1_jnp".into(), 1, vec![0.1; 3 * 16 * 16])
+            .unwrap();
+        let rx2 = board
+            .submit("tinynet_b1_jnp".into(), 1, vec![0.2; 3 * 16 * 16])
+            .unwrap();
+        assert!(rx1.recv().unwrap().is_ok());
+        assert!(rx2.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn bad_artifact_dir_fails_on_spawn() {
+        let spec = BoardSpec {
+            index: 9,
+            artifacts_dir: PathBuf::from("/nonexistent"),
+            model: models::tinynet(),
+            device: &STRATIX10,
+            design: ffcnn_stratix10_params(),
+            overlap: OverlapPolicy::WithinGroup,
+            pace: Pace::None,
+            warm: vec![],
+        };
+        assert!(BoardHandle::spawn(spec).is_err());
+    }
+}

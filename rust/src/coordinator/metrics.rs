@@ -1,0 +1,217 @@
+//! Latency/throughput metrics for the serving coordinator.
+//!
+//! A fixed log-spaced histogram (no allocations on the hot path) plus
+//! summary extraction — the numbers `examples/serve_batch.rs` reports
+//! into EXPERIMENTS.md §E4.
+
+/// Log-spaced latency histogram from 1 µs to ~100 s.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [BASE * GROWTH^i, BASE * GROWTH^(i+1)) µs.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+    min_us: u64,
+}
+
+const NBUCKETS: usize = 128;
+const GROWTH: f64 = 1.155; // 128 buckets spans ~1e8 ratio
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; NBUCKETS],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+            min_us: u64::MAX,
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us <= 1 {
+            return 0;
+        }
+        let idx = (us as f64).ln() / GROWTH.ln();
+        (idx as usize).min(NBUCKETS - 1)
+    }
+
+    /// Lower edge of bucket i, µs.
+    fn bucket_floor(i: usize) -> f64 {
+        GROWTH.powi(i as i32)
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+        self.min_us = self.min_us.min(us);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record_us((ms * 1e3).round().max(0.0) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate quantile (bucket lower-edge interpolation), ms.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_floor(i) / 1e3;
+            }
+        }
+        self.max_us as f64 / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64 / 1e3
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_us as f64 / 1e3
+        }
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_us as f64 / 1e3
+        }
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+        self.min_us = self.min_us.min(other.min_us);
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            count: self.count,
+            mean_ms: self.mean_ms(),
+            p50_ms: self.quantile_ms(0.50),
+            p95_ms: self.quantile_ms(0.95),
+            p99_ms: self.quantile_ms(0.99),
+            max_ms: self.max_ms(),
+        }
+    }
+}
+
+/// Extracted latency summary.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.count, self.mean_ms, self.p50_ms, self.p95_ms,
+            self.p99_ms, self.max_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_us(i * 100);
+        }
+        let s = h.summary();
+        assert!(s.p50_ms <= s.p95_ms);
+        assert!(s.p95_ms <= s.p99_ms);
+        assert!(s.p99_ms <= s.max_ms);
+        assert_eq!(s.count, 1000);
+    }
+
+    #[test]
+    fn quantile_accuracy_within_bucket_resolution() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record_ms(10.0);
+        }
+        // All samples at 10 ms: p50 within one bucket (±15.5%).
+        let p50 = h.quantile_ms(0.5);
+        assert!((p50 - 10.0).abs() / 10.0 < 0.16, "p50={p50}");
+    }
+
+    #[test]
+    fn mean_and_extremes_exact() {
+        let mut h = LatencyHistogram::new();
+        h.record_ms(1.0);
+        h.record_ms(3.0);
+        assert!((h.mean_ms() - 2.0).abs() < 1e-9);
+        assert!((h.max_ms() - 3.0).abs() < 1e-9);
+        assert!((h.min_ms() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_ms(5.0);
+        b.record_ms(50.0);
+        b.record_ms(0.5);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.max_ms() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn huge_latency_clamps_to_last_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(u64::MAX / 2);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_ms(0.5) > 0.0);
+    }
+}

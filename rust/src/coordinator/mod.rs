@@ -1,0 +1,30 @@
+//! The L3 coordinator: the paper's system contribution as a serving
+//! runtime.
+//!
+//! FFCNN's host program is thin — "very small host CPU involvement" —
+//! because the FPGA pipeline runs whole fused layer chains per enqueue.
+//! This module is that host program grown into a production shape:
+//!
+//! - [`board`]   — one engine thread per simulated board (PJRT numerics
+//!   + FPGA cycle model timing, optionally pacing the board);
+//! - [`batcher`] — dynamic batching onto the AOT'd batch sizes;
+//! - [`router`]  — round-robin / least-outstanding board routing with
+//!   admission control;
+//! - [`service`] — the facade: `classify()`, `submit()`, `run_trace()`;
+//! - [`metrics`] — latency histograms for the reports.
+//!
+//! Everything is std threads + mpsc (no async runtime in the offline
+//! build environment); the PJRT engine's `!Send` wrappers pin each
+//! engine to its board thread anyway, which keeps the design honest.
+
+pub mod batcher;
+pub mod board;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use batcher::{argmax, plan_chunks, Reply, Request};
+pub use board::{BoardHandle, BoardSpec, Pace};
+pub use metrics::{LatencyHistogram, LatencySummary};
+pub use router::{Policy, Router};
+pub use service::{InferenceService, PendingReply, ServeReport};

@@ -1,0 +1,175 @@
+//! Request router: spreads work across simulated boards.
+//!
+//! Policies:
+//! - [`Policy::RoundRobin`] — stateless rotation;
+//! - [`Policy::LeastOutstanding`] — pick the board with the fewest
+//!   in-flight requests (vllm-router's default for homogeneous
+//!   replicas).
+//!
+//! The router owns one bounded mpsc sender per board batcher (the
+//! bound is the admission-control queue depth); outstanding counters
+//! are decremented by [`RouterGuard`] when the reply resolves.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Arc;
+
+use super::batcher::Request;
+use crate::Result;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastOutstanding,
+}
+
+/// Router over N board queues.
+pub struct Router {
+    queues: Vec<SyncSender<Request>>,
+    outstanding: Vec<Arc<AtomicUsize>>,
+    next: AtomicU64,
+    policy: Policy,
+}
+
+/// RAII guard: decrements the chosen board's outstanding count.
+#[derive(Debug)]
+pub struct RouterGuard {
+    counter: Arc<AtomicUsize>,
+}
+
+impl Drop for RouterGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Router {
+    pub fn new(queues: Vec<SyncSender<Request>>, policy: Policy) -> Self {
+        let outstanding =
+            queues.iter().map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        Router { queues, outstanding, next: AtomicU64::new(0), policy }
+    }
+
+    pub fn boards(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Pick a board index for a new request.
+    pub fn pick(&self) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                (self.next.fetch_add(1, Ordering::Relaxed)
+                    % self.queues.len() as u64) as usize
+            }
+            Policy::LeastOutstanding => self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Route a request (blocking if the board queue is full); the
+    /// returned guard must live until the reply resolves.
+    pub fn route(&self, req: Request) -> Result<RouterGuard> {
+        let idx = self.pick();
+        let counter = self.outstanding[idx].clone();
+        counter.fetch_add(1, Ordering::Relaxed);
+        if self.queues[idx].send(req).is_err() {
+            counter.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow::anyhow!("board {idx} queue closed"));
+        }
+        Ok(RouterGuard { counter })
+    }
+
+    /// Non-blocking admission: rejects immediately on a full queue.
+    pub fn try_route(&self, req: Request) -> Result<RouterGuard> {
+        let idx = self.pick();
+        let counter = self.outstanding[idx].clone();
+        counter.fetch_add(1, Ordering::Relaxed);
+        match self.queues[idx].try_send(req) {
+            Ok(()) => Ok(RouterGuard { counter }),
+            Err(TrySendError::Full(_)) => {
+                counter.fetch_sub(1, Ordering::Relaxed);
+                Err(anyhow::anyhow!("board {idx} queue full (admission)"))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                counter.fetch_sub(1, Ordering::Relaxed);
+                Err(anyhow::anyhow!("board {idx} queue closed"))
+            }
+        }
+    }
+
+    pub fn outstanding_of(&self, idx: usize) -> usize {
+        self.outstanding[idx].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn dummy_request(id: u64) -> Request {
+        let (tx, _rx) = mpsc::sync_channel(1);
+        Request { id, image: vec![], submitted: Instant::now(), reply: tx }
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let (t1, r1) = mpsc::sync_channel(8);
+        let (t2, r2) = mpsc::sync_channel(8);
+        let router = Router::new(vec![t1, t2], Policy::RoundRobin);
+        let mut guards = Vec::new();
+        for i in 0..4 {
+            guards.push(router.route(dummy_request(i)).unwrap());
+        }
+        let c1 = r1.try_iter().count();
+        let c2 = r2.try_iter().count();
+        assert_eq!((c1, c2), (2, 2));
+    }
+
+    #[test]
+    fn least_outstanding_prefers_idle_board() {
+        let (t1, _r1) = mpsc::sync_channel(8);
+        let (t2, _r2) = mpsc::sync_channel(8);
+        let router = Router::new(vec![t1, t2], Policy::LeastOutstanding);
+        let _g0 = router.route(dummy_request(0)).unwrap();
+        // Next pick must be the idle board 1.
+        assert_eq!(router.pick(), 1);
+    }
+
+    #[test]
+    fn guard_decrements_on_drop() {
+        let (t1, _r1) = mpsc::sync_channel(8);
+        let router = Router::new(vec![t1], Policy::LeastOutstanding);
+        let g = router.route(dummy_request(0)).unwrap();
+        assert_eq!(router.outstanding_of(0), 1);
+        drop(g);
+        assert_eq!(router.outstanding_of(0), 0);
+    }
+
+    #[test]
+    fn closed_queue_is_an_error() {
+        let (t1, r1) = mpsc::sync_channel(1);
+        drop(r1);
+        let router = Router::new(vec![t1], Policy::RoundRobin);
+        assert!(router.route(dummy_request(0)).is_err());
+        assert_eq!(router.outstanding_of(0), 0);
+    }
+
+    #[test]
+    fn try_route_rejects_when_full() {
+        let (t1, _r1) = mpsc::sync_channel(1);
+        let router = Router::new(vec![t1], Policy::RoundRobin);
+        let _g = router.try_route(dummy_request(0)).unwrap();
+        let err = router.try_route(dummy_request(1)).unwrap_err();
+        assert!(err.to_string().contains("full"));
+        // Rejected request must not leak an outstanding count.
+        assert_eq!(router.outstanding_of(0), 1);
+    }
+}

@@ -1,0 +1,383 @@
+//! The inference service: boards + batchers + router behind one facade.
+//!
+//! This is the system a downstream user embeds: construct from a
+//! [`RunConfig`], call [`InferenceService::classify`] per image (or
+//! [`InferenceService::submit`] for pipelined submission), or replay a
+//! whole workload trace with [`InferenceService::run_trace`] (the E4
+//! end-to-end experiment).  Pure std threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use super::batcher::{run_batcher, BatcherConfig, Reply, Request};
+use super::board::{BoardHandle, BoardSpec, Pace};
+use super::metrics::{LatencyHistogram, LatencySummary};
+use super::router::{Policy, Router, RouterGuard};
+use crate::config::RunConfig;
+use crate::data::TraceRequest;
+use crate::models;
+use crate::runtime::Manifest;
+use crate::Result;
+
+/// Aggregate report of a served trace (EXPERIMENTS.md §E4 rows).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub errors: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency: LatencySummary,
+    /// Mean executed batch size (batching effectiveness).
+    pub mean_batch: f64,
+    /// Sum of simulated FPGA busy time across requests' batches, ms.
+    pub fpga_busy_ms: f64,
+    /// Sum of host PJRT time across requests' batches, ms.
+    pub host_busy_ms: f64,
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests={} errors={} wall={:.2}s throughput={:.1} req/s \
+             mean_batch={:.2}",
+            self.requests, self.errors, self.wall_s, self.throughput_rps,
+            self.mean_batch
+        )?;
+        writeln!(f, "latency: {}", self.latency)?;
+        write!(
+            f,
+            "busy: fpga(sim)={:.1}ms host(pjrt)={:.1}ms",
+            self.fpga_busy_ms, self.host_busy_ms
+        )
+    }
+}
+
+/// A pending reply: receiver + the router guard keeping the
+/// outstanding count honest until resolution.
+pub struct PendingReply {
+    rx: mpsc::Receiver<Result<Reply>>,
+    _guard: RouterGuard,
+}
+
+impl PendingReply {
+    pub fn wait(self) -> Result<Reply> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped the request"))?
+    }
+}
+
+/// The running service.
+pub struct InferenceService {
+    router: Router,
+    image_numel: usize,
+    next_id: AtomicU64,
+    /// Keep board handles alive (dropping them stops the workers);
+    /// batcher threads exit when their queue senders drop.
+    _boards: Vec<Arc<BoardHandle>>,
+}
+
+impl InferenceService {
+    /// Build the service from a run configuration.
+    ///
+    /// `pace` chooses whether boards are held busy for the simulated
+    /// FPGA time (serving experiments) or return at host speed
+    /// (functional tests).
+    pub fn start(cfg: &RunConfig, pace: Pace, policy: Policy) -> Result<Self> {
+        let model = models::by_name(&cfg.model)
+            .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?;
+        let device = cfg.device_profile()?;
+        let design = cfg.design_params()?;
+
+        // Discover which batch sizes have artifacts.
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let mut sizes: Vec<usize> = manifest
+            .artifacts
+            .iter()
+            .filter(|a| {
+                a.model == cfg.model
+                    && a.conv_impl == cfg.conv_impl
+                    && a.batch <= cfg.serving.max_batch
+            })
+            .map(|a| a.batch)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.first() != Some(&1) {
+            return Err(anyhow!(
+                "no batch-1 artifact for {} ({}); have {:?}",
+                cfg.model,
+                cfg.conv_impl,
+                sizes
+            ));
+        }
+
+        let (c, h, w) = model.in_shape;
+        let image_numel = c * h * w;
+        let classes = model.propagate().last().unwrap().out_shape.numel();
+
+        let model_name = cfg.model.clone();
+        let impl_name = cfg.conv_impl.clone();
+        let warm: Vec<String> = sizes
+            .iter()
+            .map(|b| format!("{model_name}_b{b}_{impl_name}"))
+            .collect();
+
+        let mut queues = Vec::new();
+        let mut boards = Vec::new();
+        for index in 0..cfg.serving.boards.max(1) {
+            let spec = BoardSpec {
+                index,
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                model: model.clone(),
+                device,
+                design,
+                overlap: cfg.overlap,
+                pace,
+                warm: warm.clone(),
+            };
+            let board = Arc::new(BoardHandle::spawn(spec)?);
+            let (tx, rx) =
+                mpsc::sync_channel::<Request>(cfg.serving.queue_depth);
+            let bc = BatcherConfig {
+                max_batch: *sizes.last().unwrap(),
+                max_wait: Duration::from_millis(cfg.serving.max_wait_ms),
+                sizes: sizes.clone(),
+            };
+            let board2 = board.clone();
+            let mn = model_name.clone();
+            let im = impl_name.clone();
+            std::thread::Builder::new()
+                .name(format!("batcher-{index}"))
+                .spawn(move || {
+                    run_batcher(
+                        rx,
+                        &board2,
+                        &bc,
+                        move |b| format!("{mn}_b{b}_{im}"),
+                        image_numel,
+                        classes,
+                    )
+                })?;
+            queues.push(tx);
+            boards.push(board);
+        }
+
+        Ok(InferenceService {
+            router: Router::new(queues, policy),
+            image_numel,
+            next_id: AtomicU64::new(0),
+            _boards: boards,
+        })
+    }
+
+    pub fn image_numel(&self) -> usize {
+        self.image_numel
+    }
+
+    /// Submit one image without blocking for the result.
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingReply> {
+        if image.len() != self.image_numel {
+            return Err(anyhow!(
+                "image has {} elements, model wants {}",
+                image.len(),
+                self.image_numel
+            ));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = Request {
+            id,
+            image,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        let guard = self.router.route(req)?;
+        Ok(PendingReply { rx, _guard: guard })
+    }
+
+    /// Submit one image and block for its classification.
+    pub fn classify(&self, image: Vec<f32>) -> Result<Reply> {
+        self.submit(image)?.wait()
+    }
+
+    /// Replay an arrival trace open-loop; returns the aggregate report.
+    ///
+    /// `time_scale` stretches (>1) or compresses (<1) arrival gaps —
+    /// 0.0 fires all requests immediately (closed-loop burst).
+    pub fn run_trace(
+        &self,
+        trace: &[TraceRequest],
+        images: impl Fn(u64) -> Vec<f32>,
+        time_scale: f64,
+    ) -> ServeReport {
+        let started = Instant::now();
+        let mut pending = Vec::with_capacity(trace.len());
+        let mut errors = 0u64;
+        for t in trace {
+            let due = t.arrival_s * time_scale;
+            let now = started.elapsed().as_secs_f64();
+            if due > now {
+                std::thread::sleep(Duration::from_secs_f64(due - now));
+            }
+            match self.submit(images(t.id)) {
+                Ok(p) => pending.push(p),
+                Err(_) => errors += 1,
+            }
+        }
+
+        let mut hist = LatencyHistogram::new();
+        let mut batch_sum = 0u64;
+        let mut fpga_ms = 0.0;
+        let mut host_ms = 0.0;
+        let mut ok = 0u64;
+        for p in pending {
+            match p.wait() {
+                Ok(reply) => {
+                    hist.record_ms(reply.latency_ms);
+                    batch_sum += reply.batch as u64;
+                    // batch-level times are reported per request; divide
+                    // by batch so busy time is not double counted.
+                    fpga_ms += reply.fpga_ms / reply.batch as f64;
+                    host_ms += reply.host_ms / reply.batch as f64;
+                    ok += 1;
+                }
+                Err(_) => errors += 1,
+            }
+        }
+        let wall_s = started.elapsed().as_secs_f64();
+        ServeReport {
+            requests: ok + errors,
+            errors,
+            wall_s,
+            throughput_rps: ok as f64 / wall_s,
+            latency: hist.summary(),
+            mean_batch: if ok > 0 {
+                batch_sum as f64 / ok as f64
+            } else {
+                0.0
+            },
+            fpga_busy_ms: fpga_ms,
+            host_busy_ms: host_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+    use crate::data;
+
+    fn cfg_or_skip() -> Option<RunConfig> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let mut cfg = RunConfig::default();
+        cfg.model = "tinynet".into();
+        cfg.conv_impl = "pallas".into();
+        cfg.artifacts_dir = dir;
+        cfg.serving.max_batch = 2;
+        cfg.serving.max_wait_ms = 1;
+        Some(cfg)
+    }
+
+    #[test]
+    fn classify_roundtrip() {
+        let Some(cfg) = cfg_or_skip() else { return };
+        let svc =
+            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
+                .unwrap();
+        let img = data::synth_images(1, (3, 16, 16), 5);
+        let reply = svc.classify(img).unwrap();
+        assert_eq!(reply.logits.len(), 10);
+        assert!(reply.argmax < 10);
+        assert!(reply.latency_ms > 0.0);
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let Some(cfg) = cfg_or_skip() else { return };
+        let svc =
+            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
+                .unwrap();
+        assert!(svc.classify(vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn burst_trace_served_with_batching() {
+        let Some(cfg) = cfg_or_skip() else { return };
+        let svc =
+            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
+                .unwrap();
+        let trace = data::burst_trace(12);
+        let report = svc.run_trace(
+            &trace,
+            |id| data::synth_images(1, (3, 16, 16), id),
+            0.0,
+        );
+        assert_eq!(report.requests, 12);
+        assert_eq!(report.errors, 0);
+        assert!(report.throughput_rps > 0.0);
+        // Burst submission + tinynet_b2 artifact => some batching.
+        assert!(report.mean_batch > 1.0, "mean_batch={}", report.mean_batch);
+    }
+
+    #[test]
+    fn multi_board_service_works() {
+        let Some(mut cfg) = cfg_or_skip() else { return };
+        cfg.serving.boards = 2;
+        let svc = InferenceService::start(
+            &cfg,
+            Pace::None,
+            Policy::LeastOutstanding,
+        )
+        .unwrap();
+        let trace = data::burst_trace(8);
+        let report = svc.run_trace(
+            &trace,
+            |id| data::synth_images(1, (3, 16, 16), id),
+            0.0,
+        );
+        assert_eq!(report.errors, 0);
+    }
+
+    #[test]
+    fn missing_batch1_artifact_rejected() {
+        let Some(mut cfg) = cfg_or_skip() else { return };
+        cfg.conv_impl = "nonexistent".into();
+        assert!(InferenceService::start(
+            &cfg,
+            Pace::None,
+            Policy::RoundRobin
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn same_input_same_prediction_across_batches() {
+        // Batching must not change numerics: one request served at
+        // batch 1 equals the same image served inside a batch.
+        let Some(cfg) = cfg_or_skip() else { return };
+        let svc =
+            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
+                .unwrap();
+        let img = data::synth_images(1, (3, 16, 16), 77);
+        let solo = svc.classify(img.clone()).unwrap();
+        // Submit two at once so they batch together (b2 artifact).
+        let p1 = svc.submit(img.clone()).unwrap();
+        let p2 = svc.submit(img).unwrap();
+        let r1 = p1.wait().unwrap();
+        let _ = p2.wait().unwrap();
+        for (a, b) in solo.logits.iter().zip(&r1.logits) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

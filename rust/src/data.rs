@@ -1,0 +1,147 @@
+//! Synthetic data + workload generation (DESIGN.md §2 substitution for
+//! ImageNet: the paper checks functional correctness, not accuracy).
+//!
+//! Deterministic, seeded, dependency-free: a SplitMix64 PRNG drives
+//! both image synthesis and Poisson request arrivals so every run —
+//! tests, benches, EXPERIMENTS.md — is reproducible bit-for-bit.
+
+/// SplitMix64 — tiny deterministic PRNG (public-domain constants).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Standard-normal-ish f32 (sum of 4 uniforms, CLT; adequate for
+    /// synthetic pixels).
+    pub fn next_gauss(&mut self) -> f32 {
+        let s: f32 = (0..4).map(|_| self.next_f32()).sum();
+        (s - 2.0) * (3.0f32).sqrt()
+    }
+
+    /// Exponential inter-arrival with the given rate (events/sec).
+    pub fn next_exp(&mut self, rate: f64) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+        -(1.0 - u).ln() / rate
+    }
+}
+
+/// A synthetic image batch in NCHW layout, values ~N(0, 0.1²) — the
+/// same distribution `python/compile/aot.py::make_input` uses.
+pub fn synth_images(
+    batch: usize,
+    chw: (usize, usize, usize),
+    seed: u64,
+) -> Vec<f32> {
+    let (c, h, w) = chw;
+    let mut rng = Rng::new(seed);
+    (0..batch * c * h * w)
+        .map(|_| rng.next_gauss() * 0.1)
+        .collect()
+}
+
+/// One inference request in a generated workload trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival time offset from trace start, seconds.
+    pub arrival_s: f64,
+}
+
+/// Poisson open-loop arrival trace: `n` requests at `rate` req/s.
+pub fn poisson_trace(n: usize, rate: f64, seed: u64) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n as u64)
+        .map(|id| {
+            t += rng.next_exp(rate);
+            TraceRequest { id, arrival_s: t }
+        })
+        .collect()
+}
+
+/// Closed-loop trace: all requests available at t=0 (max-throughput).
+pub fn burst_trace(n: usize) -> Vec<TraceRequest> {
+    (0..n as u64).map(|id| TraceRequest { id, arrival_s: 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seed_sensitivity() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_varied() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f32> = (0..1000).map(|_| r.next_f32()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean: f32 = xs.iter().sum::<f32>() / 1000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn gauss_roughly_standard() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f32> = (0..4000).map(|_| r.next_gauss()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 =
+            xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.08, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn synth_images_shape_and_determinism() {
+        let a = synth_images(2, (3, 4, 4), 9);
+        let b = synth_images(2, (3, 4, 4), 9);
+        assert_eq!(a.len(), 2 * 3 * 4 * 4);
+        assert_eq!(a, b);
+        assert_ne!(a, synth_images(2, (3, 4, 4), 10));
+    }
+
+    #[test]
+    fn poisson_trace_monotone_and_rate() {
+        let tr = poisson_trace(2000, 100.0, 11);
+        assert!(tr.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s));
+        let span = tr.last().unwrap().arrival_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() / 100.0 < 0.15, "rate={rate}");
+    }
+
+    #[test]
+    fn burst_trace_all_at_zero() {
+        let tr = burst_trace(5);
+        assert_eq!(tr.len(), 5);
+        assert!(tr.iter().all(|r| r.arrival_s == 0.0));
+    }
+}

@@ -1,0 +1,135 @@
+//! Bounded FIFO modelling an Altera OpenCL channel/pipe.
+//!
+//! FFCNN's kernels are chained with `cl_intel_channels`; a full channel
+//! back-pressures the producer, an empty one stalls the consumer.  This
+//! functional model (used by the token simulator and by property tests)
+//! tracks occupancy and stall statistics so channel-depth choices can be
+//! evaluated like the paper's design-space exploration does.
+
+use std::collections::VecDeque;
+
+/// Channel statistics snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChannelStats {
+    pub pushes: u64,
+    pub pops: u64,
+    pub push_stalls: u64,
+    pub pop_stalls: u64,
+    pub max_occupancy: usize,
+}
+
+/// A bounded single-producer single-consumer FIFO.
+#[derive(Debug, Clone)]
+pub struct Channel<T> {
+    buf: VecDeque<T>,
+    capacity: usize,
+    stats: ChannelStats,
+}
+
+impl<T> Channel<T> {
+    /// Create a channel with the given depth (>= 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "channel depth must be >= 1");
+        Channel {
+            buf: VecDeque::with_capacity(capacity),
+            capacity,
+            stats: ChannelStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.capacity
+    }
+
+    /// Non-blocking push; returns the value back on a full channel
+    /// (the producer must retry next cycle — a stall).
+    pub fn try_push(&mut self, v: T) -> Result<(), T> {
+        if self.is_full() {
+            self.stats.push_stalls += 1;
+            return Err(v);
+        }
+        self.buf.push_back(v);
+        self.stats.pushes += 1;
+        self.stats.max_occupancy = self.stats.max_occupancy.max(self.buf.len());
+        Ok(())
+    }
+
+    /// Non-blocking pop; `None` on an empty channel (a consumer stall).
+    pub fn try_pop(&mut self) -> Option<T> {
+        match self.buf.pop_front() {
+            Some(v) => {
+                self.stats.pops += 1;
+                Some(v)
+            }
+            None => {
+                self.stats.pop_stalls += 1;
+                None
+            }
+        }
+    }
+
+    pub fn stats(&self) -> ChannelStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut c = Channel::new(4);
+        for i in 0..4 {
+            c.try_push(i).unwrap();
+        }
+        assert!(c.is_full());
+        for i in 0..4 {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn full_channel_backpressures() {
+        let mut c = Channel::new(1);
+        c.try_push(1).unwrap();
+        assert_eq!(c.try_push(2), Err(2));
+        assert_eq!(c.stats().push_stalls, 1);
+    }
+
+    #[test]
+    fn empty_channel_stalls_consumer() {
+        let mut c: Channel<u32> = Channel::new(2);
+        assert_eq!(c.try_pop(), None);
+        assert_eq!(c.stats().pop_stalls, 1);
+    }
+
+    #[test]
+    fn max_occupancy_tracked() {
+        let mut c = Channel::new(8);
+        for i in 0..5 {
+            c.try_push(i).unwrap();
+        }
+        c.try_pop();
+        assert_eq!(c.stats().max_occupancy, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "depth")]
+    fn zero_depth_rejected() {
+        let _ = Channel::<u8>::new(0);
+    }
+}

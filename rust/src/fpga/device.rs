@@ -1,0 +1,156 @@
+//! FPGA board/device profiles.
+//!
+//! Capacities are taken from the paper's §4 (our two boards) and the
+//! cited prior-work papers (baseline boards).  `fmax_mhz` is the
+//! *achieved* kernel clock the respective paper reports — we cannot run
+//! the vendor fitter, so the compiled Fmax is an input, not an output,
+//! of the simulation (documented in DESIGN.md §2).
+
+
+/// Static description of one FPGA board.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Marketing device name as in Table 1.
+    pub device: &'static str,
+    /// Logic elements / LUTs (thousands).
+    pub luts_k: u32,
+    /// Hard DSP blocks.
+    pub dsps: u32,
+    /// On-chip block RAM (M20K/BRAM) in megabits.
+    pub m20k_mbits: f64,
+    /// Achieved kernel clock in MHz (from the source paper's compile).
+    pub fmax_mhz: f64,
+    /// Peak DRAM bandwidth, GB/s.
+    pub ddr_gbps: f64,
+    /// Sustained fraction of peak DRAM bandwidth (controller efficiency).
+    pub ddr_efficiency: f64,
+    /// DSP blocks consumed per fp32 multiply-accumulate.
+    /// 1.0 on Arria 10 / Stratix 10 (hardened IEEE-754 DSP);
+    /// higher on the older fabrics that compose fp32 from 27x27 DSPs.
+    pub dsp_per_fp32_mac: f64,
+    /// Board DRAM size in GB (2 GB DDR3 on Alaric, 32 GB DDR4 on
+    /// Nallatech 520 — bounds the largest resident model/batch).
+    pub dram_gb: f64,
+}
+
+impl DeviceProfile {
+    /// Sustained DRAM bytes per kernel-clock cycle.
+    pub fn ddr_bytes_per_cycle(&self) -> f64 {
+        self.ddr_gbps * 1e9 * self.ddr_efficiency / (self.fmax_mhz * 1e6)
+    }
+
+    /// On-chip RAM in bytes.
+    pub fn m20k_bytes(&self) -> f64 {
+        self.m20k_mbits * 1e6 / 8.0
+    }
+}
+
+/// Alaric board: Intel Arria 10 GX 1150, 2 GB DDR3 (paper §4).
+pub const ARRIA10: DeviceProfile = DeviceProfile {
+    name: "arria10",
+    device: "Arria 10 GX",
+    luts_k: 660,
+    dsps: 1687,
+    m20k_mbits: 53.0,
+    fmax_mhz: 167.0, // paper's compiled kernel clock
+    ddr_gbps: 8.5,   // single-channel DDR3-1066
+    ddr_efficiency: 0.70,
+    dsp_per_fp32_mac: 1.0, // hardened fp32 DSP
+    dram_gb: 2.0,
+};
+
+/// Nallatech 520 board: Intel Stratix 10 GX 2800, 32 GB DDR4 (paper §4).
+pub const STRATIX10: DeviceProfile = DeviceProfile {
+    name: "stratix10",
+    device: "Stratix 10 GX-2800",
+    luts_k: 2753,
+    dsps: 5760,
+    m20k_mbits: 229.0,
+    fmax_mhz: 275.0, // paper's compiled kernel clock
+    ddr_gbps: 19.2,  // DDR4-2400 channel
+    ddr_efficiency: 0.85,
+    dsp_per_fp32_mac: 1.0,
+    dram_gb: 32.0,
+};
+
+/// DE5-Net board: Stratix V GXA7 (FPGA2016a / FPGA2016b baselines).
+pub const STRATIXV: DeviceProfile = DeviceProfile {
+    name: "stratixv",
+    device: "Stratix-V GXA7",
+    luts_k: 622,
+    dsps: 256,
+    m20k_mbits: 50.0,
+    fmax_mhz: 181.0, // PipeCNN's compiled clock; Suda's design runs 120
+    ddr_gbps: 12.8,  // two-channel DDR3-800
+    ddr_efficiency: 0.80,
+    dsp_per_fp32_mac: 1.7, // fp32 composed from 27x27 mults + logic
+    dram_gb: 4.0,
+};
+
+/// VC707 board: Xilinx Virtex-7 VX485T (FPGA2015 baseline).
+pub const VIRTEX7: DeviceProfile = DeviceProfile {
+    name: "virtex7",
+    device: "Virtex-7 VX485T",
+    luts_k: 485,
+    dsps: 2800,
+    m20k_mbits: 37.0,
+    fmax_mhz: 100.0, // Zhang et al.'s clock
+    ddr_gbps: 12.8,
+    ddr_efficiency: 0.80,
+    dsp_per_fp32_mac: 5.0, // DSP48E fp32 MAC (3 mult + 2 add)
+    dram_gb: 1.0,
+};
+
+/// All known profiles.
+pub const DEVICES: [&DeviceProfile; 4] =
+    [&ARRIA10, &STRATIX10, &STRATIXV, &VIRTEX7];
+
+/// Look a device up by short name.
+pub fn by_name(name: &str) -> Option<&'static DeviceProfile> {
+    DEVICES.iter().find(|d| d.name == name).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacities_match_table1() {
+        assert_eq!(ARRIA10.luts_k, 660);
+        assert_eq!(ARRIA10.dsps, 1687);
+        assert_eq!(STRATIX10.luts_k, 2753);
+        assert_eq!(STRATIX10.dsps, 5760);
+        assert_eq!(STRATIXV.dsps, 256);
+        assert_eq!(VIRTEX7.dsps, 2800);
+    }
+
+    #[test]
+    fn fmax_matches_table1() {
+        assert_eq!(ARRIA10.fmax_mhz, 167.0);
+        assert_eq!(STRATIX10.fmax_mhz, 275.0);
+        assert_eq!(VIRTEX7.fmax_mhz, 100.0);
+    }
+
+    #[test]
+    fn ddr_bytes_per_cycle_sane() {
+        // Stratix 10: 19.2 GB/s * 0.85 / 275 MHz ≈ 59 B/cycle.
+        let b = STRATIX10.ddr_bytes_per_cycle();
+        assert!(b > 50.0 && b < 70.0, "{b}");
+        // Arria 10 DDR3 is several times slower per cycle.
+        assert!(ARRIA10.ddr_bytes_per_cycle() < b);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for d in DEVICES {
+            assert_eq!(by_name(d.name).unwrap().device, d.device);
+        }
+        assert!(by_name("zynq").is_none());
+    }
+
+    #[test]
+    fn m20k_bytes() {
+        assert!((ARRIA10.m20k_bytes() - 6.625e6).abs() < 1e3);
+    }
+}

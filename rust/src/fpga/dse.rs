@@ -1,0 +1,173 @@
+//! Design-space exploration — the paper's "the design space of the
+//! proposed architecture was fully explored" claim (experiment E2).
+//!
+//! Sweeps `(vec_size, lane_num)` under a device's DSP/M20K/LUT budget,
+//! evaluates each feasible point with the analytic timing model, and
+//! returns all points plus the latency-optimal and density-optimal
+//! (GOPS/DSP) choices.
+
+
+use super::device::DeviceProfile;
+use super::resources::{resource_usage, ResourceUsage};
+use super::timing::{simulate_model, DesignParams, OverlapPolicy};
+use crate::models::Model;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub params: DesignParams,
+    pub usage: ResourceUsage,
+    pub feasible: bool,
+    pub time_ms: f64,
+    pub gops: f64,
+    pub gops_per_dsp: f64,
+}
+
+/// Sweep ranges: powers of two for the SIMD vector (hardware-friendly),
+/// dense lane counts (each lane is an independent output filter bank).
+pub const VEC_CANDIDATES: [usize; 5] = [4, 8, 16, 32, 64];
+pub const LANE_CANDIDATES: [usize; 12] = [1, 2, 3, 4, 6, 8, 11, 16, 22, 32, 48, 64];
+
+/// Explore the design space of `model` on `device` at `batch`.
+pub fn explore(
+    model: &Model,
+    device: &DeviceProfile,
+    batch: usize,
+) -> Vec<DesignPoint> {
+    let mut points = Vec::new();
+    for &vec in &VEC_CANDIDATES {
+        for &lane in &LANE_CANDIDATES {
+            let params = DesignParams::new(vec, lane);
+            let usage = resource_usage(&params, device);
+            let feasible = usage.fits(device);
+            let t = simulate_model(
+                model,
+                device,
+                &params,
+                batch,
+                OverlapPolicy::WithinGroup,
+            );
+            let time_ms = t.time_per_image_ms();
+            let gops = t.gops();
+            points.push(DesignPoint {
+                params,
+                usage,
+                feasible,
+                time_ms,
+                gops,
+                gops_per_dsp: gops / usage.dsps as f64,
+            });
+        }
+    }
+    points
+}
+
+/// The latency-optimal feasible point.
+pub fn best_latency(points: &[DesignPoint]) -> Option<&DesignPoint> {
+    points
+        .iter()
+        .filter(|p| p.feasible)
+        .min_by(|a, b| a.time_ms.total_cmp(&b.time_ms))
+}
+
+/// The density-optimal (GOPS/DSP) feasible point — the paper's
+/// headline metric.
+pub fn best_density(points: &[DesignPoint]) -> Option<&DesignPoint> {
+    points
+        .iter()
+        .filter(|p| p.feasible)
+        .max_by(|a, b| a.gops_per_dsp.total_cmp(&b.gops_per_dsp))
+}
+
+/// Pareto frontier over (time_ms, dsps): designs where no other
+/// feasible design is both faster and smaller.  Exact (time, dsps)
+/// ties keep only the first point, so the frontier is strictly
+/// monotone: increasing time, decreasing DSPs.
+pub fn pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
+    let mut frontier: Vec<&DesignPoint> = Vec::new();
+    for p in points.iter().filter(|p| p.feasible) {
+        let dominated = points.iter().filter(|q| q.feasible).any(|q| {
+            (q.time_ms < p.time_ms && q.usage.dsps <= p.usage.dsps)
+                || (q.time_ms <= p.time_ms && q.usage.dsps < p.usage.dsps)
+        });
+        let duplicate = frontier.iter().any(|f| {
+            f.time_ms == p.time_ms && f.usage.dsps == p.usage.dsps
+        });
+        if !dominated && !duplicate {
+            frontier.push(p);
+        }
+    }
+    frontier.sort_by(|a, b| a.time_ms.total_cmp(&b.time_ms));
+    frontier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{ARRIA10, STRATIX10, STRATIXV};
+    use crate::models;
+
+    #[test]
+    fn sweep_covers_grid() {
+        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        assert_eq!(pts.len(), VEC_CANDIDATES.len() * LANE_CANDIDATES.len());
+        assert!(pts.iter().any(|p| p.feasible));
+    }
+
+    #[test]
+    fn infeasible_points_on_small_device() {
+        let pts = explore(&models::alexnet(), &STRATIXV, 1);
+        // Stratix V has only 256 DSPs at 1.7 DSP/MAC: the big design
+        // points cannot fit.
+        assert!(pts.iter().any(|p| !p.feasible));
+        assert!(pts.iter().any(|p| p.feasible));
+    }
+
+    #[test]
+    fn best_latency_is_feasible_and_fastest() {
+        let pts = explore(&models::alexnet(), &ARRIA10, 1);
+        let best = best_latency(&pts).unwrap();
+        assert!(best.feasible);
+        for p in pts.iter().filter(|p| p.feasible) {
+            assert!(best.time_ms <= p.time_ms + 1e-12);
+        }
+    }
+
+    #[test]
+    fn density_optimum_uses_fewer_dsps_than_latency_optimum() {
+        // GOPS/DSP favors small designs that stay compute-bound; the
+        // latency optimum burns more DSPs for diminishing returns.
+        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        let lat = best_latency(&pts).unwrap();
+        let den = best_density(&pts).unwrap();
+        assert!(den.usage.dsps <= lat.usage.dsps);
+        assert!(den.gops_per_dsp >= lat.gops_per_dsp);
+    }
+
+    #[test]
+    fn pareto_frontier_monotone() {
+        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        let front = pareto(&pts);
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            // sorted by time; DSPs must strictly decrease along the
+            // frontier (else the slower point would be dominated).
+            assert!(w[1].usage.dsps < w[0].usage.dsps);
+        }
+    }
+
+    #[test]
+    fn bigger_batch_improves_gops_at_fixed_point() {
+        let p1 = explore(&models::alexnet(), &STRATIX10, 1);
+        let p8 = explore(&models::alexnet(), &STRATIX10, 8);
+        let f = |pts: &[DesignPoint]| {
+            pts.iter()
+                .find(|p| {
+                    p.params.vec_size == 16 && p.params.lane_num == 11
+                })
+                .unwrap()
+                .gops
+        };
+        assert!(f(&p8) > f(&p1));
+    }
+}

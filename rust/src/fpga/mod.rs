@@ -1,0 +1,34 @@
+//! Cycle-approximate FPGA accelerator simulator — the substrate FFCNN
+//! ran on, rebuilt in software (DESIGN.md §2).
+//!
+//! The paper's performance claims rest on three structural properties:
+//!
+//! 1. the Conv kernel is a `VEC_SIZE x LANE_NUM` multiplier-adder tree
+//!    with initiation interval 1 (Eq. 4's flattened loop);
+//! 2. cascaded kernels (MemRd → Conv → ReLU/LRN/Pool → MemWr) exchange
+//!    data over on-chip channels, so fused stages never touch DDR;
+//! 3. per-layer time is the max of compute and DDR traffic when double
+//!    buffering overlaps them.
+//!
+//! [`timing`] encodes those as closed-form per-layer cycle counts;
+//! [`pipeline`] validates them with a token-level simulation of the
+//! channel-connected kernels (bounded FIFOs, backpressure, stalls);
+//! [`resources`] maps a design point to DSP/M20K/LUT usage and checks it
+//! fits the device; [`dse`] sweeps the design space like the paper's
+//! "fully explored" claim; [`device`] holds the board profiles.
+
+pub mod channel;
+pub mod device;
+pub mod dse;
+pub mod pipeline;
+pub mod resources;
+pub mod timing;
+
+pub use channel::Channel;
+pub use device::{DeviceProfile, DEVICES};
+pub use dse::{explore, DesignPoint};
+pub use resources::{resource_usage, ResourceUsage};
+pub use timing::{
+    simulate_model, DesignParams, LayerTiming, ModelTiming, OverlapPolicy,
+    Precision,
+};

@@ -1,0 +1,583 @@
+//! Closed-form per-layer cycle model of the FFCNN pipeline.
+//!
+//! The Conv OpenCL kernel is a `vec_size x lane_num` multiplier-adder
+//! tree with initiation interval 1 (the paper's Eq. 4 flattening): each
+//! cycle it consumes `vec_size` input/weight pairs for each of
+//! `lane_num` output filters.  Per output pixel per lane-group the inner
+//! loop takes `ceil(C/g * K*K / vec_size)` cycles, so a conv layer costs
+//!
+//! ```text
+//! cycles = g * B*OH*OW * ceil((F/g)/lane) * ceil((C/g)*K*K/vec)
+//! ```
+//!
+//! Fused stages (ReLU/LRN/Pool, chained on channels) process at >= the
+//! Conv emission rate, so they add pipeline fill, not throughput.
+//! DDR traffic is modelled per fused group (weights once per group
+//! invocation, activations spill only at group boundaries) and overlap
+//! with compute is governed by [`OverlapPolicy`].
+
+
+use super::device::DeviceProfile;
+use crate::models::{fusion_groups, LayerInfo, LayerKind, Model, Shape};
+
+/// Tunable design parameters of the accelerator (the paper's design
+/// space: data-path vectorization and output-lane parallelism).
+#[derive(Debug, Clone, Copy)]
+pub struct DesignParams {
+    /// SIMD width over the flattened reduction (PipeCNN's VEC_SIZE).
+    pub vec_size: usize,
+    /// Parallel output-filter lanes (PipeCNN's LANE_NUM).
+    pub lane_num: usize,
+    /// On-chip channel FIFO depth (tokens).
+    pub channel_depth: usize,
+    /// Host enqueue overhead per fused group, microseconds.
+    pub host_us_per_group: f64,
+    /// Datapath number format.  The paper deliberately uses fp32
+    /// ("full-precision direct computation", enabling a future training
+    /// flow); fixed-point variants are modelled for the precision
+    /// ablation (EXPERIMENTS.md §E5) — it is the axis FPGA2016a's
+    /// density advantage comes from.
+    pub precision: Precision,
+}
+
+/// Arithmetic format of the conv engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Fixed16,
+    Fixed8,
+}
+
+impl Precision {
+    /// Bytes per weight/activation element in DDR.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Precision::Fp32 => 4,
+            Precision::Fixed16 => 2,
+            Precision::Fixed8 => 1,
+        }
+    }
+
+    /// DSP blocks per MAC, relative to the device's fp32 cost.
+    /// Fixed 18x19 multipliers pack 2 MACs per DSP; 9-bit packs 4
+    /// (Intel's dual/quad multiplier modes).
+    pub fn dsp_per_mac(&self, device: &DeviceProfile) -> f64 {
+        match self {
+            Precision::Fp32 => device.dsp_per_fp32_mac,
+            Precision::Fixed16 => 0.5,
+            Precision::Fixed8 => 0.25,
+        }
+    }
+}
+
+impl DesignParams {
+    pub fn new(vec_size: usize, lane_num: usize) -> Self {
+        DesignParams {
+            vec_size,
+            lane_num,
+            channel_depth: 512,
+            host_us_per_group: 10.0,
+            precision: Precision::Fp32,
+        }
+    }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// Parallel fp32 MACs per cycle.
+    pub fn macs_per_cycle(&self) -> usize {
+        self.vec_size * self.lane_num
+    }
+}
+
+/// FFCNN design points used in the paper's evaluation (§4), chosen by
+/// [`super::dse::explore`] under each device's resource budget.
+pub fn ffcnn_arria10_params() -> DesignParams {
+    DesignParams::new(32, 11) // 352 MACs/cycle, ~379 DSPs with overhead
+}
+
+pub fn ffcnn_stratix10_params() -> DesignParams {
+    DesignParams::new(16, 11) // 176 MACs/cycle, ~181 DSPs with overhead
+}
+
+/// How DDR traffic overlaps with compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverlapPolicy {
+    /// No double buffering: compute and memory serialize.
+    None,
+    /// Double buffering within a fused group (the paper's design).
+    WithinGroup,
+    /// Perfect cross-layer prefetching (upper bound).
+    Full,
+}
+
+/// What bounds a group's time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+}
+
+/// Timing of one fused pipeline group.
+#[derive(Debug, Clone)]
+pub struct GroupTiming {
+    /// Layer names inside the group (MemRd→Conv→…→MemWr pass).
+    pub layers: Vec<String>,
+    pub anchor_kind: String,
+    pub compute_cycles: u64,
+    pub mem_bytes: u64,
+    pub mem_cycles: u64,
+    /// Pipeline fill + host enqueue, cycles.
+    pub overhead_cycles: u64,
+    pub cycles: u64,
+    pub bound: Bound,
+}
+
+/// Per-layer view (for the `layers` CLI command / E3 experiment).
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    pub kind: String,
+    pub group: usize,
+    pub macs: u64,
+    pub out_bytes: u64,
+}
+
+/// Whole-model timing result.
+#[derive(Debug, Clone)]
+pub struct ModelTiming {
+    pub model: String,
+    pub device: String,
+    pub batch: usize,
+    pub groups: Vec<GroupTiming>,
+    pub total_cycles: u64,
+    pub fmax_mhz: f64,
+    /// Total DDR traffic in bytes.
+    pub dram_bytes: u64,
+    /// DDR traffic a fully unfused design (spill after every layer,
+    /// incl. LRN/pool) would move — the paper's bandwidth-saving basis.
+    pub dram_bytes_unfused: u64,
+    /// Ops (2*MACs) per image of the model.
+    pub ops_per_image: u64,
+    /// Model weight bytes (params * 4), for traffic decomposition.
+    pub weight_param_bytes: u64,
+}
+
+impl ModelTiming {
+    /// End-to-end latency for the batch, milliseconds.
+    pub fn time_ms(&self) -> f64 {
+        self.total_cycles as f64 / (self.fmax_mhz * 1e6) * 1e3
+    }
+
+    /// Per-image classification time, ms (Table 1 row).
+    pub fn time_per_image_ms(&self) -> f64 {
+        self.time_ms() / self.batch as f64
+    }
+
+    /// Achieved throughput in GOPS (Table 1 row).
+    pub fn gops(&self) -> f64 {
+        (self.ops_per_image as f64 * self.batch as f64)
+            / (self.time_ms() / 1e3)
+            / 1e9
+    }
+
+    /// Fraction of DDR traffic eliminated by kernel fusion (E3).
+    pub fn fusion_traffic_saving(&self) -> f64 {
+        1.0 - self.dram_bytes as f64 / self.dram_bytes_unfused as f64
+    }
+
+    /// Fusion saving on *activation* traffic only (weights move once in
+    /// either design, so this isolates the paper's interlayer-data
+    /// claim: chained kernels never spill feature maps to DDR).
+    pub fn activation_traffic_saving(&self) -> f64 {
+        let w = self.weight_param_bytes;
+        let fused = self.dram_bytes.saturating_sub(w) as f64;
+        let unfused = self.dram_bytes_unfused.saturating_sub(w) as f64;
+        1.0 - fused / unfused.max(1.0)
+    }
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// Compute cycles for one anchor layer at the given design point.
+pub fn layer_compute_cycles(
+    info: &LayerInfo,
+    kind: &LayerKind,
+    params: &DesignParams,
+    batch: u64,
+) -> u64 {
+    let vec = params.vec_size as u64;
+    let lane = params.lane_num as u64;
+    match kind {
+        LayerKind::Conv { out_ch, kernel, groups, .. } => {
+            let Shape::Chw(c, _, _) = info.in_shape else { unreachable!() };
+            let Shape::Chw(_, oh, ow) = info.out_shape else {
+                unreachable!()
+            };
+            let g = *groups as u64;
+            let f = *out_ch as u64;
+            let cg = c as u64 / g;
+            let kk = (kernel.0 * kernel.1) as u64;
+            g * batch
+                * (oh as u64)
+                * (ow as u64)
+                * ceil_div(f / g, lane)
+                * ceil_div(cg * kk, vec)
+        }
+        LayerKind::Fc { out, .. } => {
+            let din = info.in_shape.numel() as u64;
+            batch * ceil_div(*out as u64, lane) * ceil_div(din, vec)
+        }
+        LayerKind::Eltwise => {
+            // lane adds per cycle on the elementwise unit.
+            batch * ceil_div(info.out_shape.numel() as u64, lane)
+        }
+        LayerKind::Pool { .. } | LayerKind::Lrn { .. } => {
+            // Standalone (unfused) pool/LRN: one output element per
+            // cycle per lane.
+            batch * ceil_div(info.out_shape.numel() as u64, lane)
+        }
+        _ => 0,
+    }
+}
+
+/// DDR bytes moved by a fused group (fp32 activations + weights).
+///
+/// Weight reuse: the weight working set streams from DDR once per group
+/// invocation (pixels of the whole batch stream against it — the
+/// paper's data-reuse scheme).  Input activations re-stream once per
+/// filter-tile pass unless the map fits the on-chip buffer.
+fn group_mem_bytes(
+    rows: &[&LayerInfo],
+    kinds: &[&LayerKind],
+    params: &DesignParams,
+    device: &DeviceProfile,
+    batch: u64,
+) -> u64 {
+    let first = rows[0];
+    let last = rows[rows.len() - 1];
+    // Element width follows the datapath precision (fp32 by default).
+    let el = params.precision.bytes();
+    let in_bytes = first.in_shape.numel() as u64 * el * batch;
+    let out_bytes = last.out_shape.numel() as u64 * el * batch;
+    let weight_bytes: u64 = rows.iter().map(|r| r.params * el).sum();
+
+    let passes = match kinds[0] {
+        LayerKind::Conv { out_ch, groups, .. } => {
+            // Input tile buffer: half the M20K budget (double buffered).
+            let fits = ((first.in_shape.numel() as u64 * el) as f64)
+                < device.m20k_bytes() * 0.5;
+            if fits {
+                1
+            } else {
+                ceil_div(
+                    (*out_ch / *groups) as u64,
+                    params.lane_num as u64,
+                )
+            }
+        }
+        LayerKind::Eltwise => 2, // two operand streams
+        _ => 1,
+    };
+    in_bytes * passes + weight_bytes + out_bytes
+}
+
+/// Simulate a model end-to-end on a device at a design point.
+pub fn simulate_model(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+    batch: usize,
+    overlap: OverlapPolicy,
+) -> ModelTiming {
+    let infos = model.propagate();
+    let groups = fusion_groups(model);
+    let bpc = device.ddr_bytes_per_cycle();
+    let batch_u = batch as u64;
+
+    let fill = (3 * params.channel_depth) as u64;
+    let host = (params.host_us_per_group * device.fmax_mhz) as u64; // us * MHz = cycles
+
+    let mut out_groups: Vec<GroupTiming> = Vec::with_capacity(groups.len());
+    let mut dram_unfused: u64 = 0;
+
+    for g in &groups {
+        let rows: Vec<&LayerInfo> = g.rows.iter().map(|&i| &infos[i]).collect();
+        let kinds: Vec<&LayerKind> =
+            g.rows.iter().map(|&i| &model.layers[i].kind).collect();
+
+        let compute: u64 = rows
+            .iter()
+            .zip(&kinds)
+            .map(|(r, k)| layer_compute_cycles(r, k, params, batch_u))
+            .max()
+            .unwrap_or(0);
+
+        let mem_bytes = group_mem_bytes(&rows, &kinds, params, device, batch_u);
+        let mem_cycles = (mem_bytes as f64 / bpc).ceil() as u64;
+
+        // Unfused baseline: every row runs as its own singleton group
+        // (same cost model — conv re-reads per filter pass, eltwise
+        // reads two operands — but every intermediate map spills).
+        for (r, k) in rows.iter().zip(&kinds) {
+            dram_unfused +=
+                group_mem_bytes(&[r], &[k], params, device, batch_u);
+        }
+
+        let overhead = fill + host;
+        let cycles = match overlap {
+            OverlapPolicy::None => compute + mem_cycles,
+            _ => compute.max(mem_cycles),
+        } + overhead;
+        out_groups.push(GroupTiming {
+            layers: rows.iter().map(|r| r.name.clone()).collect(),
+            anchor_kind: rows
+                .first()
+                .map(|r| r.kind.clone())
+                .unwrap_or_default(),
+            compute_cycles: compute,
+            mem_bytes,
+            mem_cycles,
+            overhead_cycles: overhead,
+            cycles,
+            bound: if compute >= mem_cycles {
+                Bound::Compute
+            } else {
+                Bound::Memory
+            },
+        });
+    }
+
+    let total_cycles = match overlap {
+        OverlapPolicy::Full => {
+            // Perfect cross-group prefetch: compute and memory each
+            // pipeline through the whole net.
+            let c: u64 = out_groups.iter().map(|g| g.compute_cycles).sum();
+            let m: u64 = out_groups.iter().map(|g| g.mem_cycles).sum();
+            let o: u64 = out_groups.iter().map(|g| g.overhead_cycles).sum();
+            c.max(m) + o
+        }
+        _ => out_groups.iter().map(|g| g.cycles).sum(),
+    };
+
+    ModelTiming {
+        model: model.name.clone(),
+        device: device.name.to_string(),
+        batch,
+        dram_bytes: out_groups.iter().map(|g| g.mem_bytes).sum(),
+        dram_bytes_unfused: dram_unfused,
+        groups: out_groups,
+        total_cycles,
+        fmax_mhz: device.fmax_mhz,
+        ops_per_image: model.total_ops(),
+        weight_param_bytes: model.total_params() * params.precision.bytes(),
+    }
+}
+
+/// Per-layer rows for reporting (E3: layer-wise breakdown).
+pub fn layer_rows(model: &Model) -> Vec<LayerTiming> {
+    let infos = model.propagate();
+    let groups = fusion_groups(model);
+    let mut rows = Vec::with_capacity(infos.len());
+    for (gi, g) in groups.iter().enumerate() {
+        for &i in &g.rows {
+            rows.push(LayerTiming {
+                name: infos[i].name.clone(),
+                kind: infos[i].kind.clone(),
+                group: gi,
+                macs: infos[i].macs,
+                out_bytes: infos[i].out_shape.bytes_f32() as u64,
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{ARRIA10, STRATIX10};
+    use crate::models;
+
+    fn s10() -> (DesignParams, &'static DeviceProfile) {
+        (ffcnn_stratix10_params(), &STRATIX10)
+    }
+
+    #[test]
+    fn alexnet_stratix10_latency_in_paper_ballpark() {
+        let (p, d) = s10();
+        let t = simulate_model(
+            &models::alexnet(), d, &p, 1, OverlapPolicy::WithinGroup,
+        );
+        let ms = t.time_per_image_ms();
+        // Paper reports 21.2 ms; our honest physics (fp32 FC weights
+        // memory-bound at batch 1) lands in the same regime.
+        assert!(ms > 10.0 && ms < 45.0, "ms={ms}");
+    }
+
+    #[test]
+    fn alexnet_arria10_slower_than_stratix10() {
+        let pa = ffcnn_arria10_params();
+        let ta = simulate_model(
+            &models::alexnet(), &ARRIA10, &pa, 1, OverlapPolicy::WithinGroup,
+        );
+        let (ps, ds) = s10();
+        let ts = simulate_model(
+            &models::alexnet(), ds, &ps, 1, OverlapPolicy::WithinGroup,
+        );
+        assert!(
+            ta.time_per_image_ms() > ts.time_per_image_ms(),
+            "arria10 {:.1}ms vs stratix10 {:.1}ms",
+            ta.time_per_image_ms(),
+            ts.time_per_image_ms()
+        );
+    }
+
+    #[test]
+    fn fc_layers_memory_bound_at_batch1() {
+        let (p, d) = s10();
+        let t = simulate_model(
+            &models::alexnet(), d, &p, 1, OverlapPolicy::WithinGroup,
+        );
+        let fc_groups: Vec<_> = t
+            .groups
+            .iter()
+            .filter(|g| g.anchor_kind == "fc")
+            .collect();
+        assert_eq!(fc_groups.len(), 3);
+        for g in fc_groups {
+            assert_eq!(g.bound, Bound::Memory, "{:?}", g.layers);
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_fc_weight_traffic() {
+        let (p, d) = s10();
+        let t1 = simulate_model(
+            &models::alexnet(), d, &p, 1, OverlapPolicy::WithinGroup,
+        );
+        let t8 = simulate_model(
+            &models::alexnet(), d, &p, 8, OverlapPolicy::WithinGroup,
+        );
+        // Throughput at batch 8 must be well above batch 1 (weights
+        // stream once per group, pixels of the whole batch reuse them).
+        assert!(t8.gops() > 1.5 * t1.gops(), "{} vs {}", t8.gops(), t1.gops());
+        // But per-image latency must not *increase* by batching.
+        assert!(t8.time_per_image_ms() < t1.time_per_image_ms());
+    }
+
+    #[test]
+    fn overlap_policy_ordering() {
+        let (p, d) = s10();
+        let m = models::alexnet();
+        let none = simulate_model(&m, d, &p, 1, OverlapPolicy::None);
+        let within = simulate_model(&m, d, &p, 1, OverlapPolicy::WithinGroup);
+        let full = simulate_model(&m, d, &p, 1, OverlapPolicy::Full);
+        assert!(none.total_cycles >= within.total_cycles);
+        assert!(within.total_cycles >= full.total_cycles);
+    }
+
+    #[test]
+    fn fusion_saves_traffic() {
+        let (p, d) = s10();
+        let t = simulate_model(
+            &models::alexnet(), d, &p, 1, OverlapPolicy::WithinGroup,
+        );
+        // The paper's central bandwidth claim: fused pipelines never
+        // spill interlayer feature maps, so *activation* traffic drops
+        // by more than half.  (Total traffic saving is small for
+        // AlexNet because the 244 MB of fp32 weights move once in
+        // either design — that split is exactly why we report both.)
+        assert!(
+            t.activation_traffic_saving() > 0.5,
+            "activation saving {}",
+            t.activation_traffic_saving()
+        );
+        assert!(t.fusion_traffic_saving() > 0.01);
+        assert!(t.dram_bytes < t.dram_bytes_unfused);
+    }
+
+    #[test]
+    fn conv_cycles_formula_exact() {
+        // conv1 of AlexNet on vec=16 lane=11:
+        // g=1, 55*55 pixels, ceil(96/11)=9 lane groups,
+        // ceil(3*121/16)=23 inner cycles.
+        let m = models::alexnet();
+        let infos = m.propagate();
+        let p = DesignParams::new(16, 11);
+        let c = layer_compute_cycles(
+            &infos[0], &m.layers[0].kind, &p, 1,
+        );
+        assert_eq!(c, 55 * 55 * 9 * 23);
+    }
+
+    #[test]
+    fn grouped_conv_cycles_double_count_groups() {
+        let m = models::alexnet();
+        let infos = m.propagate();
+        // conv2 (groups=2): g * OH*OW * ceil((256/2)/11) * ceil(48*25/16)
+        let idx = 3;
+        assert_eq!(infos[idx].name, "conv2");
+        let p = DesignParams::new(16, 11);
+        let c = layer_compute_cycles(&infos[idx], &m.layers[idx].kind, &p, 1);
+        assert_eq!(c, 2 * 27 * 27 * 12 * 75);
+    }
+
+    #[test]
+    fn resnet50_slower_than_alexnet_same_design() {
+        let (p, d) = s10();
+        let a = simulate_model(&models::alexnet(), d, &p, 1, OverlapPolicy::WithinGroup);
+        let r = simulate_model(&models::resnet50(), d, &p, 1, OverlapPolicy::WithinGroup);
+        assert!(r.time_per_image_ms() > a.time_per_image_ms());
+    }
+
+    #[test]
+    fn layer_rows_cover_model() {
+        let m = models::resnet50();
+        assert_eq!(layer_rows(&m).len(), m.layers.len());
+    }
+
+    #[test]
+    fn fixed_point_improves_latency_and_density() {
+        // The precision ablation (E5): fixed point shrinks the FC
+        // weight stream and packs more MACs per DSP, so both time and
+        // GOPS/DSP must improve monotonically fp32 -> 16b -> 8b.
+        use crate::fpga::resources::resource_usage;
+        let m = models::alexnet();
+        let (base, d) = s10();
+        let eval = |prec| {
+            let p = base.with_precision(prec);
+            let t = simulate_model(&m, d, &p, 1, OverlapPolicy::WithinGroup);
+            let u = resource_usage(&p, d);
+            (t.time_per_image_ms(), t.gops() / u.dsps as f64)
+        };
+        let (t32, d32) = eval(Precision::Fp32);
+        let (t16, d16) = eval(Precision::Fixed16);
+        let (t8, d8) = eval(Precision::Fixed8);
+        assert!(t16 < t32 && t8 < t16, "{t32} {t16} {t8}");
+        assert!(d16 > d32 && d8 > d16, "{d32} {d16} {d8}");
+        // fixed16 roughly doubles density vs fp32 on hardened-fp parts.
+        assert!(d16 / d32 > 1.5, "{}", d16 / d32);
+    }
+
+    #[test]
+    fn precision_element_widths() {
+        assert_eq!(Precision::Fp32.bytes(), 4);
+        assert_eq!(Precision::Fixed16.bytes(), 2);
+        assert_eq!(Precision::Fixed8.bytes(), 1);
+        assert_eq!(Precision::Fixed16.dsp_per_mac(&STRATIX10), 0.5);
+        assert_eq!(Precision::Fp32.dsp_per_mac(&STRATIX10), 1.0);
+    }
+
+    #[test]
+    fn gops_consistency() {
+        let (p, d) = s10();
+        let t = simulate_model(&models::alexnet(), d, &p, 1, OverlapPolicy::WithinGroup);
+        let expect = t.ops_per_image as f64 / (t.time_per_image_ms() / 1e3) / 1e9;
+        assert!((t.gops() - expect).abs() < 1e-9);
+    }
+}

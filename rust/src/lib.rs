@@ -1,0 +1,37 @@
+//! # FFCNN — Fast FPGA-based Acceleration for CNN Inference
+//!
+//! Rust reproduction of *FFCNN: Fast FPGA based Acceleration for
+//! Convolution neural network inference* (Keddous, Nguyen, Nakib, 2022).
+//!
+//! The crate is the L3 layer of a three-layer stack:
+//!
+//! - **L1** — Pallas kernels (`python/compile/kernels/`): the paper's
+//!   flattened 1-D convolution (Eq. 4) and the Pool/LRN/FC stages.
+//! - **L2** — JAX models (`python/compile/`): AlexNet / VGG / ResNet-50,
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! - **L3** — this crate: the inference coordinator (router, dynamic
+//!   batcher, pipeline scheduler) plus the *substrate the paper ran on*,
+//!   rebuilt as a cycle-approximate FPGA simulator ([`fpga`]), and the
+//!   PJRT runtime ([`runtime`]) that executes the AOT artifacts.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! Experiment entry points (see DESIGN.md §4):
+//! - Table 1  → [`report::table1`] / `ffcnn table1`
+//! - Fig. 1   → [`report::fig1`] / `ffcnn fig1`
+//! - DSE      → [`fpga::dse`] / `ffcnn dse`
+//! - Serving  → [`coordinator`] / `examples/serve_batch.rs`
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fpga;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,394 @@
+//! `ffcnn` CLI — leader entrypoint for the FFCNN reproduction.
+//!
+//! Subcommands map 1:1 onto the experiments in DESIGN.md §4:
+//! `table1` (T1), `fig1` (F1), `dse` (E2), `layers` (E3), `classify` /
+//! `serve` (E1/E4), `pipeline` (token-level simulator), `devices`.
+//!
+//! Argument parsing is hand-rolled (`Args`): the offline build
+//! environment has no clap; flags are `--key value` or `--flag`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::anyhow;
+
+use ffcnn::config::{default_artifacts_dir, RunConfig};
+use ffcnn::coordinator::{InferenceService, Pace, Policy};
+use ffcnn::data;
+use ffcnn::fpga::device::DEVICES;
+use ffcnn::fpga::pipeline::simulate_tokens;
+use ffcnn::fpga::timing::{simulate_model, OverlapPolicy};
+use ffcnn::fpga::{dse, resource_usage};
+use ffcnn::models;
+use ffcnn::report::{render_fig1, render_table1, table1_rows};
+use ffcnn::Result;
+
+const USAGE: &str = "\
+ffcnn — FFCNN reproduction CLI (see DESIGN.md §4)
+
+USAGE: ffcnn <command> [--key value] [--flag]
+
+COMMANDS:
+  table1    [--model alexnet]                      reproduce Table 1
+  fig1      [--model vgg11]                        reproduce Fig. 1
+  dse       [--device stratix10] [--model alexnet] [--batch 1]
+  layers    [--model alexnet] [--device stratix10] [--batch 1]
+  pipeline  [--model alexnet] [--device stratix10] [--batch 1]
+  classify  [--model alexnet] [--batch 1] [--conv-impl jnp]
+            [--device stratix10] [--iters 3]
+  serve     [--model alexnet] [--device stratix10] [--requests 64]
+            [--rate 0] [--boards 1] [--max-batch 8] [--pace-fpga]
+  devices                                          list device profiles
+
+GLOBAL: --artifacts <dir>   artifact directory (default ./artifacts)
+";
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(anyhow!("unexpected argument {a:?}\n{USAGE}"));
+            };
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { kv, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} wants an integer, got {v:?}")),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} wants a number, got {v:?}")),
+        }
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    let artifacts = args
+        .kv
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+
+    match cmd.as_str() {
+        "table1" => cmd_table1(&args),
+        "fig1" => cmd_fig1(&args),
+        "dse" => cmd_dse(&args),
+        "layers" => cmd_layers(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "classify" => cmd_classify(&args, artifacts),
+        "serve" => cmd_serve(&args, artifacts),
+        "devices" => {
+            println!(
+                "{:<12}{:<22}{:>8}{:>8}{:>10}{:>10}{:>10}",
+                "name", "device", "kLUTs", "DSPs", "M20K Mb", "Fmax",
+                "DDR GB/s"
+            );
+            for d in DEVICES {
+                println!(
+                    "{:<12}{:<22}{:>8}{:>8}{:>10.0}{:>10.0}{:>10.1}",
+                    d.name, d.device, d.luts_k, d.dsps, d.m20k_mbits,
+                    d.fmax_mhz, d.ddr_gbps
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    }
+}
+
+fn model_arg(args: &Args, default: &str) -> Result<ffcnn::models::Model> {
+    let name = args.get("model", default);
+    models::by_name(&name).ok_or_else(|| {
+        anyhow!(
+            "unknown model {name:?} (have {:?})",
+            models::model_names()
+        )
+    })
+}
+
+fn device_arg(
+    args: &Args,
+) -> Result<&'static ffcnn::fpga::device::DeviceProfile> {
+    let name = args.get("device", "stratix10");
+    ffcnn::fpga::device::by_name(&name)
+        .ok_or_else(|| anyhow!("unknown device {name:?}"))
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let m = model_arg(args, "alexnet")?;
+    println!(
+        "Table 1 — {} ({:.2} GOPs/image, {:.1}M params)\n",
+        m.name,
+        m.total_ops() as f64 / 1e9,
+        m.total_params() as f64 / 1e6
+    );
+    println!("{}", render_table1(&table1_rows(&m)));
+    println!(
+        "(times from each design's cycle model; GOPS = executed ops / \
+         time, computed uniformly — see EXPERIMENTS.md §T1)"
+    );
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let m = model_arg(args, "vgg11")?;
+    println!("{}", render_fig1(&m));
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let m = model_arg(args, "alexnet")?;
+    let d = device_arg(args)?;
+    let batch = args.get_usize("batch", 1)?;
+    let pts = dse::explore(&m, d, batch);
+    println!(
+        "DSE: {} on {} (batch {batch}) — {} points, {} feasible",
+        m.name,
+        d.device,
+        pts.len(),
+        pts.iter().filter(|p| p.feasible).count()
+    );
+    println!(
+        "{:<8}{:<8}{:>8}{:>12}{:>10}{:>14}",
+        "vec", "lane", "DSPs", "time(ms)", "GOPS", "GOPS/DSP"
+    );
+    for p in dse::pareto(&pts) {
+        println!(
+            "{:<8}{:<8}{:>8}{:>12.2}{:>10.1}{:>14.3}",
+            p.params.vec_size,
+            p.params.lane_num,
+            p.usage.dsps,
+            p.time_ms,
+            p.gops,
+            p.gops_per_dsp
+        );
+    }
+    if let Some(b) = dse::best_latency(&pts) {
+        println!(
+            "\nlatency-optimal: vec={} lane={} -> {:.2} ms",
+            b.params.vec_size, b.params.lane_num, b.time_ms
+        );
+    }
+    if let Some(b) = dse::best_density(&pts) {
+        println!(
+            "density-optimal: vec={} lane={} -> {:.3} GOPS/DSP",
+            b.params.vec_size, b.params.lane_num, b.gops_per_dsp
+        );
+    }
+    Ok(())
+}
+
+fn cmd_layers(args: &Args) -> Result<()> {
+    let m = model_arg(args, "alexnet")?;
+    let d = device_arg(args)?;
+    let batch = args.get_usize("batch", 1)?;
+    let cfg = RunConfig {
+        model: m.name.clone(),
+        device: d.name.to_string(),
+        ..Default::default()
+    };
+    let p = cfg.design_params()?;
+    let usage = resource_usage(&p, d);
+    let t = simulate_model(&m, d, &p, batch, OverlapPolicy::WithinGroup);
+    println!(
+        "{} on {} (vec={} lane={}, {} DSPs, batch {batch}): {:.2} ms, \
+         {:.1} GOPS, DDR {:.1} MB (unfused {:.1} MB, saving {:.0}%)\n",
+        m.name,
+        d.device,
+        p.vec_size,
+        p.lane_num,
+        usage.dsps,
+        t.time_per_image_ms(),
+        t.gops(),
+        t.dram_bytes as f64 / 1e6,
+        t.dram_bytes_unfused as f64 / 1e6,
+        t.fusion_traffic_saving() * 100.0
+    );
+    println!(
+        "{:<34}{:>12}{:>12}{:>12}{:>10}",
+        "fused group", "compute(cy)", "mem(cy)", "cycles", "bound"
+    );
+    for g in &t.groups {
+        println!(
+            "{:<34}{:>12}{:>12}{:>12}{:>10}",
+            g.layers.join("+"),
+            g.compute_cycles,
+            g.mem_cycles,
+            g.cycles,
+            format!("{:?}", g.bound)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let m = model_arg(args, "alexnet")?;
+    let d = device_arg(args)?;
+    let batch = args.get_usize("batch", 1)?;
+    let cfg = RunConfig {
+        model: m.name.clone(),
+        device: d.name.to_string(),
+        ..Default::default()
+    };
+    let p = cfg.design_params()?;
+    let tok = simulate_tokens(&m, d, &p, batch);
+    let ana = simulate_model(&m, d, &p, batch, OverlapPolicy::WithinGroup);
+    println!(
+        "token-level: {:.2} ms | analytic: {:.2} ms | ratio {:.3}",
+        tok.time_ms(),
+        ana.time_ms(),
+        tok.total_cycles as f64 / ana.total_cycles as f64
+    );
+    println!(
+        "\n{:<34}{:>10}{:>12}{:>30}",
+        "group", "tokens", "cycles", "backpressure rd/cv/fu/wr"
+    );
+    for g in &tok.groups {
+        println!(
+            "{:<34}{:>10}{:>12}{:>30}",
+            g.layers.join("+"),
+            g.tokens,
+            g.cycles,
+            format!("{:?}", g.backpressure_cycles)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_classify(args: &Args, artifacts: PathBuf) -> Result<()> {
+    use ffcnn::runtime::Engine;
+    let m = model_arg(args, "alexnet")?;
+    let d = device_arg(args)?;
+    let batch = args.get_usize("batch", 1)?;
+    let iters = args.get_usize("iters", 3)?;
+    let cfg = RunConfig {
+        model: m.name.clone(),
+        device: d.name.to_string(),
+        conv_impl: args.get("conv-impl", "jnp"),
+        artifacts_dir: artifacts,
+        ..Default::default()
+    };
+    let p = cfg.design_params()?;
+    let engine = Engine::open(&cfg.artifacts_dir)?;
+    let artifact = cfg.artifact_name(batch);
+    let input = data::synth_images(batch, m.in_shape, 42);
+    println!("compiling {artifact} ...");
+    engine.warm(&artifact)?;
+    for i in 0..iters {
+        let t0 = std::time::Instant::now();
+        let logits = engine.execute(&artifact, &input)?;
+        let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let sim = simulate_model(&m, d, &p, batch, cfg.overlap);
+        let classes = logits.len() / batch;
+        let preds: Vec<usize> = (0..batch)
+            .map(|b| {
+                ffcnn::coordinator::argmax(
+                    &logits[b * classes..(b + 1) * classes],
+                )
+            })
+            .collect();
+        println!(
+            "iter {i}: host(pjrt) {:.1} ms | simulated {} {:.2} ms \
+             ({:.1} GOPS) | preds {:?}",
+            host_ms,
+            d.name,
+            sim.time_ms(),
+            sim.gops(),
+            preds
+        );
+    }
+    let s = engine.stats();
+    println!(
+        "engine stats: {} execs, compile {:.1} ms, upload {:.1} ms, \
+         execute {:.1} ms, download {:.1} ms",
+        s.executions,
+        s.compile_us as f64 / 1e3,
+        s.upload_us as f64 / 1e3,
+        s.execute_us as f64 / 1e3,
+        s.download_us as f64 / 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
+    let m = model_arg(args, "alexnet")?;
+    let d = device_arg(args)?;
+    let requests = args.get_usize("requests", 64)?;
+    let rate = args.get_f64("rate", 0.0)?;
+    let mut cfg = RunConfig {
+        model: m.name.clone(),
+        device: d.name.to_string(),
+        artifacts_dir: artifacts,
+        ..Default::default()
+    };
+    cfg.serving.boards = args.get_usize("boards", 1)?;
+    cfg.serving.max_batch = args.get_usize("max-batch", 8)?;
+    let pace = if args.has("pace-fpga") { Pace::Fpga } else { Pace::None };
+    let in_shape = m.in_shape;
+
+    let svc = InferenceService::start(&cfg, pace, Policy::LeastOutstanding)?;
+    let trace = if rate > 0.0 {
+        data::poisson_trace(requests, rate, 7)
+    } else {
+        data::burst_trace(requests)
+    };
+    let report = svc.run_trace(
+        &trace,
+        |id| data::synth_images(1, in_shape, 1000 + id),
+        1.0,
+    );
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,351 @@
+//! Layer IR, shape propagation and exact MAC/param accounting.
+
+
+/// Tensor shape without the batch dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// Feature map: (channels, height, width).
+    Chw(usize, usize, usize),
+    /// Flat vector (FC activations).
+    Flat(usize),
+}
+
+impl Shape {
+    /// Total elements.
+    pub fn numel(&self) -> usize {
+        match *self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => n,
+        }
+    }
+
+    /// Bytes at fp32 (the paper's full-precision direct computation).
+    pub fn bytes_f32(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// As a json-compatible vec matching the python manifest encoding.
+    pub fn dims(&self) -> Vec<usize> {
+        match *self {
+            Shape::Chw(c, h, w) => vec![c, h, w],
+            Shape::Flat(n) => vec![n],
+        }
+    }
+}
+
+/// Pooling flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    Max,
+    Avg,
+}
+
+/// One pipeline stage — mirrors `python/compile/model.py::LayerSpec`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    Conv {
+        out_ch: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+        groups: usize,
+        relu: bool,
+    },
+    Pool {
+        mode: PoolMode,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: (usize, usize),
+    },
+    Lrn {
+        n: usize,
+    },
+    Fc {
+        out: usize,
+        relu: bool,
+    },
+    Flatten,
+    /// Elementwise add (+ ReLU) joining a shortcut branch (ResNet).
+    Eltwise,
+    Relu,
+    Softmax,
+    Dropout,
+}
+
+/// A named layer.  `input_from` overrides the default chain input for
+/// branch layers (ResNet projection shortcuts read the block input).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Name of the producing layer, `None` = previous layer in the list.
+    pub input_from: Option<String>,
+}
+
+impl Layer {
+    pub fn new(name: &str, kind: LayerKind) -> Self {
+        Layer { name: name.to_string(), kind, input_from: None }
+    }
+
+    pub fn with_input(mut self, from: &str) -> Self {
+        self.input_from = Some(from.to_string());
+        self
+    }
+}
+
+/// Accounting row — must match the python manifest layer rows exactly.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    /// Multiply-accumulates (1 MAC = 2 ops; the paper reports GOPs).
+    pub macs: u64,
+    /// Weights + biases.
+    pub params: u64,
+}
+
+impl LayerInfo {
+    pub fn ops(&self) -> u64 {
+        2 * self.macs
+    }
+}
+
+/// Spatial output size of a conv/pool window.
+pub fn out_hw(
+    hw: (usize, usize),
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> (usize, usize) {
+    (
+        (hw.0 + 2 * pad.0 - k.0) / stride.0 + 1,
+        (hw.1 + 2 * pad.1 - k.1) / stride.1 + 1,
+    )
+}
+
+/// A whole network.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    /// Input (C, H, W) without batch.
+    pub in_shape: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Static shape propagation + accounting; panics on malformed graphs
+    /// (model builders are trusted, tests cover every net).
+    pub fn propagate(&self) -> Vec<LayerInfo> {
+        let mut infos: Vec<LayerInfo> = Vec::with_capacity(self.layers.len());
+        let mut shapes: Vec<(String, Shape)> = Vec::new();
+        let (c0, h0, w0) = self.in_shape;
+        let mut prev = Shape::Chw(c0, h0, w0);
+        for layer in &self.layers {
+            let input = match &layer.input_from {
+                None => prev,
+                Some(name) => {
+                    shapes
+                        .iter()
+                        .rev()
+                        .find(|(n, _)| n == name)
+                        .unwrap_or_else(|| {
+                            panic!("{}: unknown input {name}", layer.name)
+                        })
+                        .1
+                }
+            };
+            let (out, macs, params, kind) = match &layer.kind {
+                LayerKind::Conv { out_ch, kernel, stride, padding, groups, .. } => {
+                    let Shape::Chw(c, h, w) = input else {
+                        panic!("{}: conv needs CHW input", layer.name)
+                    };
+                    let (oh, ow) = out_hw((h, w), *kernel, *stride, *padding);
+                    let cg = c / groups;
+                    let kk = kernel.0 * kernel.1;
+                    (
+                        Shape::Chw(*out_ch, oh, ow),
+                        (*out_ch as u64)
+                            * (cg as u64)
+                            * (kk as u64)
+                            * (oh as u64)
+                            * (ow as u64),
+                        (*out_ch as u64) * (cg as u64) * (kk as u64)
+                            + *out_ch as u64,
+                        "conv",
+                    )
+                }
+                LayerKind::Pool { kernel, stride, padding, .. } => {
+                    let Shape::Chw(c, h, w) = input else {
+                        panic!("{}: pool needs CHW input", layer.name)
+                    };
+                    let (oh, ow) = out_hw((h, w), *kernel, *stride, *padding);
+                    (Shape::Chw(c, oh, ow), 0, 0, "pool")
+                }
+                LayerKind::Lrn { .. } => (input, 0, 0, "lrn"),
+                LayerKind::Fc { out, .. } => {
+                    let din = input.numel() as u64;
+                    (
+                        Shape::Flat(*out),
+                        (*out as u64) * din,
+                        (*out as u64) * din + *out as u64,
+                        "fc",
+                    )
+                }
+                LayerKind::Flatten => (Shape::Flat(input.numel()), 0, 0, "flatten"),
+                LayerKind::Eltwise => (input, 0, 0, "eltwise"),
+                LayerKind::Relu => (input, 0, 0, "relu"),
+                LayerKind::Softmax => (input, 0, 0, "softmax"),
+                LayerKind::Dropout => (input, 0, 0, "dropout"),
+            };
+            infos.push(LayerInfo {
+                name: layer.name.clone(),
+                kind: kind.to_string(),
+                in_shape: input,
+                out_shape: out,
+                macs,
+                params,
+            });
+            shapes.push((layer.name.clone(), out));
+            // Branch layers (explicit input_from on a *side* branch, e.g.
+            // ResNet `proj`) do not advance the main chain; the chain
+            // advances for every layer whose input is the previous one,
+            // and for join layers (eltwise) regardless.
+            let is_side_branch = layer.input_from.is_some()
+                && !matches!(layer.kind, LayerKind::Eltwise);
+            if !is_side_branch {
+                prev = out;
+            }
+        }
+        infos
+    }
+
+    /// MACs per single image.
+    pub fn total_macs(&self) -> u64 {
+        self.propagate().iter().map(|i| i.macs).sum()
+    }
+
+    /// Operations per image (paper convention: 1 MAC = 2 ops).
+    pub fn total_ops(&self) -> u64 {
+        2 * self.total_macs()
+    }
+
+    /// Parameter count (weights + biases).
+    pub fn total_params(&self) -> u64 {
+        self.propagate().iter().map(|i| i.params).sum()
+    }
+
+    /// fp32 model size in bytes.
+    pub fn weight_bytes(&self) -> u64 {
+        self.total_params() * 4
+    }
+}
+
+/// A fused pipeline group: one pass of the FFCNN kernel chain
+/// MemRd -> Conv -> (ReLU) -> (LRN) -> (Pool) -> MemWr.
+///
+/// Chained layers inside a group exchange data over on-chip channels and
+/// never touch DDR — the paper's headline bandwidth saving.  Group
+/// boundaries are where feature maps must spill to global memory.
+#[derive(Debug, Clone)]
+pub struct FusionGroup {
+    /// Indices into the `propagate()` row vector.
+    pub rows: Vec<usize>,
+    /// Row index of the compute anchor (conv/fc), if any.
+    pub anchor: Option<usize>,
+}
+
+/// Partition a model into fused pipeline groups.
+///
+/// A group starts at each conv/fc/eltwise anchor and absorbs the
+/// following fusable stages (relu/lrn/pool/flatten/dropout/softmax),
+/// mirroring how FFCNN cascades kernels per layer invocation.
+pub fn fusion_groups(model: &Model) -> Vec<FusionGroup> {
+    let infos = model.propagate();
+    let mut groups: Vec<FusionGroup> = Vec::new();
+    for (idx, info) in infos.iter().enumerate() {
+        let fusable = matches!(
+            info.kind.as_str(),
+            "pool" | "lrn" | "relu" | "flatten" | "dropout" | "softmax"
+        );
+        if fusable && !groups.is_empty() {
+            let g = groups.last_mut().unwrap();
+            g.rows.push(idx);
+        } else {
+            groups.push(FusionGroup {
+                rows: vec![idx],
+                anchor: matches!(info.kind.as_str(), "conv" | "fc")
+                    .then_some(idx),
+            });
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn out_hw_alexnet_conv1() {
+        assert_eq!(out_hw((227, 227), (11, 11), (4, 4), (0, 0)), (55, 55));
+    }
+
+    #[test]
+    fn out_hw_same_padding() {
+        assert_eq!(out_hw((13, 13), (3, 3), (1, 1), (1, 1)), (13, 13));
+    }
+
+    #[test]
+    fn shape_numel_and_bytes() {
+        assert_eq!(Shape::Chw(3, 4, 5).numel(), 60);
+        assert_eq!(Shape::Chw(3, 4, 5).bytes_f32(), 240);
+        assert_eq!(Shape::Flat(10).numel(), 10);
+    }
+
+    #[test]
+    fn propagate_panics_on_unknown_input() {
+        let m = Model {
+            name: "bad".into(),
+            in_shape: (1, 4, 4),
+            layers: vec![Layer::new(
+                "e",
+                LayerKind::Eltwise,
+            )
+            .with_input("nope")],
+        };
+        let r = std::panic::catch_unwind(|| m.propagate());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fusion_groups_alexnet_shape() {
+        // AlexNet: 5 conv groups (conv1+lrn+pool, conv2+lrn+pool, conv3,
+        // conv4, conv5+pool+flatten) + 3 fc groups = 8 "layers" — the
+        // paper calls AlexNet an 8-layer network.
+        let m = models::alexnet();
+        let groups = fusion_groups(&m);
+        let anchored =
+            groups.iter().filter(|g| g.anchor.is_some()).count();
+        assert_eq!(anchored, 8);
+    }
+
+    #[test]
+    fn fused_rows_cover_all_layers_once() {
+        for name in models::model_names() {
+            let m = models::by_name(name).unwrap();
+            let infos = m.propagate();
+            let groups = fusion_groups(&m);
+            let mut seen = vec![false; infos.len()];
+            for g in &groups {
+                for &r in &g.rows {
+                    assert!(!seen[r], "{name}: row {r} in two groups");
+                    seen[r] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "{name}: uncovered rows");
+        }
+    }
+}

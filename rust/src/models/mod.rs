@@ -1,0 +1,16 @@
+//! CNN model IR: layer graph, shape propagation, MAC/param accounting.
+//!
+//! This is the rust twin of `python/compile/model.py` + `nets.py`.  The
+//! accounting is a *contract*: `cargo test` cross-checks every layer row
+//! against `artifacts/manifest.json` so the numbers behind Table 1,
+//! Fig. 1 and the GOPS columns are provably identical on both sides of
+//! the AOT boundary.
+
+mod layer;
+mod nets;
+
+pub use layer::{
+    fusion_groups, FusionGroup, Layer, LayerInfo, LayerKind, Model,
+    PoolMode, Shape,
+};
+pub use nets::{alexnet, alexnet1c, by_name, model_names, resnet50, tinynet, vgg11, vgg16};

@@ -1,0 +1,300 @@
+//! Network builders — rust twins of `python/compile/nets.py`.
+//!
+//! Layer names, order and geometry must match the python side exactly:
+//! the manifest cross-check test asserts per-row equality of MACs,
+//! params and shapes.
+
+use super::layer::{Layer, LayerKind, Model, PoolMode};
+
+fn conv(
+    name: &str,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    relu: bool,
+) -> Layer {
+    Layer::new(
+        name,
+        LayerKind::Conv {
+            out_ch,
+            kernel: (k, k),
+            stride: (stride, stride),
+            padding: (pad, pad),
+            groups,
+            relu,
+        },
+    )
+}
+
+fn pool(name: &str, mode: PoolMode, k: usize, stride: usize, pad: usize) -> Layer {
+    Layer::new(
+        name,
+        LayerKind::Pool {
+            mode,
+            kernel: (k, k),
+            stride: (stride, stride),
+            padding: (pad, pad),
+        },
+    )
+}
+
+fn lrn(name: &str) -> Layer {
+    Layer::new(name, LayerKind::Lrn { n: 5 })
+}
+
+fn fc(name: &str, out: usize, relu: bool) -> Layer {
+    Layer::new(name, LayerKind::Fc { out, relu })
+}
+
+/// Original two-column AlexNet (groups=2 on conv2/4/5), 227x227 input.
+/// 0.724 GMACs = 1.45 GOPs — the op count the paper's Table 1 implies.
+pub fn alexnet() -> Model {
+    alexnet_with_groups("alexnet", 2)
+}
+
+/// Single-column CaffeNet variant (1.135 GMACs), kept for ablations.
+pub fn alexnet1c() -> Model {
+    alexnet_with_groups("alexnet1c", 1)
+}
+
+fn alexnet_with_groups(name: &str, g: usize) -> Model {
+    Model {
+        name: name.to_string(),
+        in_shape: (3, 227, 227),
+        layers: vec![
+            conv("conv1", 96, 11, 4, 0, 1, true),
+            lrn("norm1"),
+            pool("pool1", PoolMode::Max, 3, 2, 0),
+            conv("conv2", 256, 5, 1, 2, g, true),
+            lrn("norm2"),
+            pool("pool2", PoolMode::Max, 3, 2, 0),
+            conv("conv3", 384, 3, 1, 1, 1, true),
+            conv("conv4", 384, 3, 1, 1, g, true),
+            conv("conv5", 256, 3, 1, 1, g, true),
+            pool("pool5", PoolMode::Max, 3, 2, 0),
+            Layer::new("flatten", LayerKind::Flatten),
+            fc("fc6", 4096, true),
+            fc("fc7", 4096, true),
+            fc("fc8", 1000, false),
+        ],
+    }
+}
+
+fn vgg(name: &str, cfg: &[i32]) -> Model {
+    let mut layers = Vec::new();
+    let (mut ci, mut pi) = (0, 0);
+    for &v in cfg {
+        if v < 0 {
+            pi += 1;
+            layers.push(pool(&format!("pool{pi}"), PoolMode::Max, 2, 2, 0));
+        } else {
+            ci += 1;
+            layers.push(conv(&format!("conv{ci}"), v as usize, 3, 1, 1, 1, true));
+        }
+    }
+    layers.push(Layer::new("flatten", LayerKind::Flatten));
+    layers.push(fc("fc6", 4096, true));
+    layers.push(fc("fc7", 4096, true));
+    layers.push(fc("fc8", 1000, false));
+    Model { name: name.to_string(), in_shape: (3, 224, 224), layers }
+}
+
+/// VGG-11 (configuration A) — the Fig. 1 model.
+pub fn vgg11() -> Model {
+    vgg("vgg11", &[64, -1, 128, -1, 256, 256, -1, 512, 512, -1, 512, 512, -1])
+}
+
+/// VGG-16 (configuration D).
+pub fn vgg16() -> Model {
+    vgg(
+        "vgg16",
+        &[64, 64, -1, 128, 128, -1, 256, 256, 256, -1,
+          512, 512, 512, -1, 512, 512, 512, -1],
+    )
+}
+
+/// TinyNet — the fast integration-test model (3x16x16 input).
+pub fn tinynet() -> Model {
+    Model {
+        name: "tinynet".to_string(),
+        in_shape: (3, 16, 16),
+        layers: vec![
+            conv("conv1", 8, 3, 1, 1, 1, true),
+            pool("pool1", PoolMode::Max, 2, 2, 0),
+            conv("conv2", 16, 3, 1, 1, 1, true),
+            pool("pool2", PoolMode::Max, 2, 2, 0),
+            Layer::new("flatten", LayerKind::Flatten),
+            fc("fc1", 32, true),
+            fc("fc2", 10, false),
+        ],
+    }
+}
+
+/// ResNet-50 (v1): (blocks, mid, out, first-stride) per stage.
+const R50_STAGES: [(usize, usize, usize, usize); 4] =
+    [(3, 64, 256, 1), (4, 128, 512, 2), (6, 256, 1024, 2), (3, 512, 2048, 2)];
+
+/// ResNet-50, BN folded into convs (inference), eltwise shortcuts.
+pub fn resnet50() -> Model {
+    let mut layers = vec![
+        conv("conv1", 64, 7, 2, 3, 1, true),
+        pool("pool1", PoolMode::Max, 3, 2, 1),
+    ];
+    // Name of the layer producing each block's input (for proj branches).
+    let mut block_in = "pool1".to_string();
+    for (si, &(blocks, mid, out, stride0)) in R50_STAGES.iter().enumerate() {
+        let si = si + 1;
+        for bi in 0..blocks {
+            let stride = if bi == 0 { stride0 } else { 1 };
+            let p = format!("layer{si}.{bi}");
+            layers.push(conv(&format!("{p}.conv1"), mid, 1, stride, 0, 1, true));
+            layers.push(conv(&format!("{p}.conv2"), mid, 3, 1, 1, 1, true));
+            layers.push(conv(&format!("{p}.conv3"), out, 1, 1, 0, 1, false));
+            if bi == 0 {
+                layers.push(
+                    conv(&format!("{p}.proj"), out, 1, stride, 0, 1, false)
+                        .with_input(&block_in),
+                );
+            }
+            layers.push(Layer::new(&format!("{p}.add"), LayerKind::Eltwise));
+            block_in = format!("{p}.add");
+        }
+    }
+    layers.push(pool("avgpool", PoolMode::Avg, 7, 7, 0));
+    layers.push(Layer::new("flatten_gap", LayerKind::Flatten));
+    layers.push(fc("fc", 1000, false));
+    Model { name: "resnet50".to_string(), in_shape: (3, 224, 224), layers }
+}
+
+/// All registered model names.
+pub fn model_names() -> &'static [&'static str] {
+    &["alexnet", "alexnet1c", "vgg11", "vgg16", "resnet50", "tinynet"]
+}
+
+/// Look a model up by name.
+pub fn by_name(name: &str) -> Option<Model> {
+    match name {
+        "alexnet" => Some(alexnet()),
+        "alexnet1c" => Some(alexnet1c()),
+        "vgg11" => Some(vgg11()),
+        "vgg16" => Some(vgg16()),
+        "resnet50" => Some(resnet50()),
+        "tinynet" => Some(tinynet()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Shape;
+
+    #[test]
+    fn alexnet_totals_match_python() {
+        let m = alexnet();
+        assert_eq!(m.total_macs(), 724_406_816);
+        assert_eq!(m.total_params(), 60_965_224);
+        // The paper's implied AlexNet op count: ~1.45 GOPs.
+        let gops = m.total_ops() as f64 / 1e9;
+        assert!((gops - 1.449).abs() < 0.01, "gops={gops}");
+    }
+
+    #[test]
+    fn alexnet1c_totals() {
+        let m = alexnet1c();
+        assert!((m.total_macs() as f64 / 1e9 - 1.135).abs() < 0.01);
+    }
+
+    #[test]
+    fn vgg11_totals_match_literature() {
+        let m = vgg11();
+        assert!((m.total_macs() as f64 / 1e9 - 7.609).abs() < 0.02);
+        assert!((m.total_params() as f64 / 1e6 - 132.86).abs() < 0.1);
+    }
+
+    #[test]
+    fn vgg16_totals_match_literature() {
+        let m = vgg16();
+        assert!((m.total_macs() as f64 / 1e9 - 15.47).abs() < 0.05);
+        assert!((m.total_params() as f64 / 1e6 - 138.36).abs() < 0.1);
+    }
+
+    #[test]
+    fn resnet50_totals_match_literature() {
+        let m = resnet50();
+        assert!((m.total_macs() as f64 / 1e9 - 3.858).abs() < 0.03);
+        assert!((m.total_params() as f64 / 1e6 - 25.53).abs() < 0.2);
+    }
+
+    #[test]
+    fn resnet50_has_53_convs_and_projection_shapes() {
+        let m = resnet50();
+        let infos = m.propagate();
+        let convs = infos.iter().filter(|i| i.kind == "conv").count();
+        assert_eq!(convs, 53);
+        let by_name: std::collections::HashMap<_, _> =
+            infos.iter().map(|i| (i.name.as_str(), i)).collect();
+        assert_eq!(by_name["conv1"].out_shape, Shape::Chw(64, 112, 112));
+        assert_eq!(by_name["pool1"].out_shape, Shape::Chw(64, 56, 56));
+        assert_eq!(
+            by_name["layer1.0.proj"].in_shape,
+            Shape::Chw(64, 56, 56)
+        );
+        assert_eq!(
+            by_name["layer4.2.conv3"].out_shape,
+            Shape::Chw(2048, 7, 7)
+        );
+        assert_eq!(by_name["fc"].out_shape, Shape::Flat(1000));
+    }
+
+    #[test]
+    fn alexnet_shapes() {
+        let m = alexnet();
+        let infos = m.propagate();
+        let by: std::collections::HashMap<_, _> =
+            infos.iter().map(|i| (i.name.as_str(), i)).collect();
+        assert_eq!(by["conv1"].out_shape, Shape::Chw(96, 55, 55));
+        assert_eq!(by["pool2"].out_shape, Shape::Chw(256, 13, 13));
+        assert_eq!(by["pool5"].out_shape, Shape::Chw(256, 6, 6));
+        assert_eq!(by["flatten"].out_shape, Shape::Flat(9216));
+        assert_eq!(by["fc8"].out_shape, Shape::Flat(1000));
+    }
+
+    #[test]
+    fn fig1_conv_fc_dominate_vgg11() {
+        // Fig. 1's claim: conv+fc hold >99% of weights and operations.
+        let infos = vgg11().propagate();
+        let total_p: u64 = infos.iter().map(|i| i.params).sum();
+        let total_m: u64 = infos.iter().map(|i| i.macs).sum();
+        let cf_p: u64 = infos
+            .iter()
+            .filter(|i| i.kind == "conv" || i.kind == "fc")
+            .map(|i| i.params)
+            .sum();
+        let cf_m: u64 = infos
+            .iter()
+            .filter(|i| i.kind == "conv" || i.kind == "fc")
+            .map(|i| i.macs)
+            .sum();
+        assert!(cf_p as f64 / total_p as f64 > 0.99);
+        assert!(cf_m as f64 / total_m as f64 > 0.99);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in model_names() {
+            let m = by_name(name).unwrap();
+            assert_eq!(&m.name, name);
+            assert!(m.total_params() > 0);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn weight_bytes_alexnet_is_244mb() {
+        // Matches the exported artifacts/alexnet.weights.bin size.
+        assert_eq!(alexnet().weight_bytes(), 60_965_224 * 4);
+    }
+}

@@ -1,0 +1,132 @@
+//! Fig. 1 — distribution of parameters and operations across layers.
+//!
+//! The paper plots, for VGG-11, how weights concentrate in FC layers
+//! while operations concentrate in conv layers (motivating why the
+//! accelerator focuses on those two layer types).
+
+use crate::models::Model;
+
+/// Share of parameters/ops per layer kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KindShare {
+    pub kind: String,
+    pub params: u64,
+    pub macs: u64,
+    pub param_frac: f64,
+    pub ops_frac: f64,
+}
+
+/// Aggregate a model into per-kind shares (conv / fc / other).
+pub fn fig1_distribution(model: &Model) -> Vec<KindShare> {
+    let infos = model.propagate();
+    let total_p: u64 = infos.iter().map(|i| i.params).sum();
+    let total_m: u64 = infos.iter().map(|i| i.macs).sum();
+    let mut out = Vec::new();
+    for kind in ["conv", "fc", "other"] {
+        let sel = |k: &str| kind == "other" && k != "conv" && k != "fc"
+            || k == kind;
+        let p: u64 =
+            infos.iter().filter(|i| sel(&i.kind)).map(|i| i.params).sum();
+        let m: u64 =
+            infos.iter().filter(|i| sel(&i.kind)).map(|i| i.macs).sum();
+        out.push(KindShare {
+            kind: kind.to_string(),
+            params: p,
+            macs: m,
+            param_frac: p as f64 / total_p.max(1) as f64,
+            ops_frac: m as f64 / total_m.max(1) as f64,
+        });
+    }
+    out
+}
+
+/// Per-layer rows (the paper's bar chart), conv/fc layers only.
+pub fn fig1_layer_rows(model: &Model) -> Vec<(String, u64, u64)> {
+    model
+        .propagate()
+        .iter()
+        .filter(|i| i.kind == "conv" || i.kind == "fc")
+        .map(|i| (i.name.clone(), i.params, i.macs))
+        .collect()
+}
+
+/// ASCII rendering of Fig. 1: two bars per layer (weights %, ops %).
+pub fn render_fig1(model: &Model) -> String {
+    let rows = fig1_layer_rows(model);
+    let total_p: u64 = rows.iter().map(|r| r.1).sum();
+    let total_m: u64 = rows.iter().map(|r| r.2).sum();
+    let mut s = format!(
+        "Fig. 1 — {} distribution of parameters and operations\n\
+         {:<10}{:>10}{:>10}   bars: W=weights share, O=ops share\n",
+        model.name, "layer", "weights%", "ops%"
+    );
+    for (name, p, m) in &rows {
+        let pf = *p as f64 / total_p as f64 * 100.0;
+        let mf = *m as f64 / total_m as f64 * 100.0;
+        let bar = |f: f64, c: char| -> String {
+            std::iter::repeat(c).take((f / 2.0).round() as usize).collect()
+        };
+        s.push_str(&format!(
+            "{name:<10}{pf:>9.1}%{mf:>9.1}%   W|{}\n{:>32}O|{}\n",
+            bar(pf, '#'),
+            "",
+            bar(mf, '=')
+        ));
+    }
+    let shares = fig1_distribution(model);
+    s.push_str("\nby kind:\n");
+    for k in &shares {
+        s.push_str(&format!(
+            "  {:<6} weights {:>5.1}%  ops {:>5.1}%\n",
+            k.kind,
+            k.param_frac * 100.0,
+            k.ops_frac * 100.0
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn vgg11_fc_dominates_weights_conv_dominates_ops() {
+        // Fig. 1's exact message.
+        let d = fig1_distribution(&models::vgg11());
+        let by: std::collections::HashMap<_, _> =
+            d.iter().map(|k| (k.kind.as_str(), k)).collect();
+        assert!(by["fc"].param_frac > 0.5, "{}", by["fc"].param_frac);
+        assert!(by["conv"].ops_frac > 0.9, "{}", by["conv"].ops_frac);
+        // conv+fc together >99% of both (the acceleration argument).
+        let cf_p = by["conv"].param_frac + by["fc"].param_frac;
+        let cf_o = by["conv"].ops_frac + by["fc"].ops_frac;
+        assert!(cf_p > 0.99 && cf_o > 0.99);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        for name in ["alexnet", "vgg11", "resnet50"] {
+            let d = fig1_distribution(&models::by_name(name).unwrap());
+            let p: f64 = d.iter().map(|k| k.param_frac).sum();
+            let o: f64 = d.iter().map(|k| k.ops_frac).sum();
+            assert!((p - 1.0).abs() < 1e-9, "{name} params {p}");
+            assert!((o - 1.0).abs() < 1e-9, "{name} ops {o}");
+        }
+    }
+
+    #[test]
+    fn vgg11_has_11_weight_layers() {
+        // "VGG with 11 layers" = 8 conv + 3 fc.
+        assert_eq!(fig1_layer_rows(&models::vgg11()).len(), 11);
+    }
+
+    #[test]
+    fn render_mentions_every_layer() {
+        let txt = render_fig1(&models::vgg11());
+        assert!(txt.contains("conv1"));
+        assert!(txt.contains("fc8"));
+        assert!(txt.contains("by kind:"));
+    }
+}

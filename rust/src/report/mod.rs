@@ -1,0 +1,8 @@
+//! Report renderers: regenerate the paper's tables and figures as text
+//! (shared by the CLI, examples, and benches).
+
+pub mod fig1;
+pub mod table1;
+
+pub use fig1::{fig1_distribution, render_fig1, KindShare};
+pub use table1::{render_table1, table1_rows};

@@ -1,0 +1,153 @@
+//! Table 1 — comparison with prior FPGA accelerators on AlexNet.
+//!
+//! Five columns: FPGA2016a (Suda), FPGA2015 (Zhang), FPGA2016b
+//! (PipeCNN), FFCNN on Arria 10, FFCNN on Stratix 10.  Every row is
+//! *computed* from the respective design's cost model (DESIGN.md §2) —
+//! GOPS is derived consistently as `executed ops / time`, which the
+//! paper itself does not do uniformly (see EXPERIMENTS.md §T1 notes).
+
+use crate::baselines::{
+    fpga2015::Fpga2015, fpga2016a::Fpga2016a, pipecnn::PipeCnn,
+    BaselineModel, DesignReport,
+};
+use crate::fpga::device::{ARRIA10, STRATIX10};
+use crate::fpga::resources::resource_usage;
+use crate::fpga::timing::{
+    ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
+    OverlapPolicy,
+};
+use crate::models::Model;
+
+/// FFCNN (this work) on one of our devices.
+///
+/// FFCNN runs with cross-group prefetching (`OverlapPolicy::Full`):
+/// the paper's deeply-cascaded kernel chain keeps MemRd streaming the
+/// next group's weights while Conv drains the current one, which is
+/// precisely its structural advantage over PipeCNN's per-group double
+/// buffering (evaluated with `WithinGroup` in `baselines::pipecnn`).
+fn ffcnn_report(
+    model: &Model,
+    device: &'static crate::fpga::device::DeviceProfile,
+    params: crate::fpga::timing::DesignParams,
+    label: &str,
+) -> DesignReport {
+    let t = simulate_model(model, device, &params, 1, OverlapPolicy::Full);
+    let usage = resource_usage(&params, device);
+    DesignReport::new(
+        label,
+        device.device,
+        &format!("{}K LUTs / {} DSP", device.luts_k, device.dsps),
+        "OpenCL",
+        device.fmax_mhz,
+        "Float",
+        t.time_per_image_ms(),
+        model.total_ops() as f64,
+        usage.dsps,
+    )
+}
+
+/// All five Table 1 rows for a model (the paper uses AlexNet).
+pub fn table1_rows(model: &Model) -> Vec<DesignReport> {
+    vec![
+        Fpga2016a.evaluate(model),
+        Fpga2015.evaluate(model),
+        PipeCnn.evaluate(model),
+        ffcnn_report(model, &ARRIA10, ffcnn_arria10_params(), "This work (Arria 10)"),
+        ffcnn_report(
+            model,
+            &STRATIX10,
+            ffcnn_stratix10_params(),
+            "This work (Stratix 10)",
+        ),
+    ]
+}
+
+/// Render rows in the paper's layout (designs as columns).
+pub fn render_table1(rows: &[DesignReport]) -> String {
+    let mut s = String::new();
+    let col = 22usize;
+    let pad = |v: &str| format!("{v:>col$}");
+    let line = |label: &str, f: &dyn Fn(&DesignReport) -> String| {
+        let mut l = format!("{label:<20}");
+        for r in rows {
+            l.push_str(&pad(&f(r)));
+        }
+        l.push('\n');
+        l
+    };
+    s.push_str(&line("Design", &|r| r.design.clone()));
+    s.push_str(&line("Device", &|r| r.device.clone()));
+    s.push_str(&line("Capacity", &|r| r.capacity.clone()));
+    s.push_str(&line("Scheme", &|r| r.scheme.clone()));
+    s.push_str(&line("Frequency", &|r| format!("{:.0} MHz", r.freq_mhz)));
+    s.push_str(&line("Precision", &|r| r.precision.clone()));
+    s.push_str(&line("Classif. time", &|r| format!("{:.1} ms", r.time_ms)));
+    s.push_str(&line("Throughput", &|r| format!("{:.1} GOPS", r.gops)));
+    s.push_str(&line("DSP consumed", &|r| format!("{}", r.dsps)));
+    s.push_str(&line("Perf. density", &|r| {
+        format!("{:.3} GOPS/DSP", r.gops_per_dsp)
+    }));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn five_designs_present() {
+        let rows = table1_rows(&models::alexnet());
+        assert_eq!(rows.len(), 5);
+        assert!(rows[3].design.contains("Arria"));
+        assert!(rows[4].design.contains("Stratix"));
+    }
+
+    #[test]
+    fn this_work_wins_time_and_density() {
+        // The paper's headline: Stratix-10 FFCNN has the best
+        // classification time AND the best performance density.
+        let rows = table1_rows(&models::alexnet());
+        let s10 = &rows[4];
+        for other in &rows[..4] {
+            assert!(
+                s10.time_ms < other.time_ms,
+                "{} {:.1}ms vs s10 {:.1}ms",
+                other.design,
+                other.time_ms,
+                s10.time_ms
+            );
+            assert!(
+                s10.gops_per_dsp > other.gops_per_dsp,
+                "{} {:.3} vs s10 {:.3}",
+                other.design,
+                other.gops_per_dsp,
+                s10.gops_per_dsp
+            );
+        }
+    }
+
+    #[test]
+    fn stratix10_density_factor_over_baselines_matches_paper_shape() {
+        // Paper: 0.53 vs 0.21 (PipeCNN) ≈ 2.5x, vs 0.13 (Suda) ≈ 4x.
+        // Our consistent accounting must preserve a >=1.5x / >=2.5x gap.
+        let rows = table1_rows(&models::alexnet());
+        let s10 = rows[4].gops_per_dsp;
+        let pipecnn = rows[2].gops_per_dsp;
+        let suda = rows[0].gops_per_dsp;
+        assert!(s10 / pipecnn > 1.5, "{}", s10 / pipecnn);
+        assert!(s10 / suda > 2.5, "{}", s10 / suda);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let rows = table1_rows(&models::alexnet());
+        let txt = render_table1(&rows);
+        for key in [
+            "Design", "Frequency", "Classif. time", "Throughput",
+            "DSP consumed", "Perf. density", "Arria 10", "Stratix 10",
+        ] {
+            assert!(txt.contains(key), "missing {key}");
+        }
+    }
+}

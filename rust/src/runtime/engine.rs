@@ -1,0 +1,284 @@
+//! The PJRT execution engine (adapted from /opt/xla-example/load_hlo).
+//!
+//! Lifecycle per artifact:
+//! 1. `HloModuleProto::from_text_file` — parse the HLO text;
+//! 2. `client.compile` — JIT once, cached;
+//! 3. weights → `PjRtBuffer`s once per *model* (shared by all batch
+//!    variants of that model);
+//! 4. per request: upload the input batch, `execute_b`, download logits.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::Result;
+
+/// Cumulative execution statistics (perf pass instrumentation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    /// Time uploading input literals/buffers, µs.
+    pub upload_us: u64,
+    /// Time inside PJRT execute, µs.
+    pub execute_us: u64,
+    /// Time downloading outputs, µs.
+    pub download_us: u64,
+    /// One-time compile time, µs.
+    pub compile_us: u64,
+}
+
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Device-resident weight buffers, argument order.
+    weights: Rc<Vec<xla::PjRtBuffer>>,
+}
+
+/// Single-threaded PJRT engine (deliberately `!Send`; see module docs).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    loaded: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+    /// Weight buffers shared across artifacts of the same model.
+    model_weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    stats: RefCell<ExecStats>,
+}
+
+impl Engine {
+    /// Open an artifact directory (`make artifacts` output).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            loaded: RefCell::new(HashMap::new()),
+            model_weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    /// Upload a model's weights once, returning device buffers.
+    fn weights_for(&self, art: &ArtifactMeta) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
+        if let Some(w) = self.model_weights.borrow().get(&art.model) {
+            return Ok(w.clone());
+        }
+        let blob = self.manifest.read_weights(art)?;
+        let mut bufs = Vec::with_capacity(art.params.len());
+        for p in &art.params {
+            let slice = &blob[p.offset..p.offset + p.numel];
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(slice, &p.shape, None)
+                .map_err(|e| anyhow!("uploading {}: {e}", p.name))?;
+            bufs.push(buf);
+        }
+        let rc = Rc::new(bufs);
+        self.model_weights
+            .borrow_mut()
+            .insert(art.model.clone(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Pre-compile an artifact and upload its weights (warm the cache).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.load(name).map(|_| ())
+    }
+
+    /// Compile (once) and cache an artifact.
+    fn load(&self, name: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(l) = self.loaded.borrow().get(name) {
+            return Ok(l.clone());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let hlo_path = self.manifest.path_of(&meta.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let weights = self
+            .weights_for(&meta)
+            .with_context(|| format!("weights for {name}"))?;
+        self.stats.borrow_mut().compile_us +=
+            t0.elapsed().as_micros() as u64;
+        let loaded = Rc::new(LoadedArtifact { exe, meta, weights });
+        self.loaded
+            .borrow_mut()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Execute an artifact on an input batch; returns flat f32 logits.
+    pub fn execute(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let loaded = self.load(name)?;
+        let meta = &loaded.meta;
+        if input.len() != meta.input.numel() {
+            return Err(anyhow!(
+                "{name}: input has {} elements, artifact wants {:?}",
+                input.len(),
+                meta.input.shape
+            ));
+        }
+
+        let t0 = Instant::now();
+        let in_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(input, &meta.input.shape, None)
+            .map_err(|e| anyhow!("uploading input: {e}"))?;
+        let t1 = Instant::now();
+
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(loaded.weights.len() + 1);
+        args.extend(loaded.weights.iter());
+        args.push(&in_buf);
+        let result = loaded
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let t2 = Instant::now();
+
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output: {e}"))?;
+        // aot.py lowers with return_tuple=True: outputs are a 1-tuple.
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling output: {e}"))?;
+        let values =
+            out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+        let t3 = Instant::now();
+
+        if values.len() != meta.output.numel() {
+            return Err(anyhow!(
+                "{name}: output has {} elements, manifest says {:?}",
+                values.len(),
+                meta.output.shape
+            ));
+        }
+
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.upload_us += (t1 - t0).as_micros() as u64;
+        s.execute_us += (t2 - t1).as_micros() as u64;
+        s.download_us += (t3 - t2).as_micros() as u64;
+        Ok(values)
+    }
+
+    /// Artifact names available for a model, sorted by batch.
+    pub fn artifacts_for_model(
+        &self,
+        model: &str,
+        conv_impl: &str,
+    ) -> Vec<ArtifactMeta> {
+        let mut v: Vec<ArtifactMeta> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.conv_impl == conv_impl)
+            .cloned()
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+
+    fn engine_or_skip() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn tinynet_pallas_matches_golden() {
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_pallas").unwrap().clone();
+        let (input, expect) = e.manifest().read_golden(&art).unwrap();
+        let got = e.execute("tinynet_b1_pallas", &input).unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (g, w) in got.iter().zip(&expect) {
+            assert!(
+                (g - w).abs() <= 1e-4 + 1e-4 * w.abs(),
+                "got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn tinynet_pallas_and_jnp_agree() {
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_jnp").unwrap().clone();
+        let (input, _) = e.manifest().read_golden(&art).unwrap();
+        let a = e.execute("tinynet_b1_pallas", &input).unwrap();
+        let b = e.execute("tinynet_b1_jnp", &input).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-4 + 1e-4 * y.abs());
+        }
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let Some(e) = engine_or_skip() else { return };
+        let err = e.execute("tinynet_b1_pallas", &[0.0; 7]).unwrap_err();
+        assert!(err.to_string().contains("input has 7"));
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let Some(e) = engine_or_skip() else { return };
+        assert!(e.execute("nope_b1_jnp", &[]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate_and_compile_cached() {
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_jnp").unwrap().clone();
+        let (input, _) = e.manifest().read_golden(&art).unwrap();
+        e.execute("tinynet_b1_jnp", &input).unwrap();
+        let c1 = e.stats().compile_us;
+        e.execute("tinynet_b1_jnp", &input).unwrap();
+        let s = e.stats();
+        assert_eq!(s.executions, 2);
+        assert_eq!(s.compile_us, c1, "second execute must not recompile");
+        assert!(s.execute_us > 0);
+    }
+
+    #[test]
+    fn artifacts_for_model_sorted_by_batch() {
+        let Some(e) = engine_or_skip() else { return };
+        let arts = e.artifacts_for_model("alexnet", "jnp");
+        assert!(arts.len() >= 2);
+        for w in arts.windows(2) {
+            assert!(w[0].batch < w[1].batch);
+        }
+    }
+}

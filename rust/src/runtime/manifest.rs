@@ -1,0 +1,376 @@
+//! `artifacts/manifest.json` schema — the contract with
+//! `python/compile/aot.py` (version 1).  Parsed with the in-tree JSON
+//! parser (`util::json`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+/// One exported parameter tensor inside a model weight blob.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in *elements* (f32) into the weight blob.
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// Tensor spec (shape + dtype).
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorMeta {
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: v
+                .opt("dtype")
+                .map(|d| d.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "f32".to_string()),
+        })
+    }
+}
+
+/// Golden input/output blob for integration tests.
+#[derive(Debug, Clone)]
+pub struct GoldenMeta {
+    pub file: String,
+    pub input_numel: usize,
+    pub output_numel: usize,
+    pub output_l2: f64,
+    pub output_first8: Vec<f64>,
+}
+
+/// One AOT artifact (HLO + weights + IO spec).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub model: String,
+    pub batch: usize,
+    pub conv_impl: String,
+    pub hlo: String,
+    pub hlo_sha256: String,
+    pub weights: String,
+    pub params: Vec<ParamMeta>,
+    pub input: TensorMeta,
+    pub output: TensorMeta,
+    pub golden: Option<GoldenMeta>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.as_usize_vec()?,
+                    offset: p.get("offset")?.as_usize()?,
+                    numel: p.get("numel")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let golden = match v.opt("golden") {
+            None => None,
+            Some(g) => Some(GoldenMeta {
+                file: g.get("file")?.as_str()?.to_string(),
+                input_numel: g.get("input_numel")?.as_usize()?,
+                output_numel: g.get("output_numel")?.as_usize()?,
+                output_l2: g.get("output_l2")?.as_f64()?,
+                output_first8: g
+                    .get("output_first8")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_f64())
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+        };
+        Ok(ArtifactMeta {
+            name: v.get("name")?.as_str()?.to_string(),
+            model: v.get("model")?.as_str()?.to_string(),
+            batch: v.get("batch")?.as_usize()?,
+            conv_impl: v.get("conv_impl")?.as_str()?.to_string(),
+            hlo: v.get("hlo")?.as_str()?.to_string(),
+            hlo_sha256: v.get("hlo_sha256")?.as_str()?.to_string(),
+            weights: v.get("weights")?.as_str()?.to_string(),
+            params,
+            input: TensorMeta::from_json(v.get("input")?)?,
+            output: TensorMeta::from_json(v.get("output")?)?,
+            golden,
+        })
+    }
+}
+
+/// Accounting row exported per layer by the python side.
+#[derive(Debug, Clone)]
+pub struct ManifestLayer {
+    pub name: String,
+    pub kind: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub macs: u64,
+    pub params: u64,
+    pub ops: u64,
+}
+
+/// Per-model accounting (the cross-check contract with `models`).
+#[derive(Debug, Clone)]
+pub struct ModelAccounting {
+    pub in_shape: Vec<usize>,
+    pub layers: Vec<ManifestLayer>,
+    pub total_macs: u64,
+    pub total_params: u64,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub seed: u64,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub models: HashMap<String, ModelAccounting>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let v = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let version = v.get("version")?.as_u64()?;
+        if version != 1 {
+            return Err(anyhow!("unsupported manifest version {version}"));
+        }
+        let artifacts = v
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut models = HashMap::new();
+        for (name, mv) in v.get("models")?.as_obj()? {
+            let layers = mv
+                .get("layers")?
+                .as_arr()?
+                .iter()
+                .map(|l| {
+                    Ok(ManifestLayer {
+                        name: l.get("name")?.as_str()?.to_string(),
+                        kind: l.get("kind")?.as_str()?.to_string(),
+                        in_shape: l.get("in_shape")?.as_usize_vec()?,
+                        out_shape: l.get("out_shape")?.as_usize_vec()?,
+                        macs: l.get("macs")?.as_u64()?,
+                        params: l.get("params")?.as_u64()?,
+                        ops: l.get("ops")?.as_u64()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelAccounting {
+                    in_shape: mv.get("in_shape")?.as_usize_vec()?,
+                    layers,
+                    total_macs: mv.get("total_macs")?.as_u64()?,
+                    total_params: mv.get("total_params")?.as_u64()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            version,
+            seed: v.get("seed")?.as_u64()?,
+            artifacts,
+            models,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact {name:?} not in manifest (have: {:?})",
+                    self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Absolute path of a file referenced by the manifest.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Read a model's weight blob (f32 little-endian).
+    pub fn read_weights(&self, art: &ArtifactMeta) -> Result<Vec<f32>> {
+        let path = self.path_of(&art.weights);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(bytes_to_f32(&bytes))
+    }
+
+    /// Read a golden blob: (input, expected_output).
+    pub fn read_golden(
+        &self,
+        art: &ArtifactMeta,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let g = art
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("{} has no golden blob", art.name))?;
+        let bytes = std::fs::read(self.path_of(&g.file))?;
+        let all = bytes_to_f32(&bytes);
+        if all.len() != g.input_numel + g.output_numel {
+            return Err(anyhow!(
+                "golden blob size mismatch: {} != {}+{}",
+                all.len(),
+                g.input_numel,
+                g.output_numel
+            ));
+        }
+        let (i, o) = all.split_at(g.input_numel);
+        Ok((i.to_vec(), o.to_vec()))
+    }
+}
+
+/// Little-endian byte buffer to f32 vector.
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+
+    fn manifest_or_skip() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn bytes_to_f32_roundtrip() {
+        let vals = [1.0f32, -2.5, 3.25e-3];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(bytes_to_f32(&bytes), vals);
+    }
+
+    #[test]
+    fn manifest_loads_and_has_expected_artifacts() {
+        let Some(m) = manifest_or_skip() else { return };
+        assert!(m.artifact("tinynet_b1_pallas").is_ok());
+        assert!(m.artifact("alexnet_b1_jnp").is_ok());
+        assert!(m.artifact("missing").is_err());
+    }
+
+    #[test]
+    fn param_offsets_contiguous() {
+        let Some(m) = manifest_or_skip() else { return };
+        for a in &m.artifacts {
+            let mut expect = 0usize;
+            for p in &a.params {
+                assert_eq!(p.offset, expect, "{}::{}", a.name, p.name);
+                assert_eq!(p.numel, p.shape.iter().product::<usize>());
+                expect += p.numel;
+            }
+        }
+    }
+
+    #[test]
+    fn weights_blob_matches_param_totals() {
+        let Some(m) = manifest_or_skip() else { return };
+        let a = m.artifact("tinynet_b1_pallas").unwrap();
+        let w = m.read_weights(a).unwrap();
+        let total: usize = a.params.iter().map(|p| p.numel).sum();
+        assert_eq!(w.len(), total);
+    }
+
+    #[test]
+    fn golden_blob_consistent_with_meta() {
+        let Some(m) = manifest_or_skip() else { return };
+        let a = m.artifact("tinynet_b1_pallas").unwrap();
+        let (input, output) = m.read_golden(a).unwrap();
+        let g = a.golden.as_ref().unwrap();
+        assert_eq!(input.len(), g.input_numel);
+        assert_eq!(output.len(), g.output_numel);
+        let l2 =
+            output.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((l2 - g.output_l2).abs() / g.output_l2 < 1e-4);
+    }
+
+    /// The cross-check contract: rust model IR accounting must equal
+    /// the python-side manifest accounting, row by row.
+    #[test]
+    fn rust_accounting_matches_python_manifest() {
+        let Some(m) = manifest_or_skip() else { return };
+        assert!(!m.models.is_empty());
+        for (name, acct) in &m.models {
+            let Some(model) = crate::models::by_name(name) else {
+                panic!("manifest model {name} unknown to rust IR");
+            };
+            let infos = model.propagate();
+            assert_eq!(
+                model.total_macs(),
+                acct.total_macs,
+                "{name}: total MACs mismatch"
+            );
+            assert_eq!(
+                model.total_params(),
+                acct.total_params,
+                "{name}: total params mismatch"
+            );
+            // Row-level check on conv/fc rows.
+            let py: HashMap<&str, &ManifestLayer> = acct
+                .layers
+                .iter()
+                .map(|l| (l.name.as_str(), l))
+                .collect();
+            for info in infos
+                .iter()
+                .filter(|i| i.kind == "conv" || i.kind == "fc")
+            {
+                let Some(pl) = py.get(info.name.as_str()) else {
+                    panic!("{name}: layer {} missing in manifest", info.name)
+                };
+                assert_eq!(info.macs, pl.macs, "{name}.{}", info.name);
+                assert_eq!(info.params, pl.params, "{name}.{}", info.name);
+                assert_eq!(
+                    info.out_shape.dims(),
+                    pl.out_shape,
+                    "{name}.{}",
+                    info.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them on the CPU PJRT client from the rust hot path.
+//!
+//! The interchange format is **HLO text** — jax ≥ 0.5 serialized protos
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! [`Engine`] owns a `PjRtClient` and is deliberately **not** `Send`
+//! (the crate's PJRT wrappers hold raw pointers): the coordinator gives
+//! each simulated board its own engine thread (`coordinator::board`).
+//!
+//! Hot-path design: model weights are uploaded to device buffers once
+//! per model (`PjRtBuffer`), and every request only uploads its input
+//! batch — `execute_b` then runs with zero weight copies.
+
+mod engine;
+mod manifest;
+
+pub use engine::{Engine, ExecStats};
+pub use manifest::{
+    ArtifactMeta, GoldenMeta, Manifest, ManifestLayer, ModelAccounting,
+    ParamMeta,
+};

@@ -1,0 +1,170 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`Bench`] to time closures with warmup,
+//! report min/median/mean, and emit both human and machine-readable
+//! (JSON lines) output — EXPERIMENTS.md rows come straight from this.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+    pub max_ns: u128,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns as f64 / 1e6
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("min_ns", Json::num(self.min_ns as f64)),
+            ("median_ns", Json::num(self.median_ns as f64)),
+            ("mean_ns", Json::num(self.mean_ns as f64)),
+            ("max_ns", Json::num(self.max_ns as f64)),
+        ])
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10} iters  median {:>12}  mean {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Bench runner: fixed warmup then timed iterations, budget-capped.
+pub struct Bench {
+    pub warmup: u32,
+    pub min_iters: u32,
+    pub max_iters: u32,
+    pub budget: Duration,
+    results: Vec<BenchResult>,
+    suite: String,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Single-core machine: modest defaults, overridable per call.
+        Bench {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget: Duration::from_secs(5),
+            results: Vec::new(),
+            suite: suite.to_string(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f`, which must return something observable (guards against
+    /// the optimizer deleting the body).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<u128> = Vec::new();
+        let started = Instant::now();
+        while (samples.len() as u32) < self.min_iters
+            || (started.elapsed() < self.budget
+                && (samples.len() as u32) < self.max_iters)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let r = BenchResult {
+            name: format!("{}/{}", self.suite, name),
+            iters: n as u32,
+            min_ns: samples[0],
+            median_ns: samples[n / 2],
+            mean_ns: samples.iter().sum::<u128>() / n as u128,
+            max_ns: samples[n - 1],
+        };
+        println!("{r}");
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print the machine-readable trailer (one JSON object per line).
+    pub fn finish(self) {
+        println!("--- {} results (json) ---", self.suite);
+        for r in &self.results {
+            println!("BENCHJSON {}", r.to_json().to_string());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("t").with_budget(Duration::from_millis(50));
+        b.min_iters = 3;
+        b.max_iters = 10;
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min_ns > 0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn result_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            min_ns: 1_500,
+            median_ns: 2_500_000,
+            mean_ns: 2_600_000,
+            max_ns: 3_000_000_000,
+        };
+        let s = format!("{r}");
+        assert!(s.contains("µs") || s.contains("ms"));
+        assert!((r.median_ms() - 2.5).abs() < 1e-9);
+        let j = r.to_json().to_string();
+        assert!(j.contains("median_ns"));
+    }
+}

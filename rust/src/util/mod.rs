@@ -1,0 +1,10 @@
+//! In-tree substrates for the offline build environment: a JSON
+//! parser/writer, a micro-benchmark harness, and a property-test
+//! runner.  (DESIGN.md §7: every dependency the system needs that the
+//! environment does not provide is built here.)
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+
+pub use json::Json;

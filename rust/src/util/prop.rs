@@ -1,0 +1,88 @@
+//! Tiny property-test runner (proptest is unavailable offline).
+//!
+//! [`forall`] drives a property over `n` seeded random cases; on
+//! failure it reports the failing seed so the case can be replayed
+//! deterministically (`FFCNN_PROP_SEED=...`).  Generators are plain
+//! closures over [`crate::data::Rng`].
+
+use crate::data::Rng;
+
+/// Number of cases per property (override with FFCNN_PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("FFCNN_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` seeded inputs from `gen`.
+/// Panics with the failing seed on the first counterexample.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let base: u64 = std::env::var("FFCNN_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xFFCC_2022);
+    for case in 0..default_cases() {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed}):\n\
+                 input = {input:#?}\n\
+                 replay with FFCNN_PROP_SEED={seed} FFCNN_PROP_CASES=1"
+            );
+        }
+    }
+}
+
+/// Uniform integer in [lo, hi] (inclusive).
+pub fn int_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+/// Pick one element of a slice.
+pub fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[(rng.next_u64() as usize) % xs.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("add-commutes", |r| (r.next_u64() >> 32, r.next_u64() >> 32),
+            |&(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        forall("always-false", |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn int_in_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = int_in(&mut r, 3, 9);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn pick_covers_all_elements() {
+        let mut r = Rng::new(2);
+        let xs = [1, 2, 3];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[*pick(&mut r, &xs) - 1] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

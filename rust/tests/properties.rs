@@ -1,0 +1,426 @@
+//! Property-based tests over the simulator, coordinator and util
+//! substrates (in-tree runner: `ffcnn::util::prop`).
+//!
+//! Each property runs 64 seeded cases by default; failures print the
+//! seed for deterministic replay (FFCNN_PROP_SEED / FFCNN_PROP_CASES).
+
+use ffcnn::coordinator::{argmax, plan_chunks, LatencyHistogram};
+use ffcnn::data::Rng;
+use ffcnn::fpga::channel::Channel;
+use ffcnn::fpga::device::{ARRIA10, DEVICES, STRATIX10};
+use ffcnn::fpga::resources::resource_usage;
+use ffcnn::fpga::timing::{simulate_model, DesignParams, OverlapPolicy};
+use ffcnn::models::{self, Layer, LayerKind, Model, Shape};
+use ffcnn::util::json::Json;
+use ffcnn::util::prop::{forall, int_in, pick};
+
+// ---------------------------------------------------------------- channel
+
+#[test]
+fn prop_channel_preserves_order_and_conserves_tokens() {
+    forall(
+        "channel-fifo",
+        |r| {
+            let cap = int_in(r, 1, 64);
+            let ops: Vec<bool> =
+                (0..200).map(|_| r.next_u64() % 2 == 0).collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut ch: Channel<u64> = Channel::new(*cap);
+            let mut next_push = 0u64;
+            let mut next_pop = 0u64;
+            for &is_push in ops {
+                if is_push {
+                    if ch.try_push(next_push).is_ok() {
+                        next_push += 1;
+                    }
+                } else if let Some(v) = ch.try_pop() {
+                    if v != next_pop {
+                        return false; // order violated
+                    }
+                    next_pop += 1;
+                }
+                if ch.len() > *cap {
+                    return false; // capacity violated
+                }
+            }
+            // conservation: pushed == popped + still-in-channel
+            next_push == next_pop + ch.len() as u64
+        },
+    );
+}
+
+#[test]
+fn prop_channel_stats_consistent() {
+    forall(
+        "channel-stats",
+        |r| {
+            let cap = int_in(r, 1, 8);
+            let n = int_in(r, 1, 100);
+            (cap, n)
+        },
+        |&(cap, n)| {
+            let mut ch: Channel<usize> = Channel::new(cap);
+            for i in 0..n {
+                let _ = ch.try_push(i);
+            }
+            while ch.try_pop().is_some() {}
+            let s = ch.stats();
+            s.pushes == s.pops
+                && s.pushes == n.min(cap) as u64
+                && s.max_occupancy <= cap
+        },
+    );
+}
+
+// ---------------------------------------------------------------- batcher
+
+#[test]
+fn prop_plan_chunks_conserves_and_respects_sizes() {
+    forall(
+        "plan-chunks",
+        |r| {
+            // random ascending size set always containing 1
+            let mut sizes = vec![1usize];
+            let mut s = 1usize;
+            for _ in 0..int_in(r, 0, 4) {
+                s += int_in(r, 1, 7);
+                sizes.push(s);
+            }
+            let n = int_in(r, 0, 200);
+            (n, sizes)
+        },
+        |(n, sizes)| {
+            let chunks = plan_chunks(*n, sizes);
+            let total: usize = chunks.iter().sum();
+            total == *n && chunks.iter().all(|c| sizes.contains(c))
+        },
+    );
+}
+
+#[test]
+fn prop_argmax_is_maximal() {
+    forall(
+        "argmax",
+        |r| {
+            let n = int_in(r, 1, 50);
+            (0..n).map(|_| r.next_gauss()).collect::<Vec<f32>>()
+        },
+        |xs| {
+            let i = argmax(xs);
+            xs.iter().all(|&v| v.is_nan() || xs[i] >= v)
+        },
+    );
+}
+
+// ---------------------------------------------------------------- metrics
+
+#[test]
+fn prop_histogram_quantiles_bounded_and_ordered() {
+    forall(
+        "latency-histogram",
+        |r| {
+            let n = int_in(r, 1, 300);
+            (0..n)
+                .map(|_| (r.next_f32() * 1e5) as u64 + 1)
+                .collect::<Vec<u64>>()
+        },
+        |samples| {
+            let mut h = LatencyHistogram::new();
+            for &s in samples {
+                h.record_us(s);
+            }
+            let sm = h.summary();
+            sm.count == samples.len() as u64
+                && sm.p50_ms <= sm.p95_ms + 1e-9
+                && sm.p95_ms <= sm.p99_ms + 1e-9
+                && sm.p99_ms <= sm.max_ms + 1e-9
+                && sm.max_ms
+                    == *samples.iter().max().unwrap() as f64 / 1e3
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_merge_equals_combined() {
+    forall(
+        "histogram-merge",
+        |r| {
+            let a: Vec<u64> =
+                (0..int_in(r, 1, 50)).map(|_| r.next_u64() % 100_000).collect();
+            let b: Vec<u64> =
+                (0..int_in(r, 1, 50)).map(|_| r.next_u64() % 100_000).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let mut ha = LatencyHistogram::new();
+            let mut hb = LatencyHistogram::new();
+            let mut hc = LatencyHistogram::new();
+            for &x in a {
+                ha.record_us(x);
+                hc.record_us(x);
+            }
+            for &x in b {
+                hb.record_us(x);
+                hc.record_us(x);
+            }
+            ha.merge(&hb);
+            ha.summary().count == hc.summary().count
+                && (ha.summary().p50_ms - hc.summary().p50_ms).abs() < 1e-9
+        },
+    );
+}
+
+// ---------------------------------------------------------------- timing
+
+#[test]
+fn prop_timing_monotone_in_batch() {
+    forall(
+        "timing-batch-monotone",
+        |r| {
+            let model =
+                *pick(r, &["alexnet", "resnet50", "vgg11", "tinynet"]);
+            let vec = *pick(r, &[4usize, 8, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            let b = int_in(r, 1, 8);
+            (model.to_string(), vec, lane, b)
+        },
+        |(model, vec, lane, b)| {
+            let m = models::by_name(model).unwrap();
+            let p = DesignParams::new(*vec, *lane);
+            let t1 = simulate_model(
+                &m, &STRATIX10, &p, *b, OverlapPolicy::WithinGroup,
+            );
+            let t2 = simulate_model(
+                &m, &STRATIX10, &p, b + 1, OverlapPolicy::WithinGroup,
+            );
+            // More images never take fewer total cycles, and per-image
+            // time never increases with batch.
+            t2.total_cycles >= t1.total_cycles
+                && t2.time_per_image_ms() <= t1.time_per_image_ms() + 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_timing_monotone_in_parallelism() {
+    forall(
+        "timing-parallelism-monotone",
+        |r| {
+            let vec = *pick(r, &[4usize, 8, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            (vec, lane)
+        },
+        |&(vec, lane)| {
+            let m = models::alexnet();
+            let t = |v, l| {
+                simulate_model(
+                    &m,
+                    &STRATIX10,
+                    &DesignParams::new(v, l),
+                    1,
+                    OverlapPolicy::WithinGroup,
+                )
+                .total_cycles
+            };
+            // Doubling either dimension never slows the design down.
+            t(vec * 2, lane) <= t(vec, lane)
+                && t(vec, lane * 2) <= t(vec, lane)
+        },
+    );
+}
+
+#[test]
+fn prop_overlap_ordering_all_models() {
+    forall(
+        "overlap-ordering",
+        |r| {
+            let model =
+                *pick(r, &["alexnet", "resnet50", "vgg16", "tinynet"]);
+            let vec = *pick(r, &[8usize, 16, 32]);
+            let lane = int_in(r, 1, 16);
+            (model.to_string(), vec, lane)
+        },
+        |(model, vec, lane)| {
+            let m = models::by_name(model).unwrap();
+            let p = DesignParams::new(*vec, *lane);
+            let c = |o| {
+                simulate_model(&m, &ARRIA10, &p, 1, o).total_cycles
+            };
+            c(OverlapPolicy::None) >= c(OverlapPolicy::WithinGroup)
+                && c(OverlapPolicy::WithinGroup)
+                    >= c(OverlapPolicy::Full)
+        },
+    );
+}
+
+#[test]
+fn prop_fusion_never_increases_traffic() {
+    forall(
+        "fusion-traffic",
+        |r| {
+            let model = *pick(
+                r,
+                &["alexnet", "alexnet1c", "resnet50", "vgg11", "tinynet"],
+            );
+            model.to_string()
+        },
+        |model| {
+            let m = models::by_name(model).unwrap();
+            let p = DesignParams::new(16, 11);
+            let t = simulate_model(
+                &m, &STRATIX10, &p, 1, OverlapPolicy::WithinGroup,
+            );
+            t.dram_bytes <= t.dram_bytes_unfused
+        },
+    );
+}
+
+// -------------------------------------------------------------- resources
+
+#[test]
+fn prop_resource_usage_monotone() {
+    forall(
+        "resources-monotone",
+        |r| {
+            let vec = int_in(r, 1, 64);
+            let lane = int_in(r, 1, 64);
+            let di = int_in(r, 0, DEVICES.len() - 1);
+            (vec, lane, di)
+        },
+        |&(vec, lane, di)| {
+            let d = DEVICES[di];
+            let u = resource_usage(&DesignParams::new(vec, lane), d);
+            let uv = resource_usage(&DesignParams::new(vec + 1, lane), d);
+            let ul = resource_usage(&DesignParams::new(vec, lane + 1), d);
+            uv.dsps >= u.dsps
+                && ul.dsps >= u.dsps
+                && uv.m20k_bytes >= u.m20k_bytes
+                && ul.luts_k >= u.luts_k
+        },
+    );
+}
+
+// ------------------------------------------------------------------ model
+
+#[test]
+fn prop_model_shapes_consistent() {
+    // Chain shape propagation: each layer's in_shape equals the
+    // previous non-branch layer's out_shape.
+    forall(
+        "shape-chaining",
+        |r| {
+            *pick(r, &["alexnet", "alexnet1c", "vgg11", "vgg16", "tinynet"])
+        },
+        |name| {
+            let m = models::by_name(name).unwrap();
+            let infos = m.propagate();
+            infos.windows(2).all(|w| w[0].out_shape == w[1].in_shape)
+        },
+    );
+}
+
+#[test]
+fn prop_random_conv_shapes_match_formula() {
+    forall(
+        "conv-shape-formula",
+        |r| {
+            let c = int_in(r, 1, 16);
+            let hw = int_in(r, 4, 40);
+            let f = int_in(r, 1, 32);
+            let k = *pick(r, &[1usize, 3, 5, 7]);
+            let s = int_in(r, 1, 3);
+            let p = int_in(r, 0, k / 2);
+            (c, hw, f, k, s, p)
+        },
+        |&(c, hw, f, k, s, p)| {
+            if hw + 2 * p < k {
+                return true; // degenerate, builder wouldn't allow
+            }
+            let m = Model {
+                name: "one".into(),
+                in_shape: (c, hw, hw),
+                layers: vec![Layer::new(
+                    "conv",
+                    LayerKind::Conv {
+                        out_ch: f,
+                        kernel: (k, k),
+                        stride: (s, s),
+                        padding: (p, p),
+                        groups: 1,
+                        relu: false,
+                    },
+                )],
+            };
+            let info = &m.propagate()[0];
+            let expect = (hw + 2 * p - k) / s + 1;
+            info.out_shape == Shape::Chw(f, expect, expect)
+                && info.macs
+                    == (f * c * k * k * expect * expect) as u64
+        },
+    );
+}
+
+// ------------------------------------------------------------------- json
+
+fn random_json(r: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { r.next_u64() % 4 } else { r.next_u64() % 6 } {
+        0 => Json::Null,
+        1 => Json::Bool(r.next_u64() % 2 == 0),
+        2 => Json::Num((r.next_u64() % 100_000) as f64),
+        3 => {
+            let n = int_in(r, 0, 8);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        *pick(r, &['a', 'b', '"', '\\', 'π', '\n', ' '])
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr(
+            (0..int_in(r, 0, 4))
+                .map(|_| random_json(r, depth - 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..int_in(r, 0, 4))
+                .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall(
+        "json-roundtrip",
+        |r| random_json(r, 3),
+        |v| match Json::parse(&v.to_string()) {
+            Ok(v2) => v2 == *v,
+            Err(_) => false,
+        },
+    );
+}
+
+// ------------------------------------------------------------------- data
+
+#[test]
+fn prop_trace_arrivals_monotone() {
+    forall(
+        "poisson-monotone",
+        |r| {
+            let n = int_in(r, 1, 200);
+            let rate = 1.0 + r.next_f32() as f64 * 500.0;
+            let seed = r.next_u64();
+            (n, rate, seed)
+        },
+        |&(n, rate, seed)| {
+            let tr = ffcnn::data::poisson_trace(n, rate, seed);
+            tr.len() == n
+                && tr.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s)
+                && tr.iter().all(|t| t.arrival_s.is_finite())
+        },
+    );
+}
