@@ -1,13 +1,21 @@
 //! Bench E2: full design-space exploration on both devices, printing
 //! the chosen points (the paper's "design space fully explored") and
 //! timing the sweep.
+//!
+//! The acceptance benchmark for the closed-form fast path lives here:
+//! VGG-16 at batch 16 swept with the pipeline simulator's fast path
+//! vs the O(tokens) exact oracle.  The suite (and the measured
+//! speedup) is written to `BENCH_dse.json` so the number is tracked
+//! across PRs.
 
+use std::path::Path;
 use std::time::Duration;
 
 use ffcnn::fpga::device::{ARRIA10, STRATIX10, STRATIXV};
-use ffcnn::fpga::dse;
+use ffcnn::fpga::dse::{self, Fidelity};
 use ffcnn::models;
 use ffcnn::util::bench::Bench;
+use ffcnn::util::Json;
 
 fn main() {
     let model = models::alexnet();
@@ -46,5 +54,43 @@ fn main() {
         let pts = dse::explore(&model, &STRATIX10, 1);
         dse::pareto(&pts).len()
     });
+
+    // ---- fast path vs token-exact oracle: VGG-16, batch 16 ----------
+    // The fast sweep gets normal statistics; the exact sweep is run
+    // once (it walks hundreds of millions of tokens per point).
+    let vgg = models::vgg16();
+    let fast_ns = b
+        .run("explore_vgg16_b16_pipeline_fast", || {
+            dse::explore_with(&vgg, &STRATIX10, 16, Fidelity::PipelineFast)
+                .len()
+        })
+        .median_ns;
+    b.warmup = 0;
+    b.min_iters = 1;
+    b.max_iters = 1;
+    let exact_ns = b
+        .run("explore_vgg16_b16_pipeline_exact", || {
+            dse::explore_with(&vgg, &STRATIX10, 16, Fidelity::PipelineExact)
+                .len()
+        })
+        .median_ns;
+    let speedup = exact_ns as f64 / fast_ns as f64;
+    println!(
+        "\nVGG-16 b16 sweep: fast {:.1} ms vs exact {:.1} ms -> {:.1}x",
+        fast_ns as f64 / 1e6,
+        exact_ns as f64 / 1e6,
+        speedup
+    );
+
+    b.save_json(
+        Path::new("BENCH_dse.json"),
+        vec![
+            ("dse_vgg16_b16_speedup_vs_exact", Json::num(speedup)),
+            ("dse_vgg16_b16_fast_ms", Json::num(fast_ns as f64 / 1e6)),
+            ("dse_vgg16_b16_exact_ms", Json::num(exact_ns as f64 / 1e6)),
+        ],
+    )
+    .expect("writing BENCH_dse.json");
+    println!("wrote BENCH_dse.json (speedup {speedup:.1}x)");
     b.finish();
 }

@@ -7,7 +7,7 @@
 use std::time::Duration;
 
 use ffcnn::fpga::device::{ARRIA10, STRATIX10};
-use ffcnn::fpga::pipeline::simulate_tokens;
+use ffcnn::fpga::pipeline::{simulate_tokens, simulate_tokens_exact};
 use ffcnn::fpga::timing::{
     ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
     OverlapPolicy,
@@ -53,6 +53,10 @@ fn main() {
     });
     b.run("token_resnet50", || {
         simulate_tokens(&resnet, &STRATIX10, &p, 1).total_cycles
+    });
+    // The O(tokens) oracle, for the fast-path speedup headline.
+    b.run("token_alexnet_exact_oracle", || {
+        simulate_tokens_exact(&alex, &STRATIX10, &p, 1).total_cycles
     });
 
     // Channel-depth ablation: deeper channels cost sim time linearly?

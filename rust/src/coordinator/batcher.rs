@@ -7,20 +7,29 @@
 //! batch sizes that actually exist as AOT artifacts (largest-fit,
 //! [`plan_chunks`]) — no padding, no recompilation.
 //!
+//! Zero-copy data plane: request images and reply logits are
+//! `Arc<[f32]>`, so submission, routing and reply fan-out only bump
+//! refcounts.  A single-request chunk hands its image straight to the
+//! board ([`BatchInput::Shared`]); multi-request chunks gather into a
+//! per-batcher staging buffer that the board returns after execution,
+//! so steady-state batch assembly allocates nothing.
+//!
 //! Pure std threads: the batcher is a thread consuming a bounded mpsc
 //! queue; replies travel over per-request rendezvous channels.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::board::{BatchResult, BoardHandle};
+use super::board::{BatchInput, BatchResult, BoardHandle};
 use crate::Result;
 
 /// One in-flight inference request.
 pub struct Request {
     pub id: u64,
-    /// Flat NCHW image, numel = C*H*W of the model input.
-    pub image: Vec<f32>,
+    /// Flat NCHW image, numel = C*H*W of the model input.  Shared:
+    /// never copied on the submit/route path.
+    pub image: Arc<[f32]>,
     pub submitted: Instant,
     pub reply: SyncSender<Result<Reply>>,
 }
@@ -29,7 +38,9 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Reply {
     pub id: u64,
-    pub logits: Vec<f32>,
+    /// This request's logits.  For batch-1 chunks this shares the
+    /// board's output buffer (no copy); clones only bump a refcount.
+    pub logits: Arc<[f32]>,
     pub argmax: usize,
     /// Batch this request was served in.
     pub batch: usize,
@@ -75,6 +86,9 @@ pub fn run_batcher(
     image_numel: usize,
     classes: usize,
 ) {
+    // Reusable gather buffer for multi-request chunks; the board hands
+    // it back inside the BatchResult so its capacity is recycled.
+    let mut staging: Vec<f32> = Vec::new();
     loop {
         // Block for the first request of a batch.
         let Ok(first) = rx.recv() else { break };
@@ -110,13 +124,27 @@ pub fn run_batcher(
 
         for chunk in plan_chunks(pending.len(), &cfg.sizes) {
             let reqs: Vec<Request> = pending.drain(..chunk).collect();
-            let mut input = Vec::with_capacity(chunk * image_numel);
-            for r in &reqs {
-                debug_assert_eq!(r.image.len(), image_numel);
-                input.extend_from_slice(&r.image);
-            }
+            let input = if chunk == 1 {
+                // Single-request chunk: share the image, copy nothing.
+                debug_assert_eq!(reqs[0].image.len(), image_numel);
+                BatchInput::Shared(reqs[0].image.clone())
+            } else {
+                staging.clear();
+                staging.reserve(chunk * image_numel);
+                for r in &reqs {
+                    debug_assert_eq!(r.image.len(), image_numel);
+                    staging.extend_from_slice(&r.image);
+                }
+                BatchInput::Staged(std::mem::take(&mut staging))
+            };
             let artifact = artifact_for_batch(chunk);
-            let result = board.execute(artifact, chunk, input);
+            let mut result = board.execute(artifact, chunk, input);
+            if let Ok(batch) = &mut result {
+                // Reclaim the staging buffer for the next gather.
+                if let Some(buf) = batch.staging.take() {
+                    staging = buf;
+                }
+            }
             scatter(reqs, result, board.index, classes);
         }
     }
@@ -131,9 +159,19 @@ fn scatter(
 ) {
     match result {
         Ok(batch) => {
+            let n = reqs.len();
             for (i, r) in reqs.into_iter().enumerate() {
-                let logits =
-                    batch.logits[i * classes..(i + 1) * classes].to_vec();
+                // Batch of one: the whole output buffer is this
+                // request's logits — share it.  Larger batches carve
+                // one small per-request slice (classes floats).
+                let logits: Arc<[f32]> =
+                    if n == 1 && batch.logits.len() == classes {
+                        batch.logits.clone()
+                    } else {
+                        Arc::from(
+                            &batch.logits[i * classes..(i + 1) * classes],
+                        )
+                    };
                 let argmax = argmax(&logits);
                 let latency_ms =
                     r.submitted.elapsed().as_secs_f64() * 1e3;
@@ -198,5 +236,76 @@ mod tests {
         assert_eq!(argmax(&[-1.0, -2.0]), 0);
         assert_eq!(argmax(&[]), 0);
         assert_eq!(argmax(&[0.0, f32::NAN, 2.0]), 2);
+    }
+
+    #[test]
+    fn shared_images_are_not_copied() {
+        // Two requests can share one image buffer; the Arc refcount
+        // proves the submit path never deep-copies.
+        let img: Arc<[f32]> = vec![0.5f32; 8].into();
+        let (tx, _rx) = std::sync::mpsc::sync_channel(1);
+        let r1 = Request {
+            id: 0,
+            image: img.clone(),
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        };
+        let r2 = Request {
+            id: 1,
+            image: img.clone(),
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        assert_eq!(Arc::strong_count(&img), 3);
+        assert!(Arc::ptr_eq(&r1.image, &r2.image));
+    }
+
+    #[test]
+    fn scatter_batch1_shares_the_output_buffer() {
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let req = Request {
+            id: 7,
+            image: vec![0.0f32; 4].into(),
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        let logits: Arc<[f32]> = vec![0.1f32, 0.9, 0.3].into();
+        let result = BatchResult {
+            logits: logits.clone(),
+            batch: 1,
+            host_ms: 0.1,
+            fpga_ms: 0.2,
+            staging: None,
+        };
+        scatter(vec![req], Ok(result), 0, 3);
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.argmax, 1);
+        assert!(Arc::ptr_eq(&reply.logits, &logits), "must share, not copy");
+    }
+
+    #[test]
+    fn scatter_multi_request_slices_per_request() {
+        let (tx1, rx1) = std::sync::mpsc::sync_channel(1);
+        let (tx2, rx2) = std::sync::mpsc::sync_channel(1);
+        let mk = |id, tx| Request {
+            id,
+            image: vec![0.0f32; 4].into(),
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        let result = BatchResult {
+            logits: vec![0.9f32, 0.1, 0.2, 0.8].into(),
+            batch: 2,
+            host_ms: 0.1,
+            fpga_ms: 0.2,
+            staging: None,
+        };
+        scatter(vec![mk(0, tx1), mk(1, tx2)], Ok(result), 0, 2);
+        let a = rx1.recv().unwrap().unwrap();
+        let b = rx2.recv().unwrap().unwrap();
+        assert_eq!(&a.logits[..], &[0.9, 0.1]);
+        assert_eq!(&b.logits[..], &[0.2, 0.8]);
+        assert_eq!(a.argmax, 0);
+        assert_eq!(b.argmax, 1);
     }
 }

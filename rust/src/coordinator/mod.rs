@@ -7,7 +7,9 @@
 //!
 //! - [`board`]   — one engine thread per simulated board (PJRT numerics
 //!   + FPGA cycle model timing, optionally pacing the board);
-//! - [`batcher`] — dynamic batching onto the AOT'd batch sizes;
+//! - [`batcher`] — dynamic batching onto the AOT'd batch sizes over a
+//!   zero-copy data plane (`Arc<[f32]>` images/logits, reusable
+//!   staging buffers — see the module docs);
 //! - [`router`]  — round-robin / least-outstanding board routing with
 //!   admission control;
 //! - [`service`] — the facade: `classify()`, `submit()`, `run_trace()`;
@@ -24,7 +26,7 @@ pub mod router;
 pub mod service;
 
 pub use batcher::{argmax, plan_chunks, Reply, Request};
-pub use board::{BoardHandle, BoardSpec, Pace};
+pub use board::{BatchInput, BatchResult, BoardHandle, BoardSpec, Pace};
 pub use metrics::{LatencyHistogram, LatencySummary};
 pub use router::{Policy, Router};
 pub use service::{InferenceService, PendingReply, ServeReport};

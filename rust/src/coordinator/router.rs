@@ -116,7 +116,12 @@ mod tests {
 
     fn dummy_request(id: u64) -> Request {
         let (tx, _rx) = mpsc::sync_channel(1);
-        Request { id, image: vec![], submitted: Instant::now(), reply: tx }
+        Request {
+            id,
+            image: Vec::new().into(),
+            submitted: Instant::now(),
+            reply: tx,
+        }
     }
 
     #[test]

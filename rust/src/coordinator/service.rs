@@ -181,7 +181,15 @@ impl InferenceService {
     }
 
     /// Submit one image without blocking for the result.
-    pub fn submit(&self, image: Vec<f32>) -> Result<PendingReply> {
+    ///
+    /// Accepts anything convertible into a shared `Arc<[f32]>`; pass
+    /// an `Arc<[f32]>` directly for true zero-copy submission (a `Vec`
+    /// is converted once here and never copied again downstream).
+    pub fn submit(
+        &self,
+        image: impl Into<Arc<[f32]>>,
+    ) -> Result<PendingReply> {
+        let image: Arc<[f32]> = image.into();
         if image.len() != self.image_numel {
             return Err(anyhow!(
                 "image has {} elements, model wants {}",
@@ -202,7 +210,7 @@ impl InferenceService {
     }
 
     /// Submit one image and block for its classification.
-    pub fn classify(&self, image: Vec<f32>) -> Result<Reply> {
+    pub fn classify(&self, image: impl Into<Arc<[f32]>>) -> Result<Reply> {
         self.submit(image)?.wait()
     }
 
@@ -210,10 +218,10 @@ impl InferenceService {
     ///
     /// `time_scale` stretches (>1) or compresses (<1) arrival gaps —
     /// 0.0 fires all requests immediately (closed-loop burst).
-    pub fn run_trace(
+    pub fn run_trace<I: Into<Arc<[f32]>>>(
         &self,
         trace: &[TraceRequest],
-        images: impl Fn(u64) -> Vec<f32>,
+        images: impl Fn(u64) -> I,
         time_scale: f64,
     ) -> ServeReport {
         let started = Instant::now();
@@ -308,7 +316,7 @@ mod tests {
         let svc =
             InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
                 .unwrap();
-        assert!(svc.classify(vec![0.0; 5]).is_err());
+        assert!(svc.classify(vec![0.0f32; 5]).is_err());
     }
 
     #[test]
@@ -369,14 +377,15 @@ mod tests {
         let svc =
             InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
                 .unwrap();
-        let img = data::synth_images(1, (3, 16, 16), 77);
+        // One shared image submitted three times: zero-copy end to end.
+        let img: Arc<[f32]> = data::synth_images(1, (3, 16, 16), 77).into();
         let solo = svc.classify(img.clone()).unwrap();
         // Submit two at once so they batch together (b2 artifact).
         let p1 = svc.submit(img.clone()).unwrap();
         let p2 = svc.submit(img).unwrap();
         let r1 = p1.wait().unwrap();
         let _ = p2.wait().unwrap();
-        for (a, b) in solo.logits.iter().zip(&r1.logits) {
+        for (a, b) in solo.logits.iter().zip(r1.logits.iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
     }

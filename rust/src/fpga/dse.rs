@@ -2,12 +2,30 @@
 //! proposed architecture was fully explored" claim (experiment E2).
 //!
 //! Sweeps `(vec_size, lane_num)` under a device's DSP/M20K/LUT budget,
-//! evaluates each feasible point with the analytic timing model, and
-//! returns all points plus the latency-optimal and density-optimal
-//! (GOPS/DSP) choices.
+//! evaluates each feasible point, and returns all points plus the
+//! latency-optimal and density-optimal (GOPS/DSP) choices.
+//!
+//! The sweep is engineered for interactive use on big models:
+//!
+//! - **pruning** — infeasible points are rejected on resources alone
+//!   and never timed (their `time_ms` is `f64::INFINITY`);
+//! - **parallelism** — feasible points are independent, so they are
+//!   evaluated by a work-stealing pool of scoped threads
+//!   (`std::thread::scope`, one worker per core);
+//! - **memoized timing** — per-(layer, params) compute cycles are
+//!   cached in [`super::timing`], so repeated sweeps and shared layer
+//!   geometries stop recomputing identical cycle models;
+//! - **fidelity choice** — points can be timed with the closed-form
+//!   analytic model (default), the token-level pipeline simulator on
+//!   its closed-form fast path, or the O(tokens) exact oracle
+//!   ([`Fidelity`]); `BENCH_dse.json` tracks the fast-vs-exact sweep
+//!   speedup across PRs.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::device::DeviceProfile;
+use super::pipeline::{simulate_tokens, simulate_tokens_exact};
 use super::resources::{resource_usage, ResourceUsage};
 use super::timing::{simulate_model, DesignParams, OverlapPolicy};
 use crate::models::Model;
@@ -18,9 +36,22 @@ pub struct DesignPoint {
     pub params: DesignParams,
     pub usage: ResourceUsage,
     pub feasible: bool,
+    /// Per-image latency; `f64::INFINITY` for pruned infeasible points.
     pub time_ms: f64,
     pub gops: f64,
     pub gops_per_dsp: f64,
+}
+
+/// How design points are timed during the sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Closed-form per-group analytic model (`timing::simulate_model`).
+    Analytic,
+    /// Token-level pipeline simulator on its closed-form fast path.
+    PipelineFast,
+    /// Token-level pipeline simulator, O(tokens) oracle for every
+    /// group — the reference the fast paths are measured against.
+    PipelineExact,
 }
 
 /// Sweep ranges: powers of two for the SIMD vector (hardware-friendly),
@@ -28,18 +59,104 @@ pub struct DesignPoint {
 pub const VEC_CANDIDATES: [usize; 5] = [4, 8, 16, 32, 64];
 pub const LANE_CANDIDATES: [usize; 12] = [1, 2, 3, 4, 6, 8, 11, 16, 22, 32, 48, 64];
 
-/// Explore the design space of `model` on `device` at `batch`.
+/// Explore the design space of `model` on `device` at `batch` with the
+/// default analytic fidelity.
 pub fn explore(
     model: &Model,
     device: &DeviceProfile,
     batch: usize,
 ) -> Vec<DesignPoint> {
-    let mut points = Vec::new();
-    for &vec in &VEC_CANDIDATES {
-        for &lane in &LANE_CANDIDATES {
-            let params = DesignParams::new(vec, lane);
-            let usage = resource_usage(&params, device);
-            let feasible = usage.fits(device);
+    explore_with(model, device, batch, Fidelity::Analytic)
+}
+
+/// Explore the design space at an explicit timing fidelity.
+///
+/// Grid order of the result is deterministic (`VEC_CANDIDATES` outer,
+/// `LANE_CANDIDATES` inner) regardless of worker scheduling.
+pub fn explore_with(
+    model: &Model,
+    device: &DeviceProfile,
+    batch: usize,
+    fidelity: Fidelity,
+) -> Vec<DesignPoint> {
+    let grid: Vec<(usize, usize)> = VEC_CANDIDATES
+        .iter()
+        .flat_map(|&v| LANE_CANDIDATES.iter().map(move |&l| (v, l)))
+        .collect();
+    let ops_per_image = model.total_ops();
+
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, grid.len());
+
+    if workers == 1 {
+        return grid
+            .iter()
+            .map(|&(v, l)| {
+                eval_point(model, device, batch, fidelity, ops_per_image, v, l)
+            })
+            .collect();
+    }
+
+    // Work-stealing over the grid: an atomic cursor hands out point
+    // indices, so slow (feasible, simulated) and fast (pruned) points
+    // balance across workers automatically.
+    let cursor = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, DesignPoint)>> =
+        Mutex::new(Vec::with_capacity(grid.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(&(v, l)) = grid.get(i) else { break };
+                    local.push((
+                        i,
+                        eval_point(
+                            model, device, batch, fidelity, ops_per_image,
+                            v, l,
+                        ),
+                    ));
+                }
+                done.lock().unwrap().extend(local);
+            });
+        }
+    });
+
+    let mut indexed = done.into_inner().unwrap();
+    indexed.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(indexed.len(), grid.len());
+    indexed.into_iter().map(|(_, p)| p).collect()
+}
+
+fn eval_point(
+    model: &Model,
+    device: &DeviceProfile,
+    batch: usize,
+    fidelity: Fidelity,
+    ops_per_image: u64,
+    vec: usize,
+    lane: usize,
+) -> DesignPoint {
+    let params = DesignParams::new(vec, lane);
+    let usage = resource_usage(&params, device);
+    let feasible = usage.fits(device);
+    if !feasible {
+        // Pruned: never run the timing model for a design that cannot
+        // be placed.
+        return DesignPoint {
+            params,
+            usage,
+            feasible,
+            time_ms: f64::INFINITY,
+            gops: 0.0,
+            gops_per_dsp: 0.0,
+        };
+    }
+    let (time_ms, gops) = match fidelity {
+        Fidelity::Analytic => {
             let t = simulate_model(
                 model,
                 device,
@@ -47,19 +164,29 @@ pub fn explore(
                 batch,
                 OverlapPolicy::WithinGroup,
             );
-            let time_ms = t.time_per_image_ms();
-            let gops = t.gops();
-            points.push(DesignPoint {
-                params,
-                usage,
-                feasible,
-                time_ms,
-                gops,
-                gops_per_dsp: gops / usage.dsps as f64,
-            });
+            (t.time_per_image_ms(), t.gops())
         }
+        Fidelity::PipelineFast | Fidelity::PipelineExact => {
+            let sim = if fidelity == Fidelity::PipelineExact {
+                simulate_tokens_exact(model, device, &params, batch)
+            } else {
+                simulate_tokens(model, device, &params, batch)
+            };
+            let batch_ms = sim.time_ms();
+            let gops = ops_per_image as f64 * batch as f64
+                / (batch_ms / 1e3)
+                / 1e9;
+            (batch_ms / batch as f64, gops)
+        }
+    };
+    DesignPoint {
+        params,
+        usage,
+        feasible,
+        time_ms,
+        gops,
+        gops_per_dsp: gops / usage.dsps as f64,
     }
-    points
 }
 
 /// The latency-optimal feasible point.
@@ -115,12 +242,32 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_points_on_small_device() {
+    fn parallel_sweep_preserves_grid_order() {
+        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        let mut it = pts.iter();
+        for &v in &VEC_CANDIDATES {
+            for &l in &LANE_CANDIDATES {
+                let p = it.next().unwrap();
+                assert_eq!((p.params.vec_size, p.params.lane_num), (v, l));
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_points_pruned_not_timed() {
         let pts = explore(&models::alexnet(), &STRATIXV, 1);
         // Stratix V has only 256 DSPs at 1.7 DSP/MAC: the big design
         // points cannot fit.
         assert!(pts.iter().any(|p| !p.feasible));
         assert!(pts.iter().any(|p| p.feasible));
+        for p in &pts {
+            if p.feasible {
+                assert!(p.time_ms.is_finite() && p.gops > 0.0);
+            } else {
+                assert!(p.time_ms.is_infinite());
+                assert_eq!(p.gops, 0.0);
+            }
+        }
     }
 
     #[test]
@@ -169,5 +316,57 @@ mod tests {
                 .gops
         };
         assert!(f(&p8) > f(&p1));
+    }
+
+    #[test]
+    fn pipeline_fast_sweep_matches_exact_sweep() {
+        // The closed form is exact, so the two pipeline fidelities
+        // must produce identical timings for every feasible point.
+        // (tinynet keeps the O(tokens) exact sweep cheap here; the
+        // full VGG-16 comparison is benchmarked in bench_dse and the
+        // per-group equivalence is property-tested in
+        // tests/properties.rs.)
+        let m = models::tinynet();
+        let fast =
+            explore_with(&m, &STRATIX10, 4, Fidelity::PipelineFast);
+        let exact =
+            explore_with(&m, &STRATIX10, 4, Fidelity::PipelineExact);
+        assert_eq!(fast.len(), exact.len());
+        for (f, e) in fast.iter().zip(&exact) {
+            assert_eq!(f.feasible, e.feasible);
+            if f.feasible {
+                assert_eq!(
+                    f.time_ms, e.time_ms,
+                    "vec={} lane={}",
+                    f.params.vec_size, f.params.lane_num
+                );
+                assert_eq!(f.gops, e.gops);
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_fidelity_sweep_is_sane_on_alexnet() {
+        // The fast-path pipeline sweep must produce finite, positive
+        // timings for every feasible point and agree with the analytic
+        // sweep within the simulator tolerance at the FFCNN point.
+        let m = models::alexnet();
+        let pipe = explore_with(&m, &STRATIX10, 1, Fidelity::PipelineFast);
+        let ana = explore(&m, &STRATIX10, 1);
+        for (p, a) in pipe.iter().zip(&ana) {
+            assert_eq!(p.feasible, a.feasible);
+            if p.feasible {
+                assert!(p.time_ms.is_finite() && p.time_ms > 0.0);
+                assert!(p.gops > 0.0);
+            }
+        }
+        let at = |pts: &[DesignPoint]| {
+            pts.iter()
+                .find(|p| p.params.vec_size == 16 && p.params.lane_num == 11)
+                .unwrap()
+                .time_ms
+        };
+        let ratio = at(&pipe) / at(&ana);
+        assert!(ratio > 0.75 && ratio < 1.25, "ratio={ratio:.3}");
     }
 }

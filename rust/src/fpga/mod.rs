@@ -10,12 +10,16 @@
 //! 3. per-layer time is the max of compute and DDR traffic when double
 //!    buffering overlaps them.
 //!
-//! [`timing`] encodes those as closed-form per-layer cycle counts;
-//! [`pipeline`] validates them with a token-level simulation of the
-//! channel-connected kernels (bounded FIFOs, backpressure, stalls);
-//! [`resources`] maps a design point to DSP/M20K/LUT usage and checks it
-//! fits the device; [`dse`] sweeps the design space like the paper's
-//! "fully explored" claim; [`device`] holds the board profiles.
+//! [`timing`] encodes those as closed-form per-layer cycle counts
+//! (memoized per layer/design point for sweep reuse); [`pipeline`]
+//! validates them with a token-level simulation of the
+//! channel-connected kernels (bounded FIFOs, backpressure, stalls) and
+//! carries its own closed-form steady-state fast path with the
+//! O(tokens) loop kept as an exact oracle; [`resources`] maps a design
+//! point to DSP/M20K/LUT usage and checks it fits the device; [`dse`]
+//! sweeps the design space in parallel (pruning infeasible points
+//! before timing) like the paper's "fully explored" claim; [`device`]
+//! holds the board profiles.
 
 pub mod channel;
 pub mod device;
@@ -26,7 +30,8 @@ pub mod timing;
 
 pub use channel::Channel;
 pub use device::{DeviceProfile, DEVICES};
-pub use dse::{explore, DesignPoint};
+pub use dse::{explore, explore_with, DesignPoint, Fidelity};
+pub use pipeline::{simulate_tokens, simulate_tokens_exact, PipelineSim};
 pub use resources::{resource_usage, ResourceUsage};
 pub use timing::{
     simulate_model, DesignParams, LayerTiming, ModelTiming, OverlapPolicy,

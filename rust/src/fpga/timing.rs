@@ -17,6 +17,9 @@
 //! with compute is governed by [`OverlapPolicy`].
 
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+
 use super::device::DeviceProfile;
 use crate::models::{fusion_groups, LayerInfo, LayerKind, Model, Shape};
 
@@ -203,6 +206,89 @@ fn ceil_div(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
 }
 
+/// Value-identity of one `layer_compute_cycles` evaluation.
+///
+/// Keyed purely by the geometry and design parameters the formula
+/// reads, so identical layers share one entry across models, design
+/// points and repeated sweeps (precision does not enter the cycle
+/// count — it only changes byte widths and DSP packing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct CycleKey {
+    kind_tag: u8,
+    in_dims: [usize; 3],
+    out_dims: [usize; 3],
+    kernel: (usize, usize),
+    groups: usize,
+    vec: usize,
+    lane: usize,
+    batch: u64,
+}
+
+fn shape_dims(s: Shape) -> [usize; 3] {
+    match s {
+        Shape::Chw(c, h, w) => [c, h, w],
+        // Flat(n) cannot collide with a CHW shape: real feature maps
+        // have nonzero spatial dims.
+        Shape::Flat(n) => [n, usize::MAX, usize::MAX],
+    }
+}
+
+impl CycleKey {
+    fn new(
+        info: &LayerInfo,
+        kind: &LayerKind,
+        params: &DesignParams,
+        batch: u64,
+    ) -> Self {
+        let (kind_tag, kernel, groups) = match kind {
+            LayerKind::Conv { kernel, groups, .. } => (0, *kernel, *groups),
+            LayerKind::Fc { .. } => (1, (0, 0), 0),
+            LayerKind::Eltwise => (2, (0, 0), 0),
+            LayerKind::Pool { kernel, .. } => (3, *kernel, 0),
+            LayerKind::Lrn { n } => (4, (*n, 0), 0),
+            _ => (5, (0, 0), 0),
+        };
+        CycleKey {
+            kind_tag,
+            in_dims: shape_dims(info.in_shape),
+            out_dims: shape_dims(info.out_shape),
+            kernel,
+            groups,
+            vec: params.vec_size,
+            lane: params.lane_num,
+            batch,
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread memo of layer compute cycles.  Thread-local so the
+    /// parallel DSE workers never contend.  Lifetime follows the
+    /// thread: a DSE worker reuses entries across the points of *its*
+    /// sweep (scoped threads die with the sweep), while long-lived
+    /// threads — board workers re-timing a model per executed batch,
+    /// or a CLI thread running repeated serial sweeps — keep their
+    /// cache warm across calls.
+    static CYCLE_CACHE: RefCell<HashMap<CycleKey, u64>> =
+        RefCell::new(HashMap::new());
+}
+
+/// Memoized [`layer_compute_cycles`] (see [`CycleKey`]).
+pub(crate) fn layer_compute_cycles_memo(
+    info: &LayerInfo,
+    kind: &LayerKind,
+    params: &DesignParams,
+    batch: u64,
+) -> u64 {
+    let key = CycleKey::new(info, kind, params, batch);
+    CYCLE_CACHE.with(|cache| {
+        *cache
+            .borrow_mut()
+            .entry(key)
+            .or_insert_with(|| layer_compute_cycles(info, kind, params, batch))
+    })
+}
+
 /// Compute cycles for one anchor layer at the given design point.
 pub fn layer_compute_cycles(
     info: &LayerInfo,
@@ -313,7 +399,7 @@ pub fn simulate_model(
         let compute: u64 = rows
             .iter()
             .zip(&kinds)
-            .map(|(r, k)| layer_compute_cycles(r, k, params, batch_u))
+            .map(|(r, k)| layer_compute_cycles_memo(r, k, params, batch_u))
             .max()
             .unwrap_or(0);
 
@@ -364,6 +450,12 @@ pub fn simulate_model(
         _ => out_groups.iter().map(|g| g.cycles).sum(),
     };
 
+    // Accounting straight from the propagated rows (identical to
+    // `Model::total_ops`/`total_params`, without re-propagating the
+    // whole graph twice more per simulation).
+    let total_macs: u64 = infos.iter().map(|i| i.macs).sum();
+    let total_params: u64 = infos.iter().map(|i| i.params).sum();
+
     ModelTiming {
         model: model.name.clone(),
         device: device.name.to_string(),
@@ -373,8 +465,8 @@ pub fn simulate_model(
         groups: out_groups,
         total_cycles,
         fmax_mhz: device.fmax_mhz,
-        ops_per_image: model.total_ops(),
-        weight_param_bytes: model.total_params() * params.precision.bytes(),
+        ops_per_image: 2 * total_macs,
+        weight_param_bytes: total_params * params.precision.bytes(),
     }
 }
 
@@ -571,6 +663,34 @@ mod tests {
         assert_eq!(Precision::Fixed8.bytes(), 1);
         assert_eq!(Precision::Fixed16.dsp_per_mac(&STRATIX10), 0.5);
         assert_eq!(Precision::Fp32.dsp_per_mac(&STRATIX10), 1.0);
+    }
+
+    #[test]
+    fn memoized_cycles_equal_pure_formula() {
+        // The cache is keyed on everything the formula reads; repeated
+        // and cross-point lookups must return the pure result.
+        for name in ["alexnet", "resnet50", "tinynet"] {
+            let m = models::by_name(name).unwrap();
+            let infos = m.propagate();
+            for params in [DesignParams::new(16, 11), DesignParams::new(8, 3)] {
+                for batch in [1u64, 16] {
+                    for (info, layer) in infos.iter().zip(&m.layers) {
+                        let pure = layer_compute_cycles(
+                            info, &layer.kind, &params, batch,
+                        );
+                        for _ in 0..2 {
+                            assert_eq!(
+                                layer_compute_cycles_memo(
+                                    info, &layer.kind, &params, batch,
+                                ),
+                                pure,
+                                "{name}.{}", info.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

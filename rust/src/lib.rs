@@ -10,9 +10,21 @@
 //! - **L2** — JAX models (`python/compile/`): AlexNet / VGG / ResNet-50,
 //!   AOT-lowered once to HLO text under `artifacts/`.
 //! - **L3** — this crate: the inference coordinator (router, dynamic
-//!   batcher, pipeline scheduler) plus the *substrate the paper ran on*,
-//!   rebuilt as a cycle-approximate FPGA simulator ([`fpga`]), and the
-//!   PJRT runtime ([`runtime`]) that executes the AOT artifacts.
+//!   batcher, pipeline scheduler) over a zero-copy `Arc<[f32]>` data
+//!   plane, plus the *substrate the paper ran on*, rebuilt as a
+//!   cycle-approximate FPGA simulator ([`fpga`]), and the runtime
+//!   ([`runtime`]) that executes the AOT artifacts (PJRT under the
+//!   `pjrt` feature, a deterministic CPU reference executor without).
+//!
+//! The simulator is split into a **closed-form fast path** and an
+//! **exact oracle**: [`fpga::timing`] is the per-group analytic model
+//! (memoized per layer/design point), and [`fpga::pipeline`] flows
+//! tokens through the bounded-FIFO kernel chain — by default on a
+//! steady-state solver that is O(channel depth) per group and proven
+//! (and property-tested) to match the O(tokens) recurrence, which
+//! stays available as `simulate_tokens_exact` / `FFCNN_EXACT_SIM=1`.
+//! [`fpga::dse`] sweeps the design space with those models in
+//! parallel, pruning infeasible points before timing them.
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.

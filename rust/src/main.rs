@@ -16,7 +16,7 @@ use ffcnn::config::{default_artifacts_dir, RunConfig};
 use ffcnn::coordinator::{InferenceService, Pace, Policy};
 use ffcnn::data;
 use ffcnn::fpga::device::DEVICES;
-use ffcnn::fpga::pipeline::simulate_tokens;
+use ffcnn::fpga::pipeline::{simulate_tokens, simulate_tokens_exact};
 use ffcnn::fpga::timing::{simulate_model, OverlapPolicy};
 use ffcnn::fpga::{dse, resource_usage};
 use ffcnn::models;
@@ -32,8 +32,9 @@ COMMANDS:
   table1    [--model alexnet]                      reproduce Table 1
   fig1      [--model vgg11]                        reproduce Fig. 1
   dse       [--device stratix10] [--model alexnet] [--batch 1]
+            [--fidelity analytic|pipeline|pipeline-exact]
   layers    [--model alexnet] [--device stratix10] [--batch 1]
-  pipeline  [--model alexnet] [--device stratix10] [--batch 1]
+  pipeline  [--model alexnet] [--device stratix10] [--batch 1] [--exact]
   classify  [--model alexnet] [--batch 1] [--conv-impl jnp]
             [--device stratix10] [--iters 3]
   serve     [--model alexnet] [--device stratix10] [--requests 64]
@@ -192,9 +193,22 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let m = model_arg(args, "alexnet")?;
     let d = device_arg(args)?;
     let batch = args.get_usize("batch", 1)?;
-    let pts = dse::explore(&m, d, batch);
+    let fidelity = match args.get("fidelity", "analytic").as_str() {
+        "analytic" => dse::Fidelity::Analytic,
+        "pipeline" => dse::Fidelity::PipelineFast,
+        "pipeline-exact" => dse::Fidelity::PipelineExact,
+        other => {
+            return Err(anyhow!(
+                "unknown fidelity {other:?} (analytic|pipeline|pipeline-exact)"
+            ))
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let pts = dse::explore_with(&m, d, batch, fidelity);
+    let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
-        "DSE: {} on {} (batch {batch}) — {} points, {} feasible",
+        "DSE: {} on {} (batch {batch}, {fidelity:?}) — {} points, \
+         {} feasible, swept in {sweep_ms:.1} ms",
         m.name,
         d.device,
         pts.len(),
@@ -283,7 +297,11 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let p = cfg.design_params()?;
-    let tok = simulate_tokens(&m, d, &p, batch);
+    let tok = if args.has("exact") {
+        simulate_tokens_exact(&m, d, &p, batch)
+    } else {
+        simulate_tokens(&m, d, &p, batch)
+    };
     let ana = simulate_model(&m, d, &p, batch, OverlapPolicy::WithinGroup);
     println!(
         "token-level: {:.2} ms | analytic: {:.2} ms | ratio {:.3}",
@@ -292,15 +310,16 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         tok.total_cycles as f64 / ana.total_cycles as f64
     );
     println!(
-        "\n{:<34}{:>10}{:>12}{:>30}",
-        "group", "tokens", "cycles", "backpressure rd/cv/fu/wr"
+        "\n{:<34}{:>10}{:>12}{:>6}{:>30}",
+        "group", "tokens", "cycles", "path", "backpressure rd/cv/fu/wr"
     );
     for g in &tok.groups {
         println!(
-            "{:<34}{:>10}{:>12}{:>30}",
+            "{:<34}{:>10}{:>12}{:>6}{:>30}",
             g.layers.join("+"),
             g.tokens,
             g.cycles,
+            if g.exact { "exact" } else { "fast" },
             format!("{:?}", g.backpressure_cycles)
         );
     }

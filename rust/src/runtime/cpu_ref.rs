@@ -1,0 +1,222 @@
+//! CPU reference executor — the default engine when the `pjrt`
+//! feature is off.
+//!
+//! The build environment does not always carry the XLA toolchain, but
+//! the serving stack (boards, batcher, router, service) and every
+//! perf experiment still need an executor with the PJRT engine's
+//! exact API and contracts:
+//!
+//! - same manifest/weights loading and input/output shape validation
+//!   (errors use the same phrasing the coordinator tests assert on);
+//! - **deterministic**: identical input → identical output;
+//! - **batch-invariant**: each image of a batch is computed
+//!   independently, so batching never changes numerics;
+//! - **per-model**: outputs depend on the model's weight blob, so
+//!   different models disagree while different conv-impl artifacts of
+//!   one model (which share a blob) agree.
+//!
+//! The numerics are an arbitrary-but-fixed strided projection of the
+//! input through the weight blob — a stand-in, not an approximation
+//! of the real network.  Golden-output tests are `pjrt`-gated.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::ExecStats;
+use crate::Result;
+
+/// Inputs sampled per logit (bounds the cost on big models).
+const SAMPLE_TAPS: usize = 256;
+
+/// Single-threaded CPU reference engine.  Kept `!Send` (RefCell) like
+/// the PJRT engine so the coordinator's one-engine-per-board-thread
+/// design is exercised identically in both builds.
+pub struct Engine {
+    manifest: Manifest,
+    /// Decoded weight blob shared across artifacts of one model.
+    weights: RefCell<HashMap<String, Arc<[f32]>>>,
+    stats: RefCell<ExecStats>,
+}
+
+impl Engine {
+    /// Open an artifact directory (`make artifacts` output).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Ok(Engine {
+            manifest,
+            weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    /// Decode a model's weight blob once; later calls share the Arc.
+    fn weights_for(&self, art: &ArtifactMeta) -> Result<Arc<[f32]>> {
+        if let Some(w) = self.weights.borrow().get(&art.model) {
+            return Ok(w.clone());
+        }
+        let t0 = Instant::now();
+        let blob = self.manifest.read_weights(art)?;
+        self.stats.borrow_mut().compile_us +=
+            t0.elapsed().as_micros() as u64;
+        self.weights
+            .borrow_mut()
+            .insert(art.model.clone(), blob.clone());
+        Ok(blob)
+    }
+
+    /// Pre-load an artifact's weights (warm the cache).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let meta = self.manifest.artifact(name)?.clone();
+        self.weights_for(&meta).map(|_| ())
+    }
+
+    /// Execute an artifact on an input batch; returns flat f32 logits.
+    pub fn execute(&self, name: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let meta = self.manifest.artifact(name)?.clone();
+        if input.len() != meta.input.numel() {
+            return Err(anyhow!(
+                "{name}: input has {} elements, artifact wants {:?}",
+                input.len(),
+                meta.input.shape
+            ));
+        }
+        let weights = self.weights_for(&meta)?;
+
+        let t0 = Instant::now();
+        let batch = meta.batch.max(1);
+        let per_image = meta.input.numel() / batch;
+        let classes = meta.output.numel() / batch;
+        let step = (per_image / SAMPLE_TAPS).max(1);
+        let mut out = Vec::with_capacity(meta.output.numel());
+        for b in 0..batch {
+            let img = &input[b * per_image..(b + 1) * per_image];
+            for c in 0..classes {
+                // Strided dot product of the image against a
+                // class-dependent walk through the weight blob; f64
+                // accumulation keeps it order-stable.
+                let mut acc = 0.0f64;
+                let mut j = 0;
+                while j < per_image {
+                    let w = if weights.is_empty() {
+                        0.125
+                    } else {
+                        weights[(c * 131 + j) % weights.len()] as f64
+                    };
+                    acc += img[j] as f64 * w;
+                    j += step;
+                }
+                out.push(acc as f32);
+            }
+        }
+        let execute_us = t0.elapsed().as_micros() as u64;
+
+        if out.len() != meta.output.numel() {
+            return Err(anyhow!(
+                "{name}: output has {} elements, manifest says {:?}",
+                out.len(),
+                meta.output.shape
+            ));
+        }
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_us += execute_us;
+        Ok(out)
+    }
+
+    /// Artifact names available for a model, sorted by batch.
+    pub fn artifacts_for_model(
+        &self,
+        model: &str,
+        conv_impl: &str,
+    ) -> Vec<ArtifactMeta> {
+        let mut v: Vec<ArtifactMeta> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.conv_impl == conv_impl)
+            .cloned()
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::default_artifacts_dir;
+
+    fn engine_or_skip() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Engine::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn deterministic_and_shape_correct() {
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_jnp").unwrap().clone();
+        let input = vec![0.05f32; art.input.numel()];
+        let a = e.execute("tinynet_b1_jnp", &input).unwrap();
+        let b = e.execute("tinynet_b1_jnp", &input).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), art.output.numel());
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn conv_impls_of_one_model_agree() {
+        // Both artifacts read the same weight blob, so the reference
+        // executor gives identical outputs — mirroring the real
+        // pallas-vs-jnp agreement contract.
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_jnp").unwrap().clone();
+        let (input, _) = e.manifest().read_golden(&art).unwrap();
+        let a = e.execute("tinynet_b1_pallas", &input).unwrap();
+        let b = e.execute("tinynet_b1_jnp", &input).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let Some(e) = engine_or_skip() else { return };
+        let err = e.execute("tinynet_b1_pallas", &[0.0; 7]).unwrap_err();
+        assert!(err.to_string().contains("input has 7"));
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let Some(e) = engine_or_skip() else { return };
+        assert!(e.execute("nope_b1_jnp", &[]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate_and_weights_cached() {
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_jnp").unwrap().clone();
+        let input = vec![0.1f32; art.input.numel()];
+        e.execute("tinynet_b1_jnp", &input).unwrap();
+        let c1 = e.stats().compile_us;
+        e.execute("tinynet_b1_jnp", &input).unwrap();
+        let s = e.stats();
+        assert_eq!(s.executions, 2);
+        assert_eq!(s.compile_us, c1, "second execute must not reload");
+    }
+}

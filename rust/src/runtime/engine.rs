@@ -16,21 +16,8 @@ use std::time::Instant;
 use anyhow::{anyhow, Context};
 
 use super::manifest::{ArtifactMeta, Manifest};
+use super::ExecStats;
 use crate::Result;
-
-/// Cumulative execution statistics (perf pass instrumentation).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct ExecStats {
-    pub executions: u64,
-    /// Time uploading input literals/buffers, µs.
-    pub upload_us: u64,
-    /// Time inside PJRT execute, µs.
-    pub execute_us: u64,
-    /// Time downloading outputs, µs.
-    pub download_us: u64,
-    /// One-time compile time, µs.
-    pub compile_us: u64,
-}
 
 struct LoadedArtifact {
     exe: xla::PjRtLoadedExecutable,
@@ -73,6 +60,10 @@ impl Engine {
     }
 
     /// Upload a model's weights once, returning device buffers.
+    ///
+    /// The host-side blob is a shared `Arc<[f32]>` decoded once by the
+    /// manifest; parameter slices upload straight from it, so weights
+    /// never round-trip through intermediate clones.
     fn weights_for(&self, art: &ArtifactMeta) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
         if let Some(w) = self.model_weights.borrow().get(&art.model) {
             return Ok(w.clone());

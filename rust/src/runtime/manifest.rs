@@ -4,6 +4,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context};
 
@@ -223,12 +224,17 @@ impl Manifest {
         self.dir.join(file)
     }
 
-    /// Read a model's weight blob (f32 little-endian).
-    pub fn read_weights(&self, art: &ArtifactMeta) -> Result<Vec<f32>> {
+    /// Read a model's weight blob (f32 little-endian) into a shared
+    /// buffer.  Callers (the engines) cache the `Arc` per model, so
+    /// every artifact of a model shares one host-side copy — the blob
+    /// is decoded exactly once and never cloned again.
+    pub fn read_weights(&self, art: &ArtifactMeta) -> Result<Arc<[f32]>> {
         let path = self.path_of(&art.weights);
         let bytes = std::fs::read(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        Ok(bytes_to_f32(&bytes))
+        let values = bytes_to_f32(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        Ok(values.into())
     }
 
     /// Read a golden blob: (input, expected_output).
@@ -241,7 +247,8 @@ impl Manifest {
             .as_ref()
             .ok_or_else(|| anyhow!("{} has no golden blob", art.name))?;
         let bytes = std::fs::read(self.path_of(&g.file))?;
-        let all = bytes_to_f32(&bytes);
+        let all = bytes_to_f32(&bytes)
+            .with_context(|| format!("decoding {}", g.file))?;
         if all.len() != g.input_numel + g.output_numel {
             return Err(anyhow!(
                 "golden blob size mismatch: {} != {}+{}",
@@ -255,12 +262,21 @@ impl Manifest {
     }
 }
 
-/// Little-endian byte buffer to f32 vector.
-pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
-    bytes
-        .chunks_exact(4)
+/// Little-endian byte buffer to f32 vector — single pass over
+/// 4-byte chunks.  A length that is not a multiple of 4 is a corrupt
+/// blob and returns an error instead of silently truncating the tail.
+pub fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
+    let chunks = bytes.chunks_exact(4);
+    if !chunks.remainder().is_empty() {
+        return Err(anyhow!(
+            "f32 blob length {} is not a multiple of 4 ({} trailing bytes)",
+            bytes.len(),
+            bytes.len() % 4
+        ));
+    }
+    Ok(chunks
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
@@ -282,7 +298,18 @@ mod tests {
         let vals = [1.0f32, -2.5, 3.25e-3];
         let bytes: Vec<u8> =
             vals.iter().flat_map(|v| v.to_le_bytes()).collect();
-        assert_eq!(bytes_to_f32(&bytes), vals);
+        assert_eq!(bytes_to_f32(&bytes).unwrap(), vals);
+        assert_eq!(bytes_to_f32(&[]).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn bytes_to_f32_rejects_trailing_bytes() {
+        let err = bytes_to_f32(&[0, 0, 0, 0, 7]).unwrap_err();
+        assert!(
+            err.to_string().contains("not a multiple of 4"),
+            "{err}"
+        );
+        assert!(err.to_string().contains("1 trailing"), "{err}");
     }
 
     #[test]

@@ -1,23 +1,55 @@
-//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
-//! them on the CPU PJRT client from the rust hot path.
+//! Runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the rust hot path.
 //!
-//! The interchange format is **HLO text** — jax ≥ 0.5 serialized protos
-//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
-//! text parser reassigns ids (see /opt/xla-example/README.md).
+//! Two interchangeable engines sit behind the same `Engine` API:
 //!
-//! [`Engine`] owns a `PjRtClient` and is deliberately **not** `Send`
-//! (the crate's PJRT wrappers hold raw pointers): the coordinator gives
-//! each simulated board its own engine thread (`coordinator::board`).
+//! - **`pjrt` feature on** — [`engine`]: the real PJRT/XLA CPU client
+//!   (requires the XLA toolchain's `xla` bindings crate; see
+//!   Cargo.toml).  The interchange format is **HLO text** — jax ≥ 0.5
+//!   serialized protos carry 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md).
+//! - **`pjrt` feature off (default)** — [`cpu_ref`]: a deterministic
+//!   CPU reference executor.  It loads the same manifest and weight
+//!   blobs and produces shape-correct, batch-invariant pseudo-logits,
+//!   so the whole coordinator stack (boards, batcher, router,
+//!   service) builds and serves without an XLA toolchain.  Numerics
+//!   golden tests are gated on the `pjrt` feature.
 //!
-//! Hot-path design: model weights are uploaded to device buffers once
-//! per model (`PjRtBuffer`), and every request only uploads its input
-//! batch — `execute_b` then runs with zero weight copies.
+//! `Engine` owns per-model state and is deliberately **not** `Send`
+//! (the PJRT wrappers hold raw pointers): the coordinator gives each
+//! simulated board its own engine thread (`coordinator::board`).
+//!
+//! Hot-path design: model weights are decoded from the blob once per
+//! model into a shared `Arc<[f32]>` (uploaded to device buffers once
+//! under PJRT), and every request only moves its input batch — no
+//! weight copies on the request path.
 
+#[cfg(not(feature = "pjrt"))]
+mod cpu_ref;
+#[cfg(feature = "pjrt")]
 mod engine;
 mod manifest;
 
-pub use engine::{Engine, ExecStats};
+/// Cumulative execution statistics (perf pass instrumentation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    /// Time uploading input literals/buffers, µs.
+    pub upload_us: u64,
+    /// Time inside execute, µs.
+    pub execute_us: u64,
+    /// Time downloading outputs, µs.
+    pub download_us: u64,
+    /// One-time compile/load time, µs.
+    pub compile_us: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use cpu_ref::Engine;
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 pub use manifest::{
-    ArtifactMeta, GoldenMeta, Manifest, ManifestLayer, ModelAccounting,
-    ParamMeta,
+    bytes_to_f32, ArtifactMeta, GoldenMeta, Manifest, ManifestLayer,
+    ModelAccounting, ParamMeta,
 };

@@ -3,7 +3,11 @@
 //! `cargo bench` targets use [`Bench`] to time closures with warmup,
 //! report min/median/mean, and emit both human and machine-readable
 //! (JSON lines) output — EXPERIMENTS.md rows come straight from this.
+//! [`Bench::save_json`] additionally writes a whole suite (plus
+//! derived metrics like the DSE sweep speedup) to a tracked file such
+//! as `BENCH_dse.json`, so perf regressions are visible across PRs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 use super::json::Json;
@@ -121,6 +125,35 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Results measured so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// The whole suite as one JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(&self.suite)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Write the suite (plus derived top-level metrics) to a JSON file.
+    pub fn save_json(
+        &self,
+        path: &Path,
+        extra: Vec<(&str, Json)>,
+    ) -> std::io::Result<()> {
+        let Json::Obj(mut fields) = self.to_json() else { unreachable!() };
+        for (k, v) in extra {
+            fields.insert(k.to_string(), v);
+        }
+        std::fs::write(path, Json::Obj(fields).to_string())
+    }
+
     /// Print the machine-readable trailer (one JSON object per line).
     pub fn finish(self) {
         println!("--- {} results (json) ---", self.suite);
@@ -149,6 +182,28 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.min_ns > 0);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn save_json_writes_suite_and_extras() {
+        let mut b = Bench::new("suite").with_budget(Duration::from_millis(5));
+        b.warmup = 0;
+        b.min_iters = 1;
+        b.max_iters = 1;
+        b.run("spin", || 41u64 + 1);
+        let dir = std::env::temp_dir().join("ffcnn_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        b.save_json(&path, vec![("speedup", Json::num(12.5))]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str().unwrap(), "suite");
+        assert_eq!(j.get("speedup").unwrap().as_f64().unwrap(), 12.5);
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str().unwrap(),
+            "suite/spin"
+        );
     }
 
     #[test]

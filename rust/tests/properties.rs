@@ -8,8 +8,14 @@ use ffcnn::coordinator::{argmax, plan_chunks, LatencyHistogram};
 use ffcnn::data::Rng;
 use ffcnn::fpga::channel::Channel;
 use ffcnn::fpga::device::{ARRIA10, DEVICES, STRATIX10};
+use ffcnn::fpga::pipeline::{
+    run_recurrence_exact, run_recurrence_fast, simulate_tokens,
+    simulate_tokens_exact, StageRates,
+};
 use ffcnn::fpga::resources::resource_usage;
-use ffcnn::fpga::timing::{simulate_model, DesignParams, OverlapPolicy};
+use ffcnn::fpga::timing::{
+    ffcnn_stratix10_params, simulate_model, DesignParams, OverlapPolicy,
+};
 use ffcnn::models::{self, Layer, LayerKind, Model, Shape};
 use ffcnn::util::json::Json;
 use ffcnn::util::prop::{forall, int_in, pick};
@@ -275,6 +281,122 @@ fn prop_fusion_never_increases_traffic() {
             t.dram_bytes <= t.dram_bytes_unfused
         },
     );
+}
+
+// --------------------------------------------------- pipeline fast path
+
+#[test]
+fn prop_fast_recurrence_cycles_match_exact() {
+    // Closed-form fast path vs the O(tokens) oracle on randomized
+    // stage rates, channel depths and token counts: cycle counts must
+    // agree within 0.1% (they are expected to agree exactly; the
+    // margin only covers f64 accumulation order).
+    forall(
+        "recurrence-fast-vs-exact",
+        |r| {
+            let tokens = 3_000 + r.next_u64() % 60_000;
+            let depth = *pick(r, &[1usize, 2, 4, 16, 64, 128]);
+            let mut rate = [0.0f64; 4];
+            for v in rate.iter_mut() {
+                *v = match r.next_u64() % 4 {
+                    0 => 0.0,
+                    1 => (r.next_u64() % 12) as f64,
+                    2 => (r.next_u64() % 8) as f64 + 0.5,
+                    _ => r.next_f32() as f64 * 20.0,
+                };
+            }
+            (tokens, depth, rate)
+        },
+        |&(tokens, depth, rate)| {
+            let rates = StageRates {
+                memrd: rate[0],
+                conv: rate[1],
+                fused: rate[2],
+                memwr: rate[3],
+            };
+            let (ce, _, _) = run_recurrence_exact(tokens, rates, depth);
+            let (cf, _, _) = run_recurrence_fast(tokens, rates, depth);
+            ce.abs_diff(cf) as f64 <= 1.0 + 1e-3 * ce as f64
+        },
+    );
+}
+
+#[test]
+fn prop_token_sim_fast_path_matches_exact_oracle() {
+    // Whole-model dispatch: per fused group, the fast path's cycle
+    // count must stay within 0.1% of the token-exact oracle across
+    // randomized models and design parameters.
+    forall(
+        "token-sim-fast-vs-exact",
+        |r| {
+            let model = *pick(r, &["alexnet", "tinynet"]);
+            let vec = *pick(r, &[4usize, 8, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            let depth = *pick(r, &[1usize, 4, 32, 512, 1024]);
+            (model.to_string(), vec, lane, depth)
+        },
+        |(model, vec, lane, depth)| {
+            let m = models::by_name(model).unwrap();
+            let mut p = DesignParams::new(*vec, *lane);
+            p.channel_depth = *depth;
+            let fast = simulate_tokens(&m, &STRATIX10, &p, 1);
+            let exact = simulate_tokens_exact(&m, &STRATIX10, &p, 1);
+            fast.total_cycles.abs_diff(exact.total_cycles) as f64
+                <= 1.0 + 1e-3 * exact.total_cycles as f64
+                && fast.groups.iter().zip(&exact.groups).all(|(f, e)| {
+                    f.cycles.abs_diff(e.cycles) as f64
+                        <= 1.0 + 1e-3 * e.cycles as f64
+                })
+        },
+    );
+}
+
+#[test]
+fn regression_table1_group_cycles_pinned() {
+    // The analytic cycle counts behind the Table 1 rows, pinned before
+    // the fast-path/memoization/parallel-DSE work: the perf refactors
+    // must not move a single cycle.
+    let p = ffcnn_stratix10_params();
+    let t = simulate_model(
+        &models::alexnet(),
+        &STRATIX10,
+        &p,
+        1,
+        OverlapPolicy::WithinGroup,
+    );
+    let expect: [(&str, u64); 8] = [
+        ("conv1", 630_461),
+        ("conv2", 1_316_486),
+        ("conv3", 856_046),
+        ("conv4", 661_358),
+        ("conv5", 442_334),
+        ("fc6", 2_549_799),
+        ("fc7", 1_135_932),
+        ("fc8", 280_776),
+    ];
+    assert_eq!(t.groups.len(), expect.len());
+    for (g, (anchor, cycles)) in t.groups.iter().zip(expect) {
+        assert_eq!(g.layers[0], anchor);
+        assert_eq!(g.cycles, cycles, "group {anchor}");
+    }
+    assert_eq!(t.total_cycles, 7_873_192);
+
+    let v1 = simulate_model(
+        &models::vgg16(),
+        &STRATIX10,
+        &p,
+        1,
+        OverlapPolicy::WithinGroup,
+    );
+    assert_eq!(v1.total_cycles, 97_687_131);
+    let v16 = simulate_model(
+        &models::vgg16(),
+        &STRATIX10,
+        &p,
+        16,
+        OverlapPolicy::WithinGroup,
+    );
+    assert_eq!(v16.total_cycles, 1_439_837_664);
 }
 
 // -------------------------------------------------------------- resources
