@@ -8,7 +8,7 @@
 //! ```
 
 use ffcnn::fpga::device::{ARRIA10, STRATIX10};
-use ffcnn::fpga::dse;
+use ffcnn::fpga::dse::{self, Fidelity, SweepSpace};
 use ffcnn::fpga::timing::{
     ffcnn_arria10_params, ffcnn_stratix10_params,
 };
@@ -81,4 +81,42 @@ fn main() {
         }
         println!();
     }
+
+    // Extended sweep: overlap on/off x channel depth, timed with the
+    // token-level pipeline simulator's closed-form fast path.  Deeper
+    // channels buy cross-group prefetch headroom (under Full) at an
+    // M20K cost the feasibility model charges.
+    println!("=== overlap x channel-depth sweep (alexnet, stratix10) ===");
+    let space = SweepSpace::with_overlap_and_depth();
+    let pts = dse::explore_space(
+        &model,
+        &STRATIX10,
+        1,
+        Fidelity::PipelineFast,
+        &space,
+    );
+    println!(
+        "{:<6}{:<6}{:<8}{:<14}{:>11}{:>12}",
+        "vec", "lane", "depth", "overlap", "time(ms)", "GOPS/DSP"
+    );
+    for p in dse::pareto(&pts) {
+        println!(
+            "{:<6}{:<6}{:<8}{:<14}{:>11.2}{:>12.3}",
+            p.params.vec_size,
+            p.params.lane_num,
+            p.params.channel_depth,
+            format!("{:?}", p.overlap),
+            p.time_ms,
+            p.gops_per_dsp
+        );
+    }
+    let best = dse::best_latency(&pts).unwrap();
+    println!(
+        "latency-optimal: vec={} lane={} depth={} {:?} ({:.2} ms)",
+        best.params.vec_size,
+        best.params.lane_num,
+        best.params.channel_depth,
+        best.overlap,
+        best.time_ms
+    );
 }

@@ -87,6 +87,21 @@ fn main() -> Result<()> {
     );
     println!("{r3}");
 
+    // --- Phase 4: work-stealing router under the same burst ---------
+    // Idle boards steal queued requests from loaded peers, so one slow
+    // batch cannot strand the queue behind it.
+    println!("\n[phase 4] burst with Policy::WorkStealing");
+    let svc_steal =
+        InferenceService::start(&cfg, Pace::None, Policy::WorkStealing)?;
+    let _ = svc_steal.classify(data::synth_images(1, in_shape, 0))?;
+    let r4 = svc_steal.run_trace(
+        &data::burst_trace(n),
+        |id| data::synth_images(1, in_shape, 1300 + id),
+        0.0,
+    );
+    println!("{r4}");
+    assert_eq!(r4.errors, 0, "work-stealing phase had errors");
+
     // Sanity: everything answered, batching engaged under burst.
     assert_eq!(r1.errors, 0, "burst phase had errors");
     assert_eq!(r2.errors, 0, "poisson phase had errors");

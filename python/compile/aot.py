@@ -50,10 +50,15 @@ class Target:
     batch: int
     impl: str  # "jnp" | "pallas"
     golden: bool = False  # also emit input/output golden blobs
+    #: lower with ONE flat weight-blob argument that the graph slices
+    #: per tensor device-side (the runtime then uploads a single buffer
+    #: per model instead of one per parameter tensor)
+    packed: bool = False
 
     @property
     def name(self) -> str:
-        return f"{self.model}_b{self.batch}_{self.impl}"
+        suffix = "_pw" if self.packed else ""
+        return f"{self.model}_b{self.batch}_{self.impl}{suffix}"
 
 
 #: ``make artifacts`` default set.  Full-resolution nets use the jnp conv
@@ -69,12 +74,20 @@ DEFAULT_TARGETS: List[Target] = [
     Target("alexnet", 1, "pallas"),
     Target("resnet50", 1, "jnp", golden=True),
     Target("resnet50", 4, "jnp"),
+    # Packed-weights variants: ResNet-50 is the 200+-tensor model whose
+    # warm-up the single-blob upload is for.  Both serving batch sizes
+    # are exported packed so the coordinator can adopt the layout
+    # wholesale (it refuses to mix layouts — that would keep two
+    # device-resident copies of the weights).
+    Target("resnet50", 1, "jnp", golden=True, packed=True),
+    Target("resnet50", 4, "jnp", packed=True),
 ]
 
 #: fast subset used by pytest smoke tests.
 QUICK_TARGETS: List[Target] = [
     Target("tinynet", 1, "pallas", golden=True),
     Target("tinynet", 1, "jnp", golden=True),
+    Target("tinynet", 1, "jnp", golden=True, packed=True),
 ]
 
 
@@ -117,6 +130,35 @@ def export_weights(
     return os.path.basename(path), index
 
 
+def make_packed_fn(t: Target, params: Dict[str, np.ndarray]):
+    """The packed-weights forward: ONE flat f32 blob argument, every
+    tensor a static slice + reshape *inside the graph* (device-side
+    views), so the runtime uploads the blob exactly once per model.
+
+    Returns (fn(blob, image) -> (logits,), blob_numel).  Exposed so
+    tests can execute the slicing logic directly against the exported
+    blob (the offsets here must match ``export_weights``).
+    """
+    net = NETS[t.model]
+    names = param_order(params)
+    sizes = [int(params[n].size) for n in names]
+    offsets = []
+    off = 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+
+    def fn(blob, image):
+        ps = {}
+        for n, o, s in zip(names, offsets, sizes):
+            ps[n] = jax.lax.slice(blob, (o,), (o + s,)).reshape(
+                params[n].shape
+            )
+        return (net.forward(ps, image, impl=t.impl, interpret=True),)
+
+    return fn, off
+
+
 def lower_target(
     t: Target, params: Dict[str, np.ndarray]
 ) -> Tuple[str, Tuple[int, ...], Tuple[int, ...]]:
@@ -125,13 +167,25 @@ def lower_target(
     names = param_order(params)
     in_shape = (t.batch,) + net.in_shape
 
-    def fn(*args):
-        ps = dict(zip(names, args[:-1]))
-        return (net.forward(ps, args[-1], impl=t.impl, interpret=True),)
+    if t.packed:
+        fn, total = make_packed_fn(t, params)
+        specs = [
+            jax.ShapeDtypeStruct((total,), jnp.float32),
+            jax.ShapeDtypeStruct(in_shape, jnp.float32),
+        ]
+    else:
 
-    specs = [
-        jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names
-    ] + [jax.ShapeDtypeStruct(in_shape, jnp.float32)]
+        def fn(*args):
+            ps = dict(zip(names, args[:-1]))
+            return (
+                net.forward(ps, args[-1], impl=t.impl, interpret=True),
+            )
+
+        specs = [
+            jax.ShapeDtypeStruct(params[n].shape, jnp.float32)
+            for n in names
+        ] + [jax.ShapeDtypeStruct(in_shape, jnp.float32)]
+
     lowered = jax.jit(fn).lower(*specs)
     hlo = to_hlo_text(lowered)
 
@@ -213,6 +267,7 @@ def build(
             "hlo_sha256": hashlib.sha256(hlo.encode()).hexdigest(),
             "weights": weights_meta[t.model][0],
             "params": weights_meta[t.model][1],
+            "packed_weights": t.packed,
             "input": {"shape": list(in_shape), "dtype": "f32"},
             "output": {"shape": list(out_shape), "dtype": "f32"},
             "golden": None,

@@ -41,6 +41,19 @@ def test_every_artifact_file_exists(built):
             assert os.path.exists(os.path.join(outdir, a["golden"]["file"]))
 
 
+def entry_arg_count(text):
+    """Number of parameters of the ENTRY computation."""
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    count = 0
+    for l in lines[start + 1 :]:
+        if l.startswith("}"):
+            break
+        if " parameter(" in l:
+            count += 1
+    return count
+
+
 def test_hlo_is_text_with_entry(built):
     """The interchange format is HLO *text* (xla_extension 0.5.1 rejects
     jax>=0.5 serialized protos) — must contain an ENTRY computation."""
@@ -50,8 +63,43 @@ def test_hlo_is_text_with_entry(built):
             text = f.read()
         assert "HloModule" in text
         assert "ENTRY" in text
-        # weights must be arguments, not constants: count parameters
-        assert text.count("parameter(") >= len(a["params"]) + 1
+        # weights must be arguments, not constants: packed artifacts
+        # take (blob, image), per-tensor ones every param + image.
+        expect = 2 if a["packed_weights"] else len(a["params"]) + 1
+        assert entry_arg_count(text) == expect
+
+
+def test_packed_artifact_slices_device_side(built):
+    """Execute the packed forward on the *exported* blob: the in-graph
+    slice offsets must reconstruct every tensor, reproducing the
+    per-tensor lowering's golden output (a swapped offset or shape
+    would corrupt the logits, not just the metadata)."""
+    outdir, manifest = built
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    packed = by_name["tinynet_b1_jnp_pw"]
+    plain = by_name["tinynet_b1_jnp"]
+    assert packed["packed_weights"] and not plain["packed_weights"]
+    # Same weight blob and param table: the packing is a lowering
+    # detail, not a different model.
+    assert packed["weights"] == plain["weights"]
+    assert packed["params"] == plain["params"]
+
+    blob = np.fromfile(
+        os.path.join(outdir, packed["weights"]), dtype=np.float32
+    )
+    params = nets.NETS[packed["model"]].init_params(manifest["seed"])
+    fn, total = aot.make_packed_fn(
+        aot.Target(packed["model"], packed["batch"], packed["conv_impl"],
+                   packed=True),
+        params,
+    )
+    assert total == blob.size
+    g = packed["golden"]
+    raw = np.fromfile(os.path.join(outdir, g["file"]), dtype=np.float32)
+    x = raw[: g["input_numel"]].reshape(packed["input"]["shape"])
+    want = raw[g["input_numel"] :].reshape(packed["output"]["shape"])
+    (got,) = fn(blob, x)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
 
 
 def test_weight_blob_layout(built):

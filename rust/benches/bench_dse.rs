@@ -12,7 +12,8 @@ use std::path::Path;
 use std::time::Duration;
 
 use ffcnn::fpga::device::{ARRIA10, STRATIX10, STRATIXV};
-use ffcnn::fpga::dse::{self, Fidelity};
+use ffcnn::fpga::dse::{self, Fidelity, SweepSpace};
+use ffcnn::fpga::timing::OverlapPolicy;
 use ffcnn::models;
 use ffcnn::util::bench::Bench;
 use ffcnn::util::Json;
@@ -39,9 +40,56 @@ fn main() {
         );
     }
 
+    // Extended sweep: overlap on/off x channel depth (PR-2 dimension).
+    let space = SweepSpace::with_overlap_and_depth();
+    let pts = dse::explore_space(
+        &model,
+        &STRATIX10,
+        1,
+        Fidelity::PipelineFast,
+        &space,
+    );
+    let best = dse::best_latency(&pts).unwrap();
+    let overlap_wins = pts
+        .chunks(2)
+        .filter(|pair| {
+            // The stat depends on overlaps being the innermost grid
+            // dimension in [WithinGroup, Full] order — fail loudly if
+            // the sweep space ever reshapes instead of miscounting.
+            assert_eq!(pair[0].overlap, OverlapPolicy::WithinGroup);
+            assert_eq!(pair[1].overlap, OverlapPolicy::Full);
+            pair[0].feasible && pair[1].time_ms < pair[0].time_ms
+        })
+        .count();
+    println!(
+        "overlap x depth sweep: {} points | latency-opt vec={} lane={} \
+         depth={} {:?} ({:.2} ms) | Full beats WithinGroup at \
+         {overlap_wins} feasible points",
+        pts.len(),
+        best.params.vec_size,
+        best.params.lane_num,
+        best.params.channel_depth,
+        best.overlap,
+        best.time_ms
+    );
+    assert!(matches!(
+        best.overlap,
+        OverlapPolicy::Full | OverlapPolicy::WithinGroup
+    ));
+
     let mut b = Bench::new("dse").with_budget(Duration::from_secs(4));
     b.run("explore_alexnet_stratix10", || {
         dse::explore(&model, &STRATIX10, 1).len()
+    });
+    b.run("explore_alexnet_overlap_depth_space", || {
+        dse::explore_space(
+            &model,
+            &STRATIX10,
+            1,
+            Fidelity::PipelineFast,
+            &SweepSpace::with_overlap_and_depth(),
+        )
+        .len()
     });
     b.run("explore_alexnet_arria10", || {
         dse::explore(&model, &ARRIA10, 1).len()

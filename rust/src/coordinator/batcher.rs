@@ -7,21 +7,30 @@
 //! batch sizes that actually exist as AOT artifacts (largest-fit,
 //! [`plan_chunks`]) — no padding, no recompilation.
 //!
+//! Requests arrive over a [`RequestSource`]: a dedicated bounded mpsc
+//! channel (round-robin / least-outstanding routing) or the shared
+//! work-stealing pool (`Policy::WorkStealing`), where an idle batcher
+//! steals queued requests from loaded peers.
+//!
 //! Zero-copy data plane: request images and reply logits are
 //! `Arc<[f32]>`, so submission, routing and reply fan-out only bump
 //! refcounts.  A single-request chunk hands its image straight to the
 //! board ([`BatchInput::Shared`]); multi-request chunks gather into a
-//! per-batcher staging buffer that the board returns after execution,
-//! so steady-state batch assembly allocates nothing.
+//! per-batcher staging buffer that the board returns after execution.
+//! Replies of multi-request chunks draw their per-request logits
+//! buffers from a per-batcher [`ReplySlab`] that recycles a slot as
+//! soon as its last `Arc` drops, so steady-state batch assembly *and*
+//! reply scatter allocate nothing.
 //!
-//! Pure std threads: the batcher is a thread consuming a bounded mpsc
-//! queue; replies travel over per-request rendezvous channels.
+//! Pure std threads: the batcher is a thread consuming its source;
+//! replies travel over per-request rendezvous channels.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::board::{BatchInput, BatchResult, BoardHandle};
+use super::router::{Popped, StealPool};
 use crate::Result;
 
 /// One in-flight inference request.
@@ -39,7 +48,8 @@ pub struct Request {
 pub struct Reply {
     pub id: u64,
     /// This request's logits.  For batch-1 chunks this shares the
-    /// board's output buffer (no copy); clones only bump a refcount.
+    /// board's output buffer (no copy); larger chunks borrow a slab
+    /// slot.  Clones only bump a refcount.
     pub logits: Arc<[f32]>,
     pub argmax: usize,
     /// Batch this request was served in.
@@ -51,6 +61,102 @@ pub struct Reply {
     pub fpga_ms: f64,
     /// End-to-end latency including queueing, filled by the batcher.
     pub latency_ms: f64,
+}
+
+/// Where a batcher's requests come from.
+pub enum RequestSource {
+    /// Dedicated per-board channel.
+    Channel(Receiver<Request>),
+    /// Shared stealing pool (this batcher's board index inside it).
+    Stealing { pool: Arc<StealPool>, board: usize },
+}
+
+impl RequestSource {
+    /// Block for the next request; `None` when the source closed.
+    fn recv(&self) -> Option<Request> {
+        match self {
+            RequestSource::Channel(rx) => rx.recv().ok(),
+            RequestSource::Stealing { pool, board } => pool.pop(*board),
+        }
+    }
+
+    /// Drain without waiting.
+    fn try_recv(&self) -> Option<Request> {
+        match self {
+            RequestSource::Channel(rx) => rx.try_recv().ok(),
+            RequestSource::Stealing { pool, board } => pool.try_pop(*board),
+        }
+    }
+
+    /// Wait at most `timeout` for the next request.
+    fn recv_timeout(&self, timeout: Duration) -> Popped {
+        match self {
+            RequestSource::Channel(rx) => match rx.recv_timeout(timeout) {
+                Ok(r) => Popped::Req(r),
+                Err(RecvTimeoutError::Timeout) => Popped::TimedOut,
+                Err(RecvTimeoutError::Disconnected) => Popped::Closed,
+            },
+            RequestSource::Stealing { pool, board } => {
+                pool.pop_timeout(*board, timeout)
+            }
+        }
+    }
+}
+
+impl From<Receiver<Request>> for RequestSource {
+    fn from(rx: Receiver<Request>) -> Self {
+        RequestSource::Channel(rx)
+    }
+}
+
+/// Pool of reusable `classes`-sized logits buffers for multi-request
+/// chunks.
+///
+/// A slot is handed out as an `Arc<[f32]>` clone; once the requester
+/// drops its `Reply` the slot's strong count returns to 1 and
+/// [`ReplySlab::take`] recycles it via `Arc::get_mut` — the reply
+/// path stops allocating once the pool is warm.  Retention is capped:
+/// when every slot is still referenced and the pool is at capacity,
+/// the buffer is allocated untracked (a burst beyond the cap degrades
+/// to the old per-reply allocation instead of growing forever).
+pub struct ReplySlab {
+    classes: usize,
+    slots: Vec<Arc<[f32]>>,
+}
+
+/// Retained slots per batcher; beyond this, overflow buffers are
+/// allocated untracked.
+const SLAB_CAP: usize = 256;
+
+impl ReplySlab {
+    pub fn new(classes: usize) -> Self {
+        ReplySlab { classes: classes.max(1), slots: Vec::new() }
+    }
+
+    /// Number of retained slots (diagnostics/tests).
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Copy `src` into a recycled (or new) buffer and share it.
+    pub fn take(&mut self, src: &[f32]) -> Arc<[f32]> {
+        debug_assert_eq!(src.len(), self.classes);
+        for slot in self.slots.iter_mut() {
+            if let Some(buf) = Arc::get_mut(slot) {
+                buf.copy_from_slice(src);
+                return slot.clone();
+            }
+        }
+        let fresh: Arc<[f32]> = Arc::from(src);
+        if self.slots.len() < SLAB_CAP {
+            self.slots.push(fresh.clone());
+        }
+        fresh
+    }
 }
 
 /// Batcher configuration (a view of `config::ServingConfig`).
@@ -76,10 +182,10 @@ pub fn plan_chunks(mut n: usize, sizes: &[usize]) -> Vec<usize> {
     out
 }
 
-/// Per-board batching loop: drain the queue, plan chunks, execute,
-/// scatter replies.  Runs until the request channel closes.
+/// Per-board batching loop: drain the source, plan chunks, execute,
+/// scatter replies.  Runs until the source closes.
 pub fn run_batcher(
-    rx: Receiver<Request>,
+    source: RequestSource,
     board: &BoardHandle,
     cfg: &BatcherConfig,
     artifact_for_batch: impl Fn(usize) -> String,
@@ -89,16 +195,18 @@ pub fn run_batcher(
     // Reusable gather buffer for multi-request chunks; the board hands
     // it back inside the BatchResult so its capacity is recycled.
     let mut staging: Vec<f32> = Vec::new();
+    // Reusable reply buffers for multi-request chunks.
+    let mut slab = ReplySlab::new(classes);
     loop {
         // Block for the first request of a batch.
-        let Ok(first) = rx.recv() else { break };
+        let Some(first) = source.recv() else { break };
         let mut pending = vec![first];
 
         // Eagerly drain whatever is already queued (no waiting).
         while pending.len() < cfg.max_batch {
-            match rx.try_recv() {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
+            match source.try_recv() {
+                Some(r) => pending.push(r),
+                None => break,
             }
         }
 
@@ -114,10 +222,9 @@ pub fn run_batcher(
                 if now >= deadline {
                     break;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
+                match source.recv_timeout(deadline - now) {
+                    Popped::Req(r) => pending.push(r),
+                    Popped::TimedOut | Popped::Closed => break,
                 }
             }
         }
@@ -145,7 +252,7 @@ pub fn run_batcher(
                     staging = buf;
                 }
             }
-            scatter(reqs, result, board.index, classes);
+            scatter(reqs, result, board.index, classes, &mut slab);
         }
     }
 }
@@ -156,19 +263,21 @@ fn scatter(
     result: Result<BatchResult>,
     board: usize,
     classes: usize,
+    slab: &mut ReplySlab,
 ) {
     match result {
         Ok(batch) => {
             let n = reqs.len();
             for (i, r) in reqs.into_iter().enumerate() {
                 // Batch of one: the whole output buffer is this
-                // request's logits — share it.  Larger batches carve
-                // one small per-request slice (classes floats).
+                // request's logits — share it.  Larger batches copy
+                // one small per-request slice into a recycled slab
+                // slot (classes floats, no allocation when warm).
                 let logits: Arc<[f32]> =
                     if n == 1 && batch.logits.len() == classes {
                         batch.logits.clone()
                     } else {
-                        Arc::from(
+                        slab.take(
                             &batch.logits[i * classes..(i + 1) * classes],
                         )
                     };
@@ -277,10 +386,12 @@ mod tests {
             fpga_ms: 0.2,
             staging: None,
         };
-        scatter(vec![req], Ok(result), 0, 3);
+        let mut slab = ReplySlab::new(3);
+        scatter(vec![req], Ok(result), 0, 3, &mut slab);
         let reply = rx.recv().unwrap().unwrap();
         assert_eq!(reply.argmax, 1);
         assert!(Arc::ptr_eq(&reply.logits, &logits), "must share, not copy");
+        assert!(slab.is_empty(), "batch-1 replies never touch the slab");
     }
 
     #[test]
@@ -300,12 +411,73 @@ mod tests {
             fpga_ms: 0.2,
             staging: None,
         };
-        scatter(vec![mk(0, tx1), mk(1, tx2)], Ok(result), 0, 2);
+        let mut slab = ReplySlab::new(2);
+        scatter(vec![mk(0, tx1), mk(1, tx2)], Ok(result), 0, 2, &mut slab);
         let a = rx1.recv().unwrap().unwrap();
         let b = rx2.recv().unwrap().unwrap();
         assert_eq!(&a.logits[..], &[0.9, 0.1]);
         assert_eq!(&b.logits[..], &[0.2, 0.8]);
         assert_eq!(a.argmax, 0);
         assert_eq!(b.argmax, 1);
+        assert_eq!(slab.len(), 2, "both replies drew slab slots");
+    }
+
+    #[test]
+    fn reply_slab_recycles_released_slots() {
+        let mut slab = ReplySlab::new(4);
+        let a = slab.take(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(slab.len(), 1);
+        let a_ptr = Arc::as_ptr(&a);
+        // Slot still referenced: a second take must not reuse it.
+        let b = slab.take(&[5.0, 6.0, 7.0, 8.0]);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(slab.len(), 2);
+        assert_eq!(&a[..], &[1.0, 2.0, 3.0, 4.0]);
+        // Release the first reply: its slot must be recycled in place.
+        drop(a);
+        let c = slab.take(&[9.0, 9.5, 9.75, 10.0]);
+        assert_eq!(Arc::as_ptr(&c), a_ptr, "released slot reused");
+        assert_eq!(slab.len(), 2, "no growth when a slot is free");
+        assert_eq!(&c[..], &[9.0, 9.5, 9.75, 10.0]);
+        // The still-held reply is untouched by the recycling write.
+        assert_eq!(&b[..], &[5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn reply_slab_caps_retention() {
+        let mut slab = ReplySlab::new(1);
+        let held: Vec<Arc<[f32]>> =
+            (0..SLAB_CAP + 10).map(|i| slab.take(&[i as f32])).collect();
+        assert_eq!(slab.len(), SLAB_CAP, "retention bounded");
+        // Every handed-out buffer still owns its own value.
+        for (i, h) in held.iter().enumerate() {
+            assert_eq!(h[0], i as f32);
+        }
+    }
+
+    #[test]
+    fn channel_source_roundtrip() {
+        let (tx, rx) = std::sync::mpsc::sync_channel(4);
+        let source: RequestSource = rx.into();
+        tx.send(dummy(1)).unwrap();
+        assert_eq!(source.recv().unwrap().id, 1);
+        assert!(source.try_recv().is_none());
+        tx.send(dummy(2)).unwrap();
+        match source.recv_timeout(Duration::from_millis(50)) {
+            Popped::Req(r) => assert_eq!(r.id, 2),
+            _ => panic!("expected a request"),
+        }
+        drop(tx);
+        assert!(source.recv().is_none());
+    }
+
+    fn dummy(id: u64) -> Request {
+        let (tx, _rx) = std::sync::mpsc::sync_channel(1);
+        Request {
+            id,
+            image: Vec::new().into(),
+            submitted: Instant::now(),
+            reply: tx,
+        }
     }
 }

@@ -201,23 +201,28 @@ fn worker(
     }
     let _ = ready.send(Ok(()));
 
-    // The FPGA prediction depends only on (spec, batch): memoize it.
-    let mut fpga_ms_by_batch: HashMap<usize, f64> = HashMap::new();
+    // The FPGA prediction depends only on (spec, batch, policy):
+    // memoize per (batch, overlap) so a future per-job policy override
+    // can never alias a stale prediction for the same batch size.
+    let mut fpga_ms_memo: HashMap<(usize, OverlapPolicy), f64> =
+        HashMap::new();
 
     while let Ok(job) = rx.recv() {
         let t0 = Instant::now();
         let out = engine.execute(&job.artifact, job.input.as_slice());
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let fpga_ms = *fpga_ms_by_batch.entry(job.batch).or_insert_with(|| {
-            simulate_model(
-                &spec.model,
-                spec.device,
-                &spec.design,
-                job.batch,
-                spec.overlap,
-            )
-            .time_ms()
-        });
+        let fpga_ms = *fpga_ms_memo
+            .entry((job.batch, spec.overlap))
+            .or_insert_with(|| {
+                simulate_model(
+                    &spec.model,
+                    spec.device,
+                    &spec.design,
+                    job.batch,
+                    spec.overlap,
+                )
+                .time_ms()
+            });
         if spec.pace == Pace::Fpga
             && fpga_ms / 1e3 > t0.elapsed().as_secs_f64()
         {

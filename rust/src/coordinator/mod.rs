@@ -9,9 +9,12 @@
 //!   + FPGA cycle model timing, optionally pacing the board);
 //! - [`batcher`] — dynamic batching onto the AOT'd batch sizes over a
 //!   zero-copy data plane (`Arc<[f32]>` images/logits, reusable
-//!   staging buffers — see the module docs);
-//! - [`router`]  — round-robin / least-outstanding board routing with
-//!   admission control;
+//!   staging buffers, slab-recycled reply logits — see the module
+//!   docs);
+//! - [`router`]  — round-robin / least-outstanding / work-stealing
+//!   board routing with admission control (idle boards steal queued
+//!   requests from loaded peers, so one slow batch cannot strand
+//!   work);
 //! - [`service`] — the facade: `classify()`, `submit()`, `run_trace()`;
 //! - [`metrics`] — latency histograms for the reports.
 //!
@@ -25,8 +28,10 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use batcher::{argmax, plan_chunks, Reply, Request};
+pub use batcher::{
+    argmax, plan_chunks, Reply, ReplySlab, Request, RequestSource,
+};
 pub use board::{BatchInput, BatchResult, BoardHandle, BoardSpec, Pace};
 pub use metrics::{LatencyHistogram, LatencySummary};
-pub use router::{Policy, Router};
+pub use router::{Policy, Router, StealPool};
 pub use service::{InferenceService, PendingReply, ServeReport};

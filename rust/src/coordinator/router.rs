@@ -4,15 +4,26 @@
 //! - [`Policy::RoundRobin`] — stateless rotation;
 //! - [`Policy::LeastOutstanding`] — pick the board with the fewest
 //!   in-flight requests (vllm-router's default for homogeneous
-//!   replicas).
+//!   replicas);
+//! - [`Policy::WorkStealing`] — requests are routed to the least
+//!   loaded board's deque in a shared [`StealPool`], and an *idle*
+//!   board steals the oldest queued request from its most loaded peer.
+//!   Routing picks a queue at submit time only, so without stealing a
+//!   slow batch on one board strands every request behind it; with
+//!   stealing the pool drains at the speed of whichever boards are
+//!   free (the starvation regression test pins this).
 //!
-//! The router owns one bounded mpsc sender per board batcher (the
-//! bound is the admission-control queue depth); outstanding counters
-//! are decremented by [`RouterGuard`] when the reply resolves.
+//! For the channel policies the router owns one bounded mpsc sender
+//! per board batcher (the bound is the admission-control queue depth);
+//! the stealing pool bounds each board's deque by the same depth.
+//! Outstanding counters are decremented by [`RouterGuard`] when the
+//! reply resolves.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::batcher::Request;
 use crate::Result;
@@ -22,11 +33,184 @@ use crate::Result;
 pub enum Policy {
     RoundRobin,
     LeastOutstanding,
+    WorkStealing,
+}
+
+/// Outcome of a blocking pool pop.
+pub enum Popped {
+    Req(Request),
+    TimedOut,
+    Closed,
+}
+
+struct PoolState {
+    queues: Vec<VecDeque<Request>>,
+    closed: bool,
+}
+
+/// Shared per-board request deques with stealing (see module docs).
+///
+/// Submitters push onto a chosen board's deque; each board pops its
+/// own deque first and, when idle, steals the oldest request from the
+/// most loaded peer.  All deques share one mutex — request rates are
+/// bounded by board execution times, so contention is negligible next
+/// to a batch execution.
+pub struct StealPool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    capacity: usize,
+    boards: usize,
+}
+
+impl StealPool {
+    /// `capacity` bounds each board's deque (admission control).
+    pub fn new(boards: usize, capacity: usize) -> Arc<Self> {
+        Arc::new(StealPool {
+            state: Mutex::new(PoolState {
+                queues: (0..boards).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+            boards,
+        })
+    }
+
+    pub fn boards(&self) -> usize {
+        self.boards
+    }
+
+    /// Requests currently queued for `board` (not yet popped/stolen).
+    pub fn queued(&self, board: usize) -> usize {
+        self.state.lock().unwrap().queues[board].len()
+    }
+
+    /// Non-blocking enqueue; hands the request back when the board's
+    /// deque is full or the pool is closed.
+    pub fn try_push(
+        &self,
+        board: usize,
+        req: Request,
+    ) -> std::result::Result<(), (Request, bool)> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err((req, true));
+        }
+        if st.queues[board].len() >= self.capacity {
+            return Err((req, false));
+        }
+        st.queues[board].push_back(req);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking enqueue (parks while the board's deque is full);
+    /// hands the request back only if the pool closes.
+    pub fn push(
+        &self,
+        board: usize,
+        req: Request,
+    ) -> std::result::Result<(), Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(req);
+            }
+            if st.queues[board].len() < self.capacity {
+                st.queues[board].push_back(req);
+                drop(st);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn take(st: &mut PoolState, board: usize) -> Option<Request> {
+        if let Some(r) = st.queues[board].pop_front() {
+            return Some(r);
+        }
+        // Idle: steal the oldest request from the most loaded peer.
+        let victim = st
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(i, q)| *i != board && !q.is_empty())
+            .max_by_key(|(_, q)| q.len())
+            .map(|(i, _)| i)?;
+        st.queues[victim].pop_front()
+    }
+
+    /// Non-blocking dequeue for `board` (own deque, then steal).
+    pub fn try_pop(&self, board: usize) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        let r = Self::take(&mut st, board);
+        if r.is_some() {
+            drop(st);
+            // A slot freed: wake blocked pushers.
+            self.cv.notify_all();
+        }
+        r
+    }
+
+    /// Blocking dequeue; `None` once the pool is closed and drained.
+    pub fn pop(&self, board: usize) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = Self::take(&mut st, board) {
+                drop(st);
+                self.cv.notify_all();
+                return Some(r);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue with a deadline (the batcher's flush window).
+    pub fn pop_timeout(&self, board: usize, timeout: Duration) -> Popped {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = Self::take(&mut st, board) {
+                drop(st);
+                self.cv.notify_all();
+                return Popped::Req(r);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::TimedOut;
+            }
+            let (guard, _) =
+                self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close the pool: pops drain what is queued then return
+    /// `None`/`Closed`; pushes fail.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+enum Backend {
+    /// One bounded mpsc sender per board batcher.
+    Channels(Vec<SyncSender<Request>>),
+    /// Shared stealing pool consumed by all batchers.
+    Stealing(Arc<StealPool>),
 }
 
 /// Router over N board queues.
 pub struct Router {
-    queues: Vec<SyncSender<Request>>,
+    backend: Backend,
     outstanding: Vec<Arc<AtomicUsize>>,
     next: AtomicU64,
     policy: Policy,
@@ -45,14 +229,41 @@ impl Drop for RouterGuard {
 }
 
 impl Router {
+    /// Channel-backed router (`RoundRobin` / `LeastOutstanding`).
+    /// `WorkStealing` needs the shared pool — use [`Router::stealing`].
     pub fn new(queues: Vec<SyncSender<Request>>, policy: Policy) -> Self {
+        debug_assert!(
+            policy != Policy::WorkStealing,
+            "WorkStealing needs Router::stealing(pool)"
+        );
         let outstanding =
             queues.iter().map(|_| Arc::new(AtomicUsize::new(0))).collect();
-        Router { queues, outstanding, next: AtomicU64::new(0), policy }
+        Router {
+            backend: Backend::Channels(queues),
+            outstanding,
+            next: AtomicU64::new(0),
+            policy,
+        }
+    }
+
+    /// Pool-backed router: work-stealing policy.
+    pub fn stealing(pool: Arc<StealPool>) -> Self {
+        let outstanding = (0..pool.boards())
+            .map(|_| Arc::new(AtomicUsize::new(0)))
+            .collect();
+        Router {
+            backend: Backend::Stealing(pool),
+            outstanding,
+            next: AtomicU64::new(0),
+            policy: Policy::WorkStealing,
+        }
     }
 
     pub fn boards(&self) -> usize {
-        self.queues.len()
+        match &self.backend {
+            Backend::Channels(q) => q.len(),
+            Backend::Stealing(p) => p.boards(),
+        }
     }
 
     /// Pick a board index for a new request.
@@ -60,9 +271,11 @@ impl Router {
         match self.policy {
             Policy::RoundRobin => {
                 (self.next.fetch_add(1, Ordering::Relaxed)
-                    % self.queues.len() as u64) as usize
+                    % self.boards() as u64) as usize
             }
-            Policy::LeastOutstanding => self
+            // Work stealing routes like least-outstanding (affinity to
+            // the idlest board); the stealing itself happens pop-side.
+            Policy::LeastOutstanding | Policy::WorkStealing => self
                 .outstanding
                 .iter()
                 .enumerate()
@@ -78,7 +291,11 @@ impl Router {
         let idx = self.pick();
         let counter = self.outstanding[idx].clone();
         counter.fetch_add(1, Ordering::Relaxed);
-        if self.queues[idx].send(req).is_err() {
+        let sent = match &self.backend {
+            Backend::Channels(queues) => queues[idx].send(req).is_ok(),
+            Backend::Stealing(pool) => pool.push(idx, req).is_ok(),
+        };
+        if !sent {
             counter.fetch_sub(1, Ordering::Relaxed);
             return Err(anyhow::anyhow!("board {idx} queue closed"));
         }
@@ -90,15 +307,26 @@ impl Router {
         let idx = self.pick();
         let counter = self.outstanding[idx].clone();
         counter.fetch_add(1, Ordering::Relaxed);
-        match self.queues[idx].try_send(req) {
-            Ok(()) => Ok(RouterGuard { counter }),
-            Err(TrySendError::Full(_)) => {
+        let err = match &self.backend {
+            Backend::Channels(queues) => match queues[idx].try_send(req) {
+                Ok(()) => None,
+                Err(TrySendError::Full(_)) => Some(false),
+                Err(TrySendError::Disconnected(_)) => Some(true),
+            },
+            Backend::Stealing(pool) => match pool.try_push(idx, req) {
+                Ok(()) => None,
+                Err((_, closed)) => Some(closed),
+            },
+        };
+        match err {
+            None => Ok(RouterGuard { counter }),
+            Some(closed) => {
                 counter.fetch_sub(1, Ordering::Relaxed);
-                Err(anyhow::anyhow!("board {idx} queue full (admission)"))
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                counter.fetch_sub(1, Ordering::Relaxed);
-                Err(anyhow::anyhow!("board {idx} queue closed"))
+                if closed {
+                    Err(anyhow::anyhow!("board {idx} queue closed"))
+                } else {
+                    Err(anyhow::anyhow!("board {idx} queue full (admission)"))
+                }
             }
         }
     }
@@ -112,7 +340,6 @@ impl Router {
 mod tests {
     use super::*;
     use std::sync::mpsc;
-    use std::time::Instant;
 
     fn dummy_request(id: u64) -> Request {
         let (tx, _rx) = mpsc::sync_channel(1);
@@ -176,5 +403,107 @@ mod tests {
         assert!(err.to_string().contains("full"));
         // Rejected request must not leak an outstanding count.
         assert_eq!(router.outstanding_of(0), 1);
+    }
+
+    // ------------------------------------------------- work stealing
+
+    #[test]
+    fn idle_board_steals_oldest_from_loaded_peer() {
+        let pool = StealPool::new(2, 8);
+        for i in 0..3 {
+            pool.try_push(0, dummy_request(i)).map_err(|_| ()).unwrap();
+        }
+        // Board 1's own deque is empty: it must steal board 0's head.
+        let stolen = pool.try_pop(1).unwrap();
+        assert_eq!(stolen.id, 0, "steal takes the oldest request");
+        assert_eq!(pool.queued(0), 2);
+        // Board 0 still pops its own queue in order.
+        assert_eq!(pool.pop(0).unwrap().id, 1);
+    }
+
+    #[test]
+    fn steal_pool_bounds_each_board_queue() {
+        let pool = StealPool::new(2, 1);
+        pool.try_push(0, dummy_request(0)).map_err(|_| ()).unwrap();
+        let (req, closed) =
+            pool.try_push(0, dummy_request(1)).err().unwrap();
+        assert!(!closed);
+        assert_eq!(req.id, 1);
+        // The other board's deque is independent.
+        pool.try_push(1, dummy_request(2)).map_err(|_| ()).unwrap();
+    }
+
+    #[test]
+    fn closed_pool_rejects_and_drains() {
+        let pool = StealPool::new(1, 4);
+        pool.try_push(0, dummy_request(7)).map_err(|_| ()).unwrap();
+        pool.close();
+        // Queued work drains after close...
+        assert_eq!(pool.pop(0).unwrap().id, 7);
+        // ...then pops report closed and pushes fail.
+        assert!(pool.pop(0).is_none());
+        let (_, closed) = pool.try_push(0, dummy_request(8)).err().unwrap();
+        assert!(closed);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_on_empty_pool() {
+        let pool = StealPool::new(1, 4);
+        match pool.pop_timeout(0, Duration::from_millis(10)) {
+            Popped::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+    }
+
+    #[test]
+    fn starvation_regression_stuck_board_cannot_strand_work() {
+        // Board 0's batcher is wedged (never pops).  Every request was
+        // routed to board 0.  Without stealing they would wait forever;
+        // board 1 must drain all of them.
+        let pool = StealPool::new(2, 64);
+        let router = Router::stealing(pool.clone());
+        let mut guards = Vec::new();
+        for i in 0..16 {
+            // Pin the outstanding counter of board 1 higher so pick()
+            // routes everything to board 0, like a burst that landed
+            // just before board 0 wedged.
+            router.outstanding[1].store(1000, Ordering::Relaxed);
+            guards.push(router.route(dummy_request(i)).unwrap());
+        }
+        assert_eq!(pool.queued(0), 16);
+        assert_eq!(pool.queued(1), 0);
+
+        let thief = std::thread::spawn({
+            let pool = pool.clone();
+            move || {
+                let mut got = Vec::new();
+                while let Popped::Req(r) =
+                    pool.pop_timeout(1, Duration::from_secs(5))
+                {
+                    got.push(r.id);
+                    if got.len() == 16 {
+                        break;
+                    }
+                }
+                got
+            }
+        });
+        let got = thief.join().unwrap();
+        // All 16 drained by the idle board, oldest first.
+        assert_eq!(got, (0..16).collect::<Vec<u64>>());
+        assert_eq!(pool.queued(0), 0);
+    }
+
+    #[test]
+    fn stealing_router_admission_control() {
+        let pool = StealPool::new(1, 1);
+        let router = Router::stealing(pool.clone());
+        let _g = router.try_route(dummy_request(0)).unwrap();
+        let err = router.try_route(dummy_request(1)).unwrap_err();
+        assert!(err.to_string().contains("full"));
+        assert_eq!(router.outstanding_of(0), 1);
+        pool.close();
+        let err = router.try_route(dummy_request(2)).unwrap_err();
+        assert!(err.to_string().contains("closed"));
     }
 }

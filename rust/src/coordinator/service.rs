@@ -6,6 +6,7 @@
 //! whole workload trace with [`InferenceService::run_trace`] (the E4
 //! end-to-end experiment).  Pure std threads.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -13,10 +14,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
-use super::batcher::{run_batcher, BatcherConfig, Reply, Request};
+use super::batcher::{run_batcher, BatcherConfig, Reply, Request, RequestSource};
 use super::board::{BoardHandle, BoardSpec, Pace};
 use super::metrics::{LatencyHistogram, LatencySummary};
-use super::router::{Policy, Router, RouterGuard};
+use super::router::{Policy, Router, RouterGuard, StealPool};
 use crate::config::RunConfig;
 use crate::data::TraceRequest;
 use crate::models;
@@ -77,9 +78,20 @@ pub struct InferenceService {
     router: Router,
     image_numel: usize,
     next_id: AtomicU64,
-    /// Keep board handles alive (dropping them stops the workers);
-    /// batcher threads exit when their queue senders drop.
+    /// The shared pool under `Policy::WorkStealing` (closed on drop so
+    /// the batcher threads exit; channel batchers exit when their
+    /// queue senders drop with the router).
+    steal_pool: Option<Arc<StealPool>>,
+    /// Keep board handles alive (dropping them stops the workers).
     _boards: Vec<Arc<BoardHandle>>,
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        if let Some(pool) = &self.steal_pool {
+            pool.close();
+        }
+    }
 }
 
 impl InferenceService {
@@ -94,20 +106,29 @@ impl InferenceService {
         let device = cfg.device_profile()?;
         let design = cfg.design_params()?;
 
-        // Discover which batch sizes have artifacts.
+        // Discover which batch sizes have artifacts.  Prefer the
+        // packed-weights layout — it executes identically but uploads
+        // ONE weight buffer per model (the batched-upload warm-up
+        // win) — but only when it covers every batch size the
+        // per-tensor layout offers: mixing layouts would keep two
+        // device-resident copies of the model's weights.
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        let mut sizes: Vec<usize> = manifest
-            .artifacts
-            .iter()
-            .filter(|a| {
-                a.model == cfg.model
-                    && a.conv_impl == cfg.conv_impl
-                    && a.batch <= cfg.serving.max_batch
-            })
-            .map(|a| a.batch)
-            .collect();
+        let mut plain: HashMap<usize, String> = HashMap::new();
+        let mut packed: HashMap<usize, String> = HashMap::new();
+        for a in manifest.artifacts.iter().filter(|a| {
+            a.model == cfg.model
+                && a.conv_impl == cfg.conv_impl
+                && a.batch <= cfg.serving.max_batch
+        }) {
+            let layout =
+                if a.packed_weights { &mut packed } else { &mut plain };
+            layout.entry(a.batch).or_insert_with(|| a.name.clone());
+        }
+        let use_packed = !packed.is_empty()
+            && plain.keys().all(|b| packed.contains_key(b));
+        let by_batch = if use_packed { packed } else { plain };
+        let mut sizes: Vec<usize> = by_batch.keys().copied().collect();
         sizes.sort_unstable();
-        sizes.dedup();
         if sizes.first() != Some(&1) {
             return Err(anyhow!(
                 "no batch-1 artifact for {} ({}); have {:?}",
@@ -121,16 +142,15 @@ impl InferenceService {
         let image_numel = c * h * w;
         let classes = model.propagate().last().unwrap().out_shape.numel();
 
-        let model_name = cfg.model.clone();
-        let impl_name = cfg.conv_impl.clone();
-        let warm: Vec<String> = sizes
-            .iter()
-            .map(|b| format!("{model_name}_b{b}_{impl_name}"))
-            .collect();
+        let warm: Vec<String> =
+            sizes.iter().map(|b| by_batch[b].clone()).collect();
 
+        let board_count = cfg.serving.boards.max(1);
+        let steal_pool = (policy == Policy::WorkStealing)
+            .then(|| StealPool::new(board_count, cfg.serving.queue_depth));
         let mut queues = Vec::new();
         let mut boards = Vec::new();
-        for index in 0..cfg.serving.boards.max(1) {
+        for index in 0..board_count {
             let spec = BoardSpec {
                 index,
                 artifacts_dir: cfg.artifacts_dir.clone(),
@@ -142,36 +162,50 @@ impl InferenceService {
                 warm: warm.clone(),
             };
             let board = Arc::new(BoardHandle::spawn(spec)?);
-            let (tx, rx) =
-                mpsc::sync_channel::<Request>(cfg.serving.queue_depth);
+            let source = match &steal_pool {
+                Some(pool) => RequestSource::Stealing {
+                    pool: pool.clone(),
+                    board: index,
+                },
+                None => {
+                    let (tx, rx) = mpsc::sync_channel::<Request>(
+                        cfg.serving.queue_depth,
+                    );
+                    queues.push(tx);
+                    RequestSource::Channel(rx)
+                }
+            };
             let bc = BatcherConfig {
                 max_batch: *sizes.last().unwrap(),
                 max_wait: Duration::from_millis(cfg.serving.max_wait_ms),
                 sizes: sizes.clone(),
             };
             let board2 = board.clone();
-            let mn = model_name.clone();
-            let im = impl_name.clone();
+            let names = by_batch.clone();
             std::thread::Builder::new()
                 .name(format!("batcher-{index}"))
                 .spawn(move || {
                     run_batcher(
-                        rx,
+                        source,
                         &board2,
                         &bc,
-                        move |b| format!("{mn}_b{b}_{im}"),
+                        move |b| names[&b].clone(),
                         image_numel,
                         classes,
                     )
                 })?;
-            queues.push(tx);
             boards.push(board);
         }
 
+        let router = match &steal_pool {
+            Some(pool) => Router::stealing(pool.clone()),
+            None => Router::new(queues, policy),
+        };
         Ok(InferenceService {
-            router: Router::new(queues, policy),
+            router,
             image_numel,
             next_id: AtomicU64::new(0),
+            steal_pool,
             _boards: boards,
         })
     }
@@ -355,6 +389,42 @@ mod tests {
             0.0,
         );
         assert_eq!(report.errors, 0);
+    }
+
+    #[test]
+    fn packed_artifact_preferred_when_present() {
+        // With a packed-weights artifact exported for the model, the
+        // service must select it (identical numerics, one weight
+        // upload); without one it falls back to the per-tensor
+        // layout — either way classify round-trips.
+        let Some(mut cfg) = cfg_or_skip() else { return };
+        cfg.conv_impl = "jnp".into();
+        let svc =
+            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
+                .unwrap();
+        let reply =
+            svc.classify(data::synth_images(1, (3, 16, 16), 3)).unwrap();
+        assert_eq!(reply.logits.len(), 10);
+    }
+
+    #[test]
+    fn work_stealing_service_drains_burst() {
+        let Some(mut cfg) = cfg_or_skip() else { return };
+        cfg.serving.boards = 2;
+        let svc = InferenceService::start(
+            &cfg,
+            Pace::None,
+            Policy::WorkStealing,
+        )
+        .unwrap();
+        let trace = data::burst_trace(10);
+        let report = svc.run_trace(
+            &trace,
+            |id| data::synth_images(1, (3, 16, 16), id),
+            0.0,
+        );
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.requests, 10);
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Design-space exploration — the paper's "the design space of the
 //! proposed architecture was fully explored" claim (experiment E2).
 //!
-//! Sweeps `(vec_size, lane_num)` under a device's DSP/M20K/LUT budget,
-//! evaluates each feasible point, and returns all points plus the
-//! latency-optimal and density-optimal (GOPS/DSP) choices.
+//! Sweeps `(vec_size, lane_num)` — and, through [`SweepSpace`], channel
+//! depth and the DDR overlap policy — under a device's DSP/M20K/LUT
+//! budget, evaluates each feasible point, and returns all points plus
+//! the latency-optimal and density-optimal (GOPS/DSP) choices.
 //!
 //! The sweep is engineered for interactive use on big models:
 //!
@@ -20,12 +21,17 @@
 //!   its closed-form fast path, or the O(tokens) exact oracle
 //!   ([`Fidelity`]); `BENCH_dse.json` tracks the fast-vs-exact sweep
 //!   speedup across PRs.
+//! - **overlap × depth dimensions** — now that point evaluation is
+//!   cheap and parallel, [`explore_space`] folds `channel_depth` and
+//!   `OverlapPolicy` (on = `Full` cross-group pipelining, off =
+//!   `WithinGroup`) into the grid; deeper channels buy overlap
+//!   headroom but spend M20K, which the feasibility pruning charges.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::device::DeviceProfile;
-use super::pipeline::{simulate_tokens, simulate_tokens_exact};
+use super::pipeline::{simulate_tokens_exact_policy, simulate_tokens_policy};
 use super::resources::{resource_usage, ResourceUsage};
 use super::timing::{simulate_model, DesignParams, OverlapPolicy};
 use crate::models::Model;
@@ -34,6 +40,7 @@ use crate::models::Model;
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
     pub params: DesignParams,
+    pub overlap: OverlapPolicy,
     pub usage: ResourceUsage,
     pub feasible: bool,
     /// Per-image latency; `f64::INFINITY` for pruned infeasible points.
@@ -59,6 +66,68 @@ pub enum Fidelity {
 pub const VEC_CANDIDATES: [usize; 5] = [4, 8, 16, 32, 64];
 pub const LANE_CANDIDATES: [usize; 12] = [1, 2, 3, 4, 6, 8, 11, 16, 22, 32, 48, 64];
 
+/// Channel-depth candidates for the extended sweep: FIFO depth trades
+/// M20K for cross-stage slack (and overlap headroom under `Full`).
+pub const DEPTH_CANDIDATES: [usize; 3] = [128, 512, 2048];
+
+/// The grid [`explore_space`] walks.  The default space reproduces the
+/// classic `(vec, lane)` sweep at the design depth under the paper's
+/// within-group double buffering.
+#[derive(Debug, Clone)]
+pub struct SweepSpace {
+    pub vecs: Vec<usize>,
+    pub lanes: Vec<usize>,
+    pub depths: Vec<usize>,
+    pub overlaps: Vec<OverlapPolicy>,
+}
+
+impl Default for SweepSpace {
+    fn default() -> Self {
+        SweepSpace {
+            vecs: VEC_CANDIDATES.to_vec(),
+            lanes: LANE_CANDIDATES.to_vec(),
+            depths: vec![DesignParams::new(1, 1).channel_depth],
+            overlaps: vec![OverlapPolicy::WithinGroup],
+        }
+    }
+}
+
+impl SweepSpace {
+    /// The extended PR-2 space: overlap on/off × channel depth on top
+    /// of the `(vec, lane)` grid.
+    pub fn with_overlap_and_depth() -> Self {
+        SweepSpace {
+            depths: DEPTH_CANDIDATES.to_vec(),
+            overlaps: vec![
+                OverlapPolicy::WithinGroup,
+                OverlapPolicy::Full,
+            ],
+            ..Self::default()
+        }
+    }
+
+    /// All grid points in deterministic order (vec outer → lane →
+    /// depth → overlap inner).
+    fn grid(&self) -> Vec<(usize, usize, usize, OverlapPolicy)> {
+        let mut out = Vec::with_capacity(
+            self.vecs.len()
+                * self.lanes.len()
+                * self.depths.len()
+                * self.overlaps.len(),
+        );
+        for &v in &self.vecs {
+            for &l in &self.lanes {
+                for &d in &self.depths {
+                    for &o in &self.overlaps {
+                        out.push((v, l, d, o));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Explore the design space of `model` on `device` at `batch` with the
 /// default analytic fidelity.
 pub fn explore(
@@ -69,32 +138,43 @@ pub fn explore(
     explore_with(model, device, batch, Fidelity::Analytic)
 }
 
-/// Explore the design space at an explicit timing fidelity.
-///
-/// Grid order of the result is deterministic (`VEC_CANDIDATES` outer,
-/// `LANE_CANDIDATES` inner) regardless of worker scheduling.
+/// Explore the classic `(vec, lane)` space at an explicit timing
+/// fidelity.
 pub fn explore_with(
     model: &Model,
     device: &DeviceProfile,
     batch: usize,
     fidelity: Fidelity,
 ) -> Vec<DesignPoint> {
-    let grid: Vec<(usize, usize)> = VEC_CANDIDATES
-        .iter()
-        .flat_map(|&v| LANE_CANDIDATES.iter().map(move |&l| (v, l)))
-        .collect();
+    explore_space(model, device, batch, fidelity, &SweepSpace::default())
+}
+
+/// Explore an explicit sweep space at an explicit timing fidelity.
+///
+/// Grid order of the result is deterministic (see [`SweepSpace::grid`])
+/// regardless of worker scheduling.
+pub fn explore_space(
+    model: &Model,
+    device: &DeviceProfile,
+    batch: usize,
+    fidelity: Fidelity,
+    space: &SweepSpace,
+) -> Vec<DesignPoint> {
+    let grid = space.grid();
     let ops_per_image = model.total_ops();
 
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
-        .clamp(1, grid.len());
+        .clamp(1, grid.len().max(1));
 
-    if workers == 1 {
+    if workers <= 1 || grid.len() <= 1 {
         return grid
             .iter()
-            .map(|&(v, l)| {
-                eval_point(model, device, batch, fidelity, ops_per_image, v, l)
+            .map(|&(v, l, d, o)| {
+                eval_point(
+                    model, device, batch, fidelity, ops_per_image, v, l, d, o,
+                )
             })
             .collect();
     }
@@ -111,12 +191,12 @@ pub fn explore_with(
                 let mut local = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    let Some(&(v, l)) = grid.get(i) else { break };
+                    let Some(&(v, l, d, o)) = grid.get(i) else { break };
                     local.push((
                         i,
                         eval_point(
                             model, device, batch, fidelity, ops_per_image,
-                            v, l,
+                            v, l, d, o,
                         ),
                     ));
                 }
@@ -131,6 +211,7 @@ pub fn explore_with(
     indexed.into_iter().map(|(_, p)| p).collect()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn eval_point(
     model: &Model,
     device: &DeviceProfile,
@@ -139,8 +220,11 @@ fn eval_point(
     ops_per_image: u64,
     vec: usize,
     lane: usize,
+    depth: usize,
+    overlap: OverlapPolicy,
 ) -> DesignPoint {
-    let params = DesignParams::new(vec, lane);
+    let mut params = DesignParams::new(vec, lane);
+    params.channel_depth = depth;
     let usage = resource_usage(&params, device);
     let feasible = usage.fits(device);
     if !feasible {
@@ -148,6 +232,7 @@ fn eval_point(
         // be placed.
         return DesignPoint {
             params,
+            overlap,
             usage,
             feasible,
             time_ms: f64::INFINITY,
@@ -157,20 +242,16 @@ fn eval_point(
     }
     let (time_ms, gops) = match fidelity {
         Fidelity::Analytic => {
-            let t = simulate_model(
-                model,
-                device,
-                &params,
-                batch,
-                OverlapPolicy::WithinGroup,
-            );
+            let t = simulate_model(model, device, &params, batch, overlap);
             (t.time_per_image_ms(), t.gops())
         }
         Fidelity::PipelineFast | Fidelity::PipelineExact => {
             let sim = if fidelity == Fidelity::PipelineExact {
-                simulate_tokens_exact(model, device, &params, batch)
+                simulate_tokens_exact_policy(
+                    model, device, &params, batch, overlap,
+                )
             } else {
-                simulate_tokens(model, device, &params, batch)
+                simulate_tokens_policy(model, device, &params, batch, overlap)
             };
             let batch_ms = sim.time_ms();
             let gops = ops_per_image as f64 * batch as f64
@@ -181,6 +262,7 @@ fn eval_point(
     };
     DesignPoint {
         params,
+        overlap,
         usage,
         feasible,
         time_ms,
@@ -368,5 +450,90 @@ mod tests {
         };
         let ratio = at(&pipe) / at(&ana);
         assert!(ratio > 0.75 && ratio < 1.25, "ratio={ratio:.3}");
+    }
+
+    #[test]
+    fn overlap_depth_space_covers_grid_in_order() {
+        let space = SweepSpace::with_overlap_and_depth();
+        let pts = explore_space(
+            &models::tinynet(),
+            &STRATIX10,
+            1,
+            Fidelity::Analytic,
+            &space,
+        );
+        assert_eq!(
+            pts.len(),
+            space.vecs.len()
+                * space.lanes.len()
+                * space.depths.len()
+                * space.overlaps.len()
+        );
+        let mut it = pts.iter();
+        for &v in &space.vecs {
+            for &l in &space.lanes {
+                for &d in &space.depths {
+                    for &o in &space.overlaps {
+                        let p = it.next().unwrap();
+                        assert_eq!(p.params.vec_size, v);
+                        assert_eq!(p.params.lane_num, l);
+                        assert_eq!(p.params.channel_depth, d);
+                        assert_eq!(p.overlap, o);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_on_never_slower_in_sweep() {
+        // At every feasible (vec, lane, depth) point the Full-overlap
+        // twin must be at least as fast as the WithinGroup one — the
+        // relaxation argument, surfaced through the DSE.
+        let space = SweepSpace {
+            vecs: vec![8, 16],
+            lanes: vec![4, 11],
+            depths: vec![128, 512],
+            overlaps: vec![
+                OverlapPolicy::WithinGroup,
+                OverlapPolicy::Full,
+            ],
+        };
+        let pts = explore_space(
+            &models::alexnet(),
+            &STRATIX10,
+            1,
+            Fidelity::PipelineFast,
+            &space,
+        );
+        for pair in pts.chunks(2) {
+            let (within, full) = (&pair[0], &pair[1]);
+            assert_eq!(within.overlap, OverlapPolicy::WithinGroup);
+            assert_eq!(full.overlap, OverlapPolicy::Full);
+            if within.feasible {
+                assert!(
+                    full.time_ms <= within.time_ms * 1.001 + 1e-9,
+                    "vec={} lane={} depth={}: full {} vs within {}",
+                    within.params.vec_size,
+                    within.params.lane_num,
+                    within.params.channel_depth,
+                    full.time_ms,
+                    within.time_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deeper_channels_charged_m20k() {
+        // The depth dimension must not be free: more FIFO depth costs
+        // block RAM in the feasibility model.
+        let mut shallow = DesignParams::new(16, 11);
+        shallow.channel_depth = 128;
+        let mut deep = DesignParams::new(16, 11);
+        deep.channel_depth = 2048;
+        let us = resource_usage(&shallow, &STRATIX10);
+        let ud = resource_usage(&deep, &STRATIX10);
+        assert!(ud.m20k_bytes > us.m20k_bytes);
     }
 }

@@ -13,13 +13,15 @@
 //! [`timing`] encodes those as closed-form per-layer cycle counts
 //! (memoized per layer/design point for sweep reuse); [`pipeline`]
 //! validates them with a token-level simulation of the
-//! channel-connected kernels (bounded FIFOs, backpressure, stalls) and
-//! carries its own closed-form steady-state fast path with the
-//! O(tokens) loop kept as an exact oracle; [`resources`] maps a design
-//! point to DSP/M20K/LUT usage and checks it fits the device; [`dse`]
-//! sweeps the design space in parallel (pruning infeasible points
-//! before timing) like the paper's "fully explored" claim; [`device`]
-//! holds the board profiles.
+//! channel-connected kernels (bounded FIFOs, backpressure, stalls,
+//! and — under `OverlapPolicy::Full` — cross-group overlap with DDR
+//! contention at the boundaries) and carries its own closed-form
+//! steady-state fast paths with the O(tokens) loops kept as exact
+//! oracles; [`resources`] maps a design point to DSP/M20K/LUT usage
+//! and checks it fits the device; [`dse`] sweeps the design space in
+//! parallel (pruning infeasible points before timing) like the
+//! paper's "fully explored" claim, over `(vec, lane)` × channel depth
+//! × overlap policy; [`device`] holds the board profiles.
 
 pub mod channel;
 pub mod device;
@@ -30,8 +32,13 @@ pub mod timing;
 
 pub use channel::Channel;
 pub use device::{DeviceProfile, DEVICES};
-pub use dse::{explore, explore_with, DesignPoint, Fidelity};
-pub use pipeline::{simulate_tokens, simulate_tokens_exact, PipelineSim};
+pub use dse::{
+    explore, explore_space, explore_with, DesignPoint, Fidelity, SweepSpace,
+};
+pub use pipeline::{
+    simulate_tokens, simulate_tokens_exact, simulate_tokens_exact_policy,
+    simulate_tokens_policy, PipelineSim,
+};
 pub use resources::{resource_usage, ResourceUsage};
 pub use timing::{
     simulate_model, DesignParams, LayerTiming, ModelTiming, OverlapPolicy,

@@ -1,5 +1,6 @@
 //! Token-level simulation of the channel-connected kernel pipeline,
-//! with a closed-form steady-state fast path.
+//! with a closed-form steady-state fast path and cross-group
+//! overlapped pipelining.
 //!
 //! Validates the closed-form model in [`super::timing`] by actually
 //! flowing work tokens through MemRd → Conv → Fused(ReLU/LRN/Pool) →
@@ -22,6 +23,41 @@
 //!
 //! which is exact for constant-rate stages and bounded FIFOs.
 //!
+//! ## Overlap policies
+//!
+//! The four kernels are *single physical pipelines* shared by every
+//! fused group (PipeCNN inherits this from its OpenCL structure; FFCNN
+//! deepens it).  How consecutive groups share them is the
+//! [`OverlapPolicy`](super::timing::OverlapPolicy):
+//!
+//! - **`None`** — fully serialized: each group runs MemRd, then
+//!   Conv+Fused, then MemWr to completion (`Σ_s ceil(T·II_s)` per
+//!   group).  The no-double-buffering lower bound.
+//! - **`WithinGroup`** — stages overlap inside a group (the recurrence
+//!   above), but the pipeline drains completely between groups.  This
+//!   was the simulator's only behaviour before the overlapped solver.
+//! - **`Full`** — cross-group pipelining: the groups' token streams
+//!   are *concatenated* through the same 4-stage recurrence, so MemRd
+//!   of group g+1 begins draining DRAM while Conv/MemWr are still
+//!   working on group g's tail — the paper's deeply-cascaded design.
+//!   Rates switch per token at group boundaries, and the bounded
+//!   channels carry backpressure across the boundary.
+//!
+//! ### DDR contention at group boundaries (`Full`)
+//!
+//! While group g's residual MemWr tokens are still committing, MemRd
+//! of group g+1 shares the DRAM port with them.  The writes of the
+//! draining group consume a bandwidth fraction `φ = wr_ii / max_s II_s`
+//! of the shared budget (one token slot moves `wr_bytes` write +
+//! `rd_bytes` read, and only `1-φ` of each cycle's bytes are left for
+//! reads), so until the write frontier of group g retires, group g+1's
+//! MemRd serves each token at the inflated interval `rd_ii / (1-φ)`;
+//! a read straddling the retirement instant finishes the remainder at
+//! full bandwidth ([`contended_finish`] is the piecewise-linear form,
+//! with `φ = 1` degenerating to full serialization behind the writes).
+//! This keeps `Full` a pure relaxation of `WithinGroup`: overlap can
+//! only start *earlier* than the drained schedule, never finish later.
+//!
 //! ## Fast path vs exact oracle
 //!
 //! For constant rates the recurrence has a closed form: bounded FIFOs
@@ -35,15 +71,30 @@
 //! to measure stall and occupancy statistics, then extrapolates:
 //! O(channel_depth) work instead of O(tokens).
 //!
-//! [`run_recurrence_exact`] keeps the full O(tokens) loop as the
-//! oracle.  [`simulate_tokens`] dispatches per group: groups below the
-//! transient size run exact (the fast path would simulate them fully
-//! anyway), larger groups take the fast path unless `FFCNN_EXACT_SIM=1`
-//! forces the oracle everywhere.  [`simulate_tokens_exact`] is the
-//! always-exact entry point used by tests and benches.
+//! The overlapped stream is *piecewise* constant-rate, so the same
+//! argument applies per segment: after a boundary transient every
+//! stage advances exactly `max_s II_s` cycles per token, and a steady
+//! interior of n tokens is equivalent to adding `n · max_s II_s` to
+//! every completion time in the window state — provided n is a
+//! multiple of `depth`, which keeps the circular history slots aligned
+//! with token indices.  [`run_stream_fast`] walks each boundary
+//! exactly (including the DDR-contention window, which is itself a
+//! constant-rate sub-segment at the inflated MemRd interval and gets
+//! its own transient + steady jump), then leaps the interior: per
+//! group the work is O(channel_depth + transient), *never* O(tokens),
+//! no matter how large the group.
+//!
+//! [`run_recurrence_exact`] / [`run_stream_exact`] keep the full
+//! O(tokens) walks as the oracles.  [`simulate_tokens`] dispatches per
+//! group: groups below the transient size run exact (the fast path
+//! would simulate them fully anyway), larger groups take the fast path
+//! unless `FFCNN_EXACT_SIM=1` forces the oracle everywhere.
+//! [`simulate_tokens_exact`] is the always-exact entry point used by
+//! tests and benches; [`simulate_tokens_policy`] /
+//! [`simulate_tokens_exact_policy`] select the overlap policy.
 
 use super::device::DeviceProfile;
-use super::timing::{layer_compute_cycles_memo, DesignParams};
+use super::timing::{layer_compute_cycles_memo, DesignParams, OverlapPolicy};
 use crate::models::{fusion_groups, LayerKind, Model};
 
 /// Result of simulating one fused group at token granularity.
@@ -51,6 +102,10 @@ use crate::models::{fusion_groups, LayerKind, Model};
 pub struct GroupSim {
     pub layers: Vec<String>,
     pub tokens: u64,
+    /// Wall-clock cycles attributed to this group.  Under
+    /// `OverlapPolicy::Full` this is the *advance of the MemWr
+    /// frontier* across the group's tokens (groups overlap, so the
+    /// deltas — not isolated runtimes — sum to the total).
     pub cycles: u64,
     /// Cycles each stage spent blocked on a full output channel.
     pub backpressure_cycles: [u64; 4],
@@ -64,6 +119,7 @@ pub struct GroupSim {
 #[derive(Debug, Clone)]
 pub struct PipelineSim {
     pub model: String,
+    pub overlap: OverlapPolicy,
     pub groups: Vec<GroupSim>,
     pub total_cycles: u64,
     pub fmax_mhz: f64,
@@ -131,14 +187,78 @@ fn fast_transient_tokens(ii: &[f64; STAGES], depth: u64) -> u64 {
     bound
 }
 
-/// Mutable recurrence state shared by the exact loop and the fast
-/// path's transient prefix.
+/// Bandwidth fraction a group's MemWr stream holds while its tail
+/// drains: one token moves `wr_ii` cycles of write bytes every
+/// `max_s II_s` cycles of steady advance.
+fn wr_share(ii: &[f64; STAGES]) -> f64 {
+    let b = ii.iter().cloned().fold(0.0f64, f64::max);
+    if ii[STAGES - 1] <= 0.0 || b <= 0.0 {
+        0.0
+    } else {
+        (ii[STAGES - 1] / b).min(1.0)
+    }
+}
+
+/// Exact steps still needed before a steady jump at rate `b` keeps the
+/// residual anchor-decay error inside `allowed` cycles.
+///
+/// A stage whose interval is below the bottleneck may still be riding
+/// its own issue line, anchored high by the previous segment; it
+/// converges onto the bottleneck line at `b - II_s` cycles per token.
+/// Jumping early overshoots by at most `min(gap, n·(b - II_s))`, so a
+/// gap is ignorable once either factor is inside the budget.
+fn anchor_need(
+    last: &[f64; STAGES],
+    ii: &[f64; STAGES],
+    b: f64,
+    remaining: u64,
+    allowed: f64,
+) -> u64 {
+    let min_last = last.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut need = 0u64;
+    for s in 0..STAGES {
+        if ii[s] < b {
+            let gap = last[s] - min_last;
+            if gap > allowed && remaining as f64 * (b - ii[s]) > allowed {
+                need =
+                    need.max(((gap - allowed) / (b - ii[s])).ceil() as u64);
+            }
+        }
+    }
+    need
+}
+
+/// Completion time of a MemRd service of `r` cycles starting at
+/// `start`, sharing the DDR port with draining writes that hold a
+/// bandwidth fraction `phi` until time `until` (the contention model
+/// of `OverlapPolicy::Full`; see the module docs).
+fn contended_finish(start: f64, r: f64, until: f64, phi: f64) -> f64 {
+    if r <= 0.0 || phi <= 0.0 || start >= until {
+        return start + r;
+    }
+    let share = 1.0 - phi;
+    if share > 0.0 {
+        let full = start + r / share;
+        if full <= until {
+            return full;
+        }
+    }
+    // Serve what fits before the writes retire at the reduced share,
+    // the remainder at full bandwidth.
+    until + (r - (until - start) * (1.0 - phi)).max(0.0)
+}
+
+/// Mutable recurrence state shared by the exact loops and the fast
+/// paths' transient prefixes.
 struct RecurrenceState {
     depth: usize,
     hist: Vec<Vec<f64>>,
     last: [f64; STAGES],
     bp: [u64; STAGES],
     peak: [u64; 3],
+    /// Peak occupancy since the last [`Self::reset_segment_peak`]
+    /// (per-group attribution in the overlapped stream).
+    peak_seg: [u64; 3],
 }
 
 impl RecurrenceState {
@@ -149,18 +269,27 @@ impl RecurrenceState {
             last: [f64::NEG_INFINITY; STAGES],
             bp: [0; STAGES],
             peak: [0; 3],
+            peak_seg: [0; 3],
         }
     }
 
-    /// Advance the recurrence by one token.
+    /// Advance the recurrence by one token.  `ctn = (until, phi)`
+    /// applies the boundary DDR-contention model to the MemRd stage.
     #[inline]
-    fn step(&mut self, i: u64, ii: &[f64; STAGES]) {
+    fn step(&mut self, i: u64, ii: &[f64; STAGES], ctn: Option<(f64, f64)>) {
         let depth = self.depth;
         let slot = (i as usize) % depth;
         let mut upstream_done = 0.0f64;
         for s in 0..STAGES {
             let issue = if self.last[s] == f64::NEG_INFINITY {
                 upstream_done
+            } else if s == 0 {
+                match ctn {
+                    Some((until, phi)) => {
+                        contended_finish(self.last[0], ii[0], until, phi)
+                    }
+                    None => self.last[0] + ii[0],
+                }
             } else {
                 self.last[s] + ii[s]
             };
@@ -187,13 +316,96 @@ impl RecurrenceState {
                 } else {
                     0
                 };
-                self.peak[s] = self.peak[s].max(in_flight.min(depth as u64));
+                let capped = in_flight.min(depth as u64);
+                self.peak[s] = self.peak[s].max(capped);
+                self.peak_seg[s] = self.peak_seg[s].max(capped);
             }
             self.hist[s][slot] = done;
             self.last[s] = done;
             upstream_done = done;
         }
     }
+
+    /// Leap a steady interior of `n` tokens (n a multiple of `depth`,
+    /// so history slots stay aligned) advancing at `per_token` cycles
+    /// per token: every completion time shifts by the same delta.
+    fn advance_all(&mut self, dt: f64) {
+        for s in 0..STAGES {
+            if self.last[s] != f64::NEG_INFINITY {
+                self.last[s] += dt;
+            }
+            for v in self.hist[s].iter_mut() {
+                if *v != f64::NEG_INFINITY {
+                    *v += dt;
+                }
+            }
+        }
+    }
+
+    fn reset_segment_peak(&mut self) {
+        self.peak_seg = [0; 3];
+    }
+
+    /// MemWr frontier: completion time of the newest token at the
+    /// last stage (0.0 before any token completed).
+    fn wr_frontier(&self) -> f64 {
+        if self.last[STAGES - 1] == f64::NEG_INFINITY {
+            0.0
+        } else {
+            self.last[STAGES - 1]
+        }
+    }
+}
+
+/// Shared single-group recurrence driver behind
+/// [`run_recurrence_exact`], [`run_recurrence_fast`] and the
+/// `WithinGroup` dispatch.
+///
+/// `warm_charge` adds the serialized-restart cost on top of the cold
+/// recurrence (one full pipeline interval for the group's first
+/// token, i.e. warm closed form `T·B` where cold gives `(T-1)·B`).
+/// Returns (cycles, backpressure, peak, ran_exact).
+fn run_recurrence(
+    tokens: u64,
+    rates: StageRates,
+    depth: usize,
+    force_exact: bool,
+    warm: bool,
+) -> (u64, [u64; STAGES], [u64; 3], bool) {
+    let ii = rates.as_array();
+    let bottleneck = ii.iter().cloned().fold(0.0f64, f64::max);
+    let charge = if warm { bottleneck } else { 0.0 };
+    let transient = fast_transient_tokens(&ii, depth as u64);
+    let simulated = transient.saturating_add(STEADY_WINDOW);
+    if force_exact || tokens <= simulated {
+        let mut st = RecurrenceState::new(depth);
+        for i in 0..tokens {
+            st.step(i, &ii, None);
+        }
+        let cycles = (st.wr_frontier() + charge).ceil() as u64;
+        return (cycles, st.bp, st.peak, true);
+    }
+
+    let mut st = RecurrenceState::new(depth);
+    let mut bp_mark = [0u64; STAGES];
+    for i in 0..simulated {
+        if i == transient {
+            bp_mark = st.bp;
+        }
+        st.step(i, &ii, None);
+    }
+
+    // Steady state: every stage advances one token per `bottleneck`
+    // cycles and stalls at a constant per-token rate.
+    let remaining = (tokens - simulated) as f64;
+    let cycles = ((tokens - 1) as f64 * bottleneck + charge).ceil() as u64;
+    let mut bp = st.bp;
+    for s in 0..STAGES {
+        let per_token =
+            (st.bp[s] - bp_mark[s]) as f64 / STEADY_WINDOW as f64;
+        bp[s] += (per_token * remaining).round() as u64;
+    }
+    (cycles, bp, st.peak, false)
 }
 
 /// Exact pipeline recurrence over `tokens` tokens with bounded
@@ -206,12 +418,9 @@ pub fn run_recurrence_exact(
     rates: StageRates,
     depth: usize,
 ) -> (u64, [u64; STAGES], [u64; 3]) {
-    let ii = rates.as_array();
-    let mut st = RecurrenceState::new(depth);
-    for i in 0..tokens {
-        st.step(i, &ii);
-    }
-    (st.last[STAGES - 1].ceil() as u64, st.bp, st.peak)
+    let (cycles, bp, peak, _) =
+        run_recurrence(tokens, rates, depth, true, false);
+    (cycles, bp, peak)
 }
 
 /// Closed-form steady-state solver: O(depth) transient + extrapolation.
@@ -226,34 +435,237 @@ pub fn run_recurrence_fast(
     rates: StageRates,
     depth: usize,
 ) -> (u64, [u64; STAGES], [u64; 3]) {
-    let ii = rates.as_array();
-    let transient = fast_transient_tokens(&ii, depth as u64);
-    let simulated = transient.saturating_add(STEADY_WINDOW);
-    if tokens <= simulated {
-        return run_recurrence_exact(tokens, rates, depth);
-    }
-    let bottleneck = ii.iter().cloned().fold(0.0f64, f64::max);
+    let (cycles, bp, peak, _) =
+        run_recurrence(tokens, rates, depth, false, false);
+    (cycles, bp, peak)
+}
 
+/// Per-group statistics of one overlapped-stream run.
+#[derive(Debug, Clone)]
+pub struct StreamGroup {
+    /// MemWr-frontier advance across this group's tokens (deltas sum
+    /// to the stream total).
+    pub cycles: u64,
+    pub backpressure_cycles: [u64; 4],
+    pub peak_occupancy: [u64; 3],
+    /// Whether every token of this group was stepped (no steady jump).
+    pub exact: bool,
+}
+
+/// Exact O(tokens) oracle for the cross-group overlapped stream: all
+/// segments' tokens walked through one recurrence, with the boundary
+/// DDR-contention model applied to MemRd (module docs).
+pub fn run_stream_exact(
+    segments: &[(u64, StageRates)],
+    depth: usize,
+) -> (u64, Vec<StreamGroup>) {
+    run_stream(segments, depth, true)
+}
+
+/// Closed-form fast path for the overlapped stream: boundary
+/// transients (including the contention window) walked exactly, steady
+/// interiors leapt in multiples of `depth` — O(depth + transient) per
+/// segment, never O(tokens).
+pub fn run_stream_fast(
+    segments: &[(u64, StageRates)],
+    depth: usize,
+) -> (u64, Vec<StreamGroup>) {
+    run_stream(segments, depth, false)
+}
+
+fn run_stream(
+    segments: &[(u64, StageRates)],
+    depth: usize,
+    force_exact: bool,
+) -> (u64, Vec<StreamGroup>) {
+    let depth = depth.max(1);
+    let depth_u = depth as u64;
     let mut st = RecurrenceState::new(depth);
-    let mut bp_mark = [0u64; STAGES];
-    for i in 0..simulated {
-        if i == transient {
-            bp_mark = st.bp;
-        }
-        st.step(i, &ii);
-    }
+    let mut gi = 0u64; // global token index (stepped + leapt)
+    let mut prev_rates: Option<[f64; STAGES]> = None;
+    let mut out = Vec::with_capacity(segments.len());
+    let mut total_before = 0u64;
 
-    // Steady state: every stage advances one token per `bottleneck`
-    // cycles and stalls at a constant per-token rate.
-    let remaining = (tokens - simulated) as f64;
-    let cycles = ((tokens - 1) as f64 * bottleneck).ceil() as u64;
-    let mut bp = st.bp;
-    for s in 0..STAGES {
-        let per_token =
-            (st.bp[s] - bp_mark[s]) as f64 / STEADY_WINDOW as f64;
-        bp[s] += (per_token * remaining).round() as u64;
+    for &(tokens, rates) in segments {
+        let ii = rates.as_array();
+        // Boundary contention context: the previous group's residual
+        // writes hold a `phi` bandwidth share until their frontier
+        // (fixed at entry — all earlier tokens are already resolved).
+        let ctn = prev_rates.map(|p| (st.wr_frontier(), wr_share(&p)));
+        let bp_entry = st.bp;
+        st.reset_segment_peak();
+        let mut exact = true;
+        let mut remaining = tokens;
+
+        if force_exact {
+            while remaining > 0 {
+                st.step(gi, &ii, ctn);
+                gi += 1;
+                remaining -= 1;
+            }
+        } else {
+            let bottleneck = ii.iter().cloned().fold(0.0f64, f64::max);
+            let trans_clean = fast_transient_tokens(&ii, depth_u);
+            let reserve = trans_clean
+                .saturating_add(STEADY_WINDOW)
+                .saturating_add(depth_u);
+
+            // -- Phase W: cross the DDR contention window ------------
+            if let Some((until, phi)) = ctn {
+                if phi > 0.0 && ii[0] > 0.0 {
+                    let mut ii_c = ii;
+                    if phi < 1.0 {
+                        ii_c[0] = ii[0] / (1.0 - phi);
+                    }
+                    let wtrans = fast_transient_tokens(&ii_c, depth_u);
+                    let budget_w = wtrans.saturating_add(STEADY_WINDOW);
+                    let mut wmark: Option<[u64; STAGES]> = None;
+                    let mut steps = 0u64;
+                    while remaining > reserve
+                        && st.last[0] <= until
+                        && steps < budget_w
+                    {
+                        if steps == wtrans {
+                            wmark = Some(st.bp);
+                        }
+                        st.step(gi, &ii, ctn);
+                        gi += 1;
+                        remaining -= 1;
+                        steps += 1;
+                    }
+                    // Steady inside a long window: leap to its edge at
+                    // the contended bottleneck rate — but only when the
+                    // residual anchor gaps fit the divergence budget
+                    // (else keep walking; the window closes at the
+                    // global advance rate, so it is O(state) tokens).
+                    if remaining > reserve && st.last[0] <= until {
+                        if let (Some(mark), true) = (wmark, phi < 1.0) {
+                            let b_c = bottleneck.max(ii_c[0]);
+                            let allowed = 2.5e-4
+                                * (st.wr_frontier()
+                                    + remaining as f64 * b_c);
+                            if b_c > 0.0
+                                && anchor_need(
+                                    &st.last, &ii_c, b_c, remaining,
+                                    allowed,
+                                ) == 0
+                            {
+                                let mut n =
+                                    ((until - st.last[0]) / b_c) as u64;
+                                n = n.min(remaining - reserve);
+                                n = (n / depth_u) * depth_u;
+                                if n > 0 {
+                                    exact = false;
+                                    st.advance_all(n as f64 * b_c);
+                                    for s in 0..STAGES {
+                                        let rate = (st.bp[s] - mark[s])
+                                            as f64
+                                            / STEADY_WINDOW as f64;
+                                        st.bp[s] += (rate * n as f64)
+                                            .round()
+                                            as u64;
+                                    }
+                                    gi += n;
+                                    remaining -= n;
+                                }
+                            }
+                        }
+                    }
+                    // Finish crossing the window edge exactly.  The
+                    // MemRd frontier strictly advances every step, so
+                    // this terminates in O(window length), never
+                    // O(tokens).
+                    while remaining > reserve && st.last[0] <= until {
+                        st.step(gi, &ii, ctn);
+                        gi += 1;
+                        remaining -= 1;
+                    }
+                }
+            }
+
+            // -- Phase C: clean steady interior ----------------------
+            if remaining > reserve {
+                for _ in 0..trans_clean {
+                    st.step(gi, &ii, ctn);
+                    gi += 1;
+                    remaining -= 1;
+                }
+                // Anchor decay: a stage can still ride a slower issue
+                // line anchored high by the previous segment; jumping
+                // at the bottleneck rate then overshoots by the
+                // residual gap.  Extend the exact prefix until the
+                // worst-case jump error fits the divergence budget.
+                let extra_cap = 64 * (depth_u + TRANSIENT_SLACK);
+                let mut used = 0u64;
+                while remaining > reserve && used < extra_cap {
+                    let allowed = 2.5e-4
+                        * (st.wr_frontier()
+                            + remaining as f64 * bottleneck);
+                    let need = anchor_need(
+                        &st.last, &ii, bottleneck, remaining, allowed,
+                    );
+                    if need == 0 {
+                        break;
+                    }
+                    let chunk =
+                        need.min(extra_cap - used).min(remaining - reserve);
+                    if chunk == 0 {
+                        break;
+                    }
+                    for _ in 0..chunk {
+                        st.step(gi, &ii, ctn);
+                        gi += 1;
+                        remaining -= 1;
+                    }
+                    used += chunk;
+                }
+            }
+            if remaining > reserve {
+                let mark = st.bp;
+                for _ in 0..STEADY_WINDOW {
+                    st.step(gi, &ii, ctn);
+                    gi += 1;
+                    remaining -= 1;
+                }
+                let tail = remaining % depth_u;
+                let n = remaining - tail;
+                if n > 0 {
+                    exact = false;
+                    if bottleneck > 0.0 {
+                        st.advance_all(n as f64 * bottleneck);
+                    }
+                    for s in 0..STAGES {
+                        let rate = (st.bp[s] - mark[s]) as f64
+                            / STEADY_WINDOW as f64;
+                        st.bp[s] += (rate * n as f64).round() as u64;
+                    }
+                    gi += n;
+                    remaining -= n;
+                }
+            }
+            while remaining > 0 {
+                st.step(gi, &ii, ctn);
+                gi += 1;
+                remaining -= 1;
+            }
+        }
+
+        let total_after = st.wr_frontier().ceil() as u64;
+        out.push(StreamGroup {
+            cycles: total_after.saturating_sub(total_before),
+            backpressure_cycles: [
+                st.bp[0] - bp_entry[0],
+                st.bp[1] - bp_entry[1],
+                st.bp[2] - bp_entry[2],
+                st.bp[3] - bp_entry[3],
+            ],
+            peak_occupancy: st.peak_seg,
+            exact,
+        });
+        total_before = total_after;
+        prev_rates = Some(ii);
     }
-    (cycles, bp, st.peak)
+    (total_before, out)
 }
 
 /// Should the whole simulation be forced onto the exact oracle?
@@ -261,42 +673,27 @@ fn exact_sim_forced() -> bool {
     std::env::var("FFCNN_EXACT_SIM").map(|v| v == "1").unwrap_or(false)
 }
 
-/// Simulate one model at token granularity, dispatching each group to
-/// the closed-form fast path or the exact oracle (see module docs).
-pub fn simulate_tokens(
-    model: &Model,
-    device: &DeviceProfile,
-    params: &DesignParams,
-    batch: usize,
-) -> PipelineSim {
-    simulate_tokens_with(model, device, params, batch, exact_sim_forced())
+/// Token/rate/floor spec of one fused group at a design point.
+struct GroupSpec {
+    layers: Vec<String>,
+    tokens: u64,
+    rates: StageRates,
+    compute_floor: u64,
 }
 
-/// Simulate one model with the O(tokens) oracle for every group —
-/// the reference the fast path is tested against.
-pub fn simulate_tokens_exact(
+/// Derive the per-group token counts, stage intervals and compute
+/// floors for a model at a design point (shared by every policy).
+fn group_specs(
     model: &Model,
     device: &DeviceProfile,
     params: &DesignParams,
     batch: usize,
-) -> PipelineSim {
-    simulate_tokens_with(model, device, params, batch, true)
-}
-
-fn simulate_tokens_with(
-    model: &Model,
-    device: &DeviceProfile,
-    params: &DesignParams,
-    batch: usize,
-    force_exact: bool,
-) -> PipelineSim {
+) -> Vec<GroupSpec> {
     let infos = model.propagate();
     let groups = fusion_groups(model);
     let bpc = device.ddr_bytes_per_cycle();
     let batch_u = batch as u64;
-    let depth = params.channel_depth.max(1);
     let mut out = Vec::with_capacity(groups.len());
-    let mut total = 0u64;
 
     for g in &groups {
         let anchor_idx = g.rows[0];
@@ -357,17 +754,6 @@ fn simulate_tokens_with(
             fused: 1.0,
             memwr: wr_ii,
         };
-        // Same threshold the fast solver applies internally, so the
-        // `exact` label reflects which path actually ran.
-        let exact = force_exact
-            || tokens
-                <= fast_transient_tokens(&rates.as_array(), depth as u64)
-                    .saturating_add(STEADY_WINDOW);
-        let (cycles, bp, peak) = if exact {
-            run_recurrence_exact(tokens, rates, depth)
-        } else {
-            run_recurrence_fast(tokens, rates, depth)
-        };
         // Sanity floor: a group can never beat its pure compute bound.
         let compute_floor = g
             .rows
@@ -382,20 +768,172 @@ fn simulate_tokens_with(
             })
             .max()
             .unwrap_or(0);
-        let cycles = cycles.max(compute_floor);
-        total += cycles;
-        out.push(GroupSim {
+        out.push(GroupSpec {
             layers: rows.iter().map(|r| r.name.clone()).collect(),
             tokens,
-            cycles,
-            backpressure_cycles: bp,
-            peak_occupancy: peak,
-            exact,
+            rates,
+            compute_floor,
         });
+    }
+    out
+}
+
+/// Simulate one model at token granularity under `WithinGroup`,
+/// dispatching each group to the closed-form fast path or the exact
+/// oracle (see module docs).
+pub fn simulate_tokens(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+    batch: usize,
+) -> PipelineSim {
+    simulate_tokens_policy(
+        model,
+        device,
+        params,
+        batch,
+        OverlapPolicy::WithinGroup,
+    )
+}
+
+/// Simulate one model with the O(tokens) oracle for every group under
+/// `WithinGroup` — the reference the fast path is tested against.
+pub fn simulate_tokens_exact(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+    batch: usize,
+) -> PipelineSim {
+    simulate_tokens_with(
+        model,
+        device,
+        params,
+        batch,
+        OverlapPolicy::WithinGroup,
+        true,
+    )
+}
+
+/// Simulate one model at token granularity under an explicit overlap
+/// policy (fast paths by default, `FFCNN_EXACT_SIM=1` forces the
+/// oracles).
+pub fn simulate_tokens_policy(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+    batch: usize,
+    overlap: OverlapPolicy,
+) -> PipelineSim {
+    simulate_tokens_with(
+        model,
+        device,
+        params,
+        batch,
+        overlap,
+        exact_sim_forced(),
+    )
+}
+
+/// Simulate one model with the O(tokens) oracle under an explicit
+/// overlap policy.
+pub fn simulate_tokens_exact_policy(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+    batch: usize,
+    overlap: OverlapPolicy,
+) -> PipelineSim {
+    simulate_tokens_with(model, device, params, batch, overlap, true)
+}
+
+fn simulate_tokens_with(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+    batch: usize,
+    overlap: OverlapPolicy,
+    force_exact: bool,
+) -> PipelineSim {
+    let specs = group_specs(model, device, params, batch);
+    let depth = params.channel_depth.max(1);
+    let mut out = Vec::with_capacity(specs.len());
+    let mut total = 0u64;
+
+    match overlap {
+        OverlapPolicy::Full => {
+            // Concatenated token stream: one continuous recurrence,
+            // rates switching at group boundaries.  Groups overlap, so
+            // per-group cycles are MemWr-frontier deltas and the
+            // compute floor is enforced by the stream's own per-stage
+            // issue chains (the Conv kernel still serializes every
+            // group's tokens), not by per-group clamps.
+            let segments: Vec<(u64, StageRates)> =
+                specs.iter().map(|s| (s.tokens, s.rates)).collect();
+            let (stream_total, stats) =
+                run_stream(&segments, depth, force_exact);
+            total = stream_total;
+            for (spec, st) in specs.into_iter().zip(stats) {
+                out.push(GroupSim {
+                    layers: spec.layers,
+                    tokens: spec.tokens,
+                    cycles: st.cycles,
+                    backpressure_cycles: st.backpressure_cycles,
+                    peak_occupancy: st.peak_occupancy,
+                    exact: st.exact,
+                });
+            }
+        }
+        OverlapPolicy::WithinGroup => {
+            for spec in specs {
+                // Serialized groups restart from the drained MemWr
+                // frontier: the warm charge is what makes this an
+                // upper bound of the overlapped stream token-by-token
+                // (module docs).
+                let (cycles, bp, peak, exact) = run_recurrence(
+                    spec.tokens,
+                    spec.rates,
+                    depth,
+                    force_exact,
+                    true,
+                );
+                let cycles = cycles.max(spec.compute_floor);
+                total += cycles;
+                out.push(GroupSim {
+                    layers: spec.layers,
+                    tokens: spec.tokens,
+                    cycles,
+                    backpressure_cycles: bp,
+                    peak_occupancy: peak,
+                    exact,
+                });
+            }
+        }
+        OverlapPolicy::None => {
+            // Fully serialized stages: each kernel runs its whole token
+            // stream to completion before the next starts.
+            for spec in specs {
+                let ii = spec.rates.as_array();
+                let cycles: u64 = ii
+                    .iter()
+                    .map(|r| (spec.tokens as f64 * r).ceil() as u64)
+                    .sum();
+                let cycles = cycles.max(spec.compute_floor);
+                total += cycles;
+                out.push(GroupSim {
+                    layers: spec.layers,
+                    tokens: spec.tokens,
+                    cycles,
+                    backpressure_cycles: [0; 4],
+                    peak_occupancy: [0; 3],
+                    exact: true,
+                });
+            }
+        }
     }
 
     PipelineSim {
         model: model.name.clone(),
+        overlap,
         groups: out,
         total_cycles: total,
         fmax_mhz: device.fmax_mhz,
@@ -592,5 +1130,146 @@ mod tests {
         let p = ffcnn_stratix10_params();
         let sim = simulate_tokens(&models::tinynet(), &STRATIX10, &p, 1);
         assert!(sim.groups.iter().all(|g| g.exact));
+    }
+
+    // ------------------------------------------- cross-group overlap
+
+    #[test]
+    fn overlap_policies_ordered_on_alexnet() {
+        // Full is a relaxation of WithinGroup (earlier starts, same
+        // work), which relaxes None: the exact oracles must respect
+        // the ordering strictly on a multi-group model.
+        let p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        let c = |pol| {
+            simulate_tokens_exact_policy(&m, &STRATIX10, &p, 1, pol)
+                .total_cycles
+        };
+        let none = c(OverlapPolicy::None);
+        let within = c(OverlapPolicy::WithinGroup);
+        let full = c(OverlapPolicy::Full);
+        assert!(full < within, "full={full} within={within}");
+        assert!(within < none, "within={within} none={none}");
+    }
+
+    #[test]
+    fn overlapped_stream_matches_oracle_on_alexnet() {
+        let p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        let fast = simulate_tokens_policy(
+            &m, &STRATIX10, &p, 1, OverlapPolicy::Full,
+        );
+        let exact = simulate_tokens_exact_policy(
+            &m, &STRATIX10, &p, 1, OverlapPolicy::Full,
+        );
+        assert!(
+            fast.groups.iter().any(|g| !g.exact),
+            "expected at least one leapt group"
+        );
+        let diff = fast.total_cycles.abs_diff(exact.total_cycles) as f64;
+        assert!(
+            diff <= 1.0 + 1e-3 * exact.total_cycles as f64,
+            "fast={} exact={}",
+            fast.total_cycles,
+            exact.total_cycles
+        );
+    }
+
+    #[test]
+    fn stream_single_segment_equals_group_recurrence() {
+        // A one-group stream has no boundary: the stream oracle must
+        // equal the per-group oracle exactly.
+        let rates =
+            StageRates { memrd: 0.5, conv: 7.0, fused: 1.0, memwr: 0.25 };
+        let (c1, _, _) = run_recurrence_exact(40_000, rates, 64);
+        let (c2, groups) = run_stream_exact(&[(40_000, rates)], 64);
+        assert_eq!(c1, c2);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].cycles, c2);
+    }
+
+    #[test]
+    fn stream_fast_matches_exact_on_synthetic_boundaries() {
+        // Mixed regimes across the boundary: write-heavy into
+        // read-heavy (real contention), compute into compute, and a
+        // short middle segment.
+        let segs = [
+            (
+                30_000u64,
+                StageRates { memrd: 1.0, conv: 2.0, fused: 1.0, memwr: 6.0 },
+            ),
+            (
+                200u64,
+                StageRates { memrd: 3.0, conv: 1.0, fused: 1.0, memwr: 0.5 },
+            ),
+            (
+                50_000u64,
+                StageRates { memrd: 8.0, conv: 3.0, fused: 1.0, memwr: 1.0 },
+            ),
+        ];
+        for depth in [2usize, 16, 128, 512] {
+            let (te, _) = run_stream_exact(&segs, depth);
+            let (tf, _) = run_stream_fast(&segs, depth);
+            let diff = te.abs_diff(tf) as f64;
+            assert!(
+                diff <= 1.0 + 1e-3 * te as f64,
+                "depth={depth} exact={te} fast={tf}"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_never_beats_per_stage_work() {
+        // The Conv kernel serializes every group's tokens, so the
+        // stream can never finish before the summed conv work — the
+        // compute-floor argument for dropping per-group clamps.
+        let p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        let sim = simulate_tokens_exact_policy(
+            &m, &STRATIX10, &p, 1, OverlapPolicy::Full,
+        );
+        let infos = m.propagate();
+        let anchor_total: u64 = crate::models::fusion_groups(&m)
+            .iter()
+            .filter_map(|g| g.anchor)
+            .map(|i| {
+                layer_compute_cycles(&infos[i], &m.layers[i].kind, &p, 1)
+            })
+            .sum();
+        assert!(
+            sim.total_cycles >= anchor_total,
+            "{} < {}",
+            sim.total_cycles,
+            anchor_total
+        );
+        let full_groups: u64 = sim.groups.iter().map(|g| g.cycles).sum();
+        assert_eq!(full_groups, sim.total_cycles, "deltas must sum");
+    }
+
+    #[test]
+    fn contended_finish_piecewise() {
+        // Clean start past the window: plain service.
+        assert_eq!(contended_finish(10.0, 2.0, 5.0, 0.5), 12.0);
+        // Inside the window at half share: twice the service time.
+        assert_eq!(contended_finish(0.0, 2.0, 100.0, 0.5), 4.0);
+        // Straddling the window edge: remainder at full bandwidth.
+        let f = contended_finish(0.0, 2.0, 1.0, 0.5);
+        assert!((f - 2.5).abs() < 1e-12, "{f}");
+        // Saturated writes: serialized behind the drain.
+        assert_eq!(contended_finish(0.0, 2.0, 7.0, 1.0), 9.0);
+        // Zero-cost read: no bytes, no contention.
+        assert_eq!(contended_finish(3.0, 0.0, 7.0, 0.9), 3.0);
+    }
+
+    #[test]
+    fn serialized_policy_sums_stage_totals() {
+        let p = ffcnn_stratix10_params();
+        let m = models::tinynet();
+        let sim = simulate_tokens_policy(
+            &m, &STRATIX10, &p, 1, OverlapPolicy::None,
+        );
+        assert!(sim.groups.iter().all(|g| g.exact));
+        let within = simulate_tokens(&m, &STRATIX10, &p, 1);
+        assert!(sim.total_cycles >= within.total_cycles);
     }
 }

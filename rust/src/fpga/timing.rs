@@ -106,7 +106,7 @@ pub fn ffcnn_stratix10_params() -> DesignParams {
 }
 
 /// How DDR traffic overlaps with compute.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OverlapPolicy {
     /// No double buffering: compute and memory serialize.
     None,

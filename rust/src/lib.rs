@@ -23,8 +23,14 @@
 //! steady-state solver that is O(channel depth) per group and proven
 //! (and property-tested) to match the O(tokens) recurrence, which
 //! stays available as `simulate_tokens_exact` / `FFCNN_EXACT_SIM=1`.
+//! Under `OverlapPolicy::Full` the groups' token streams run
+//! *concatenated* through the four kernels (the paper's deeply
+//! cascaded pipeline): MemRd of group g+1 drains DRAM while MemWr of
+//! group g commits, boundary DDR contention is a shared-bandwidth
+//! budget, and the fast path leaps steady interiors segment-wise.
 //! [`fpga::dse`] sweeps the design space with those models in
-//! parallel, pruning infeasible points before timing them.
+//! parallel — `(vec, lane)` plus channel depth and overlap on/off —
+//! pruning infeasible points before timing them.
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.

@@ -16,11 +16,13 @@ use ffcnn::config::{default_artifacts_dir, RunConfig};
 use ffcnn::coordinator::{InferenceService, Pace, Policy};
 use ffcnn::data;
 use ffcnn::fpga::device::DEVICES;
-use ffcnn::fpga::pipeline::{simulate_tokens, simulate_tokens_exact};
+use ffcnn::fpga::pipeline::{
+    simulate_tokens_exact_policy, simulate_tokens_policy,
+};
 use ffcnn::fpga::timing::{simulate_model, OverlapPolicy};
 use ffcnn::fpga::{dse, resource_usage};
 use ffcnn::models;
-use ffcnn::report::{render_fig1, render_table1, table1_rows};
+use ffcnn::report::{render_fig1, render_table1, table1_rows_at};
 use ffcnn::Result;
 
 const USAGE: &str = "\
@@ -29,12 +31,14 @@ ffcnn — FFCNN reproduction CLI (see DESIGN.md §4)
 USAGE: ffcnn <command> [--key value] [--flag]
 
 COMMANDS:
-  table1    [--model alexnet]                      reproduce Table 1
+  table1    [--model alexnet] [--overlap full|within_group|none]
   fig1      [--model vgg11]                        reproduce Fig. 1
   dse       [--device stratix10] [--model alexnet] [--batch 1]
             [--fidelity analytic|pipeline|pipeline-exact]
+            [--overlap-sweep]   also sweep overlap on/off x channel depth
   layers    [--model alexnet] [--device stratix10] [--batch 1]
   pipeline  [--model alexnet] [--device stratix10] [--batch 1] [--exact]
+            [--overlap within_group|full|none]
   classify  [--model alexnet] [--batch 1] [--conv-impl jnp]
             [--device stratix10] [--iters 3]
   serve     [--model alexnet] [--device stratix10] [--requests 64]
@@ -167,15 +171,28 @@ fn device_arg(
         .ok_or_else(|| anyhow!("unknown device {name:?}"))
 }
 
+fn overlap_arg(args: &Args, default: &str) -> Result<OverlapPolicy> {
+    match args.get("overlap", default).as_str() {
+        "none" => Ok(OverlapPolicy::None),
+        "within_group" => Ok(OverlapPolicy::WithinGroup),
+        "full" => Ok(OverlapPolicy::Full),
+        other => Err(anyhow!(
+            "unknown overlap policy {other:?} (none|within_group|full)"
+        )),
+    }
+}
+
 fn cmd_table1(args: &Args) -> Result<()> {
     let m = model_arg(args, "alexnet")?;
+    let overlap = overlap_arg(args, "full")?;
     println!(
-        "Table 1 — {} ({:.2} GOPs/image, {:.1}M params)\n",
+        "Table 1 — {} ({:.2} GOPs/image, {:.1}M params, FFCNN overlap \
+         {overlap:?})\n",
         m.name,
         m.total_ops() as f64 / 1e9,
         m.total_params() as f64 / 1e6
     );
-    println!("{}", render_table1(&table1_rows(&m)));
+    println!("{}", render_table1(&table1_rows_at(&m, overlap)));
     println!(
         "(times from each design's cycle model; GOPS = executed ops / \
          time, computed uniformly — see EXPERIMENTS.md §T1)"
@@ -203,8 +220,13 @@ fn cmd_dse(args: &Args) -> Result<()> {
             ))
         }
     };
+    let space = if args.has("overlap-sweep") {
+        dse::SweepSpace::with_overlap_and_depth()
+    } else {
+        dse::SweepSpace::default()
+    };
     let t0 = std::time::Instant::now();
-    let pts = dse::explore_with(&m, d, batch, fidelity);
+    let pts = dse::explore_space(&m, d, batch, fidelity, &space);
     let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
         "DSE: {} on {} (batch {batch}, {fidelity:?}) — {} points, \
@@ -215,14 +237,17 @@ fn cmd_dse(args: &Args) -> Result<()> {
         pts.iter().filter(|p| p.feasible).count()
     );
     println!(
-        "{:<8}{:<8}{:>8}{:>12}{:>10}{:>14}",
-        "vec", "lane", "DSPs", "time(ms)", "GOPS", "GOPS/DSP"
+        "{:<8}{:<8}{:<8}{:<14}{:>8}{:>12}{:>10}{:>14}",
+        "vec", "lane", "depth", "overlap", "DSPs", "time(ms)", "GOPS",
+        "GOPS/DSP"
     );
     for p in dse::pareto(&pts) {
         println!(
-            "{:<8}{:<8}{:>8}{:>12.2}{:>10.1}{:>14.3}",
+            "{:<8}{:<8}{:<8}{:<14}{:>8}{:>12.2}{:>10.1}{:>14.3}",
             p.params.vec_size,
             p.params.lane_num,
+            p.params.channel_depth,
+            format!("{:?}", p.overlap),
             p.usage.dsps,
             p.time_ms,
             p.gops,
@@ -231,8 +256,12 @@ fn cmd_dse(args: &Args) -> Result<()> {
     }
     if let Some(b) = dse::best_latency(&pts) {
         println!(
-            "\nlatency-optimal: vec={} lane={} -> {:.2} ms",
-            b.params.vec_size, b.params.lane_num, b.time_ms
+            "\nlatency-optimal: vec={} lane={} depth={} {:?} -> {:.2} ms",
+            b.params.vec_size,
+            b.params.lane_num,
+            b.params.channel_depth,
+            b.overlap,
+            b.time_ms
         );
     }
     if let Some(b) = dse::best_density(&pts) {
@@ -297,14 +326,16 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let p = cfg.design_params()?;
+    let overlap = overlap_arg(args, "within_group")?;
     let tok = if args.has("exact") {
-        simulate_tokens_exact(&m, d, &p, batch)
+        simulate_tokens_exact_policy(&m, d, &p, batch, overlap)
     } else {
-        simulate_tokens(&m, d, &p, batch)
+        simulate_tokens_policy(&m, d, &p, batch, overlap)
     };
-    let ana = simulate_model(&m, d, &p, batch, OverlapPolicy::WithinGroup);
+    let ana = simulate_model(&m, d, &p, batch, overlap);
     println!(
-        "token-level: {:.2} ms | analytic: {:.2} ms | ratio {:.3}",
+        "token-level ({overlap:?}): {:.2} ms | analytic: {:.2} ms | \
+         ratio {:.3}",
         tok.time_ms(),
         ana.time_ms(),
         tok.total_cycles as f64 / ana.total_cycles as f64

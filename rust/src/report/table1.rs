@@ -29,9 +29,10 @@ fn ffcnn_report(
     model: &Model,
     device: &'static crate::fpga::device::DeviceProfile,
     params: crate::fpga::timing::DesignParams,
+    overlap: OverlapPolicy,
     label: &str,
 ) -> DesignReport {
-    let t = simulate_model(model, device, &params, 1, OverlapPolicy::Full);
+    let t = simulate_model(model, device, &params, 1, overlap);
     let usage = resource_usage(&params, device);
     DesignReport::new(
         label,
@@ -46,20 +47,38 @@ fn ffcnn_report(
     )
 }
 
-/// All five Table 1 rows for a model (the paper uses AlexNet).
-pub fn table1_rows(model: &Model) -> Vec<DesignReport> {
+/// All five Table 1 rows for a model (the paper uses AlexNet), with
+/// the FFCNN columns evaluated under `overlap` — the ablation knob for
+/// how much of the headline win is the cross-group pipelining.
+pub fn table1_rows_at(
+    model: &Model,
+    overlap: OverlapPolicy,
+) -> Vec<DesignReport> {
     vec![
         Fpga2016a.evaluate(model),
         Fpga2015.evaluate(model),
         PipeCnn.evaluate(model),
-        ffcnn_report(model, &ARRIA10, ffcnn_arria10_params(), "This work (Arria 10)"),
+        ffcnn_report(
+            model,
+            &ARRIA10,
+            ffcnn_arria10_params(),
+            overlap,
+            "This work (Arria 10)",
+        ),
         ffcnn_report(
             model,
             &STRATIX10,
             ffcnn_stratix10_params(),
+            overlap,
             "This work (Stratix 10)",
         ),
     ]
+}
+
+/// All five Table 1 rows under the paper's design (`Full` cross-group
+/// pipelining for the FFCNN columns).
+pub fn table1_rows(model: &Model) -> Vec<DesignReport> {
+    table1_rows_at(model, OverlapPolicy::Full)
 }
 
 /// Render rows in the paper's layout (designs as columns).
@@ -137,6 +156,28 @@ mod tests {
         let suda = rows[0].gops_per_dsp;
         assert!(s10 / pipecnn > 1.5, "{}", s10 / pipecnn);
         assert!(s10 / suda > 2.5, "{}", s10 / suda);
+    }
+
+    #[test]
+    fn overlap_ablation_orders_ffcnn_rows() {
+        // Cross-group pipelining is part of the FFCNN headline: the
+        // Full rows must be at least as fast as the WithinGroup
+        // ablation, and the baseline columns must not move.
+        let m = models::alexnet();
+        let full = table1_rows_at(&m, OverlapPolicy::Full);
+        let within = table1_rows_at(&m, OverlapPolicy::WithinGroup);
+        for i in [3usize, 4] {
+            assert!(
+                full[i].time_ms <= within[i].time_ms,
+                "{}: {} > {}",
+                full[i].design,
+                full[i].time_ms,
+                within[i].time_ms
+            );
+        }
+        for i in 0..3 {
+            assert_eq!(full[i].time_ms, within[i].time_ms);
+        }
     }
 
     #[test]

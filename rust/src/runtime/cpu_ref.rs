@@ -22,12 +22,12 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Arc;
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::anyhow;
 
-use super::manifest::{ArtifactMeta, Manifest};
+use super::manifest::{ArtifactMeta, Manifest, WeightViews};
 use super::ExecStats;
 use crate::Result;
 
@@ -39,8 +39,10 @@ const SAMPLE_TAPS: usize = 256;
 /// design is exercised identically in both builds.
 pub struct Engine {
     manifest: Manifest,
-    /// Decoded weight blob shared across artifacts of one model.
-    weights: RefCell<HashMap<String, Arc<[f32]>>>,
+    /// Per-model weight views: the blob is decoded once and every
+    /// parameter tensor is a zero-copy window into it — mirroring the
+    /// PJRT engine's one-upload-per-model packed contract.
+    weights: RefCell<HashMap<String, Rc<WeightViews>>>,
     stats: RefCell<ExecStats>,
 }
 
@@ -63,19 +65,21 @@ impl Engine {
         *self.stats.borrow()
     }
 
-    /// Decode a model's weight blob once; later calls share the Arc.
-    fn weights_for(&self, art: &ArtifactMeta) -> Result<Arc<[f32]>> {
+    /// Decode a model's weight blob once and wrap it in per-tensor
+    /// views; later calls (and every other artifact of the model)
+    /// share the same decoded allocation.
+    fn weights_for(&self, art: &ArtifactMeta) -> Result<Rc<WeightViews>> {
         if let Some(w) = self.weights.borrow().get(&art.model) {
             return Ok(w.clone());
         }
         let t0 = Instant::now();
-        let blob = self.manifest.read_weights(art)?;
+        let views = Rc::new(self.manifest.read_weight_views(art)?);
         self.stats.borrow_mut().compile_us +=
             t0.elapsed().as_micros() as u64;
         self.weights
             .borrow_mut()
-            .insert(art.model.clone(), blob.clone());
-        Ok(blob)
+            .insert(art.model.clone(), views.clone());
+        Ok(views)
     }
 
     /// Pre-load an artifact's weights (warm the cache).
@@ -94,7 +98,8 @@ impl Engine {
                 meta.input.shape
             ));
         }
-        let weights = self.weights_for(&meta)?;
+        let views = self.weights_for(&meta)?;
+        let weights = views.blob();
 
         let t0 = Instant::now();
         let batch = meta.batch.max(1);
@@ -205,6 +210,21 @@ mod tests {
     fn unknown_artifact_rejected() {
         let Some(e) = engine_or_skip() else { return };
         assert!(e.execute("nope_b1_jnp", &[]).is_err());
+    }
+
+    #[test]
+    fn weight_views_cover_blob_and_are_shared() {
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_jnp").unwrap().clone();
+        let v = e.weights_for(&art).unwrap();
+        assert_eq!(
+            v.iter().map(|s| s.len()).sum::<usize>(),
+            v.blob().len(),
+            "views must tile the whole blob"
+        );
+        // Second lookup (any artifact of the model) shares the decode.
+        let v2 = e.weights_for(&art).unwrap();
+        assert!(Rc::ptr_eq(&v, &v2));
     }
 
     #[test]

@@ -22,9 +22,16 @@ use crate::Result;
 struct LoadedArtifact {
     exe: xla::PjRtLoadedExecutable,
     meta: ArtifactMeta,
-    /// Device-resident weight buffers, argument order.
+    /// Device-resident weight buffers, argument order.  One buffer per
+    /// parameter tensor — or a single packed blob buffer when the
+    /// artifact's HLO view-slices tensors device-side
+    /// (`ArtifactMeta::packed_weights`).
     weights: Rc<Vec<xla::PjRtBuffer>>,
 }
+
+/// Cache key of a model's device-resident weights: packed and
+/// per-tensor layouts are distinct uploads.
+type WeightKey = (String, bool);
 
 /// Single-threaded PJRT engine (deliberately `!Send`; see module docs).
 pub struct Engine {
@@ -32,7 +39,7 @@ pub struct Engine {
     manifest: Manifest,
     loaded: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
     /// Weight buffers shared across artifacts of the same model.
-    model_weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    model_weights: RefCell<HashMap<WeightKey, Rc<Vec<xla::PjRtBuffer>>>>,
     stats: RefCell<ExecStats>,
 }
 
@@ -61,27 +68,46 @@ impl Engine {
 
     /// Upload a model's weights once, returning device buffers.
     ///
-    /// The host-side blob is a shared `Arc<[f32]>` decoded once by the
-    /// manifest; parameter slices upload straight from it, so weights
-    /// never round-trip through intermediate clones.
+    /// The host-side blob is decoded once by the manifest and wrapped
+    /// in zero-copy per-tensor views.  For `packed_weights` artifacts
+    /// the *whole blob* uploads as ONE device buffer (the compiled HLO
+    /// view-slices each tensor device-side), so warm-up on a
+    /// 200+-tensor model costs one transfer instead of hundreds; the
+    /// per-tensor layout remains for legacy artifacts, uploading
+    /// straight from the shared views without intermediate clones.
     fn weights_for(&self, art: &ArtifactMeta) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
-        if let Some(w) = self.model_weights.borrow().get(&art.model) {
+        let key: WeightKey = (art.model.clone(), art.packed_weights);
+        if let Some(w) = self.model_weights.borrow().get(&key) {
             return Ok(w.clone());
         }
-        let blob = self.manifest.read_weights(art)?;
-        let mut bufs = Vec::with_capacity(art.params.len());
-        for p in &art.params {
-            let slice = &blob[p.offset..p.offset + p.numel];
+        let views = self.manifest.read_weight_views(art)?;
+        let bufs = if art.packed_weights {
+            let blob = views.blob();
+            let shape = [blob.len()];
             let buf = self
                 .client
-                .buffer_from_host_buffer::<f32>(slice, &p.shape, None)
-                .map_err(|e| anyhow!("uploading {}: {e}", p.name))?;
-            bufs.push(buf);
-        }
+                .buffer_from_host_buffer::<f32>(blob, &shape, None)
+                .map_err(|e| {
+                    anyhow!("uploading packed blob for {}: {e}", art.model)
+                })?;
+            vec![buf]
+        } else {
+            let mut bufs = Vec::with_capacity(art.params.len());
+            for (i, p) in art.params.iter().enumerate() {
+                let buf = self
+                    .client
+                    .buffer_from_host_buffer::<f32>(
+                        views.view(i),
+                        &p.shape,
+                        None,
+                    )
+                    .map_err(|e| anyhow!("uploading {}: {e}", p.name))?;
+                bufs.push(buf);
+            }
+            bufs
+        };
         let rc = Rc::new(bufs);
-        self.model_weights
-            .borrow_mut()
-            .insert(art.model.clone(), rc.clone());
+        self.model_weights.borrow_mut().insert(key, rc.clone());
         Ok(rc)
     }
 

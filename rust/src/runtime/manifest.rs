@@ -66,6 +66,11 @@ pub struct ArtifactMeta {
     pub hlo_sha256: String,
     pub weights: String,
     pub params: Vec<ParamMeta>,
+    /// The HLO takes the whole weight blob as ONE flat argument and
+    /// slices each tensor device-side (aot.py `packed=True`), so the
+    /// engine uploads exactly one buffer per model instead of one per
+    /// parameter tensor.
+    pub packed_weights: bool,
     pub input: TensorMeta,
     pub output: TensorMeta,
     pub golden: Option<GoldenMeta>,
@@ -101,6 +106,10 @@ impl ArtifactMeta {
                     .collect::<Result<Vec<_>>>()?,
             }),
         };
+        let packed_weights = match v.opt("packed_weights") {
+            None => false,
+            Some(p) => p.as_bool()?,
+        };
         Ok(ArtifactMeta {
             name: v.get("name")?.as_str()?.to_string(),
             model: v.get("model")?.as_str()?.to_string(),
@@ -110,6 +119,7 @@ impl ArtifactMeta {
             hlo_sha256: v.get("hlo_sha256")?.as_str()?.to_string(),
             weights: v.get("weights")?.as_str()?.to_string(),
             params,
+            packed_weights,
             input: TensorMeta::from_json(v.get("input")?)?,
             output: TensorMeta::from_json(v.get("output")?)?,
             golden,
@@ -136,6 +146,70 @@ pub struct ModelAccounting {
     pub layers: Vec<ManifestLayer>,
     pub total_macs: u64,
     pub total_params: u64,
+}
+
+/// One model's weight blob plus per-tensor views into it.
+///
+/// The blob is decoded (and, under PJRT, uploaded) exactly once per
+/// model; every parameter tensor is an `(offset, numel)` window over
+/// it — the host never materialises a per-tensor copy.  This is the
+/// CPU-side mirror of the packed-weights device contract
+/// ([`ArtifactMeta::packed_weights`]).
+#[derive(Debug, Clone)]
+pub struct WeightViews {
+    blob: Arc<[f32]>,
+    views: Vec<(usize, usize)>,
+}
+
+impl WeightViews {
+    /// Wrap a decoded blob; validates that every parameter window is
+    /// in bounds (a truncated blob fails here, not at execute time).
+    pub fn from_blob(
+        blob: Arc<[f32]>,
+        params: &[ParamMeta],
+    ) -> Result<Self> {
+        let mut views = Vec::with_capacity(params.len());
+        for p in params {
+            let end = p.offset.checked_add(p.numel).ok_or_else(|| {
+                anyhow!("param {}: offset overflow", p.name)
+            })?;
+            if end > blob.len() {
+                return Err(anyhow!(
+                    "param {}: window {}..{end} outside blob of {} floats",
+                    p.name,
+                    p.offset,
+                    blob.len()
+                ));
+            }
+            views.push((p.offset, p.numel));
+        }
+        Ok(WeightViews { blob, views })
+    }
+
+    /// The shared backing blob.
+    pub fn blob(&self) -> &Arc<[f32]> {
+        &self.blob
+    }
+
+    /// Number of parameter tensors.
+    pub fn len(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.views.is_empty()
+    }
+
+    /// The `i`-th parameter tensor as a zero-copy slice of the blob.
+    pub fn view(&self, i: usize) -> &[f32] {
+        let (off, n) = self.views[i];
+        &self.blob[off..off + n]
+    }
+
+    /// All tensors, in argument order.
+    pub fn iter(&self) -> impl Iterator<Item = &[f32]> {
+        self.views.iter().map(|&(off, n)| &self.blob[off..off + n])
+    }
 }
 
 /// The whole manifest.
@@ -237,6 +311,17 @@ impl Manifest {
         Ok(values.into())
     }
 
+    /// Read a model's weight blob and wrap it in per-tensor views
+    /// (decode once, slice everywhere — see [`WeightViews`]).
+    pub fn read_weight_views(
+        &self,
+        art: &ArtifactMeta,
+    ) -> Result<WeightViews> {
+        let blob = self.read_weights(art)?;
+        WeightViews::from_blob(blob, &art.params)
+            .with_context(|| format!("weight views for {}", art.name))
+    }
+
     /// Read a golden blob: (input, expected_output).
     pub fn read_golden(
         &self,
@@ -310,6 +395,67 @@ mod tests {
             "{err}"
         );
         assert!(err.to_string().contains("1 trailing"), "{err}");
+    }
+
+    fn pm(name: &str, offset: usize, numel: usize) -> ParamMeta {
+        ParamMeta {
+            name: name.into(),
+            shape: vec![numel],
+            offset,
+            numel,
+        }
+    }
+
+    #[test]
+    fn weight_views_slice_without_copying() {
+        let blob: Arc<[f32]> = (0..10).map(|i| i as f32).collect();
+        let views = WeightViews::from_blob(
+            blob.clone(),
+            &[pm("a", 0, 4), pm("b", 4, 6)],
+        )
+        .unwrap();
+        assert_eq!(views.len(), 2);
+        assert_eq!(views.view(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(views.view(1), &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        // Zero copy: the views alias the blob's allocation.
+        assert!(std::ptr::eq(
+            views.view(0).as_ptr(),
+            views.blob().as_ptr()
+        ));
+        assert_eq!(
+            views.iter().map(|v| v.len()).sum::<usize>(),
+            blob.len()
+        );
+    }
+
+    #[test]
+    fn weight_views_reject_out_of_bounds_params() {
+        let blob: Arc<[f32]> = vec![0.0f32; 8].into();
+        let err = WeightViews::from_blob(blob, &[pm("w", 4, 5)])
+            .unwrap_err();
+        assert!(err.to_string().contains("outside blob"), "{err}");
+    }
+
+    #[test]
+    fn packed_weights_flag_parses_and_defaults_off() {
+        let base = r#"{
+            "name": "m_b1_jnp", "model": "m", "batch": 1,
+            "conv_impl": "jnp", "hlo": "m.hlo.txt", "hlo_sha256": "x",
+            "weights": "m.weights.bin",
+            "params": [{"name": "w", "shape": [2], "offset": 0, "numel": 2}],
+            "input": {"shape": [1, 2]}, "output": {"shape": [1, 2]}
+        }"#;
+        let a = ArtifactMeta::from_json(&Json::parse(base).unwrap())
+            .unwrap();
+        assert!(!a.packed_weights, "flag must default off");
+        let packed = base.replacen(
+            "\"batch\": 1,",
+            "\"batch\": 1, \"packed_weights\": true,",
+            1,
+        );
+        let b = ArtifactMeta::from_json(&Json::parse(&packed).unwrap())
+            .unwrap();
+        assert!(b.packed_weights);
     }
 
     #[test]

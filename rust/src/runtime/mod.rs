@@ -21,9 +21,13 @@
 //! simulated board its own engine thread (`coordinator::board`).
 //!
 //! Hot-path design: model weights are decoded from the blob once per
-//! model into a shared `Arc<[f32]>` (uploaded to device buffers once
-//! under PJRT), and every request only moves its input batch — no
-//! weight copies on the request path.
+//! model into shared [`WeightViews`] (zero-copy per-tensor windows
+//! over one `Arc<[f32]>`), and every request only moves its input
+//! batch — no weight copies on the request path.  Artifacts exported
+//! with `aot.py` packed mode (`packed_weights` in the manifest) take
+//! the whole blob as ONE device argument sliced inside the graph, so
+//! the PJRT engine uploads a single buffer per model — the warm-up
+//! win on 200+-tensor models like ResNet-50.
 
 #[cfg(not(feature = "pjrt"))]
 mod cpu_ref;
@@ -51,5 +55,5 @@ pub use cpu_ref::Engine;
 pub use engine::Engine;
 pub use manifest::{
     bytes_to_f32, ArtifactMeta, GoldenMeta, Manifest, ManifestLayer,
-    ModelAccounting, ParamMeta,
+    ModelAccounting, ParamMeta, WeightViews,
 };

@@ -9,8 +9,9 @@ use ffcnn::data::Rng;
 use ffcnn::fpga::channel::Channel;
 use ffcnn::fpga::device::{ARRIA10, DEVICES, STRATIX10};
 use ffcnn::fpga::pipeline::{
-    run_recurrence_exact, run_recurrence_fast, simulate_tokens,
-    simulate_tokens_exact, StageRates,
+    run_recurrence_exact, run_recurrence_fast, run_stream_exact,
+    run_stream_fast, simulate_tokens, simulate_tokens_exact,
+    simulate_tokens_exact_policy, simulate_tokens_policy, StageRates,
 };
 use ffcnn::fpga::resources::resource_usage;
 use ffcnn::fpga::timing::{
@@ -348,6 +349,224 @@ fn prop_token_sim_fast_path_matches_exact_oracle() {
                         <= 1.0 + 1e-3 * e.cycles as f64
                 })
         },
+    );
+}
+
+// ------------------------------------------- cross-group overlap (Full)
+
+#[test]
+fn prop_token_policies_ordered_exact() {
+    // The overlapped stream is a relaxation of the serialized-group
+    // schedule, which relaxes the stage-serialized one:
+    // Full <= WithinGroup <= None.  On the exact oracles the ordering
+    // is structural — no tolerance.  (Small models keep the O(tokens)
+    // walks affordable in debug builds; the fast-dispatch twin below
+    // covers the big models.)
+    forall(
+        "token-policy-ordering-exact",
+        |r| {
+            let model = *pick(r, &["alexnet", "tinynet"]);
+            let vec = *pick(r, &[4usize, 8, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            let depth = *pick(r, &[1usize, 4, 32, 512, 1024]);
+            (model.to_string(), vec, lane, depth)
+        },
+        |(model, vec, lane, depth)| {
+            let m = models::by_name(model).unwrap();
+            let mut p = DesignParams::new(*vec, *lane);
+            p.channel_depth = *depth;
+            let exact = |o| {
+                simulate_tokens_exact_policy(&m, &STRATIX10, &p, 1, o)
+                    .total_cycles
+            };
+            let (fe, we, ne) = (
+                exact(OverlapPolicy::Full),
+                exact(OverlapPolicy::WithinGroup),
+                exact(OverlapPolicy::None),
+            );
+            fe <= we && we <= ne
+        },
+    );
+}
+
+#[test]
+fn prop_token_policies_ordered_fast_dispatch() {
+    // Same ordering through the dispatched fast paths, on the models
+    // whose exact walks are too big for a debug-build property test;
+    // the fast paths get the divergence budget as slack.
+    forall(
+        "token-policy-ordering-fast",
+        |r| {
+            let model =
+                *pick(r, &["vgg11", "vgg16", "resnet50", "alexnet"]);
+            let vec = *pick(r, &[8usize, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            let depth = *pick(r, &[4usize, 128, 512, 2048]);
+            let batch = *pick(r, &[1usize, 2, 8]);
+            (model.to_string(), vec, lane, depth, batch)
+        },
+        |(model, vec, lane, depth, batch)| {
+            let m = models::by_name(model).unwrap();
+            let mut p = DesignParams::new(*vec, *lane);
+            p.channel_depth = *depth;
+            let fast = |o| {
+                simulate_tokens_policy(&m, &STRATIX10, &p, *batch, o)
+                    .total_cycles
+            };
+            let (ff, wf, nf) = (
+                fast(OverlapPolicy::Full),
+                fast(OverlapPolicy::WithinGroup),
+                fast(OverlapPolicy::None),
+            );
+            ff <= wf + 8 + wf / 1000 && wf <= nf + 8 + nf / 1000
+        },
+    );
+}
+
+#[test]
+fn prop_overlapped_fast_path_matches_exact_oracle() {
+    // The Full-policy closed-form fast path must stay within 0.1% of
+    // the O(tokens) stream oracle, per group and in total, across
+    // randomized models, design points and channel depths.
+    forall(
+        "overlap-fast-vs-exact",
+        |r| {
+            let model = *pick(r, &["alexnet", "tinynet"]);
+            let vec = *pick(r, &[4usize, 8, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            let depth = *pick(r, &[1usize, 4, 32, 512, 1024]);
+            (model.to_string(), vec, lane, depth)
+        },
+        |(model, vec, lane, depth)| {
+            let m = models::by_name(model).unwrap();
+            let mut p = DesignParams::new(*vec, *lane);
+            p.channel_depth = *depth;
+            let fast = simulate_tokens_policy(
+                &m, &STRATIX10, &p, 1, OverlapPolicy::Full,
+            );
+            let exact = simulate_tokens_exact_policy(
+                &m, &STRATIX10, &p, 1, OverlapPolicy::Full,
+            );
+            fast.total_cycles.abs_diff(exact.total_cycles) as f64
+                <= 1.0 + 1e-3 * exact.total_cycles as f64
+                && fast.groups.iter().zip(&exact.groups).all(|(f, e)| {
+                    // Per-group attribution is a frontier delta;
+                    // neighbouring groups can trade a few cycles.
+                    f.cycles.abs_diff(e.cycles) as f64
+                        <= 4.0 + 2e-3 * e.cycles as f64
+                })
+        },
+    );
+}
+
+#[test]
+fn prop_stream_solver_fast_vs_exact_synthetic() {
+    // Drive the stream solvers directly with randomized multi-segment
+    // rate profiles (integer / half-integer / zero intervals cover the
+    // compute-bound, memory-bound and degenerate regimes), so the
+    // fast path's boundary handling is tested beyond what real models
+    // produce.
+    forall(
+        "stream-fast-vs-exact",
+        |r| {
+            let depth = *pick(r, &[1usize, 2, 16, 64, 512]);
+            let nsegs = int_in(r, 1, 5);
+            let segs: Vec<(u64, StageRates)> = (0..nsegs)
+                .map(|_| {
+                    let tokens =
+                        *pick(r, &[1u64, 7, 300, 3_000, 20_000, 60_000]);
+                    let mut v = [0.0f64; 4];
+                    for x in v.iter_mut() {
+                        *x = match r.next_u64() % 3 {
+                            0 => 0.0,
+                            1 => (r.next_u64() % 12) as f64,
+                            _ => (r.next_u64() % 8) as f64 + 0.5,
+                        };
+                    }
+                    (
+                        tokens,
+                        StageRates {
+                            memrd: v[0],
+                            conv: v[1],
+                            fused: v[2],
+                            memwr: v[3],
+                        },
+                    )
+                })
+                .collect();
+            (depth, segs)
+        },
+        |(depth, segs)| {
+            let (te, _) = run_stream_exact(segs, *depth);
+            let (tf, _) = run_stream_fast(segs, *depth);
+            te.abs_diff(tf) as f64 <= 1.0 + 1e-3 * te as f64
+        },
+    );
+}
+
+#[test]
+fn regression_overlap_token_cycles_pinned() {
+    // Token-simulator regression pins at the FFCNN Stratix-10 point,
+    // alongside the analytic Table-1 pin below.  The vgg16 b16 row is
+    // the bench_pipeline acceptance case: overlap-on must not exceed
+    // overlap-off (at batch 16 every VGG group is compute-bound, so
+    // the win is rounding-thin; the material win is at batch 1 where
+    // FC weight streams are exposed).
+    let p = ffcnn_stratix10_params();
+    let pin = |model: &str, batch: usize, overlap, expect: u64| {
+        let m = models::by_name(model).unwrap();
+        let got = simulate_tokens_policy(&m, &STRATIX10, &p, batch, overlap)
+            .total_cycles;
+        let tol = (expect as f64 * 5e-4) as u64 + 1;
+        assert!(
+            got.abs_diff(expect) <= tol,
+            "{model} b{batch} {overlap:?}: got {got}, pinned {expect}"
+        );
+        got
+    };
+    let v16_full =
+        pin("vgg16", 16, OverlapPolicy::Full, 1_439_769_086);
+    let v16_within =
+        pin("vgg16", 16, OverlapPolicy::WithinGroup, 1_439_769_088);
+    assert!(v16_full <= v16_within);
+
+    let a1_full = pin("alexnet", 1, OverlapPolicy::Full, 7_783_042);
+    let a1_within =
+        pin("alexnet", 1, OverlapPolicy::WithinGroup, 7_838_284);
+    assert!(a1_full < a1_within, "{a1_full} vs {a1_within}");
+
+    let v1_full = pin("vgg16", 1, OverlapPolicy::Full, 97_470_571);
+    let v1_within =
+        pin("vgg16", 1, OverlapPolicy::WithinGroup, 97_617_935);
+    assert!(v1_full < v1_within, "{v1_full} vs {v1_within}");
+}
+
+#[test]
+fn regression_overlap_fast_path_never_walks_large_groups() {
+    // Acceptance: under Full the closed-form fast path must leap every
+    // large group — an O(tokens) walk would show up as `exact == true`
+    // on the multi-million-token VGG-16 b16 groups.
+    let p = ffcnn_stratix10_params();
+    let sim = simulate_tokens_policy(
+        &models::vgg16(),
+        &STRATIX10,
+        &p,
+        16,
+        OverlapPolicy::Full,
+    );
+    for g in &sim.groups {
+        if g.tokens > 200_000 {
+            assert!(
+                !g.exact,
+                "group {:?} ({} tokens) walked the O(tokens) oracle",
+                g.layers,
+                g.tokens
+            );
+        }
+    }
+    assert!(
+        sim.groups.iter().filter(|g| !g.exact).count() >= 10,
+        "expected most vgg16 groups on the leaping fast path"
     );
 }
 
