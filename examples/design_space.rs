@@ -1,37 +1,44 @@
-//! Design-space exploration (experiment E2): sweep the accelerator's
-//! (VEC_SIZE, LANE_NUM) grid on both of the paper's devices, print the
-//! Pareto frontier and the chosen design points, and show how the
-//! optimum shifts with batch size.
+//! Design-space exploration (experiment E2) through the
+//! `Plan → Deployment` facade: sweep the accelerator's
+//! (VEC_SIZE, LANE_NUM) grid on both of the paper's devices, print
+//! the Pareto frontier and the chosen design points, show how the
+//! optimum shifts with batch size, and run the extended
+//! precision × overlap × channel-depth sweep in one
+//! `deployment.sweep()` call.
 //!
 //! ```bash
 //! cargo run --release --example design_space
 //! ```
 
-use ffcnn::fpga::device::{ARRIA10, STRATIX10};
-use ffcnn::fpga::dse::{self, Fidelity, SweepSpace};
-use ffcnn::fpga::timing::{
-    ffcnn_arria10_params, ffcnn_stratix10_params,
-};
-use ffcnn::models;
+use ffcnn::fpga::dse::SweepSpace;
+use ffcnn::fpga::Fidelity;
+use ffcnn::plan::Plan;
+use ffcnn::Result;
 
-fn main() {
-    let model = models::alexnet();
-    for (device, chosen) in [
-        (&ARRIA10, ffcnn_arria10_params()),
-        (&STRATIX10, ffcnn_stratix10_params()),
-    ] {
+fn main() -> Result<()> {
+    for device in ["arria10", "stratix10"] {
+        // The device default design point IS the paper's point.
+        let mut plan =
+            Plan::builder().model("alexnet").device(device).build()?;
+        let dep = plan.deploy()?;
+        let chosen = plan.design;
         println!(
             "=== {} (paper design point: vec={} lane={}) ===",
-            device.device, chosen.vec_size, chosen.lane_num
+            dep.device().device,
+            chosen.vec_size,
+            chosen.lane_num
         );
-        let pts = dse::explore(&model, device, 1);
-        let feasible = pts.iter().filter(|p| p.feasible).count();
-        println!("{} grid points, {feasible} feasible", pts.len());
+        let sweep = dep.sweep();
+        println!(
+            "{} grid points, {} feasible",
+            sweep.points.len(),
+            sweep.feasible_count()
+        );
         println!(
             "{:<6}{:<6}{:>8}{:>11}{:>10}{:>12}",
             "vec", "lane", "DSPs", "time(ms)", "GOPS", "GOPS/DSP"
         );
-        for p in dse::pareto(&pts) {
+        for p in sweep.pareto() {
             let mark = if p.params.vec_size == chosen.vec_size
                 && p.params.lane_num == chosen.lane_num
             {
@@ -49,8 +56,8 @@ fn main() {
                 p.gops_per_dsp
             );
         }
-        let lat = dse::best_latency(&pts).unwrap();
-        let den = dse::best_density(&pts).unwrap();
+        let lat = sweep.best_latency().unwrap();
+        let den = sweep.best_density().unwrap();
         println!(
             "latency-optimal: vec={} lane={} ({:.2} ms, {} DSPs)",
             lat.params.vec_size, lat.params.lane_num, lat.time_ms,
@@ -60,18 +67,19 @@ fn main() {
             "density-optimal: vec={} lane={} ({:.3} GOPS/DSP)",
             den.params.vec_size, den.params.lane_num, den.gops_per_dsp
         );
+        // Adopt the latency winner back into the plan — the artifact a
+        // follow-up simulate/serve run would consume.  (`dep` was
+        // resolved from the pre-adoption plan and still holds the
+        // paper's point.)
+        let adopted = lat.params;
+        plan.adopt(lat);
+        assert_eq!(plan.design, adopted);
 
         // Batch-size ablation at the paper's design point.
         println!("\nbatch scaling at the paper's point:");
         println!("{:<8}{:>11}{:>10}", "batch", "ms/image", "GOPS");
         for batch in [1usize, 2, 4, 8, 16] {
-            let t = ffcnn::fpga::timing::simulate_model(
-                &model,
-                device,
-                &chosen,
-                batch,
-                ffcnn::fpga::timing::OverlapPolicy::WithinGroup,
-            );
+            let t = dep.analytic(batch);
             println!(
                 "{:<8}{:>11.2}{:>10.1}",
                 batch,
@@ -82,41 +90,59 @@ fn main() {
         println!();
     }
 
-    // Extended sweep: overlap on/off x channel depth, timed with the
-    // token-level pipeline simulator's closed-form fast path.  Deeper
-    // channels buy cross-group prefetch headroom (under Full) at an
-    // M20K cost the feasibility model charges.
-    println!("=== overlap x channel-depth sweep (alexnet, stratix10) ===");
-    let space = SweepSpace::with_overlap_and_depth();
-    let pts = dse::explore_space(
-        &model,
-        &STRATIX10,
-        1,
-        Fidelity::PipelineFast,
-        &space,
-    );
+    // Extended sweep: precision x overlap x channel depth, timed with
+    // the token-level pipeline simulator's closed-form fast path — one
+    // deployment.sweep() call over the full grid.  Deeper channels buy
+    // cross-group prefetch headroom (under Full) at an M20K cost, and
+    // fixed point packs more MACs per DSP while shrinking the DDR
+    // streams.
     println!(
-        "{:<6}{:<6}{:<8}{:<14}{:>11}{:>12}",
-        "vec", "lane", "depth", "overlap", "time(ms)", "GOPS/DSP"
+        "=== precision x overlap x depth sweep (alexnet, stratix10) ==="
     );
-    for p in dse::pareto(&pts) {
+    let plan = Plan::builder()
+        .model("alexnet")
+        .device("stratix10")
+        .fidelity(Fidelity::PipelineFast)
+        .sweep(SweepSpace::with_precision_overlap_and_depth())
+        .build()?;
+    let sweep = plan.deploy()?.sweep();
+    println!(
+        "{:<6}{:<6}{:<8}{:<10}{:<14}{:>11}{:>12}",
+        "vec", "lane", "depth", "prec", "overlap", "time(ms)", "GOPS/DSP"
+    );
+    for p in sweep.pareto() {
         println!(
-            "{:<6}{:<6}{:<8}{:<14}{:>11.2}{:>12.3}",
+            "{:<6}{:<6}{:<8}{:<10}{:<14}{:>11.2}{:>12.3}",
             p.params.vec_size,
             p.params.lane_num,
             p.params.channel_depth,
+            format!("{:?}", p.params.precision),
             format!("{:?}", p.overlap),
             p.time_ms,
             p.gops_per_dsp
         );
     }
-    let best = dse::best_latency(&pts).unwrap();
+    println!("best per precision:");
+    for (prec, p) in sweep.best_latency_per_precision() {
+        println!(
+            "  {:<10} vec={:<3} lane={:<3} depth={:<5} {:?} -> {:.2} ms",
+            format!("{prec:?}"),
+            p.params.vec_size,
+            p.params.lane_num,
+            p.params.channel_depth,
+            p.overlap,
+            p.time_ms
+        );
+    }
+    let best = sweep.best_latency().unwrap();
     println!(
-        "latency-optimal: vec={} lane={} depth={} {:?} ({:.2} ms)",
+        "latency-optimal: vec={} lane={} depth={} {:?} {:?} ({:.2} ms)",
         best.params.vec_size,
         best.params.lane_num,
         best.params.channel_depth,
+        best.params.precision,
         best.overlap,
         best.time_ms
     );
+    Ok(())
 }

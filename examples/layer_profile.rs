@@ -1,36 +1,31 @@
 //! Layer/pipeline profile (experiment E3): per-fused-group breakdown of
 //! compute vs DDR cycles on both devices, the fusion bandwidth saving,
 //! and the analytic-vs-token-simulation agreement, for AlexNet and
-//! ResNet-50.
+//! ResNet-50 — all through the `Plan → Deployment` facade.
 //!
 //! ```bash
 //! cargo run --release --example layer_profile
 //! ```
 
-use ffcnn::config::RunConfig;
-use ffcnn::fpga::pipeline::{simulate_tokens, simulate_tokens_policy};
-use ffcnn::fpga::timing::{simulate_model, OverlapPolicy};
-use ffcnn::models;
+use ffcnn::fpga::timing::OverlapPolicy;
+use ffcnn::plan::Plan;
+use ffcnn::Result;
 
-fn main() {
+fn main() -> Result<()> {
     for model_name in ["alexnet", "resnet50"] {
-        let model = models::by_name(model_name).unwrap();
         for device_name in ["arria10", "stratix10"] {
-            let cfg = RunConfig {
-                model: model_name.into(),
-                device: device_name.into(),
-                ..Default::default()
-            };
-            let d = cfg.device_profile().unwrap();
-            let p = cfg.design_params().unwrap();
-            let t =
-                simulate_model(&model, d, &p, 1, OverlapPolicy::WithinGroup);
-            let tok = simulate_tokens(&model, d, &p, 1);
+            let plan = Plan::builder()
+                .model(model_name)
+                .device(device_name)
+                .build()?;
+            let dep = plan.deploy()?;
+            let t = dep.analytic(1);
+            let tok = dep.simulate(1);
             println!(
                 "=== {} on {} === {:.2} ms | {:.1} GOPS | fusion saves \
                  {:.0}% DDR | token-sim ratio {:.3}",
-                model.name,
-                d.device,
+                dep.model().name,
+                dep.device().device,
                 t.time_per_image_ms(),
                 t.gops(),
                 t.fusion_traffic_saving() * 100.0,
@@ -71,27 +66,25 @@ fn main() {
     // Overlap policy ablation (the double-buffering design choice),
     // from both the analytic model and the token-level simulator
     // (which resolves the cross-group overlap at token granularity,
-    // DDR contention included).
+    // DDR contention included).  The deployment's simulator handle
+    // re-runs under each policy without editing the plan.
     println!(
         "=== overlap policy ablation (alexnet, stratix10) ===\n\
          {:<24}{:>14}{:>14}",
         "", "analytic(ms)", "token(ms)"
     );
-    let model = models::alexnet();
-    let cfg = RunConfig::default();
-    let d = cfg.device_profile().unwrap();
-    let p = cfg.design_params().unwrap();
+    let dep = Plan::builder().model("alexnet").build()?.deploy()?;
     for (name, pol) in [
         ("no overlap", OverlapPolicy::None),
         ("within-group", OverlapPolicy::WithinGroup),
         ("full cross-group", OverlapPolicy::Full),
     ] {
-        let t = simulate_model(&model, d, &p, 1, pol);
-        let tok = simulate_tokens_policy(&model, d, &p, 1, pol);
+        let sim = dep.simulator().policy(pol);
         println!(
             "{name:<24}{:>14.2}{:>14.2}",
-            t.time_per_image_ms(),
-            tok.time_ms()
+            sim.analytic(1).time_per_image_ms(),
+            sim.run(1).time_ms()
         );
     }
+    Ok(())
 }

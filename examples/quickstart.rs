@@ -1,38 +1,31 @@
-//! Quickstart: load an AOT artifact, classify one image, compare the
-//! host numerics path with the simulated FPGA timing.
+//! Quickstart: build a `Plan`, deploy it, classify one image, and
+//! compare the host numerics path with the simulated FPGA timing.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use ffcnn::config::{default_artifacts_dir, RunConfig};
 use ffcnn::data;
-use ffcnn::fpga::timing::simulate_model;
-use ffcnn::models;
+use ffcnn::plan::Plan;
 use ffcnn::runtime::Engine;
 use ffcnn::Result;
 
 fn main() -> Result<()> {
-    // 1. The model and the board we are simulating.
-    let cfg = RunConfig {
-        model: "alexnet".into(),
-        device: "stratix10".into(),
-        artifacts_dir: default_artifacts_dir(),
-        ..Default::default()
-    };
-    let model = models::by_name(&cfg.model).unwrap();
-    let device = cfg.device_profile()?;
-    let design = cfg.design_params()?;
+    // 1. The plan: model + board + design point (device defaults),
+    //    reified as one value, and its resolved deployment.
+    let plan = Plan::builder().model("alexnet").device("stratix10").build()?;
+    let dep = plan.deploy()?;
+    let model = dep.model();
     println!(
         "FFCNN quickstart: {} ({:.2} GOPs/image) on {}",
         model.name,
         model.total_ops() as f64 / 1e9,
-        device.device
+        dep.device().device
     );
 
     // 2. Real numerics: the AOT HLO artifact through the PJRT runtime.
-    let engine = Engine::open(&cfg.artifacts_dir)?;
-    let artifact = cfg.artifact_name(1);
+    let engine = Engine::open(&plan.artifacts_dir)?;
+    let artifact = plan.artifact_name(1);
     println!("compiling {artifact} (cached after first run) ...");
     engine.warm(&artifact)?;
 
@@ -48,13 +41,13 @@ fn main() -> Result<()> {
     );
 
     // 3. Simulated FPGA timing: what the paper's board would report.
-    let sim = simulate_model(&model, device, &design, 1, cfg.overlap);
+    let sim = dep.analytic(1);
     println!(
         "simulated {} (vec={} lane={}): {:.2} ms/image, {:.1} GOPS, \
          DDR {:.1} MB ({}% saved by kernel fusion)",
-        device.name,
-        design.vec_size,
-        design.lane_num,
+        dep.device().name,
+        plan.design.vec_size,
+        plan.design.lane_num,
         sim.time_per_image_ms(),
         sim.gops(),
         sim.dram_bytes as f64 / 1e6,

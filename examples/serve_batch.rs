@@ -1,10 +1,12 @@
 //! End-to-end serving driver (experiment E4, DESIGN.md §4).
 //!
-//! Boots the full coordinator — boards (PJRT engines + FPGA cycle
-//! model), dynamic batchers, router — loads a real AOT'd model, and
-//! serves batched synthetic requests both closed-loop (burst) and
-//! open-loop (Poisson arrivals), reporting latency percentiles,
-//! throughput and batching effectiveness.  Results recorded in
+//! Builds one `Plan` and boots the full coordinator from it via
+//! `Deployment::serve()` — boards (PJRT engines + FPGA cycle model),
+//! dynamic batchers, router — loads a real AOT'd model, and serves
+//! batched synthetic requests both closed-loop (burst) and open-loop
+//! (Poisson arrivals), reporting latency percentiles, throughput and
+//! batching effectiveness.  The pacing and work-stealing phases are
+//! plain mutations of the same plan value.  Results recorded in
 //! EXPERIMENTS.md §E4.
 //!
 //! ```bash
@@ -12,9 +14,10 @@
 //! # smaller/faster: FFCNN_SERVE_MODEL=tinynet FFCNN_SERVE_N=32 ...
 //! ```
 
-use ffcnn::config::{default_artifacts_dir, RunConfig};
-use ffcnn::coordinator::{InferenceService, Pace, Policy};
+use ffcnn::config::ServingConfig;
+use ffcnn::coordinator::{Pace, Policy};
 use ffcnn::data;
+use ffcnn::plan::Plan;
 use ffcnn::Result;
 
 fn env_or(key: &str, default: &str) -> String {
@@ -27,28 +30,31 @@ fn main() -> Result<()> {
     let n: usize = env_or("FFCNN_SERVE_N", "48").parse()?;
     let boards: usize = env_or("FFCNN_SERVE_BOARDS", "1").parse()?;
 
-    let mut cfg = RunConfig {
-        model: model.clone(),
-        device: "stratix10".into(),
-        conv_impl,
-        artifacts_dir: default_artifacts_dir(),
-        ..Default::default()
-    };
-    cfg.serving.max_batch = 8;
-    cfg.serving.max_wait_ms = 4;
-    cfg.serving.boards = boards;
+    // One plan describes the whole serving stack; the pace/policy
+    // variants below are plain mutations of the same value.
+    let plan = Plan::builder()
+        .model(&model)
+        .device("stratix10")
+        .conv_impl(&conv_impl)
+        .policy(Policy::LeastOutstanding)
+        .serving(ServingConfig {
+            max_batch: 8,
+            max_wait_ms: 4,
+            boards,
+            ..Default::default()
+        })
+        .build()?;
 
-    let in_shape = ffcnn::models::by_name(&model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?
-        .in_shape;
+    let dep = plan.deploy()?;
+    let in_shape = dep.model().in_shape;
 
     println!(
         "serve_batch: model={model} boards={boards} max_batch={} \
          requests={n}",
-        cfg.serving.max_batch
+        plan.serving.max_batch
     );
     println!("starting service (compiling artifacts once) ...");
-    let svc = InferenceService::start(&cfg, Pace::None, Policy::LeastOutstanding)?;
+    let svc = dep.serve()?;
 
     // Warm the pipeline so compile time doesn't pollute latencies.
     let _ = svc.classify(data::synth_images(1, in_shape, 0))?;
@@ -77,8 +83,9 @@ fn main() -> Result<()> {
 
     // --- Phase 3: simulated-FPGA pacing (board-speed serving) -------
     println!("\n[phase 3] burst with boards paced at simulated FPGA speed");
-    let svc_paced =
-        InferenceService::start(&cfg, Pace::Fpga, Policy::LeastOutstanding)?;
+    let mut paced = plan.clone();
+    paced.pace = Pace::Fpga;
+    let svc_paced = paced.deploy()?.serve()?;
     let _ = svc_paced.classify(data::synth_images(1, in_shape, 0))?;
     let r3 = svc_paced.run_trace(
         &data::burst_trace(n.min(24)),
@@ -91,8 +98,9 @@ fn main() -> Result<()> {
     // Idle boards steal queued requests from loaded peers, so one slow
     // batch cannot strand the queue behind it.
     println!("\n[phase 4] burst with Policy::WorkStealing");
-    let svc_steal =
-        InferenceService::start(&cfg, Pace::None, Policy::WorkStealing)?;
+    let mut stealing = plan.clone();
+    stealing.policy = Policy::WorkStealing;
+    let svc_steal = stealing.deploy()?.serve()?;
     let _ = svc_steal.classify(data::synth_images(1, in_shape, 0))?;
     let r4 = svc_steal.run_trace(
         &data::burst_trace(n),

@@ -4,9 +4,10 @@
 
 use std::time::Duration;
 
-use ffcnn::config::{default_artifacts_dir, RunConfig};
-use ffcnn::coordinator::{plan_chunks, InferenceService, Pace, Policy, Router};
+use ffcnn::config::{default_artifacts_dir, ServingConfig};
+use ffcnn::coordinator::{plan_chunks, Pace, Policy, Router};
 use ffcnn::data;
+use ffcnn::plan::Plan;
 use ffcnn::util::bench::Bench;
 
 fn main() {
@@ -32,18 +33,20 @@ fn main() {
         b.finish();
         return;
     }
-    let mut cfg = RunConfig {
-        model: "tinynet".into(),
-        conv_impl: "pallas".into(),
-        artifacts_dir: dir,
-        ..Default::default()
-    };
-    cfg.serving.max_batch = 2;
-    cfg.serving.max_wait_ms = 1;
-
-    let svc =
-        InferenceService::start(&cfg, Pace::None, Policy::LeastOutstanding)
-            .unwrap();
+    let plan = Plan::builder()
+        .model("tinynet")
+        .conv_impl("pallas")
+        .artifacts_dir(dir)
+        .pace(Pace::None)
+        .policy(Policy::LeastOutstanding)
+        .serving(ServingConfig {
+            max_batch: 2,
+            max_wait_ms: 1,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let svc = plan.deploy().unwrap().serve().unwrap();
     let img = data::synth_images(1, (3, 16, 16), 9);
     // warm
     let _ = svc.classify(img.clone()).unwrap();

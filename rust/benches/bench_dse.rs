@@ -1,28 +1,40 @@
-//! Bench E2: full design-space exploration on both devices, printing
-//! the chosen points (the paper's "design space fully explored") and
-//! timing the sweep.
+//! Bench E2: full design-space exploration on both devices through
+//! the `Plan -> Deployment` facade, printing the chosen points (the
+//! paper's "design space fully explored") and timing the sweep.
 //!
 //! The acceptance benchmark for the closed-form fast path lives here:
 //! VGG-16 at batch 16 swept with the pipeline simulator's fast path
 //! vs the O(tokens) exact oracle.  The suite (and the measured
-//! speedup) is written to `BENCH_dse.json` so the number is tracked
-//! across PRs.
+//! speedup), plus the best-per-precision rows of the precision axis,
+//! is written to `BENCH_dse.json` so the numbers are tracked across
+//! PRs.
 
 use std::path::Path;
 use std::time::Duration;
 
 use ffcnn::fpga::device::{ARRIA10, STRATIX10, STRATIXV};
 use ffcnn::fpga::dse::{self, Fidelity, SweepSpace};
-use ffcnn::fpga::timing::OverlapPolicy;
+use ffcnn::fpga::timing::{OverlapPolicy, Precision};
 use ffcnn::models;
 use ffcnn::util::bench::Bench;
 use ffcnn::util::Json;
+
+/// The classic analytic `(vec, lane)` sweep through the one canonical
+/// engine (`explore_space`, what `Deployment::sweep` calls).
+fn sweep_default(
+    model: &ffcnn::models::Model,
+    device: &ffcnn::fpga::device::DeviceProfile,
+    batch: usize,
+    fidelity: Fidelity,
+) -> Vec<dse::DesignPoint> {
+    dse::explore_space(model, device, batch, fidelity, &SweepSpace::default())
+}
 
 fn main() {
     let model = models::alexnet();
 
     for device in [&ARRIA10, &STRATIX10, &STRATIXV] {
-        let pts = dse::explore(&model, device, 1);
+        let pts = sweep_default(&model, device, 1, Fidelity::Analytic);
         let lat = dse::best_latency(&pts).unwrap();
         let den = dse::best_density(&pts).unwrap();
         println!(
@@ -77,9 +89,56 @@ fn main() {
         OverlapPolicy::Full | OverlapPolicy::WithinGroup
     ));
 
+    // ---- precision axis (ROADMAP: DSE over precision) ---------------
+    let ppts = dse::explore_space(
+        &model,
+        &STRATIX10,
+        1,
+        Fidelity::Analytic,
+        &SweepSpace::with_precision(),
+    );
+    let lat_per = dse::best_latency_per_precision(&ppts);
+    let den_per = dse::best_density_per_precision(&ppts);
+    println!("\nprecision sweep (alexnet, stratix10):");
+    for ((prec, lp), (_, dp)) in lat_per.iter().zip(&den_per) {
+        println!(
+            "  {:<10} best latency vec={:<3} lane={:<3} {:>8.2} ms | \
+             best density {:.3} GOPS/DSP",
+            format!("{prec:?}"),
+            lp.params.vec_size,
+            lp.params.lane_num,
+            lp.time_ms,
+            dp.gops_per_dsp
+        );
+    }
+    let lat_ms = |prec: Precision| {
+        lat_per
+            .iter()
+            .find(|(q, _)| *q == prec)
+            .map(|(_, p)| p.time_ms)
+            .unwrap_or(f64::NAN)
+    };
+    let dens = |prec: Precision| {
+        den_per
+            .iter()
+            .find(|(q, _)| *q == prec)
+            .map(|(_, p)| p.gops_per_dsp)
+            .unwrap_or(f64::NAN)
+    };
+    // The packing must pay: fixed point strictly improves the density
+    // optimum (DSPs shrink; time never grows on the same grid).
+    assert!(
+        dens(Precision::Fixed8) > dens(Precision::Fixed16)
+            && dens(Precision::Fixed16) > dens(Precision::Fp32),
+        "density optima must improve with packing: {} / {} / {}",
+        dens(Precision::Fp32),
+        dens(Precision::Fixed16),
+        dens(Precision::Fixed8)
+    );
+
     let mut b = Bench::new("dse").with_budget(Duration::from_secs(4));
     b.run("explore_alexnet_stratix10", || {
-        dse::explore(&model, &STRATIX10, 1).len()
+        sweep_default(&model, &STRATIX10, 1, Fidelity::Analytic).len()
     });
     b.run("explore_alexnet_overlap_depth_space", || {
         dse::explore_space(
@@ -91,15 +150,25 @@ fn main() {
         )
         .len()
     });
+    b.run("explore_alexnet_precision_space", || {
+        dse::explore_space(
+            &model,
+            &STRATIX10,
+            1,
+            Fidelity::Analytic,
+            &SweepSpace::with_precision(),
+        )
+        .len()
+    });
     b.run("explore_alexnet_arria10", || {
-        dse::explore(&model, &ARRIA10, 1).len()
+        sweep_default(&model, &ARRIA10, 1, Fidelity::Analytic).len()
     });
     let resnet = models::resnet50();
     b.run("explore_resnet50_stratix10", || {
-        dse::explore(&resnet, &STRATIX10, 1).len()
+        sweep_default(&resnet, &STRATIX10, 1, Fidelity::Analytic).len()
     });
     b.run("pareto_extraction", || {
-        let pts = dse::explore(&model, &STRATIX10, 1);
+        let pts = sweep_default(&model, &STRATIX10, 1, Fidelity::Analytic);
         dse::pareto(&pts).len()
     });
 
@@ -109,7 +178,7 @@ fn main() {
     let vgg = models::vgg16();
     let fast_ns = b
         .run("explore_vgg16_b16_pipeline_fast", || {
-            dse::explore_with(&vgg, &STRATIX10, 16, Fidelity::PipelineFast)
+            sweep_default(&vgg, &STRATIX10, 16, Fidelity::PipelineFast)
                 .len()
         })
         .median_ns;
@@ -118,7 +187,7 @@ fn main() {
     b.max_iters = 1;
     let exact_ns = b
         .run("explore_vgg16_b16_pipeline_exact", || {
-            dse::explore_with(&vgg, &STRATIX10, 16, Fidelity::PipelineExact)
+            sweep_default(&vgg, &STRATIX10, 16, Fidelity::PipelineExact)
                 .len()
         })
         .median_ns;
@@ -136,6 +205,18 @@ fn main() {
             ("dse_vgg16_b16_speedup_vs_exact", Json::num(speedup)),
             ("dse_vgg16_b16_fast_ms", Json::num(fast_ns as f64 / 1e6)),
             ("dse_vgg16_b16_exact_ms", Json::num(exact_ns as f64 / 1e6)),
+            ("dse_best_ms_fp32", Json::num(lat_ms(Precision::Fp32))),
+            ("dse_best_ms_fixed16", Json::num(lat_ms(Precision::Fixed16))),
+            ("dse_best_ms_fixed8", Json::num(lat_ms(Precision::Fixed8))),
+            ("dse_best_density_fp32", Json::num(dens(Precision::Fp32))),
+            (
+                "dse_best_density_fixed16",
+                Json::num(dens(Precision::Fixed16)),
+            ),
+            (
+                "dse_best_density_fixed8",
+                Json::num(dens(Precision::Fixed8)),
+            ),
         ],
     )
     .expect("writing BENCH_dse.json");

@@ -13,16 +13,25 @@ use std::path::Path;
 use std::time::Duration;
 
 use ffcnn::fpga::device::{ARRIA10, STRATIX10};
-use ffcnn::fpga::pipeline::{
-    simulate_tokens, simulate_tokens_exact_policy, simulate_tokens_policy,
-};
+use ffcnn::fpga::pipeline::{PipelineSim, Simulator};
 use ffcnn::fpga::timing::{
     ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
-    OverlapPolicy,
+    DesignParams, OverlapPolicy,
 };
-use ffcnn::models;
+use ffcnn::models::{self, Model};
 use ffcnn::util::bench::Bench;
 use ffcnn::util::Json;
+
+/// Token-level simulation through the facade (STRATIX10 unless noted).
+fn tok(
+    m: &Model,
+    p: &DesignParams,
+    batch: usize,
+    pol: OverlapPolicy,
+    exact: bool,
+) -> PipelineSim {
+    Simulator::new(m, &STRATIX10, *p).policy(pol).exact(exact).run(batch)
+}
 
 fn main() {
     // Experiment output: fusion bandwidth saving + model agreement.
@@ -32,7 +41,7 @@ fn main() {
         (models::resnet50(), &STRATIX10, ffcnn_stratix10_params()),
     ] {
         let ana = simulate_model(&m, d, &p, 1, OverlapPolicy::WithinGroup);
-        let tok = simulate_tokens(&m, d, &p, 1);
+        let tok = Simulator::new(&m, d, p).run(1);
         println!(
             "{:<10} {:<12} analytic {:>8.2} ms | token {:>8.2} ms | \
              fusion saves {:>4.0}% DDR",
@@ -52,12 +61,8 @@ fn main() {
         ("vgg16", models::vgg16(), 1),
         ("vgg16", models::vgg16(), 16),
     ] {
-        let within = simulate_tokens_policy(
-            &m, &STRATIX10, &p, batch, OverlapPolicy::WithinGroup,
-        );
-        let full = simulate_tokens_policy(
-            &m, &STRATIX10, &p, batch, OverlapPolicy::Full,
-        );
+        let within = tok(&m, &p, batch, OverlapPolicy::WithinGroup, false);
+        let full = tok(&m, &p, batch, OverlapPolicy::Full, false);
         println!(
             "  {name:<8} b{batch:<3} within {:>12} cy | full {:>12} cy | \
              overlap saves {:>6.3}%",
@@ -83,23 +88,17 @@ fn main() {
             .total_cycles
     });
     b.run("token_alexnet", || {
-        simulate_tokens(&alex, &STRATIX10, &p, 1).total_cycles
+        tok(&alex, &p, 1, OverlapPolicy::WithinGroup, false).total_cycles
     });
     b.run("token_resnet50", || {
-        simulate_tokens(&resnet, &STRATIX10, &p, 1).total_cycles
+        tok(&resnet, &p, 1, OverlapPolicy::WithinGroup, false).total_cycles
     });
     b.run("token_alexnet_overlap_full", || {
-        simulate_tokens_policy(
-            &alex, &STRATIX10, &p, 1, OverlapPolicy::Full,
-        )
-        .total_cycles
+        tok(&alex, &p, 1, OverlapPolicy::Full, false).total_cycles
     });
     // The O(tokens) oracle, for the fast-path speedup headline.
     b.run("token_alexnet_exact_oracle", || {
-        simulate_tokens_exact_policy(
-            &alex, &STRATIX10, &p, 1, OverlapPolicy::WithinGroup,
-        )
-        .total_cycles
+        tok(&alex, &p, 1, OverlapPolicy::WithinGroup, true).total_cycles
     });
 
     // Channel-depth ablation: deeper channels cost sim time linearly?
@@ -107,25 +106,20 @@ fn main() {
         let mut pd = p;
         pd.channel_depth = depth;
         b.run(&format!("token_alexnet_depth{depth}"), || {
-            simulate_tokens(&alex, &STRATIX10, &pd, 1).total_cycles
+            tok(&alex, &pd, 1, OverlapPolicy::WithinGroup, false)
+                .total_cycles
         });
     }
 
     // ---- overlapped fast path vs O(tokens) stream oracle ------------
     // VGG-16 b16 under Full: the fast path leaps steady interiors; the
     // exact oracle walks every one of the ~45M tokens, so it runs once.
-    let vgg_full_fast = simulate_tokens_policy(
-        &vgg, &STRATIX10, &p, 16, OverlapPolicy::Full,
-    );
-    let vgg_full_within = simulate_tokens_policy(
-        &vgg, &STRATIX10, &p, 16, OverlapPolicy::WithinGroup,
-    );
+    let vgg_full_fast = tok(&vgg, &p, 16, OverlapPolicy::Full, false);
+    let vgg_full_within =
+        tok(&vgg, &p, 16, OverlapPolicy::WithinGroup, false);
     let fast_ns = b
         .run("token_vgg16_b16_overlap_full_fast", || {
-            simulate_tokens_policy(
-                &vgg, &STRATIX10, &p, 16, OverlapPolicy::Full,
-            )
-            .total_cycles
+            tok(&vgg, &p, 16, OverlapPolicy::Full, false).total_cycles
         })
         .median_ns;
     b.warmup = 0;
@@ -133,10 +127,7 @@ fn main() {
     b.max_iters = 1;
     let exact_ns = b
         .run("token_vgg16_b16_overlap_full_exact", || {
-            simulate_tokens_exact_policy(
-                &vgg, &STRATIX10, &p, 16, OverlapPolicy::Full,
-            )
-            .total_cycles
+            tok(&vgg, &p, 16, OverlapPolicy::Full, true).total_cycles
         })
         .median_ns;
     let sim_speedup = exact_ns as f64 / fast_ns as f64;
@@ -150,18 +141,10 @@ fn main() {
 
     // b1 rows: where the FC weight streams are exposed and overlap
     // buys real latency.
-    let v1_full = simulate_tokens_policy(
-        &vgg, &STRATIX10, &p, 1, OverlapPolicy::Full,
-    );
-    let v1_within = simulate_tokens_policy(
-        &vgg, &STRATIX10, &p, 1, OverlapPolicy::WithinGroup,
-    );
-    let a1_full = simulate_tokens_policy(
-        &alex, &STRATIX10, &p, 1, OverlapPolicy::Full,
-    );
-    let a1_within = simulate_tokens_policy(
-        &alex, &STRATIX10, &p, 1, OverlapPolicy::WithinGroup,
-    );
+    let v1_full = tok(&vgg, &p, 1, OverlapPolicy::Full, false);
+    let v1_within = tok(&vgg, &p, 1, OverlapPolicy::WithinGroup, false);
+    let a1_full = tok(&alex, &p, 1, OverlapPolicy::Full, false);
+    let a1_within = tok(&alex, &p, 1, OverlapPolicy::WithinGroup, false);
 
     // b16 is compute-bound everywhere, so the overlap win there is
     // rounding-thin (strictly below today, but gate only on <= so a

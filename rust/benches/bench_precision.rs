@@ -1,5 +1,6 @@
 //! Bench E5: precision ablation — fp32 (the paper's choice) vs
-//! fixed-16/fixed-8 variants of the same FFCNN design point.
+//! fixed-16/fixed-8 variants of the same FFCNN design point, plus the
+//! precision *axis* swept through the `Plan → Deployment` facade.
 //!
 //! Table 1's baselines differ on this axis (FPGA2016a is fixed 8-16b);
 //! the ablation quantifies what FFCNN gives up for full precision: the
@@ -10,12 +11,14 @@
 use std::time::Duration;
 
 use ffcnn::fpga::device::{ARRIA10, STRATIX10};
+use ffcnn::fpga::dse::SweepSpace;
 use ffcnn::fpga::resources::resource_usage;
 use ffcnn::fpga::timing::{
     ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
     OverlapPolicy, Precision,
 };
 use ffcnn::models;
+use ffcnn::plan::Plan;
 use ffcnn::util::bench::Bench;
 
 fn main() {
@@ -49,11 +52,35 @@ fn main() {
         }
     }
 
+    // The axis as a sweep dimension: one deployment.sweep() over the
+    // whole (vec, lane) x precision grid picks the per-precision
+    // optima that the fixed-point row above only samples at the FFCNN
+    // point.
+    let plan = Plan::builder()
+        .model("alexnet")
+        .device("stratix10")
+        .sweep(SweepSpace::with_precision())
+        .build()
+        .unwrap();
+    let dep = plan.deploy().unwrap();
+    let sweep = dep.sweep();
+    println!("\nprecision axis via deployment.sweep():");
+    for (prec, p) in sweep.best_latency_per_precision() {
+        println!(
+            "  {:<10} best vec={:<3} lane={:<3} -> {:>8.2} ms",
+            format!("{prec:?}"),
+            p.params.vec_size,
+            p.params.lane_num,
+            p.time_ms
+        );
+    }
+
     let mut b = Bench::new("precision").with_budget(Duration::from_secs(2));
     let p8 = ffcnn_stratix10_params().with_precision(Precision::Fixed8);
     b.run("simulate_fixed8_alexnet", || {
         simulate_model(&model, &STRATIX10, &p8, 1, OverlapPolicy::WithinGroup)
             .total_cycles
     });
+    b.run("sweep_precision_axis", || dep.sweep().points.len());
     b.finish();
 }

@@ -1,23 +1,29 @@
 //! Run configuration: device + design point + serving parameters.
 //!
-//! Loadable from JSON (`--config run.json`, via the in-tree parser) or
-//! assembled from CLI flags; every example and bench builds one of
-//! these.
+//! This is the *legacy* configuration surface: the canonical artifact
+//! is now [`crate::plan::Plan`] (which reifies the same fields plus
+//! precision, fidelity, routing policy, pace and the sweep space, and
+//! round-trips losslessly through JSON).  `RunConfig` remains as the
+//! input of the deprecated `InferenceService::start` shim and lifts
+//! into a plan via `Plan::from_run_config`.  Parsing is strict:
+//! unknown JSON keys are an error naming them, so stale configs fail
+//! loudly instead of silently running with defaults.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context};
 
 use crate::fpga::device::{self, DeviceProfile};
-use crate::fpga::timing::{
-    ffcnn_arria10_params, ffcnn_stratix10_params, DesignParams,
-    OverlapPolicy,
+use crate::fpga::timing::{DesignParams, OverlapPolicy};
+use crate::plan::{
+    design_from_json, design_to_json, overlap_from_str, overlap_to_str,
+    serving_from_json, serving_to_json,
 };
 use crate::util::Json;
 use crate::Result;
 
 /// Serving-side knobs for the coordinator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServingConfig {
     /// Maximum dynamic batch size (bounded by available AOT artifacts).
     pub max_batch: usize,
@@ -87,33 +93,11 @@ pub fn default_artifacts_dir() -> PathBuf {
     candidates[0].clone()
 }
 
-fn overlap_to_str(o: OverlapPolicy) -> &'static str {
-    match o {
-        OverlapPolicy::None => "none",
-        OverlapPolicy::WithinGroup => "within_group",
-        OverlapPolicy::Full => "full",
-    }
-}
-
-fn overlap_from_str(s: &str) -> Result<OverlapPolicy> {
-    Ok(match s {
-        "none" => OverlapPolicy::None,
-        "within_group" => OverlapPolicy::WithinGroup,
-        "full" => OverlapPolicy::Full,
-        _ => return Err(anyhow!("unknown overlap policy {s:?}")),
-    })
-}
-
 impl RunConfig {
     pub fn to_json(&self) -> Json {
-        let design = match self.design {
+        let design = match &self.design {
             None => Json::Null,
-            Some(d) => Json::obj(vec![
-                ("vec_size", Json::num(d.vec_size as f64)),
-                ("lane_num", Json::num(d.lane_num as f64)),
-                ("channel_depth", Json::num(d.channel_depth as f64)),
-                ("host_us_per_group", Json::num(d.host_us_per_group)),
-            ]),
+            Some(d) => design_to_json(d),
         };
         Json::obj(vec![
             ("model", Json::str(&self.model)),
@@ -125,28 +109,25 @@ impl RunConfig {
                 Json::str(&self.artifacts_dir.to_string_lossy()),
             ),
             ("conv_impl", Json::str(&self.conv_impl)),
-            (
-                "serving",
-                Json::obj(vec![
-                    (
-                        "max_batch",
-                        Json::num(self.serving.max_batch as f64),
-                    ),
-                    (
-                        "max_wait_ms",
-                        Json::num(self.serving.max_wait_ms as f64),
-                    ),
-                    ("boards", Json::num(self.serving.boards as f64)),
-                    (
-                        "queue_depth",
-                        Json::num(self.serving.queue_depth as f64),
-                    ),
-                ]),
-            ),
+            ("serving", serving_to_json(&self.serving)),
         ])
     }
 
+    /// Parse a config.  Missing keys fall back to the defaults;
+    /// unknown keys (top-level or nested) are an error naming them.
     pub fn from_json(v: &Json) -> Result<Self> {
+        v.expect_keys(
+            &[
+                "model",
+                "device",
+                "design",
+                "overlap",
+                "artifacts_dir",
+                "conv_impl",
+                "serving",
+            ],
+            "run config",
+        )?;
         let mut cfg = RunConfig::default();
         if let Some(m) = v.opt("model") {
             cfg.model = m.as_str()?.to_string();
@@ -155,17 +136,7 @@ impl RunConfig {
             cfg.device = d.as_str()?.to_string();
         }
         if let Some(d) = v.opt("design") {
-            let mut p = DesignParams::new(
-                d.get("vec_size")?.as_usize()?,
-                d.get("lane_num")?.as_usize()?,
-            );
-            if let Some(c) = d.opt("channel_depth") {
-                p.channel_depth = c.as_usize()?;
-            }
-            if let Some(h) = d.opt("host_us_per_group") {
-                p.host_us_per_group = h.as_f64()?;
-            }
-            cfg.design = Some(p);
+            cfg.design = Some(design_from_json(d)?);
         }
         if let Some(o) = v.opt("overlap") {
             cfg.overlap = overlap_from_str(o.as_str()?)?;
@@ -177,18 +148,7 @@ impl RunConfig {
             cfg.conv_impl = c.as_str()?.to_string();
         }
         if let Some(s) = v.opt("serving") {
-            if let Some(x) = s.opt("max_batch") {
-                cfg.serving.max_batch = x.as_usize()?;
-            }
-            if let Some(x) = s.opt("max_wait_ms") {
-                cfg.serving.max_wait_ms = x.as_u64()?;
-            }
-            if let Some(x) = s.opt("boards") {
-                cfg.serving.boards = x.as_usize()?;
-            }
-            if let Some(x) = s.opt("queue_depth") {
-                cfg.serving.queue_depth = x.as_usize()?;
-            }
+            cfg.serving = serving_from_json(s)?;
         }
         Ok(cfg)
     }
@@ -210,22 +170,17 @@ impl RunConfig {
             .ok_or_else(|| anyhow!("unknown device {:?}", self.device))
     }
 
-    /// Resolve the design point (explicit or the per-device default).
+    /// Resolve the design point (explicit or the per-device default,
+    /// shared with the plan facade).
     pub fn design_params(&self) -> Result<DesignParams> {
-        if let Some(d) = self.design {
-            return Ok(d);
-        }
-        Ok(match self.device.as_str() {
-            "arria10" => ffcnn_arria10_params(),
-            "stratix10" => ffcnn_stratix10_params(),
-            // Generic default for other fabrics.
-            _ => DesignParams::new(16, 8),
-        })
+        Ok(self
+            .design
+            .unwrap_or_else(|| crate::plan::default_design_for(&self.device)))
     }
 
     /// Artifact name for this model at a batch size.
     pub fn artifact_name(&self, batch: usize) -> String {
-        format!("{}_b{}_{}", self.model, batch, self.conv_impl)
+        crate::plan::artifact_file_name(&self.model, batch, &self.conv_impl)
     }
 }
 
@@ -288,5 +243,37 @@ mod tests {
     fn bad_overlap_rejected() {
         let j = Json::parse(r#"{"overlap":"sometimes"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_rejected_by_name() {
+        // Top level: a stale/misspelled key must fail loudly.
+        let j = Json::parse(r#"{"model":"alexnet","overlpa":"full"}"#)
+            .unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("overlpa"), "{err}");
+        // Nested design and serving blocks are checked too.
+        let j = Json::parse(
+            r#"{"design":{"vec_size":8,"lane_num":4,"vec":16}}"#,
+        )
+        .unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("\"vec\""), "{err}");
+        let j =
+            Json::parse(r#"{"serving":{"max_batch":2,"queue":9}}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("queue"), "{err}");
+    }
+
+    #[test]
+    fn precision_roundtrips_in_design() {
+        use crate::fpga::timing::Precision;
+        let mut c = RunConfig::default();
+        c.design = Some(
+            DesignParams::new(8, 4).with_precision(Precision::Fixed16),
+        );
+        let j = c.to_json().to_string();
+        let d = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(d.design.unwrap().precision, Precision::Fixed16);
     }
 }

@@ -1,10 +1,17 @@
 //! The inference service: boards + batchers + router behind one facade.
 //!
-//! This is the system a downstream user embeds: construct from a
-//! [`RunConfig`], call [`InferenceService::classify`] per image (or
-//! [`InferenceService::submit`] for pipelined submission), or replay a
-//! whole workload trace with [`InferenceService::run_trace`] (the E4
-//! end-to-end experiment).  Pure std threads.
+//! This is the system a downstream user embeds: build a
+//! [`crate::plan::Plan`] and call `Deployment::serve()` (which lands
+//! in [`InferenceService::from_plan`]), then [`classify`] per image
+//! (or [`submit`] for pipelined submission), or replay a whole
+//! workload trace with [`run_trace`] (the E4 end-to-end experiment).
+//! Pure std threads.  The historical
+//! `InferenceService::start(cfg, pace, policy)` loose-argument entry
+//! remains as a deprecated shim over the plan path.
+//!
+//! [`classify`]: InferenceService::classify
+//! [`submit`]: InferenceService::submit
+//! [`run_trace`]: InferenceService::run_trace
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,6 +28,7 @@ use super::router::{Policy, Router, RouterGuard, StealPool};
 use crate::config::RunConfig;
 use crate::data::TraceRequest;
 use crate::models;
+use crate::plan::Plan;
 use crate::runtime::Manifest;
 use crate::Result;
 
@@ -95,16 +103,17 @@ impl Drop for InferenceService {
 }
 
 impl InferenceService {
-    /// Build the service from a run configuration.
-    ///
-    /// `pace` chooses whether boards are held busy for the simulated
-    /// FPGA time (serving experiments) or return at host speed
-    /// (functional tests).
-    pub fn start(cfg: &RunConfig, pace: Pace, policy: Policy) -> Result<Self> {
-        let model = models::by_name(&cfg.model)
-            .ok_or_else(|| anyhow!("unknown model {:?}", cfg.model))?;
-        let device = cfg.device_profile()?;
-        let design = cfg.design_params()?;
+    /// Build the service from a [`Plan`] — the `Deployment::serve`
+    /// entry.  The plan supplies everything the old loose-argument
+    /// signature threaded separately: design point (incl. precision),
+    /// overlap policy, board pacing, routing policy and serving knobs.
+    pub fn from_plan(plan: &Plan) -> Result<Self> {
+        let model = models::by_name(&plan.model)
+            .ok_or_else(|| anyhow!("unknown model {:?}", plan.model))?;
+        let device = plan.device_profile()?;
+        let design = plan.design;
+        let pace = plan.pace;
+        let policy = plan.policy;
 
         // Discover which batch sizes have artifacts.  Prefer the
         // packed-weights layout — it executes identically but uploads
@@ -112,13 +121,13 @@ impl InferenceService {
         // win) — but only when it covers every batch size the
         // per-tensor layout offers: mixing layouts would keep two
         // device-resident copies of the model's weights.
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let manifest = Manifest::load(&plan.artifacts_dir)?;
         let mut plain: HashMap<usize, String> = HashMap::new();
         let mut packed: HashMap<usize, String> = HashMap::new();
         for a in manifest.artifacts.iter().filter(|a| {
-            a.model == cfg.model
-                && a.conv_impl == cfg.conv_impl
-                && a.batch <= cfg.serving.max_batch
+            a.model == plan.model
+                && a.conv_impl == plan.conv_impl
+                && a.batch <= plan.serving.max_batch
         }) {
             let layout =
                 if a.packed_weights { &mut packed } else { &mut plain };
@@ -132,8 +141,8 @@ impl InferenceService {
         if sizes.first() != Some(&1) {
             return Err(anyhow!(
                 "no batch-1 artifact for {} ({}); have {:?}",
-                cfg.model,
-                cfg.conv_impl,
+                plan.model,
+                plan.conv_impl,
                 sizes
             ));
         }
@@ -145,19 +154,19 @@ impl InferenceService {
         let warm: Vec<String> =
             sizes.iter().map(|b| by_batch[b].clone()).collect();
 
-        let board_count = cfg.serving.boards.max(1);
+        let board_count = plan.serving.boards.max(1);
         let steal_pool = (policy == Policy::WorkStealing)
-            .then(|| StealPool::new(board_count, cfg.serving.queue_depth));
+            .then(|| StealPool::new(board_count, plan.serving.queue_depth));
         let mut queues = Vec::new();
         let mut boards = Vec::new();
         for index in 0..board_count {
             let spec = BoardSpec {
                 index,
-                artifacts_dir: cfg.artifacts_dir.clone(),
+                artifacts_dir: plan.artifacts_dir.clone(),
                 model: model.clone(),
                 device,
                 design,
-                overlap: cfg.overlap,
+                overlap: plan.overlap,
                 pace,
                 warm: warm.clone(),
             };
@@ -169,7 +178,7 @@ impl InferenceService {
                 },
                 None => {
                     let (tx, rx) = mpsc::sync_channel::<Request>(
-                        cfg.serving.queue_depth,
+                        plan.serving.queue_depth,
                     );
                     queues.push(tx);
                     RequestSource::Channel(rx)
@@ -177,7 +186,7 @@ impl InferenceService {
             };
             let bc = BatcherConfig {
                 max_batch: *sizes.last().unwrap(),
-                max_wait: Duration::from_millis(cfg.serving.max_wait_ms),
+                max_wait: Duration::from_millis(plan.serving.max_wait_ms),
                 sizes: sizes.clone(),
             };
             let board2 = board.clone();
@@ -208,6 +217,19 @@ impl InferenceService {
             steal_pool,
             _boards: boards,
         })
+    }
+
+    /// Build the service from a run configuration.
+    ///
+    /// `pace` chooses whether boards are held busy for the simulated
+    /// FPGA time (serving experiments) or return at host speed
+    /// (functional tests).
+    #[deprecated(
+        note = "build a `plan::Plan` (PlanBuilder) and call \
+                `Deployment::serve()`"
+    )]
+    pub fn start(cfg: &RunConfig, pace: Pace, policy: Policy) -> Result<Self> {
+        Self::from_plan(&Plan::from_run_config(cfg, pace, policy)?)
     }
 
     pub fn image_numel(&self) -> usize {
@@ -331,12 +353,15 @@ mod tests {
         Some(cfg)
     }
 
+    /// Boot through the plan facade (what `Deployment::serve` does).
+    fn serve(cfg: &RunConfig, pace: Pace, policy: Policy) -> Result<InferenceService> {
+        InferenceService::from_plan(&Plan::from_run_config(cfg, pace, policy)?)
+    }
+
     #[test]
     fn classify_roundtrip() {
         let Some(cfg) = cfg_or_skip() else { return };
-        let svc =
-            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
-                .unwrap();
+        let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
         let img = data::synth_images(1, (3, 16, 16), 5);
         let reply = svc.classify(img).unwrap();
         assert_eq!(reply.logits.len(), 10);
@@ -347,18 +372,14 @@ mod tests {
     #[test]
     fn wrong_image_size_rejected() {
         let Some(cfg) = cfg_or_skip() else { return };
-        let svc =
-            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
-                .unwrap();
+        let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
         assert!(svc.classify(vec![0.0f32; 5]).is_err());
     }
 
     #[test]
     fn burst_trace_served_with_batching() {
         let Some(cfg) = cfg_or_skip() else { return };
-        let svc =
-            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
-                .unwrap();
+        let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
         let trace = data::burst_trace(12);
         let report = svc.run_trace(
             &trace,
@@ -376,12 +397,8 @@ mod tests {
     fn multi_board_service_works() {
         let Some(mut cfg) = cfg_or_skip() else { return };
         cfg.serving.boards = 2;
-        let svc = InferenceService::start(
-            &cfg,
-            Pace::None,
-            Policy::LeastOutstanding,
-        )
-        .unwrap();
+        let svc =
+            serve(&cfg, Pace::None, Policy::LeastOutstanding).unwrap();
         let trace = data::burst_trace(8);
         let report = svc.run_trace(
             &trace,
@@ -399,9 +416,7 @@ mod tests {
         // layout — either way classify round-trips.
         let Some(mut cfg) = cfg_or_skip() else { return };
         cfg.conv_impl = "jnp".into();
-        let svc =
-            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
-                .unwrap();
+        let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
         let reply =
             svc.classify(data::synth_images(1, (3, 16, 16), 3)).unwrap();
         assert_eq!(reply.logits.len(), 10);
@@ -411,12 +426,7 @@ mod tests {
     fn work_stealing_service_drains_burst() {
         let Some(mut cfg) = cfg_or_skip() else { return };
         cfg.serving.boards = 2;
-        let svc = InferenceService::start(
-            &cfg,
-            Pace::None,
-            Policy::WorkStealing,
-        )
-        .unwrap();
+        let svc = serve(&cfg, Pace::None, Policy::WorkStealing).unwrap();
         let trace = data::burst_trace(10);
         let report = svc.run_trace(
             &trace,
@@ -431,12 +441,7 @@ mod tests {
     fn missing_batch1_artifact_rejected() {
         let Some(mut cfg) = cfg_or_skip() else { return };
         cfg.conv_impl = "nonexistent".into();
-        assert!(InferenceService::start(
-            &cfg,
-            Pace::None,
-            Policy::RoundRobin
-        )
-        .is_err());
+        assert!(serve(&cfg, Pace::None, Policy::RoundRobin).is_err());
     }
 
     #[test]
@@ -444,9 +449,7 @@ mod tests {
         // Batching must not change numerics: one request served at
         // batch 1 equals the same image served inside a batch.
         let Some(cfg) = cfg_or_skip() else { return };
-        let svc =
-            InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
-                .unwrap();
+        let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
         // One shared image submitted three times: zero-copy end to end.
         let img: Arc<[f32]> = data::synth_images(1, (3, 16, 16), 77).into();
         let solo = svc.classify(img.clone()).unwrap();

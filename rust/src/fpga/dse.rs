@@ -21,19 +21,26 @@
 //!   its closed-form fast path, or the O(tokens) exact oracle
 //!   ([`Fidelity`]); `BENCH_dse.json` tracks the fast-vs-exact sweep
 //!   speedup across PRs.
-//! - **overlap × depth dimensions** — now that point evaluation is
-//!   cheap and parallel, [`explore_space`] folds `channel_depth` and
-//!   `OverlapPolicy` (on = `Full` cross-group pipelining, off =
-//!   `WithinGroup`) into the grid; deeper channels buy overlap
-//!   headroom but spend M20K, which the feasibility pruning charges.
+//! - **overlap × depth × precision dimensions** — now that point
+//!   evaluation is cheap and parallel, [`explore_space`] folds
+//!   `channel_depth`, `OverlapPolicy` (on = `Full` cross-group
+//!   pipelining, off = `WithinGroup`) and [`Precision`] into the grid;
+//!   deeper channels buy overlap headroom but spend M20K, and fixed
+//!   point packs 2–4 MACs per DSP while shrinking the DDR streams —
+//!   both charged through the same resource/timing models.
+//!
+//! The canonical entry is `plan::Deployment::sweep` (one call over the
+//! plan's [`SweepSpace`]); [`explore_space`] is the underlying
+//! engine.  The historical `explore` / `explore_with` shims remain,
+//! deprecated, with parity pinned in `tests/plan_facade.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::device::DeviceProfile;
-use super::pipeline::{simulate_tokens_exact_policy, simulate_tokens_policy};
+use super::pipeline::Simulator;
 use super::resources::{resource_usage, ResourceUsage};
-use super::timing::{simulate_model, DesignParams, OverlapPolicy};
+use super::timing::{simulate_model, DesignParams, OverlapPolicy, Precision};
 use crate::models::Model;
 
 /// One evaluated design point.
@@ -70,15 +77,22 @@ pub const LANE_CANDIDATES: [usize; 12] = [1, 2, 3, 4, 6, 8, 11, 16, 22, 32, 48, 
 /// M20K for cross-stage slack (and overlap headroom under `Full`).
 pub const DEPTH_CANDIDATES: [usize; 3] = [128, 512, 2048];
 
+/// Precision candidates for the extended sweep: the paper's fp32
+/// datapath plus the fixed-point variants the resource model prices
+/// (2 / 4 MACs per DSP, narrower DDR streams).
+pub const PRECISION_CANDIDATES: [Precision; 3] =
+    [Precision::Fp32, Precision::Fixed16, Precision::Fixed8];
+
 /// The grid [`explore_space`] walks.  The default space reproduces the
 /// classic `(vec, lane)` sweep at the design depth under the paper's
-/// within-group double buffering.
-#[derive(Debug, Clone)]
+/// within-group double buffering, in fp32.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpace {
     pub vecs: Vec<usize>,
     pub lanes: Vec<usize>,
     pub depths: Vec<usize>,
     pub overlaps: Vec<OverlapPolicy>,
+    pub precisions: Vec<Precision>,
 }
 
 impl Default for SweepSpace {
@@ -88,6 +102,7 @@ impl Default for SweepSpace {
             lanes: LANE_CANDIDATES.to_vec(),
             depths: vec![DesignParams::new(1, 1).channel_depth],
             overlaps: vec![OverlapPolicy::WithinGroup],
+            precisions: vec![Precision::Fp32],
         }
     }
 }
@@ -106,20 +121,42 @@ impl SweepSpace {
         }
     }
 
+    /// The precision axis alone on the classic `(vec, lane)` grid
+    /// (the ROADMAP "DSE over precision" item).
+    pub fn with_precision() -> Self {
+        SweepSpace {
+            precisions: PRECISION_CANDIDATES.to_vec(),
+            ..Self::default()
+        }
+    }
+
+    /// The full space: precision × overlap × channel depth over the
+    /// `(vec, lane)` grid, swept in one `Deployment::sweep` call.
+    pub fn with_precision_overlap_and_depth() -> Self {
+        SweepSpace {
+            precisions: PRECISION_CANDIDATES.to_vec(),
+            ..Self::with_overlap_and_depth()
+        }
+    }
+
     /// All grid points in deterministic order (vec outer → lane →
-    /// depth → overlap inner).
-    fn grid(&self) -> Vec<(usize, usize, usize, OverlapPolicy)> {
+    /// depth → precision → overlap inner; overlap innermost keeps the
+    /// on/off twins adjacent for the bench pairing).
+    fn grid(&self) -> Vec<(usize, usize, usize, Precision, OverlapPolicy)> {
         let mut out = Vec::with_capacity(
             self.vecs.len()
                 * self.lanes.len()
                 * self.depths.len()
+                * self.precisions.len()
                 * self.overlaps.len(),
         );
         for &v in &self.vecs {
             for &l in &self.lanes {
                 for &d in &self.depths {
-                    for &o in &self.overlaps {
-                        out.push((v, l, d, o));
+                    for &prec in &self.precisions {
+                        for &o in &self.overlaps {
+                            out.push((v, l, d, prec, o));
+                        }
                     }
                 }
             }
@@ -130,16 +167,24 @@ impl SweepSpace {
 
 /// Explore the design space of `model` on `device` at `batch` with the
 /// default analytic fidelity.
+#[deprecated(
+    note = "use `plan::Deployment::sweep` (or `explore_space` over a \
+            `SweepSpace`)"
+)]
 pub fn explore(
     model: &Model,
     device: &DeviceProfile,
     batch: usize,
 ) -> Vec<DesignPoint> {
-    explore_with(model, device, batch, Fidelity::Analytic)
+    explore_space(model, device, batch, Fidelity::Analytic, &SweepSpace::default())
 }
 
 /// Explore the classic `(vec, lane)` space at an explicit timing
 /// fidelity.
+#[deprecated(
+    note = "use `plan::Deployment::sweep` (or `explore_space` over a \
+            `SweepSpace`)"
+)]
 pub fn explore_with(
     model: &Model,
     device: &DeviceProfile,
@@ -151,7 +196,7 @@ pub fn explore_with(
 
 /// Explore an explicit sweep space at an explicit timing fidelity.
 ///
-/// Grid order of the result is deterministic (see [`SweepSpace::grid`])
+/// Grid order of the result is deterministic (`SweepSpace::grid`)
 /// regardless of worker scheduling.
 pub fn explore_space(
     model: &Model,
@@ -171,9 +216,10 @@ pub fn explore_space(
     if workers <= 1 || grid.len() <= 1 {
         return grid
             .iter()
-            .map(|&(v, l, d, o)| {
+            .map(|&(v, l, d, prec, o)| {
                 eval_point(
-                    model, device, batch, fidelity, ops_per_image, v, l, d, o,
+                    model, device, batch, fidelity, ops_per_image, v, l, d,
+                    prec, o,
                 )
             })
             .collect();
@@ -191,12 +237,14 @@ pub fn explore_space(
                 let mut local = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    let Some(&(v, l, d, o)) = grid.get(i) else { break };
+                    let Some(&(v, l, d, prec, o)) = grid.get(i) else {
+                        break;
+                    };
                     local.push((
                         i,
                         eval_point(
                             model, device, batch, fidelity, ops_per_image,
-                            v, l, d, o,
+                            v, l, d, prec, o,
                         ),
                     ));
                 }
@@ -221,10 +269,12 @@ fn eval_point(
     vec: usize,
     lane: usize,
     depth: usize,
+    precision: Precision,
     overlap: OverlapPolicy,
 ) -> DesignPoint {
     let mut params = DesignParams::new(vec, lane);
     params.channel_depth = depth;
+    params.precision = precision;
     let usage = resource_usage(&params, device);
     let feasible = usage.fits(device);
     if !feasible {
@@ -246,13 +296,10 @@ fn eval_point(
             (t.time_per_image_ms(), t.gops())
         }
         Fidelity::PipelineFast | Fidelity::PipelineExact => {
-            let sim = if fidelity == Fidelity::PipelineExact {
-                simulate_tokens_exact_policy(
-                    model, device, &params, batch, overlap,
-                )
-            } else {
-                simulate_tokens_policy(model, device, &params, batch, overlap)
-            };
+            let sim = Simulator::new(model, device, params)
+                .policy(overlap)
+                .exact(fidelity == Fidelity::PipelineExact)
+                .run(batch);
             let batch_ms = sim.time_ms();
             let gops = ops_per_image as f64 * batch as f64
                 / (batch_ms / 1e3)
@@ -288,6 +335,41 @@ pub fn best_density(points: &[DesignPoint]) -> Option<&DesignPoint> {
         .max_by(|a, b| a.gops_per_dsp.total_cmp(&b.gops_per_dsp))
 }
 
+/// The latency-optimal feasible point for each precision present in
+/// the sweep, in [`PRECISION_CANDIDATES`] order (precisions with no
+/// feasible point are omitted).
+pub fn best_latency_per_precision(
+    points: &[DesignPoint],
+) -> Vec<(Precision, &DesignPoint)> {
+    PRECISION_CANDIDATES
+        .iter()
+        .filter_map(|&prec| {
+            points
+                .iter()
+                .filter(|p| p.feasible && p.params.precision == prec)
+                .min_by(|a, b| a.time_ms.total_cmp(&b.time_ms))
+                .map(|p| (prec, p))
+        })
+        .collect()
+}
+
+/// The density-optimal feasible point for each precision present in
+/// the sweep, in [`PRECISION_CANDIDATES`] order.
+pub fn best_density_per_precision(
+    points: &[DesignPoint],
+) -> Vec<(Precision, &DesignPoint)> {
+    PRECISION_CANDIDATES
+        .iter()
+        .filter_map(|&prec| {
+            points
+                .iter()
+                .filter(|p| p.feasible && p.params.precision == prec)
+                .max_by(|a, b| a.gops_per_dsp.total_cmp(&b.gops_per_dsp))
+                .map(|p| (prec, p))
+        })
+        .collect()
+}
+
 /// Pareto frontier over (time_ms, dsps): designs where no other
 /// feasible design is both faster and smaller.  Exact (time, dsps)
 /// ties keep only the first point, so the frontier is strictly
@@ -316,16 +398,32 @@ mod tests {
     use crate::fpga::device::{ARRIA10, STRATIX10, STRATIXV};
     use crate::models;
 
+    /// The classic `(vec, lane)` analytic sweep through the canonical
+    /// entry (what the deprecated `explore` shims delegate to).
+    fn sweep(
+        model: &Model,
+        device: &DeviceProfile,
+        batch: usize,
+    ) -> Vec<DesignPoint> {
+        explore_space(
+            model,
+            device,
+            batch,
+            Fidelity::Analytic,
+            &SweepSpace::default(),
+        )
+    }
+
     #[test]
     fn sweep_covers_grid() {
-        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        let pts = sweep(&models::alexnet(), &STRATIX10, 1);
         assert_eq!(pts.len(), VEC_CANDIDATES.len() * LANE_CANDIDATES.len());
         assert!(pts.iter().any(|p| p.feasible));
     }
 
     #[test]
     fn parallel_sweep_preserves_grid_order() {
-        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        let pts = sweep(&models::alexnet(), &STRATIX10, 1);
         let mut it = pts.iter();
         for &v in &VEC_CANDIDATES {
             for &l in &LANE_CANDIDATES {
@@ -337,7 +435,7 @@ mod tests {
 
     #[test]
     fn infeasible_points_pruned_not_timed() {
-        let pts = explore(&models::alexnet(), &STRATIXV, 1);
+        let pts = sweep(&models::alexnet(), &STRATIXV, 1);
         // Stratix V has only 256 DSPs at 1.7 DSP/MAC: the big design
         // points cannot fit.
         assert!(pts.iter().any(|p| !p.feasible));
@@ -354,7 +452,7 @@ mod tests {
 
     #[test]
     fn best_latency_is_feasible_and_fastest() {
-        let pts = explore(&models::alexnet(), &ARRIA10, 1);
+        let pts = sweep(&models::alexnet(), &ARRIA10, 1);
         let best = best_latency(&pts).unwrap();
         assert!(best.feasible);
         for p in pts.iter().filter(|p| p.feasible) {
@@ -366,7 +464,7 @@ mod tests {
     fn density_optimum_uses_fewer_dsps_than_latency_optimum() {
         // GOPS/DSP favors small designs that stay compute-bound; the
         // latency optimum burns more DSPs for diminishing returns.
-        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        let pts = sweep(&models::alexnet(), &STRATIX10, 1);
         let lat = best_latency(&pts).unwrap();
         let den = best_density(&pts).unwrap();
         assert!(den.usage.dsps <= lat.usage.dsps);
@@ -375,7 +473,7 @@ mod tests {
 
     #[test]
     fn pareto_frontier_monotone() {
-        let pts = explore(&models::alexnet(), &STRATIX10, 1);
+        let pts = sweep(&models::alexnet(), &STRATIX10, 1);
         let front = pareto(&pts);
         assert!(!front.is_empty());
         for w in front.windows(2) {
@@ -387,8 +485,8 @@ mod tests {
 
     #[test]
     fn bigger_batch_improves_gops_at_fixed_point() {
-        let p1 = explore(&models::alexnet(), &STRATIX10, 1);
-        let p8 = explore(&models::alexnet(), &STRATIX10, 8);
+        let p1 = sweep(&models::alexnet(), &STRATIX10, 1);
+        let p8 = sweep(&models::alexnet(), &STRATIX10, 8);
         let f = |pts: &[DesignPoint]| {
             pts.iter()
                 .find(|p| {
@@ -410,9 +508,21 @@ mod tests {
         // tests/properties.rs.)
         let m = models::tinynet();
         let fast =
-            explore_with(&m, &STRATIX10, 4, Fidelity::PipelineFast);
+            explore_space(
+                &m,
+                &STRATIX10,
+                4,
+                Fidelity::PipelineFast,
+                &SweepSpace::default(),
+            );
         let exact =
-            explore_with(&m, &STRATIX10, 4, Fidelity::PipelineExact);
+            explore_space(
+                &m,
+                &STRATIX10,
+                4,
+                Fidelity::PipelineExact,
+                &SweepSpace::default(),
+            );
         assert_eq!(fast.len(), exact.len());
         for (f, e) in fast.iter().zip(&exact) {
             assert_eq!(f.feasible, e.feasible);
@@ -433,8 +543,14 @@ mod tests {
         // timings for every feasible point and agree with the analytic
         // sweep within the simulator tolerance at the FFCNN point.
         let m = models::alexnet();
-        let pipe = explore_with(&m, &STRATIX10, 1, Fidelity::PipelineFast);
-        let ana = explore(&m, &STRATIX10, 1);
+        let pipe = explore_space(
+            &m,
+            &STRATIX10,
+            1,
+            Fidelity::PipelineFast,
+            &SweepSpace::default(),
+        );
+        let ana = sweep(&m, &STRATIX10, 1);
         for (p, a) in pipe.iter().zip(&ana) {
             assert_eq!(p.feasible, a.feasible);
             if p.feasible {
@@ -454,7 +570,7 @@ mod tests {
 
     #[test]
     fn overlap_depth_space_covers_grid_in_order() {
-        let space = SweepSpace::with_overlap_and_depth();
+        let space = SweepSpace::with_precision_overlap_and_depth();
         let pts = explore_space(
             &models::tinynet(),
             &STRATIX10,
@@ -467,22 +583,68 @@ mod tests {
             space.vecs.len()
                 * space.lanes.len()
                 * space.depths.len()
+                * space.precisions.len()
                 * space.overlaps.len()
         );
         let mut it = pts.iter();
         for &v in &space.vecs {
             for &l in &space.lanes {
                 for &d in &space.depths {
-                    for &o in &space.overlaps {
-                        let p = it.next().unwrap();
-                        assert_eq!(p.params.vec_size, v);
-                        assert_eq!(p.params.lane_num, l);
-                        assert_eq!(p.params.channel_depth, d);
-                        assert_eq!(p.overlap, o);
+                    for &prec in &space.precisions {
+                        for &o in &space.overlaps {
+                            let p = it.next().unwrap();
+                            assert_eq!(p.params.vec_size, v);
+                            assert_eq!(p.params.lane_num, l);
+                            assert_eq!(p.params.channel_depth, d);
+                            assert_eq!(p.params.precision, prec);
+                            assert_eq!(p.overlap, o);
+                        }
                     }
                 }
             }
         }
+    }
+
+    #[test]
+    fn precision_axis_swept_and_charged() {
+        // ROADMAP "DSE over precision": the axis must cover the grid,
+        // the resource model must charge DSP packing (fixed point fits
+        // where fp32 does), and the per-precision optima must improve
+        // monotonically fp32 -> fixed16 -> fixed8 on both latency and
+        // density (narrower streams, more MACs per DSP).
+        let space = SweepSpace::with_precision();
+        let pts = explore_space(
+            &models::alexnet(),
+            &STRATIX10,
+            1,
+            Fidelity::Analytic,
+            &space,
+        );
+        assert_eq!(
+            pts.len(),
+            space.vecs.len() * space.lanes.len() * 3
+        );
+        let lat = best_latency_per_precision(&pts);
+        let den = best_density_per_precision(&pts);
+        assert_eq!(lat.len(), 3);
+        assert_eq!(den.len(), 3);
+        assert_eq!(lat[0].0, Precision::Fp32);
+        assert_eq!(lat[2].0, Precision::Fixed8);
+        assert!(lat[1].1.time_ms <= lat[0].1.time_ms);
+        assert!(lat[2].1.time_ms <= lat[1].1.time_ms);
+        assert!(den[1].1.gops_per_dsp > den[0].1.gops_per_dsp);
+        assert!(den[2].1.gops_per_dsp > den[1].1.gops_per_dsp);
+        // Same (vec, lane): fixed point must never need more DSPs.
+        let at = |prec| {
+            pts.iter()
+                .find(|p| {
+                    p.params.vec_size == 16
+                        && p.params.lane_num == 11
+                        && p.params.precision == prec
+                })
+                .unwrap()
+        };
+        assert!(at(Precision::Fixed8).usage.dsps < at(Precision::Fp32).usage.dsps);
     }
 
     #[test]
@@ -498,6 +660,7 @@ mod tests {
                 OverlapPolicy::WithinGroup,
                 OverlapPolicy::Full,
             ],
+            precisions: vec![Precision::Fp32],
         };
         let pts = explore_space(
             &models::alexnet(),

@@ -15,13 +15,15 @@
 //! validates them with a token-level simulation of the
 //! channel-connected kernels (bounded FIFOs, backpressure, stalls,
 //! and — under `OverlapPolicy::Full` — cross-group overlap with DDR
-//! contention at the boundaries) and carries its own closed-form
-//! steady-state fast paths with the O(tokens) loops kept as exact
-//! oracles; [`resources`] maps a design point to DSP/M20K/LUT usage
-//! and checks it fits the device; [`dse`] sweeps the design space in
-//! parallel (pruning infeasible points before timing) like the
-//! paper's "fully explored" claim, over `(vec, lane)` × channel depth
-//! × overlap policy; [`device`] holds the board profiles.
+//! contention at the boundaries) behind one [`Simulator`] handle,
+//! with closed-form steady-state fast paths and the O(tokens) loops
+//! kept as exact oracles ([`SimOptions`]); [`resources`] maps a
+//! design point to DSP/M20K/LUT usage and checks it fits the device;
+//! [`dse`] sweeps the design space in parallel (pruning infeasible
+//! points before timing) like the paper's "fully explored" claim,
+//! over `(vec, lane)` × channel depth × overlap policy × precision;
+//! [`device`] holds the board profiles.  The `plan` module ties these
+//! into the `Plan → Deployment` flow.
 
 pub mod channel;
 pub mod device;
@@ -32,12 +34,14 @@ pub mod timing;
 
 pub use channel::Channel;
 pub use device::{DeviceProfile, DEVICES};
-pub use dse::{
-    explore, explore_space, explore_with, DesignPoint, Fidelity, SweepSpace,
-};
+pub use dse::{explore_space, DesignPoint, Fidelity, SweepSpace};
+#[allow(deprecated)]
+pub use dse::{explore, explore_with};
+pub use pipeline::{PipelineSim, SimOptions, Simulator};
+#[allow(deprecated)]
 pub use pipeline::{
     simulate_tokens, simulate_tokens_exact, simulate_tokens_exact_policy,
-    simulate_tokens_policy, PipelineSim,
+    simulate_tokens_policy,
 };
 pub use resources::{resource_usage, ResourceUsage};
 pub use timing::{

@@ -53,7 +53,7 @@
 //! reads), so until the write frontier of group g retires, group g+1's
 //! MemRd serves each token at the inflated interval `rd_ii / (1-φ)`;
 //! a read straddling the retirement instant finishes the remainder at
-//! full bandwidth ([`contended_finish`] is the piecewise-linear form,
+//! full bandwidth (`contended_finish` is the piecewise-linear form,
 //! with `φ = 1` degenerating to full serialization behind the writes).
 //! This keeps `Full` a pure relaxation of `WithinGroup`: overlap can
 //! only start *earlier* than the drained schedule, never finish later.
@@ -77,24 +77,33 @@
 //! interior of n tokens is equivalent to adding `n · max_s II_s` to
 //! every completion time in the window state — provided n is a
 //! multiple of `depth`, which keeps the circular history slots aligned
-//! with token indices.  [`run_stream_fast`] walks each boundary
+//! with token indices.  The fast stream solver walks each boundary
 //! exactly (including the DDR-contention window, which is itself a
 //! constant-rate sub-segment at the inflated MemRd interval and gets
 //! its own transient + steady jump), then leaps the interior: per
 //! group the work is O(channel_depth + transient), *never* O(tokens),
 //! no matter how large the group.
 //!
-//! [`run_recurrence_exact`] / [`run_stream_exact`] keep the full
-//! O(tokens) walks as the oracles.  [`simulate_tokens`] dispatches per
-//! group: groups below the transient size run exact (the fast path
-//! would simulate them fully anyway), larger groups take the fast path
-//! unless `FFCNN_EXACT_SIM=1` forces the oracle everywhere.
-//! [`simulate_tokens_exact`] is the always-exact entry point used by
-//! tests and benches; [`simulate_tokens_policy`] /
-//! [`simulate_tokens_exact_policy`] select the overlap policy.
+//! ## Entry point
+//!
+//! [`Simulator`] is the single entry: construct it over a model,
+//! device and design point, pick the overlap policy and fidelity with
+//! [`SimOptions`] (`exact: true` forces the O(tokens) oracles; the
+//! default dispatches per group — groups below the transient size run
+//! exact anyway, larger groups take the closed-form fast path unless
+//! `FFCNN_EXACT_SIM=1` forces the oracle everywhere), and call
+//! [`Simulator::run`].  The raw solvers are exposed as
+//! [`Simulator::recurrence`] (one group) and [`Simulator::stream`]
+//! (the concatenated multi-group stream).  The former free-function
+//! entry points (`simulate_tokens*`, `run_recurrence_*`,
+//! `run_stream_*`) remain as deprecated shims over the same solvers;
+//! `tests/plan_facade.rs` pins them bit-equal to the facade.
 
 use super::device::DeviceProfile;
-use super::timing::{layer_compute_cycles_memo, DesignParams, OverlapPolicy};
+use super::timing::{
+    layer_compute_cycles_memo, simulate_model, DesignParams, ModelTiming,
+    OverlapPolicy,
+};
 use crate::models::{fusion_groups, LayerKind, Model};
 
 /// Result of simulating one fused group at token granularity.
@@ -128,6 +137,125 @@ pub struct PipelineSim {
 impl PipelineSim {
     pub fn time_ms(&self) -> f64 {
         self.total_cycles as f64 / (self.fmax_mhz * 1e6) * 1e3
+    }
+}
+
+/// Overlap policy + fidelity of one [`Simulator`] run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimOptions {
+    /// How consecutive fused groups share the four kernels.
+    pub policy: OverlapPolicy,
+    /// Force the O(tokens) oracle for every group.  `false` dispatches
+    /// per group between the exact loop (small groups) and the
+    /// closed-form fast path (`FFCNN_EXACT_SIM=1` still forces the
+    /// oracle everywhere).
+    pub exact: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { policy: OverlapPolicy::WithinGroup, exact: false }
+    }
+}
+
+/// The token-level pipeline simulator behind one configurable handle —
+/// the facade entry the `plan::Deployment` verbs build on.
+///
+/// Holds the model, device profile and design point; [`SimOptions`]
+/// selects the overlap policy and fidelity.  One simulator can run any
+/// number of batches (the per-layer cycle memo stays warm across
+/// runs).
+///
+/// ```text
+/// Simulator::new(&model, &STRATIX10, params)
+///     .policy(OverlapPolicy::Full)
+///     .run(batch)
+/// ```
+pub struct Simulator<'a> {
+    model: &'a Model,
+    device: &'a DeviceProfile,
+    params: DesignParams,
+    opts: SimOptions,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(
+        model: &'a Model,
+        device: &'a DeviceProfile,
+        params: DesignParams,
+    ) -> Self {
+        Simulator { model, device, params, opts: SimOptions::default() }
+    }
+
+    /// Replace both options at once.
+    pub fn options(mut self, opts: SimOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Select the overlap policy.
+    pub fn policy(mut self, policy: OverlapPolicy) -> Self {
+        self.opts.policy = policy;
+        self
+    }
+
+    /// Force (or release) the O(tokens) oracle.
+    pub fn exact(mut self, exact: bool) -> Self {
+        self.opts.exact = exact;
+        self
+    }
+
+    /// Simulate `batch` images at token granularity.
+    pub fn run(&self, batch: usize) -> PipelineSim {
+        simulate_tokens_with(
+            self.model,
+            self.device,
+            &self.params,
+            batch,
+            self.opts.policy,
+            self.opts.exact || exact_sim_forced(),
+        )
+    }
+
+    /// The closed-form analytic model at the same design point and
+    /// overlap policy (`fpga::timing` granularity — per fused group,
+    /// no token walk).
+    pub fn analytic(&self, batch: usize) -> ModelTiming {
+        simulate_model(
+            self.model,
+            self.device,
+            &self.params,
+            batch,
+            self.opts.policy,
+        )
+    }
+
+    /// Drive the single-group recurrence solver directly: `exact`
+    /// picks the O(tokens) oracle over the closed-form fast path.
+    /// (Only fidelity applies here — the overlap policy is a property
+    /// of the multi-group stream, not of one group's recurrence.)
+    /// Returns (total cycles, backpressure per stage, peak occupancy
+    /// per channel).
+    pub fn recurrence(
+        tokens: u64,
+        rates: StageRates,
+        depth: usize,
+        exact: bool,
+    ) -> (u64, [u64; 4], [u64; 3]) {
+        let (cycles, bp, peak, _) =
+            run_recurrence(tokens, rates, depth, exact, false);
+        (cycles, bp, peak)
+    }
+
+    /// Drive the cross-group overlapped stream solver directly over
+    /// explicit `(tokens, rates)` segments (the `Full`-overlap
+    /// concatenated stream; `exact` picks the O(tokens) oracle).
+    pub fn stream(
+        segments: &[(u64, StageRates)],
+        depth: usize,
+        exact: bool,
+    ) -> (u64, Vec<StreamGroup>) {
+        run_stream(segments, depth, exact)
     }
 }
 
@@ -413,6 +541,9 @@ fn run_recurrence(
 ///
 /// Returns (total_cycles, backpressure per stage, peak occupancy per
 /// channel).  O(tokens) time, O(depth) memory.
+#[deprecated(
+    note = "use `Simulator::recurrence(tokens, rates, depth, true)`"
+)]
 pub fn run_recurrence_exact(
     tokens: u64,
     rates: StageRates,
@@ -430,6 +561,9 @@ pub fn run_recurrence_exact(
 /// Backpressure stalls and peak occupancy are measured over a
 /// steady-state window after the transient and extrapolated linearly;
 /// below the transient size this falls through to the exact loop.
+#[deprecated(
+    note = "use `Simulator::recurrence(tokens, rates, depth, false)`"
+)]
 pub fn run_recurrence_fast(
     tokens: u64,
     rates: StageRates,
@@ -455,6 +589,9 @@ pub struct StreamGroup {
 /// Exact O(tokens) oracle for the cross-group overlapped stream: all
 /// segments' tokens walked through one recurrence, with the boundary
 /// DDR-contention model applied to MemRd (module docs).
+#[deprecated(
+    note = "use `Simulator::stream(segments, depth, true)`"
+)]
 pub fn run_stream_exact(
     segments: &[(u64, StageRates)],
     depth: usize,
@@ -466,6 +603,9 @@ pub fn run_stream_exact(
 /// transients (including the contention window) walked exactly, steady
 /// interiors leapt in multiples of `depth` — O(depth + transient) per
 /// segment, never O(tokens).
+#[deprecated(
+    note = "use `Simulator::stream(segments, depth, false)`"
+)]
 pub fn run_stream_fast(
     segments: &[(u64, StageRates)],
     depth: usize,
@@ -738,13 +878,16 @@ fn group_specs(
         // Guard against degenerate zero-token groups.
         let tokens = tokens.max(1);
 
-        // Spread the group's DDR traffic across beats.
+        // Spread the group's DDR traffic across beats.  Element width
+        // follows the datapath precision (fp32 by default), mirroring
+        // the analytic model's accounting.
         let rows: Vec<&crate::models::LayerInfo> =
             g.rows.iter().map(|&i| &infos[i]).collect();
-        let in_bytes = rows[0].in_shape.bytes_f32() as u64 * batch_u;
-        let w_bytes: u64 = rows.iter().map(|r| r.params * 4).sum();
+        let el = params.precision.bytes();
+        let in_bytes = rows[0].in_shape.numel() as u64 * el * batch_u;
+        let w_bytes: u64 = rows.iter().map(|r| r.params * el).sum();
         let out_bytes =
-            rows[rows.len() - 1].out_shape.bytes_f32() as u64 * batch_u;
+            rows[rows.len() - 1].out_shape.numel() as u64 * el * batch_u;
         let rd_ii = (in_bytes + w_bytes) as f64 / bpc / tokens as f64;
         let wr_ii = out_bytes as f64 / bpc / tokens as f64;
 
@@ -781,42 +924,36 @@ fn group_specs(
 /// Simulate one model at token granularity under `WithinGroup`,
 /// dispatching each group to the closed-form fast path or the exact
 /// oracle (see module docs).
+#[deprecated(note = "use `Simulator::new(model, device, params).run(batch)`")]
 pub fn simulate_tokens(
     model: &Model,
     device: &DeviceProfile,
     params: &DesignParams,
     batch: usize,
 ) -> PipelineSim {
-    simulate_tokens_policy(
-        model,
-        device,
-        params,
-        batch,
-        OverlapPolicy::WithinGroup,
-    )
+    Simulator::new(model, device, *params).run(batch)
 }
 
 /// Simulate one model with the O(tokens) oracle for every group under
 /// `WithinGroup` — the reference the fast path is tested against.
+#[deprecated(
+    note = "use `Simulator::new(model, device, params).exact(true).run(batch)`"
+)]
 pub fn simulate_tokens_exact(
     model: &Model,
     device: &DeviceProfile,
     params: &DesignParams,
     batch: usize,
 ) -> PipelineSim {
-    simulate_tokens_with(
-        model,
-        device,
-        params,
-        batch,
-        OverlapPolicy::WithinGroup,
-        true,
-    )
+    Simulator::new(model, device, *params).exact(true).run(batch)
 }
 
 /// Simulate one model at token granularity under an explicit overlap
 /// policy (fast paths by default, `FFCNN_EXACT_SIM=1` forces the
 /// oracles).
+#[deprecated(
+    note = "use `Simulator::new(model, device, params).policy(overlap).run(batch)`"
+)]
 pub fn simulate_tokens_policy(
     model: &Model,
     device: &DeviceProfile,
@@ -824,18 +961,15 @@ pub fn simulate_tokens_policy(
     batch: usize,
     overlap: OverlapPolicy,
 ) -> PipelineSim {
-    simulate_tokens_with(
-        model,
-        device,
-        params,
-        batch,
-        overlap,
-        exact_sim_forced(),
-    )
+    Simulator::new(model, device, *params).policy(overlap).run(batch)
 }
 
 /// Simulate one model with the O(tokens) oracle under an explicit
 /// overlap policy.
+#[deprecated(
+    note = "use `Simulator::new(model, device, params).policy(overlap)\
+            .exact(true).run(batch)`"
+)]
 pub fn simulate_tokens_exact_policy(
     model: &Model,
     device: &DeviceProfile,
@@ -843,7 +977,7 @@ pub fn simulate_tokens_exact_policy(
     batch: usize,
     overlap: OverlapPolicy,
 ) -> PipelineSim {
-    simulate_tokens_with(model, device, params, batch, overlap, true)
+    Simulator::new(model, device, *params).policy(overlap).exact(true).run(batch)
 }
 
 fn simulate_tokens_with(
@@ -942,6 +1076,13 @@ fn simulate_tokens_with(
 
 #[cfg(test)]
 mod tests {
+    // The solver-contract tests below intentionally drive the
+    // deprecated free-function shims: they double as regression proof
+    // that the shims stay bit-equal to the `Simulator` facade (the
+    // facade itself is exercised by tests/plan_facade.rs and the
+    // property suite).
+    #![allow(deprecated)]
+
     use super::*;
     use crate::fpga::device::STRATIX10;
     use crate::fpga::timing::{

@@ -25,7 +25,7 @@ use crate::models::{fusion_groups, LayerInfo, LayerKind, Model, Shape};
 
 /// Tunable design parameters of the accelerator (the paper's design
 /// space: data-path vectorization and output-lane parallelism).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DesignParams {
     /// SIMD width over the flattened reduction (PipeCNN's VEC_SIZE).
     pub vec_size: usize,

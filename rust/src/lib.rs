@@ -16,21 +16,60 @@
 //!   ([`runtime`]) that executes the AOT artifacts (PJRT under the
 //!   `pjrt` feature, a deterministic CPU reference executor without).
 //!
+//! ## The `Plan → Deployment` flow
+//!
+//! Everything needed to run inference is reified into one typed,
+//! serializable [`plan::Plan`] — model, device, design point
+//! (vectorization × lanes × channel depth × **precision**), overlap
+//! policy, sweep space, timing fidelity, routing policy, board pacing
+//! and serving knobs — built with a validated [`plan::PlanBuilder`]
+//! and resolved into a [`plan::Deployment`] exposing the three verbs
+//! the system has:
+//!
+//! ```
+//! use ffcnn::plan::Plan;
+//!
+//! let mut plan = Plan::builder()
+//!     .model("alexnet")
+//!     .device("stratix10")
+//!     .build()?;
+//! let deployment = plan.deploy()?;
+//!
+//! let sim = deployment.simulate(1); // token-level pipeline simulator
+//! let sweep = deployment.sweep(); // DSE over the plan's SweepSpace
+//! if let Some(best) = sweep.best_latency() {
+//!     plan.adopt(best); // write the tuned point back into the plan
+//! }
+//! // deployment.serve()? boots boards + batchers + router (needs
+//! // `make artifacts`).
+//! # assert!(sim.total_cycles > 0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The historical free entry points — `fpga::pipeline`'s
+//! `simulate_tokens*` / `run_recurrence_*` / `run_stream_*` family,
+//! `fpga::dse::{explore, explore_with}` and
+//! `InferenceService::start` — remain as `#[deprecated]` shims over
+//! the facade, pinned bit-equal by `tests/plan_facade.rs`.
+//!
+//! ## The simulator underneath
+//!
 //! The simulator is split into a **closed-form fast path** and an
 //! **exact oracle**: [`fpga::timing`] is the per-group analytic model
 //! (memoized per layer/design point), and [`fpga::pipeline`] flows
 //! tokens through the bounded-FIFO kernel chain — by default on a
 //! steady-state solver that is O(channel depth) per group and proven
 //! (and property-tested) to match the O(tokens) recurrence, which
-//! stays available as `simulate_tokens_exact` / `FFCNN_EXACT_SIM=1`.
-//! Under `OverlapPolicy::Full` the groups' token streams run
-//! *concatenated* through the four kernels (the paper's deeply
-//! cascaded pipeline): MemRd of group g+1 drains DRAM while MemWr of
-//! group g commits, boundary DDR contention is a shared-bandwidth
-//! budget, and the fast path leaps steady interiors segment-wise.
-//! [`fpga::dse`] sweeps the design space with those models in
-//! parallel — `(vec, lane)` plus channel depth and overlap on/off —
-//! pruning infeasible points before timing them.
+//! stays available via `SimOptions { exact: true, .. }` /
+//! `FFCNN_EXACT_SIM=1`.  Under `OverlapPolicy::Full` the groups'
+//! token streams run *concatenated* through the four kernels (the
+//! paper's deeply cascaded pipeline): MemRd of group g+1 drains DRAM
+//! while MemWr of group g commits, boundary DDR contention is a
+//! shared-bandwidth budget, and the fast path leaps steady interiors
+//! segment-wise.  [`fpga::dse`] sweeps the design space with those
+//! models in parallel — `(vec, lane)` plus channel depth, overlap
+//! on/off and precision — pruning infeasible points before timing
+//! them.
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.
@@ -38,8 +77,8 @@
 //! Experiment entry points (see DESIGN.md §4):
 //! - Table 1  → [`report::table1`] / `ffcnn table1`
 //! - Fig. 1   → [`report::fig1`] / `ffcnn fig1`
-//! - DSE      → [`fpga::dse`] / `ffcnn dse`
-//! - Serving  → [`coordinator`] / `examples/serve_batch.rs`
+//! - DSE      → [`plan::Deployment::sweep`] / `ffcnn dse`
+//! - Serving  → [`plan::Deployment::serve`] / `examples/serve_batch.rs`
 
 pub mod baselines;
 pub mod config;
@@ -47,6 +86,7 @@ pub mod coordinator;
 pub mod data;
 pub mod fpga;
 pub mod models;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod util;

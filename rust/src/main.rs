@@ -4,6 +4,9 @@
 //! `table1` (T1), `fig1` (F1), `dse` (E2), `layers` (E3), `classify` /
 //! `serve` (E1/E4), `pipeline` (token-level simulator), `devices`.
 //!
+//! Every command assembles a `plan::Plan` from its flags and works
+//! through the resolved `Deployment` (simulate / sweep / serve).
+//!
 //! Argument parsing is hand-rolled (`Args`): the offline build
 //! environment has no clap; flags are `--key value` or `--flag`.
 
@@ -12,16 +15,13 @@ use std::path::PathBuf;
 
 use anyhow::anyhow;
 
-use ffcnn::config::{default_artifacts_dir, RunConfig};
-use ffcnn::coordinator::{InferenceService, Pace, Policy};
+use ffcnn::config::{default_artifacts_dir, ServingConfig};
+use ffcnn::coordinator::{Pace, Policy};
 use ffcnn::data;
 use ffcnn::fpga::device::DEVICES;
-use ffcnn::fpga::pipeline::{
-    simulate_tokens_exact_policy, simulate_tokens_policy,
-};
-use ffcnn::fpga::timing::{simulate_model, OverlapPolicy};
-use ffcnn::fpga::{dse, resource_usage};
-use ffcnn::models;
+use ffcnn::fpga::dse::{Fidelity, SweepSpace};
+use ffcnn::fpga::timing::OverlapPolicy;
+use ffcnn::plan::Plan;
 use ffcnn::report::{render_fig1, render_table1, table1_rows_at};
 use ffcnn::Result;
 
@@ -35,7 +35,8 @@ COMMANDS:
   fig1      [--model vgg11]                        reproduce Fig. 1
   dse       [--device stratix10] [--model alexnet] [--batch 1]
             [--fidelity analytic|pipeline|pipeline-exact]
-            [--overlap-sweep]   also sweep overlap on/off x channel depth
+            [--overlap-sweep]     sweep overlap on/off x channel depth
+            [--precision-sweep]   also sweep fp32/fixed16/fixed8
   layers    [--model alexnet] [--device stratix10] [--batch 1]
   pipeline  [--model alexnet] [--device stratix10] [--batch 1] [--exact]
             [--overlap within_group|full|none]
@@ -153,24 +154,6 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn model_arg(args: &Args, default: &str) -> Result<ffcnn::models::Model> {
-    let name = args.get("model", default);
-    models::by_name(&name).ok_or_else(|| {
-        anyhow!(
-            "unknown model {name:?} (have {:?})",
-            models::model_names()
-        )
-    })
-}
-
-fn device_arg(
-    args: &Args,
-) -> Result<&'static ffcnn::fpga::device::DeviceProfile> {
-    let name = args.get("device", "stratix10");
-    ffcnn::fpga::device::by_name(&name)
-        .ok_or_else(|| anyhow!("unknown device {name:?}"))
-}
-
 fn overlap_arg(args: &Args, default: &str) -> Result<OverlapPolicy> {
     match args.get("overlap", default).as_str() {
         "none" => Ok(OverlapPolicy::None),
@@ -183,8 +166,13 @@ fn overlap_arg(args: &Args, default: &str) -> Result<OverlapPolicy> {
 }
 
 fn cmd_table1(args: &Args) -> Result<()> {
-    let m = model_arg(args, "alexnet")?;
     let overlap = overlap_arg(args, "full")?;
+    let plan = Plan::builder()
+        .model(&args.get("model", "alexnet"))
+        .overlap(overlap)
+        .build()?;
+    let dep = plan.deploy()?;
+    let m = dep.model();
     println!(
         "Table 1 — {} ({:.2} GOPs/image, {:.1}M params, FFCNN overlap \
          {overlap:?})\n",
@@ -192,7 +180,7 @@ fn cmd_table1(args: &Args) -> Result<()> {
         m.total_ops() as f64 / 1e9,
         m.total_params() as f64 / 1e6
     );
-    println!("{}", render_table1(&table1_rows_at(&m, overlap)));
+    println!("{}", render_table1(&table1_rows_at(m, overlap)));
     println!(
         "(times from each design's cycle model; GOPS = executed ops / \
          time, computed uniformly — see EXPERIMENTS.md §T1)"
@@ -201,52 +189,61 @@ fn cmd_table1(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig1(args: &Args) -> Result<()> {
-    let m = model_arg(args, "vgg11")?;
-    println!("{}", render_fig1(&m));
+    let plan = Plan::builder().model(&args.get("model", "vgg11")).build()?;
+    let dep = plan.deploy()?;
+    println!("{}", render_fig1(dep.model()));
     Ok(())
 }
 
 fn cmd_dse(args: &Args) -> Result<()> {
-    let m = model_arg(args, "alexnet")?;
-    let d = device_arg(args)?;
     let batch = args.get_usize("batch", 1)?;
     let fidelity = match args.get("fidelity", "analytic").as_str() {
-        "analytic" => dse::Fidelity::Analytic,
-        "pipeline" => dse::Fidelity::PipelineFast,
-        "pipeline-exact" => dse::Fidelity::PipelineExact,
+        "analytic" => Fidelity::Analytic,
+        "pipeline" => Fidelity::PipelineFast,
+        "pipeline-exact" => Fidelity::PipelineExact,
         other => {
             return Err(anyhow!(
                 "unknown fidelity {other:?} (analytic|pipeline|pipeline-exact)"
             ))
         }
     };
-    let space = if args.has("overlap-sweep") {
-        dse::SweepSpace::with_overlap_and_depth()
+    let space = if args.has("precision-sweep") {
+        SweepSpace::with_precision_overlap_and_depth()
+    } else if args.has("overlap-sweep") {
+        SweepSpace::with_overlap_and_depth()
     } else {
-        dse::SweepSpace::default()
+        SweepSpace::default()
     };
+    let mut plan = Plan::builder()
+        .model(&args.get("model", "alexnet"))
+        .device(&args.get("device", "stratix10"))
+        .fidelity(fidelity)
+        .sweep(space)
+        .build()?;
+    let dep = plan.deploy()?;
     let t0 = std::time::Instant::now();
-    let pts = dse::explore_space(&m, d, batch, fidelity, &space);
+    let sweep = dep.sweep_at(batch);
     let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
         "DSE: {} on {} (batch {batch}, {fidelity:?}) — {} points, \
          {} feasible, swept in {sweep_ms:.1} ms",
-        m.name,
-        d.device,
-        pts.len(),
-        pts.iter().filter(|p| p.feasible).count()
+        plan.model,
+        dep.device().device,
+        sweep.points.len(),
+        sweep.feasible_count()
     );
     println!(
-        "{:<8}{:<8}{:<8}{:<14}{:>8}{:>12}{:>10}{:>14}",
-        "vec", "lane", "depth", "overlap", "DSPs", "time(ms)", "GOPS",
-        "GOPS/DSP"
+        "{:<8}{:<8}{:<8}{:<10}{:<14}{:>8}{:>12}{:>10}{:>14}",
+        "vec", "lane", "depth", "prec", "overlap", "DSPs", "time(ms)",
+        "GOPS", "GOPS/DSP"
     );
-    for p in dse::pareto(&pts) {
+    for p in sweep.pareto() {
         println!(
-            "{:<8}{:<8}{:<8}{:<14}{:>8}{:>12.2}{:>10.1}{:>14.3}",
+            "{:<8}{:<8}{:<8}{:<10}{:<14}{:>8}{:>12.2}{:>10.1}{:>14.3}",
             p.params.vec_size,
             p.params.lane_num,
             p.params.channel_depth,
+            format!("{:?}", p.params.precision),
             format!("{:?}", p.overlap),
             p.usage.dsps,
             p.time_ms,
@@ -254,37 +251,71 @@ fn cmd_dse(args: &Args) -> Result<()> {
             p.gops_per_dsp
         );
     }
-    if let Some(b) = dse::best_latency(&pts) {
+    if plan.sweep.precisions.len() > 1 {
+        println!("\nbest per precision:");
+        let density = sweep.best_density_per_precision();
+        for (prec, p) in sweep.best_latency_per_precision() {
+            let dens = density
+                .iter()
+                .find(|(q, _)| *q == prec)
+                .map(|(_, d)| d.gops_per_dsp)
+                .unwrap_or(0.0);
+            println!(
+                "  {:<10} vec={:<3} lane={:<3} -> {:>8.2} ms | best \
+                 density {:.3} GOPS/DSP",
+                format!("{prec:?}"),
+                p.params.vec_size,
+                p.params.lane_num,
+                p.time_ms,
+                dens
+            );
+        }
+    }
+    if let Some(b) = sweep.best_latency() {
         println!(
-            "\nlatency-optimal: vec={} lane={} depth={} {:?} -> {:.2} ms",
+            "\nlatency-optimal: vec={} lane={} depth={} {:?} {:?} -> \
+             {:.2} ms",
             b.params.vec_size,
             b.params.lane_num,
             b.params.channel_depth,
+            b.params.precision,
             b.overlap,
             b.time_ms
         );
     }
-    if let Some(b) = dse::best_density(&pts) {
+    if let Some(b) = sweep.best_density() {
         println!(
             "density-optimal: vec={} lane={} -> {:.3} GOPS/DSP",
             b.params.vec_size, b.params.lane_num, b.gops_per_dsp
+        );
+    }
+    // Reify the winner: the adopted plan is what a follow-up
+    // `simulate`/`serve` run would consume (Plan::adopt).
+    if let Some(best) = sweep.best_latency() {
+        plan.adopt(best);
+        println!(
+            "plan adopted the latency optimum (design {}x{} depth {} \
+             {:?}, overlap {:?})",
+            plan.design.vec_size,
+            plan.design.lane_num,
+            plan.design.channel_depth,
+            plan.design.precision,
+            plan.overlap
         );
     }
     Ok(())
 }
 
 fn cmd_layers(args: &Args) -> Result<()> {
-    let m = model_arg(args, "alexnet")?;
-    let d = device_arg(args)?;
     let batch = args.get_usize("batch", 1)?;
-    let cfg = RunConfig {
-        model: m.name.clone(),
-        device: d.name.to_string(),
-        ..Default::default()
-    };
-    let p = cfg.design_params()?;
-    let usage = resource_usage(&p, d);
-    let t = simulate_model(&m, d, &p, batch, OverlapPolicy::WithinGroup);
+    let plan = Plan::builder()
+        .model(&args.get("model", "alexnet"))
+        .device(&args.get("device", "stratix10"))
+        .build()?;
+    let dep = plan.deploy()?;
+    let (m, d, p) = (dep.model(), dep.device(), &plan.design);
+    let usage = dep.resources();
+    let t = dep.analytic(batch);
     println!(
         "{} on {} (vec={} lane={}, {} DSPs, batch {batch}): {:.2} ms, \
          {:.1} GOPS, DDR {:.1} MB (unfused {:.1} MB, saving {:.0}%)\n",
@@ -317,22 +348,21 @@ fn cmd_layers(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    let m = model_arg(args, "alexnet")?;
-    let d = device_arg(args)?;
     let batch = args.get_usize("batch", 1)?;
-    let cfg = RunConfig {
-        model: m.name.clone(),
-        device: d.name.to_string(),
-        ..Default::default()
-    };
-    let p = cfg.design_params()?;
     let overlap = overlap_arg(args, "within_group")?;
-    let tok = if args.has("exact") {
-        simulate_tokens_exact_policy(&m, d, &p, batch, overlap)
-    } else {
-        simulate_tokens_policy(&m, d, &p, batch, overlap)
-    };
-    let ana = simulate_model(&m, d, &p, batch, overlap);
+    let plan = Plan::builder()
+        .model(&args.get("model", "alexnet"))
+        .device(&args.get("device", "stratix10"))
+        .overlap(overlap)
+        .fidelity(if args.has("exact") {
+            Fidelity::PipelineExact
+        } else {
+            Fidelity::PipelineFast
+        })
+        .build()?;
+    let dep = plan.deploy()?;
+    let tok = dep.simulate(batch);
+    let ana = dep.analytic(batch);
     println!(
         "token-level ({overlap:?}): {:.2} ms | analytic: {:.2} ms | \
          ratio {:.3}",
@@ -359,28 +389,25 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 
 fn cmd_classify(args: &Args, artifacts: PathBuf) -> Result<()> {
     use ffcnn::runtime::Engine;
-    let m = model_arg(args, "alexnet")?;
-    let d = device_arg(args)?;
     let batch = args.get_usize("batch", 1)?;
     let iters = args.get_usize("iters", 3)?;
-    let cfg = RunConfig {
-        model: m.name.clone(),
-        device: d.name.to_string(),
-        conv_impl: args.get("conv-impl", "jnp"),
-        artifacts_dir: artifacts,
-        ..Default::default()
-    };
-    let p = cfg.design_params()?;
-    let engine = Engine::open(&cfg.artifacts_dir)?;
-    let artifact = cfg.artifact_name(batch);
-    let input = data::synth_images(batch, m.in_shape, 42);
+    let plan = Plan::builder()
+        .model(&args.get("model", "alexnet"))
+        .device(&args.get("device", "stratix10"))
+        .conv_impl(&args.get("conv-impl", "jnp"))
+        .artifacts_dir(artifacts)
+        .build()?;
+    let dep = plan.deploy()?;
+    let engine = Engine::open(&plan.artifacts_dir)?;
+    let artifact = plan.artifact_name(batch);
+    let input = data::synth_images(batch, dep.model().in_shape, 42);
     println!("compiling {artifact} ...");
     engine.warm(&artifact)?;
     for i in 0..iters {
         let t0 = std::time::Instant::now();
         let logits = engine.execute(&artifact, &input)?;
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let sim = simulate_model(&m, d, &p, batch, cfg.overlap);
+        let sim = dep.analytic(batch);
         let classes = logits.len() / batch;
         let preds: Vec<usize> = (0..batch)
             .map(|b| {
@@ -393,7 +420,7 @@ fn cmd_classify(args: &Args, artifacts: PathBuf) -> Result<()> {
             "iter {i}: host(pjrt) {:.1} ms | simulated {} {:.2} ms \
              ({:.1} GOPS) | preds {:?}",
             host_ms,
-            d.name,
+            dep.device().name,
             sim.time_ms(),
             sim.gops(),
             preds
@@ -413,22 +440,25 @@ fn cmd_classify(args: &Args, artifacts: PathBuf) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
-    let m = model_arg(args, "alexnet")?;
-    let d = device_arg(args)?;
     let requests = args.get_usize("requests", 64)?;
     let rate = args.get_f64("rate", 0.0)?;
-    let mut cfg = RunConfig {
-        model: m.name.clone(),
-        device: d.name.to_string(),
-        artifacts_dir: artifacts,
+    let serving = ServingConfig {
+        boards: args.get_usize("boards", 1)?,
+        max_batch: args.get_usize("max-batch", 8)?,
         ..Default::default()
     };
-    cfg.serving.boards = args.get_usize("boards", 1)?;
-    cfg.serving.max_batch = args.get_usize("max-batch", 8)?;
-    let pace = if args.has("pace-fpga") { Pace::Fpga } else { Pace::None };
-    let in_shape = m.in_shape;
+    let plan = Plan::builder()
+        .model(&args.get("model", "alexnet"))
+        .device(&args.get("device", "stratix10"))
+        .artifacts_dir(artifacts)
+        .serving(serving)
+        .pace(if args.has("pace-fpga") { Pace::Fpga } else { Pace::None })
+        .policy(Policy::LeastOutstanding)
+        .build()?;
+    let dep = plan.deploy()?;
+    let in_shape = dep.model().in_shape;
 
-    let svc = InferenceService::start(&cfg, pace, Policy::LeastOutstanding)?;
+    let svc = dep.serve()?;
     let trace = if rate > 0.0 {
         data::poisson_trace(requests, rate, 7)
     } else {

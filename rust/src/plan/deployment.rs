@@ -1,0 +1,207 @@
+//! A resolved [`Plan`]: the model, device profile and design point
+//! bound together, exposing the three verbs of the flow —
+//! `simulate`, `sweep`, `serve`.
+
+use anyhow::anyhow;
+
+use super::Plan;
+use crate::coordinator::InferenceService;
+use crate::fpga::device::DeviceProfile;
+use crate::fpga::dse::{
+    best_density, best_density_per_precision, best_latency,
+    best_latency_per_precision, explore_space, pareto, DesignPoint,
+    Fidelity,
+};
+use crate::fpga::pipeline::{PipelineSim, Simulator};
+use crate::fpga::resources::{resource_usage, ResourceUsage};
+use crate::fpga::timing::{ModelTiming, Precision};
+use crate::models::{self, Model};
+use crate::Result;
+
+/// A deployable instantiation of a [`Plan`] (see [`Plan::deploy`]).
+///
+/// Construction validates the model and device names once; the verbs
+/// then never fail on resolution.
+pub struct Deployment {
+    plan: Plan,
+    model: Model,
+    device: &'static DeviceProfile,
+}
+
+impl Deployment {
+    pub(crate) fn new(plan: Plan) -> Result<Self> {
+        let model = models::by_name(&plan.model).ok_or_else(|| {
+            anyhow!(
+                "unknown model {:?} (have {:?})",
+                plan.model,
+                models::model_names()
+            )
+        })?;
+        let device = plan.device_profile()?;
+        Ok(Deployment { plan, model, device })
+    }
+
+    /// The plan this deployment was resolved from.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The resolved model IR.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// The resolved device profile.
+    pub fn device(&self) -> &'static DeviceProfile {
+        self.device
+    }
+
+    /// FPGA resource usage of the plan's design point on its device.
+    pub fn resources(&self) -> ResourceUsage {
+        resource_usage(&self.plan.design, self.device)
+    }
+
+    /// The token-level simulator at the plan's design point and
+    /// overlap policy, with the plan's fidelity (the O(tokens) oracle
+    /// iff `Fidelity::PipelineExact`).  Exposed so callers can tweak
+    /// options (`.policy(..)`, `.exact(..)`) without editing the plan.
+    pub fn simulator(&self) -> Simulator<'_> {
+        Simulator::new(&self.model, self.device, self.plan.design)
+            .policy(self.plan.overlap)
+            .exact(self.plan.fidelity == Fidelity::PipelineExact)
+    }
+
+    /// Verb 1 — simulate `batch` images at token granularity.
+    pub fn simulate(&self, batch: usize) -> PipelineSim {
+        self.simulator().run(batch)
+    }
+
+    /// The closed-form analytic model at the plan's point (per-group
+    /// compute/memory bounds, DDR traffic decomposition — what the
+    /// Table 1 rows are computed from).
+    pub fn analytic(&self, batch: usize) -> ModelTiming {
+        self.simulator().analytic(batch)
+    }
+
+    /// Verb 2 — explore the plan's [`SweepSpace`] at batch 1 with the
+    /// plan's fidelity.  Adopt the winner back with [`Plan::adopt`].
+    ///
+    /// [`SweepSpace`]: crate::fpga::dse::SweepSpace
+    pub fn sweep(&self) -> SweepOutcome {
+        self.sweep_at(1)
+    }
+
+    /// Verb 2 at an explicit batch size.
+    pub fn sweep_at(&self, batch: usize) -> SweepOutcome {
+        SweepOutcome {
+            points: explore_space(
+                &self.model,
+                self.device,
+                batch,
+                self.plan.fidelity,
+                &self.plan.sweep,
+            ),
+        }
+    }
+
+    /// Verb 3 — boot the serving stack (boards + batchers + router)
+    /// described by the plan.  Needs AOT artifacts on disk.
+    pub fn serve(&self) -> Result<InferenceService> {
+        InferenceService::from_plan(&self.plan)
+    }
+}
+
+/// The evaluated grid of one [`Deployment::sweep`] call, with the
+/// selection helpers of `fpga::dse` attached.
+pub struct SweepOutcome {
+    /// All evaluated points in deterministic grid order.
+    pub points: Vec<DesignPoint>,
+}
+
+impl SweepOutcome {
+    pub fn best_latency(&self) -> Option<&DesignPoint> {
+        best_latency(&self.points)
+    }
+
+    pub fn best_density(&self) -> Option<&DesignPoint> {
+        best_density(&self.points)
+    }
+
+    /// Pareto frontier over (time, DSPs).
+    pub fn pareto(&self) -> Vec<&DesignPoint> {
+        pareto(&self.points)
+    }
+
+    /// Latency optimum per swept precision (the `ffcnn dse` rows).
+    pub fn best_latency_per_precision(
+        &self,
+    ) -> Vec<(Precision, &DesignPoint)> {
+        best_latency_per_precision(&self.points)
+    }
+
+    /// Density optimum per swept precision.
+    pub fn best_density_per_precision(
+        &self,
+    ) -> Vec<(Precision, &DesignPoint)> {
+        best_density_per_precision(&self.points)
+    }
+
+    pub fn feasible_count(&self) -> usize {
+        self.points.iter().filter(|p| p.feasible).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::dse::SweepSpace;
+    use crate::fpga::timing::OverlapPolicy;
+
+    #[test]
+    fn deploy_resolves_and_simulates() {
+        let plan = Plan::builder().model("tinynet").build().unwrap();
+        let dep = plan.deploy().unwrap();
+        assert_eq!(dep.model().name, "tinynet");
+        assert_eq!(dep.device().name, "stratix10");
+        let sim = dep.simulate(1);
+        assert!(sim.total_cycles > 0);
+        assert_eq!(sim.overlap, OverlapPolicy::WithinGroup);
+        let ana = dep.analytic(1);
+        assert!(ana.total_cycles > 0);
+        assert!(dep.resources().dsps > 0);
+    }
+
+    #[test]
+    fn deploy_rejects_unknown_names() {
+        let mut plan = Plan::default();
+        plan.model = "nope".into();
+        assert!(plan.deploy().is_err());
+        let mut plan = Plan::default();
+        plan.device = "nope".into();
+        assert!(plan.deploy().is_err());
+    }
+
+    #[test]
+    fn sweep_respects_plan_space_and_fidelity() {
+        let mut plan = Plan::builder().model("tinynet").build().unwrap();
+        plan.sweep = SweepSpace {
+            vecs: vec![8, 16],
+            lanes: vec![4],
+            ..SweepSpace::default()
+        };
+        let outcome = plan.deploy().unwrap().sweep();
+        assert_eq!(outcome.points.len(), 2);
+        assert!(outcome.feasible_count() > 0);
+        assert!(outcome.best_latency().is_some());
+        assert!(outcome.best_density().is_some());
+        assert!(!outcome.pareto().is_empty());
+    }
+
+    #[test]
+    fn exact_fidelity_forces_the_oracle() {
+        let mut plan = Plan::builder().model("tinynet").build().unwrap();
+        plan.fidelity = Fidelity::PipelineExact;
+        let dep = plan.deploy().unwrap();
+        assert!(dep.simulate(1).groups.iter().all(|g| g.exact));
+    }
+}

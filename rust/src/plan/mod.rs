@@ -1,0 +1,763 @@
+//! The `Plan → Deployment` facade: one typed entry point for the
+//! whole flow.
+//!
+//! The paper's pitch is a *single coherent design flow* — one deeply
+//! pipelined accelerator description that the toolchain compiles,
+//! tunes and deploys.  This module reifies that description as a
+//! [`Plan`]: model, device, [`DesignParams`] (vectorization, lanes,
+//! channel depth **and precision** — a first-class plan dimension),
+//! [`OverlapPolicy`], sweep [`SweepSpace`], timing [`Fidelity`],
+//! routing [`Policy`], board [`Pace`], and the serving knobs.  A plan
+//! is a plain serializable value: it round-trips losslessly through
+//! JSON ([`Plan::to_json`] / [`Plan::from_json`], strict about
+//! unknown keys), so a tuned design point travels as an artifact.
+//!
+//! [`Plan::deploy`] resolves the plan against the model zoo and device
+//! table and returns a [`Deployment`] exposing the three verbs the
+//! system actually has:
+//!
+//! - [`Deployment::simulate`] — the token-level pipeline simulator
+//!   (with [`Deployment::analytic`] for the closed-form model);
+//! - [`Deployment::sweep`] — design-space exploration over the plan's
+//!   `SweepSpace`; the winner writes back via [`Plan::adopt`];
+//! - [`Deployment::serve`] — boot the full serving stack (boards,
+//!   batchers, router) from the plan.
+//!
+//! ```
+//! use ffcnn::plan::Plan;
+//!
+//! let mut plan = Plan::builder()
+//!     .model("alexnet")
+//!     .device("stratix10")
+//!     .build()?;
+//! let deployment = plan.deploy()?;
+//! let sim = deployment.simulate(1); // token-level cycle model
+//! let sweep = deployment.sweep(); // DSE over the plan's SweepSpace
+//! if let Some(best) = sweep.best_latency() {
+//!     plan.adopt(best); // reify the tuned point back into the plan
+//! }
+//! assert!(sim.total_cycles > 0);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! `Deployment::serve()` additionally needs AOT artifacts on disk
+//! (`make artifacts`); it replaces the deprecated
+//! `InferenceService::start(cfg, pace, policy)` loose-argument
+//! signature.
+
+mod deployment;
+
+pub use deployment::{Deployment, SweepOutcome};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::config::{default_artifacts_dir, RunConfig, ServingConfig};
+use crate::coordinator::{Pace, Policy};
+use crate::fpga::device::{self, DeviceProfile};
+use crate::fpga::dse::{DesignPoint, Fidelity, SweepSpace};
+use crate::fpga::timing::{
+    ffcnn_arria10_params, ffcnn_stratix10_params, DesignParams,
+    OverlapPolicy, Precision,
+};
+use crate::models;
+use crate::util::Json;
+use crate::Result;
+
+/// Everything needed to run inference, reified as one serializable
+/// value (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Model name (must exist in `models::by_name` for `deploy`).
+    pub model: String,
+    /// Device short name (`arria10`, `stratix10`, ...).
+    pub device: String,
+    /// Conv engine design point — vectorization, lanes, channel depth
+    /// and datapath precision.
+    pub design: DesignParams,
+    /// DDR/compute overlap policy of the simulated pipeline.
+    pub overlap: OverlapPolicy,
+    /// How sweep points (and `simulate`) are timed.
+    pub fidelity: Fidelity,
+    /// Request routing policy of the serving stack.
+    pub policy: Policy,
+    /// Board pacing mode of the serving stack.
+    pub pace: Pace,
+    /// The grid `Deployment::sweep` walks.
+    pub sweep: SweepSpace,
+    /// Artifact directory produced by `make artifacts`.
+    pub artifacts_dir: PathBuf,
+    /// Conv implementation of the artifact to execute (`jnp`/`pallas`).
+    pub conv_impl: String,
+    pub serving: ServingConfig,
+}
+
+impl Default for Plan {
+    fn default() -> Self {
+        Plan {
+            model: "alexnet".to_string(),
+            device: "stratix10".to_string(),
+            design: ffcnn_stratix10_params(),
+            overlap: OverlapPolicy::WithinGroup,
+            fidelity: Fidelity::Analytic,
+            policy: Policy::LeastOutstanding,
+            pace: Pace::None,
+            sweep: SweepSpace::default(),
+            artifacts_dir: default_artifacts_dir(),
+            conv_impl: "jnp".to_string(),
+            serving: ServingConfig::default(),
+        }
+    }
+}
+
+/// The FFCNN design point chosen for a device (the paper's §4 points;
+/// a generic mid-size engine for other fabrics).  Also the resolution
+/// rule of `RunConfig::design_params`.
+pub(crate) fn default_design_for(device: &str) -> DesignParams {
+    match device {
+        "arria10" => ffcnn_arria10_params(),
+        "stratix10" => ffcnn_stratix10_params(),
+        _ => DesignParams::new(16, 8),
+    }
+}
+
+/// `<model>_b<batch>_<conv_impl>` — the artifact naming scheme shared
+/// by `Plan::artifact_name` and `RunConfig::artifact_name`.
+pub(crate) fn artifact_file_name(
+    model: &str,
+    batch: usize,
+    conv_impl: &str,
+) -> String {
+    format!("{model}_b{batch}_{conv_impl}")
+}
+
+impl Plan {
+    /// Start building a plan from validated defaults.
+    pub fn builder() -> PlanBuilder {
+        PlanBuilder::default()
+    }
+
+    /// Resolve the plan into a [`Deployment`] (validates the model and
+    /// device names).
+    pub fn deploy(&self) -> Result<Deployment> {
+        Deployment::new(self.clone())
+    }
+
+    /// Write a sweep's winning design point back into the plan: the
+    /// full design params (vec/lane/depth/precision) and the overlap
+    /// policy the point was timed under.
+    pub fn adopt(&mut self, point: &DesignPoint) {
+        self.design = point.params;
+        self.overlap = point.overlap;
+    }
+
+    /// Resolve the device profile.
+    pub fn device_profile(&self) -> Result<&'static DeviceProfile> {
+        device::by_name(&self.device)
+            .ok_or_else(|| anyhow!("unknown device {:?}", self.device))
+    }
+
+    /// Artifact name for this plan's model at a batch size.
+    pub fn artifact_name(&self, batch: usize) -> String {
+        artifact_file_name(&self.model, batch, &self.conv_impl)
+    }
+
+    /// Reject degenerate numeric values (zero vec/lane/depth, empty
+    /// sweep axes, zero serving knobs) — shared by every constructor
+    /// (`PlanBuilder::build`, `Plan::from_json`,
+    /// `Plan::from_run_config`), so a hand-edited plan or run-config
+    /// file fails loudly instead of panicking inside the cycle model.
+    fn validate(&self) -> Result<()> {
+        if self.design.vec_size == 0 || self.design.lane_num == 0 {
+            return Err(anyhow!(
+                "design needs vec_size >= 1 and lane_num >= 1 (got {} x {})",
+                self.design.vec_size,
+                self.design.lane_num
+            ));
+        }
+        if self.design.channel_depth == 0 {
+            return Err(anyhow!("channel_depth must be >= 1"));
+        }
+        if self.sweep.vecs.is_empty()
+            || self.sweep.lanes.is_empty()
+            || self.sweep.depths.is_empty()
+            || self.sweep.overlaps.is_empty()
+            || self.sweep.precisions.is_empty()
+        {
+            return Err(anyhow!("sweep space has an empty axis"));
+        }
+        if self.sweep.vecs.contains(&0)
+            || self.sweep.lanes.contains(&0)
+            || self.sweep.depths.contains(&0)
+        {
+            return Err(anyhow!("sweep vec/lane/depth values must be >= 1"));
+        }
+        if self.serving.max_batch == 0
+            || self.serving.boards == 0
+            || self.serving.queue_depth == 0
+        {
+            return Err(anyhow!(
+                "serving needs max_batch, boards and queue_depth >= 1"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Lift a legacy [`RunConfig`] (plus the loose serving arguments
+    /// the old `InferenceService::start` took) into a plan.
+    pub fn from_run_config(
+        cfg: &RunConfig,
+        pace: Pace,
+        policy: Policy,
+    ) -> Result<Plan> {
+        let plan = Plan {
+            model: cfg.model.clone(),
+            device: cfg.device.clone(),
+            design: cfg.design_params()?,
+            overlap: cfg.overlap,
+            pace,
+            policy,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            conv_impl: cfg.conv_impl.clone(),
+            serving: cfg.serving.clone(),
+            ..Plan::default()
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    // ---- JSON round-trip ------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("device", Json::str(&self.device)),
+            ("design", design_to_json(&self.design)),
+            ("overlap", Json::str(overlap_to_str(self.overlap))),
+            ("fidelity", Json::str(fidelity_to_str(self.fidelity))),
+            ("policy", Json::str(policy_to_str(self.policy))),
+            ("pace", Json::str(pace_to_str(self.pace))),
+            ("sweep", sweep_to_json(&self.sweep)),
+            (
+                "artifacts_dir",
+                Json::str(&self.artifacts_dir.to_string_lossy()),
+            ),
+            ("conv_impl", Json::str(&self.conv_impl)),
+            ("serving", serving_to_json(&self.serving)),
+        ])
+    }
+
+    /// Parse a plan.  Missing keys fall back to the defaults; unknown
+    /// keys are an error naming them, so stale plans fail loudly
+    /// instead of silently running with defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        v.expect_keys(
+            &[
+                "model",
+                "device",
+                "design",
+                "overlap",
+                "fidelity",
+                "policy",
+                "pace",
+                "sweep",
+                "artifacts_dir",
+                "conv_impl",
+                "serving",
+            ],
+            "plan",
+        )?;
+        let mut plan = Plan::default();
+        if let Some(m) = v.opt("model") {
+            plan.model = m.as_str()?.to_string();
+        }
+        if let Some(d) = v.opt("device") {
+            plan.device = d.as_str()?.to_string();
+        }
+        if let Some(d) = v.opt("design") {
+            plan.design = design_from_json(d)?;
+        }
+        if let Some(o) = v.opt("overlap") {
+            plan.overlap = overlap_from_str(o.as_str()?)?;
+        }
+        if let Some(f) = v.opt("fidelity") {
+            plan.fidelity = fidelity_from_str(f.as_str()?)?;
+        }
+        if let Some(p) = v.opt("policy") {
+            plan.policy = policy_from_str(p.as_str()?)?;
+        }
+        if let Some(p) = v.opt("pace") {
+            plan.pace = pace_from_str(p.as_str()?)?;
+        }
+        if let Some(s) = v.opt("sweep") {
+            plan.sweep = sweep_from_json(s)?;
+        }
+        if let Some(a) = v.opt("artifacts_dir") {
+            plan.artifacts_dir = PathBuf::from(a.as_str()?);
+        }
+        if let Some(c) = v.opt("conv_impl") {
+            plan.conv_impl = c.as_str()?.to_string();
+        }
+        if let Some(s) = v.opt("serving") {
+            plan.serving = serving_from_json(s)?;
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// Typed builder over [`Plan`] with validated defaults: precision and
+/// channel depth are first-class knobs that overlay the per-device
+/// default design point unless a full design is given.
+#[derive(Debug, Clone, Default)]
+pub struct PlanBuilder {
+    model: Option<String>,
+    device: Option<String>,
+    design: Option<DesignParams>,
+    precision: Option<Precision>,
+    channel_depth: Option<usize>,
+    overlap: Option<OverlapPolicy>,
+    fidelity: Option<Fidelity>,
+    policy: Option<Policy>,
+    pace: Option<Pace>,
+    sweep: Option<SweepSpace>,
+    artifacts_dir: Option<PathBuf>,
+    conv_impl: Option<String>,
+    serving: Option<ServingConfig>,
+}
+
+impl PlanBuilder {
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = Some(name.to_string());
+        self
+    }
+
+    pub fn device(mut self, name: &str) -> Self {
+        self.device = Some(name.to_string());
+        self
+    }
+
+    /// Full design point (otherwise the device's FFCNN point).
+    pub fn design(mut self, design: DesignParams) -> Self {
+        self.design = Some(design);
+        self
+    }
+
+    /// Datapath precision, applied on top of the design point.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
+    /// Channel FIFO depth, applied on top of the design point.
+    pub fn channel_depth(mut self, depth: usize) -> Self {
+        self.channel_depth = Some(depth);
+        self
+    }
+
+    pub fn overlap(mut self, overlap: OverlapPolicy) -> Self {
+        self.overlap = Some(overlap);
+        self
+    }
+
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.fidelity = Some(fidelity);
+        self
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    pub fn pace(mut self, pace: Pace) -> Self {
+        self.pace = Some(pace);
+        self
+    }
+
+    pub fn sweep(mut self, sweep: SweepSpace) -> Self {
+        self.sweep = Some(sweep);
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: PathBuf) -> Self {
+        self.artifacts_dir = Some(dir);
+        self
+    }
+
+    pub fn conv_impl(mut self, conv_impl: &str) -> Self {
+        self.conv_impl = Some(conv_impl.to_string());
+        self
+    }
+
+    pub fn serving(mut self, serving: ServingConfig) -> Self {
+        self.serving = Some(serving);
+        self
+    }
+
+    /// Validate and assemble the plan.
+    pub fn build(self) -> Result<Plan> {
+        let base = Plan::default();
+        let model = self.model.unwrap_or(base.model);
+        if models::by_name(&model).is_none() {
+            return Err(anyhow!(
+                "unknown model {model:?} (have {:?})",
+                models::model_names()
+            ));
+        }
+        let device = self.device.unwrap_or(base.device);
+        if device::by_name(&device).is_none() {
+            return Err(anyhow!("unknown device {device:?}"));
+        }
+        let mut design =
+            self.design.unwrap_or_else(|| default_design_for(&device));
+        if let Some(p) = self.precision {
+            design.precision = p;
+        }
+        if let Some(d) = self.channel_depth {
+            design.channel_depth = d;
+        }
+        let plan = Plan {
+            model,
+            device,
+            design,
+            overlap: self.overlap.unwrap_or(base.overlap),
+            fidelity: self.fidelity.unwrap_or(base.fidelity),
+            policy: self.policy.unwrap_or(base.policy),
+            pace: self.pace.unwrap_or(base.pace),
+            sweep: self.sweep.unwrap_or(base.sweep),
+            artifacts_dir: self.artifacts_dir.unwrap_or(base.artifacts_dir),
+            conv_impl: self.conv_impl.unwrap_or(base.conv_impl),
+            serving: self.serving.unwrap_or(base.serving),
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+// ---- enum <-> string spellings (shared with config.rs) ------------------
+
+pub(crate) fn overlap_to_str(o: OverlapPolicy) -> &'static str {
+    match o {
+        OverlapPolicy::None => "none",
+        OverlapPolicy::WithinGroup => "within_group",
+        OverlapPolicy::Full => "full",
+    }
+}
+
+pub(crate) fn overlap_from_str(s: &str) -> Result<OverlapPolicy> {
+    Ok(match s {
+        "none" => OverlapPolicy::None,
+        "within_group" => OverlapPolicy::WithinGroup,
+        "full" => OverlapPolicy::Full,
+        _ => return Err(anyhow!("unknown overlap policy {s:?}")),
+    })
+}
+
+pub(crate) fn precision_to_str(p: Precision) -> &'static str {
+    match p {
+        Precision::Fp32 => "fp32",
+        Precision::Fixed16 => "fixed16",
+        Precision::Fixed8 => "fixed8",
+    }
+}
+
+pub(crate) fn precision_from_str(s: &str) -> Result<Precision> {
+    Ok(match s {
+        "fp32" => Precision::Fp32,
+        "fixed16" => Precision::Fixed16,
+        "fixed8" => Precision::Fixed8,
+        _ => return Err(anyhow!("unknown precision {s:?}")),
+    })
+}
+
+pub(crate) fn fidelity_to_str(f: Fidelity) -> &'static str {
+    match f {
+        Fidelity::Analytic => "analytic",
+        Fidelity::PipelineFast => "pipeline",
+        Fidelity::PipelineExact => "pipeline_exact",
+    }
+}
+
+pub(crate) fn fidelity_from_str(s: &str) -> Result<Fidelity> {
+    Ok(match s {
+        "analytic" => Fidelity::Analytic,
+        "pipeline" => Fidelity::PipelineFast,
+        // Accept both the JSON and the CLI spelling.
+        "pipeline_exact" | "pipeline-exact" => Fidelity::PipelineExact,
+        _ => return Err(anyhow!("unknown fidelity {s:?}")),
+    })
+}
+
+pub(crate) fn policy_to_str(p: Policy) -> &'static str {
+    match p {
+        Policy::RoundRobin => "round_robin",
+        Policy::LeastOutstanding => "least_outstanding",
+        Policy::WorkStealing => "work_stealing",
+    }
+}
+
+pub(crate) fn policy_from_str(s: &str) -> Result<Policy> {
+    Ok(match s {
+        "round_robin" => Policy::RoundRobin,
+        "least_outstanding" => Policy::LeastOutstanding,
+        "work_stealing" => Policy::WorkStealing,
+        _ => return Err(anyhow!("unknown routing policy {s:?}")),
+    })
+}
+
+pub(crate) fn pace_to_str(p: Pace) -> &'static str {
+    match p {
+        Pace::None => "none",
+        Pace::Fpga => "fpga",
+    }
+}
+
+pub(crate) fn pace_from_str(s: &str) -> Result<Pace> {
+    Ok(match s {
+        "none" => Pace::None,
+        "fpga" => Pace::Fpga,
+        _ => return Err(anyhow!("unknown pace {s:?}")),
+    })
+}
+
+// ---- nested JSON blocks (shared with config.rs's RunConfig) -------------
+
+pub(crate) fn design_to_json(d: &DesignParams) -> Json {
+    Json::obj(vec![
+        ("vec_size", Json::num(d.vec_size as f64)),
+        ("lane_num", Json::num(d.lane_num as f64)),
+        ("channel_depth", Json::num(d.channel_depth as f64)),
+        ("host_us_per_group", Json::num(d.host_us_per_group)),
+        ("precision", Json::str(precision_to_str(d.precision))),
+    ])
+}
+
+pub(crate) fn design_from_json(v: &Json) -> Result<DesignParams> {
+    v.expect_keys(
+        &[
+            "vec_size",
+            "lane_num",
+            "channel_depth",
+            "host_us_per_group",
+            "precision",
+        ],
+        "design",
+    )?;
+    let mut d = DesignParams::new(
+        v.get("vec_size")?.as_usize()?,
+        v.get("lane_num")?.as_usize()?,
+    );
+    if let Some(c) = v.opt("channel_depth") {
+        d.channel_depth = c.as_usize()?;
+    }
+    if let Some(h) = v.opt("host_us_per_group") {
+        d.host_us_per_group = h.as_f64()?;
+    }
+    if let Some(p) = v.opt("precision") {
+        d.precision = precision_from_str(p.as_str()?)?;
+    }
+    Ok(d)
+}
+
+fn sweep_to_json(s: &SweepSpace) -> Json {
+    let nums = |xs: &[usize]| {
+        Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+    };
+    Json::obj(vec![
+        ("vecs", nums(&s.vecs)),
+        ("lanes", nums(&s.lanes)),
+        ("depths", nums(&s.depths)),
+        (
+            "overlaps",
+            Json::Arr(
+                s.overlaps
+                    .iter()
+                    .map(|&o| Json::str(overlap_to_str(o)))
+                    .collect(),
+            ),
+        ),
+        (
+            "precisions",
+            Json::Arr(
+                s.precisions
+                    .iter()
+                    .map(|&p| Json::str(precision_to_str(p)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn sweep_from_json(v: &Json) -> Result<SweepSpace> {
+    v.expect_keys(
+        &["vecs", "lanes", "depths", "overlaps", "precisions"],
+        "sweep",
+    )?;
+    let mut s = SweepSpace::default();
+    if let Some(x) = v.opt("vecs") {
+        s.vecs = x.as_usize_vec()?;
+    }
+    if let Some(x) = v.opt("lanes") {
+        s.lanes = x.as_usize_vec()?;
+    }
+    if let Some(x) = v.opt("depths") {
+        s.depths = x.as_usize_vec()?;
+    }
+    if let Some(x) = v.opt("overlaps") {
+        s.overlaps = x
+            .as_arr()?
+            .iter()
+            .map(|o| overlap_from_str(o.as_str()?))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(x) = v.opt("precisions") {
+        s.precisions = x
+            .as_arr()?
+            .iter()
+            .map(|p| precision_from_str(p.as_str()?))
+            .collect::<Result<_>>()?;
+    }
+    Ok(s)
+}
+
+pub(crate) fn serving_to_json(s: &ServingConfig) -> Json {
+    Json::obj(vec![
+        ("max_batch", Json::num(s.max_batch as f64)),
+        ("max_wait_ms", Json::num(s.max_wait_ms as f64)),
+        ("boards", Json::num(s.boards as f64)),
+        ("queue_depth", Json::num(s.queue_depth as f64)),
+    ])
+}
+
+pub(crate) fn serving_from_json(v: &Json) -> Result<ServingConfig> {
+    v.expect_keys(
+        &["max_batch", "max_wait_ms", "boards", "queue_depth"],
+        "serving",
+    )?;
+    let mut s = ServingConfig::default();
+    if let Some(x) = v.opt("max_batch") {
+        s.max_batch = x.as_usize()?;
+    }
+    if let Some(x) = v.opt("max_wait_ms") {
+        s.max_wait_ms = x.as_u64()?;
+    }
+    if let Some(x) = v.opt("boards") {
+        s.boards = x.as_usize()?;
+    }
+    if let Some(x) = v.opt("queue_depth") {
+        s.queue_depth = x.as_usize()?;
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_resolve_per_device() {
+        let s10 = Plan::builder().build().unwrap();
+        assert_eq!(s10.design.vec_size, 16);
+        let a10 = Plan::builder().device("arria10").build().unwrap();
+        assert_eq!(a10.design.vec_size, 32);
+    }
+
+    #[test]
+    fn builder_overlays_precision_and_depth() {
+        let p = Plan::builder()
+            .model("vgg16")
+            .precision(Precision::Fixed16)
+            .channel_depth(256)
+            .build()
+            .unwrap();
+        assert_eq!(p.design.precision, Precision::Fixed16);
+        assert_eq!(p.design.channel_depth, 256);
+        // The rest of the device default point is untouched.
+        assert_eq!(p.design.vec_size, 16);
+        assert_eq!(p.design.lane_num, 11);
+    }
+
+    #[test]
+    fn builder_rejects_unknowns_and_degenerates() {
+        assert!(Plan::builder().model("nope").build().is_err());
+        assert!(Plan::builder().device("nope").build().is_err());
+        assert!(Plan::builder().design(DesignParams::new(0, 4)).build().is_err());
+        assert!(Plan::builder().channel_depth(0).build().is_err());
+        let empty = SweepSpace { vecs: vec![], ..SweepSpace::default() };
+        assert!(Plan::builder().sweep(empty).build().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_default_and_tuned() {
+        let mut plan = Plan::default();
+        let j = plan.to_json().to_string();
+        assert_eq!(Plan::from_json(&Json::parse(&j).unwrap()).unwrap(), plan);
+
+        plan.design = DesignParams::new(8, 4).with_precision(Precision::Fixed8);
+        plan.design.channel_depth = 2048;
+        plan.overlap = OverlapPolicy::Full;
+        plan.fidelity = Fidelity::PipelineExact;
+        plan.policy = Policy::WorkStealing;
+        plan.pace = Pace::Fpga;
+        plan.sweep = SweepSpace::with_precision_overlap_and_depth();
+        let j = plan.to_json().to_string();
+        assert_eq!(Plan::from_json(&Json::parse(&j).unwrap()).unwrap(), plan);
+    }
+
+    #[test]
+    fn unknown_plan_keys_rejected() {
+        let j = Json::parse(r#"{"model":"alexnet","overlpa":"full"}"#).unwrap();
+        let err = Plan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("overlpa"), "{err}");
+        let j =
+            Json::parse(r#"{"design":{"vec_size":8,"lane_num":4,"lanes":2}}"#).unwrap();
+        let err = Plan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("lanes"), "{err}");
+    }
+
+    #[test]
+    fn adopt_writes_the_point_back() {
+        use crate::fpga::device::STRATIX10;
+        use crate::fpga::dse::{best_latency, explore_space};
+        let mut plan =
+            Plan::builder().sweep(SweepSpace::with_precision()).build().unwrap();
+        let pts = explore_space(
+            &models::by_name(&plan.model).unwrap(),
+            &STRATIX10,
+            1,
+            Fidelity::Analytic,
+            &plan.sweep,
+        );
+        let best = best_latency(&pts).unwrap();
+        plan.adopt(best);
+        assert_eq!(plan.design, best.params);
+        assert_eq!(plan.overlap, best.overlap);
+    }
+
+    #[test]
+    fn run_config_lifts_into_plan() {
+        let mut cfg = RunConfig::default();
+        cfg.model = "resnet50".into();
+        cfg.overlap = OverlapPolicy::Full;
+        let plan = Plan::from_run_config(&cfg, Pace::Fpga, Policy::WorkStealing).unwrap();
+        assert_eq!(plan.model, "resnet50");
+        assert_eq!(plan.overlap, OverlapPolicy::Full);
+        assert_eq!(plan.pace, Pace::Fpga);
+        assert_eq!(plan.policy, Policy::WorkStealing);
+        // Design resolved to the device default.
+        assert_eq!(plan.design.vec_size, 16);
+    }
+}

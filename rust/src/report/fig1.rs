@@ -2,7 +2,9 @@
 //!
 //! The paper plots, for VGG-11, how weights concentrate in FC layers
 //! while operations concentrate in conv layers (motivating why the
-//! accelerator focuses on those two layer types).
+//! accelerator focuses on those two layer types).  Pure IR
+//! accounting — no simulation; the CLI resolves the model through
+//! `plan::Deployment` and hands it to [`render_fig1`].
 
 use crate::models::Model;
 

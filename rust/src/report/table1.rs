@@ -11,14 +11,15 @@ use crate::baselines::{
     BaselineModel, DesignReport,
 };
 use crate::fpga::device::{ARRIA10, STRATIX10};
+use crate::fpga::pipeline::Simulator;
 use crate::fpga::resources::resource_usage;
 use crate::fpga::timing::{
-    ffcnn_arria10_params, ffcnn_stratix10_params, simulate_model,
-    OverlapPolicy,
+    ffcnn_arria10_params, ffcnn_stratix10_params, OverlapPolicy,
 };
 use crate::models::Model;
 
-/// FFCNN (this work) on one of our devices.
+/// FFCNN (this work) on one of our devices, timed through the
+/// [`Simulator`] facade's analytic model.
 ///
 /// FFCNN runs with cross-group prefetching (`OverlapPolicy::Full`):
 /// the paper's deeply-cascaded kernel chain keeps MemRd streaming the
@@ -32,7 +33,9 @@ fn ffcnn_report(
     overlap: OverlapPolicy,
     label: &str,
 ) -> DesignReport {
-    let t = simulate_model(model, device, &params, 1, overlap);
+    let t = Simulator::new(model, device, params)
+        .policy(overlap)
+        .analytic(1);
     let usage = resource_usage(&params, device);
     DesignReport::new(
         label,

@@ -3,13 +3,13 @@
 //!
 //! Two interchangeable engines sit behind the same `Engine` API:
 //!
-//! - **`pjrt` feature on** — [`engine`]: the real PJRT/XLA CPU client
+//! - **`pjrt` feature on** — `engine`: the real PJRT/XLA CPU client
 //!   (requires the XLA toolchain's `xla` bindings crate; see
 //!   Cargo.toml).  The interchange format is **HLO text** — jax ≥ 0.5
 //!   serialized protos carry 64-bit instruction ids that
 //!   xla_extension 0.5.1 rejects; the text parser reassigns ids (see
 //!   /opt/xla-example/README.md).
-//! - **`pjrt` feature off (default)** — [`cpu_ref`]: a deterministic
+//! - **`pjrt` feature off (default)** — `cpu_ref`: a deterministic
 //!   CPU reference executor.  It loads the same manifest and weight
 //!   blobs and produces shape-correct, batch-invariant pseudo-logits,
 //!   so the whole coordinator stack (boards, batcher, router,

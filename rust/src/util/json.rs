@@ -91,9 +91,28 @@ impl Json {
         }
     }
 
-    /// Vec<usize> from a JSON array of numbers (shape fields).
+    /// `Vec<usize>` from a JSON array of numbers (shape fields).
     pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    /// Error unless every key of this object is in `allowed` — strict
+    /// config parsing: a stale or misspelled key fails loudly, naming
+    /// the offenders, instead of silently running with defaults.
+    pub fn expect_keys(&self, allowed: &[&str], ctx: &str) -> Result<()> {
+        let unknown: Vec<&str> = self
+            .as_obj()?
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !allowed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            bail!(
+                "unknown {ctx} key(s) {unknown:?} (allowed: {allowed:?})"
+            );
+        }
     }
 
     // ---- parsing --------------------------------------------------------
@@ -439,6 +458,16 @@ mod tests {
     fn usize_vec_helper() {
         let v = Json::parse("[3,4,5]").unwrap();
         assert_eq!(v.as_usize_vec().unwrap(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn expect_keys_names_the_offenders() {
+        let v = Json::parse(r#"{"a":1,"typo":2,"b":3}"#).unwrap();
+        let err =
+            v.expect_keys(&["a", "b"], "test").unwrap_err().to_string();
+        assert!(err.contains("typo"), "{err}");
+        assert!(v.expect_keys(&["a", "b", "typo"], "test").is_ok());
+        assert!(Json::Num(1.0).expect_keys(&[], "test").is_err());
     }
 
     #[test]

@@ -5,10 +5,11 @@
 //! `cargo test` passes in a bare checkout; the Makefile orders
 //! artifacts before tests.
 
-use ffcnn::config::{default_artifacts_dir, RunConfig};
-use ffcnn::coordinator::{InferenceService, Pace, Policy};
+use ffcnn::config::default_artifacts_dir;
+use ffcnn::coordinator::{Pace, Policy};
 use ffcnn::data;
 use ffcnn::models;
+use ffcnn::plan::Plan;
 use ffcnn::runtime::Engine;
 
 fn engine_or_skip() -> Option<Engine> {
@@ -105,14 +106,16 @@ fn resnet50_deterministic() {
 #[test]
 fn alexnet_served_through_coordinator() {
     let Some(_) = engine_or_skip() else { return };
-    let mut cfg = RunConfig::default();
-    cfg.model = "alexnet".into();
-    cfg.artifacts_dir = default_artifacts_dir();
-    cfg.serving.max_batch = 4;
-    cfg.serving.max_wait_ms = 5;
-    let svc =
-        InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
-            .unwrap();
+    let mut plan = Plan::builder()
+        .model("alexnet")
+        .artifacts_dir(default_artifacts_dir())
+        .pace(Pace::None)
+        .policy(Policy::RoundRobin)
+        .build()
+        .unwrap();
+    plan.serving.max_batch = 4;
+    plan.serving.max_wait_ms = 5;
+    let svc = plan.deploy().unwrap().serve().unwrap();
     let trace = data::burst_trace(6);
     let shape = models::alexnet().in_shape;
     let report =
@@ -127,13 +130,15 @@ fn alexnet_served_through_coordinator() {
 #[test]
 fn coordinator_numerics_match_direct_execution() {
     let Some(e) = engine_or_skip() else { return };
-    let mut cfg = RunConfig::default();
-    cfg.model = "tinynet".into();
-    cfg.conv_impl = "pallas".into();
-    cfg.artifacts_dir = default_artifacts_dir();
-    let svc =
-        InferenceService::start(&cfg, Pace::None, Policy::RoundRobin)
-            .unwrap();
+    let plan = Plan::builder()
+        .model("tinynet")
+        .conv_impl("pallas")
+        .artifacts_dir(default_artifacts_dir())
+        .pace(Pace::None)
+        .policy(Policy::RoundRobin)
+        .build()
+        .unwrap();
+    let svc = plan.deploy().unwrap().serve().unwrap();
     let img = data::synth_images(1, (3, 16, 16), 555);
     let via_service = svc.classify(img.clone()).unwrap();
     let direct = e.execute("tinynet_b1_pallas", &img).unwrap();
@@ -182,14 +187,11 @@ fn corrupt_hlo_is_a_clean_error() {
 /// requests.
 #[test]
 fn service_fails_fast_on_missing_artifacts() {
-    let mut cfg = RunConfig::default();
-    cfg.artifacts_dir = std::path::PathBuf::from("/nonexistent-ffcnn");
-    assert!(InferenceService::start(
-        &cfg,
-        Pace::None,
-        Policy::RoundRobin
-    )
-    .is_err());
+    let plan = Plan::builder()
+        .artifacts_dir(std::path::PathBuf::from("/nonexistent-ffcnn"))
+        .build()
+        .unwrap();
+    assert!(plan.deploy().unwrap().serve().is_err());
 }
 
 // ------------------------------------------------- manifest integrity

@@ -1,0 +1,354 @@
+//! Facade contract tests: `Plan` JSON round-trips losslessly, the
+//! builder validates, and — the redesign's acceptance bar — the
+//! `Plan → Deployment` verbs are *bit-equal* to the deprecated entry
+//! points they replaced (`simulate_tokens*`, `explore*`,
+//! `InferenceService::start`) on alexnet and vgg16.
+
+use ffcnn::config::{default_artifacts_dir, RunConfig, ServingConfig};
+use ffcnn::coordinator::{InferenceService, Pace, Policy};
+use ffcnn::data;
+use ffcnn::fpga::device::STRATIX10;
+use ffcnn::fpga::dse::{self, Fidelity, SweepSpace};
+use ffcnn::fpga::pipeline::{Simulator, StageRates};
+use ffcnn::fpga::timing::{
+    simulate_model, DesignParams, OverlapPolicy, Precision,
+};
+use ffcnn::models;
+use ffcnn::plan::Plan;
+use ffcnn::util::prop::{forall, int_in, pick};
+use ffcnn::util::Json;
+
+// ------------------------------------------------------- JSON round-trip
+
+#[test]
+fn prop_plan_json_roundtrip_lossless() {
+    forall(
+        "plan-json-roundtrip",
+        |r| {
+            let mut plan = Plan::default();
+            plan.model = pick(r, &["alexnet", "vgg16", "resnet50", "tinynet"])
+                .to_string();
+            plan.device = pick(r, &["stratix10", "arria10"]).to_string();
+            let mut d = DesignParams::new(
+                *pick(r, &[4usize, 8, 16, 32, 64]),
+                int_in(r, 1, 64),
+            );
+            d.channel_depth = *pick(r, &[1usize, 128, 512, 2048]);
+            d.precision = *pick(
+                r,
+                &[Precision::Fp32, Precision::Fixed16, Precision::Fixed8],
+            );
+            d.host_us_per_group = int_in(r, 0, 50) as f64;
+            plan.design = d;
+            plan.overlap = *pick(
+                r,
+                &[
+                    OverlapPolicy::None,
+                    OverlapPolicy::WithinGroup,
+                    OverlapPolicy::Full,
+                ],
+            );
+            plan.fidelity = *pick(
+                r,
+                &[
+                    Fidelity::Analytic,
+                    Fidelity::PipelineFast,
+                    Fidelity::PipelineExact,
+                ],
+            );
+            plan.policy = *pick(
+                r,
+                &[
+                    Policy::RoundRobin,
+                    Policy::LeastOutstanding,
+                    Policy::WorkStealing,
+                ],
+            );
+            plan.pace = *pick(r, &[Pace::None, Pace::Fpga]);
+            plan.sweep = match r.next_u64() % 3 {
+                0 => SweepSpace::default(),
+                1 => SweepSpace::with_overlap_and_depth(),
+                _ => SweepSpace::with_precision_overlap_and_depth(),
+            };
+            plan.conv_impl = pick(r, &["jnp", "pallas"]).to_string();
+            plan.serving = ServingConfig {
+                max_batch: int_in(r, 1, 16),
+                max_wait_ms: int_in(r, 0, 20) as u64,
+                boards: int_in(r, 1, 4),
+                queue_depth: int_in(r, 1, 512),
+            };
+            plan
+        },
+        |plan| {
+            let text = plan.to_json().to_string();
+            match Json::parse(&text).and_then(|v| Plan::from_json(&v)) {
+                Ok(back) => back == *plan,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn plan_file_roundtrip() {
+    let dir = std::env::temp_dir().join("ffcnn_plan_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.json");
+    let mut plan = Plan::builder()
+        .model("vgg16")
+        .precision(Precision::Fixed16)
+        .build()
+        .unwrap();
+    plan.sweep = SweepSpace::with_precision();
+    plan.save(&path).unwrap();
+    assert_eq!(Plan::load(&path).unwrap(), plan);
+}
+
+// --------------------------------------------- simulator parity (shims)
+
+/// The deprecated free functions must stay bit-equal to the
+/// `Simulator` facade — every policy, fast and exact, on alexnet.
+#[test]
+#[allow(deprecated)]
+fn simulator_parity_with_deprecated_free_functions_alexnet() {
+    use ffcnn::fpga::pipeline::{
+        simulate_tokens, simulate_tokens_exact,
+        simulate_tokens_exact_policy, simulate_tokens_policy,
+    };
+    let m = models::alexnet();
+    let p = ffcnn::fpga::timing::ffcnn_stratix10_params();
+
+    let old_default = simulate_tokens(&m, &STRATIX10, &p, 1);
+    let new_default = Simulator::new(&m, &STRATIX10, p).run(1);
+    assert_eq!(old_default.total_cycles, new_default.total_cycles);
+
+    let old_exact = simulate_tokens_exact(&m, &STRATIX10, &p, 1);
+    let new_exact = Simulator::new(&m, &STRATIX10, p).exact(true).run(1);
+    assert_eq!(old_exact.total_cycles, new_exact.total_cycles);
+
+    for pol in [
+        OverlapPolicy::None,
+        OverlapPolicy::WithinGroup,
+        OverlapPolicy::Full,
+    ] {
+        let old = simulate_tokens_policy(&m, &STRATIX10, &p, 1, pol);
+        let new = Simulator::new(&m, &STRATIX10, p).policy(pol).run(1);
+        assert_eq!(old.total_cycles, new.total_cycles, "{pol:?} fast");
+        for (a, b) in old.groups.iter().zip(&new.groups) {
+            assert_eq!(a.cycles, b.cycles, "{pol:?} group {:?}", a.layers);
+        }
+        let old = simulate_tokens_exact_policy(&m, &STRATIX10, &p, 1, pol);
+        let new = Simulator::new(&m, &STRATIX10, p)
+            .policy(pol)
+            .exact(true)
+            .run(1);
+        assert_eq!(old.total_cycles, new.total_cycles, "{pol:?} exact");
+    }
+}
+
+/// Same parity on the big model (fast dispatch only — the exact walk
+/// on VGG-16 is a bench, not a test), at batch 1 and 16.
+#[test]
+#[allow(deprecated)]
+fn simulator_parity_with_deprecated_free_functions_vgg16() {
+    use ffcnn::fpga::pipeline::simulate_tokens_policy;
+    let m = models::vgg16();
+    let p = ffcnn::fpga::timing::ffcnn_stratix10_params();
+    for batch in [1usize, 16] {
+        for pol in [OverlapPolicy::WithinGroup, OverlapPolicy::Full] {
+            let old =
+                simulate_tokens_policy(&m, &STRATIX10, &p, batch, pol);
+            let new = Simulator::new(&m, &STRATIX10, p)
+                .policy(pol)
+                .run(batch);
+            assert_eq!(
+                old.total_cycles, new.total_cycles,
+                "b{batch} {pol:?}"
+            );
+            for (a, b) in old.groups.iter().zip(&new.groups) {
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.exact, b.exact);
+            }
+        }
+    }
+}
+
+/// The raw solver entries behind `Simulator::{recurrence, stream}`.
+#[test]
+#[allow(deprecated)]
+fn solver_parity_with_deprecated_free_functions() {
+    use ffcnn::fpga::pipeline::{
+        run_recurrence_exact, run_recurrence_fast, run_stream_exact,
+        run_stream_fast,
+    };
+    let rates =
+        StageRates { memrd: 0.5, conv: 7.0, fused: 1.0, memwr: 0.25 };
+    let segs = [
+        (30_000u64, StageRates { memrd: 1.0, conv: 2.0, fused: 1.0, memwr: 6.0 }),
+        (50_000u64, StageRates { memrd: 8.0, conv: 3.0, fused: 1.0, memwr: 1.0 }),
+    ];
+    assert_eq!(
+        run_recurrence_exact(40_000, rates, 64),
+        Simulator::recurrence(40_000, rates, 64, true)
+    );
+    assert_eq!(
+        run_recurrence_fast(40_000, rates, 64),
+        Simulator::recurrence(40_000, rates, 64, false)
+    );
+    assert_eq!(
+        run_stream_exact(&segs, 64).0,
+        Simulator::stream(&segs, 64, true).0
+    );
+    assert_eq!(
+        run_stream_fast(&segs, 64).0,
+        Simulator::stream(&segs, 64, false).0
+    );
+}
+
+// ------------------------------------------------ deployment-level parity
+
+/// `Deployment::simulate` / `analytic` equal the underlying models at
+/// the plan's dimensions — the Table-1 cycle pins go through this
+/// path, so it must be bit-equal.
+#[test]
+fn deployment_matches_underlying_models() {
+    for (model, overlap) in [
+        ("alexnet", OverlapPolicy::WithinGroup),
+        ("alexnet", OverlapPolicy::Full),
+        ("vgg16", OverlapPolicy::Full),
+    ] {
+        let plan = Plan::builder()
+            .model(model)
+            .device("stratix10")
+            .overlap(overlap)
+            .build()
+            .unwrap();
+        let dep = plan.deploy().unwrap();
+        let m = models::by_name(model).unwrap();
+        let direct = Simulator::new(&m, &STRATIX10, plan.design)
+            .policy(overlap)
+            .run(1);
+        assert_eq!(dep.simulate(1).total_cycles, direct.total_cycles);
+        let ana = simulate_model(&m, &STRATIX10, &plan.design, 1, overlap);
+        assert_eq!(dep.analytic(1).total_cycles, ana.total_cycles);
+    }
+}
+
+/// One `deployment.sweep()` call covers precision × overlap × channel
+/// depth — the acceptance criterion for the extended space — and the
+/// winner round-trips into the plan via `Plan::adopt`.
+#[test]
+fn sweep_covers_precision_overlap_depth_in_one_call() {
+    let mut plan = Plan::builder()
+        .model("alexnet")
+        .sweep(SweepSpace::with_precision_overlap_and_depth())
+        .build()
+        .unwrap();
+    let sweep = plan.deploy().unwrap().sweep();
+    let s = &plan.sweep;
+    assert_eq!(
+        sweep.points.len(),
+        s.vecs.len()
+            * s.lanes.len()
+            * s.depths.len()
+            * s.precisions.len()
+            * s.overlaps.len()
+    );
+    // All three precisions must appear among feasible points.
+    assert_eq!(sweep.best_latency_per_precision().len(), 3);
+    let best = sweep.best_latency().unwrap();
+    let (params, overlap) = (best.params, best.overlap);
+    plan.adopt(best);
+    assert_eq!(plan.design, params);
+    assert_eq!(plan.overlap, overlap);
+}
+
+/// The deprecated sweep shims equal the facade sweep point-for-point.
+#[test]
+#[allow(deprecated)]
+fn sweep_parity_with_deprecated_explore() {
+    let m = models::alexnet();
+    let old = dse::explore(&m, &STRATIX10, 1);
+    let plan = Plan::builder().model("alexnet").build().unwrap();
+    let new = plan.deploy().unwrap().sweep();
+    assert_eq!(old.len(), new.points.len());
+    for (a, b) in old.iter().zip(&new.points) {
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.overlap, b.overlap);
+        assert_eq!(a.feasible, b.feasible);
+        assert_eq!(a.time_ms, b.time_ms);
+        assert_eq!(a.gops, b.gops);
+    }
+    let old_fast =
+        dse::explore_with(&m, &STRATIX10, 2, Fidelity::PipelineFast);
+    let mut plan = Plan::builder().model("alexnet").build().unwrap();
+    plan.fidelity = Fidelity::PipelineFast;
+    let new_fast = plan.deploy().unwrap().sweep_at(2);
+    for (a, b) in old_fast.iter().zip(&new_fast.points) {
+        assert_eq!(a.time_ms, b.time_ms);
+    }
+}
+
+// ------------------------------------------------- serving parity (E4)
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(dir)
+}
+
+/// The deprecated `InferenceService::start` and the plan path must
+/// produce bit-identical logits for the same request.
+#[test]
+fn serve_parity_with_deprecated_start() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut cfg = RunConfig::default();
+    cfg.model = "tinynet".into();
+    cfg.conv_impl = "pallas".into();
+    cfg.artifacts_dir = dir;
+    cfg.serving.max_batch = 2;
+    cfg.serving.max_wait_ms = 1;
+
+    #[allow(deprecated)]
+    let old = InferenceService::start(&cfg, Pace::None, Policy::RoundRobin).unwrap();
+    let plan = Plan::from_run_config(&cfg, Pace::None, Policy::RoundRobin).unwrap();
+    let new = plan.deploy().unwrap().serve().unwrap();
+
+    let img = data::synth_images(1, (3, 16, 16), 9);
+    let a = old.classify(img.clone()).unwrap();
+    let b = new.classify(img).unwrap();
+    assert_eq!(a.argmax, b.argmax);
+    assert_eq!(&a.logits[..], &b.logits[..]);
+}
+
+/// The serving example's path: builder → deploy → serve, work-stealing
+/// router and all knobs from the plan.
+#[test]
+fn serve_from_builder_end_to_end() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let plan = Plan::builder()
+        .model("tinynet")
+        .conv_impl("pallas")
+        .artifacts_dir(dir)
+        .policy(Policy::WorkStealing)
+        .serving(ServingConfig {
+            max_batch: 2,
+            max_wait_ms: 1,
+            boards: 2,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let svc = plan.deploy().unwrap().serve().unwrap();
+    let trace = data::burst_trace(8);
+    let report = svc.run_trace(
+        &trace,
+        |id| data::synth_images(1, (3, 16, 16), id),
+        0.0,
+    );
+    assert_eq!(report.requests, 8);
+    assert_eq!(report.errors, 0);
+}

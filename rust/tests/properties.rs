@@ -8,11 +8,7 @@ use ffcnn::coordinator::{argmax, plan_chunks, LatencyHistogram};
 use ffcnn::data::Rng;
 use ffcnn::fpga::channel::Channel;
 use ffcnn::fpga::device::{ARRIA10, DEVICES, STRATIX10};
-use ffcnn::fpga::pipeline::{
-    run_recurrence_exact, run_recurrence_fast, run_stream_exact,
-    run_stream_fast, simulate_tokens, simulate_tokens_exact,
-    simulate_tokens_exact_policy, simulate_tokens_policy, StageRates,
-};
+use ffcnn::fpga::pipeline::{PipelineSim, Simulator, StageRates};
 use ffcnn::fpga::resources::resource_usage;
 use ffcnn::fpga::timing::{
     ffcnn_stratix10_params, simulate_model, DesignParams, OverlapPolicy,
@@ -20,6 +16,38 @@ use ffcnn::fpga::timing::{
 use ffcnn::models::{self, Layer, LayerKind, Model, Shape};
 use ffcnn::util::json::Json;
 use ffcnn::util::prop::{forall, int_in, pick};
+
+// --------------------------------------------------------------- helpers
+
+/// Token-level simulation through the `Simulator` facade (STRATIX10).
+fn tok_sim(
+    m: &Model,
+    p: &DesignParams,
+    batch: usize,
+    pol: OverlapPolicy,
+    exact: bool,
+) -> PipelineSim {
+    Simulator::new(m, &STRATIX10, *p).policy(pol).exact(exact).run(batch)
+}
+
+/// Single-group recurrence solver (exact oracle or fast path).
+fn recurrence(
+    tokens: u64,
+    rates: StageRates,
+    depth: usize,
+    exact: bool,
+) -> (u64, [u64; 4], [u64; 3]) {
+    Simulator::recurrence(tokens, rates, depth, exact)
+}
+
+/// Overlapped stream solver, total cycles only.
+fn stream_total(
+    segments: &[(u64, StageRates)],
+    depth: usize,
+    exact: bool,
+) -> u64 {
+    Simulator::stream(segments, depth, exact).0
+}
 
 // ---------------------------------------------------------------- channel
 
@@ -315,8 +343,8 @@ fn prop_fast_recurrence_cycles_match_exact() {
                 fused: rate[2],
                 memwr: rate[3],
             };
-            let (ce, _, _) = run_recurrence_exact(tokens, rates, depth);
-            let (cf, _, _) = run_recurrence_fast(tokens, rates, depth);
+            let (ce, _, _) = recurrence(tokens, rates, depth, true);
+            let (cf, _, _) = recurrence(tokens, rates, depth, false);
             ce.abs_diff(cf) as f64 <= 1.0 + 1e-3 * ce as f64
         },
     );
@@ -340,8 +368,10 @@ fn prop_token_sim_fast_path_matches_exact_oracle() {
             let m = models::by_name(model).unwrap();
             let mut p = DesignParams::new(*vec, *lane);
             p.channel_depth = *depth;
-            let fast = simulate_tokens(&m, &STRATIX10, &p, 1);
-            let exact = simulate_tokens_exact(&m, &STRATIX10, &p, 1);
+            let fast =
+                tok_sim(&m, &p, 1, OverlapPolicy::WithinGroup, false);
+            let exact =
+                tok_sim(&m, &p, 1, OverlapPolicy::WithinGroup, true);
             fast.total_cycles.abs_diff(exact.total_cycles) as f64
                 <= 1.0 + 1e-3 * exact.total_cycles as f64
                 && fast.groups.iter().zip(&exact.groups).all(|(f, e)| {
@@ -375,10 +405,7 @@ fn prop_token_policies_ordered_exact() {
             let m = models::by_name(model).unwrap();
             let mut p = DesignParams::new(*vec, *lane);
             p.channel_depth = *depth;
-            let exact = |o| {
-                simulate_tokens_exact_policy(&m, &STRATIX10, &p, 1, o)
-                    .total_cycles
-            };
+            let exact = |o| tok_sim(&m, &p, 1, o, true).total_cycles;
             let (fe, we, ne) = (
                 exact(OverlapPolicy::Full),
                 exact(OverlapPolicy::WithinGroup),
@@ -409,10 +436,7 @@ fn prop_token_policies_ordered_fast_dispatch() {
             let m = models::by_name(model).unwrap();
             let mut p = DesignParams::new(*vec, *lane);
             p.channel_depth = *depth;
-            let fast = |o| {
-                simulate_tokens_policy(&m, &STRATIX10, &p, *batch, o)
-                    .total_cycles
-            };
+            let fast = |o| tok_sim(&m, &p, *batch, o, false).total_cycles;
             let (ff, wf, nf) = (
                 fast(OverlapPolicy::Full),
                 fast(OverlapPolicy::WithinGroup),
@@ -441,12 +465,8 @@ fn prop_overlapped_fast_path_matches_exact_oracle() {
             let m = models::by_name(model).unwrap();
             let mut p = DesignParams::new(*vec, *lane);
             p.channel_depth = *depth;
-            let fast = simulate_tokens_policy(
-                &m, &STRATIX10, &p, 1, OverlapPolicy::Full,
-            );
-            let exact = simulate_tokens_exact_policy(
-                &m, &STRATIX10, &p, 1, OverlapPolicy::Full,
-            );
+            let fast = tok_sim(&m, &p, 1, OverlapPolicy::Full, false);
+            let exact = tok_sim(&m, &p, 1, OverlapPolicy::Full, true);
             fast.total_cycles.abs_diff(exact.total_cycles) as f64
                 <= 1.0 + 1e-3 * exact.total_cycles as f64
                 && fast.groups.iter().zip(&exact.groups).all(|(f, e)| {
@@ -497,8 +517,8 @@ fn prop_stream_solver_fast_vs_exact_synthetic() {
             (depth, segs)
         },
         |(depth, segs)| {
-            let (te, _) = run_stream_exact(segs, *depth);
-            let (tf, _) = run_stream_fast(segs, *depth);
+            let te = stream_total(segs, *depth, true);
+            let tf = stream_total(segs, *depth, false);
             te.abs_diff(tf) as f64 <= 1.0 + 1e-3 * te as f64
         },
     );
@@ -515,8 +535,7 @@ fn regression_overlap_token_cycles_pinned() {
     let p = ffcnn_stratix10_params();
     let pin = |model: &str, batch: usize, overlap, expect: u64| {
         let m = models::by_name(model).unwrap();
-        let got = simulate_tokens_policy(&m, &STRATIX10, &p, batch, overlap)
-            .total_cycles;
+        let got = tok_sim(&m, &p, batch, overlap, false).total_cycles;
         let tol = (expect as f64 * 5e-4) as u64 + 1;
         assert!(
             got.abs_diff(expect) <= tol,
@@ -547,13 +566,8 @@ fn regression_overlap_fast_path_never_walks_large_groups() {
     // large group — an O(tokens) walk would show up as `exact == true`
     // on the multi-million-token VGG-16 b16 groups.
     let p = ffcnn_stratix10_params();
-    let sim = simulate_tokens_policy(
-        &models::vgg16(),
-        &STRATIX10,
-        &p,
-        16,
-        OverlapPolicy::Full,
-    );
+    let sim =
+        tok_sim(&models::vgg16(), &p, 16, OverlapPolicy::Full, false);
     for g in &sim.groups {
         if g.tokens > 200_000 {
             assert!(
