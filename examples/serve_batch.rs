@@ -14,7 +14,7 @@
 //! # smaller/faster: FFCNN_SERVE_MODEL=tinynet FFCNN_SERVE_N=32 ...
 //! ```
 
-use ffcnn::config::ServingConfig;
+use ffcnn::config::{ServingConfig, ShardPolicy};
 use ffcnn::coordinator::{Pace, Policy};
 use ffcnn::data;
 use ffcnn::plan::Plan;
@@ -109,6 +109,48 @@ fn main() -> Result<()> {
     );
     println!("{r4}");
     assert_eq!(r4.errors, 0, "work-stealing phase had errors");
+
+    // --- Phase 5: multi-board batch sharding ------------------------
+    // The router balances requests, but one *large batch* submitted
+    // whole parks on a single board while its peers idle.
+    // ShardPolicy::SplitOver splits the batch into per-board shards
+    // that run concurrently and gathers the logits back in order.
+    //
+    // When sharding wins: large batches on idle boards — the slowest
+    // shard runs ceil(B/k) images, so board time drops ~k-fold while
+    // the per-shard dispatch+gather overhead stays in the tens of µs.
+    // When it loses: small batches (or a busy fleet), where that
+    // overhead outweighs the saved board time.  The DSE `shards`
+    // dimension (`ffcnn dse --shard-sweep`) finds the break-even per
+    // (model, batch).  Boards are FPGA-paced here so latencies show
+    // the boards' concurrency, not the host's.
+    if boards > 1 {
+        println!(
+            "\n[phase 5] one 32-image batch: sharded over {boards} \
+             boards vs unsharded (FPGA-paced)"
+        );
+        let mut whole = plan.clone();
+        whole.pace = Pace::Fpga;
+        let mut split = whole.clone();
+        split.serving.shard = ShardPolicy::SplitOver(boards);
+
+        let flat = data::synth_images(32, in_shape, 7000);
+        let svc_whole = whole.deploy()?.serve()?;
+        let _ = svc_whole.classify(data::synth_images(1, in_shape, 1))?;
+        let r_whole = svc_whole.classify_batch(flat.clone())?;
+        let svc_split = split.deploy()?.serve()?;
+        let _ = svc_split.classify(data::synth_images(1, in_shape, 1))?;
+        let r_split = svc_split.classify_batch(flat)?;
+        println!(
+            "unsharded: {:.1} ms | sharded x{boards}: {:.1} ms \
+             ({:.2}x)",
+            r_whole.latency_ms,
+            r_split.latency_ms,
+            r_whole.latency_ms / r_split.latency_ms
+        );
+        assert_eq!(r_whole.batch, 32);
+        assert_eq!(r_split.batch, 32);
+    }
 
     // Sanity: everything answered, batching engaged under burst.
     assert_eq!(r1.errors, 0, "burst phase had errors");

@@ -1,17 +1,33 @@
 //! Bench E4: coordinator throughput — batcher planning, router picks,
-//! and end-to-end service throughput on tinynet (fast) with batching
-//! on and off.
+//! end-to-end service throughput on tinynet, and multi-board batch
+//! sharding: sharded vs unsharded batch latency at batch 16/32/64 on
+//! the 4-board config, both *predicted* (the shard-aware simulator,
+//! no artifacts needed) and *measured* through the serving stack when
+//! artifacts exist.  Results land in `BENCH_coordinator.json`
+//! (uploaded as a CI artifact next to `BENCH_dse.json` /
+//! `BENCH_pipeline.json`).
 
+use std::path::Path;
 use std::time::Duration;
 
-use ffcnn::config::{default_artifacts_dir, ServingConfig};
+use ffcnn::config::{default_artifacts_dir, ServingConfig, ShardPolicy};
 use ffcnn::coordinator::{plan_chunks, Pace, Policy, Router};
 use ffcnn::data;
+use ffcnn::fpga::device::STRATIX10;
+use ffcnn::fpga::pipeline::Simulator;
+use ffcnn::fpga::timing::ffcnn_stratix10_params;
+use ffcnn::models;
 use ffcnn::plan::Plan;
 use ffcnn::util::bench::Bench;
+use ffcnn::util::Json;
+
+/// The multi-board configuration the shard rows compare on.
+const SHARD_BOARDS: usize = 4;
+const SHARD_BATCHES: [usize; 3] = [16, 32, 64];
 
 fn main() {
     let mut b = Bench::new("coordinator").with_budget(Duration::from_secs(4));
+    let mut extra: Vec<(String, Json)> = Vec::new();
 
     // Pure host-side logic (no engine).
     b.run("plan_chunks_1000", || {
@@ -26,10 +42,41 @@ fn main() {
         });
     }
 
+    // Predicted sharded vs unsharded batch latency (alexnet on the
+    // paper's Stratix 10 point): the shard-aware simulator runs the
+    // slowest ceil(B/k)-image shard plus per-shard dispatch overhead.
+    // These rows are the acceptance numbers — sharded batch-64 must
+    // sit strictly below unsharded on the 4-board config.
+    let m = models::alexnet();
+    let p = ffcnn_stratix10_params();
+    for &batch in &SHARD_BATCHES {
+        let unsharded =
+            Simulator::new(&m, &STRATIX10, p).run(batch).time_ms();
+        let sharded = Simulator::new(&m, &STRATIX10, p)
+            .shards(SHARD_BOARDS)
+            .run(batch)
+            .time_ms();
+        println!(
+            "sim alexnet b{batch}: unsharded {unsharded:.2} ms, \
+             sharded x{SHARD_BOARDS} {sharded:.2} ms ({:.2}x)",
+            unsharded / sharded
+        );
+        extra.push((
+            format!("sim_unsharded_b{batch}_ms"),
+            Json::num(unsharded),
+        ));
+        extra.push((format!("sim_sharded_b{batch}_ms"), Json::num(sharded)));
+        extra.push((
+            format!("sim_shard_speedup_b{batch}"),
+            Json::num(unsharded / sharded),
+        ));
+    }
+
     // End-to-end service (needs artifacts).
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        println!("no artifacts; skipping service benches");
+        println!("no artifacts; skipping measured service benches");
+        save(&b, &extra);
         b.finish();
         return;
     }
@@ -64,5 +111,55 @@ fn main() {
         assert_eq!(r.errors, 0);
         (r.throughput_rps * 1000.0) as u64
     });
+    drop(svc);
+
+    // Measured sharded vs unsharded batch latency on SHARD_BOARDS
+    // FPGA-paced boards (the regime the win lives in: boards are held
+    // for the simulated batch time, so concurrency across boards is
+    // what the wall clock sees).
+    let mut whole = plan.clone();
+    whole.pace = Pace::Fpga;
+    whole.serving.boards = SHARD_BOARDS;
+    let mut split = whole.clone();
+    split.serving.shard = ShardPolicy::SplitOver(SHARD_BOARDS);
+    let svc_whole = whole.deploy().unwrap().serve().unwrap();
+    let svc_split = split.deploy().unwrap().serve().unwrap();
+    let _ = svc_whole.classify(data::synth_images(1, (3, 16, 16), 1));
+    let _ = svc_split.classify(data::synth_images(1, (3, 16, 16), 1));
+    for &batch in &SHARD_BATCHES {
+        let flat = data::synth_images(batch, (3, 16, 16), 77);
+        let unsharded = b
+            .run(&format!("serve_unsharded_b{batch}"), || {
+                svc_whole
+                    .classify_batch(flat.clone())
+                    .unwrap()
+                    .latency_ms as u64
+            })
+            .median_ms();
+        let sharded = b
+            .run(&format!("serve_sharded_b{batch}_x{SHARD_BOARDS}"), || {
+                svc_split
+                    .classify_batch(flat.clone())
+                    .unwrap()
+                    .latency_ms as u64
+            })
+            .median_ms();
+        extra.push((
+            format!("serve_unsharded_b{batch}_ms"),
+            Json::num(unsharded),
+        ));
+        extra
+            .push((format!("serve_sharded_b{batch}_ms"), Json::num(sharded)));
+    }
+
+    save(&b, &extra);
     b.finish();
+}
+
+fn save(b: &Bench, extra: &[(String, Json)]) {
+    b.save_json(
+        Path::new("BENCH_coordinator.json"),
+        extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+    )
+    .expect("writing BENCH_coordinator.json");
 }

@@ -22,6 +22,39 @@ use crate::plan::{
 use crate::util::Json;
 use crate::Result;
 
+/// How `InferenceService` places one incoming multi-image batch
+/// across boards (`submit_batch` / `classify_batch`).
+///
+/// The router balances *requests*; without sharding a large batch
+/// parks on a single board while its peers idle.  `SplitOver(k)`
+/// splits a batch of `B` images into up to `k` contiguous shards of
+/// `ceil(B / k)` images, dispatches each shard to a distinct
+/// least-loaded board through the normal routing/work-stealing
+/// machinery, and gathers the per-shard logits back into one reply in
+/// submission order.  Sharding wins when the batch is large and
+/// boards are idle; it loses at small batches, where the per-shard
+/// dispatch + gather overhead outweighs the saved board time (the
+/// shard-aware simulator mode and the `shards` sweep dimension model
+/// exactly this break-even).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Serve each incoming batch whole, on one board.
+    None,
+    /// Split a batch over up to this many boards (clamped to the
+    /// provisioned board count and the batch size at dispatch).
+    SplitOver(usize),
+}
+
+impl ShardPolicy {
+    /// Upper bound on shards per batch (1 = no splitting).
+    pub fn max_shards(self) -> usize {
+        match self {
+            ShardPolicy::None => 1,
+            ShardPolicy::SplitOver(k) => k.max(1),
+        }
+    }
+}
+
 /// Serving-side knobs for the coordinator.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServingConfig {
@@ -33,6 +66,8 @@ pub struct ServingConfig {
     pub boards: usize,
     /// Bounded request queue depth (admission control).
     pub queue_depth: usize,
+    /// Multi-board placement of one incoming batch.
+    pub shard: ShardPolicy,
 }
 
 impl Default for ServingConfig {
@@ -42,6 +77,7 @@ impl Default for ServingConfig {
             max_wait_ms: 2,
             boards: 1,
             queue_depth: 256,
+            shard: ShardPolicy::None,
         }
     }
 }
@@ -263,6 +299,19 @@ mod tests {
             Json::parse(r#"{"serving":{"max_batch":2,"queue":9}}"#).unwrap();
         let err = RunConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("queue"), "{err}");
+    }
+
+    #[test]
+    fn shard_policy_roundtrips_in_serving() {
+        let mut c = RunConfig::default();
+        c.serving.boards = 4;
+        c.serving.shard = ShardPolicy::SplitOver(4);
+        let j = c.to_json().to_string();
+        let d = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(d.serving.shard, ShardPolicy::SplitOver(4));
+        assert_eq!(ShardPolicy::None.max_shards(), 1);
+        assert_eq!(ShardPolicy::SplitOver(0).max_shards(), 1);
+        assert_eq!(ShardPolicy::SplitOver(3).max_shards(), 3);
     }
 
     #[test]

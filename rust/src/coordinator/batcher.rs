@@ -109,28 +109,50 @@ impl From<Receiver<Request>> for RequestSource {
     }
 }
 
-/// Pool of reusable `classes`-sized logits buffers for multi-request
-/// chunks.
+/// Pool of reusable logits buffers (per-request `classes`-sized slices
+/// for multi-request chunks; `batch * classes`-sized gather buffers
+/// for sharded batch replies — slots of any length coexist and are
+/// recycled by exact length match).
 ///
 /// A slot is handed out as an `Arc<[f32]>` clone; once the requester
 /// drops its `Reply` the slot's strong count returns to 1 and
 /// [`ReplySlab::take`] recycles it via `Arc::get_mut` — the reply
-/// path stops allocating once the pool is warm.  Retention is capped:
-/// when every slot is still referenced and the pool is at capacity,
-/// the buffer is allocated untracked (a burst beyond the cap degrades
-/// to the old per-reply allocation instead of growing forever).
+/// path stops allocating once the pool is warm.  Retention is capped
+/// *and self-healing*: a caller that clones a reply `Arc` and holds
+/// the clone pins its slot, so at the slab cap (`SLAB_CAP`) the slab
+/// evicts slots round-robin in favour of fresh (soon-recyclable)
+/// buffers instead of letting long-lived clones consume its capacity
+/// forever — slab size stays bounded no matter what callers do with
+/// their replies.
 pub struct ReplySlab {
-    classes: usize,
     slots: Vec<Arc<[f32]>>,
+    /// Round-robin eviction cursor used once `slots` is at capacity.
+    evict: usize,
+    /// Floats currently retained across all slots (the byte budget).
+    retained: usize,
 }
 
-/// Retained slots per batcher; beyond this, overflow buffers are
-/// allocated untracked.
+/// Retained slots per slab; beyond this, a new buffer replaces a
+/// retained slot (round-robin) instead of growing the pool.
 const SLAB_CAP: usize = 256;
 
+/// Retained *floats* per slab (16 MiB of f32) — the byte-side bound.
+/// Reply slots are tiny (`classes` floats) and never approach it, but
+/// the image-dispatch slab caches full image buffers: without a byte
+/// budget, 256 retained AlexNet images would pin ~150 MB for the
+/// service lifetime.  Past the budget, takes degrade to plain
+/// allocation instead of growing the cache.
+const SLAB_CAP_FLOATS: usize = 4 << 20;
+
+impl Default for ReplySlab {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl ReplySlab {
-    pub fn new(classes: usize) -> Self {
-        ReplySlab { classes: classes.max(1), slots: Vec::new() }
+    pub fn new() -> Self {
+        ReplySlab { slots: Vec::new(), evict: 0, retained: 0 }
     }
 
     /// Number of retained slots (diagnostics/tests).
@@ -144,18 +166,96 @@ impl ReplySlab {
 
     /// Copy `src` into a recycled (or new) buffer and share it.
     pub fn take(&mut self, src: &[f32]) -> Arc<[f32]> {
-        debug_assert_eq!(src.len(), self.classes);
         for slot in self.slots.iter_mut() {
-            if let Some(buf) = Arc::get_mut(slot) {
-                buf.copy_from_slice(src);
-                return slot.clone();
+            if slot.len() == src.len() {
+                if let Some(buf) = Arc::get_mut(slot) {
+                    buf.copy_from_slice(src);
+                    return slot.clone();
+                }
             }
         }
+        // Single-write miss path: `Arc::from(src)` copies once, where
+        // the closure-fill path would zero-initialize first.
         let fresh: Arc<[f32]> = Arc::from(src);
-        if self.slots.len() < SLAB_CAP {
-            self.slots.push(fresh.clone());
-        }
+        self.put_back(&fresh);
         fresh
+    }
+
+    /// Hand out a buffer of `len` floats after letting `fill` write
+    /// it — the allocation-free gather path: a free slot of exactly
+    /// `len` is recycled in place, else a fresh buffer is retained
+    /// via [`ReplySlab::put_back`] (evicting round-robin once the
+    /// slab is at capacity).
+    pub fn take_with(
+        &mut self,
+        len: usize,
+        fill: impl FnOnce(&mut [f32]),
+    ) -> Arc<[f32]> {
+        for slot in self.slots.iter_mut() {
+            if slot.len() == len {
+                if let Some(buf) = Arc::get_mut(slot) {
+                    fill(buf);
+                    return slot.clone();
+                }
+            }
+        }
+        let mut fresh_vec = vec![0.0f32; len];
+        fill(&mut fresh_vec);
+        let fresh: Arc<[f32]> = fresh_vec.into();
+        self.put_back(&fresh);
+        fresh
+    }
+
+    /// Detach a free slot of exactly `len` floats from the pool so the
+    /// caller can fill it *outside* the slab lock (the caller becomes
+    /// the unique owner; `Arc::get_mut` is guaranteed to succeed).
+    /// Return it with [`ReplySlab::put_back`].  `None` when no free
+    /// matching slot exists — allocate fresh and `put_back` that.
+    pub fn grab(&mut self, len: usize) -> Option<Arc<[f32]>> {
+        let i = self
+            .slots
+            .iter_mut()
+            .position(|s| s.len() == len && Arc::get_mut(s).is_some())?;
+        self.retained -= len;
+        Some(self.slots.swap_remove(i))
+    }
+
+    /// Retain a buffer the caller filled after [`ReplySlab::grab`] (or
+    /// allocated fresh on a `grab` miss): re-inserted under the same
+    /// slot-count cap and float budget, evicting round-robin at
+    /// capacity so pinned clones can never grow the footprint.
+    pub fn put_back(&mut self, buf: &Arc<[f32]>) {
+        let len = buf.len();
+        if self.slots.len() < SLAB_CAP
+            && self.retained + len <= SLAB_CAP_FLOATS
+        {
+            self.retained += len;
+            self.slots.push(buf.clone());
+        } else if !self.slots.is_empty() {
+            // At capacity: replace a slot — within the byte budget —
+            // so the slab keeps turning over toward recyclable
+            // buffers without ever growing its footprint.  Prefer a
+            // *pinned* victim (strong count > 1, i.e. dead weight
+            // until its clone drops) starting from the round-robin
+            // cursor, so a still-free slot of another size is not
+            // thrown away while unreclaimable ones sit idle.
+            let n = self.slots.len();
+            let start = self.evict % n;
+            self.evict = self.evict.wrapping_add(1);
+            let mut victim = start;
+            for off in 0..n {
+                let i = (start + off) % n;
+                if Arc::strong_count(&self.slots[i]) > 1 {
+                    victim = i;
+                    break;
+                }
+            }
+            let swapped = self.retained - self.slots[victim].len() + len;
+            if swapped <= SLAB_CAP_FLOATS {
+                self.retained = swapped;
+                self.slots[victim] = buf.clone();
+            }
+        }
     }
 }
 
@@ -196,7 +296,7 @@ pub fn run_batcher(
     // it back inside the BatchResult so its capacity is recycled.
     let mut staging: Vec<f32> = Vec::new();
     // Reusable reply buffers for multi-request chunks.
-    let mut slab = ReplySlab::new(classes);
+    let mut slab = ReplySlab::new();
     loop {
         // Block for the first request of a batch.
         let Some(first) = source.recv() else { break };
@@ -222,7 +322,12 @@ pub fn run_batcher(
                 if now >= deadline {
                     break;
                 }
-                match source.recv_timeout(deadline - now) {
+                // Saturating: a deadline already passed (max_wait_ms:
+                // 0, or the thread waking late) yields a zero wait,
+                // never an Instant-subtraction panic.
+                match source
+                    .recv_timeout(deadline.saturating_duration_since(now))
+                {
                     Popped::Req(r) => pending.push(r),
                     Popped::TimedOut | Popped::Closed => break,
                 }
@@ -386,7 +491,7 @@ mod tests {
             fpga_ms: 0.2,
             staging: None,
         };
-        let mut slab = ReplySlab::new(3);
+        let mut slab = ReplySlab::new();
         scatter(vec![req], Ok(result), 0, 3, &mut slab);
         let reply = rx.recv().unwrap().unwrap();
         assert_eq!(reply.argmax, 1);
@@ -411,7 +516,7 @@ mod tests {
             fpga_ms: 0.2,
             staging: None,
         };
-        let mut slab = ReplySlab::new(2);
+        let mut slab = ReplySlab::new();
         scatter(vec![mk(0, tx1), mk(1, tx2)], Ok(result), 0, 2, &mut slab);
         let a = rx1.recv().unwrap().unwrap();
         let b = rx2.recv().unwrap().unwrap();
@@ -424,7 +529,7 @@ mod tests {
 
     #[test]
     fn reply_slab_recycles_released_slots() {
-        let mut slab = ReplySlab::new(4);
+        let mut slab = ReplySlab::new();
         let a = slab.take(&[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(slab.len(), 1);
         let a_ptr = Arc::as_ptr(&a);
@@ -445,7 +550,7 @@ mod tests {
 
     #[test]
     fn reply_slab_caps_retention() {
-        let mut slab = ReplySlab::new(1);
+        let mut slab = ReplySlab::new();
         let held: Vec<Arc<[f32]>> =
             (0..SLAB_CAP + 10).map(|i| slab.take(&[i as f32])).collect();
         assert_eq!(slab.len(), SLAB_CAP, "retention bounded");
@@ -453,6 +558,106 @@ mod tests {
         for (i, h) in held.iter().enumerate() {
             assert_eq!(h[0], i as f32);
         }
+    }
+
+    #[test]
+    fn reply_slab_bounded_when_callers_clone_replies() {
+        // The regression the hardening pass pins: a caller that clones
+        // its reply Arc pins the slot (Arc::get_mut can never reclaim
+        // it).  The slab must stay bounded anyway — at capacity it
+        // evicts pinned slots round-robin — and the cloned replies
+        // must keep their values untouched.
+        let mut slab = ReplySlab::new();
+        let mut clones = Vec::new();
+        for i in 0..(SLAB_CAP * 2) {
+            let reply = slab.take(&[i as f32, -(i as f32)]);
+            clones.push(reply.clone());
+            drop(reply); // the Reply is gone; the clone lives on
+            assert!(slab.len() <= SLAB_CAP, "slab grew past its cap");
+        }
+        assert_eq!(slab.len(), SLAB_CAP);
+        for (i, c) in clones.iter().enumerate() {
+            assert_eq!(&c[..], &[i as f32, -(i as f32)], "clone {i} mutated");
+        }
+        // Once the clones drop, recycling resumes without growth.
+        drop(clones);
+        let a = slab.take(&[7.0, 8.0]);
+        let a_ptr = Arc::as_ptr(&a);
+        drop(a);
+        let b = slab.take(&[9.0, 10.0]);
+        assert_eq!(Arc::as_ptr(&b), a_ptr, "released slot reused");
+        assert_eq!(slab.len(), SLAB_CAP);
+    }
+
+    #[test]
+    fn reply_slab_grab_fill_put_back_roundtrip() {
+        // The out-of-lock gather protocol: grab detaches a free slot
+        // (unique ownership, fillable without the slab lock),
+        // put_back re-retains it under the same caps.
+        let mut slab = ReplySlab::new();
+        assert!(slab.grab(4).is_none(), "empty slab has nothing to grab");
+        let seeded = slab.take(&[0.0; 4]);
+        drop(seeded);
+        let mut buf = slab.grab(4).expect("free slot grabbed");
+        assert!(slab.is_empty(), "grab detaches the slot");
+        Arc::get_mut(&mut buf)
+            .expect("grabbed buffer is unique")
+            .copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        slab.put_back(&buf);
+        assert_eq!(slab.len(), 1);
+        assert_eq!(&buf[..], &[1.0, 2.0, 3.0, 4.0]);
+        // While the gathered reply is alive its slot is pinned...
+        assert!(slab.grab(4).is_none());
+        // ...and released it recycles again.
+        drop(buf);
+        assert!(slab.grab(4).is_some());
+    }
+
+    #[test]
+    fn reply_slab_bounds_retained_bytes_for_big_buffers() {
+        // Image-sized buffers (the sharded dispatch slab) must not let
+        // the slot-count cap translate into hundreds of MB: retention
+        // is also bounded by SLAB_CAP_FLOATS, and takes beyond the
+        // budget degrade to plain allocation.
+        let mut slab = ReplySlab::new();
+        let big = SLAB_CAP_FLOATS / 4 + 1; // 4 of these overflow it
+        let held: Vec<Arc<[f32]>> = (0..8)
+            .map(|_| slab.take_with(big, |b| b.fill(1.0)))
+            .collect();
+        let retained: usize = slab.slots.iter().map(|s| s.len()).sum();
+        assert!(retained <= SLAB_CAP_FLOATS, "retained {retained} floats");
+        assert!(slab.len() <= 3);
+        drop(held);
+        // Within budget, the big slots still recycle.
+        let a = slab.take_with(big, |b| b.fill(2.0));
+        let a_ptr = Arc::as_ptr(&a);
+        drop(a);
+        let b = slab.take_with(big, |b| b.fill(3.0));
+        assert_eq!(Arc::as_ptr(&b), a_ptr, "big slot recycled");
+    }
+
+    #[test]
+    fn reply_slab_recycles_by_length() {
+        // Per-request (classes) slots and batch gather (batch*classes)
+        // slots coexist; recycling matches on exact length.
+        let mut slab = ReplySlab::new();
+        let small = slab.take(&[1.0, 2.0]);
+        let big = slab.take_with(4, |buf| {
+            buf.copy_from_slice(&[5.0, 6.0, 7.0, 8.0])
+        });
+        assert_eq!(slab.len(), 2);
+        assert_eq!(&big[..], &[5.0, 6.0, 7.0, 8.0]);
+        let (small_ptr, big_ptr) = (Arc::as_ptr(&small), Arc::as_ptr(&big));
+        drop(small);
+        drop(big);
+        // A 2-float take must land in the 2-float slot, not the free
+        // 4-float one.
+        let small2 = slab.take(&[3.0, 4.0]);
+        assert_eq!(Arc::as_ptr(&small2), small_ptr);
+        let big2 = slab.take_with(4, |buf| buf.fill(9.0));
+        assert_eq!(Arc::as_ptr(&big2), big_ptr);
+        assert_eq!(&big2[..], &[9.0; 4]);
+        assert_eq!(slab.len(), 2, "no growth across mixed lengths");
     }
 
     #[test]

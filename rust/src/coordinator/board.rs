@@ -223,12 +223,15 @@ fn worker(
                 )
                 .time_ms()
             });
-        if spec.pace == Pace::Fpga
-            && fpga_ms / 1e3 > t0.elapsed().as_secs_f64()
-        {
-            std::thread::sleep(
-                Duration::from_secs_f64(fpga_ms / 1e3) - t0.elapsed(),
-            );
+        if spec.pace == Pace::Fpga {
+            // checked_sub, not compare-then-subtract: the elapsed time
+            // can race past the target between two `elapsed()` calls,
+            // and a bare `Duration - Duration` would panic the board
+            // worker (coordinator hardening pass).
+            let target = Duration::from_secs_f64(fpga_ms / 1e3);
+            if let Some(remaining) = target.checked_sub(t0.elapsed()) {
+                std::thread::sleep(remaining);
+            }
         }
         let staging = job.input.into_staging();
         let result = out.map(|logits| BatchResult {

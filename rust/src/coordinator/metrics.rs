@@ -51,7 +51,10 @@ impl LatencyHistogram {
     pub fn record_us(&mut self, us: u64) {
         self.buckets[Self::bucket_of(us)] += 1;
         self.count += 1;
-        self.sum_us += us;
+        // Saturating: one absurd sample (a clock jump, `f64::INFINITY`
+        // latency cast to u64::MAX) must not wrap the running sum and
+        // corrupt every later mean (coordinator hardening pass).
+        self.sum_us = self.sum_us.saturating_add(us);
         self.max_us = self.max_us.max(us);
         self.min_us = self.min_us.min(us);
     }
@@ -110,7 +113,7 @@ impl LatencyHistogram {
             *a += b;
         }
         self.count += other.count;
-        self.sum_us += other.sum_us;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
         self.max_us = self.max_us.max(other.max_us);
         self.min_us = self.min_us.min(other.min_us);
     }
@@ -213,5 +216,31 @@ mod tests {
         h.record_us(u64::MAX / 2);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_ms(0.5) > 0.0);
+    }
+
+    #[test]
+    fn pathological_samples_never_wrap_the_sum() {
+        // Two near-u64::MAX samples (an infinite latency cast
+        // saturates to u64::MAX) would wrap a plain `+=` sum; the
+        // saturating form keeps mean/max monotone and finite.
+        let mut h = LatencyHistogram::new();
+        h.record_ms(f64::INFINITY);
+        h.record_us(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.mean_ms() > 0.0);
+        assert!(h.mean_ms() <= h.max_ms());
+        // NaN degrades to a zero sample instead of poisoning the sums.
+        let mut h = LatencyHistogram::new();
+        h.record_ms(f64::NAN);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean_ms(), 0.0);
+        // Merging saturated histograms saturates too.
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_us(u64::MAX);
+        b.record_us(u64::MAX);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.mean_ms() > 0.0);
     }
 }

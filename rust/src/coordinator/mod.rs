@@ -34,4 +34,6 @@ pub use batcher::{
 pub use board::{BatchInput, BatchResult, BoardHandle, BoardSpec, Pace};
 pub use metrics::{LatencyHistogram, LatencySummary};
 pub use router::{Policy, Router, StealPool};
-pub use service::{InferenceService, PendingReply, ServeReport};
+pub use service::{
+    InferenceService, PendingBatch, PendingReply, ServeReport,
+};

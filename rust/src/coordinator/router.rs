@@ -127,17 +127,37 @@ impl StealPool {
         }
     }
 
+    /// Pop for `board`: own deque first, else steal the oldest request
+    /// from the most loaded peer.
+    ///
+    /// Victim selection and the pop happen under the caller's single
+    /// lock acquisition (`st` borrows the locked state), so the victim
+    /// cannot drain between being chosen and being popped — there is
+    /// no `lock → len → relock` window.  Depth ties break toward the
+    /// peer whose *head* request is oldest (so a tie still steals the
+    /// globally oldest queued work), then toward the lowest board
+    /// index (deterministic under equal-age heads).
     fn take(st: &mut PoolState, board: usize) -> Option<Request> {
         if let Some(r) = st.queues[board].pop_front() {
             return Some(r);
         }
-        // Idle: steal the oldest request from the most loaded peer.
         let victim = st
             .queues
             .iter()
             .enumerate()
             .filter(|(i, q)| *i != board && !q.is_empty())
-            .max_by_key(|(_, q)| q.len())
+            .max_by(|(ia, qa), (ib, qb)| {
+                qa.len()
+                    .cmp(&qb.len())
+                    .then_with(|| {
+                        // Older head (earlier submit) ranks higher.
+                        let fa = qa.front().unwrap().submitted;
+                        let fb = qb.front().unwrap().submitted;
+                        fb.cmp(&fa)
+                    })
+                    // Lower index ranks higher on a full tie.
+                    .then_with(|| ib.cmp(ia))
+            })
             .map(|(i, _)| i)?;
         st.queues[victim].pop_front()
     }
@@ -187,8 +207,13 @@ impl StealPool {
             if now >= deadline {
                 return Popped::TimedOut;
             }
-            let (guard, _) =
-                self.cv.wait_timeout(st, deadline - now).unwrap();
+            // Saturating by construction: even a deadline that races
+            // past between the check and the subtraction cannot panic
+            // the batcher thread (the coordinator hardening pass).
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, deadline.saturating_duration_since(now))
+                .unwrap();
             st = guard;
         }
     }
@@ -288,7 +313,21 @@ impl Router {
     /// Route a request (blocking if the board queue is full); the
     /// returned guard must live until the reply resolves.
     pub fn route(&self, req: Request) -> Result<RouterGuard> {
-        let idx = self.pick();
+        self.route_to(self.pick(), req)
+    }
+
+    /// Route a request to an explicit board — the shard dispatch path
+    /// (`InferenceService::submit_batch` pins each shard to a distinct
+    /// board).  Blocking like [`Router::route`]; under work stealing
+    /// the pinned board is only an affinity, idle peers may still
+    /// steal.
+    pub fn route_to(&self, idx: usize, req: Request) -> Result<RouterGuard> {
+        if idx >= self.boards() {
+            return Err(anyhow::anyhow!(
+                "board {idx} out of range ({} boards)",
+                self.boards()
+            ));
+        }
         let counter = self.outstanding[idx].clone();
         counter.fetch_add(1, Ordering::Relaxed);
         let sent = match &self.backend {
@@ -300,6 +339,15 @@ impl Router {
             return Err(anyhow::anyhow!("board {idx} queue closed"));
         }
         Ok(RouterGuard { counter })
+    }
+
+    /// The `k` least-loaded board indices (stable: ties keep index
+    /// order) — the distinct targets a sharded batch fans out to.
+    pub fn least_loaded(&self, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.boards()).collect();
+        idx.sort_by_key(|&i| self.outstanding[i].load(Ordering::Relaxed));
+        idx.truncate(k.max(1));
+        idx
     }
 
     /// Non-blocking admission: rejects immediately on a full queue.
@@ -492,6 +540,102 @@ mod tests {
         // All 16 drained by the idle board, oldest first.
         assert_eq!(got, (0..16).collect::<Vec<u64>>());
         assert_eq!(pool.queued(0), 0);
+    }
+
+    #[test]
+    fn steal_tie_break_prefers_oldest_head_then_lowest_index() {
+        // Boards 1 and 2 hold equal queue depths; board 2's head was
+        // submitted first.  The idle board 0 must steal the globally
+        // oldest request, not whichever queue the iterator saw last.
+        let pool = StealPool::new(3, 8);
+        let older = dummy_request(20);
+        std::thread::sleep(Duration::from_millis(2));
+        let younger = dummy_request(21);
+        pool.try_push(2, older).map_err(|_| ()).unwrap();
+        pool.try_push(1, younger).map_err(|_| ()).unwrap();
+        let stolen = pool.try_pop(0).unwrap();
+        assert_eq!(stolen.id, 20, "tie must steal the oldest head");
+
+        // Exact tie (same head age is impossible to construct reliably,
+        // so pin the index rule directly): deeper queue still wins.
+        let pool = StealPool::new(3, 8);
+        pool.try_push(1, dummy_request(30)).map_err(|_| ()).unwrap();
+        pool.try_push(2, dummy_request(31)).map_err(|_| ()).unwrap();
+        pool.try_push(2, dummy_request(32)).map_err(|_| ()).unwrap();
+        assert_eq!(pool.try_pop(0).unwrap().id, 31, "depth beats age");
+    }
+
+    #[test]
+    fn steal_pop_race_delivers_every_request_exactly_once() {
+        // Hammer the selection/pop path: 4 consumer threads stealing
+        // from each other while a producer floods one board.  The
+        // single-lock take() must deliver each request exactly once —
+        // no duplicates (a double pop), no losses (a victim drained
+        // between selection and pop).
+        use std::sync::Mutex;
+        let pool = StealPool::new(4, 1024);
+        let total: u64 = 400;
+        let got: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for board in 0..4usize {
+                let pool = &pool;
+                let got = &got;
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    while let Some(r) = pool.pop(board) {
+                        local.push(r.id);
+                    }
+                    got.lock().unwrap().extend(local);
+                });
+            }
+            // All requests target board 0; boards 1-3 only ever steal.
+            for i in 0..total {
+                pool.push(0, dummy_request(i)).map_err(|_| ()).unwrap();
+            }
+            pool.close();
+        });
+        let mut ids = got.into_inner().unwrap();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..total).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn route_to_pins_a_board_and_checks_range() {
+        let pool = StealPool::new(3, 8);
+        let router = Router::stealing(pool.clone());
+        let _g = router.route_to(2, dummy_request(0)).unwrap();
+        assert_eq!(pool.queued(2), 1);
+        assert_eq!(router.outstanding_of(2), 1);
+        assert!(router.route_to(3, dummy_request(1)).is_err());
+    }
+
+    #[test]
+    fn least_loaded_orders_by_outstanding() {
+        let (t1, _r1) = mpsc::sync_channel(8);
+        let (t2, _r2) = mpsc::sync_channel(8);
+        let (t3, _r3) = mpsc::sync_channel(8);
+        let router = Router::new(vec![t1, t2, t3], Policy::LeastOutstanding);
+        let _g = router.route_to(0, dummy_request(0)).unwrap();
+        let _h = router.route_to(0, dummy_request(1)).unwrap();
+        let _i = router.route_to(2, dummy_request(2)).unwrap();
+        assert_eq!(router.least_loaded(2), vec![1, 2]);
+        assert_eq!(router.least_loaded(9), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn pop_timeout_zero_duration_never_panics() {
+        // A flush deadline that already passed (max_wait_ms: 0) must
+        // time out cleanly, not underflow.
+        let pool = StealPool::new(1, 4);
+        match pool.pop_timeout(0, Duration::ZERO) {
+            Popped::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+        pool.try_push(0, dummy_request(5)).map_err(|_| ()).unwrap();
+        match pool.pop_timeout(0, Duration::ZERO) {
+            Popped::Req(r) => assert_eq!(r.id, 5),
+            _ => panic!("queued work must still pop at a zero deadline"),
+        }
     }
 
     #[test]

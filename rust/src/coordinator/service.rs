@@ -3,29 +3,36 @@
 //! This is the system a downstream user embeds: build a
 //! [`crate::plan::Plan`] and call `Deployment::serve()` (which lands
 //! in [`InferenceService::from_plan`]), then [`classify`] per image
-//! (or [`submit`] for pipelined submission), or replay a whole
-//! workload trace with [`run_trace`] (the E4 end-to-end experiment).
-//! Pure std threads.  The historical
+//! (or [`submit`] for pipelined submission), [`classify_batch`] for a
+//! whole batch — sharded across boards under
+//! [`ShardPolicy::SplitOver`] so one large batch keeps every board
+//! busy instead of parking on one — or replay a whole workload trace
+//! with [`run_trace`] (the E4 end-to-end experiment).  Pure std
+//! threads.  The historical
 //! `InferenceService::start(cfg, pace, policy)` loose-argument entry
 //! remains as a deprecated shim over the plan path.
 //!
 //! [`classify`]: InferenceService::classify
 //! [`submit`]: InferenceService::submit
+//! [`classify_batch`]: InferenceService::classify_batch
 //! [`run_trace`]: InferenceService::run_trace
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
-use super::batcher::{run_batcher, BatcherConfig, Reply, Request, RequestSource};
+use super::batcher::{
+    argmax, run_batcher, BatcherConfig, Reply, ReplySlab, Request,
+    RequestSource,
+};
 use super::board::{BoardHandle, BoardSpec, Pace};
 use super::metrics::{LatencyHistogram, LatencySummary};
 use super::router::{Policy, Router, RouterGuard, StealPool};
-use crate::config::RunConfig;
+use crate::config::{RunConfig, ShardPolicy};
 use crate::data::TraceRequest;
 use crate::models;
 use crate::plan::Plan;
@@ -81,11 +88,115 @@ impl PendingReply {
     }
 }
 
+/// A pending sharded batch: the per-image replies of every shard plus
+/// the gather slab that assembles them into one [`Reply`] (see
+/// [`InferenceService::submit_batch`]).
+pub struct PendingBatch {
+    parts: Vec<PendingReply>,
+    batch: usize,
+    classes: usize,
+    shards: usize,
+    submitted: Instant,
+    slab: Arc<Mutex<ReplySlab>>,
+}
+
+impl PendingBatch {
+    /// Images in the batch.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Shards the batch was actually split into — after clamping to
+    /// the board count and the batch size, and after the ceil-split
+    /// (5 images over `SplitOver(4)` dispatch as 2+2+1, three shards).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Block until every shard resolves and gather the per-image
+    /// logits into one reply **in submission order** — regardless of
+    /// which board (or work-stealing thief) served each shard.  The
+    /// gather buffer (`batch * classes` floats) is drawn from the
+    /// service's reply slab, so the steady state allocates nothing.
+    ///
+    /// The gathered [`Reply`] reports `batch` = the full batch,
+    /// `argmax` of the *first* image (slice `logits` per `classes`
+    /// for the rest), `board` of the first shard, and `host_ms` /
+    /// `fpga_ms` of the *busiest board*: each image contributes its
+    /// per-image share of its executed chunk's time, shares sum per
+    /// board (a 16-image shard that ran as two 8-image chunks counts
+    /// both), and the slowest board bounds the concurrent batch.
+    pub fn wait(self) -> Result<Reply> {
+        let mut replies = Vec::with_capacity(self.parts.len());
+        for p in self.parts {
+            replies.push(p.wait()?);
+        }
+        let first = replies
+            .first()
+            .ok_or_else(|| anyhow!("empty batch reply"))?;
+        let (id, board) = (first.id, first.board);
+        let mut per_board: HashMap<usize, (f64, f64)> = HashMap::new();
+        for r in &replies {
+            let share = r.batch.max(1) as f64;
+            let e = per_board.entry(r.board).or_insert((0.0, 0.0));
+            e.0 += r.host_ms / share;
+            e.1 += r.fpga_ms / share;
+        }
+        let host_ms =
+            per_board.values().fold(0.0f64, |acc, v| acc.max(v.0));
+        let fpga_ms =
+            per_board.values().fold(0.0f64, |acc, v| acc.max(v.1));
+        let classes = self.classes;
+        // Grab a recycled gather buffer under a short lock, run the
+        // O(batch * classes) gather copy UNLOCKED (concurrent batch
+        // gathers interleave instead of serializing), then re-retain
+        // the slot.
+        let mut buf: Arc<[f32]> = {
+            let grabbed =
+                self.slab.lock().unwrap().grab(self.batch * classes);
+            grabbed
+                .unwrap_or_else(|| vec![0.0f32; self.batch * classes].into())
+        };
+        {
+            let dst = Arc::get_mut(&mut buf)
+                .expect("grabbed gather buffer is uniquely owned");
+            for (i, r) in replies.iter().enumerate() {
+                dst[i * classes..(i + 1) * classes]
+                    .copy_from_slice(&r.logits);
+            }
+        }
+        self.slab.lock().unwrap().put_back(&buf);
+        let logits = buf;
+        let argmax = argmax(&logits[..classes]);
+        Ok(Reply {
+            id,
+            logits,
+            argmax,
+            batch: self.batch,
+            board,
+            host_ms,
+            fpga_ms,
+            latency_ms: self.submitted.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
 /// The running service.
 pub struct InferenceService {
     router: Router,
     image_numel: usize,
+    /// Logits per image (the model's class count).
+    classes: usize,
+    /// Multi-board placement of one incoming batch
+    /// ([`InferenceService::submit_batch`]).
+    shard: ShardPolicy,
     next_id: AtomicU64,
+    /// Recycled per-image request buffers for sharded batch dispatch
+    /// (steady state splits a batch without allocating).
+    image_slab: Mutex<ReplySlab>,
+    /// Recycled gather buffers for batch replies; shared with every
+    /// in-flight [`PendingBatch`] so the gather side recycles too.
+    gather_slab: Arc<Mutex<ReplySlab>>,
     /// The shared pool under `Policy::WorkStealing` (closed on drop so
     /// the batcher threads exit; channel batchers exit when their
     /// queue senders drop with the router).
@@ -108,6 +219,10 @@ impl InferenceService {
     /// signature threaded separately: design point (incl. precision),
     /// overlap policy, board pacing, routing policy and serving knobs.
     pub fn from_plan(plan: &Plan) -> Result<Self> {
+        // Serving consistency first (boards provisioned, shard policy
+        // within them): a bad plan fails with a named-field error
+        // before any engine spawns — and never panics in the router.
+        plan.validate_deploy()?;
         let model = models::by_name(&plan.model)
             .ok_or_else(|| anyhow!("unknown model {:?}", plan.model))?;
         let device = plan.device_profile()?;
@@ -154,7 +269,7 @@ impl InferenceService {
         let warm: Vec<String> =
             sizes.iter().map(|b| by_batch[b].clone()).collect();
 
-        let board_count = plan.serving.boards.max(1);
+        let board_count = plan.serving.boards;
         let steal_pool = (policy == Policy::WorkStealing)
             .then(|| StealPool::new(board_count, plan.serving.queue_depth));
         let mut queues = Vec::new();
@@ -213,7 +328,11 @@ impl InferenceService {
         Ok(InferenceService {
             router,
             image_numel,
+            classes,
+            shard: plan.serving.shard,
             next_id: AtomicU64::new(0),
+            image_slab: Mutex::new(ReplySlab::new()),
+            gather_slab: Arc::new(Mutex::new(ReplySlab::new())),
             steal_pool,
             _boards: boards,
         })
@@ -268,6 +387,85 @@ impl InferenceService {
     /// Submit one image and block for its classification.
     pub fn classify(&self, image: impl Into<Arc<[f32]>>) -> Result<Reply> {
         self.submit(image)?.wait()
+    }
+
+    /// Submit one multi-image batch (flat NCHW, `B * image_numel`
+    /// floats) without blocking for the result.
+    ///
+    /// Under [`ShardPolicy::SplitOver`] the batch is split into up to
+    /// `k` contiguous shards of `ceil(B / k)` images; each shard is
+    /// pinned to a distinct least-loaded board and its images travel
+    /// through the normal router/batcher machinery (work stealing may
+    /// still rebalance a shard off a slow board).  Under
+    /// [`ShardPolicy::None`] the whole batch lands on one board — the
+    /// unsharded baseline.  Per-image request buffers come from a
+    /// recycled slab, so steady-state dispatch allocates nothing;
+    /// [`PendingBatch::wait`] gathers the logits back **in submission
+    /// order** into one [`Reply`].
+    pub fn submit_batch(
+        &self,
+        batch: impl Into<Arc<[f32]>>,
+    ) -> Result<PendingBatch> {
+        let flat: Arc<[f32]> = batch.into();
+        if flat.is_empty() || flat.len() % self.image_numel != 0 {
+            return Err(anyhow!(
+                "batch has {} elements, expected a positive multiple \
+                 of the image size {}",
+                flat.len(),
+                self.image_numel
+            ));
+        }
+        let images = flat.len() / self.image_numel;
+        let want = self.shard.max_shards().min(self.router.boards());
+        // The same clamp/ceil-split the simulator and DSE charge (a
+        // 5-image batch over SplitOver(4) dispatches 2+2+1 on THREE
+        // boards) — one shared rule, so predicted and dispatched
+        // shard counts can never drift.
+        let (per_shard, shards) =
+            crate::fpga::pipeline::shard_split(images, want);
+        let targets = self.router.least_loaded(shards);
+        let submitted = Instant::now();
+
+        // Per-image request buffers from the recycled slab: the copy
+        // out of the flat batch is the dispatch cost the simulator's
+        // per-shard overhead term models.  One short lock per take —
+        // concurrent batch dispatchers interleave their copies
+        // instead of serializing behind one long critical section.
+        let slices: Vec<Arc<[f32]>> = (0..images)
+            .map(|i| {
+                self.image_slab.lock().unwrap().take(
+                    &flat[i * self.image_numel..(i + 1) * self.image_numel],
+                )
+            })
+            .collect();
+        let mut parts = Vec::with_capacity(images);
+        for (i, image) in slices.into_iter().enumerate() {
+            let board = targets[(i / per_shard).min(targets.len() - 1)];
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let (tx, rx) = mpsc::sync_channel(1);
+            let guard = self.router.route_to(
+                board,
+                Request { id, image, submitted, reply: tx },
+            )?;
+            parts.push(PendingReply { rx, _guard: guard });
+        }
+        Ok(PendingBatch {
+            parts,
+            batch: images,
+            classes: self.classes,
+            shards,
+            submitted,
+            slab: self.gather_slab.clone(),
+        })
+    }
+
+    /// Submit a batch and block for the gathered reply (see
+    /// [`InferenceService::submit_batch`]).
+    pub fn classify_batch(
+        &self,
+        batch: impl Into<Arc<[f32]>>,
+    ) -> Result<Reply> {
+        self.submit_batch(batch)?.wait()
     }
 
     /// Replay an arrival trace open-loop; returns the aggregate report.
@@ -442,6 +640,92 @@ mod tests {
         let Some(mut cfg) = cfg_or_skip() else { return };
         cfg.conv_impl = "nonexistent".into();
         assert!(serve(&cfg, Pace::None, Policy::RoundRobin).is_err());
+    }
+
+    #[test]
+    fn shard_policy_validated_before_engines_spawn() {
+        // No artifacts needed: the named-field serving check runs
+        // before the manifest loads.
+        let mut cfg = RunConfig::default();
+        cfg.serving.boards = 2;
+        let mut plan =
+            Plan::from_run_config(&cfg, Pace::None, Policy::RoundRobin)
+                .unwrap();
+        plan.serving.shard = ShardPolicy::SplitOver(4);
+        let err =
+            InferenceService::from_plan(&plan).unwrap_err().to_string();
+        assert!(err.contains("serving.boards"), "{err}");
+        plan.serving.boards = 0;
+        plan.serving.shard = ShardPolicy::None;
+        let err =
+            InferenceService::from_plan(&plan).unwrap_err().to_string();
+        assert!(err.contains("serving.boards = 0"), "{err}");
+    }
+
+    #[test]
+    fn sharded_batch_splits_across_boards_and_gathers_in_order() {
+        let Some(mut cfg) = cfg_or_skip() else { return };
+        cfg.serving.boards = 2;
+        cfg.serving.shard = ShardPolicy::SplitOver(2);
+        let svc =
+            serve(&cfg, Pace::None, Policy::LeastOutstanding).unwrap();
+        // Six distinct images as one flat batch.
+        let n = 6usize;
+        let numel = 3 * 16 * 16;
+        let mut flat = Vec::with_capacity(n * numel);
+        for i in 0..n {
+            flat.extend_from_slice(&data::synth_images(
+                1,
+                (3, 16, 16),
+                40 + i as u64,
+            ));
+        }
+        let pending = svc.submit_batch(flat).unwrap();
+        assert_eq!(pending.batch(), n);
+        assert_eq!(pending.shards(), 2);
+        let reply = pending.wait().unwrap();
+        assert_eq!(reply.batch, n);
+        assert_eq!(reply.logits.len(), n * 10);
+        // Row i of the gather must be image i's logits (same numerics
+        // tolerance as the batching-invariance test).
+        for i in 0..n {
+            let solo = svc
+                .classify(data::synth_images(1, (3, 16, 16), 40 + i as u64))
+                .unwrap();
+            for (a, b) in solo
+                .logits
+                .iter()
+                .zip(&reply.logits[i * 10..(i + 1) * 10])
+            {
+                assert!((a - b).abs() < 1e-4, "image {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_batch_rejects_ragged_input() {
+        let Some(cfg) = cfg_or_skip() else { return };
+        let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
+        assert!(svc.classify_batch(vec![0.0f32; 7]).is_err());
+        assert!(svc.classify_batch(Vec::<f32>::new()).is_err());
+    }
+
+    #[test]
+    fn zero_batch_window_serves_without_panicking() {
+        // max_wait_ms: 0 makes every flush deadline already-expired
+        // when the batcher wakes — the saturating wait must serve the
+        // burst, not panic on an Instant underflow.
+        let Some(mut cfg) = cfg_or_skip() else { return };
+        cfg.serving.max_wait_ms = 0;
+        let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
+        let trace = data::burst_trace(8);
+        let report = svc.run_trace(
+            &trace,
+            |id| data::synth_images(1, (3, 16, 16), id),
+            0.0,
+        );
+        assert_eq!(report.requests, 8);
+        assert_eq!(report.errors, 0);
     }
 
     #[test]

@@ -21,13 +21,17 @@
 //!   its closed-form fast path, or the O(tokens) exact oracle
 //!   ([`Fidelity`]); `BENCH_dse.json` tracks the fast-vs-exact sweep
 //!   speedup across PRs.
-//! - **overlap × depth × precision dimensions** — now that point
-//!   evaluation is cheap and parallel, [`explore_space`] folds
+//! - **overlap × depth × precision × shards dimensions** — now that
+//!   point evaluation is cheap and parallel, [`explore_space`] folds
 //!   `channel_depth`, `OverlapPolicy` (on = `Full` cross-group
-//!   pipelining, off = `WithinGroup`) and [`Precision`] into the grid;
-//!   deeper channels buy overlap headroom but spend M20K, and fixed
-//!   point packs 2–4 MACs per DSP while shrinking the DDR streams —
-//!   both charged through the same resource/timing models.
+//!   pipelining, off = `WithinGroup`), [`Precision`] and the
+//!   multi-board batch shard count into the grid; deeper channels buy
+//!   overlap headroom but spend M20K, fixed point packs 2–4 MACs per
+//!   DSP while shrinking the DDR streams, and sharding trades the
+//!   per-shard `ceil(batch / k)` sub-batch against a host
+//!   dispatch+gather overhead — all charged through the same
+//!   resource/timing models, so the sweep finds the serving
+//!   `ShardPolicy` break-even per (model, batch).
 //!
 //! The canonical entry is `plan::Deployment::sweep` (one call over the
 //! plan's [`SweepSpace`]); [`explore_space`] is the underlying
@@ -48,11 +52,22 @@ use crate::models::Model;
 pub struct DesignPoint {
     pub params: DesignParams,
     pub overlap: OverlapPolicy,
+    /// Boards the batch was *actually* sharded over when timing this
+    /// point — the swept `ShardPolicy` dimension after the same
+    /// clamp/ceil-split the serving dispatch applies (a swept 8 at
+    /// batch 2 records as 2; 1 = unsharded), so `Plan::adopt` never
+    /// over-provisions boards the dispatch cannot use.  Resource
+    /// usage is per board — every shard replicates the same design —
+    /// while `gops_per_dsp` divides by the whole fleet's DSPs, so the
+    /// density metric stays comparable across shard counts.
+    pub shards: usize,
     pub usage: ResourceUsage,
     pub feasible: bool,
     /// Per-image latency; `f64::INFINITY` for pruned infeasible points.
     pub time_ms: f64,
+    /// Fleet-aggregate achieved throughput (all shards together).
     pub gops: f64,
+    /// `gops` over the DSPs of every board the batch dispatched to.
     pub gops_per_dsp: f64,
 }
 
@@ -77,6 +92,13 @@ pub const LANE_CANDIDATES: [usize; 12] = [1, 2, 3, 4, 6, 8, 11, 16, 22, 32, 48, 
 /// M20K for cross-stage slack (and overlap headroom under `Full`).
 pub const DEPTH_CANDIDATES: [usize; 3] = [128, 512, 2048];
 
+/// Shard-count candidates for the multi-board sweep: how many boards
+/// one serving batch is split across (`ShardPolicy::SplitOver`).
+/// Latency falls with the shard's `ceil(batch / k)` sub-batch but
+/// pays a per-shard dispatch+gather overhead, so the optimum is a
+/// break-even in (model, batch, boards).
+pub const SHARD_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
+
 /// Precision candidates for the extended sweep: the paper's fp32
 /// datapath plus the fixed-point variants the resource model prices
 /// (2 / 4 MACs per DSP, narrower DDR streams).
@@ -93,6 +115,8 @@ pub struct SweepSpace {
     pub depths: Vec<usize>,
     pub overlaps: Vec<OverlapPolicy>,
     pub precisions: Vec<Precision>,
+    /// Batch shard counts (boards per batch); `[1]` = unsharded.
+    pub shards: Vec<usize>,
 }
 
 impl Default for SweepSpace {
@@ -103,6 +127,7 @@ impl Default for SweepSpace {
             depths: vec![DesignParams::new(1, 1).channel_depth],
             overlaps: vec![OverlapPolicy::WithinGroup],
             precisions: vec![Precision::Fp32],
+            shards: vec![1],
         }
     }
 }
@@ -139,23 +164,35 @@ impl SweepSpace {
         }
     }
 
+    /// The multi-board shard axis on the classic `(vec, lane)` grid:
+    /// pick the break-even batch shard count for a (model, batch).
+    pub fn with_shards() -> Self {
+        SweepSpace { shards: SHARD_CANDIDATES.to_vec(), ..Self::default() }
+    }
+
     /// All grid points in deterministic order (vec outer → lane →
-    /// depth → precision → overlap inner; overlap innermost keeps the
-    /// on/off twins adjacent for the bench pairing).
-    fn grid(&self) -> Vec<(usize, usize, usize, Precision, OverlapPolicy)> {
+    /// depth → precision → shards → overlap inner; overlap innermost
+    /// keeps the on/off twins adjacent for the bench pairing).
+    #[allow(clippy::type_complexity)]
+    fn grid(
+        &self,
+    ) -> Vec<(usize, usize, usize, Precision, usize, OverlapPolicy)> {
         let mut out = Vec::with_capacity(
             self.vecs.len()
                 * self.lanes.len()
                 * self.depths.len()
                 * self.precisions.len()
+                * self.shards.len()
                 * self.overlaps.len(),
         );
         for &v in &self.vecs {
             for &l in &self.lanes {
                 for &d in &self.depths {
                     for &prec in &self.precisions {
-                        for &o in &self.overlaps {
-                            out.push((v, l, d, prec, o));
+                        for &k in &self.shards {
+                            for &o in &self.overlaps {
+                                out.push((v, l, d, prec, k, o));
+                            }
                         }
                     }
                 }
@@ -205,6 +242,23 @@ pub fn explore_space(
     fidelity: Fidelity,
     space: &SweepSpace,
 ) -> Vec<DesignPoint> {
+    // Shard candidates reduce to their *effective* splits at this
+    // batch first (order-preserving dedup): swept 4 and 8 both clamp
+    // to 2 effective shards at batch 2, and evaluating the identical
+    // point twice would waste a full oracle run per duplicate under
+    // the exact fidelities.
+    let space = {
+        let mut s = space.clone();
+        let mut seen = Vec::with_capacity(s.shards.len());
+        for &k in &s.shards {
+            let eff = crate::fpga::pipeline::shard_split(batch, k).1;
+            if !seen.contains(&eff) {
+                seen.push(eff);
+            }
+        }
+        s.shards = seen;
+        s
+    };
     let grid = space.grid();
     let ops_per_image = model.total_ops();
 
@@ -216,10 +270,10 @@ pub fn explore_space(
     if workers <= 1 || grid.len() <= 1 {
         return grid
             .iter()
-            .map(|&(v, l, d, prec, o)| {
+            .map(|&(v, l, d, prec, k, o)| {
                 eval_point(
                     model, device, batch, fidelity, ops_per_image, v, l, d,
-                    prec, o,
+                    prec, k, o,
                 )
             })
             .collect();
@@ -237,14 +291,14 @@ pub fn explore_space(
                 let mut local = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    let Some(&(v, l, d, prec, o)) = grid.get(i) else {
+                    let Some(&(v, l, d, prec, k, o)) = grid.get(i) else {
                         break;
                     };
                     local.push((
                         i,
                         eval_point(
                             model, device, batch, fidelity, ops_per_image,
-                            v, l, d, prec, o,
+                            v, l, d, prec, k, o,
                         ),
                     ));
                 }
@@ -270,11 +324,18 @@ fn eval_point(
     lane: usize,
     depth: usize,
     precision: Precision,
+    shards: usize,
     overlap: OverlapPolicy,
 ) -> DesignPoint {
     let mut params = DesignParams::new(vec, lane);
     params.channel_depth = depth;
     params.precision = precision;
+    // Effective split at this batch — the same `shard_split` the
+    // serving dispatch and the simulator use, so a swept `shards = 8`
+    // at batch 2 is recorded (and adopted) as the 2 shards it can
+    // actually dispatch.
+    let (sub_batch, boards_used) =
+        crate::fpga::pipeline::shard_split(batch, shards);
     let usage = resource_usage(&params, device);
     let feasible = usage.fits(device);
     if !feasible {
@@ -283,6 +344,7 @@ fn eval_point(
         return DesignPoint {
             params,
             overlap,
+            shards: boards_used,
             usage,
             feasible,
             time_ms: f64::INFINITY,
@@ -291,14 +353,30 @@ fn eval_point(
         };
     }
     let (time_ms, gops) = match fidelity {
-        Fidelity::Analytic => {
+        Fidelity::Analytic if boards_used <= 1 => {
             let t = simulate_model(model, device, &params, batch, overlap);
             (t.time_per_image_ms(), t.gops())
+        }
+        Fidelity::Analytic => {
+            // Sharded analytic latency mirrors the pipeline-sim shard
+            // mode: the slowest (ceil(batch / k)-image) shard plus the
+            // dispatch+gather overhead of every shard dispatched.
+            let t =
+                simulate_model(model, device, &params, sub_batch, overlap);
+            let batch_ms = t.time_ms()
+                + boards_used as f64
+                    * crate::fpga::pipeline::SHARD_OVERHEAD_US
+                    / 1e3;
+            let gops = ops_per_image as f64 * batch as f64
+                / (batch_ms / 1e3)
+                / 1e9;
+            (batch_ms / batch as f64, gops)
         }
         Fidelity::PipelineFast | Fidelity::PipelineExact => {
             let sim = Simulator::new(model, device, params)
                 .policy(overlap)
                 .exact(fidelity == Fidelity::PipelineExact)
+                .shards(shards)
                 .run(batch);
             let batch_ms = sim.time_ms();
             let gops = ops_per_image as f64 * batch as f64
@@ -310,11 +388,16 @@ fn eval_point(
     DesignPoint {
         params,
         overlap,
+        shards: boards_used,
         usage,
         feasible,
         time_ms,
-        gops,
-        gops_per_dsp: gops / usage.dsps as f64,
+        // `gops` is the fleet-aggregate throughput of the sharded
+        // batch; density charges ALL the silicon serving it — one
+        // replica of the design per dispatched shard — so sharding
+        // can never inflate GOPS/DSP (the dispatch overhead in fact
+        // deflates it slightly below the unsharded twin).
+        gops_per_dsp: gops / (boards_used as f64 * usage.dsps as f64),
     }
 }
 
@@ -370,19 +453,49 @@ pub fn best_density_per_precision(
         .collect()
 }
 
-/// Pareto frontier over (time_ms, dsps): designs where no other
-/// feasible design is both faster and smaller.  Exact (time, dsps)
-/// ties keep only the first point, so the frontier is strictly
-/// monotone: increasing time, decreasing DSPs.
+/// The latency-optimal feasible point for each shard count present in
+/// the sweep, ascending — the break-even table: where latency stops
+/// improving, the dispatch+gather overhead has caught the shrinking
+/// per-shard sub-batch.
+pub fn best_latency_per_shards(
+    points: &[DesignPoint],
+) -> Vec<(usize, &DesignPoint)> {
+    let mut counts: Vec<usize> =
+        points.iter().filter(|p| p.feasible).map(|p| p.shards).collect();
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+        .into_iter()
+        .filter_map(|k| {
+            points
+                .iter()
+                .filter(|p| p.feasible && p.shards == k)
+                .min_by(|a, b| a.time_ms.total_cmp(&b.time_ms))
+                .map(|p| (k, p))
+        })
+        .collect()
+}
+
+/// Pareto frontier over (time_ms, fleet DSPs): designs where no other
+/// feasible design is both faster and smaller.  Silicon is charged
+/// for the whole fleet — `shards` replicas of the per-board usage —
+/// for the same reason `gops_per_dsp` divides by it: a sharded point
+/// is faster *because* it spends k boards, and must not dominate its
+/// unsharded twin for free.  Exact (time, dsps) ties keep only the
+/// first point, so the frontier is strictly monotone: increasing
+/// time, decreasing fleet DSPs.
 pub fn pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
+    let fleet_dsps =
+        |p: &DesignPoint| p.shards.max(1) as u64 * p.usage.dsps as u64;
     let mut frontier: Vec<&DesignPoint> = Vec::new();
     for p in points.iter().filter(|p| p.feasible) {
         let dominated = points.iter().filter(|q| q.feasible).any(|q| {
-            (q.time_ms < p.time_ms && q.usage.dsps <= p.usage.dsps)
-                || (q.time_ms <= p.time_ms && q.usage.dsps < p.usage.dsps)
+            (q.time_ms < p.time_ms && fleet_dsps(q) <= fleet_dsps(p))
+                || (q.time_ms <= p.time_ms
+                    && fleet_dsps(q) < fleet_dsps(p))
         });
-        let duplicate = frontier.iter().any(|f| {
-            f.time_ms == p.time_ms && f.usage.dsps == p.usage.dsps
+        let duplicate = frontier.iter().any(|&f| {
+            f.time_ms == p.time_ms && fleet_dsps(f) == fleet_dsps(p)
         });
         if !dominated && !duplicate {
             frontier.push(p);
@@ -570,11 +683,14 @@ mod tests {
 
     #[test]
     fn overlap_depth_space_covers_grid_in_order() {
-        let space = SweepSpace::with_precision_overlap_and_depth();
+        let mut space = SweepSpace::with_precision_overlap_and_depth();
+        space.shards = vec![1, 4];
+        // Batch 8: both shard candidates survive the effective-split
+        // clamp, so recorded shard counts equal the grid values.
         let pts = explore_space(
             &models::tinynet(),
             &STRATIX10,
-            1,
+            8,
             Fidelity::Analytic,
             &space,
         );
@@ -584,6 +700,7 @@ mod tests {
                 * space.lanes.len()
                 * space.depths.len()
                 * space.precisions.len()
+                * space.shards.len()
                 * space.overlaps.len()
         );
         let mut it = pts.iter();
@@ -591,13 +708,16 @@ mod tests {
             for &l in &space.lanes {
                 for &d in &space.depths {
                     for &prec in &space.precisions {
-                        for &o in &space.overlaps {
-                            let p = it.next().unwrap();
-                            assert_eq!(p.params.vec_size, v);
-                            assert_eq!(p.params.lane_num, l);
-                            assert_eq!(p.params.channel_depth, d);
-                            assert_eq!(p.params.precision, prec);
-                            assert_eq!(p.overlap, o);
+                        for &k in &space.shards {
+                            for &o in &space.overlaps {
+                                let p = it.next().unwrap();
+                                assert_eq!(p.params.vec_size, v);
+                                assert_eq!(p.params.lane_num, l);
+                                assert_eq!(p.params.channel_depth, d);
+                                assert_eq!(p.params.precision, prec);
+                                assert_eq!(p.shards, k);
+                                assert_eq!(p.overlap, o);
+                            }
                         }
                     }
                 }
@@ -661,6 +781,7 @@ mod tests {
                 OverlapPolicy::Full,
             ],
             precisions: vec![Precision::Fp32],
+            shards: vec![1],
         };
         let pts = explore_space(
             &models::alexnet(),
@@ -685,6 +806,97 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn shard_dimension_finds_the_break_even() {
+        // Narrow (vec, lane) so the shard axis is what varies.
+        let space = SweepSpace {
+            vecs: vec![16],
+            lanes: vec![11],
+            shards: vec![1, 4],
+            ..SweepSpace::default()
+        };
+        // Big model, big batch: sharding over 4 boards wins — the
+        // slowest shard runs 16 of 64 images and the dispatch+gather
+        // overhead is µs against ms.
+        let pts = explore_space(
+            &models::alexnet(),
+            &STRATIX10,
+            64,
+            Fidelity::Analytic,
+            &space,
+        );
+        let by_shards = best_latency_per_shards(&pts);
+        assert_eq!(by_shards.len(), 2);
+        assert_eq!((by_shards[0].0, by_shards[1].0), (1, 4));
+        assert!(
+            by_shards[1].1.time_ms < by_shards[0].1.time_ms,
+            "sharded {} >= unsharded {}",
+            by_shards[1].1.time_ms,
+            by_shards[0].1.time_ms
+        );
+        // Sharding must not game the density metric: the fleet's
+        // GOPS/DSP charges every board, so the sharded twin sits
+        // (slightly, by the dispatch overhead) BELOW the unsharded
+        // one — never k-fold above it.
+        assert!(
+            by_shards[1].1.gops_per_dsp < by_shards[0].1.gops_per_dsp,
+            "sharded density {} >= unsharded {}",
+            by_shards[1].1.gops_per_dsp,
+            by_shards[0].1.gops_per_dsp
+        );
+        // Tiny model, tiny batch: the overhead dominates and the
+        // unsharded point wins — the break-even flips.
+        let pts = explore_space(
+            &models::tinynet(),
+            &STRATIX10,
+            2,
+            Fidelity::Analytic,
+            &space,
+        );
+        let by_shards = best_latency_per_shards(&pts);
+        assert!(
+            by_shards[0].1.time_ms < by_shards[1].1.time_ms,
+            "unsharded {} >= sharded {}",
+            by_shards[0].1.time_ms,
+            by_shards[1].1.time_ms
+        );
+        // A swept 4 at batch 2 can only dispatch 2 shards: the point
+        // records the EFFECTIVE count, so an adopted plan never
+        // provisions boards the split cannot use.
+        assert_eq!((by_shards[0].0, by_shards[1].0), (1, 2));
+        assert!(pts.iter().all(|p| p.shards <= 2));
+    }
+
+    #[test]
+    fn shard_sweep_agrees_across_fidelities() {
+        // The analytic shard mode and the pipeline-sim shard mode must
+        // charge the same overhead shape: both strictly faster sharded
+        // at alexnet batch 64.
+        let space = SweepSpace {
+            vecs: vec![16],
+            lanes: vec![11],
+            shards: vec![1, 4],
+            ..SweepSpace::default()
+        };
+        let pts = explore_space(
+            &models::alexnet(),
+            &STRATIX10,
+            64,
+            Fidelity::PipelineFast,
+            &space,
+        );
+        let by_shards = best_latency_per_shards(&pts);
+        assert!(by_shards[1].1.time_ms < by_shards[0].1.time_ms);
+        // Unsharded grid points still report shards = 1.
+        assert!(pts.iter().all(|p| p.shards == 1 || p.shards == 4));
+        // The pareto frontier charges fleet silicon: the sharded point
+        // is faster but 4x the DSPs, so it must NOT dominate its
+        // unsharded twin — both survive (faster/bigger, slower/smaller).
+        let front = pareto(&pts);
+        assert!(front.iter().any(|p| p.shards == 1), "{front:?}");
+        assert!(front.iter().any(|p| p.shards == 4), "{front:?}");
     }
 
     #[test]

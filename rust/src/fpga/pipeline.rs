@@ -92,7 +92,14 @@
 //! default dispatches per group — groups below the transient size run
 //! exact anyway, larger groups take the closed-form fast path unless
 //! `FFCNN_EXACT_SIM=1` forces the oracle everywhere), and call
-//! [`Simulator::run`].  The raw solvers are exposed as
+//! [`Simulator::run`].  [`Simulator::shards`] switches on the
+//! *shard-aware* mode mirroring the serving stack's multi-board batch
+//! sharding (`ShardPolicy::SplitOver`): the predicted batch latency
+//! becomes the pipeline at `ceil(batch / shards)` images — the
+//! slowest shard, all shards running concurrently on their own
+//! boards — plus a per-shard host dispatch+gather overhead term
+//! ([`SHARD_OVERHEAD_US`]), so predicted latency keeps the shape of
+//! the real sharded data plane.  The raw solvers are exposed as
 //! [`Simulator::recurrence`] (one group) and [`Simulator::stream`]
 //! (the concatenated multi-group stream).  The former free-function
 //! entry points (`simulate_tokens*`, `run_recurrence_*`,
@@ -132,6 +139,12 @@ pub struct PipelineSim {
     pub groups: Vec<GroupSim>,
     pub total_cycles: u64,
     pub fmax_mhz: f64,
+    /// Boards the batch was sharded over (see [`Simulator::shards`]).
+    /// For `shards > 1` the groups describe ONE shard's pipeline
+    /// (`ceil(batch / shards)` images) and `total_cycles` additionally
+    /// carries the per-shard dispatch+gather overhead, so group cycles
+    /// no longer sum to the total.
+    pub shards: usize,
 }
 
 impl PipelineSim {
@@ -140,8 +153,31 @@ impl PipelineSim {
     }
 }
 
-/// Overlap policy + fidelity of one [`Simulator`] run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Default host-side dispatch + gather cost the sharded simulator mode
+/// charges per shard, microseconds: one router pick, the per-image
+/// staging copies of the shard, and its slice of the gather memcpy —
+/// tens of µs on the serving host, dwarfed by any multi-image board
+/// time but decisive at tiny batches (the break-even the DSE `shards`
+/// dimension exists to find).
+pub const SHARD_OVERHEAD_US: f64 = 40.0;
+
+/// The ceil-split a batch undergoes under a shard policy: returns
+/// `(sub_batch, shards_used)` — the largest shard's image count and
+/// the number of shards actually dispatched (5 images over a max of 4
+/// split 2+2+1 across THREE shards).  The single source of truth
+/// shared by the serving dispatch (`InferenceService::submit_batch`),
+/// the shard-aware simulator ([`Simulator::run`]) and the DSE, so the
+/// predicted and dispatched shard counts can never drift apart.
+pub fn shard_split(batch: usize, max_shards: usize) -> (usize, usize) {
+    let b = batch.max(1);
+    let want = max_shards.max(1).min(b);
+    let sub = b.div_ceil(want);
+    (sub, b.div_ceil(sub))
+}
+
+/// Overlap policy, fidelity and batch sharding of one [`Simulator`]
+/// run.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimOptions {
     /// How consecutive fused groups share the four kernels.
     pub policy: OverlapPolicy,
@@ -150,11 +186,25 @@ pub struct SimOptions {
     /// closed-form fast path (`FFCNN_EXACT_SIM=1` still forces the
     /// oracle everywhere).
     pub exact: bool,
+    /// Boards one batch is sharded across (1 = the whole batch on one
+    /// board — the plain, bit-identical historical path).  A sharded
+    /// run predicts the *batch latency* of the serving stack's
+    /// `ShardPolicy::SplitOver`: the pipeline simulated at
+    /// `ceil(batch / shards)` images (the slowest shard) plus
+    /// `shard_overhead_us` per shard.
+    pub shards: usize,
+    /// Host dispatch + gather cost charged per shard, microseconds.
+    pub shard_overhead_us: f64,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { policy: OverlapPolicy::WithinGroup, exact: false }
+        SimOptions {
+            policy: OverlapPolicy::WithinGroup,
+            exact: false,
+            shards: 1,
+            shard_overhead_us: SHARD_OVERHEAD_US,
+        }
     }
 }
 
@@ -205,16 +255,55 @@ impl<'a> Simulator<'a> {
         self
     }
 
+    /// Shard the batch over `shards` boards (1 = no sharding; values
+    /// below 1 are clamped).  See [`SimOptions::shards`].
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.opts.shards = shards.max(1);
+        self
+    }
+
+    /// Override the per-shard dispatch+gather overhead (µs).
+    pub fn shard_overhead_us(mut self, us: f64) -> Self {
+        self.opts.shard_overhead_us = us.max(0.0);
+        self
+    }
+
     /// Simulate `batch` images at token granularity.
+    ///
+    /// With `shards > 1` this predicts the sharded batch latency:
+    /// every shard runs the same pipeline concurrently on its own
+    /// board, so the batch completes with the slowest (= largest,
+    /// `ceil(batch / shards)`-image) shard, plus the host's per-shard
+    /// dispatch+gather overhead.  `shards == 1` is bit-identical to
+    /// the historical unsharded simulation.
     pub fn run(&self, batch: usize) -> PipelineSim {
-        simulate_tokens_with(
+        let exact = self.opts.exact || exact_sim_forced();
+        let (sub_batch, shards) = shard_split(batch, self.opts.shards);
+        if shards <= 1 {
+            return simulate_tokens_with(
+                self.model,
+                self.device,
+                &self.params,
+                batch,
+                self.opts.policy,
+                exact,
+            );
+        }
+        let mut sim = simulate_tokens_with(
             self.model,
             self.device,
             &self.params,
-            batch,
+            sub_batch,
             self.opts.policy,
-            self.opts.exact || exact_sim_forced(),
-        )
+            exact,
+        );
+        let overhead_cycles = (self.opts.shard_overhead_us.max(0.0)
+            * self.device.fmax_mhz
+            * shards as f64)
+            .round() as u64;
+        sim.total_cycles += overhead_cycles;
+        sim.shards = shards;
+        sim
     }
 
     /// The closed-form analytic model at the same design point and
@@ -1071,6 +1160,7 @@ fn simulate_tokens_with(
         groups: out,
         total_cycles: total,
         fmax_mhz: device.fmax_mhz,
+        shards: 1,
     }
 }
 
@@ -1400,6 +1490,76 @@ mod tests {
         assert_eq!(contended_finish(0.0, 2.0, 7.0, 1.0), 9.0);
         // Zero-cost read: no bytes, no contention.
         assert_eq!(contended_finish(3.0, 0.0, 7.0, 0.9), 3.0);
+    }
+
+    // ------------------------------------------------ batch sharding
+
+    #[test]
+    fn one_shard_is_bit_equal_to_unsharded() {
+        let p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        for batch in [1usize, 7, 16] {
+            let plain = Simulator::new(&m, &STRATIX10, p).run(batch);
+            let sharded =
+                Simulator::new(&m, &STRATIX10, p).shards(1).run(batch);
+            assert_eq!(plain.total_cycles, sharded.total_cycles);
+            assert_eq!(sharded.shards, 1);
+        }
+    }
+
+    #[test]
+    fn sharding_large_batches_cuts_latency() {
+        // Batch 64 over 4 boards: the slowest shard runs 16 images,
+        // and 4 x 40 µs of dispatch overhead cannot eat a 3/4 saving
+        // of a multi-ms batch.
+        let p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        let whole = Simulator::new(&m, &STRATIX10, p).run(64);
+        let split = Simulator::new(&m, &STRATIX10, p).shards(4).run(64);
+        assert_eq!(split.shards, 4);
+        assert!(
+            split.time_ms() < whole.time_ms(),
+            "sharded {} >= unsharded {}",
+            split.time_ms(),
+            whole.time_ms()
+        );
+        // The shard pipeline is the ceil(64/4)-image run plus the
+        // charged overhead, exactly.
+        let sub = Simulator::new(&m, &STRATIX10, p).run(16);
+        let overhead =
+            (SHARD_OVERHEAD_US * STRATIX10.fmax_mhz * 4.0).round() as u64;
+        assert_eq!(split.total_cycles, sub.total_cycles + overhead);
+    }
+
+    #[test]
+    fn sharding_tiny_batches_loses_to_overhead() {
+        // tinynet at batch 2: each shard saves ~a single-image run but
+        // pays dispatch+gather — the break-even the DSE shard
+        // dimension finds.
+        let p = ffcnn_stratix10_params();
+        let m = models::tinynet();
+        let whole = Simulator::new(&m, &STRATIX10, p).run(2);
+        let split = Simulator::new(&m, &STRATIX10, p).shards(4).run(2);
+        // Clamped to the batch: only 2 shards of 1 image each.
+        assert_eq!(split.shards, 2);
+        assert!(
+            split.time_ms() > whole.time_ms(),
+            "sharded {} <= unsharded {}",
+            split.time_ms(),
+            whole.time_ms()
+        );
+    }
+
+    #[test]
+    fn shard_overhead_override_respected() {
+        let p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        let free = Simulator::new(&m, &STRATIX10, p)
+            .shards(4)
+            .shard_overhead_us(0.0)
+            .run(64);
+        let sub = Simulator::new(&m, &STRATIX10, p).run(16);
+        assert_eq!(free.total_cycles, sub.total_cycles);
     }
 
     #[test]

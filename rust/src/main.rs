@@ -15,7 +15,7 @@ use std::path::PathBuf;
 
 use anyhow::anyhow;
 
-use ffcnn::config::{default_artifacts_dir, ServingConfig};
+use ffcnn::config::{default_artifacts_dir, ServingConfig, ShardPolicy};
 use ffcnn::coordinator::{Pace, Policy};
 use ffcnn::data;
 use ffcnn::fpga::device::DEVICES;
@@ -37,6 +37,8 @@ COMMANDS:
             [--fidelity analytic|pipeline|pipeline-exact]
             [--overlap-sweep]     sweep overlap on/off x channel depth
             [--precision-sweep]   also sweep fp32/fixed16/fixed8
+            [--shard-sweep]       also sweep the batch shard count
+                                  (boards per batch; break-even table)
   layers    [--model alexnet] [--device stratix10] [--batch 1]
   pipeline  [--model alexnet] [--device stratix10] [--batch 1] [--exact]
             [--overlap within_group|full|none]
@@ -44,6 +46,10 @@ COMMANDS:
             [--device stratix10] [--iters 3]
   serve     [--model alexnet] [--device stratix10] [--requests 64]
             [--rate 0] [--boards 1] [--max-batch 8] [--pace-fpga]
+            [--batch-size 1]      serve whole batches of this size
+                                  (classify_batch instead of the trace)
+            [--shards 1]          split each batch over this many boards
+                                  (needs --batch-size > 1)
   devices                                          list device profiles
 
 GLOBAL: --artifacts <dir>   artifact directory (default ./artifacts)
@@ -207,13 +213,18 @@ fn cmd_dse(args: &Args) -> Result<()> {
             ))
         }
     };
-    let space = if args.has("precision-sweep") {
+    let mut space = if args.has("precision-sweep") {
         SweepSpace::with_precision_overlap_and_depth()
     } else if args.has("overlap-sweep") {
         SweepSpace::with_overlap_and_depth()
     } else {
         SweepSpace::default()
     };
+    if args.has("shard-sweep") {
+        // Compose the shard axis onto whatever base space was picked
+        // (`with_shards()` covers the flag-less default).
+        space.shards = SweepSpace::with_shards().shards;
+    }
     let mut plan = Plan::builder()
         .model(&args.get("model", "alexnet"))
         .device(&args.get("device", "stratix10"))
@@ -233,23 +244,62 @@ fn cmd_dse(args: &Args) -> Result<()> {
         sweep.feasible_count()
     );
     println!(
-        "{:<8}{:<8}{:<8}{:<10}{:<14}{:>8}{:>12}{:>10}{:>14}",
-        "vec", "lane", "depth", "prec", "overlap", "DSPs", "time(ms)",
-        "GOPS", "GOPS/DSP"
+        "{:<8}{:<8}{:<8}{:<10}{:<8}{:<14}{:>8}{:>12}{:>10}{:>14}",
+        "vec", "lane", "depth", "prec", "shards", "overlap", "DSPs",
+        "time(ms)", "GOPS", "GOPS/DSP"
     );
     for p in sweep.pareto() {
         println!(
-            "{:<8}{:<8}{:<8}{:<10}{:<14}{:>8}{:>12.2}{:>10.1}{:>14.3}",
+            "{:<8}{:<8}{:<8}{:<10}{:<8}{:<14}{:>8}{:>12.2}{:>10.1}{:>14.3}",
             p.params.vec_size,
             p.params.lane_num,
             p.params.channel_depth,
             format!("{:?}", p.params.precision),
+            p.shards,
             format!("{:?}", p.overlap),
             p.usage.dsps,
             p.time_ms,
             p.gops,
             p.gops_per_dsp
         );
+    }
+    if plan.sweep.shards.len() > 1 {
+        // Candidates collapse to their effective splits at this batch
+        // (a swept 8 at batch 2 can only dispatch 2 shards); be
+        // explicit when the whole axis degenerated rather than
+        // printing a one-row "break-even" table.
+        let mut eff: Vec<usize> = plan
+            .sweep
+            .shards
+            .iter()
+            .map(|&k| ffcnn::fpga::pipeline::shard_split(batch, k).1)
+            .collect();
+        eff.sort_unstable();
+        eff.dedup();
+        if eff.len() > 1 {
+            println!(
+                "\nbest per shard count (batch {batch}; latency falls \
+                 until the per-shard dispatch+gather overhead catches \
+                 the shrinking sub-batch):"
+            );
+            for (k, p) in sweep.best_latency_per_shards() {
+                println!(
+                    "  {k:>2} shard(s): vec={:<3} lane={:<3} -> {:>9.4} \
+                     ms/image ({:>9.3} ms/batch)",
+                    p.params.vec_size,
+                    p.params.lane_num,
+                    p.time_ms,
+                    p.time_ms * batch as f64
+                );
+            }
+        } else {
+            println!(
+                "\nshard sweep collapsed: at batch {batch} every \
+                 candidate in {:?} clamps to {} shard(s) — raise \
+                 --batch to explore the shard axis",
+                plan.sweep.shards, eff[0]
+            );
+        }
     }
     if plan.sweep.precisions.len() > 1 {
         println!("\nbest per precision:");
@@ -295,12 +345,14 @@ fn cmd_dse(args: &Args) -> Result<()> {
         plan.adopt(best);
         println!(
             "plan adopted the latency optimum (design {}x{} depth {} \
-             {:?}, overlap {:?})",
+             {:?}, overlap {:?}, shard policy {:?} over {} board(s))",
             plan.design.vec_size,
             plan.design.lane_num,
             plan.design.channel_depth,
             plan.design.precision,
-            plan.overlap
+            plan.overlap,
+            plan.serving.shard,
+            plan.serving.boards
         );
     }
     Ok(())
@@ -442,9 +494,31 @@ fn cmd_classify(args: &Args, artifacts: PathBuf) -> Result<()> {
 fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
     let requests = args.get_usize("requests", 64)?;
     let rate = args.get_f64("rate", 0.0)?;
+    let shards = args.get_usize("shards", 1)?;
+    let batch_size = args.get_usize("batch-size", 1)?;
+    if batch_size > 1 && rate > 0.0 {
+        return Err(anyhow!(
+            "--rate describes the open-loop single-image trace; \
+             whole-batch serving (--batch-size > 1) is closed-loop — \
+             drop one of the two flags"
+        ));
+    }
+    if shards > 1 && batch_size <= 1 {
+        // Sharding splits *batches*; the single-image trace path never
+        // builds one, so the flag would be silently inert.
+        return Err(anyhow!(
+            "--shards {shards} only applies to whole-batch serving: \
+             add --batch-size <B> (e.g. --batch-size 64)"
+        ));
+    }
     let serving = ServingConfig {
         boards: args.get_usize("boards", 1)?,
         max_batch: args.get_usize("max-batch", 8)?,
+        shard: if shards > 1 {
+            ShardPolicy::SplitOver(shards)
+        } else {
+            ShardPolicy::None
+        },
         ..Default::default()
     };
     let plan = Plan::builder()
@@ -459,6 +533,25 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
     let in_shape = dep.model().in_shape;
 
     let svc = dep.serve()?;
+    if batch_size > 1 {
+        // Whole-batch serving: each request is one flat batch, split
+        // across boards per the shard policy and gathered in order.
+        use ffcnn::coordinator::LatencyHistogram;
+        let mut hist = LatencyHistogram::new();
+        for r in 0..requests {
+            let flat =
+                data::synth_images(batch_size, in_shape, 1000 + r as u64);
+            let reply = svc.classify_batch(flat)?;
+            hist.record_ms(reply.latency_ms);
+        }
+        println!(
+            "served {requests} batches of {batch_size} (shard policy: \
+             {:?} over {} board(s))",
+            plan.serving.shard, plan.serving.boards
+        );
+        println!("batch latency: {}", hist.summary());
+        return Ok(());
+    }
     let trace = if rate > 0.0 {
         data::poisson_trace(requests, rate, 7)
     } else {

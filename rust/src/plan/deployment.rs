@@ -9,8 +9,8 @@ use crate::coordinator::InferenceService;
 use crate::fpga::device::DeviceProfile;
 use crate::fpga::dse::{
     best_density, best_density_per_precision, best_latency,
-    best_latency_per_precision, explore_space, pareto, DesignPoint,
-    Fidelity,
+    best_latency_per_precision, best_latency_per_shards, explore_space,
+    pareto, DesignPoint, Fidelity,
 };
 use crate::fpga::pipeline::{PipelineSim, Simulator};
 use crate::fpga::resources::{resource_usage, ResourceUsage};
@@ -38,6 +38,9 @@ impl Deployment {
             )
         })?;
         let device = plan.device_profile()?;
+        // Serving consistency (boards vs shard policy) fails here with
+        // a named-field error, not later inside the router.
+        plan.validate_deploy()?;
         Ok(Deployment { plan, model, device })
     }
 
@@ -61,17 +64,25 @@ impl Deployment {
         resource_usage(&self.plan.design, self.device)
     }
 
-    /// The token-level simulator at the plan's design point and
-    /// overlap policy, with the plan's fidelity (the O(tokens) oracle
-    /// iff `Fidelity::PipelineExact`).  Exposed so callers can tweak
-    /// options (`.policy(..)`, `.exact(..)`) without editing the plan.
+    /// The token-level simulator at the plan's design point, overlap
+    /// policy and batch [`ShardPolicy`], with the plan's fidelity (the
+    /// O(tokens) oracle iff `Fidelity::PipelineExact`).  Exposed so
+    /// callers can tweak options (`.policy(..)`, `.exact(..)`,
+    /// `.shards(..)`) without editing the plan.
+    ///
+    /// [`ShardPolicy`]: crate::config::ShardPolicy
     pub fn simulator(&self) -> Simulator<'_> {
         Simulator::new(&self.model, self.device, self.plan.design)
             .policy(self.plan.overlap)
             .exact(self.plan.fidelity == Fidelity::PipelineExact)
+            .shards(self.plan.serving.shard.max_shards())
     }
 
-    /// Verb 1 — simulate `batch` images at token granularity.
+    /// Verb 1 — simulate `batch` images at token granularity.  Under a
+    /// `SplitOver` shard policy this predicts the *sharded* batch
+    /// latency (slowest shard plus per-shard dispatch overhead), so
+    /// prediction keeps the shape of what [`Deployment::serve`]
+    /// actually does with a batch.
     pub fn simulate(&self, batch: usize) -> PipelineSim {
         self.simulator().run(batch)
     }
@@ -146,6 +157,12 @@ impl SweepOutcome {
         best_density_per_precision(&self.points)
     }
 
+    /// Latency optimum per swept batch shard count, ascending — the
+    /// multi-board break-even table (`ffcnn dse --shard-sweep`).
+    pub fn best_latency_per_shards(&self) -> Vec<(usize, &DesignPoint)> {
+        best_latency_per_shards(&self.points)
+    }
+
     pub fn feasible_count(&self) -> usize {
         self.points.iter().filter(|p| p.feasible).count()
     }
@@ -195,6 +212,21 @@ mod tests {
         assert!(outcome.best_latency().is_some());
         assert!(outcome.best_density().is_some());
         assert!(!outcome.pareto().is_empty());
+    }
+
+    #[test]
+    fn sharded_plan_predicts_sharded_latency() {
+        use crate::config::ShardPolicy;
+        let mut plan = Plan::builder().model("alexnet").build().unwrap();
+        plan.serving.boards = 4;
+        plan.serving.shard = ShardPolicy::SplitOver(4);
+        let sharded = plan.deploy().unwrap().simulate(64);
+        assert_eq!(sharded.shards, 4);
+        let mut whole_plan = plan.clone();
+        whole_plan.serving.shard = ShardPolicy::None;
+        let whole = whole_plan.deploy().unwrap().simulate(64);
+        assert_eq!(whole.shards, 1);
+        assert!(sharded.time_ms() < whole.time_ms());
     }
 
     #[test]

@@ -23,6 +23,24 @@
 //! - [`Deployment::serve`] — boot the full serving stack (boards,
 //!   batchers, router) from the plan.
 //!
+//! ## Multi-board batch sharding
+//!
+//! The serving knobs include a batch
+//! [`ShardPolicy`](crate::config::ShardPolicy): under
+//! `SplitOver(k)`, `InferenceService::classify_batch` splits one
+//! incoming batch into up to `k` per-board shards instead of parking
+//! it on a single board, and gathers the shard logits back into one
+//! reply in submission order.  The same `k` is a first-class plan
+//! dimension everywhere the flow predicts latency: the simulator runs
+//! a shard-aware mode (`Simulator::shards` — the token sim at
+//! `ceil(B/k)` plus a per-shard dispatch+gather overhead term), and
+//! `SweepSpace::shards` lets the DSE pick the break-even shard count
+//! per (model, batch, boards); [`Plan::adopt`] writes a winning shard
+//! count back as the serving policy.  [`Plan::deploy`] checks the
+//! shard policy and board count for consistency up front
+//! (`serving.boards >= 1`, `boards >= shards`) so misconfigured plans
+//! fail with a named-field error instead of panicking in the router.
+//!
 //! ```
 //! use ffcnn::plan::Plan;
 //!
@@ -53,7 +71,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context};
 
-use crate::config::{default_artifacts_dir, RunConfig, ServingConfig};
+use crate::config::{
+    default_artifacts_dir, RunConfig, ServingConfig, ShardPolicy,
+};
 use crate::coordinator::{Pace, Policy};
 use crate::fpga::device::{self, DeviceProfile};
 use crate::fpga::dse::{DesignPoint, Fidelity, SweepSpace};
@@ -145,11 +165,26 @@ impl Plan {
     }
 
     /// Write a sweep's winning design point back into the plan: the
-    /// full design params (vec/lane/depth/precision) and the overlap
-    /// policy the point was timed under.
+    /// full design params (vec/lane/depth/precision), the overlap
+    /// policy the point was timed under, and — when the winning point
+    /// was timed sharded — the batch [`ShardPolicy`], raising
+    /// `serving.boards` so the adopted plan still deploys.
+    ///
+    /// A `shards == 1` winner leaves the existing shard policy alone:
+    /// the point cannot distinguish "the shards axis was swept and 1
+    /// won" from "the axis was never swept", and silently resetting a
+    /// configured `SplitOver` to `None` would be a large latency
+    /// regression with no error.  Set `serving.shard` explicitly to
+    /// force unsharded serving.
     pub fn adopt(&mut self, point: &DesignPoint) {
         self.design = point.params;
         self.overlap = point.overlap;
+        if point.shards > 1 {
+            self.serving.shard = ShardPolicy::SplitOver(point.shards);
+            if point.shards > self.serving.boards {
+                self.serving.boards = point.shards;
+            }
+        }
     }
 
     /// Resolve the device profile.
@@ -184,14 +219,18 @@ impl Plan {
             || self.sweep.depths.is_empty()
             || self.sweep.overlaps.is_empty()
             || self.sweep.precisions.is_empty()
+            || self.sweep.shards.is_empty()
         {
             return Err(anyhow!("sweep space has an empty axis"));
         }
         if self.sweep.vecs.contains(&0)
             || self.sweep.lanes.contains(&0)
             || self.sweep.depths.contains(&0)
+            || self.sweep.shards.contains(&0)
         {
-            return Err(anyhow!("sweep vec/lane/depth values must be >= 1"));
+            return Err(anyhow!(
+                "sweep vec/lane/depth/shard values must be >= 1"
+            ));
         }
         if self.serving.max_batch == 0
             || self.serving.boards == 0
@@ -199,6 +238,37 @@ impl Plan {
         {
             return Err(anyhow!(
                 "serving needs max_batch, boards and queue_depth >= 1"
+            ));
+        }
+        if let ShardPolicy::SplitOver(0) = self.serving.shard {
+            return Err(anyhow!(
+                "serving.shard: split_over must be >= 1 \
+                 (use \"none\" to disable sharding)"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Deploy-time consistency between the serving knobs and the
+    /// boards the plan actually provisions — checked by
+    /// [`Plan::deploy`] and `InferenceService::from_plan`, so a plan
+    /// assembled field-by-field (bypassing the builder) errors with a
+    /// named-field message here instead of panicking inside the
+    /// router.
+    pub(crate) fn validate_deploy(&self) -> Result<()> {
+        if self.serving.boards == 0 {
+            return Err(anyhow!(
+                "serving.boards = 0: the plan provisions no boards \
+                 (unset?) — the router needs at least one"
+            ));
+        }
+        let shards = self.serving.shard.max_shards();
+        if shards > self.serving.boards {
+            return Err(anyhow!(
+                "serving.shard = split_over({shards}) but \
+                 serving.boards = {}: too few boards to shard a batch \
+                 over (raise serving.boards or lower the shard count)",
+                self.serving.boards
             ));
         }
         Ok(())
@@ -580,6 +650,7 @@ fn sweep_to_json(s: &SweepSpace) -> Json {
         ("vecs", nums(&s.vecs)),
         ("lanes", nums(&s.lanes)),
         ("depths", nums(&s.depths)),
+        ("shards", nums(&s.shards)),
         (
             "overlaps",
             Json::Arr(
@@ -603,7 +674,7 @@ fn sweep_to_json(s: &SweepSpace) -> Json {
 
 fn sweep_from_json(v: &Json) -> Result<SweepSpace> {
     v.expect_keys(
-        &["vecs", "lanes", "depths", "overlaps", "precisions"],
+        &["vecs", "lanes", "depths", "shards", "overlaps", "precisions"],
         "sweep",
     )?;
     let mut s = SweepSpace::default();
@@ -615,6 +686,9 @@ fn sweep_from_json(v: &Json) -> Result<SweepSpace> {
     }
     if let Some(x) = v.opt("depths") {
         s.depths = x.as_usize_vec()?;
+    }
+    if let Some(x) = v.opt("shards") {
+        s.shards = x.as_usize_vec()?;
     }
     if let Some(x) = v.opt("overlaps") {
         s.overlaps = x
@@ -639,12 +713,13 @@ pub(crate) fn serving_to_json(s: &ServingConfig) -> Json {
         ("max_wait_ms", Json::num(s.max_wait_ms as f64)),
         ("boards", Json::num(s.boards as f64)),
         ("queue_depth", Json::num(s.queue_depth as f64)),
+        ("shard", shard_to_json(s.shard)),
     ])
 }
 
 pub(crate) fn serving_from_json(v: &Json) -> Result<ServingConfig> {
     v.expect_keys(
-        &["max_batch", "max_wait_ms", "boards", "queue_depth"],
+        &["max_batch", "max_wait_ms", "boards", "queue_depth", "shard"],
         "serving",
     )?;
     let mut s = ServingConfig::default();
@@ -660,7 +735,34 @@ pub(crate) fn serving_from_json(v: &Json) -> Result<ServingConfig> {
     if let Some(x) = v.opt("queue_depth") {
         s.queue_depth = x.as_usize()?;
     }
+    if let Some(x) = v.opt("shard") {
+        s.shard = shard_from_json(x)?;
+    }
     Ok(s)
+}
+
+/// `"none"` or `{"split_over": k}` — the batch [`ShardPolicy`].
+pub(crate) fn shard_to_json(s: ShardPolicy) -> Json {
+    match s {
+        ShardPolicy::None => Json::str("none"),
+        ShardPolicy::SplitOver(k) => {
+            Json::obj(vec![("split_over", Json::num(k as f64))])
+        }
+    }
+}
+
+pub(crate) fn shard_from_json(v: &Json) -> Result<ShardPolicy> {
+    if let Ok(s) = v.as_str() {
+        return match s {
+            "none" => Ok(ShardPolicy::None),
+            other => Err(anyhow!(
+                "unknown shard policy {other:?} \
+                 (\"none\" or {{\"split_over\": k}})"
+            )),
+        };
+    }
+    v.expect_keys(&["split_over"], "serving.shard")?;
+    Ok(ShardPolicy::SplitOver(v.get("split_over")?.as_usize()?))
 }
 
 #[cfg(test)]
@@ -713,8 +815,48 @@ mod tests {
         plan.policy = Policy::WorkStealing;
         plan.pace = Pace::Fpga;
         plan.sweep = SweepSpace::with_precision_overlap_and_depth();
+        plan.sweep.shards = vec![1, 2, 4];
+        plan.serving.boards = 4;
+        plan.serving.shard = ShardPolicy::SplitOver(4);
         let j = plan.to_json().to_string();
         assert_eq!(Plan::from_json(&Json::parse(&j).unwrap()).unwrap(), plan);
+    }
+
+    #[test]
+    fn deploy_checks_shard_policy_against_boards() {
+        // Too few boards for the shard policy: named-field error at
+        // deploy time, not a router panic.
+        let mut plan = Plan::default();
+        plan.serving.boards = 2;
+        plan.serving.shard = ShardPolicy::SplitOver(4);
+        let err = plan.deploy().unwrap_err().to_string();
+        assert!(err.contains("serving.boards"), "{err}");
+        assert!(err.contains("split_over(4)"), "{err}");
+
+        // Boards left unset (0) on a hand-assembled plan: same story.
+        let mut plan = Plan::default();
+        plan.serving.boards = 0;
+        let err = plan.deploy().unwrap_err().to_string();
+        assert!(err.contains("serving.boards = 0"), "{err}");
+
+        // A consistent shard policy deploys.
+        let mut plan = Plan::default();
+        plan.serving.boards = 4;
+        plan.serving.shard = ShardPolicy::SplitOver(4);
+        assert!(plan.deploy().is_ok());
+    }
+
+    #[test]
+    fn degenerate_shard_values_rejected() {
+        let mut plan = Plan::default();
+        plan.serving.shard = ShardPolicy::SplitOver(0);
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.sweep.shards = vec![];
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.sweep.shards = vec![0];
+        assert!(plan.validate().is_err());
     }
 
     #[test]
@@ -745,6 +887,36 @@ mod tests {
         plan.adopt(best);
         assert_eq!(plan.design, best.params);
         assert_eq!(plan.overlap, best.overlap);
+    }
+
+    #[test]
+    fn adopt_writes_shard_policy_and_boards() {
+        use crate::fpga::device::STRATIX10;
+        use crate::fpga::resources::resource_usage;
+        let mut plan = Plan::default();
+        let params = DesignParams::new(16, 11);
+        let point = DesignPoint {
+            params,
+            overlap: OverlapPolicy::Full,
+            usage: resource_usage(&params, &STRATIX10),
+            feasible: true,
+            shards: 4,
+            time_ms: 1.0,
+            gops: 1.0,
+            gops_per_dsp: 1.0,
+        };
+        plan.adopt(&point);
+        assert_eq!(plan.serving.shard, ShardPolicy::SplitOver(4));
+        // Boards are raised so the adopted plan still deploys.
+        assert_eq!(plan.serving.boards, 4);
+        assert!(plan.validate_deploy().is_ok());
+
+        // A shards=1 winner (axis not swept, or 1 won) must NOT
+        // silently reset a configured shard policy.
+        let unsharded = DesignPoint { shards: 1, ..point };
+        plan.adopt(&unsharded);
+        assert_eq!(plan.serving.shard, ShardPolicy::SplitOver(4));
+        assert_eq!(plan.serving.boards, 4);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! points they replaced (`simulate_tokens*`, `explore*`,
 //! `InferenceService::start`) on alexnet and vgg16.
 
-use ffcnn::config::{default_artifacts_dir, RunConfig, ServingConfig};
+use ffcnn::config::{
+    default_artifacts_dir, RunConfig, ServingConfig, ShardPolicy,
+};
 use ffcnn::coordinator::{InferenceService, Pace, Policy};
 use ffcnn::data;
 use ffcnn::fpga::device::STRATIX10;
@@ -65,17 +67,27 @@ fn prop_plan_json_roundtrip_lossless() {
                 ],
             );
             plan.pace = *pick(r, &[Pace::None, Pace::Fpga]);
-            plan.sweep = match r.next_u64() % 3 {
+            plan.sweep = match r.next_u64() % 4 {
                 0 => SweepSpace::default(),
                 1 => SweepSpace::with_overlap_and_depth(),
+                2 => SweepSpace::with_shards(),
                 _ => SweepSpace::with_precision_overlap_and_depth(),
             };
             plan.conv_impl = pick(r, &["jnp", "pallas"]).to_string();
+            if r.next_u64() % 2 == 0 {
+                plan.sweep.shards = vec![1, 2, 4, 8];
+            }
+            let boards = int_in(r, 1, 4);
             plan.serving = ServingConfig {
                 max_batch: int_in(r, 1, 16),
                 max_wait_ms: int_in(r, 0, 20) as u64,
-                boards: int_in(r, 1, 4),
+                boards,
                 queue_depth: int_in(r, 1, 512),
+                shard: if r.next_u64() % 2 == 0 {
+                    ShardPolicy::None
+                } else {
+                    ShardPolicy::SplitOver(int_in(r, 1, boards))
+                },
             };
             plan
         },
@@ -322,6 +334,104 @@ fn serve_parity_with_deprecated_start() {
     let b = new.classify(img).unwrap();
     assert_eq!(a.argmax, b.argmax);
     assert_eq!(&a.logits[..], &b.logits[..]);
+}
+
+// ------------------------------------------------- sharding parity
+
+/// The shard-aware simulator at `shards = 1` is bit-equal to the
+/// plain path — pinned on alexnet AND vgg16 so the sharded mode can
+/// never drift the Table-1 numbers.
+#[test]
+fn sharded_sim_at_one_shard_bit_equal_on_alexnet_and_vgg16() {
+    let p = ffcnn::fpga::timing::ffcnn_stratix10_params();
+    for model in ["alexnet", "vgg16"] {
+        let m = models::by_name(model).unwrap();
+        for batch in [1usize, 16, 64] {
+            let plain = Simulator::new(&m, &STRATIX10, p).run(batch);
+            let sharded =
+                Simulator::new(&m, &STRATIX10, p).shards(1).run(batch);
+            assert_eq!(
+                plain.total_cycles, sharded.total_cycles,
+                "{model} b{batch}"
+            );
+            for (a, b) in plain.groups.iter().zip(&sharded.groups) {
+                assert_eq!(a.cycles, b.cycles, "{model} b{batch}");
+            }
+        }
+    }
+}
+
+/// A `SplitOver(1)` serve is bit-equal to the `ShardPolicy::None`
+/// path: one shard degenerates to the whole batch on one board, same
+/// chunks, same kernels, same bits.
+#[test]
+fn sharded_serve_at_one_shard_bit_equal_to_unsharded() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut plan = Plan::builder()
+        .model("tinynet")
+        .conv_impl("pallas")
+        .artifacts_dir(dir)
+        .serving(ServingConfig {
+            max_batch: 2,
+            max_wait_ms: 1,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let svc_none = plan.deploy().unwrap().serve().unwrap();
+    plan.serving.shard = ShardPolicy::SplitOver(1);
+    let svc_one = plan.deploy().unwrap().serve().unwrap();
+
+    let mut flat = Vec::new();
+    for i in 0..4u64 {
+        flat.extend_from_slice(&data::synth_images(1, (3, 16, 16), i));
+    }
+    let a = svc_none.classify_batch(flat.clone()).unwrap();
+    let b = svc_one.classify_batch(flat).unwrap();
+    assert_eq!(a.batch, b.batch);
+    assert_eq!(a.argmax, b.argmax);
+    assert_eq!(&a.logits[..], &b.logits[..], "bit-equal logits");
+}
+
+/// Shard gather preserves submission order under the work-stealing
+/// router: whichever board (or thief) serves a shard, row i of the
+/// gathered logits is image i's classification.
+#[test]
+fn shard_gather_preserves_order_under_work_stealing() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let plan = Plan::builder()
+        .model("tinynet")
+        .conv_impl("pallas")
+        .artifacts_dir(dir)
+        .policy(Policy::WorkStealing)
+        .serving(ServingConfig {
+            max_batch: 2,
+            max_wait_ms: 1,
+            boards: 2,
+            shard: ShardPolicy::SplitOver(2),
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let svc = plan.deploy().unwrap().serve().unwrap();
+    let n = 8u64;
+    let mut flat = Vec::new();
+    for i in 0..n {
+        flat.extend_from_slice(&data::synth_images(1, (3, 16, 16), 90 + i));
+    }
+    let reply = svc.classify_batch(flat).unwrap();
+    let classes = reply.logits.len() / n as usize;
+    for i in 0..n {
+        let solo = svc
+            .classify(data::synth_images(1, (3, 16, 16), 90 + i))
+            .unwrap();
+        let row = &reply.logits
+            [i as usize * classes..(i as usize + 1) * classes];
+        assert_eq!(solo.argmax, ffcnn::coordinator::argmax(row), "row {i}");
+        for (a, b) in solo.logits.iter().zip(row) {
+            assert!((a - b).abs() < 1e-4, "image {i}: {a} vs {b}");
+        }
+    }
 }
 
 /// The serving example's path: builder → deploy → serve, work-stealing
