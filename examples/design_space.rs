@@ -144,5 +144,33 @@ fn main() -> Result<()> {
         best.overlap,
         best.time_ms
     );
+
+    // Weight-cache axis at the paper's point: how much M20K to spend
+    // on the fpga::mem prefetch window (the next group's weight tile
+    // streaming in during the previous group's compute — the batch-1
+    // FC win).  vgg16 at batch 1 is where the streams are exposed.
+    println!(
+        "\n=== weight-cache sweep (vgg16 b1, stratix10, Full overlap) ==="
+    );
+    let mut plan = Plan::builder()
+        .model("vgg16")
+        .device("stratix10")
+        .fidelity(Fidelity::PipelineFast)
+        .build()?;
+    plan.sweep = SweepSpace {
+        vecs: vec![16],
+        lanes: vec![11],
+        ..SweepSpace::with_weight_cache()
+    };
+    let sweep = plan.deploy()?.sweep();
+    println!("{:<12}{:>11}{:>14}", "cache(KiB)", "time(ms)", "M20K(MB)");
+    for (kib, p) in sweep.best_latency_per_weight_cache() {
+        println!(
+            "{:<12}{:>11.2}{:>14.2}",
+            kib,
+            p.time_ms,
+            p.usage.m20k_bytes / 1e6
+        );
+    }
     Ok(())
 }

@@ -64,7 +64,7 @@ fn main() -> Result<()> {
     let burst = data::burst_trace(n);
     let r1 = svc.run_trace(
         &burst,
-        |id| data::synth_images(1, in_shape, 100 + id),
+        |t| data::synth_images(1, in_shape, 100 + t.id),
         0.0,
     );
     println!("{r1}");
@@ -76,7 +76,7 @@ fn main() -> Result<()> {
     let trace = data::poisson_trace(n, rate, 11);
     let r2 = svc.run_trace(
         &trace,
-        |id| data::synth_images(1, in_shape, 500 + id),
+        |t| data::synth_images(1, in_shape, 500 + t.id),
         1.0,
     );
     println!("{r2}");
@@ -89,7 +89,7 @@ fn main() -> Result<()> {
     let _ = svc_paced.classify(data::synth_images(1, in_shape, 0))?;
     let r3 = svc_paced.run_trace(
         &data::burst_trace(n.min(24)),
-        |id| data::synth_images(1, in_shape, 900 + id),
+        |t| data::synth_images(1, in_shape, 900 + t.id),
         0.0,
     );
     println!("{r3}");
@@ -104,7 +104,7 @@ fn main() -> Result<()> {
     let _ = svc_steal.classify(data::synth_images(1, in_shape, 0))?;
     let r4 = svc_steal.run_trace(
         &data::burst_trace(n),
-        |id| data::synth_images(1, in_shape, 1300 + id),
+        |t| data::synth_images(1, in_shape, 1300 + t.id),
         0.0,
     );
     println!("{r4}");

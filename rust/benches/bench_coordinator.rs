@@ -26,6 +26,11 @@ const SHARD_BOARDS: usize = 4;
 const SHARD_BATCHES: [usize; 3] = [16, 32, 64];
 
 fn main() {
+    // `--check` dry-run: validate the previously written artifact's
+    // schema and exit (the CI drift gate).
+    if ffcnn::util::bench::check_mode(Path::new("BENCH_coordinator.json")) {
+        return;
+    }
     let mut b = Bench::new("coordinator").with_budget(Duration::from_secs(4));
     let mut extra: Vec<(String, Json)> = Vec::new();
 
@@ -105,7 +110,7 @@ fn main() {
         let trace = data::burst_trace(16);
         let r = svc.run_trace(
             &trace,
-            |id| data::synth_images(1, (3, 16, 16), id),
+            |t| data::synth_images(1, (3, 16, 16), t.id),
             0.0,
         );
         assert_eq!(r.errors, 0);

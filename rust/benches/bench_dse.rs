@@ -31,6 +31,11 @@ fn sweep_default(
 }
 
 fn main() {
+    // `--check` dry-run: validate the previously written artifact's
+    // schema and exit (the CI drift gate).
+    if ffcnn::util::bench::check_mode(Path::new("BENCH_dse.json")) {
+        return;
+    }
     let model = models::alexnet();
 
     for device in [&ARRIA10, &STRATIX10, &STRATIXV] {

@@ -34,6 +34,11 @@ fn tok(
 }
 
 fn main() {
+    // `--check` dry-run: validate the previously written artifact's
+    // schema and exit (the CI drift gate).
+    if ffcnn::util::bench::check_mode(Path::new("BENCH_pipeline.json")) {
+        return;
+    }
     // Experiment output: fusion bandwidth saving + model agreement.
     for (m, d, p) in [
         (models::alexnet(), &STRATIX10, ffcnn_stratix10_params()),

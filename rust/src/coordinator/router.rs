@@ -330,15 +330,58 @@ impl Router {
         }
         let counter = self.outstanding[idx].clone();
         counter.fetch_add(1, Ordering::Relaxed);
-        let sent = match &self.backend {
-            Backend::Channels(queues) => queues[idx].send(req).is_ok(),
-            Backend::Stealing(pool) => pool.push(idx, req).is_ok(),
-        };
-        if !sent {
+        if !self.send(idx, req) {
             counter.fetch_sub(1, Ordering::Relaxed);
             return Err(anyhow::anyhow!("board {idx} queue closed"));
         }
         Ok(RouterGuard { counter })
+    }
+
+    /// Blocking enqueue on one board's backend; `false` once the
+    /// queue/pool has closed.  The single send path shared by
+    /// [`Router::route_to`] and [`Router::route_many`].
+    fn send(&self, idx: usize, req: Request) -> bool {
+        match &self.backend {
+            Backend::Channels(queues) => queues[idx].send(req).is_ok(),
+            Backend::Stealing(pool) => pool.push(idx, req).is_ok(),
+        }
+    }
+
+    /// Route a whole shard to one board, accounting its full fan-out
+    /// on the outstanding counter **before** the first enqueue: a
+    /// concurrent dispatcher's `least_loaded` pick (and the
+    /// work-stealing affinity) sees the in-flight shard's entire load
+    /// at decision time instead of one image at a time, so two batches
+    /// submitted together spread over the fleet rather than stacking
+    /// on the same momentarily-idle board.
+    ///
+    /// Returns one guard per request, aligned with `reqs`.  On a
+    /// closed queue mid-shard the error return drops every guard
+    /// (counters roll back); requests already enqueued are served
+    /// without a live guard, which only under-counts during shutdown.
+    pub fn route_many(
+        &self,
+        idx: usize,
+        reqs: Vec<Request>,
+    ) -> Result<Vec<RouterGuard>> {
+        if idx >= self.boards() {
+            return Err(anyhow::anyhow!(
+                "board {idx} out of range ({} boards)",
+                self.boards()
+            ));
+        }
+        let counter = &self.outstanding[idx];
+        let mut guards = Vec::with_capacity(reqs.len());
+        for _ in 0..reqs.len() {
+            counter.fetch_add(1, Ordering::Relaxed);
+            guards.push(RouterGuard { counter: counter.clone() });
+        }
+        for req in reqs {
+            if !self.send(idx, req) {
+                return Err(anyhow::anyhow!("board {idx} queue closed"));
+            }
+        }
+        Ok(guards)
     }
 
     /// The `k` least-loaded board indices (stable: ties keep index
@@ -607,6 +650,38 @@ mod tests {
         assert_eq!(pool.queued(2), 1);
         assert_eq!(router.outstanding_of(2), 1);
         assert!(router.route_to(3, dummy_request(1)).is_err());
+    }
+
+    #[test]
+    fn route_many_accounts_shard_fanout_up_front() {
+        let (t1, _r1) = mpsc::sync_channel(8);
+        let (t2, _r2) = mpsc::sync_channel(8);
+        let router = Router::new(vec![t1, t2], Policy::LeastOutstanding);
+        let guards = router
+            .route_many(0, (0..3).map(dummy_request).collect())
+            .unwrap();
+        assert_eq!(guards.len(), 3);
+        // The whole shard's fan-out is on the counter, so the next
+        // shard target must be the other board.
+        assert_eq!(router.outstanding_of(0), 3);
+        assert_eq!(router.least_loaded(1), vec![1]);
+        drop(guards);
+        assert_eq!(router.outstanding_of(0), 0);
+        // Range check mirrors route_to.
+        assert!(router.route_many(2, vec![dummy_request(9)]).is_err());
+        assert_eq!(router.outstanding_of(0), 0);
+        assert_eq!(router.outstanding_of(1), 0);
+    }
+
+    #[test]
+    fn route_many_on_closed_queue_rolls_counters_back() {
+        let (t1, r1) = mpsc::sync_channel(8);
+        drop(r1);
+        let router = Router::new(vec![t1], Policy::RoundRobin);
+        assert!(router
+            .route_many(0, (0..4).map(dummy_request).collect())
+            .is_err());
+        assert_eq!(router.outstanding_of(0), 0);
     }
 
     #[test]

@@ -438,16 +438,29 @@ impl InferenceService {
                 )
             })
             .collect();
+        // Dispatch shard-at-a-time through `route_many`, which puts
+        // each shard's full fan-out on its board's outstanding count
+        // before the first enqueue — a concurrent dispatcher's
+        // `least_loaded` pick sees in-flight shards whole instead of
+        // one image at a time.  Shards are contiguous, so gather order
+        // is submission order.
         let mut parts = Vec::with_capacity(images);
-        for (i, image) in slices.into_iter().enumerate() {
-            let board = targets[(i / per_shard).min(targets.len() - 1)];
-            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            let (tx, rx) = mpsc::sync_channel(1);
-            let guard = self.router.route_to(
-                board,
-                Request { id, image, submitted, reply: tx },
-            )?;
-            parts.push(PendingReply { rx, _guard: guard });
+        let mut slices = slices.into_iter();
+        for (s, &board) in targets.iter().enumerate() {
+            let lo = s * per_shard;
+            let hi = ((s + 1) * per_shard).min(images);
+            let mut reqs = Vec::with_capacity(hi - lo);
+            let mut rxs = Vec::with_capacity(hi - lo);
+            for image in slices.by_ref().take(hi - lo) {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let (tx, rx) = mpsc::sync_channel(1);
+                reqs.push(Request { id, image, submitted, reply: tx });
+                rxs.push(rx);
+            }
+            let guards = self.router.route_many(board, reqs)?;
+            for (rx, guard) in rxs.into_iter().zip(guards) {
+                parts.push(PendingReply { rx, _guard: guard });
+            }
         }
         Ok(PendingBatch {
             parts,
@@ -470,14 +483,26 @@ impl InferenceService {
 
     /// Replay an arrival trace open-loop; returns the aggregate report.
     ///
+    /// `images` maps a trace entry to its input floats — one image for
+    /// a `batch == 1` entry, `batch * image_numel` floats (one flat
+    /// NCHW batch) otherwise.  Whole-batch arrivals travel through
+    /// [`InferenceService::submit_batch`], i.e. they shard across
+    /// boards under the serving [`ShardPolicy`] — the E4 setup for
+    /// comparing shard policies under Poisson load
+    /// (`data::poisson_batch_trace`).
+    ///
     /// `time_scale` stretches (>1) or compresses (<1) arrival gaps —
     /// 0.0 fires all requests immediately (closed-loop burst).
     pub fn run_trace<I: Into<Arc<[f32]>>>(
         &self,
         trace: &[TraceRequest],
-        images: impl Fn(u64) -> I,
+        images: impl Fn(&TraceRequest) -> I,
         time_scale: f64,
     ) -> ServeReport {
+        enum Pending {
+            One(PendingReply),
+            Batch(PendingBatch),
+        }
         let started = Instant::now();
         let mut pending = Vec::with_capacity(trace.len());
         let mut errors = 0u64;
@@ -487,7 +512,12 @@ impl InferenceService {
             if due > now {
                 std::thread::sleep(Duration::from_secs_f64(due - now));
             }
-            match self.submit(images(t.id)) {
+            let submitted = if t.batch > 1 {
+                self.submit_batch(images(t)).map(Pending::Batch)
+            } else {
+                self.submit(images(t)).map(Pending::One)
+            };
+            match submitted {
                 Ok(p) => pending.push(p),
                 Err(_) => errors += 1,
             }
@@ -499,7 +529,11 @@ impl InferenceService {
         let mut host_ms = 0.0;
         let mut ok = 0u64;
         for p in pending {
-            match p.wait() {
+            let reply = match p {
+                Pending::One(p) => p.wait(),
+                Pending::Batch(p) => p.wait(),
+            };
+            match reply {
                 Ok(reply) => {
                     hist.record_ms(reply.latency_ms);
                     batch_sum += reply.batch as u64;
@@ -581,7 +615,7 @@ mod tests {
         let trace = data::burst_trace(12);
         let report = svc.run_trace(
             &trace,
-            |id| data::synth_images(1, (3, 16, 16), id),
+            |t| data::synth_images(1, (3, 16, 16), t.id),
             0.0,
         );
         assert_eq!(report.requests, 12);
@@ -600,7 +634,7 @@ mod tests {
         let trace = data::burst_trace(8);
         let report = svc.run_trace(
             &trace,
-            |id| data::synth_images(1, (3, 16, 16), id),
+            |t| data::synth_images(1, (3, 16, 16), t.id),
             0.0,
         );
         assert_eq!(report.errors, 0);
@@ -628,7 +662,7 @@ mod tests {
         let trace = data::burst_trace(10);
         let report = svc.run_trace(
             &trace,
-            |id| data::synth_images(1, (3, 16, 16), id),
+            |t| data::synth_images(1, (3, 16, 16), t.id),
             0.0,
         );
         assert_eq!(report.errors, 0);
@@ -703,6 +737,34 @@ mod tests {
     }
 
     #[test]
+    fn batched_trace_travels_through_submit_batch() {
+        // Shard-aware open-loop serving: trace entries carrying a
+        // batch size must dispatch as whole batches (sharded under the
+        // serving policy) and gather one reply per arrival.
+        let Some(mut cfg) = cfg_or_skip() else { return };
+        cfg.serving.boards = 2;
+        cfg.serving.shard = ShardPolicy::SplitOver(2);
+        let svc =
+            serve(&cfg, Pace::None, Policy::LeastOutstanding).unwrap();
+        let trace: Vec<TraceRequest> = (0..6u64)
+            .map(|id| TraceRequest { id, arrival_s: 0.0, batch: 4 })
+            .collect();
+        let report = svc.run_trace(
+            &trace,
+            |t| data::synth_images(t.batch, (3, 16, 16), 70 + t.id),
+            0.0,
+        );
+        assert_eq!(report.requests, 6);
+        assert_eq!(report.errors, 0);
+        // Each reply covers the whole 4-image arrival.
+        assert!(
+            (report.mean_batch - 4.0).abs() < 1e-9,
+            "mean_batch={}",
+            report.mean_batch
+        );
+    }
+
+    #[test]
     fn sharded_batch_rejects_ragged_input() {
         let Some(cfg) = cfg_or_skip() else { return };
         let svc = serve(&cfg, Pace::None, Policy::RoundRobin).unwrap();
@@ -721,7 +783,7 @@ mod tests {
         let trace = data::burst_trace(8);
         let report = svc.run_trace(
             &trace,
-            |id| data::synth_images(1, (3, 16, 16), id),
+            |t| data::synth_images(1, (3, 16, 16), t.id),
             0.0,
         );
         assert_eq!(report.requests, 8);

@@ -63,23 +63,42 @@ pub struct TraceRequest {
     pub id: u64,
     /// Arrival time offset from trace start, seconds.
     pub arrival_s: f64,
+    /// Images in this arrival (1 = a single-image request; > 1 = one
+    /// whole batch submitted at once, which the trace replayer routes
+    /// through `submit_batch` under the serving `ShardPolicy`).
+    pub batch: usize,
 }
 
 /// Poisson open-loop arrival trace: `n` requests at `rate` req/s.
 pub fn poisson_trace(n: usize, rate: f64, seed: u64) -> Vec<TraceRequest> {
+    poisson_batch_trace(n, rate, 1, seed)
+}
+
+/// Poisson open-loop trace of whole-batch arrivals: `n` requests at
+/// `rate` req/s, each carrying `batch` images — the E4 workload for
+/// comparing `ShardPolicy` under open-loop load.
+pub fn poisson_batch_trace(
+    n: usize,
+    rate: f64,
+    batch: usize,
+    seed: u64,
+) -> Vec<TraceRequest> {
+    let batch = batch.max(1);
     let mut rng = Rng::new(seed);
     let mut t = 0.0;
     (0..n as u64)
         .map(|id| {
             t += rng.next_exp(rate);
-            TraceRequest { id, arrival_s: t }
+            TraceRequest { id, arrival_s: t, batch }
         })
         .collect()
 }
 
 /// Closed-loop trace: all requests available at t=0 (max-throughput).
 pub fn burst_trace(n: usize) -> Vec<TraceRequest> {
-    (0..n as u64).map(|id| TraceRequest { id, arrival_s: 0.0 }).collect()
+    (0..n as u64)
+        .map(|id| TraceRequest { id, arrival_s: 0.0, batch: 1 })
+        .collect()
 }
 
 #[cfg(test)]
@@ -143,5 +162,24 @@ mod tests {
         let tr = burst_trace(5);
         assert_eq!(tr.len(), 5);
         assert!(tr.iter().all(|r| r.arrival_s == 0.0));
+        assert!(tr.iter().all(|r| r.batch == 1));
+    }
+
+    #[test]
+    fn batched_trace_matches_single_image_arrivals() {
+        // Same seed, same arrival process — the batched variant only
+        // changes what each arrival carries (and clamps batch >= 1).
+        let singles = poisson_trace(50, 80.0, 3);
+        let batched = poisson_batch_trace(50, 80.0, 16, 3);
+        assert_eq!(singles.len(), batched.len());
+        for (s, b) in singles.iter().zip(&batched) {
+            assert_eq!(s.arrival_s, b.arrival_s);
+            assert_eq!(s.id, b.id);
+            assert_eq!(s.batch, 1);
+            assert_eq!(b.batch, 16);
+        }
+        assert!(poisson_batch_trace(3, 10.0, 0, 1)
+            .iter()
+            .all(|t| t.batch == 1));
     }
 }

@@ -21,9 +21,12 @@
 //!   its closed-form fast path, or the O(tokens) exact oracle
 //!   ([`Fidelity`]); `BENCH_dse.json` tracks the fast-vs-exact sweep
 //!   speedup across PRs.
-//! - **overlap × depth × precision × shards dimensions** — now that
-//!   point evaluation is cheap and parallel, [`explore_space`] folds
-//!   `channel_depth`, `OverlapPolicy` (on = `Full` cross-group
+//! - **overlap × depth × weight-cache × precision × shards
+//!   dimensions** — now that point evaluation is cheap and parallel,
+//!   [`explore_space`] folds `channel_depth`, the on-chip
+//!   `weight_cache_kib` (the `fpga::mem` prefetch window: FC weight
+//!   tiles stream in during the previous group's compute, charged to
+//!   M20K like the FIFOs), `OverlapPolicy` (on = `Full` cross-group
 //!   pipelining, off = `WithinGroup`), [`Precision`] and the
 //!   multi-board batch shard count into the grid; deeper channels buy
 //!   overlap headroom but spend M20K, fixed point packs 2–4 MACs per
@@ -92,6 +95,13 @@ pub const LANE_CANDIDATES: [usize; 12] = [1, 2, 3, 4, 6, 8, 11, 16, 22, 32, 48, 
 /// M20K for cross-stage slack (and overlap headroom under `Full`).
 pub const DEPTH_CANDIDATES: [usize; 3] = [128, 512, 2048];
 
+/// Weight-cache candidates (KiB) for the `fpga::mem` prefetch window:
+/// a bigger cache prefetches more of the next group's weight tile
+/// during the previous group's compute (the batch-1 FC win) but
+/// spends M20K like the channel FIFOs — on small parts the large
+/// caches simply prune as infeasible.
+pub const WEIGHT_CACHE_CANDIDATES: [usize; 4] = [0, 1024, 4096, 16384];
+
 /// Shard-count candidates for the multi-board sweep: how many boards
 /// one serving batch is split across (`ShardPolicy::SplitOver`).
 /// Latency falls with the shard's `ceil(batch / k)` sub-batch but
@@ -113,6 +123,8 @@ pub struct SweepSpace {
     pub vecs: Vec<usize>,
     pub lanes: Vec<usize>,
     pub depths: Vec<usize>,
+    /// On-chip weight prefetch cache sizes (KiB); `[0]` = no cache.
+    pub weight_caches: Vec<usize>,
     pub overlaps: Vec<OverlapPolicy>,
     pub precisions: Vec<Precision>,
     /// Batch shard counts (boards per batch); `[1]` = unsharded.
@@ -125,6 +137,7 @@ impl Default for SweepSpace {
             vecs: VEC_CANDIDATES.to_vec(),
             lanes: LANE_CANDIDATES.to_vec(),
             depths: vec![DesignParams::new(1, 1).channel_depth],
+            weight_caches: vec![0],
             overlaps: vec![OverlapPolicy::WithinGroup],
             precisions: vec![Precision::Fp32],
             shards: vec![1],
@@ -170,17 +183,32 @@ impl SweepSpace {
         SweepSpace { shards: SHARD_CANDIDATES.to_vec(), ..Self::default() }
     }
 
+    /// The weight-cache axis on the classic `(vec, lane)` grid under
+    /// `Full` overlap (the policy the prefetch window extends): pick
+    /// how much M20K to spend on prefetching the next group's weight
+    /// tile (`ffcnn dse --weight-cache-sweep`).
+    pub fn with_weight_cache() -> Self {
+        SweepSpace {
+            weight_caches: WEIGHT_CACHE_CANDIDATES.to_vec(),
+            overlaps: vec![OverlapPolicy::Full],
+            ..Self::default()
+        }
+    }
+
     /// All grid points in deterministic order (vec outer → lane →
-    /// depth → precision → shards → overlap inner; overlap innermost
-    /// keeps the on/off twins adjacent for the bench pairing).
+    /// depth → weight cache → precision → shards → overlap inner;
+    /// overlap innermost keeps the on/off twins adjacent for the
+    /// bench pairing).
     #[allow(clippy::type_complexity)]
     fn grid(
         &self,
-    ) -> Vec<(usize, usize, usize, Precision, usize, OverlapPolicy)> {
+    ) -> Vec<(usize, usize, usize, usize, Precision, usize, OverlapPolicy)>
+    {
         let mut out = Vec::with_capacity(
             self.vecs.len()
                 * self.lanes.len()
                 * self.depths.len()
+                * self.weight_caches.len()
                 * self.precisions.len()
                 * self.shards.len()
                 * self.overlaps.len(),
@@ -188,10 +216,12 @@ impl SweepSpace {
         for &v in &self.vecs {
             for &l in &self.lanes {
                 for &d in &self.depths {
-                    for &prec in &self.precisions {
-                        for &k in &self.shards {
-                            for &o in &self.overlaps {
-                                out.push((v, l, d, prec, k, o));
+                    for &wc in &self.weight_caches {
+                        for &prec in &self.precisions {
+                            for &k in &self.shards {
+                                for &o in &self.overlaps {
+                                    out.push((v, l, d, wc, prec, k, o));
+                                }
                             }
                         }
                     }
@@ -270,10 +300,10 @@ pub fn explore_space(
     if workers <= 1 || grid.len() <= 1 {
         return grid
             .iter()
-            .map(|&(v, l, d, prec, k, o)| {
+            .map(|&(v, l, d, wc, prec, k, o)| {
                 eval_point(
                     model, device, batch, fidelity, ops_per_image, v, l, d,
-                    prec, k, o,
+                    wc, prec, k, o,
                 )
             })
             .collect();
@@ -291,14 +321,15 @@ pub fn explore_space(
                 let mut local = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    let Some(&(v, l, d, prec, k, o)) = grid.get(i) else {
+                    let Some(&(v, l, d, wc, prec, k, o)) = grid.get(i)
+                    else {
                         break;
                     };
                     local.push((
                         i,
                         eval_point(
                             model, device, batch, fidelity, ops_per_image,
-                            v, l, d, prec, k, o,
+                            v, l, d, wc, prec, k, o,
                         ),
                     ));
                 }
@@ -323,12 +354,14 @@ fn eval_point(
     vec: usize,
     lane: usize,
     depth: usize,
+    weight_cache_kib: usize,
     precision: Precision,
     shards: usize,
     overlap: OverlapPolicy,
 ) -> DesignPoint {
     let mut params = DesignParams::new(vec, lane);
     params.channel_depth = depth;
+    params.weight_cache_kib = weight_cache_kib;
     params.precision = precision;
     // Effective split at this batch — the same `shard_split` the
     // serving dispatch and the simulator use, so a swept `shards = 8`
@@ -472,6 +505,35 @@ pub fn best_latency_per_shards(
                 .filter(|p| p.feasible && p.shards == k)
                 .min_by(|a, b| a.time_ms.total_cmp(&b.time_ms))
                 .map(|p| (k, p))
+        })
+        .collect()
+}
+
+/// The latency-optimal feasible point for each weight-cache size
+/// present in the sweep, ascending — the M20K-vs-latency trade table
+/// of the prefetch window (`ffcnn dse --weight-cache-sweep`): where
+/// latency stops improving, the next group's weight tile (or the
+/// donor groups' compute slack) has been exhausted.
+pub fn best_latency_per_weight_cache(
+    points: &[DesignPoint],
+) -> Vec<(usize, &DesignPoint)> {
+    let mut sizes: Vec<usize> = points
+        .iter()
+        .filter(|p| p.feasible)
+        .map(|p| p.params.weight_cache_kib)
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+        .into_iter()
+        .filter_map(|kib| {
+            points
+                .iter()
+                .filter(|p| {
+                    p.feasible && p.params.weight_cache_kib == kib
+                })
+                .min_by(|a, b| a.time_ms.total_cmp(&b.time_ms))
+                .map(|p| (kib, p))
         })
         .collect()
 }
@@ -699,6 +761,7 @@ mod tests {
             space.vecs.len()
                 * space.lanes.len()
                 * space.depths.len()
+                * space.weight_caches.len()
                 * space.precisions.len()
                 * space.shards.len()
                 * space.overlaps.len()
@@ -707,16 +770,21 @@ mod tests {
         for &v in &space.vecs {
             for &l in &space.lanes {
                 for &d in &space.depths {
-                    for &prec in &space.precisions {
-                        for &k in &space.shards {
-                            for &o in &space.overlaps {
-                                let p = it.next().unwrap();
-                                assert_eq!(p.params.vec_size, v);
-                                assert_eq!(p.params.lane_num, l);
-                                assert_eq!(p.params.channel_depth, d);
-                                assert_eq!(p.params.precision, prec);
-                                assert_eq!(p.shards, k);
-                                assert_eq!(p.overlap, o);
+                    for &wc in &space.weight_caches {
+                        for &prec in &space.precisions {
+                            for &k in &space.shards {
+                                for &o in &space.overlaps {
+                                    let p = it.next().unwrap();
+                                    assert_eq!(p.params.vec_size, v);
+                                    assert_eq!(p.params.lane_num, l);
+                                    assert_eq!(p.params.channel_depth, d);
+                                    assert_eq!(
+                                        p.params.weight_cache_kib, wc
+                                    );
+                                    assert_eq!(p.params.precision, prec);
+                                    assert_eq!(p.shards, k);
+                                    assert_eq!(p.overlap, o);
+                                }
                             }
                         }
                     }
@@ -781,7 +849,7 @@ mod tests {
                 OverlapPolicy::Full,
             ],
             precisions: vec![Precision::Fp32],
-            shards: vec![1],
+            ..SweepSpace::default()
         };
         let pts = explore_space(
             &models::alexnet(),
@@ -897,6 +965,69 @@ mod tests {
         let front = pareto(&pts);
         assert!(front.iter().any(|p| p.shards == 1), "{front:?}");
         assert!(front.iter().any(|p| p.shards == 4), "{front:?}");
+    }
+
+    #[test]
+    fn weight_cache_axis_swept_and_charged() {
+        // The prefetch-window dimension: cache sizes must appear in
+        // grid order, cost M20K, and — on vgg16 at batch 1, where the
+        // FC weight streams are the exposed memory bound — buy strict
+        // latency over the uncached twin under Full overlap.
+        let space = SweepSpace {
+            vecs: vec![16],
+            lanes: vec![11],
+            weight_caches: vec![0, 4096],
+            overlaps: vec![OverlapPolicy::Full],
+            ..SweepSpace::default()
+        };
+        let pts = explore_space(
+            &crate::models::vgg16(),
+            &STRATIX10,
+            1,
+            Fidelity::PipelineFast,
+            &space,
+        );
+        assert_eq!(pts.len(), 2);
+        let (off, on) = (&pts[0], &pts[1]);
+        assert_eq!(off.params.weight_cache_kib, 0);
+        assert_eq!(on.params.weight_cache_kib, 4096);
+        assert!(off.feasible && on.feasible);
+        assert!(
+            on.usage.m20k_bytes > off.usage.m20k_bytes,
+            "the cache must cost M20K"
+        );
+        assert!(
+            on.time_ms < off.time_ms,
+            "cache-on {} >= cache-off {} on vgg16 b1",
+            on.time_ms,
+            off.time_ms
+        );
+        let per = best_latency_per_weight_cache(&pts);
+        assert_eq!(per.len(), 2);
+        assert_eq!((per[0].0, per[1].0), (0, 4096));
+        assert!(per[1].1.time_ms < per[0].1.time_ms);
+    }
+
+    #[test]
+    fn oversized_weight_cache_pruned() {
+        // Arria 10 has ~6.6 MB of M20K: a 16 MiB cache cannot place,
+        // so the sweep prunes it instead of timing it.
+        let space = SweepSpace {
+            vecs: vec![16],
+            lanes: vec![11],
+            weight_caches: vec![0, 16384],
+            ..SweepSpace::default()
+        };
+        let pts = explore_space(
+            &models::alexnet(),
+            &ARRIA10,
+            1,
+            Fidelity::Analytic,
+            &space,
+        );
+        assert!(pts[0].feasible);
+        assert!(!pts[1].feasible);
+        assert!(pts[1].time_ms.is_infinite());
     }
 
     #[test]

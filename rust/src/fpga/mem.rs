@@ -1,0 +1,494 @@
+//! The memory hierarchy of the accelerator, as one first-class model.
+//!
+//! FFCNN's headline wins are memory discipline: fused groups never
+//! spill activations to DDR, each weight working set streams once per
+//! group invocation, and the on-chip buffers (input tile, weight tile,
+//! channel FIFOs) are what make that discipline possible.  Before this
+//! module the *model* of that memory system was smeared across three
+//! files — DDR byte math in `timing`, bandwidth shares and contention
+//! in `pipeline`, M20K charging in `resources`.  [`MemSystem`] is now
+//! the single owner:
+//!
+//! - [`DdrModel`] — the DDR port: sustained bytes per kernel cycle,
+//!   byte↔cycle conversion, and the boundary-contention service model
+//!   ([`contended_finish`] / [`write_share`]) the overlapped stream
+//!   solver charges while a draining group's writes share the port.
+//! - [`MemSystem::group_traffic`] — the per-fused-group DDR byte
+//!   accounting ([`GroupTraffic`]): input activations (with the
+//!   conv re-streaming passes of the analytic model), the weight
+//!   working set, and the output spill.  Both the analytic model
+//!   (`timing::simulate_model`) and the token simulator
+//!   (`pipeline::group_specs`) draw their bytes from here — the byte
+//!   formulas exist exactly once.
+//! - [`on_chip_bytes`] — the M20K budget of a design point: the
+//!   double-buffered input/weight tile buffers, the channel FIFOs
+//!   (depth × lanes), and the weight prefetch cache.  `resources`
+//!   charges feasibility through this function.
+//! - [`WeightCache`] / [`PrefetchWindow`] / [`MemSystem::plan_prefetch`]
+//!   — the weight-aware prefetch window.  The stream model bounds
+//!   MemRd prefetch by `channel_depth` *tokens*; an explicit on-chip
+//!   weight cache (`DesignParams::weight_cache_kib`) additionally lets
+//!   MemRd pull the **next group's weight tile** during the previous
+//!   group's compute — the FC groups' whole working set streaming in
+//!   behind a compute-bound conv group, which is where batch-1 overlap
+//!   wins live (ROADMAP "weight-aware prefetch window").
+//!
+//! ## The prefetch model
+//!
+//! For each group boundary `g-1 → g` the planner computes how many of
+//! group `g`'s weight bytes can already be resident when its MemRd
+//! stream starts:
+//!
+//! ```text
+//! prefetched[g] = min(cache_bytes,                 // on-chip capacity
+//!                     weight_bytes[g],             // the tile itself
+//!                     spare_ddr_bytes[g-1])        // donor port slack
+//! ```
+//!
+//! where the donor's slack is its *idle DDR-port time*: per token the
+//! group advances `max(compute_ii, rd_ii, wr_ii)` cycles while the
+//! port is busy only `rd_ii + wr_ii` of them, so
+//! `spare = tokens · (bottleneck − rd_ii − wr_ii) · bytes_per_cycle`
+//! (clamped at zero — a memory-bound donor has no slack to donate).
+//! The prefetched bytes move during the donor's window using that
+//! slack, so the donor's modeled rates are untouched; the recipient's
+//! MemRd stream simply shrinks.  This makes the cache a *pure
+//! relaxation*: zero cache reproduces the uncached schedule
+//! bit-for-bit, and more cache never slows a design (the planner is
+//! monotone in `cache_bytes`: a larger cache weakly grows every
+//! `prefetched[g]`, which weakly lowers every MemRd interval).
+//!
+//! Because prefetch only adjusts the per-segment *rates*, the token
+//! solvers are unchanged: `run_stream_fast` stays O(depth + transient)
+//! per group and the fast-vs-exact ≤ 0.1% property carries over
+//! unchanged.  In the analytic model the same planner runs at group
+//! granularity (one "token" per group, intervals in cycles), where the
+//! donor slack is exactly the classic `compute − mem` double-buffering
+//! headroom — which keeps the `None ≥ WithinGroup ≥ Full` policy
+//! ordering structural (each prefetched cycle is backed by a donor
+//! cycle the serialized schedule already paid for).
+
+use super::device::DeviceProfile;
+use super::timing::DesignParams;
+use crate::models::{LayerInfo, LayerKind};
+
+/// The DDR port of a board: sustained bandwidth in kernel cycles.
+#[derive(Debug, Clone, Copy)]
+pub struct DdrModel {
+    /// Sustained DRAM bytes per kernel-clock cycle
+    /// (`ddr_gbps · efficiency / fmax`).
+    pub bytes_per_cycle: f64,
+}
+
+impl DdrModel {
+    pub fn new(device: &DeviceProfile) -> Self {
+        DdrModel { bytes_per_cycle: device.ddr_bytes_per_cycle() }
+    }
+
+    /// Whole cycles to move `bytes` over the port.
+    pub fn cycles_for(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+}
+
+/// The on-chip weight prefetch cache of a design point.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightCache {
+    /// Capacity in bytes (0 = no cache, prefetch disabled).
+    pub bytes: u64,
+}
+
+impl WeightCache {
+    pub fn from_kib(kib: usize) -> Self {
+        WeightCache { bytes: kib as u64 * 1024 }
+    }
+}
+
+/// What MemRd may fetch ahead of the compute frontier: up to
+/// `depth_tokens` tokens of the *current* group (the channel FIFOs)
+/// plus up to one weight tile of the *next* group (the weight cache).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchWindow {
+    /// Channel FIFO depth in tokens (`DesignParams::channel_depth`).
+    pub depth_tokens: usize,
+    pub cache: WeightCache,
+}
+
+/// DDR traffic of one fused group (components, so the analytic model
+/// and the token-stream split share one byte accounting).
+#[derive(Debug, Clone, Copy)]
+pub struct GroupTraffic {
+    /// Input activation bytes for one streaming pass of the batch.
+    pub in_bytes: u64,
+    /// Weight working set of every layer in the group.
+    pub weight_bytes: u64,
+    /// Output activation bytes spilled at the group boundary.
+    pub out_bytes: u64,
+    /// Input re-streaming passes (analytic model): 1 when the input
+    /// tile fits the on-chip buffer, else one pass per lane-group of
+    /// filters; 2 operand streams for eltwise.
+    pub input_passes: u64,
+}
+
+impl GroupTraffic {
+    /// Total bytes the analytic model charges the group
+    /// (re-streamed inputs + weights + output spill).
+    pub fn analytic_bytes(&self) -> u64 {
+        self.in_bytes * self.input_passes + self.weight_bytes + self.out_bytes
+    }
+
+    /// Bytes on the token simulator's MemRd stream (single input pass
+    /// + weights — the historical stream accounting).
+    pub fn rd_bytes(&self) -> u64 {
+        self.in_bytes + self.weight_bytes
+    }
+}
+
+/// One fused group as the prefetch planner sees it: a token count and
+/// the per-token service intervals its DDR streams and compute floor
+/// imply.  The analytic model calls this with `tokens = 1` and
+/// cycle-granularity intervals; the token simulator with real beat
+/// counts.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupStream {
+    pub tokens: u64,
+    /// Input bytes on the MemRd stream (incl. analytic re-stream
+    /// passes when called from the analytic model).
+    pub in_bytes: u64,
+    pub weight_bytes: u64,
+    pub out_bytes: u64,
+    /// Compute-side service interval (cycles per token) the DDR
+    /// streams overlap against — `max(conv_ii, fused_ii)` in the token
+    /// model, the group's compute cycles in the analytic model.
+    pub compute_ii: f64,
+}
+
+/// The memory hierarchy of one (device, design point) pair — the
+/// single owner of every DDR-bytes, bandwidth-share and on-chip-buffer
+/// computation (module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct MemSystem<'a> {
+    pub ddr: DdrModel,
+    pub prefetch: PrefetchWindow,
+    device: &'a DeviceProfile,
+    params: &'a DesignParams,
+}
+
+impl<'a> MemSystem<'a> {
+    pub fn new(device: &'a DeviceProfile, params: &'a DesignParams) -> Self {
+        MemSystem {
+            ddr: DdrModel::new(device),
+            prefetch: PrefetchWindow {
+                depth_tokens: params.channel_depth,
+                cache: WeightCache::from_kib(params.weight_cache_kib),
+            },
+            device,
+            params,
+        }
+    }
+
+    /// DDR traffic of a fused group at a batch size.
+    ///
+    /// Weight reuse: the weight working set streams from DDR once per
+    /// group invocation (pixels of the whole batch stream against it —
+    /// the paper's data-reuse scheme).  Input activations re-stream
+    /// once per filter-tile pass unless the map fits the on-chip
+    /// buffer (half the M20K budget, double buffered); eltwise reads
+    /// two operand streams.  Element width follows the datapath
+    /// precision.
+    pub fn group_traffic(
+        &self,
+        rows: &[&LayerInfo],
+        kinds: &[&LayerKind],
+        batch: u64,
+    ) -> GroupTraffic {
+        let first = rows[0];
+        let last = rows[rows.len() - 1];
+        let el = self.params.precision.bytes();
+        let in_bytes = first.in_shape.numel() as u64 * el * batch;
+        let out_bytes = last.out_shape.numel() as u64 * el * batch;
+        let weight_bytes: u64 = rows.iter().map(|r| r.params * el).sum();
+
+        let input_passes = match kinds[0] {
+            LayerKind::Conv { out_ch, groups, .. } => {
+                let fits = ((first.in_shape.numel() as u64 * el) as f64)
+                    < self.device.m20k_bytes() * 0.5;
+                if fits {
+                    1
+                } else {
+                    (*out_ch as u64 / *groups as u64)
+                        .div_ceil(self.params.lane_num as u64)
+                }
+            }
+            LayerKind::Eltwise => 2, // two operand streams
+            _ => 1,
+        };
+        GroupTraffic { in_bytes, weight_bytes, out_bytes, input_passes }
+    }
+
+    /// Plan the weight-aware prefetch across group boundaries: bytes
+    /// of each group's weight tile already on chip when its MemRd
+    /// stream starts (`prefetched[0]` is always 0 — nothing precedes
+    /// the first group).  See the module docs for the
+    /// capacity/tile/donor-slack bound and the monotonicity argument.
+    pub fn plan_prefetch(&self, streams: &[GroupStream]) -> Vec<u64> {
+        let mut out = vec![0u64; streams.len()];
+        let cache = self.prefetch.cache.bytes;
+        let bpc = self.ddr.bytes_per_cycle;
+        if cache == 0 || bpc <= 0.0 {
+            return out;
+        }
+        for g in 1..streams.len() {
+            let d = &streams[g - 1];
+            let toks = d.tokens.max(1) as f64;
+            // The donor's own received prefetch frees port time, so
+            // its slack is computed on its *effective* read stream.
+            let rd_bytes = (d.in_bytes + d.weight_bytes) - out[g - 1];
+            let rd_ii = rd_bytes as f64 / bpc / toks;
+            let wr_ii = d.out_bytes as f64 / bpc / toks;
+            let bottleneck = d.compute_ii.max(rd_ii).max(wr_ii);
+            let spare_bytes =
+                ((bottleneck - rd_ii - wr_ii).max(0.0) * toks * bpc).floor();
+            out[g] = (spare_bytes as u64)
+                .min(cache)
+                .min(streams[g].weight_bytes);
+        }
+        out
+    }
+}
+
+/// On-chip buffer bytes of a design point — the M20K demand the
+/// resource model charges against the device:
+///
+/// - input line/window buffer, double buffered: `2 · vec · 16 KiB`;
+/// - weight tile buffer, double buffered: `2 · lane · vec · 2 KiB`;
+/// - channel FIFOs: 3 channels × depth × lane × 4 B;
+/// - the weight prefetch cache (`weight_cache_kib`).
+pub fn on_chip_bytes(params: &DesignParams) -> f64 {
+    let vec = params.vec_size as f64;
+    let lane = params.lane_num as f64;
+    let in_buf = 2.0 * vec * 16.0 * 1024.0;
+    let w_buf = 2.0 * lane * vec * 2.0 * 1024.0;
+    let fifo = 3.0 * params.channel_depth as f64 * lane * 4.0;
+    in_buf + w_buf + fifo + params.weight_cache_kib as f64 * 1024.0
+}
+
+/// Bandwidth fraction a draining group's MemWr stream holds on the
+/// DDR port: one token moves `wr_ii` cycles of write bytes for every
+/// `bottleneck` cycles of steady advance.
+pub fn write_share(wr_ii: f64, bottleneck: f64) -> f64 {
+    if wr_ii <= 0.0 || bottleneck <= 0.0 {
+        0.0
+    } else {
+        (wr_ii / bottleneck).min(1.0)
+    }
+}
+
+/// Completion time of a MemRd service of `r` cycles starting at
+/// `start`, sharing the DDR port with draining writes that hold a
+/// bandwidth fraction `phi` until time `until` (the boundary
+/// contention model of `OverlapPolicy::Full`): only `1 − phi` of each
+/// cycle's bytes are left for reads inside the window, a read
+/// straddling the window edge finishes the remainder at full
+/// bandwidth, and `phi = 1` degenerates to full serialization behind
+/// the writes.
+pub fn contended_finish(start: f64, r: f64, until: f64, phi: f64) -> f64 {
+    if r <= 0.0 || phi <= 0.0 || start >= until {
+        return start + r;
+    }
+    let share = 1.0 - phi;
+    if share > 0.0 {
+        let full = start + r / share;
+        if full <= until {
+            return full;
+        }
+    }
+    // Serve what fits before the writes retire at the reduced share,
+    // the remainder at full bandwidth.
+    until + (r - (until - start) * (1.0 - phi)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{ARRIA10, STRATIX10};
+    use crate::models;
+
+    fn stream(
+        tokens: u64,
+        in_bytes: u64,
+        weight_bytes: u64,
+        out_bytes: u64,
+        compute_ii: f64,
+    ) -> GroupStream {
+        GroupStream { tokens, in_bytes, weight_bytes, out_bytes, compute_ii }
+    }
+
+    fn mem_with_cache(
+        params: &DesignParams,
+    ) -> MemSystem<'_> {
+        MemSystem::new(&STRATIX10, params)
+    }
+
+    #[test]
+    fn ddr_model_matches_device() {
+        let ddr = DdrModel::new(&STRATIX10);
+        assert_eq!(ddr.bytes_per_cycle, STRATIX10.ddr_bytes_per_cycle());
+        // 59 bytes/cycle-ish: 590 bytes is 10 cycles, 591 is 11.
+        let ten = (10.0 * ddr.bytes_per_cycle) as u64;
+        assert_eq!(ddr.cycles_for(ten), 10);
+        assert_eq!(ddr.cycles_for(ten + 1), 11);
+    }
+
+    #[test]
+    fn zero_cache_plans_nothing() {
+        let p = DesignParams::new(16, 11);
+        assert_eq!(p.weight_cache_kib, 0);
+        let mem = mem_with_cache(&p);
+        let streams = [
+            stream(10_000, 1 << 20, 1 << 16, 1 << 20, 100.0),
+            stream(100, 1 << 10, 200 << 20, 1 << 10, 10.0),
+        ];
+        assert_eq!(mem.plan_prefetch(&streams), vec![0, 0]);
+    }
+
+    #[test]
+    fn first_group_never_prefetched() {
+        let mut p = DesignParams::new(16, 11);
+        p.weight_cache_kib = 4096;
+        let mem = mem_with_cache(&p);
+        let streams = [stream(10_000, 1 << 20, 200 << 20, 1 << 20, 100.0)];
+        assert_eq!(mem.plan_prefetch(&streams), vec![0]);
+    }
+
+    #[test]
+    fn prefetch_capped_by_cache_tile_and_donor_slack() {
+        let mut p = DesignParams::new(16, 11);
+        p.weight_cache_kib = 1024; // 1 MiB
+        let mem = mem_with_cache(&p);
+        let bpc = mem.ddr.bytes_per_cycle;
+
+        // Compute-bound donor with plenty of slack: the cache binds.
+        let donor = stream(100_000, 1 << 20, 1 << 16, 1 << 20, 100.0);
+        let big_fc = stream(100, 0, 512 << 20, 1 << 10, 10.0);
+        let plan = mem.plan_prefetch(&[donor, big_fc]);
+        assert_eq!(plan[1], 1024 * 1024, "cache capacity must bind");
+
+        // Tiny weight tile: the tile binds.
+        let small_fc = stream(100, 0, 4096, 1 << 10, 10.0);
+        let plan = mem.plan_prefetch(&[donor, small_fc]);
+        assert_eq!(plan[1], 4096, "tile size must bind");
+
+        // Memory-bound donor (MemRd is the bottleneck): zero slack.
+        let rd_bound = stream(
+            1_000,
+            (1_000.0 * 50.0 * bpc) as u64, // rd_ii = 50 cycles/token
+            0,
+            0,
+            1.0,
+        );
+        let plan = mem.plan_prefetch(&[rd_bound, big_fc]);
+        assert_eq!(plan[1], 0, "an rd-bound donor has no port slack");
+    }
+
+    #[test]
+    fn prefetch_monotone_in_cache_size() {
+        let donor = stream(50_000, 1 << 22, 1 << 18, 1 << 22, 64.0);
+        let fc = stream(500, 0, 300 << 20, 1 << 12, 8.0);
+        let mut last = 0u64;
+        for kib in [0usize, 64, 1024, 4096, 1 << 20] {
+            let mut p = DesignParams::new(16, 11);
+            p.weight_cache_kib = kib;
+            let mem = mem_with_cache(&p);
+            let plan = mem.plan_prefetch(&[donor, fc]);
+            assert!(
+                plan[1] >= last,
+                "prefetch shrank as the cache grew: {} < {last} at {kib} KiB",
+                plan[1]
+            );
+            last = plan[1];
+        }
+        assert!(last > 0);
+    }
+
+    #[test]
+    fn received_prefetch_frees_donor_slack() {
+        // Chain conv -> fc6 -> fc7: fc6 is rd-bound without a cache
+        // (no slack for fc7), but once its own tile is largely
+        // prefetched its port frees up and fc7 receives bytes too.
+        let mut p = DesignParams::new(16, 11);
+        p.weight_cache_kib = 1 << 30; // unbounded for the test
+        let mem = mem_with_cache(&p);
+        let bpc = mem.ddr.bytes_per_cycle;
+        let conv = stream(1 << 20, 1 << 20, 1 << 16, 1 << 20, 256.0);
+        let w6 = (100.0 * 100.0 * bpc) as u64; // rd_ii 100 vs compute 10
+        let fc6 = stream(100, 0, w6, 0, 10.0);
+        let fc7 = stream(100, 0, 64 << 20, 0, 10.0);
+        let plan = mem.plan_prefetch(&[conv, fc6, fc7]);
+        assert_eq!(plan[1], w6, "fc6's whole tile fits the donor slack");
+        assert!(plan[2] > 0, "de-bottlenecked fc6 donates to fc7");
+    }
+
+    #[test]
+    fn group_traffic_components_sum_to_analytic_bytes() {
+        let m = models::alexnet();
+        let infos = m.propagate();
+        let p = DesignParams::new(16, 11);
+        let mem = MemSystem::new(&STRATIX10, &p);
+        for g in crate::models::fusion_groups(&m) {
+            let rows: Vec<&LayerInfo> =
+                g.rows.iter().map(|&i| &infos[i]).collect();
+            let kinds: Vec<&LayerKind> =
+                g.rows.iter().map(|&i| &m.layers[i].kind).collect();
+            let t = mem.group_traffic(&rows, &kinds, 1);
+            assert!(t.input_passes >= 1);
+            assert_eq!(
+                t.analytic_bytes(),
+                t.in_bytes * t.input_passes + t.weight_bytes + t.out_bytes
+            );
+            assert_eq!(t.rd_bytes(), t.in_bytes + t.weight_bytes);
+        }
+    }
+
+    #[test]
+    fn on_chip_bytes_charges_the_cache() {
+        let mut p = DesignParams::new(16, 11);
+        let base = on_chip_bytes(&p);
+        p.weight_cache_kib = 2048;
+        let cached = on_chip_bytes(&p);
+        assert_eq!(cached - base, 2048.0 * 1024.0);
+    }
+
+    #[test]
+    fn write_share_bounds() {
+        assert_eq!(write_share(0.0, 5.0), 0.0);
+        assert_eq!(write_share(1.0, 0.0), 0.0);
+        assert_eq!(write_share(2.0, 8.0), 0.25);
+        assert_eq!(write_share(9.0, 3.0), 1.0);
+    }
+
+    #[test]
+    fn contended_finish_piecewise() {
+        // Clean start past the window: plain service.
+        assert_eq!(contended_finish(10.0, 2.0, 5.0, 0.5), 12.0);
+        // Inside the window at half share: twice the service time.
+        assert_eq!(contended_finish(0.0, 2.0, 100.0, 0.5), 4.0);
+        // Straddling the window edge: remainder at full bandwidth.
+        let f = contended_finish(0.0, 2.0, 1.0, 0.5);
+        assert!((f - 2.5).abs() < 1e-12, "{f}");
+        // Saturated writes: serialized behind the drain.
+        assert_eq!(contended_finish(0.0, 2.0, 7.0, 1.0), 9.0);
+        // Zero-cost read: no bytes, no contention.
+        assert_eq!(contended_finish(3.0, 0.0, 7.0, 0.9), 3.0);
+    }
+
+    #[test]
+    fn prefetch_window_carries_design_knobs() {
+        let mut p = DesignParams::new(32, 11);
+        p.channel_depth = 777;
+        p.weight_cache_kib = 3;
+        let mem = MemSystem::new(&ARRIA10, &p);
+        assert_eq!(mem.prefetch.depth_tokens, 777);
+        assert_eq!(mem.prefetch.cache.bytes, 3 * 1024);
+    }
+}

@@ -10,24 +10,40 @@
 //! 3. per-layer time is the max of compute and DDR traffic when double
 //!    buffering overlaps them.
 //!
-//! [`timing`] encodes those as closed-form per-layer cycle counts
-//! (memoized per layer/design point for sweep reuse); [`pipeline`]
-//! validates them with a token-level simulation of the
-//! channel-connected kernels (bounded FIFOs, backpressure, stalls,
-//! and — under `OverlapPolicy::Full` — cross-group overlap with DDR
-//! contention at the boundaries) behind one [`Simulator`] handle,
-//! with closed-form steady-state fast paths and the O(tokens) loops
-//! kept as exact oracles ([`SimOptions`]); [`resources`] maps a
-//! design point to DSP/M20K/LUT usage and checks it fits the device;
-//! [`dse`] sweeps the design space in parallel (pruning infeasible
-//! points before timing) like the paper's "fully explored" claim,
-//! over `(vec, lane)` × channel depth × overlap policy × precision;
-//! [`device`] holds the board profiles.  The `plan` module ties these
-//! into the `Plan → Deployment` flow.
+//! ## Who owns what
+//!
+//! - [`mem`] owns the **memory hierarchy**: every DDR-bytes formula
+//!   ([`mem::MemSystem::group_traffic`]), the port bandwidth and the
+//!   boundary-contention service model ([`mem::DdrModel`],
+//!   [`mem::contended_finish`]), the M20K budget of the on-chip
+//!   buffers ([`mem::on_chip_bytes`]) and the weight-aware prefetch
+//!   window ([`mem::WeightCache`] / [`mem::MemSystem::plan_prefetch`]
+//!   behind `DesignParams::weight_cache_kib`).  No other module
+//!   computes DDR bytes or charges M20K.
+//! - [`timing`] owns the **compute model**: closed-form per-layer
+//!   cycle counts (memoized per layer/design point for sweep reuse)
+//!   and the per-group analytic schedule, drawing its bytes from
+//!   `mem`.
+//! - [`pipeline`] owns the **token solvers**: the bounded-FIFO
+//!   recurrence, its closed-form fast paths, and — under
+//!   `OverlapPolicy::Full` — the cross-group overlapped stream with
+//!   `mem`'s DDR contention at the boundaries, all behind one
+//!   [`Simulator`] handle ([`SimOptions`] picks fidelity); the
+//!   O(tokens) loops stay available as exact oracles.
+//! - [`resources`] owns the **fit check**: DSP/LUT estimation plus the
+//!   M20K demand it reads from `mem`, so feasibility and timing price
+//!   the same buffer hierarchy.
+//! - [`dse`] sweeps the design space in parallel (pruning infeasible
+//!   points before timing) like the paper's "fully explored" claim,
+//!   over `(vec, lane)` × channel depth × weight cache × overlap
+//!   policy × precision × batch shards; [`device`] holds the board
+//!   profiles.  The `plan` module ties these into the
+//!   `Plan → Deployment` flow.
 
 pub mod channel;
 pub mod device;
 pub mod dse;
+pub mod mem;
 pub mod pipeline;
 pub mod resources;
 pub mod timing;
@@ -37,6 +53,9 @@ pub use device::{DeviceProfile, DEVICES};
 pub use dse::{explore_space, DesignPoint, Fidelity, SweepSpace};
 #[allow(deprecated)]
 pub use dse::{explore, explore_with};
+pub use mem::{
+    DdrModel, GroupTraffic, MemSystem, PrefetchWindow, WeightCache,
+};
 pub use pipeline::{PipelineSim, SimOptions, Simulator};
 #[allow(deprecated)]
 pub use pipeline::{

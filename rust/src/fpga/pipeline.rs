@@ -107,6 +107,7 @@
 //! `tests/plan_facade.rs` pins them bit-equal to the facade.
 
 use super::device::DeviceProfile;
+use super::mem::{contended_finish, write_share, GroupStream, MemSystem};
 use super::timing::{
     layer_compute_cycles_memo, simulate_model, DesignParams, ModelTiming,
     OverlapPolicy,
@@ -252,6 +253,14 @@ impl<'a> Simulator<'a> {
     /// Force (or release) the O(tokens) oracle.
     pub fn exact(mut self, exact: bool) -> Self {
         self.opts.exact = exact;
+        self
+    }
+
+    /// Override the on-chip weight prefetch cache of the design point
+    /// (KiB; 0 disables the weight-aware prefetch window — see
+    /// [`super::mem`]).
+    pub fn weight_cache_kib(mut self, kib: usize) -> Self {
+        self.params.weight_cache_kib = kib;
         self
     }
 
@@ -405,15 +414,10 @@ fn fast_transient_tokens(ii: &[f64; STAGES], depth: u64) -> u64 {
 }
 
 /// Bandwidth fraction a group's MemWr stream holds while its tail
-/// drains: one token moves `wr_ii` cycles of write bytes every
-/// `max_s II_s` cycles of steady advance.
+/// drains (the shared-port model lives in [`super::mem::write_share`]).
 fn wr_share(ii: &[f64; STAGES]) -> f64 {
     let b = ii.iter().cloned().fold(0.0f64, f64::max);
-    if ii[STAGES - 1] <= 0.0 || b <= 0.0 {
-        0.0
-    } else {
-        (ii[STAGES - 1] / b).min(1.0)
-    }
+    write_share(ii[STAGES - 1], b)
 }
 
 /// Exact steps still needed before a steady jump at rate `b` keeps the
@@ -443,26 +447,6 @@ fn anchor_need(
         }
     }
     need
-}
-
-/// Completion time of a MemRd service of `r` cycles starting at
-/// `start`, sharing the DDR port with draining writes that hold a
-/// bandwidth fraction `phi` until time `until` (the contention model
-/// of `OverlapPolicy::Full`; see the module docs).
-fn contended_finish(start: f64, r: f64, until: f64, phi: f64) -> f64 {
-    if r <= 0.0 || phi <= 0.0 || start >= until {
-        return start + r;
-    }
-    let share = 1.0 - phi;
-    if share > 0.0 {
-        let full = start + r / share;
-        if full <= until {
-            return full;
-        }
-    }
-    // Serve what fits before the writes retire at the reduced share,
-    // the remainder at full bandwidth.
-    until + (r - (until - start) * (1.0 - phi)).max(0.0)
 }
 
 /// Mutable recurrence state shared by the exact loops and the fast
@@ -912,17 +896,34 @@ struct GroupSpec {
 
 /// Derive the per-group token counts, stage intervals and compute
 /// floors for a model at a design point (shared by every policy).
+///
+/// The DDR byte accounting comes from [`MemSystem::group_traffic`];
+/// with a nonzero weight cache and an overlapped policy, the planned
+/// prefetch ([`MemSystem::plan_prefetch`]) is subtracted from each
+/// recipient group's MemRd stream — a pure rate adjustment, so every
+/// downstream solver (exact oracle, closed-form fast path, overlapped
+/// stream) is untouched and the fast path stays O(depth + transient).
 fn group_specs(
     model: &Model,
     device: &DeviceProfile,
     params: &DesignParams,
     batch: usize,
+    overlap: OverlapPolicy,
 ) -> Vec<GroupSpec> {
     let infos = model.propagate();
     let groups = fusion_groups(model);
-    let bpc = device.ddr_bytes_per_cycle();
+    let mem = MemSystem::new(device, params);
+    let bpc = mem.ddr.bytes_per_cycle;
     let batch_u = batch as u64;
-    let mut out = Vec::with_capacity(groups.len());
+
+    struct RawSpec {
+        layers: Vec<String>,
+        tokens: u64,
+        conv_ii: f64,
+        traffic: super::mem::GroupTraffic,
+        compute_floor: u64,
+    }
+    let mut raws: Vec<RawSpec> = Vec::with_capacity(groups.len());
 
     for g in &groups {
         let anchor_idx = g.rows[0];
@@ -967,25 +968,12 @@ fn group_specs(
         // Guard against degenerate zero-token groups.
         let tokens = tokens.max(1);
 
-        // Spread the group's DDR traffic across beats.  Element width
-        // follows the datapath precision (fp32 by default), mirroring
-        // the analytic model's accounting.
         let rows: Vec<&crate::models::LayerInfo> =
             g.rows.iter().map(|&i| &infos[i]).collect();
-        let el = params.precision.bytes();
-        let in_bytes = rows[0].in_shape.numel() as u64 * el * batch_u;
-        let w_bytes: u64 = rows.iter().map(|r| r.params * el).sum();
-        let out_bytes =
-            rows[rows.len() - 1].out_shape.numel() as u64 * el * batch_u;
-        let rd_ii = (in_bytes + w_bytes) as f64 / bpc / tokens as f64;
-        let wr_ii = out_bytes as f64 / bpc / tokens as f64;
+        let kinds: Vec<&LayerKind> =
+            g.rows.iter().map(|&i| &model.layers[i].kind).collect();
+        let traffic = mem.group_traffic(&rows, &kinds, batch_u);
 
-        let rates = StageRates {
-            memrd: rd_ii,
-            conv: conv_ii,
-            fused: 1.0,
-            memwr: wr_ii,
-        };
         // Sanity floor: a group can never beat its pure compute bound.
         let compute_floor = g
             .rows
@@ -1000,14 +988,60 @@ fn group_specs(
             })
             .max()
             .unwrap_or(0);
-        out.push(GroupSpec {
+        raws.push(RawSpec {
             layers: rows.iter().map(|r| r.name.clone()).collect(),
             tokens,
-            rates,
+            conv_ii,
+            traffic,
             compute_floor,
         });
     }
-    out
+
+    // Weight-aware prefetch across group boundaries (inert — all
+    // zeros, bit-identical arithmetic — without a cache or under
+    // `OverlapPolicy::None`, where the serialized stages leave no
+    // concurrent window to prefetch in).
+    let plan: Vec<u64> =
+        if params.weight_cache_kib > 0 && overlap != OverlapPolicy::None {
+            let streams: Vec<GroupStream> = raws
+                .iter()
+                .map(|r| GroupStream {
+                    tokens: r.tokens,
+                    in_bytes: r.traffic.in_bytes,
+                    weight_bytes: r.traffic.weight_bytes,
+                    out_bytes: r.traffic.out_bytes,
+                    compute_ii: r.conv_ii.max(1.0),
+                })
+                .collect();
+            mem.plan_prefetch(&streams)
+        } else {
+            vec![0; raws.len()]
+        };
+
+    raws.into_iter()
+        .zip(&plan)
+        .map(|(r, &prefetched)| {
+            // Spread the group's DDR traffic across beats (single
+            // input pass + weights on MemRd — the stream accounting),
+            // minus the weight bytes already prefetched on chip.
+            let rd_ii = (r.traffic.rd_bytes() - prefetched) as f64
+                / bpc
+                / r.tokens as f64;
+            let wr_ii =
+                r.traffic.out_bytes as f64 / bpc / r.tokens as f64;
+            GroupSpec {
+                layers: r.layers,
+                tokens: r.tokens,
+                rates: StageRates {
+                    memrd: rd_ii,
+                    conv: r.conv_ii,
+                    fused: 1.0,
+                    memwr: wr_ii,
+                },
+                compute_floor: r.compute_floor,
+            }
+        })
+        .collect()
 }
 
 /// Simulate one model at token granularity under `WithinGroup`,
@@ -1077,8 +1111,13 @@ fn simulate_tokens_with(
     overlap: OverlapPolicy,
     force_exact: bool,
 ) -> PipelineSim {
-    let specs = group_specs(model, device, params, batch);
-    let depth = params.channel_depth.max(1);
+    let specs = group_specs(model, device, params, batch, overlap);
+    // The channel-depth token bound comes through the memory model's
+    // prefetch window — `fpga::mem` owns what MemRd may run ahead of
+    // the compute frontier (FIFO tokens here, the weight cache in
+    // `group_specs`' rates).
+    let depth =
+        MemSystem::new(device, params).prefetch.depth_tokens.max(1);
     let mut out = Vec::with_capacity(specs.len());
     let mut total = 0u64;
 
@@ -1477,19 +1516,55 @@ mod tests {
         assert_eq!(full_groups, sim.total_cycles, "deltas must sum");
     }
 
+    // --------------------------------------- weight-aware prefetch
+
     #[test]
-    fn contended_finish_piecewise() {
-        // Clean start past the window: plain service.
-        assert_eq!(contended_finish(10.0, 2.0, 5.0, 0.5), 12.0);
-        // Inside the window at half share: twice the service time.
-        assert_eq!(contended_finish(0.0, 2.0, 100.0, 0.5), 4.0);
-        // Straddling the window edge: remainder at full bandwidth.
-        let f = contended_finish(0.0, 2.0, 1.0, 0.5);
-        assert!((f - 2.5).abs() < 1e-12, "{f}");
-        // Saturated writes: serialized behind the drain.
-        assert_eq!(contended_finish(0.0, 2.0, 7.0, 1.0), 9.0);
-        // Zero-cost read: no bytes, no contention.
-        assert_eq!(contended_finish(3.0, 0.0, 7.0, 0.9), 3.0);
+    fn weight_cache_speeds_up_memory_bound_stream() {
+        // FC weight streams at batch 1 are the paper's exposed memory
+        // bound; a 4 MiB on-chip cache prefetching the FC tiles during
+        // the conv groups' compute must strictly cut the overlapped
+        // stream (and never hurt any policy).
+        let p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        for pol in [OverlapPolicy::WithinGroup, OverlapPolicy::Full] {
+            let off = Simulator::new(&m, &STRATIX10, p).policy(pol).run(1);
+            let on = Simulator::new(&m, &STRATIX10, p)
+                .policy(pol)
+                .weight_cache_kib(4096)
+                .run(1);
+            assert!(
+                on.total_cycles < off.total_cycles,
+                "{pol:?}: cache-on {} >= cache-off {}",
+                on.total_cycles,
+                off.total_cycles
+            );
+        }
+        // OverlapPolicy::None has no concurrent window: cache inert.
+        let off = Simulator::new(&m, &STRATIX10, p)
+            .policy(OverlapPolicy::None)
+            .run(1);
+        let on = Simulator::new(&m, &STRATIX10, p)
+            .policy(OverlapPolicy::None)
+            .weight_cache_kib(4096)
+            .run(1);
+        assert_eq!(on.total_cycles, off.total_cycles);
+    }
+
+    #[test]
+    fn zero_weight_cache_is_bit_identical() {
+        let mut p = ffcnn_stratix10_params();
+        let m = models::alexnet();
+        let base = Simulator::new(&m, &STRATIX10, p)
+            .policy(OverlapPolicy::Full)
+            .run(1);
+        p.weight_cache_kib = 0;
+        let zeroed = Simulator::new(&m, &STRATIX10, p)
+            .policy(OverlapPolicy::Full)
+            .run(1);
+        assert_eq!(base.total_cycles, zeroed.total_cycles);
+        for (a, b) in base.groups.iter().zip(&zeroed.groups) {
+            assert_eq!(a.cycles, b.cycles);
+        }
     }
 
     // ------------------------------------------------ batch sharding

@@ -7,7 +7,9 @@
 //!   (one hardened fp32 DSP per MAC on Arria 10 / Stratix 10);
 //! - LRN unit: 5 DSPs (power/exp approximation datapath);
 //! - address generators + data movers: a few DSPs scaling with vec;
-//! - M20K: double-buffered input tile + weight tile + channel FIFOs;
+//! - M20K: the on-chip buffer hierarchy — input tile, weight tile,
+//!   channel FIFOs and the weight prefetch cache — owned and priced by
+//!   [`super::mem::on_chip_bytes`];
 //! - LUTs: control + the adder-tree tail + channel logic.
 //!
 //! Checked against the paper's reported consumption: 379 DSPs on
@@ -57,14 +59,9 @@ pub fn resource_usage(
     let mover_dsps = 2.0 + (vec / 8.0).ceil() + (lane / 8.0).ceil();
     let dsps = (mac_dsps + lrn_dsps + mover_dsps).ceil() as u32;
 
-    // On-chip buffers (bytes):
-    //  - input line/window buffer, double buffered: 2 * vec * 16 KiB
-    //  - weight tile buffer, double buffered:       2 * lane * vec * 2 KiB
-    //  - channel FIFOs: 3 channels * depth * lane * 4 B
-    let in_buf = 2.0 * vec * 16.0 * 1024.0;
-    let w_buf = 2.0 * lane * vec * 2.0 * 1024.0;
-    let fifo = 3.0 * params.channel_depth as f64 * lane * 4.0;
-    let m20k_bytes = in_buf + w_buf + fifo;
+    // On-chip buffers: the memory hierarchy (input tile, weight tile,
+    // channel FIFOs, weight prefetch cache) priced by `fpga::mem`.
+    let m20k_bytes = super::mem::on_chip_bytes(params);
 
     // Control plane + MAC-tree tail + channel logic (thousands of LUTs).
     let luts_k = 80.0 + 0.09 * vec * lane + 0.4 * (vec + lane);
@@ -114,6 +111,21 @@ mod tests {
         assert!(more_lane.dsps > base.dsps);
         assert!(more_vec.m20k_bytes > base.m20k_bytes);
         assert!(more_lane.luts_k > base.luts_k);
+    }
+
+    #[test]
+    fn weight_cache_charged_to_m20k() {
+        // The prefetch cache is not free: its KiB land on the M20K
+        // budget, and a cache bigger than the device prunes the point.
+        let base = DesignParams::new(16, 11);
+        let cached = base.with_weight_cache(2048);
+        let ub = resource_usage(&base, &STRATIX10);
+        let uc = resource_usage(&cached, &STRATIX10);
+        assert_eq!(uc.m20k_bytes - ub.m20k_bytes, 2048.0 * 1024.0);
+        assert_eq!(uc.dsps, ub.dsps);
+        // A cache the size of the whole chip cannot fit.
+        let huge = base.with_weight_cache(1 << 20); // 1 GiB
+        assert!(!resource_usage(&huge, &STRATIX10).fits(&STRATIX10));
     }
 
     #[test]

@@ -13,14 +13,20 @@
 //! Fused stages (ReLU/LRN/Pool, chained on channels) process at >= the
 //! Conv emission rate, so they add pipeline fill, not throughput.
 //! DDR traffic is modelled per fused group (weights once per group
-//! invocation, activations spill only at group boundaries) and overlap
-//! with compute is governed by [`OverlapPolicy`].
+//! invocation, activations spill only at group boundaries) — all byte
+//! accounting is owned by [`super::mem::MemSystem`] — and overlap with
+//! compute is governed by [`OverlapPolicy`].  A nonzero
+//! [`DesignParams::weight_cache_kib`] additionally lets each group's
+//! weight tile prefetch into the on-chip cache during the previous
+//! group's compute slack (`MemSystem::plan_prefetch`), shrinking its
+//! effective memory time under the overlapped policies.
 
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 
 use super::device::DeviceProfile;
+use super::mem::{GroupStream, MemSystem};
 use crate::models::{fusion_groups, LayerInfo, LayerKind, Model, Shape};
 
 /// Tunable design parameters of the accelerator (the paper's design
@@ -33,6 +39,11 @@ pub struct DesignParams {
     pub lane_num: usize,
     /// On-chip channel FIFO depth (tokens).
     pub channel_depth: usize,
+    /// On-chip weight prefetch cache in KiB (0 = disabled).  Charged
+    /// against M20K alongside the channel FIFOs; under the overlapped
+    /// policies it lets MemRd pull the next group's weight tile during
+    /// the previous group's compute (see [`super::mem`]).
+    pub weight_cache_kib: usize,
     /// Host enqueue overhead per fused group, microseconds.
     pub host_us_per_group: f64,
     /// Datapath number format.  The paper deliberately uses fp32
@@ -79,6 +90,7 @@ impl DesignParams {
             vec_size,
             lane_num,
             channel_depth: 512,
+            weight_cache_kib: 0,
             host_us_per_group: 10.0,
             precision: Precision::Fp32,
         }
@@ -86,6 +98,11 @@ impl DesignParams {
 
     pub fn with_precision(mut self, precision: Precision) -> Self {
         self.precision = precision;
+        self
+    }
+
+    pub fn with_weight_cache(mut self, kib: usize) -> Self {
+        self.weight_cache_kib = kib;
         self
     }
 
@@ -131,6 +148,13 @@ pub struct GroupTiming {
     pub anchor_kind: String,
     pub compute_cycles: u64,
     pub mem_bytes: u64,
+    /// Weight bytes of this group already on chip when its MemRd
+    /// stream starts (prefetched during the previous group's compute
+    /// slack; 0 without a weight cache).  `mem_bytes` stays the true
+    /// DDR traffic — prefetch changes *when* bytes move, not how many.
+    pub prefetched_bytes: u64,
+    /// Effective memory service cycles
+    /// (`ceil((mem_bytes - prefetched_bytes) / bytes_per_cycle)`).
     pub mem_cycles: u64,
     /// Pipeline fill + host enqueue, cycles.
     pub overhead_cycles: u64,
@@ -331,48 +355,12 @@ pub fn layer_compute_cycles(
     }
 }
 
-/// DDR bytes moved by a fused group (fp32 activations + weights).
-///
-/// Weight reuse: the weight working set streams from DDR once per group
-/// invocation (pixels of the whole batch stream against it — the
-/// paper's data-reuse scheme).  Input activations re-stream once per
-/// filter-tile pass unless the map fits the on-chip buffer.
-fn group_mem_bytes(
-    rows: &[&LayerInfo],
-    kinds: &[&LayerKind],
-    params: &DesignParams,
-    device: &DeviceProfile,
-    batch: u64,
-) -> u64 {
-    let first = rows[0];
-    let last = rows[rows.len() - 1];
-    // Element width follows the datapath precision (fp32 by default).
-    let el = params.precision.bytes();
-    let in_bytes = first.in_shape.numel() as u64 * el * batch;
-    let out_bytes = last.out_shape.numel() as u64 * el * batch;
-    let weight_bytes: u64 = rows.iter().map(|r| r.params * el).sum();
-
-    let passes = match kinds[0] {
-        LayerKind::Conv { out_ch, groups, .. } => {
-            // Input tile buffer: half the M20K budget (double buffered).
-            let fits = ((first.in_shape.numel() as u64 * el) as f64)
-                < device.m20k_bytes() * 0.5;
-            if fits {
-                1
-            } else {
-                ceil_div(
-                    (*out_ch / *groups) as u64,
-                    params.lane_num as u64,
-                )
-            }
-        }
-        LayerKind::Eltwise => 2, // two operand streams
-        _ => 1,
-    };
-    in_bytes * passes + weight_bytes + out_bytes
-}
-
 /// Simulate a model end-to-end on a device at a design point.
+///
+/// All DDR byte accounting comes from [`MemSystem`]; with a nonzero
+/// weight cache and an overlapped policy, each group's weight tile may
+/// prefetch during the previous group's compute slack
+/// (`MemSystem::plan_prefetch`), shrinking its effective memory time.
 pub fn simulate_model(
     model: &Model,
     device: &DeviceProfile,
@@ -382,13 +370,19 @@ pub fn simulate_model(
 ) -> ModelTiming {
     let infos = model.propagate();
     let groups = fusion_groups(model);
-    let bpc = device.ddr_bytes_per_cycle();
+    let mem = MemSystem::new(device, params);
     let batch_u = batch as u64;
 
     let fill = (3 * params.channel_depth) as u64;
     let host = (params.host_us_per_group * device.fmax_mhz) as u64; // us * MHz = cycles
 
-    let mut out_groups: Vec<GroupTiming> = Vec::with_capacity(groups.len());
+    struct RawGroup {
+        layers: Vec<String>,
+        anchor_kind: String,
+        compute: u64,
+        traffic: super::mem::GroupTraffic,
+    }
+    let mut raws: Vec<RawGroup> = Vec::with_capacity(groups.len());
     let mut dram_unfused: u64 = 0;
 
     for g in &groups {
@@ -403,30 +397,67 @@ pub fn simulate_model(
             .max()
             .unwrap_or(0);
 
-        let mem_bytes = group_mem_bytes(&rows, &kinds, params, device, batch_u);
-        let mem_cycles = (mem_bytes as f64 / bpc).ceil() as u64;
+        let traffic = mem.group_traffic(&rows, &kinds, batch_u);
 
         // Unfused baseline: every row runs as its own singleton group
         // (same cost model — conv re-reads per filter pass, eltwise
         // reads two operands — but every intermediate map spills).
         for (r, k) in rows.iter().zip(&kinds) {
             dram_unfused +=
-                group_mem_bytes(&[r], &[k], params, device, batch_u);
+                mem.group_traffic(&[r], &[k], batch_u).analytic_bytes();
         }
 
+        raws.push(RawGroup {
+            layers: rows.iter().map(|r| r.name.clone()).collect(),
+            anchor_kind: rows
+                .first()
+                .map(|r| r.kind.clone())
+                .unwrap_or_default(),
+            compute,
+            traffic,
+        });
+    }
+
+    // Weight-aware prefetch plan at group granularity: one "token" per
+    // group, intervals in cycles.  The donor slack is then exactly the
+    // `compute − mem` double-buffering headroom, which keeps the
+    // policy ordering structural (see `fpga::mem` docs).  Inert (all
+    // zeros, bit-identical arithmetic) without a cache or under
+    // `OverlapPolicy::None` (serialized stages have no slack to
+    // prefetch in).
+    let plan: Vec<u64> =
+        if params.weight_cache_kib > 0 && overlap != OverlapPolicy::None {
+            let streams: Vec<GroupStream> = raws
+                .iter()
+                .map(|r| GroupStream {
+                    tokens: 1,
+                    in_bytes: r.traffic.in_bytes * r.traffic.input_passes,
+                    weight_bytes: r.traffic.weight_bytes,
+                    out_bytes: r.traffic.out_bytes,
+                    compute_ii: r.compute as f64,
+                })
+                .collect();
+            mem.plan_prefetch(&streams)
+        } else {
+            vec![0; raws.len()]
+        };
+
+    let mut out_groups: Vec<GroupTiming> = Vec::with_capacity(raws.len());
+    for (raw, &prefetched) in raws.into_iter().zip(&plan) {
+        let mem_bytes = raw.traffic.analytic_bytes();
+        let mem_cycles = mem.ddr.cycles_for(mem_bytes - prefetched);
+        let compute = raw.compute;
         let overhead = fill + host;
         let cycles = match overlap {
             OverlapPolicy::None => compute + mem_cycles,
             _ => compute.max(mem_cycles),
         } + overhead;
         out_groups.push(GroupTiming {
-            layers: rows.iter().map(|r| r.name.clone()).collect(),
-            anchor_kind: rows
-                .first()
-                .map(|r| r.kind.clone())
-                .unwrap_or_default(),
+            layers: raw.layers,
+            anchor_kind: raw.anchor_kind,
             compute_cycles: compute,
             mem_bytes,
+            prefetched_bytes: prefetched,
             mem_cycles,
             overhead_cycles: overhead,
             cycles,
@@ -441,9 +472,15 @@ pub fn simulate_model(
     let total_cycles = match overlap {
         OverlapPolicy::Full => {
             // Perfect cross-group prefetch: compute and memory each
-            // pipeline through the whole net.
+            // pipeline through the whole net.  The memory term charges
+            // the *raw* traffic — the weight cache changes when bytes
+            // move, never how many, and a fully pipelined port is
+            // already busy end to end.
             let c: u64 = out_groups.iter().map(|g| g.compute_cycles).sum();
-            let m: u64 = out_groups.iter().map(|g| g.mem_cycles).sum();
+            let m: u64 = out_groups
+                .iter()
+                .map(|g| mem.ddr.cycles_for(g.mem_bytes))
+                .sum();
             let o: u64 = out_groups.iter().map(|g| g.overhead_cycles).sum();
             c.max(m) + o
         }

@@ -20,11 +20,11 @@
 //!
 //! Everything needed to run inference is reified into one typed,
 //! serializable [`plan::Plan`] — model, device, design point
-//! (vectorization × lanes × channel depth × **precision**), overlap
-//! policy, sweep space, timing fidelity, routing policy, board pacing
-//! and serving knobs — built with a validated [`plan::PlanBuilder`]
-//! and resolved into a [`plan::Deployment`] exposing the three verbs
-//! the system has:
+//! (vectorization × lanes × channel depth × **on-chip weight cache**
+//! × **precision**), overlap policy, sweep space, timing fidelity,
+//! routing policy, board pacing and serving knobs — built with a
+//! validated [`plan::PlanBuilder`] and resolved into a
+//! [`plan::Deployment`] exposing the three verbs the system has:
 //!
 //! ```
 //! use ffcnn::plan::Plan;
@@ -66,10 +66,21 @@
 //! paper's deeply cascaded pipeline): MemRd of group g+1 drains DRAM
 //! while MemWr of group g commits, boundary DDR contention is a
 //! shared-bandwidth budget, and the fast path leaps steady interiors
-//! segment-wise.  [`fpga::dse`] sweeps the design space with those
-//! models in parallel — `(vec, lane)` plus channel depth, overlap
-//! on/off and precision — pruning infeasible points before timing
-//! them.
+//! segment-wise.
+//!
+//! The **memory hierarchy** behind both models is one first-class
+//! subsystem, [`fpga::mem`]: it owns every DDR-bytes formula
+//! (`MemSystem::group_traffic`), the port bandwidth/contention
+//! service model, the M20K budget of the on-chip buffers
+//! (`mem::on_chip_bytes`, which `fpga::resources` charges), and the
+//! **weight-aware prefetch window** — an explicit on-chip weight
+//! cache (`DesignParams::weight_cache_kib`) that lets MemRd pull the
+//! next group's weight tile during the previous group's compute
+//! slack, which is where batch-1 FC latency hides.  [`fpga::dse`]
+//! sweeps the design space with those models in parallel —
+//! `(vec, lane)` plus channel depth, weight cache, overlap on/off,
+//! precision and batch shards — pruning infeasible points before
+//! timing them.
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.

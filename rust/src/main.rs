@@ -22,7 +22,7 @@ use ffcnn::fpga::device::DEVICES;
 use ffcnn::fpga::dse::{Fidelity, SweepSpace};
 use ffcnn::fpga::timing::OverlapPolicy;
 use ffcnn::plan::Plan;
-use ffcnn::report::{render_fig1, render_table1, table1_rows_at};
+use ffcnn::report::{render_fig1, render_table1, table1_rows_with};
 use ffcnn::Result;
 
 const USAGE: &str = "\
@@ -32,6 +32,8 @@ USAGE: ffcnn <command> [--key value] [--flag]
 
 COMMANDS:
   table1    [--model alexnet] [--overlap full|within_group|none]
+            [--weight-cache 0]    KiB of on-chip weight prefetch cache
+                                  for the FFCNN rows (ablation)
   fig1      [--model vgg11]                        reproduce Fig. 1
   dse       [--device stratix10] [--model alexnet] [--batch 1]
             [--fidelity analytic|pipeline|pipeline-exact]
@@ -39,6 +41,8 @@ COMMANDS:
             [--precision-sweep]   also sweep fp32/fixed16/fixed8
             [--shard-sweep]       also sweep the batch shard count
                                   (boards per batch; break-even table)
+            [--weight-cache-sweep] also sweep the on-chip weight
+                                  prefetch cache (KiB; M20K trade)
   layers    [--model alexnet] [--device stratix10] [--batch 1]
   pipeline  [--model alexnet] [--device stratix10] [--batch 1] [--exact]
             [--overlap within_group|full|none]
@@ -46,8 +50,13 @@ COMMANDS:
             [--device stratix10] [--iters 3]
   serve     [--model alexnet] [--device stratix10] [--requests 64]
             [--rate 0] [--boards 1] [--max-batch 8] [--pace-fpga]
-            [--batch-size 1]      serve whole batches of this size
-                                  (classify_batch instead of the trace)
+            [--seed 7]            Poisson trace seed (reproducible but
+                                  variable replays)
+            [--batch-size 1]      batch per request: with --rate this
+                                  replays an open-loop *batched* trace
+                                  (E4 shard policies under Poisson
+                                  load); without it, closed-loop
+                                  classify_batch calls
             [--shards 1]          split each batch over this many boards
                                   (needs --batch-size > 1)
   devices                                          list device profiles
@@ -173,20 +182,33 @@ fn overlap_arg(args: &Args, default: &str) -> Result<OverlapPolicy> {
 
 fn cmd_table1(args: &Args) -> Result<()> {
     let overlap = overlap_arg(args, "full")?;
+    let weight_cache = args.get_usize("weight-cache", 0)?;
     let plan = Plan::builder()
         .model(&args.get("model", "alexnet"))
         .overlap(overlap)
+        .weight_cache_kib(weight_cache)
         .build()?;
     let dep = plan.deploy()?;
     let m = dep.model();
     println!(
         "Table 1 — {} ({:.2} GOPs/image, {:.1}M params, FFCNN overlap \
-         {overlap:?})\n",
+         {overlap:?}, weight cache {weight_cache} KiB)\n",
         m.name,
         m.total_ops() as f64 / 1e9,
         m.total_params() as f64 / 1e6
     );
-    println!("{}", render_table1(&table1_rows_at(m, overlap)));
+    println!(
+        "{}",
+        render_table1(&table1_rows_with(m, overlap, weight_cache))
+    );
+    if weight_cache > 0 && overlap == OverlapPolicy::Full {
+        println!(
+            "(note: under Full overlap the analytic model already \
+             assumes perfect cross-group prefetch, so the weight cache \
+             moves nothing here — rerun with --overlap within_group to \
+             see the ablation)"
+        );
+    }
     println!(
         "(times from each design's cycle model; GOPS = executed ops / \
          time, computed uniformly — see EXPERIMENTS.md §T1)"
@@ -225,6 +247,15 @@ fn cmd_dse(args: &Args) -> Result<()> {
         // (`with_shards()` covers the flag-less default).
         space.shards = SweepSpace::with_shards().shards;
     }
+    if args.has("weight-cache-sweep") {
+        // Compose the weight-cache axis the same way; the prefetch
+        // window only fires under cross-group overlap, so make sure
+        // `Full` is in the grid.
+        space.weight_caches = SweepSpace::with_weight_cache().weight_caches;
+        if !space.overlaps.contains(&OverlapPolicy::Full) {
+            space.overlaps.push(OverlapPolicy::Full);
+        }
+    }
     let mut plan = Plan::builder()
         .model(&args.get("model", "alexnet"))
         .device(&args.get("device", "stratix10"))
@@ -244,16 +275,17 @@ fn cmd_dse(args: &Args) -> Result<()> {
         sweep.feasible_count()
     );
     println!(
-        "{:<8}{:<8}{:<8}{:<10}{:<8}{:<14}{:>8}{:>12}{:>10}{:>14}",
-        "vec", "lane", "depth", "prec", "shards", "overlap", "DSPs",
-        "time(ms)", "GOPS", "GOPS/DSP"
+        "{:<8}{:<8}{:<8}{:<10}{:<10}{:<8}{:<14}{:>8}{:>12}{:>10}{:>14}",
+        "vec", "lane", "depth", "cache", "prec", "shards", "overlap",
+        "DSPs", "time(ms)", "GOPS", "GOPS/DSP"
     );
     for p in sweep.pareto() {
         println!(
-            "{:<8}{:<8}{:<8}{:<10}{:<8}{:<14}{:>8}{:>12.2}{:>10.1}{:>14.3}",
+            "{:<8}{:<8}{:<8}{:<10}{:<10}{:<8}{:<14}{:>8}{:>12.2}{:>10.1}{:>14.3}",
             p.params.vec_size,
             p.params.lane_num,
             p.params.channel_depth,
+            format!("{}K", p.params.weight_cache_kib),
             format!("{:?}", p.params.precision),
             p.shards,
             format!("{:?}", p.overlap),
@@ -262,6 +294,24 @@ fn cmd_dse(args: &Args) -> Result<()> {
             p.gops,
             p.gops_per_dsp
         );
+    }
+    if plan.sweep.weight_caches.len() > 1 {
+        println!(
+            "\nbest per weight cache (KiB; latency falls until the \
+             next group's weight tile — or the donor groups' compute \
+             slack — is exhausted, M20K cost rises throughout):"
+        );
+        for (kib, p) in sweep.best_latency_per_weight_cache() {
+            println!(
+                "  {kib:>6} KiB: vec={:<3} lane={:<3} {:?} -> {:>9.4} \
+                 ms/image ({:.2} MB M20K)",
+                p.params.vec_size,
+                p.params.lane_num,
+                p.overlap,
+                p.time_ms,
+                p.usage.m20k_bytes / 1e6
+            );
+        }
     }
     if plan.sweep.shards.len() > 1 {
         // Candidates collapse to their effective splits at this batch
@@ -323,11 +373,12 @@ fn cmd_dse(args: &Args) -> Result<()> {
     }
     if let Some(b) = sweep.best_latency() {
         println!(
-            "\nlatency-optimal: vec={} lane={} depth={} {:?} {:?} -> \
-             {:.2} ms",
+            "\nlatency-optimal: vec={} lane={} depth={} cache={}K {:?} \
+             {:?} -> {:.2} ms",
             b.params.vec_size,
             b.params.lane_num,
             b.params.channel_depth,
+            b.params.weight_cache_kib,
             b.params.precision,
             b.overlap,
             b.time_ms
@@ -345,10 +396,12 @@ fn cmd_dse(args: &Args) -> Result<()> {
         plan.adopt(best);
         println!(
             "plan adopted the latency optimum (design {}x{} depth {} \
-             {:?}, overlap {:?}, shard policy {:?} over {} board(s))",
+             cache {}K {:?}, overlap {:?}, shard policy {:?} over {} \
+             board(s))",
             plan.design.vec_size,
             plan.design.lane_num,
             plan.design.channel_depth,
+            plan.design.weight_cache_kib,
             plan.design.precision,
             plan.overlap,
             plan.serving.shard,
@@ -494,15 +547,9 @@ fn cmd_classify(args: &Args, artifacts: PathBuf) -> Result<()> {
 fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
     let requests = args.get_usize("requests", 64)?;
     let rate = args.get_f64("rate", 0.0)?;
+    let seed = args.get_usize("seed", 7)? as u64;
     let shards = args.get_usize("shards", 1)?;
     let batch_size = args.get_usize("batch-size", 1)?;
-    if batch_size > 1 && rate > 0.0 {
-        return Err(anyhow!(
-            "--rate describes the open-loop single-image trace; \
-             whole-batch serving (--batch-size > 1) is closed-loop — \
-             drop one of the two flags"
-        ));
-    }
     if shards > 1 && batch_size <= 1 {
         // Sharding splits *batches*; the single-image trace path never
         // builds one, so the flag would be silently inert.
@@ -533,9 +580,10 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
     let in_shape = dep.model().in_shape;
 
     let svc = dep.serve()?;
-    if batch_size > 1 {
-        // Whole-batch serving: each request is one flat batch, split
-        // across boards per the shard policy and gathered in order.
+    if batch_size > 1 && rate <= 0.0 {
+        // Closed-loop whole-batch serving: each request is one flat
+        // batch, split across boards per the shard policy and
+        // gathered in order.
         use ffcnn::coordinator::LatencyHistogram;
         let mut hist = LatencyHistogram::new();
         for r in 0..requests {
@@ -552,14 +600,20 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
         println!("batch latency: {}", hist.summary());
         return Ok(());
     }
-    let trace = if rate > 0.0 {
-        data::poisson_trace(requests, rate, 7)
+    // Open-loop trace replay.  With --batch-size > 1 the trace entries
+    // are whole-batch arrivals (Poisson-batched), which travel through
+    // `submit_batch` under the plan's shard policy — the E4 setup for
+    // comparing `ShardPolicy` under Poisson load.
+    let trace = if rate > 0.0 && batch_size > 1 {
+        data::poisson_batch_trace(requests, rate, batch_size, seed)
+    } else if rate > 0.0 {
+        data::poisson_trace(requests, rate, seed)
     } else {
         data::burst_trace(requests)
     };
     let report = svc.run_trace(
         &trace,
-        |id| data::synth_images(1, in_shape, 1000 + id),
+        |t| data::synth_images(t.batch, in_shape, 1000 + t.id),
         1.0,
     );
     println!("{report}");

@@ -9,8 +9,9 @@ use crate::coordinator::InferenceService;
 use crate::fpga::device::DeviceProfile;
 use crate::fpga::dse::{
     best_density, best_density_per_precision, best_latency,
-    best_latency_per_precision, best_latency_per_shards, explore_space,
-    pareto, DesignPoint, Fidelity,
+    best_latency_per_precision, best_latency_per_shards,
+    best_latency_per_weight_cache, explore_space, pareto, DesignPoint,
+    Fidelity,
 };
 use crate::fpga::pipeline::{PipelineSim, Simulator};
 use crate::fpga::resources::{resource_usage, ResourceUsage};
@@ -161,6 +162,15 @@ impl SweepOutcome {
     /// multi-board break-even table (`ffcnn dse --shard-sweep`).
     pub fn best_latency_per_shards(&self) -> Vec<(usize, &DesignPoint)> {
         best_latency_per_shards(&self.points)
+    }
+
+    /// Latency optimum per swept weight-cache size (KiB), ascending —
+    /// the prefetch-window M20K-vs-latency table
+    /// (`ffcnn dse --weight-cache-sweep`).
+    pub fn best_latency_per_weight_cache(
+        &self,
+    ) -> Vec<(usize, &DesignPoint)> {
+        best_latency_per_weight_cache(&self.points)
     }
 
     pub fn feasible_count(&self) -> usize {

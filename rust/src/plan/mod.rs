@@ -93,8 +93,8 @@ pub struct Plan {
     pub model: String,
     /// Device short name (`arria10`, `stratix10`, ...).
     pub device: String,
-    /// Conv engine design point — vectorization, lanes, channel depth
-    /// and datapath precision.
+    /// Conv engine design point — vectorization, lanes, channel
+    /// depth, on-chip weight cache and datapath precision.
     pub design: DesignParams,
     /// DDR/compute overlap policy of the simulated pipeline.
     pub overlap: OverlapPolicy,
@@ -217,12 +217,15 @@ impl Plan {
         if self.sweep.vecs.is_empty()
             || self.sweep.lanes.is_empty()
             || self.sweep.depths.is_empty()
+            || self.sweep.weight_caches.is_empty()
             || self.sweep.overlaps.is_empty()
             || self.sweep.precisions.is_empty()
             || self.sweep.shards.is_empty()
         {
             return Err(anyhow!("sweep space has an empty axis"));
         }
+        // NB: 0 is a legal weight-cache size (= no cache), so the
+        // zero-value check deliberately skips that axis.
         if self.sweep.vecs.contains(&0)
             || self.sweep.lanes.contains(&0)
             || self.sweep.depths.contains(&0)
@@ -398,6 +401,7 @@ pub struct PlanBuilder {
     design: Option<DesignParams>,
     precision: Option<Precision>,
     channel_depth: Option<usize>,
+    weight_cache_kib: Option<usize>,
     overlap: Option<OverlapPolicy>,
     fidelity: Option<Fidelity>,
     policy: Option<Policy>,
@@ -434,6 +438,13 @@ impl PlanBuilder {
     /// Channel FIFO depth, applied on top of the design point.
     pub fn channel_depth(mut self, depth: usize) -> Self {
         self.channel_depth = Some(depth);
+        self
+    }
+
+    /// On-chip weight prefetch cache (KiB), applied on top of the
+    /// design point (0 disables the `fpga::mem` prefetch window).
+    pub fn weight_cache_kib(mut self, kib: usize) -> Self {
+        self.weight_cache_kib = Some(kib);
         self
     }
 
@@ -498,6 +509,9 @@ impl PlanBuilder {
         }
         if let Some(d) = self.channel_depth {
             design.channel_depth = d;
+        }
+        if let Some(w) = self.weight_cache_kib {
+            design.weight_cache_kib = w;
         }
         let plan = Plan {
             model,
@@ -610,6 +624,7 @@ pub(crate) fn design_to_json(d: &DesignParams) -> Json {
         ("vec_size", Json::num(d.vec_size as f64)),
         ("lane_num", Json::num(d.lane_num as f64)),
         ("channel_depth", Json::num(d.channel_depth as f64)),
+        ("weight_cache_kib", Json::num(d.weight_cache_kib as f64)),
         ("host_us_per_group", Json::num(d.host_us_per_group)),
         ("precision", Json::str(precision_to_str(d.precision))),
     ])
@@ -621,6 +636,7 @@ pub(crate) fn design_from_json(v: &Json) -> Result<DesignParams> {
             "vec_size",
             "lane_num",
             "channel_depth",
+            "weight_cache_kib",
             "host_us_per_group",
             "precision",
         ],
@@ -632,6 +648,9 @@ pub(crate) fn design_from_json(v: &Json) -> Result<DesignParams> {
     );
     if let Some(c) = v.opt("channel_depth") {
         d.channel_depth = c.as_usize()?;
+    }
+    if let Some(w) = v.opt("weight_cache_kib") {
+        d.weight_cache_kib = w.as_usize()?;
     }
     if let Some(h) = v.opt("host_us_per_group") {
         d.host_us_per_group = h.as_f64()?;
@@ -650,6 +669,7 @@ fn sweep_to_json(s: &SweepSpace) -> Json {
         ("vecs", nums(&s.vecs)),
         ("lanes", nums(&s.lanes)),
         ("depths", nums(&s.depths)),
+        ("weight_caches", nums(&s.weight_caches)),
         ("shards", nums(&s.shards)),
         (
             "overlaps",
@@ -674,7 +694,15 @@ fn sweep_to_json(s: &SweepSpace) -> Json {
 
 fn sweep_from_json(v: &Json) -> Result<SweepSpace> {
     v.expect_keys(
-        &["vecs", "lanes", "depths", "shards", "overlaps", "precisions"],
+        &[
+            "vecs",
+            "lanes",
+            "depths",
+            "weight_caches",
+            "shards",
+            "overlaps",
+            "precisions",
+        ],
         "sweep",
     )?;
     let mut s = SweepSpace::default();
@@ -686,6 +714,9 @@ fn sweep_from_json(v: &Json) -> Result<SweepSpace> {
     }
     if let Some(x) = v.opt("depths") {
         s.depths = x.as_usize_vec()?;
+    }
+    if let Some(x) = v.opt("weight_caches") {
+        s.weight_caches = x.as_usize_vec()?;
     }
     if let Some(x) = v.opt("shards") {
         s.shards = x.as_usize_vec()?;
@@ -778,18 +809,31 @@ mod tests {
     }
 
     #[test]
-    fn builder_overlays_precision_and_depth() {
+    fn builder_overlays_precision_depth_and_weight_cache() {
         let p = Plan::builder()
             .model("vgg16")
             .precision(Precision::Fixed16)
             .channel_depth(256)
+            .weight_cache_kib(2048)
             .build()
             .unwrap();
         assert_eq!(p.design.precision, Precision::Fixed16);
         assert_eq!(p.design.channel_depth, 256);
+        assert_eq!(p.design.weight_cache_kib, 2048);
         // The rest of the device default point is untouched.
         assert_eq!(p.design.vec_size, 16);
         assert_eq!(p.design.lane_num, 11);
+    }
+
+    #[test]
+    fn weight_cache_sweep_axis_validates() {
+        // 0 is a legal cache size (= off) — only an *empty* axis is
+        // degenerate.
+        let mut plan = Plan::default();
+        plan.sweep.weight_caches = vec![0, 4096];
+        assert!(plan.validate().is_ok());
+        plan.sweep.weight_caches = vec![];
+        assert!(plan.validate().is_err());
     }
 
     #[test]
@@ -810,12 +854,14 @@ mod tests {
 
         plan.design = DesignParams::new(8, 4).with_precision(Precision::Fixed8);
         plan.design.channel_depth = 2048;
+        plan.design.weight_cache_kib = 4096;
         plan.overlap = OverlapPolicy::Full;
         plan.fidelity = Fidelity::PipelineExact;
         plan.policy = Policy::WorkStealing;
         plan.pace = Pace::Fpga;
         plan.sweep = SweepSpace::with_precision_overlap_and_depth();
         plan.sweep.shards = vec![1, 2, 4];
+        plan.sweep.weight_caches = vec![0, 1024, 16384];
         plan.serving.boards = 4;
         plan.serving.shard = ShardPolicy::SplitOver(4);
         let j = plan.to_json().to_string();

@@ -5,4 +5,6 @@ pub mod fig1;
 pub mod table1;
 
 pub use fig1::{fig1_distribution, render_fig1, KindShare};
-pub use table1::{render_table1, table1_rows, table1_rows_at};
+pub use table1::{
+    render_table1, table1_rows, table1_rows_at, table1_rows_with,
+};

@@ -10,6 +10,8 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use anyhow::{anyhow, Context};
+
 use super::json::Json;
 
 /// One measured benchmark.
@@ -163,6 +165,50 @@ impl Bench {
     }
 }
 
+/// Validate a saved bench artifact against the [`Bench::save_json`]
+/// schema: a JSON object with the suite name and a non-empty
+/// `results` array of named timing rows.  The bench binaries' `--check`
+/// dry-run mode calls this in CI right after the benches write their
+/// `BENCH_*.json`, so artifact schema drift fails the job instead of
+/// silently shipping an unreadable file.
+pub fn check_artifact(path: &Path) -> crate::Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| {
+        format!("reading bench artifact {}", path.display())
+    })?;
+    let j = Json::parse(&text)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let suite = j.get("suite")?.as_str()?;
+    let results = j.get("results")?.as_arr()?;
+    if results.is_empty() {
+        return Err(anyhow!("{}: empty results array", path.display()));
+    }
+    for r in results {
+        let name = r.get("name")?.as_str()?;
+        let median = r.get("median_ns")?.as_f64()?;
+        if !name.starts_with(&format!("{suite}/")) || median < 0.0 {
+            return Err(anyhow!(
+                "{}: malformed result row {name:?}",
+                path.display()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// `--check` dry-run entry for the bench binaries: when the process
+/// args contain `--check`, validate `path` (written by a previous
+/// bench run) and return true so `main` exits without re-benching.
+pub fn check_mode(path: &Path) -> bool {
+    if !std::env::args().any(|a| a == "--check") {
+        return false;
+    }
+    match check_artifact(path) {
+        Ok(()) => println!("{}: schema ok", path.display()),
+        Err(e) => panic!("bench artifact check failed: {e:#}"),
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +250,29 @@ mod tests {
             results[0].get("name").unwrap().as_str().unwrap(),
             "suite/spin"
         );
+    }
+
+    #[test]
+    fn check_artifact_accepts_saved_suites_and_rejects_drift() {
+        let dir = std::env::temp_dir().join("ffcnn_bench_check_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_check.json");
+        let mut b = Bench::new("chk").with_budget(Duration::from_millis(5));
+        b.warmup = 0;
+        b.min_iters = 1;
+        b.max_iters = 1;
+        b.run("spin", || 1u64);
+        b.save_json(&path, vec![("extra", Json::num(1.0))]).unwrap();
+        check_artifact(&path).unwrap();
+
+        // Drifted schema (results not an array) must fail loudly.
+        std::fs::write(&path, r#"{"suite":"chk","results":{}}"#).unwrap();
+        assert!(check_artifact(&path).is_err());
+        // Empty results fail too: a bench that measured nothing.
+        std::fs::write(&path, r#"{"suite":"chk","results":[]}"#).unwrap();
+        assert!(check_artifact(&path).is_err());
+        // Missing file: named error, no panic.
+        assert!(check_artifact(&dir.join("nope.json")).is_err());
     }
 
     #[test]

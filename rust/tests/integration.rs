@@ -119,7 +119,7 @@ fn alexnet_served_through_coordinator() {
     let trace = data::burst_trace(6);
     let shape = models::alexnet().in_shape;
     let report =
-        svc.run_trace(&trace, |id| data::synth_images(1, shape, id), 0.0);
+        svc.run_trace(&trace, |t| data::synth_images(1, shape, t.id), 0.0);
     assert_eq!(report.requests, 6);
     assert_eq!(report.errors, 0);
     assert!(report.mean_batch >= 1.0);

@@ -1,0 +1,277 @@
+//! Contract tests for the `fpga::mem` memory-hierarchy refactor:
+//!
+//! - the resource model's M20K/DSP/LUT numbers are bit-equal to the
+//!   pre-refactor closed forms at `weight_cache_kib = 0` over the full
+//!   sweep grid (the refactor moved the math, it must not change it);
+//! - the pinned Table-1 cycle counts are bit-unchanged at zero cache;
+//! - the weight cache is monotone (more cache never slows a design),
+//!   a pure relaxation (zero cache is bit-identical), and preserves
+//!   both the overlap-policy ordering and the fast-vs-exact ≤ 0.1%
+//!   fidelity contract.
+
+use ffcnn::fpga::device::{DeviceProfile, ARRIA10, STRATIX10, STRATIXV};
+use ffcnn::fpga::dse::{DEPTH_CANDIDATES, LANE_CANDIDATES, VEC_CANDIDATES};
+use ffcnn::fpga::pipeline::{PipelineSim, Simulator};
+use ffcnn::fpga::resources::resource_usage;
+use ffcnn::fpga::timing::{
+    ffcnn_stratix10_params, simulate_model, DesignParams, OverlapPolicy,
+    Precision,
+};
+use ffcnn::models;
+use ffcnn::util::prop::{forall, int_in, pick};
+
+fn tok(
+    m: &models::Model,
+    p: &DesignParams,
+    batch: usize,
+    pol: OverlapPolicy,
+    exact: bool,
+) -> PipelineSim {
+    Simulator::new(m, &STRATIX10, *p).policy(pol).exact(exact).run(batch)
+}
+
+// ------------------------------------------ resource-model parity
+
+/// The resource model exactly as it stood before the byte math moved
+/// into `fpga::mem` (PR-4 state), minus the weight cache it did not
+/// know about.
+fn pre_refactor_usage(
+    p: &DesignParams,
+    d: &DeviceProfile,
+) -> (u32, f64, f64) {
+    let vec = p.vec_size as f64;
+    let lane = p.lane_num as f64;
+    let mac_dsps = vec * lane * p.precision.dsp_per_mac(d);
+    let lrn_dsps = 5.0;
+    let mover_dsps = 2.0 + (vec / 8.0).ceil() + (lane / 8.0).ceil();
+    let dsps = (mac_dsps + lrn_dsps + mover_dsps).ceil() as u32;
+    let in_buf = 2.0 * vec * 16.0 * 1024.0;
+    let w_buf = 2.0 * lane * vec * 2.0 * 1024.0;
+    let fifo = 3.0 * p.channel_depth as f64 * lane * 4.0;
+    let luts_k = 80.0 + 0.09 * vec * lane + 0.4 * (vec + lane);
+    (dsps, in_buf + w_buf + fifo, luts_k)
+}
+
+#[test]
+fn m20k_feasibility_parity_with_pre_refactor_model_on_full_grid() {
+    // Identical operation order, so exact f64 equality is the right
+    // assertion: the refactor moved the formulas, not their values.
+    for device in [&ARRIA10, &STRATIX10, &STRATIXV] {
+        for &vec in &VEC_CANDIDATES {
+            for &lane in &LANE_CANDIDATES {
+                for &depth in &DEPTH_CANDIDATES {
+                    for prec in
+                        [Precision::Fp32, Precision::Fixed16, Precision::Fixed8]
+                    {
+                        let mut p =
+                            DesignParams::new(vec, lane).with_precision(prec);
+                        p.channel_depth = depth;
+                        let u = resource_usage(&p, device);
+                        let (dsps, m20k, luts) =
+                            pre_refactor_usage(&p, device);
+                        assert_eq!(u.dsps, dsps, "{vec}x{lane}");
+                        assert_eq!(
+                            u.m20k_bytes, m20k,
+                            "{vec}x{lane} depth {depth} on {}",
+                            device.name
+                        );
+                        assert_eq!(u.luts_k, luts, "{vec}x{lane}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------ pinned cycle counts
+
+#[test]
+fn table1_cycle_pins_bit_unchanged_at_zero_weight_cache() {
+    // The Table-1 regression pins, with the cache dimension explicitly
+    // present and zero: the mem refactor must not move a single cycle.
+    let p = ffcnn_stratix10_params().with_weight_cache(0);
+    let t = simulate_model(
+        &models::alexnet(),
+        &STRATIX10,
+        &p,
+        1,
+        OverlapPolicy::WithinGroup,
+    );
+    let expect: [(&str, u64); 8] = [
+        ("conv1", 630_461),
+        ("conv2", 1_316_486),
+        ("conv3", 856_046),
+        ("conv4", 661_358),
+        ("conv5", 442_334),
+        ("fc6", 2_549_799),
+        ("fc7", 1_135_932),
+        ("fc8", 280_776),
+    ];
+    for (g, (anchor, cycles)) in t.groups.iter().zip(expect) {
+        assert_eq!(g.layers[0], anchor);
+        assert_eq!(g.cycles, cycles, "group {anchor}");
+        assert_eq!(g.prefetched_bytes, 0);
+    }
+    assert_eq!(t.total_cycles, 7_873_192);
+
+    let v1 = simulate_model(
+        &models::vgg16(),
+        &STRATIX10,
+        &p,
+        1,
+        OverlapPolicy::WithinGroup,
+    );
+    assert_eq!(v1.total_cycles, 97_687_131);
+    let v16 = simulate_model(
+        &models::vgg16(),
+        &STRATIX10,
+        &p,
+        16,
+        OverlapPolicy::WithinGroup,
+    );
+    assert_eq!(v16.total_cycles, 1_439_837_664);
+}
+
+// ------------------------------------------------------- monotonicity
+
+#[test]
+fn prop_more_weight_cache_never_slows_a_design() {
+    // Climbing the cache ladder must never slow the token simulator:
+    // the planner only ever *removes* bytes from MemRd streams.  The
+    // solvers get a whisker of slack (8 cycles + 0.001%) because a
+    // rate change can flip a group between the exact loop and the
+    // closed form, which agree only to f64 rounding; any real
+    // regression dwarfs that.
+    forall(
+        "weight-cache-monotone",
+        |r| {
+            let model = *pick(r, &["alexnet", "tinynet", "vgg11"]);
+            let vec = *pick(r, &[8usize, 16, 32]);
+            let lane = int_in(r, 2, 16);
+            let depth = *pick(r, &[64usize, 512, 1024]);
+            (model.to_string(), vec, lane, depth)
+        },
+        |(model, vec, lane, depth)| {
+            let m = models::by_name(model).unwrap();
+            for pol in [OverlapPolicy::WithinGroup, OverlapPolicy::Full] {
+                let mut prev = u64::MAX;
+                for kib in [0usize, 256, 2048, 16384] {
+                    let mut p = DesignParams::new(*vec, *lane)
+                        .with_weight_cache(kib);
+                    p.channel_depth = *depth;
+                    let got = tok(&m, &p, 1, pol, false).total_cycles;
+                    let slack =
+                        if prev == u64::MAX { 0 } else { 8 + prev / 100_000 };
+                    if prev != u64::MAX && got > prev + slack {
+                        eprintln!(
+                            "{model} {vec}x{lane} d{depth} {pol:?}: \
+                             {kib} KiB -> {got} > prev {prev}"
+                        );
+                        return false;
+                    }
+                    prev = prev.min(got);
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_analytic_weight_cache_monotone_and_ordered() {
+    // The analytic model's prefetch is integer math over a monotone
+    // plan: exact monotonicity, and the None >= WithinGroup >= Full
+    // policy ordering survives any cache size (each prefetched cycle
+    // is backed by donor compute the serialized schedule already
+    // paid; ceil rounding gets one cycle per group of slack).
+    forall(
+        "analytic-cache-monotone",
+        |r| {
+            let model =
+                *pick(r, &["alexnet", "vgg16", "resnet50", "tinynet"]);
+            let vec = *pick(r, &[8usize, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            let kib = *pick(r, &[64usize, 1024, 8192, 1 << 20]);
+            (model.to_string(), vec, lane, kib)
+        },
+        |(model, vec, lane, kib)| {
+            let m = models::by_name(model).unwrap();
+            let base = DesignParams::new(*vec, *lane);
+            let cached = base.with_weight_cache(*kib);
+            let run = |p: &DesignParams, o| {
+                simulate_model(&m, &STRATIX10, p, 1, o).total_cycles
+            };
+            let slack = m.layers.len() as u64 + 1;
+            for pol in [
+                OverlapPolicy::None,
+                OverlapPolicy::WithinGroup,
+                OverlapPolicy::Full,
+            ] {
+                if run(&cached, pol) > run(&base, pol) {
+                    return false;
+                }
+            }
+            let none = run(&cached, OverlapPolicy::None);
+            let within = run(&cached, OverlapPolicy::WithinGroup);
+            let full = run(&cached, OverlapPolicy::Full);
+            full <= within + slack && within <= none + slack
+        },
+    );
+}
+
+#[test]
+fn prop_fast_path_tracks_oracle_with_weight_cache() {
+    // The prefetch is a pure rate adjustment, so the closed-form fast
+    // paths must keep the ≤ 0.1% contract at any cache size.
+    forall(
+        "cache-fast-vs-exact",
+        |r| {
+            let model = *pick(r, &["alexnet", "tinynet"]);
+            let vec = *pick(r, &[8usize, 16, 32]);
+            let lane = int_in(r, 1, 32);
+            let depth = *pick(r, &[4usize, 128, 1024]);
+            let kib = *pick(r, &[256usize, 4096, 65536]);
+            let pol =
+                *pick(r, &[OverlapPolicy::WithinGroup, OverlapPolicy::Full]);
+            (model.to_string(), vec, lane, depth, kib, pol)
+        },
+        |(model, vec, lane, depth, kib, pol)| {
+            let m = models::by_name(model).unwrap();
+            let mut p =
+                DesignParams::new(*vec, *lane).with_weight_cache(*kib);
+            p.channel_depth = *depth;
+            let fast = tok(&m, &p, 1, *pol, false).total_cycles;
+            let exact = tok(&m, &p, 1, *pol, true).total_cycles;
+            fast.abs_diff(exact) as f64 <= 1.0 + 1e-3 * exact as f64
+        },
+    );
+}
+
+#[test]
+fn analytic_traffic_accounting_unchanged_by_cache() {
+    // The cache changes *when* bytes move, never how many: DDR traffic
+    // totals (and the fusion-saving decomposition built on them) must
+    // be identical with and without a cache, while per-group
+    // prefetched bytes appear and effective memory cycles shrink.
+    let m = models::alexnet();
+    let base = ffcnn_stratix10_params();
+    let cached = base.with_weight_cache(4096);
+    let a =
+        simulate_model(&m, &STRATIX10, &base, 1, OverlapPolicy::WithinGroup);
+    let b = simulate_model(
+        &m,
+        &STRATIX10,
+        &cached,
+        1,
+        OverlapPolicy::WithinGroup,
+    );
+    assert_eq!(a.dram_bytes, b.dram_bytes);
+    assert_eq!(a.dram_bytes_unfused, b.dram_bytes_unfused);
+    assert_eq!(a.fusion_traffic_saving(), b.fusion_traffic_saving());
+    assert!(b.groups.iter().any(|g| g.prefetched_bytes > 0));
+    for (ga, gb) in a.groups.iter().zip(&b.groups) {
+        assert_eq!(ga.mem_bytes, gb.mem_bytes);
+        assert!(gb.mem_cycles <= ga.mem_cycles);
+    }
+    assert!(b.total_cycles < a.total_cycles);
+}

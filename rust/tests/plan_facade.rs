@@ -36,6 +36,7 @@ fn prop_plan_json_roundtrip_lossless() {
                 int_in(r, 1, 64),
             );
             d.channel_depth = *pick(r, &[1usize, 128, 512, 2048]);
+            d.weight_cache_kib = *pick(r, &[0usize, 256, 4096, 16384]);
             d.precision = *pick(
                 r,
                 &[Precision::Fp32, Precision::Fixed16, Precision::Fixed8],
@@ -76,6 +77,9 @@ fn prop_plan_json_roundtrip_lossless() {
             plan.conv_impl = pick(r, &["jnp", "pallas"]).to_string();
             if r.next_u64() % 2 == 0 {
                 plan.sweep.shards = vec![1, 2, 4, 8];
+            }
+            if r.next_u64() % 2 == 0 {
+                plan.sweep.weight_caches = vec![0, 1024, 4096];
             }
             let boards = int_in(r, 1, 4);
             plan.serving = ServingConfig {
@@ -263,6 +267,7 @@ fn sweep_covers_precision_overlap_depth_in_one_call() {
         s.vecs.len()
             * s.lanes.len()
             * s.depths.len()
+            * s.weight_caches.len()
             * s.precisions.len()
             * s.overlaps.len()
     );
@@ -456,7 +461,7 @@ fn serve_from_builder_end_to_end() {
     let trace = data::burst_trace(8);
     let report = svc.run_trace(
         &trace,
-        |id| data::synth_images(1, (3, 16, 16), id),
+        |t| data::synth_images(1, (3, 16, 16), t.id),
         0.0,
     );
     assert_eq!(report.requests, 8);
