@@ -11,7 +11,7 @@ use std::path::Path;
 use std::time::Duration;
 
 use ffcnn::config::{default_artifacts_dir, ServingConfig, ShardPolicy};
-use ffcnn::coordinator::{plan_chunks, Pace, Policy, Router};
+use ffcnn::coordinator::{plan_chunks, Pace, Policy, Router, StealPool};
 use ffcnn::data;
 use ffcnn::fpga::device::STRATIX10;
 use ffcnn::fpga::pipeline::Simulator;
@@ -39,9 +39,8 @@ fn main() {
         (0..1000usize).map(|n| plan_chunks(n % 37, &[1, 2, 4, 8]).len()).sum::<usize>()
     });
     {
-        let (t1, _r1) = std::sync::mpsc::sync_channel(1024);
-        let (t2, _r2) = std::sync::mpsc::sync_channel(1024);
-        let router = Router::new(vec![t1, t2], Policy::LeastOutstanding);
+        let pool = StealPool::new_pinned(2, 1024);
+        let router = Router::new(pool, Policy::LeastOutstanding);
         b.run("router_pick_10k", || {
             (0..10_000).map(|_| router.pick()).sum::<usize>()
         });

@@ -1,0 +1,174 @@
+//! Bench: the coordinator itself — raw submit→route→batch→gather
+//! speed at `Pace::Immediate` (engine-less boards, no artifacts
+//! needed), pinned into `BENCH_service.json`.
+//!
+//! Three closed-loop shapes on the same service:
+//!
+//! - `per_request_serial`    — submit + wait one at a time: the
+//!   pre-PR client pattern (each request pays a full per-request
+//!   lock/wake round trip).  This is the "old-style path" baseline
+//!   the speedup extra is computed against.
+//! - `per_request_pipelined` — per-request `submit` with all replies
+//!   collected afterwards: per-request enqueue cost, overlapped.
+//! - `bulk_submit_many`      — [`submit_many`] groups: ONE id
+//!   reservation, ONE counter update, ONE pool lock and ONE consumer
+//!   wake per group.  `requests_per_sec`, `p50_ms`/`p99_ms` and
+//!   `allocs_per_request` are measured here.
+//!
+//! [`submit_many`]: ffcnn::coordinator::InferenceService::submit_many
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ffcnn::config::ServingConfig;
+use ffcnn::coordinator::{LatencyHistogram, Pace, Policy};
+use ffcnn::plan::Plan;
+use ffcnn::util::alloc::{allocation_count, CountingAlloc};
+use ffcnn::util::bench::Bench;
+use ffcnn::util::Json;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Requests per iteration of the per-request rows.
+const SERIAL: usize = 256;
+/// Requests per `submit_many` group.
+const GROUP: usize = 256;
+/// Groups per iteration of the bulk row.
+const GROUPS: usize = 16;
+
+fn main() {
+    // `--check` dry-run: validate the previously written artifact's
+    // schema and exit (the CI drift gate).
+    if ffcnn::util::bench::check_mode(Path::new("BENCH_service.json")) {
+        return;
+    }
+    let plan = Plan::builder()
+        .model("tinynet")
+        .pace(Pace::Immediate)
+        .policy(Policy::LeastOutstanding)
+        .serving(ServingConfig {
+            boards: 1,
+            max_batch: 8,
+            max_wait_ms: 0,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let svc = plan.deploy().unwrap().serve().unwrap();
+    // One shared image: the submit path is zero-copy, so the bench
+    // measures the coordinator, not memcpy.
+    let image: Arc<[f32]> =
+        ffcnn::data::synth_images(1, (3, 16, 16), 7).into();
+
+    // Warm every pool to steady state: reply-slot freelist, scratch
+    // bundle, reply slabs, batcher staging, the board's cost-oracle
+    // memo and its reply slab.
+    for _ in 0..4 {
+        let set = svc
+            .submit_many(
+                std::iter::repeat_with(|| image.clone()).take(GROUP),
+            )
+            .unwrap();
+        set.wait_each(|r| {
+            r.unwrap();
+        });
+        let _ = svc.classify(image.clone()).unwrap();
+    }
+
+    let mut b = Bench::new("service").with_budget(Duration::from_secs(3));
+
+    let serial_ns = b
+        .run(&format!("per_request_serial_{SERIAL}"), || {
+            let mut last = 0usize;
+            for _ in 0..SERIAL {
+                last = svc.classify(image.clone()).unwrap().argmax;
+            }
+            last
+        })
+        .median_ns;
+
+    let pipelined_ns = b
+        .run(&format!("per_request_pipelined_{SERIAL}"), || {
+            let mut pend = Vec::with_capacity(SERIAL);
+            for _ in 0..SERIAL {
+                pend.push(svc.submit(image.clone()).unwrap());
+            }
+            let mut last = 0usize;
+            for p in pend {
+                last = p.wait().unwrap().argmax;
+            }
+            last
+        })
+        .median_ns;
+
+    let hist = LatencyHistogram::new();
+    let bulk_ns = b
+        .run(&format!("bulk_submit_many_{}", GROUP * GROUPS), || {
+            let mut served = 0usize;
+            for _ in 0..GROUPS {
+                let set = svc
+                    .submit_many(
+                        std::iter::repeat_with(|| image.clone())
+                            .take(GROUP),
+                    )
+                    .unwrap();
+                set.wait_each(|r| {
+                    hist.record_ms(r.unwrap().latency_ms);
+                    served += 1;
+                });
+            }
+            served
+        })
+        .median_ns;
+
+    // Steady-state allocation audit: one warm bulk group, counted by
+    // the process-wide counting allocator.  (The hard `== 0` assertion
+    // lives in tests/service_hammer.rs on a deterministic window; the
+    // bench records what a full concurrent group observes.)
+    let a0 = allocation_count();
+    let set = svc
+        .submit_many(std::iter::repeat_with(|| image.clone()).take(GROUP))
+        .unwrap();
+    set.wait_each(|r| {
+        r.unwrap();
+    });
+    let allocs_per_request =
+        (allocation_count() - a0) as f64 / GROUP as f64;
+
+    let rps = |total: usize, ns: u128| total as f64 / (ns as f64 / 1e9);
+    let serial_rps = rps(SERIAL, serial_ns);
+    let pipelined_rps = rps(SERIAL, pipelined_ns);
+    let bulk_rps = rps(GROUP * GROUPS, bulk_ns);
+    let summary = hist.summary();
+    println!(
+        "pre-PR style (serial per-request): {serial_rps:.0} req/s\n\
+         per-request pipelined:             {pipelined_rps:.0} req/s\n\
+         bulk submit_many:                  {bulk_rps:.0} req/s \
+         ({:.1}x vs pre-PR style)\n\
+         host latency: p50 {:.3} ms, p99 {:.3} ms | \
+         allocations/request: {allocs_per_request:.3}",
+        bulk_rps / serial_rps,
+        summary.p50_ms,
+        summary.p99_ms
+    );
+
+    b.save_json(
+        Path::new("BENCH_service.json"),
+        vec![
+            ("requests_per_sec", Json::num(bulk_rps)),
+            ("requests_per_sec_pre_pr_style", Json::num(serial_rps)),
+            ("requests_per_sec_pipelined", Json::num(pipelined_rps)),
+            (
+                "speedup_vs_pre_pr_style",
+                Json::num(bulk_rps / serial_rps),
+            ),
+            ("p50_ms", Json::num(summary.p50_ms)),
+            ("p99_ms", Json::num(summary.p99_ms)),
+            ("allocs_per_request", Json::num(allocs_per_request)),
+        ],
+    )
+    .expect("writing BENCH_service.json");
+    b.finish();
+}

@@ -7,10 +7,9 @@
 //! batch sizes that actually exist as AOT artifacts (largest-fit,
 //! [`plan_chunks`]) — no padding, no recompilation.
 //!
-//! Requests arrive over a [`RequestSource`]: a dedicated bounded mpsc
-//! channel (round-robin / least-outstanding routing) or the shared
-//! work-stealing pool (`Policy::WorkStealing`), where an idle batcher
-//! steals queued requests from loaded peers.
+//! Requests arrive over a [`RequestSource`]: the batcher's board index
+//! inside the shared [`StealPool`] — every routing policy uses the
+//! pool backend (pinned or stealing; see the router module docs).
 //!
 //! Zero-copy data plane: request images and reply logits are
 //! `Arc<[f32]>`, so submission, routing and reply fan-out only bump
@@ -19,17 +18,23 @@
 //! per-batcher staging buffer that the board returns after execution.
 //! Replies of multi-request chunks draw their per-request logits
 //! buffers from a per-batcher [`ReplySlab`] that recycles a slot as
-//! soon as its last `Arc` drops, so steady-state batch assembly *and*
-//! reply scatter allocate nothing.
+//! soon as its last `Arc` drops.
+//!
+//! Zero steady-state allocations: the pending queue, the chunk plan,
+//! the staging buffer, the board reply slot ([`OneShot`], re-armed
+//! forever) and the reply buffers are all reused across flushes, so a
+//! warm batcher's whole drain→plan→execute→scatter cycle performs no
+//! heap allocation.
 //!
 //! Pure std threads: the batcher is a thread consuming its source;
-//! replies travel over per-request rendezvous channels.
+//! replies resolve through per-request [`OneShot`] slots owned (and
+//! recycled) by the submitter.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::board::{BatchInput, BatchResult, BoardHandle};
+use super::board::{BatchInput, BatchResult, BoardHandle, ServeError};
+use super::oneshot::{OneShot, OneShotSender};
 use super::router::{Popped, StealPool};
 use crate::Result;
 
@@ -40,7 +45,9 @@ pub struct Request {
     /// never copied on the submit/route path.
     pub image: Arc<[f32]>,
     pub submitted: Instant,
-    pub reply: SyncSender<Result<Reply>>,
+    /// Resolves the submitter's reply slot; dropping it unresolved
+    /// (worker death) surfaces as a typed error on the waiter's side.
+    pub reply: OneShotSender<Result<Reply>>,
 }
 
 /// Completed inference.
@@ -63,49 +70,27 @@ pub struct Reply {
     pub latency_ms: f64,
 }
 
-/// Where a batcher's requests come from.
-pub enum RequestSource {
-    /// Dedicated per-board channel.
-    Channel(Receiver<Request>),
-    /// Shared stealing pool (this batcher's board index inside it).
-    Stealing { pool: Arc<StealPool>, board: usize },
+/// Where a batcher's requests come from: its board's deque in the
+/// shared pool (plus, in stealing pools, loaded peers' deques).
+pub struct RequestSource {
+    pub pool: Arc<StealPool>,
+    pub board: usize,
 }
 
 impl RequestSource {
-    /// Block for the next request; `None` when the source closed.
+    /// Block for the next request; `None` when the pool closed.
     fn recv(&self) -> Option<Request> {
-        match self {
-            RequestSource::Channel(rx) => rx.recv().ok(),
-            RequestSource::Stealing { pool, board } => pool.pop(*board),
-        }
+        self.pool.pop(self.board)
     }
 
     /// Drain without waiting.
     fn try_recv(&self) -> Option<Request> {
-        match self {
-            RequestSource::Channel(rx) => rx.try_recv().ok(),
-            RequestSource::Stealing { pool, board } => pool.try_pop(*board),
-        }
+        self.pool.try_pop(self.board)
     }
 
     /// Wait at most `timeout` for the next request.
     fn recv_timeout(&self, timeout: Duration) -> Popped {
-        match self {
-            RequestSource::Channel(rx) => match rx.recv_timeout(timeout) {
-                Ok(r) => Popped::Req(r),
-                Err(RecvTimeoutError::Timeout) => Popped::TimedOut,
-                Err(RecvTimeoutError::Disconnected) => Popped::Closed,
-            },
-            RequestSource::Stealing { pool, board } => {
-                pool.pop_timeout(*board, timeout)
-            }
-        }
-    }
-}
-
-impl From<Receiver<Request>> for RequestSource {
-    fn from(rx: Receiver<Request>) -> Self {
-        RequestSource::Channel(rx)
+        self.pool.pop_timeout(self.board, timeout)
     }
 }
 
@@ -270,37 +255,53 @@ pub struct BatcherConfig {
 
 /// Split `n` queued requests into artifact-supported chunks,
 /// largest-fit first.  `sizes` must be ascending and contain 1.
-pub fn plan_chunks(mut n: usize, sizes: &[usize]) -> Vec<usize> {
-    debug_assert!(sizes.first() == Some(&1), "need a batch-1 artifact");
+pub fn plan_chunks(n: usize, sizes: &[usize]) -> Vec<usize> {
     let mut out = Vec::new();
+    plan_chunks_into(n, sizes, &mut out);
+    out
+}
+
+/// Allocation-free [`plan_chunks`]: fills `out` (cleared first) so
+/// the batcher's steady state can reuse one plan `Vec` forever.
+pub fn plan_chunks_into(mut n: usize, sizes: &[usize], out: &mut Vec<usize>) {
+    debug_assert!(sizes.first() == Some(&1), "need a batch-1 artifact");
+    out.clear();
     while n > 0 {
         let best =
             sizes.iter().rev().find(|&&s| s <= n).copied().unwrap_or(1);
         out.push(best);
         n -= best;
     }
-    out
 }
 
 /// Per-board batching loop: drain the source, plan chunks, execute,
-/// scatter replies.  Runs until the source closes.
+/// scatter replies.  Runs until the pool closes.  `artifact_for_batch`
+/// returns a shared name (`Arc<str>`) so the steady state clones a
+/// refcount, not a `String`.
 pub fn run_batcher(
     source: RequestSource,
     board: &BoardHandle,
     cfg: &BatcherConfig,
-    artifact_for_batch: impl Fn(usize) -> String,
+    artifact_for_batch: impl Fn(usize) -> Arc<str>,
     image_numel: usize,
     classes: usize,
 ) {
+    // Everything the loop touches per flush is hoisted and reused:
+    // zero allocations per batch once warm.
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    let mut chunks: Vec<usize> = Vec::with_capacity(cfg.max_batch);
     // Reusable gather buffer for multi-request chunks; the board hands
     // it back inside the BatchResult so its capacity is recycled.
     let mut staging: Vec<f32> = Vec::new();
     // Reusable reply buffers for multi-request chunks.
     let mut slab = ReplySlab::new();
+    // One reply slot, re-armed for every board round-trip.
+    let slot = Arc::new(OneShot::new());
     loop {
         // Block for the first request of a batch.
         let Some(first) = source.recv() else { break };
-        let mut pending = vec![first];
+        pending.clear();
+        pending.push(first);
 
         // Eagerly drain whatever is already queued (no waiting).
         while pending.len() < cfg.max_batch {
@@ -334,37 +335,46 @@ pub fn run_batcher(
             }
         }
 
-        for chunk in plan_chunks(pending.len(), &cfg.sizes) {
-            let reqs: Vec<Request> = pending.drain(..chunk).collect();
+        plan_chunks_into(pending.len(), &cfg.sizes, &mut chunks);
+        for &chunk in &chunks {
             let input = if chunk == 1 {
                 // Single-request chunk: share the image, copy nothing.
-                debug_assert_eq!(reqs[0].image.len(), image_numel);
-                BatchInput::Shared(reqs[0].image.clone())
+                debug_assert_eq!(pending[0].image.len(), image_numel);
+                BatchInput::Shared(pending[0].image.clone())
             } else {
                 staging.clear();
                 staging.reserve(chunk * image_numel);
-                for r in &reqs {
+                for r in &pending[..chunk] {
                     debug_assert_eq!(r.image.len(), image_numel);
                     staging.extend_from_slice(&r.image);
                 }
                 BatchInput::Staged(std::mem::take(&mut staging))
             };
             let artifact = artifact_for_batch(chunk);
-            let mut result = board.execute(artifact, chunk, input);
+            let mut result =
+                board.execute_with(artifact, chunk, input, &slot);
             if let Ok(batch) = &mut result {
                 // Reclaim the staging buffer for the next gather.
                 if let Some(buf) = batch.staging.take() {
                     staging = buf;
                 }
             }
-            scatter(reqs, result, board.index, classes, &mut slab);
+            scatter(
+                pending.drain(..chunk),
+                chunk,
+                result,
+                board.index,
+                classes,
+                &mut slab,
+            );
         }
     }
 }
 
-/// Deliver a batch result (or error) to each requester.
+/// Deliver a batch result (or error) to each of the `n` requesters.
 fn scatter(
-    reqs: Vec<Request>,
+    reqs: impl Iterator<Item = Request>,
+    n: usize,
     result: Result<BatchResult>,
     board: usize,
     classes: usize,
@@ -372,8 +382,7 @@ fn scatter(
 ) {
     match result {
         Ok(batch) => {
-            let n = reqs.len();
-            for (i, r) in reqs.into_iter().enumerate() {
+            for (i, r) in reqs.enumerate() {
                 // Batch of one: the whole output buffer is this
                 // request's logits — share it.  Larger batches copy
                 // one small per-request slice into a recycled slab
@@ -389,7 +398,7 @@ fn scatter(
                 let argmax = argmax(&logits);
                 let latency_ms =
                     r.submitted.elapsed().as_secs_f64() * 1e3;
-                let _ = r.reply.send(Ok(Reply {
+                r.reply.send(Ok(Reply {
                     id: r.id,
                     logits,
                     argmax,
@@ -402,11 +411,16 @@ fn scatter(
             }
         }
         Err(e) => {
+            // Keep the typed board-loss error downcastable at every
+            // waiter — a dead board must surface as
+            // `ServeError::BoardLost`, not a stringified shadow.
+            let lost = e.downcast_ref::<ServeError>().copied();
             let msg = e.to_string();
             for r in reqs {
-                let _ = r
-                    .reply
-                    .send(Err(anyhow::anyhow!("batch failed: {msg}")));
+                r.reply.send(Err(match lost {
+                    Some(se) => anyhow::Error::new(se),
+                    None => anyhow::anyhow!("batch failed: {msg}"),
+                }));
             }
         }
     }
@@ -425,6 +439,21 @@ pub fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn slot_and_req(id: u64) -> (Arc<OneShot<Result<Reply>>>, Request) {
+        let slot = Arc::new(OneShot::new());
+        let req = Request {
+            id,
+            image: vec![0.0f32; 4].into(),
+            submitted: Instant::now(),
+            reply: slot.sender(),
+        };
+        (slot, req)
+    }
+
+    fn dummy(id: u64) -> Request {
+        slot_and_req(id).1
+    }
 
     #[test]
     fn plan_chunks_largest_fit() {
@@ -445,6 +474,15 @@ mod tests {
     }
 
     #[test]
+    fn plan_chunks_into_reuses_the_buffer() {
+        let mut out = Vec::with_capacity(8);
+        plan_chunks_into(9, &[1, 4, 8], &mut out);
+        assert_eq!(out, vec![8, 1]);
+        plan_chunks_into(2, &[1, 4, 8], &mut out);
+        assert_eq!(out, vec![1, 1], "cleared before refill");
+    }
+
+    #[test]
     fn argmax_basics() {
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
         assert_eq!(argmax(&[-1.0, -2.0]), 0);
@@ -457,32 +495,21 @@ mod tests {
         // Two requests can share one image buffer; the Arc refcount
         // proves the submit path never deep-copies.
         let img: Arc<[f32]> = vec![0.5f32; 8].into();
-        let (tx, _rx) = std::sync::mpsc::sync_channel(1);
-        let r1 = Request {
-            id: 0,
+        let mk = |id: u64| Request {
+            id,
             image: img.clone(),
             submitted: Instant::now(),
-            reply: tx.clone(),
+            reply: Arc::new(OneShot::new()).sender(),
         };
-        let r2 = Request {
-            id: 1,
-            image: img.clone(),
-            submitted: Instant::now(),
-            reply: tx,
-        };
+        let r1 = mk(0);
+        let r2 = mk(1);
         assert_eq!(Arc::strong_count(&img), 3);
         assert!(Arc::ptr_eq(&r1.image, &r2.image));
     }
 
     #[test]
     fn scatter_batch1_shares_the_output_buffer() {
-        let (tx, rx) = std::sync::mpsc::sync_channel(1);
-        let req = Request {
-            id: 7,
-            image: vec![0.0f32; 4].into(),
-            submitted: Instant::now(),
-            reply: tx,
-        };
+        let (slot, req) = slot_and_req(7);
         let logits: Arc<[f32]> = vec![0.1f32, 0.9, 0.3].into();
         let result = BatchResult {
             logits: logits.clone(),
@@ -492,8 +519,15 @@ mod tests {
             staging: None,
         };
         let mut slab = ReplySlab::new();
-        scatter(vec![req], Ok(result), 0, 3, &mut slab);
-        let reply = rx.recv().unwrap().unwrap();
+        scatter(
+            std::iter::once(req),
+            1,
+            Ok(result),
+            0,
+            3,
+            &mut slab,
+        );
+        let reply = slot.recv().unwrap().unwrap();
         assert_eq!(reply.argmax, 1);
         assert!(Arc::ptr_eq(&reply.logits, &logits), "must share, not copy");
         assert!(slab.is_empty(), "batch-1 replies never touch the slab");
@@ -501,14 +535,8 @@ mod tests {
 
     #[test]
     fn scatter_multi_request_slices_per_request() {
-        let (tx1, rx1) = std::sync::mpsc::sync_channel(1);
-        let (tx2, rx2) = std::sync::mpsc::sync_channel(1);
-        let mk = |id, tx| Request {
-            id,
-            image: vec![0.0f32; 4].into(),
-            submitted: Instant::now(),
-            reply: tx,
-        };
+        let (s1, r1) = slot_and_req(0);
+        let (s2, r2) = slot_and_req(1);
         let result = BatchResult {
             logits: vec![0.9f32, 0.1, 0.2, 0.8].into(),
             batch: 2,
@@ -517,14 +545,66 @@ mod tests {
             staging: None,
         };
         let mut slab = ReplySlab::new();
-        scatter(vec![mk(0, tx1), mk(1, tx2)], Ok(result), 0, 2, &mut slab);
-        let a = rx1.recv().unwrap().unwrap();
-        let b = rx2.recv().unwrap().unwrap();
+        scatter(
+            vec![r1, r2].into_iter(),
+            2,
+            Ok(result),
+            0,
+            2,
+            &mut slab,
+        );
+        let a = s1.recv().unwrap().unwrap();
+        let b = s2.recv().unwrap().unwrap();
         assert_eq!(&a.logits[..], &[0.9, 0.1]);
         assert_eq!(&b.logits[..], &[0.2, 0.8]);
         assert_eq!(a.argmax, 0);
         assert_eq!(b.argmax, 1);
         assert_eq!(slab.len(), 2, "both replies drew slab slots");
+    }
+
+    #[test]
+    fn scatter_errors_fan_out_to_every_waiter() {
+        let (s1, r1) = slot_and_req(0);
+        let (s2, r2) = slot_and_req(1);
+        let mut slab = ReplySlab::new();
+        scatter(
+            vec![r1, r2].into_iter(),
+            2,
+            Err(anyhow::anyhow!("board exploded")),
+            0,
+            2,
+            &mut slab,
+        );
+        for s in [s1, s2] {
+            let err = s.recv().unwrap().unwrap_err();
+            assert!(err.to_string().contains("board exploded"));
+        }
+    }
+
+    #[test]
+    fn scatter_preserves_typed_board_loss_for_every_waiter() {
+        // A board that died mid-chunk reaches the batcher as a typed
+        // `ServeError::BoardLost`; the fan-out must keep it
+        // downcastable at EVERY waiter, not stringify it.
+        let (s1, r1) = slot_and_req(0);
+        let (s2, r2) = slot_and_req(1);
+        let mut slab = ReplySlab::new();
+        scatter(
+            vec![r1, r2].into_iter(),
+            2,
+            Err(anyhow::Error::new(ServeError::BoardLost(5))),
+            5,
+            2,
+            &mut slab,
+        );
+        for s in [s1, s2] {
+            let err = s.recv().unwrap().unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<ServeError>(),
+                Some(&ServeError::BoardLost(5)),
+                "typed board loss lost in the fan-out: {err}"
+            );
+        }
     }
 
     #[test]
@@ -661,28 +741,18 @@ mod tests {
     }
 
     #[test]
-    fn channel_source_roundtrip() {
-        let (tx, rx) = std::sync::mpsc::sync_channel(4);
-        let source: RequestSource = rx.into();
-        tx.send(dummy(1)).unwrap();
+    fn pool_source_roundtrip() {
+        let pool = StealPool::new(1, 4);
+        let source = RequestSource { pool: pool.clone(), board: 0 };
+        pool.try_push(0, dummy(1)).map_err(|_| ()).unwrap();
         assert_eq!(source.recv().unwrap().id, 1);
         assert!(source.try_recv().is_none());
-        tx.send(dummy(2)).unwrap();
+        pool.try_push(0, dummy(2)).map_err(|_| ()).unwrap();
         match source.recv_timeout(Duration::from_millis(50)) {
             Popped::Req(r) => assert_eq!(r.id, 2),
             _ => panic!("expected a request"),
         }
-        drop(tx);
+        pool.close();
         assert!(source.recv().is_none());
-    }
-
-    fn dummy(id: u64) -> Request {
-        let (tx, _rx) = std::sync::mpsc::sync_channel(1);
-        Request {
-            id,
-            image: Vec::new().into(),
-            submitted: Instant::now(),
-            reply: tx,
-        }
     }
 }

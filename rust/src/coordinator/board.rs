@@ -2,50 +2,90 @@
 //!
 //! The PJRT engine is `!Send`, so each board owns it on a dedicated
 //! worker thread (the paper's host-side device context).  Jobs arrive
-//! over an mpsc channel; results return over per-job reply channels —
-//! all std threads, no async runtime (the build environment is
-//! offline; see `util` for the other in-tree substrates).
+//! over a bounded in-place queue; results return over reusable
+//! [`OneShot`] reply slots — all std threads, no async runtime, and no
+//! per-job channel allocation (the build environment is offline; see
+//! `util` for the other in-tree substrates).
 //!
 //! Data plane: job inputs are [`BatchInput`] — either a shared
 //! `Arc<[f32]>` (batch-1 fast path, zero copies crossing the thread)
 //! or a staged gather buffer that the worker returns inside the
 //! [`BatchResult`] so the batcher reuses its capacity.  Output logits
-//! are `Arc<[f32]>` and shared with every reply.  The per-batch FPGA
-//! cycle-model prediction is memoized per batch size in the worker
-//! (the model is deterministic for a fixed board spec), so the serving
-//! hot path does not re-run the simulator on every executed batch.
+//! are `Arc<[f32]>` and shared with every reply.
+//!
+//! Cost oracle: the per-batch FPGA prediction comes from
+//! [`fpga::pipeline::Simulator`](crate::fpga::pipeline::Simulator) at
+//! the board's **full design point** — device, design params
+//! (including `weight_cache_kib`) and overlap policy — memoized per
+//! batch size in the worker.  (The earlier analytic `simulate_model`
+//! memo ignored the weight cache, so a cache-tuned plan served with
+//! stale predictions; ROADMAP item 5.)
 //!
 //! Each executed batch carries *two* timings:
-//! - `host_ms`  — wall-clock of the PJRT execution (numerics, measured);
+//! - `host_ms`  — wall-clock of the host execution (measured);
 //! - `fpga_ms`  — the cycle model's prediction for this batch on the
 //!   board's device/design (simulated — what Table 1 reports).
 //!
-//! With [`Pace::Fpga`] the worker holds the board busy for the
-//! simulated duration, so serving experiments reproduce the *FPGA's*
-//! throughput/queueing behaviour, not the host CPU's.
+//! Pacing: with [`Pace::Fpga`] the worker holds the board busy for
+//! the simulated duration, so serving experiments reproduce the
+//! *FPGA's* queueing behaviour.  [`Pace::Immediate`] skips the engine
+//! entirely (no artifacts needed) and serves shape-correct synthetic
+//! logits at raw host speed — the mode `bench_service` saturates to
+//! measure the coordinator itself.
+//!
+//! Failure model: a worker that panics mid-batch drops the in-flight
+//! and queued reply senders on unwind (a guard closes and drains the
+//! queue), so every waiter observes a typed
+//! [`ServeError::BoardLost`] instead of hanging.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
+use super::batcher::ReplySlab;
+use super::oneshot::{OneShot, OneShotSender};
 use crate::fpga::device::DeviceProfile;
-use crate::fpga::timing::{simulate_model, DesignParams, OverlapPolicy};
+use crate::fpga::pipeline::Simulator;
+use crate::fpga::timing::{DesignParams, OverlapPolicy};
 use crate::models::Model;
 use crate::runtime::Engine;
 use crate::Result;
 
+/// Typed serving-stack failure, downcastable from the `anyhow` chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// The board's worker thread died (panicked or shut down) while
+    /// requests were queued or in flight.
+    BoardLost(usize),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BoardLost(i) => {
+                write!(f, "board-{i} lost: worker thread died mid-batch")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Board pacing mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Pace {
-    /// Return as soon as the host numerics finish (max host speed).
+    /// Run the host numerics and return as soon as they finish.
     None,
     /// Occupy the board for the simulated FPGA batch time.
     Fpga,
+    /// No engine at all: synthesize shape-correct logits and return
+    /// immediately.  Serves without artifacts on disk — the raw-speed
+    /// mode for benchmarking the coordinator hot path itself.
+    Immediate,
 }
 
 /// Input of one batch job.
@@ -101,15 +141,106 @@ pub struct BatchResult {
 }
 
 struct Job {
-    artifact: String,
+    /// Shared artifact name: cloning on submit bumps a refcount
+    /// instead of copying a `String`.
+    artifact: Arc<str>,
     batch: usize,
     input: BatchInput,
-    reply: mpsc::SyncSender<Result<BatchResult>>,
+    reply: OneShotSender<Result<BatchResult>>,
+}
+
+/// In-flight jobs a board accepts before `submit` blocks.  One
+/// batcher feeds one board one chunk at a time, so this only needs to
+/// absorb short submit/execute overlap.
+const QUEUE_DEPTH: usize = 16;
+
+/// Bounded job queue: a preallocated ring the submit path pushes into
+/// without allocating.  Closing wakes everyone; draining drops queued
+/// jobs (and thereby their reply senders).
+struct JobQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+impl JobQueue {
+    fn new(cap: usize) -> Self {
+        JobQueue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Enqueue, blocking while full.  `Err(job)` if the queue closed.
+    fn push(&self, job: Job) -> std::result::Result<(), Job> {
+        let mut st = self.state.lock().unwrap();
+        while st.jobs.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(job);
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while empty.  `None` once closed and drained.
+    fn pop(&self) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close and drop everything still queued.  Dropping a queued job
+    /// drops its reply sender, resolving the waiter with `BoardLost`.
+    fn close_and_drain(&self) {
+        let dropped: Vec<Job> = {
+            let mut st = self.state.lock().unwrap();
+            st.closed = true;
+            st.jobs.drain(..).collect()
+        };
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        drop(dropped);
+    }
+}
+
+/// Closes and drains the queue when the worker thread exits — on the
+/// normal path *and* when a panic unwinds past the worker loop, so
+/// waiters get [`ServeError::BoardLost`] instead of a hang.
+struct DrainOnExit(Arc<JobQueue>);
+
+impl Drop for DrainOnExit {
+    fn drop(&mut self) {
+        self.0.close_and_drain();
+    }
 }
 
 /// Handle to a board worker thread.
 pub struct BoardHandle {
-    tx: mpsc::Sender<Job>,
+    queue: Arc<JobQueue>,
     pub index: usize,
     join: Option<JoinHandle<()>>,
 }
@@ -131,50 +262,82 @@ pub struct BoardSpec {
 impl BoardHandle {
     /// Spawn the worker thread; fails fast if the engine cannot open.
     pub fn spawn(spec: BoardSpec) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Job>();
+        let queue = Arc::new(JobQueue::new(QUEUE_DEPTH));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let index = spec.index;
+        let worker_queue = queue.clone();
         let join = std::thread::Builder::new()
             .name(format!("board-{index}"))
-            .spawn(move || worker(spec, rx, ready_tx))?;
+            .spawn(move || worker(spec, worker_queue, ready_tx))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow!("board-{index} worker died on startup"))??;
-        Ok(BoardHandle { tx, index, join: Some(join) })
+        Ok(BoardHandle { queue, index, join: Some(join) })
     }
 
-    /// Submit a batch; returns a receiver for the result.
-    pub fn submit(
+    /// Submit a batch onto a caller-provided reusable reply slot (the
+    /// allocation-free path — the batcher re-arms one slot forever).
+    pub fn submit_to(
         &self,
-        artifact: String,
+        artifact: Arc<str>,
         batch: usize,
         input: impl Into<BatchInput>,
-    ) -> Result<mpsc::Receiver<Result<BatchResult>>> {
-        let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Job { artifact, batch, input: input.into(), reply })
-            .map_err(|_| anyhow!("board-{} worker gone", self.index))?;
-        Ok(rx)
+        slot: &Arc<OneShot<Result<BatchResult>>>,
+    ) -> Result<()> {
+        let reply = slot.sender();
+        let job = Job { artifact, batch, input: input.into(), reply };
+        if self.queue.push(job).is_err() {
+            // Queue closed: the rejected job just dropped its sender,
+            // resolving the slot as Dropped — consume that so the slot
+            // resets to Idle for reuse.
+            let _ = slot.recv();
+            return Err(anyhow::Error::new(ServeError::BoardLost(self.index)));
+        }
+        Ok(())
+    }
+
+    /// Submit a batch; returns the reply slot to wait on.
+    pub fn submit(
+        &self,
+        artifact: Arc<str>,
+        batch: usize,
+        input: impl Into<BatchInput>,
+    ) -> Result<Arc<OneShot<Result<BatchResult>>>> {
+        let slot = Arc::new(OneShot::new());
+        self.submit_to(artifact, batch, input, &slot)?;
+        Ok(slot)
+    }
+
+    /// Submit on a reusable slot and block for the result.
+    pub fn execute_with(
+        &self,
+        artifact: Arc<str>,
+        batch: usize,
+        input: impl Into<BatchInput>,
+        slot: &Arc<OneShot<Result<BatchResult>>>,
+    ) -> Result<BatchResult> {
+        self.submit_to(artifact, batch, input, slot)?;
+        slot.recv().unwrap_or_else(|| {
+            Err(anyhow::Error::new(ServeError::BoardLost(self.index)))
+        })
     }
 
     /// Submit and block for the result.
     pub fn execute(
         &self,
-        artifact: String,
+        artifact: Arc<str>,
         batch: usize,
         input: impl Into<BatchInput>,
     ) -> Result<BatchResult> {
-        self.submit(artifact, batch, input)?
-            .recv()
-            .map_err(|_| anyhow!("board-{} dropped the job", self.index))?
+        let slot = Arc::new(OneShot::new());
+        self.execute_with(artifact, batch, input, &slot)
     }
 }
 
 impl Drop for BoardHandle {
     fn drop(&mut self) {
-        // Closing the channel stops the worker loop.
-        let (dead_tx, _) = mpsc::channel();
-        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        // Closing the queue stops the worker loop.
+        self.queue.close_and_drain();
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -183,46 +346,71 @@ impl Drop for BoardHandle {
 
 fn worker(
     spec: BoardSpec,
-    rx: mpsc::Receiver<Job>,
+    queue: Arc<JobQueue>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    let engine = match Engine::open(&spec.artifacts_dir) {
-        Ok(e) => e,
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
+    // Immediate pace serves synthetic logits and must work without
+    // artifacts on disk; every other pace needs the engine.
+    let engine = if spec.pace == Pace::Immediate {
+        None
+    } else {
+        match Engine::open(&spec.artifacts_dir) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
         }
     };
-    for name in &spec.warm {
-        if let Err(e) = engine.warm(name) {
-            let _ = ready.send(Err(e));
-            return;
+    if let Some(engine) = &engine {
+        for name in &spec.warm {
+            if let Err(e) = engine.warm(name) {
+                let _ = ready.send(Err(e));
+                return;
+            }
         }
     }
     let _ = ready.send(Ok(()));
 
-    // The FPGA prediction depends only on (spec, batch, policy):
-    // memoize per (batch, overlap) so a future per-job policy override
-    // can never alias a stale prediction for the same batch size.
-    let mut fpga_ms_memo: HashMap<(usize, OverlapPolicy), f64> =
-        HashMap::new();
+    // From here on, any exit — normal or a panic mid-batch — closes
+    // and drains the queue so waiters resolve as BoardLost (typed
+    // error) rather than hanging on a reply that will never come.
+    let _drain = DrainOnExit(queue.clone());
 
-    while let Ok(job) = rx.recv() {
+    // Single serve-side cost oracle (ROADMAP item 5): the pipeline
+    // simulator at the board's FULL design point — device, params
+    // including weight_cache_kib, overlap policy — memoized per batch
+    // size.  The prediction is deterministic for a fixed spec, so the
+    // steady state pays one HashMap probe, no simulation.
+    let sim = Simulator::new(&spec.model, spec.device, spec.design)
+        .policy(spec.overlap);
+    let mut fpga_ms_memo: HashMap<usize, f64> = HashMap::new();
+
+    let (c, h, w) = spec.model.in_shape;
+    let image_numel = c * h * w;
+    let classes = spec
+        .model
+        .propagate()
+        .last()
+        .map(|l| l.out_shape.numel())
+        .unwrap_or(1);
+    // Recycled output buffers for the engine-less Immediate path.
+    let mut slab = ReplySlab::new();
+
+    while let Some(job) = queue.pop() {
         let t0 = Instant::now();
-        let out = engine.execute(&job.artifact, job.input.as_slice());
+        let out: Result<Arc<[f32]>> = match &engine {
+            Some(engine) => engine
+                .execute(&job.artifact, job.input.as_slice())
+                .map(Arc::from),
+            None => {
+                immediate_logits(&mut slab, &job, image_numel, classes)
+            }
+        };
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
         let fpga_ms = *fpga_ms_memo
-            .entry((job.batch, spec.overlap))
-            .or_insert_with(|| {
-                simulate_model(
-                    &spec.model,
-                    spec.device,
-                    &spec.design,
-                    job.batch,
-                    spec.overlap,
-                )
-                .time_ms()
-            });
+            .entry(job.batch)
+            .or_insert_with(|| sim.run(job.batch).time_ms());
         if spec.pace == Pace::Fpga {
             // checked_sub, not compare-then-subtract: the elapsed time
             // can race past the target between two `elapsed()` calls,
@@ -235,14 +423,42 @@ fn worker(
         }
         let staging = job.input.into_staging();
         let result = out.map(|logits| BatchResult {
-            logits: logits.into(),
+            logits,
             batch: job.batch,
             host_ms,
             fpga_ms,
             staging,
         });
-        let _ = job.reply.send(result);
+        job.reply.send(result);
     }
+}
+
+/// Shape-correct synthetic logits for [`Pace::Immediate`]: logit 0 of
+/// image `i` echoes the image's first element (so ordering tests can
+/// match replies to submissions), the rest are zero.  Buffers recycle
+/// through the worker's slab — zero allocations once warm.
+fn immediate_logits(
+    slab: &mut ReplySlab,
+    job: &Job,
+    image_numel: usize,
+    classes: usize,
+) -> Result<Arc<[f32]>> {
+    let input = job.input.as_slice();
+    if input.len() != job.batch * image_numel {
+        return Err(anyhow!(
+            "{}: input has {} elements, batch {} wants {}",
+            job.artifact,
+            input.len(),
+            job.batch,
+            job.batch * image_numel
+        ));
+    }
+    Ok(slab.take_with(job.batch * classes, |out| {
+        out.fill(0.0);
+        for i in 0..job.batch {
+            out[i * classes] = input[i * image_numel];
+        }
+    }))
 }
 
 #[cfg(test)]
@@ -271,6 +487,22 @@ mod tests {
         })
     }
 
+    /// Engine-less board spec: Immediate pace never opens artifacts.
+    fn immediate_spec(overlap: OverlapPolicy, cache_kib: usize) -> BoardSpec {
+        let mut design = ffcnn_stratix10_params();
+        design.weight_cache_kib = cache_kib;
+        BoardSpec {
+            index: 0,
+            artifacts_dir: PathBuf::from("/nonexistent"),
+            model: models::tinynet(),
+            device: &STRATIX10,
+            design,
+            overlap,
+            pace: Pace::Immediate,
+            warm: vec![],
+        }
+    }
+
     #[test]
     fn batch_input_roundtrips() {
         let shared: BatchInput = Arc::<[f32]>::from(vec![1.0f32, 2.0]).into();
@@ -287,9 +519,7 @@ mod tests {
         let Some(spec) = spec_or_skip(Pace::None) else { return };
         let board = BoardHandle::spawn(spec).unwrap();
         let input = vec![0.05f32; 3 * 16 * 16];
-        let r = board
-            .execute("tinynet_b1_jnp".into(), 1, input)
-            .unwrap();
+        let r = board.execute("tinynet_b1_jnp".into(), 1, input).unwrap();
         assert_eq!(r.logits.len(), 10);
         assert!(r.host_ms > 0.0);
         assert!(r.fpga_ms > 0.0);
@@ -308,9 +538,7 @@ mod tests {
             .unwrap();
         assert_eq!(r.staging.as_ref().map(|v| v.len()), Some(3 * 16 * 16));
         let shared: Arc<[f32]> = vec![0.05f32; 3 * 16 * 16].into();
-        let r2 = board
-            .execute("tinynet_b1_jnp".into(), 1, shared)
-            .unwrap();
+        let r2 = board.execute("tinynet_b1_jnp".into(), 1, shared).unwrap();
         assert!(r2.staging.is_none());
     }
 
@@ -328,14 +556,14 @@ mod tests {
     fn submit_is_asynchronous() {
         let Some(spec) = spec_or_skip(Pace::None) else { return };
         let board = BoardHandle::spawn(spec).unwrap();
-        let rx1 = board
+        let s1 = board
             .submit("tinynet_b1_jnp".into(), 1, vec![0.1f32; 3 * 16 * 16])
             .unwrap();
-        let rx2 = board
+        let s2 = board
             .submit("tinynet_b1_jnp".into(), 1, vec![0.2f32; 3 * 16 * 16])
             .unwrap();
-        assert!(rx1.recv().unwrap().is_ok());
-        assert!(rx2.recv().unwrap().is_ok());
+        assert!(s1.recv().expect("board alive").is_ok());
+        assert!(s2.recv().expect("board alive").is_ok());
     }
 
     #[test]
@@ -351,5 +579,62 @@ mod tests {
             warm: vec![],
         };
         assert!(BoardHandle::spawn(spec).is_err());
+    }
+
+    #[test]
+    fn immediate_board_serves_without_artifacts() {
+        let spec = immediate_spec(OverlapPolicy::WithinGroup, 0);
+        let board = BoardHandle::spawn(spec).unwrap();
+        let numel = 3 * 16 * 16;
+        let mut input = vec![0.0f32; 2 * numel];
+        input[0] = 7.0;
+        input[numel] = 9.0;
+        let r = board.execute("immediate_b2".into(), 2, input).unwrap();
+        assert_eq!(r.logits.len(), 2 * 10);
+        assert_eq!(r.logits[0], 7.0, "image identity carried to logit 0");
+        assert_eq!(r.logits[10], 9.0);
+        assert!(r.fpga_ms > 0.0, "cost oracle still runs engine-less");
+        // Wrong-sized inputs surface as typed engine-style errors.
+        let err = board
+            .execute("immediate_b1".into(), 1, vec![0.0f32; 5])
+            .unwrap_err();
+        assert!(err.to_string().contains("input has 5"));
+    }
+
+    #[test]
+    fn fpga_ms_comes_from_the_full_design_point_simulator() {
+        // ROADMAP item 5 regression: the serve-side prediction must
+        // match fpga::pipeline::Simulator at the board's full design
+        // point (weight cache included), not the cache-unaware
+        // analytic model.
+        for cache_kib in [0usize, 512] {
+            let spec = immediate_spec(OverlapPolicy::Full, cache_kib);
+            let model = spec.model.clone();
+            let design = spec.design;
+            let board = BoardHandle::spawn(spec).unwrap();
+            let numel = 3 * 16 * 16;
+            let r = board
+                .execute("immediate_b4".into(), 4, vec![0.5f32; 4 * numel])
+                .unwrap();
+            let expect = Simulator::new(&model, &STRATIX10, design)
+                .policy(OverlapPolicy::Full)
+                .run(4)
+                .time_ms();
+            assert!(
+                (r.fpga_ms - expect).abs() < 1e-12,
+                "board fpga_ms {} != simulator {} (cache {} KiB)",
+                r.fpga_ms,
+                expect,
+                cache_kib
+            );
+        }
+    }
+
+    #[test]
+    fn dropped_board_resolves_waiters_as_board_lost() {
+        let spec = immediate_spec(OverlapPolicy::WithinGroup, 0);
+        let board = BoardHandle::spawn(spec).unwrap();
+        drop(board);
+        // (A fuller mid-flight variant lives in tests/service_hammer.)
     }
 }

@@ -1,18 +1,30 @@
 //! Latency/throughput metrics for the serving coordinator.
 //!
-//! A fixed log-spaced histogram (no allocations on the hot path) plus
-//! summary extraction — the numbers `examples/serve_batch.rs` reports
-//! into EXPERIMENTS.md §E4.
+//! A fixed log-spaced histogram plus summary extraction — the numbers
+//! `examples/serve_batch.rs` reports into EXPERIMENTS.md §E4.
+//!
+//! Recording is **lock-free**: every counter is an atomic, so N
+//! submitter threads can share one histogram behind a plain `&` (or
+//! an `Arc`) and `record_us` never takes a lock and never allocates —
+//! one relaxed `fetch_add` on a bucket plus four padded scalar
+//! updates.  Readers (`quantile_ms`, `summary`) take a relaxed
+//! snapshot; they are reporting-path only and tolerate concurrent
+//! recording.
 
-/// Log-spaced latency histogram from 1 µs to ~100 s.
-#[derive(Debug, Clone)]
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pool::Padded;
+
+/// Log-spaced latency histogram from 1 µs to ~100 s.  All methods
+/// take `&self`; share freely across threads.
+#[derive(Debug)]
 pub struct LatencyHistogram {
     /// bucket i covers [BASE * GROWTH^i, BASE * GROWTH^(i+1)) µs.
-    buckets: Vec<u64>,
-    count: u64,
-    sum_us: u64,
-    max_us: u64,
-    min_us: u64,
+    buckets: Box<[AtomicU64]>,
+    count: Padded<AtomicU64>,
+    sum_us: Padded<AtomicU64>,
+    max_us: Padded<AtomicU64>,
+    min_us: Padded<AtomicU64>,
 }
 
 const NBUCKETS: usize = 128;
@@ -24,14 +36,25 @@ impl Default for LatencyHistogram {
     }
 }
 
+impl Clone for LatencyHistogram {
+    fn clone(&self) -> Self {
+        let h = LatencyHistogram::new();
+        h.merge(self);
+        h
+    }
+}
+
 impl LatencyHistogram {
     pub fn new() -> Self {
         LatencyHistogram {
-            buckets: vec![0; NBUCKETS],
-            count: 0,
-            sum_us: 0,
-            max_us: 0,
-            min_us: u64::MAX,
+            buckets: (0..NBUCKETS)
+                .map(|_| AtomicU64::new(0))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            count: Padded::new(AtomicU64::new(0)),
+            sum_us: Padded::new(AtomicU64::new(0)),
+            max_us: Padded::new(AtomicU64::new(0)),
+            min_us: Padded::new(AtomicU64::new(u64::MAX)),
         }
     }
 
@@ -48,79 +71,103 @@ impl LatencyHistogram {
         GROWTH.powi(i as i32)
     }
 
-    pub fn record_us(&mut self, us: u64) {
-        self.buckets[Self::bucket_of(us)] += 1;
-        self.count += 1;
-        // Saturating: one absurd sample (a clock jump, `f64::INFINITY`
-        // latency cast to u64::MAX) must not wrap the running sum and
-        // corrupt every later mean (coordinator hardening pass).
-        self.sum_us = self.sum_us.saturating_add(us);
-        self.max_us = self.max_us.max(us);
-        self.min_us = self.min_us.min(us);
+    /// Saturating add on an atomic sum: one absurd sample (a clock
+    /// jump, `f64::INFINITY` latency cast to u64::MAX) must not wrap
+    /// the running sum and corrupt every later mean.
+    fn saturating_fetch_add(sum: &AtomicU64, us: u64) {
+        let mut cur = sum.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(us);
+            match sum.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
-    pub fn record_ms(&mut self, ms: f64) {
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        Self::saturating_fetch_add(&self.sum_us, us);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+    }
+
+    pub fn record_ms(&self, ms: f64) {
         self.record_us((ms * 1e3).round().max(0.0) as u64);
     }
 
     pub fn count(&self) -> u64 {
-        self.count
+        self.count.load(Ordering::Relaxed)
     }
 
     /// Approximate quantile (bucket lower-edge interpolation), ms.
     pub fn quantile_ms(&self, q: f64) -> f64 {
-        if self.count == 0 {
+        let count = self.count();
+        if count == 0 {
             return 0.0;
         }
-        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let target = ((count as f64) * q).ceil().max(1.0) as u64;
         let mut seen = 0u64;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
+        for (i, c) in self.buckets.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
             if seen >= target {
                 return Self::bucket_floor(i) / 1e3;
             }
         }
-        self.max_us as f64 / 1e3
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
     pub fn mean_ms(&self) -> f64 {
-        if self.count == 0 {
+        let count = self.count();
+        if count == 0 {
             0.0
         } else {
-            self.sum_us as f64 / self.count as f64 / 1e3
+            self.sum_us.load(Ordering::Relaxed) as f64 / count as f64 / 1e3
         }
     }
 
     pub fn max_ms(&self) -> f64 {
-        if self.count == 0 {
+        if self.count() == 0 {
             0.0
         } else {
-            self.max_us as f64 / 1e3
+            self.max_us.load(Ordering::Relaxed) as f64 / 1e3
         }
     }
 
     pub fn min_ms(&self) -> f64 {
-        if self.count == 0 {
+        if self.count() == 0 {
             0.0
         } else {
-            self.min_us as f64 / 1e3
+            self.min_us.load(Ordering::Relaxed) as f64 / 1e3
         }
     }
 
     /// Merge another histogram into this one.
-    pub fn merge(&mut self, other: &LatencyHistogram) {
-        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
-            *a += b;
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
         }
-        self.count += other.count;
-        self.sum_us = self.sum_us.saturating_add(other.sum_us);
-        self.max_us = self.max_us.max(other.max_us);
-        self.min_us = self.min_us.min(other.min_us);
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        Self::saturating_fetch_add(
+            &self.sum_us,
+            other.sum_us.load(Ordering::Relaxed),
+        );
+        self.max_us
+            .fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_us
+            .fetch_min(other.min_us.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     pub fn summary(&self) -> LatencySummary {
         LatencySummary {
-            count: self.count,
+            count: self.count(),
             mean_ms: self.mean_ms(),
             p50_ms: self.quantile_ms(0.50),
             p95_ms: self.quantile_ms(0.95),
@@ -166,7 +213,7 @@ mod tests {
 
     #[test]
     fn quantiles_ordered() {
-        let mut h = LatencyHistogram::new();
+        let h = LatencyHistogram::new();
         for i in 1..=1000u64 {
             h.record_us(i * 100);
         }
@@ -179,7 +226,7 @@ mod tests {
 
     #[test]
     fn quantile_accuracy_within_bucket_resolution() {
-        let mut h = LatencyHistogram::new();
+        let h = LatencyHistogram::new();
         for _ in 0..1000 {
             h.record_ms(10.0);
         }
@@ -190,7 +237,7 @@ mod tests {
 
     #[test]
     fn mean_and_extremes_exact() {
-        let mut h = LatencyHistogram::new();
+        let h = LatencyHistogram::new();
         h.record_ms(1.0);
         h.record_ms(3.0);
         assert!((h.mean_ms() - 2.0).abs() < 1e-9);
@@ -200,8 +247,8 @@ mod tests {
 
     #[test]
     fn merge_combines_counts() {
-        let mut a = LatencyHistogram::new();
-        let mut b = LatencyHistogram::new();
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
         a.record_ms(5.0);
         b.record_ms(50.0);
         b.record_ms(0.5);
@@ -212,7 +259,7 @@ mod tests {
 
     #[test]
     fn huge_latency_clamps_to_last_bucket() {
-        let mut h = LatencyHistogram::new();
+        let h = LatencyHistogram::new();
         h.record_us(u64::MAX / 2);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_ms(0.5) > 0.0);
@@ -223,24 +270,53 @@ mod tests {
         // Two near-u64::MAX samples (an infinite latency cast
         // saturates to u64::MAX) would wrap a plain `+=` sum; the
         // saturating form keeps mean/max monotone and finite.
-        let mut h = LatencyHistogram::new();
+        let h = LatencyHistogram::new();
         h.record_ms(f64::INFINITY);
         h.record_us(u64::MAX);
         assert_eq!(h.count(), 2);
         assert!(h.mean_ms() > 0.0);
         assert!(h.mean_ms() <= h.max_ms());
         // NaN degrades to a zero sample instead of poisoning the sums.
-        let mut h = LatencyHistogram::new();
+        let h = LatencyHistogram::new();
         h.record_ms(f64::NAN);
         assert_eq!(h.count(), 1);
         assert_eq!(h.mean_ms(), 0.0);
         // Merging saturated histograms saturates too.
-        let mut a = LatencyHistogram::new();
-        let mut b = LatencyHistogram::new();
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
         a.record_us(u64::MAX);
         b.record_us(u64::MAX);
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!(a.mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn clone_snapshots_the_counters() {
+        let h = LatencyHistogram::new();
+        h.record_ms(2.0);
+        let snap = h.clone();
+        h.record_ms(100.0);
+        assert_eq!(snap.count(), 1);
+        assert_eq!(h.count(), 2);
+        assert!((snap.max_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record_us(i + 1);
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
     }
 }

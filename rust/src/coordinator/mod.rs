@@ -3,37 +3,79 @@
 //!
 //! FFCNN's host program is thin — "very small host CPU involvement" —
 //! because the FPGA pipeline runs whole fused layer chains per enqueue.
-//! This module is that host program grown into a production shape:
+//! This module is that host program grown into a production shape, and
+//! since the simulated boards cost microseconds per batch, the
+//! coordinator itself IS the throughput ceiling — so the hot path
+//! (`submit → route → batch → gather`) is built lock-light and
+//! allocation-free:
 //!
-//! - [`board`]   — one engine thread per simulated board (PJRT numerics
-//!   + FPGA cycle model timing, optionally pacing the board);
+//! - [`oneshot`] — reusable single-value rendezvous slots.  A reply is
+//!   one mutex-protected state word per request, re-armed forever from
+//!   a lock-free [`ArcStack`] freelist; dropping an unresolved sender
+//!   (a dead board thread) resolves the waiter with a typed
+//!   [`ServeError::BoardLost`] instead of a hang.
+//! - [`pool`] — the memory machinery: [`Padded`] (cache-line-aligned
+//!   atomics, no false sharing between hot counters), [`ArcStack`]
+//!   (lock-free `Arc` slot pool) and [`StripedSlab`] (per-thread
+//!   stripes over the reply-buffer slab, so N submitters never
+//!   serialize on one slab mutex).
+//! - [`router`] — a shared [`StealPool`] (bounded per-board queues,
+//!   pinned or work-stealing) plus the [`Router`] policy layer:
+//!   round-robin / least-outstanding / work-stealing with admission
+//!   control.  Queue depths and outstanding counts are padded atomics
+//!   read lock-free; [`Router::route_many`] lands a whole group under
+//!   ONE lock, one counter update and one consumer wake.
 //! - [`batcher`] — dynamic batching onto the AOT'd batch sizes over a
 //!   zero-copy data plane (`Arc<[f32]>` images/logits, reusable
-//!   staging buffers, slab-recycled reply logits — see the module
-//!   docs);
-//! - [`router`]  — round-robin / least-outstanding / work-stealing
-//!   board routing with admission control (idle boards steal queued
-//!   requests from loaded peers, so one slow batch cannot strand
-//!   work);
-//! - [`service`] — the facade: `classify()`, `submit()`, `run_trace()`;
-//! - [`metrics`] — latency histograms for the reports.
+//!   staging buffers, slab-recycled reply logits, chunk plans and the
+//!   board reply slot hoisted out of the loop — a warm batcher's
+//!   drain→plan→execute→scatter cycle performs no heap allocation).
+//! - [`board`]   — one engine thread per simulated board (PJRT
+//!   numerics + FPGA cycle-model timing via the full-design-point
+//!   `fpga::pipeline::Simulator` oracle, optionally pacing the board;
+//!   `Pace::Immediate` skips the engine entirely for raw coordinator
+//!   benchmarking).
+//! - [`service`] — the facade: `classify()`, `submit()`,
+//!   `submit_many()` (bulk-amortized), `submit_batch()` (sharded),
+//!   `run_trace()`.  Reply slots, scratch bundles and gather buffers
+//!   all recycle through [`service::InferenceService`]'s shared pools.
+//! - [`metrics`] — lock-free atomic latency histograms for the
+//!   reports.
 //!
-//! Everything is std threads + mpsc (no async runtime in the offline
-//! build environment); the PJRT engine's `!Send` wrappers pin each
-//! engine to its board thread anyway, which keeps the design honest.
+//! `rust/benches/bench_service.rs` pins the resulting throughput
+//! (BENCH_service.json); `rust/tests/service_hammer.rs` asserts the
+//! ordering, isolation and zero-allocation claims under concurrency.
+//!
+//! Everything is std threads (no async runtime in the offline build
+//! environment); the PJRT engine's `!Send` wrappers pin each engine to
+//! its board thread anyway, which keeps the design honest.
+//!
+//! [`ArcStack`]: pool::ArcStack
+//! [`Padded`]: pool::Padded
+//! [`StripedSlab`]: pool::StripedSlab
+//! [`StealPool`]: router::StealPool
+//! [`Router`]: router::Router
+//! [`Router::route_many`]: router::Router::route_many
+//! [`ServeError::BoardLost`]: board::ServeError::BoardLost
 
 pub mod batcher;
 pub mod board;
 pub mod metrics;
+pub mod oneshot;
+pub mod pool;
 pub mod router;
 pub mod service;
 
 pub use batcher::{
     argmax, plan_chunks, Reply, ReplySlab, Request, RequestSource,
 };
-pub use board::{BatchInput, BatchResult, BoardHandle, BoardSpec, Pace};
+pub use board::{
+    BatchInput, BatchResult, BoardHandle, BoardSpec, Pace, ServeError,
+};
 pub use metrics::{LatencyHistogram, LatencySummary};
-pub use router::{Policy, Router, StealPool};
+pub use oneshot::{OneShot, OneShotSender};
+pub use pool::{ArcStack, Padded, StripedSlab};
+pub use router::{Policy, Router, RouterGuard, StealPool};
 pub use service::{
-    InferenceService, PendingBatch, PendingReply, ServeReport,
+    InferenceService, PendingBatch, PendingReply, PendingSet, ServeReport,
 };

@@ -1,0 +1,214 @@
+//! Reusable one-shot reply slots for the serving hot path.
+//!
+//! `std::sync::mpsc` allocates on every `send`, which disqualifies it
+//! from a zero-allocation steady state.  A [`OneShot`] is a tiny
+//! condvar-guarded state machine that carries exactly one value per
+//! *arming*, and — crucially — can be re-armed and reused after the
+//! value is consumed, so the service keeps a pool of slots and the
+//! request path never allocates.
+//!
+//! Ownership protocol:
+//!
+//! - the **receiver** side holds the only strong `Arc<OneShot<T>>`;
+//! - [`OneShot::sender`] arms the slot and hands out a
+//!   [`OneShotSender`] holding a `Weak` reference.  Because the sender
+//!   never owns a strong count, the receiver can recycle the slot the
+//!   moment [`OneShot::recv`] returns without racing a sender that is
+//!   still winding down.
+//! - dropping an armed sender without sending marks the slot
+//!   `Dropped`; `recv` then returns `None`.  This is how a board
+//!   thread that panics mid-chunk surfaces as a typed
+//!   `ServeError::BoardLost` instead of a hang: the unwind drops the
+//!   queued senders, every waiter wakes with `None`.
+
+use std::sync::{Arc, Condvar, Mutex, Weak};
+
+enum State<T> {
+    /// Not armed; safe to hand to `sender()`.
+    Idle,
+    /// A sender exists (or existed and is mid-send).
+    Armed,
+    /// Value delivered, waiting for `recv`.
+    Value(T),
+    /// Sender dropped without sending.
+    Dropped,
+}
+
+/// A reusable single-value rendezvous point.  See module docs.
+pub struct OneShot<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for OneShot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OneShot<T> {
+    pub fn new() -> Self {
+        OneShot { state: Mutex::new(State::Idle), cv: Condvar::new() }
+    }
+
+    /// Arm the slot and return the sending half.  Panics if the slot
+    /// is already armed or holds an unconsumed value — each arming
+    /// must be matched by a `recv` before the next.
+    pub fn sender(self: &Arc<Self>) -> OneShotSender<T> {
+        let mut st = self.state.lock().unwrap();
+        match *st {
+            State::Idle => *st = State::Armed,
+            _ => panic!("OneShot::sender: slot already armed"),
+        }
+        OneShotSender { slot: Arc::downgrade(self), sent: false }
+    }
+
+    /// Block until the armed sender delivers or is dropped, consume
+    /// the outcome and reset the slot to `Idle` so it can be re-armed.
+    /// Returns `None` if the sender was dropped without sending.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, State::Idle) {
+                State::Value(v) => return Some(v),
+                State::Dropped => return None,
+                other => {
+                    // Not ready yet: restore and wait.
+                    *st = other;
+                    st = self.cv.wait(st).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Non-blocking variant of [`OneShot::recv`]: `None` if no
+    /// outcome is ready yet (the slot is left armed).
+    pub fn try_recv(&self) -> Option<Option<T>> {
+        let mut st = self.state.lock().unwrap();
+        match std::mem::replace(&mut *st, State::Idle) {
+            State::Value(v) => Some(Some(v)),
+            State::Dropped => Some(None),
+            other => {
+                *st = other;
+                None
+            }
+        }
+    }
+}
+
+/// Sending half of an armed [`OneShot`].  Holds only a `Weak`
+/// reference: if the receiver gave up and dropped the slot, `send`
+/// quietly discards the value.
+pub struct OneShotSender<T> {
+    slot: Weak<OneShot<T>>,
+    sent: bool,
+}
+
+impl<T> OneShotSender<T> {
+    /// Deliver the value and wake the receiver.  Consumes the sender.
+    pub fn send(mut self, value: T) {
+        self.sent = true;
+        if let Some(slot) = self.slot.upgrade() {
+            let mut st = slot.state.lock().unwrap();
+            if matches!(*st, State::Armed) {
+                *st = State::Value(value);
+                drop(st);
+                slot.cv.notify_all();
+            }
+        }
+    }
+}
+
+impl<T> Drop for OneShotSender<T> {
+    fn drop(&mut self) {
+        if self.sent {
+            return;
+        }
+        if let Some(slot) = self.slot.upgrade() {
+            let mut st = slot.state.lock().unwrap();
+            if matches!(*st, State::Armed) {
+                *st = State::Dropped;
+                drop(st);
+                slot.cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn send_then_recv_roundtrips() {
+        let slot = Arc::new(OneShot::new());
+        let tx = slot.sender();
+        tx.send(7u32);
+        assert_eq!(slot.recv(), Some(7));
+    }
+
+    #[test]
+    fn dropped_sender_yields_none() {
+        let slot = Arc::new(OneShot::<u32>::new());
+        let tx = slot.sender();
+        drop(tx);
+        assert_eq!(slot.recv(), None);
+    }
+
+    #[test]
+    fn slot_is_reusable_after_recv() {
+        let slot = Arc::new(OneShot::new());
+        for i in 0..3u32 {
+            let tx = slot.sender();
+            tx.send(i);
+            assert_eq!(slot.recv(), Some(i));
+        }
+        // ...including after a dropped arming.
+        drop(slot.sender());
+        assert_eq!(slot.recv(), None);
+        let tx = slot.sender();
+        tx.send(9);
+        assert_eq!(slot.recv(), Some(9));
+    }
+
+    #[test]
+    fn try_recv_reports_pending_then_value() {
+        let slot = Arc::new(OneShot::new());
+        let tx = slot.sender();
+        assert!(slot.try_recv().is_none());
+        tx.send(3u8);
+        assert_eq!(slot.try_recv(), Some(Some(3)));
+    }
+
+    #[test]
+    fn recv_blocks_until_cross_thread_send() {
+        let slot = Arc::new(OneShot::new());
+        let tx = slot.sender();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            tx.send(42u64);
+        });
+        assert_eq!(slot.recv(), Some(42));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn receiver_always_holds_sole_strong_ref() {
+        let slot = Arc::new(OneShot::new());
+        let tx = slot.sender();
+        assert_eq!(Arc::strong_count(&slot), 1);
+        tx.send(1u8);
+        assert_eq!(Arc::strong_count(&slot), 1);
+        assert_eq!(slot.recv(), Some(1));
+        assert_eq!(Arc::strong_count(&slot), 1);
+    }
+
+    #[test]
+    fn send_after_receiver_gone_is_harmless() {
+        let slot = Arc::new(OneShot::new());
+        let tx = slot.sender();
+        drop(slot);
+        tx.send(5u8); // no receiver left; must not panic
+    }
+}

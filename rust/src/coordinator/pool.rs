@@ -1,0 +1,285 @@
+//! Contention-control primitives for the serving hot path: padded
+//! counters, a lock-free stack of reusable `Arc` slots, and a striped
+//! buffer slab.
+//!
+//! The raw-speed pass (ROADMAP item 4) found two scaling walls in the
+//! coordinator: false sharing between per-board counters packed into
+//! one cache line, and a single global `Mutex<ReplySlab>` every
+//! submitter fought over.  [`Padded`] fixes the first by giving each
+//! hot atomic its own cache line; [`StripedSlab`] fixes the second by
+//! sharding the slab across stripes keyed on the calling thread; and
+//! [`ArcStack`] keeps the reply-slot freelist entirely lock-free.
+
+use std::cell::Cell;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::batcher::ReplySlab;
+
+/// Pad-and-align a value to its own 128-byte cache-line pair so hot
+/// atomics never false-share (128 covers the 2-line prefetcher on
+/// x86 and the 128-byte lines on apple-silicon class hosts).
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct Padded<T>(pub T);
+
+impl<T> Padded<T> {
+    pub fn new(value: T) -> Self {
+        Padded(value)
+    }
+}
+
+impl<T> Deref for Padded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+/// Lock-free fixed-capacity pool of `Arc<T>` slots.
+///
+/// Each array entry is an `AtomicPtr` holding either null or one
+/// `Arc` (as its raw pointer, ownership transferred in).  `pop` swaps
+/// an entry out, `push` CASes one in; both are O(capacity) worst case
+/// but O(1) amortized thanks to a cursor hint.  There is no ABA
+/// hazard: `swap`/`compare_exchange` transfer whole-pointer ownership
+/// atomically, no entry is ever read-then-freed.
+pub struct ArcStack<T> {
+    slots: Box<[AtomicPtr<T>]>,
+    /// Rotating hint of where the last push landed.
+    cursor: AtomicUsize,
+}
+
+impl<T> ArcStack<T> {
+    pub fn new(capacity: usize) -> Self {
+        let slots = (0..capacity.max(1))
+            .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ArcStack { slots, cursor: AtomicUsize::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Return a slot to the pool.  If the pool is full the `Arc` is
+    /// simply dropped (the pool never grows).
+    pub fn push(&self, value: Arc<T>) {
+        let n = self.slots.len();
+        let start = self.cursor.load(Ordering::Relaxed) % n;
+        let raw = Arc::into_raw(value) as *mut T;
+        for off in 0..n {
+            let i = (start + off) % n;
+            if self.slots[i]
+                .compare_exchange(
+                    std::ptr::null_mut(),
+                    raw,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                self.cursor.store(i, Ordering::Relaxed);
+                return;
+            }
+        }
+        // Full: reclaim and drop.
+        // SAFETY: `raw` came from `Arc::into_raw` above and was never
+        // successfully stored, so ownership is still ours.
+        unsafe { drop(Arc::from_raw(raw)) };
+    }
+
+    /// Take any pooled slot, or `None` if the pool is empty.
+    pub fn pop(&self) -> Option<Arc<T>> {
+        let n = self.slots.len();
+        let start = self.cursor.load(Ordering::Relaxed) % n;
+        for off in 0..n {
+            let i = (start + n - off) % n;
+            let raw = self.slots[i]
+                .swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !raw.is_null() {
+                // SAFETY: a non-null entry holds exactly one Arc whose
+                // ownership the swap just transferred to us.
+                return Some(unsafe { Arc::from_raw(raw) });
+            }
+        }
+        None
+    }
+}
+
+impl<T> Drop for ArcStack<T> {
+    fn drop(&mut self) {
+        for slot in self.slots.iter() {
+            let raw = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !raw.is_null() {
+                // SAFETY: as in `pop` — the swap transferred ownership.
+                unsafe { drop(Arc::from_raw(raw)) };
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// This thread's home stripe (+1; 0 = unassigned).
+    static HOME_STRIPE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Round-robin assignment of threads to stripes.
+static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+
+/// A [`ReplySlab`] sharded into per-thread stripes so concurrent
+/// submitters do not serialize on one slab mutex.  Each calling
+/// thread is pinned to a home stripe (round-robin at first touch);
+/// buffers grabbed from a stripe may be returned to any stripe, the
+/// caps are per stripe.
+pub struct StripedSlab {
+    stripes: Box<[Padded<Mutex<ReplySlab>>]>,
+}
+
+impl StripedSlab {
+    pub fn new(stripes: usize) -> Self {
+        let stripes = (0..stripes.max(1))
+            .map(|_| Padded::new(Mutex::new(ReplySlab::new())))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        StripedSlab { stripes }
+    }
+
+    pub fn stripes(&self) -> usize {
+        self.stripes.len()
+    }
+
+    fn home(&self) -> &Mutex<ReplySlab> {
+        let idx = HOME_STRIPE.with(|h| {
+            let cur = h.get();
+            if cur != 0 {
+                cur - 1
+            } else {
+                let assigned = NEXT_STRIPE
+                    .fetch_add(1, Ordering::Relaxed)
+                    % self.stripes.len().max(1);
+                h.set(assigned + 1);
+                assigned
+            }
+        });
+        &self.stripes[idx % self.stripes.len()].0
+    }
+
+    /// Copy `src` into a recycled (or new) shared buffer.
+    pub fn take(&self, src: &[f32]) -> Arc<[f32]> {
+        self.home().lock().unwrap().take(src)
+    }
+
+    /// Detach a free buffer of `len` floats from the calling thread's
+    /// stripe so it can be filled *outside* any lock; `None` on miss.
+    pub fn grab(&self, len: usize) -> Option<Arc<[f32]>> {
+        self.home().lock().unwrap().grab(len)
+    }
+
+    /// Retain a filled buffer in the calling thread's stripe.
+    pub fn put_back(&self, buf: &Arc<[f32]>) {
+        self.home().lock().unwrap().put_back(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_is_cache_line_sized() {
+        assert!(std::mem::align_of::<Padded<AtomicUsize>>() >= 128);
+        let p = Padded::new(AtomicUsize::new(7));
+        assert_eq!(p.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn arc_stack_push_pop_roundtrip() {
+        let pool: ArcStack<u64> = ArcStack::new(4);
+        assert!(pool.pop().is_none());
+        pool.push(Arc::new(1));
+        pool.push(Arc::new(2));
+        let mut got = vec![
+            *pool.pop().expect("slot"),
+            *pool.pop().expect("slot"),
+        ];
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2]);
+        assert!(pool.pop().is_none());
+    }
+
+    #[test]
+    fn arc_stack_overflow_drops_excess() {
+        let pool: ArcStack<u64> = ArcStack::new(2);
+        for i in 0..5 {
+            pool.push(Arc::new(i));
+        }
+        assert!(pool.pop().is_some());
+        assert!(pool.pop().is_some());
+        assert!(pool.pop().is_none(), "capacity bounded");
+    }
+
+    #[test]
+    fn arc_stack_drop_reclaims_slots() {
+        // Dropping the stack must free pooled Arcs (checked by the
+        // weak refs observing the strong count hit zero).
+        let a = Arc::new(11u64);
+        let weak = Arc::downgrade(&a);
+        let pool: ArcStack<u64> = ArcStack::new(2);
+        pool.push(a);
+        assert!(weak.upgrade().is_some());
+        drop(pool);
+        assert!(weak.upgrade().is_none(), "pooled Arc leaked");
+    }
+
+    #[test]
+    fn arc_stack_concurrent_push_pop() {
+        let pool = Arc::new(ArcStack::<usize>::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200 {
+                    p.push(Arc::new(t * 1000 + i));
+                    let _ = p.pop();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn striped_slab_grab_put_back() {
+        let slab = StripedSlab::new(4);
+        assert!(slab.grab(8).is_none());
+        let seeded = slab.take(&[0.5f32; 8]);
+        drop(seeded);
+        let buf = slab.grab(8).expect("released slot grabbed");
+        slab.put_back(&buf);
+        drop(buf);
+        assert!(slab.grab(8).is_some(), "slot recycled within stripe");
+    }
+
+    #[test]
+    fn striped_slab_isolates_threads() {
+        let slab = Arc::new(StripedSlab::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = slab.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    let buf = s.take(&[(t * 100 + i) as f32; 16]);
+                    assert_eq!(buf[0], (t * 100 + i) as f32);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

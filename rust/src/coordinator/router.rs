@@ -13,19 +13,28 @@
 //!   stealing the pool drains at the speed of whichever boards are
 //!   free (the starvation regression test pins this).
 //!
-//! For the channel policies the router owns one bounded mpsc sender
-//! per board batcher (the bound is the admission-control queue depth);
-//! the stealing pool bounds each board's deque by the same depth.
+//! Every policy now shares one backend: the [`StealPool`], built with
+//! stealing on ([`StealPool::new`]) or off
+//! ([`StealPool::new_pinned`], the channel-per-board semantics of the
+//! round-robin/least-outstanding policies).  Each board's deque is
+//! bounded by the admission-control queue depth and **preallocated**,
+//! so the enqueue path never allocates; per-board depths mirror into
+//! padded atomics so [`StealPool::queued`] never takes the pool lock.
+//!
+//! Bulk is the default: [`Router::route_many`] accounts a whole
+//! shard's fan-out with **one** outstanding-counter update and
+//! [`StealPool::push_many`] lands it under one lock acquisition with
+//! one consumer wake — the amortizations `bench_service` measures.
 //! Outstanding counters are decremented by [`RouterGuard`] when the
 //! reply resolves.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::batcher::Request;
+use super::pool::Padded;
 use crate::Result;
 
 /// Routing policy.
@@ -48,31 +57,59 @@ struct PoolState {
     closed: bool,
 }
 
-/// Shared per-board request deques with stealing (see module docs).
+/// Shared per-board request deques, with or without stealing (see
+/// module docs).
 ///
 /// Submitters push onto a chosen board's deque; each board pops its
-/// own deque first and, when idle, steals the oldest request from the
-/// most loaded peer.  All deques share one mutex — request rates are
-/// bounded by board execution times, so contention is negligible next
-/// to a batch execution.
+/// own deque first and — when built with [`StealPool::new`] — steals
+/// the oldest request from the most loaded peer when idle.  All
+/// deques share one mutex; producers and consumers park on separate
+/// condvars (`not_empty` / `not_full`) so a pop only ever wakes
+/// blocked pushers, never sibling poppers.
 pub struct StealPool {
     state: Mutex<PoolState>,
-    cv: Condvar,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Lock-free mirror of each deque's length.
+    depths: Box<[Padded<AtomicUsize>]>,
     capacity: usize,
     boards: usize,
+    steal: bool,
 }
 
 impl StealPool {
-    /// `capacity` bounds each board's deque (admission control).
+    /// Stealing pool: `capacity` bounds each board's deque
+    /// (admission control).
     pub fn new(boards: usize, capacity: usize) -> Arc<Self> {
+        Self::build(boards, capacity, true)
+    }
+
+    /// Pinned pool: same bounded per-board deques, no stealing — the
+    /// backend of the `RoundRobin`/`LeastOutstanding` policies.
+    pub fn new_pinned(boards: usize, capacity: usize) -> Arc<Self> {
+        Self::build(boards, capacity, false)
+    }
+
+    fn build(boards: usize, capacity: usize, steal: bool) -> Arc<Self> {
+        let capacity = capacity.max(1);
         Arc::new(StealPool {
             state: Mutex::new(PoolState {
-                queues: (0..boards).map(|_| VecDeque::new()).collect(),
+                // Preallocated at the admission bound: pushes up to
+                // `capacity` never reallocate.
+                queues: (0..boards)
+                    .map(|_| VecDeque::with_capacity(capacity))
+                    .collect(),
                 closed: false,
             }),
-            cv: Condvar::new(),
-            capacity: capacity.max(1),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depths: (0..boards)
+                .map(|_| Padded::new(AtomicUsize::new(0)))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            capacity,
             boards,
+            steal,
         })
     }
 
@@ -80,9 +117,15 @@ impl StealPool {
         self.boards
     }
 
+    /// Whether idle boards steal from loaded peers.
+    pub fn steals(&self) -> bool {
+        self.steal
+    }
+
     /// Requests currently queued for `board` (not yet popped/stolen).
+    /// Lock-free: reads the atomic depth mirror.
     pub fn queued(&self, board: usize) -> usize {
-        self.state.lock().unwrap().queues[board].len()
+        self.depths[board].load(Ordering::Relaxed)
     }
 
     /// Non-blocking enqueue; hands the request back when the board's
@@ -100,8 +143,9 @@ impl StealPool {
             return Err((req, false));
         }
         st.queues[board].push_back(req);
+        self.depths[board].fetch_add(1, Ordering::Relaxed);
         drop(st);
-        self.cv.notify_all();
+        self.not_empty.notify_all();
         Ok(())
     }
 
@@ -119,16 +163,59 @@ impl StealPool {
             }
             if st.queues[board].len() < self.capacity {
                 st.queues[board].push_back(req);
+                self.depths[board].fetch_add(1, Ordering::Relaxed);
                 drop(st);
-                self.cv.notify_all();
+                self.not_empty.notify_all();
                 return Ok(());
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap();
         }
     }
 
-    /// Pop for `board`: own deque first, else steal the oldest request
-    /// from the most loaded peer.
+    /// Bulk enqueue in submission order: the whole batch lands under
+    /// one lock acquisition with **one** consumer wake (not one per
+    /// request).  Drains `reqs` front-to-back; blocks while the deque
+    /// is full.  On a closed pool the unsent tail (including the
+    /// current request) stays in `reqs` and `Err` is returned.
+    pub fn push_many(
+        &self,
+        board: usize,
+        reqs: &mut Vec<Request>,
+    ) -> std::result::Result<(), ()> {
+        if reqs.is_empty() {
+            return Ok(());
+        }
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                drop(st);
+                self.not_empty.notify_all();
+                return Err(());
+            }
+            let space = self.capacity.saturating_sub(st.queues[board].len());
+            let take = space.min(reqs.len());
+            if take > 0 {
+                for req in reqs.drain(..take) {
+                    st.queues[board].push_back(req);
+                }
+                self.depths[board].fetch_add(take, Ordering::Relaxed);
+            }
+            if reqs.is_empty() {
+                drop(st);
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            // Deque full with work left: publish what landed so
+            // consumers run, then park until space frees.  (notify
+            // while still holding the lock — the wake lands after the
+            // wait releases it.)
+            self.not_empty.notify_all();
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Pop for `board`: own deque first, then (stealing pools only)
+    /// the oldest request from the most loaded peer.
     ///
     /// Victim selection and the pop happen under the caller's single
     /// lock acquisition (`st` borrows the locked state), so the victim
@@ -137,9 +224,13 @@ impl StealPool {
     /// peer whose *head* request is oldest (so a tie still steals the
     /// globally oldest queued work), then toward the lowest board
     /// index (deterministic under equal-age heads).
-    fn take(st: &mut PoolState, board: usize) -> Option<Request> {
+    fn take(&self, st: &mut PoolState, board: usize) -> Option<Request> {
         if let Some(r) = st.queues[board].pop_front() {
+            self.depths[board].fetch_sub(1, Ordering::Relaxed);
             return Some(r);
+        }
+        if !self.steal {
+            return None;
         }
         let victim = st
             .queues
@@ -159,17 +250,21 @@ impl StealPool {
                     .then_with(|| ib.cmp(ia))
             })
             .map(|(i, _)| i)?;
-        st.queues[victim].pop_front()
+        let r = st.queues[victim].pop_front();
+        if r.is_some() {
+            self.depths[victim].fetch_sub(1, Ordering::Relaxed);
+        }
+        r
     }
 
     /// Non-blocking dequeue for `board` (own deque, then steal).
     pub fn try_pop(&self, board: usize) -> Option<Request> {
         let mut st = self.state.lock().unwrap();
-        let r = Self::take(&mut st, board);
+        let r = self.take(&mut st, board);
         if r.is_some() {
             drop(st);
             // A slot freed: wake blocked pushers.
-            self.cv.notify_all();
+            self.not_full.notify_all();
         }
         r
     }
@@ -178,15 +273,15 @@ impl StealPool {
     pub fn pop(&self, board: usize) -> Option<Request> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(r) = Self::take(&mut st, board) {
+            if let Some(r) = self.take(&mut st, board) {
                 drop(st);
-                self.cv.notify_all();
+                self.not_full.notify_all();
                 return Some(r);
             }
             if st.closed {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap();
         }
     }
 
@@ -195,9 +290,9 @@ impl StealPool {
         let deadline = Instant::now() + timeout;
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(r) = Self::take(&mut st, board) {
+            if let Some(r) = self.take(&mut st, board) {
                 drop(st);
-                self.cv.notify_all();
+                self.not_full.notify_all();
                 return Popped::Req(r);
             }
             if st.closed {
@@ -211,7 +306,7 @@ impl StealPool {
             // past between the check and the subtraction cannot panic
             // the batcher thread (the coordinator hardening pass).
             let (guard, _) = self
-                .cv
+                .not_empty
                 .wait_timeout(st, deadline.saturating_duration_since(now))
                 .unwrap();
             st = guard;
@@ -222,73 +317,60 @@ impl StealPool {
     /// `None`/`Closed`; pushes fail.
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
-        self.cv.notify_all();
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
     }
 }
 
-enum Backend {
-    /// One bounded mpsc sender per board batcher.
-    Channels(Vec<SyncSender<Request>>),
-    /// Shared stealing pool consumed by all batchers.
-    Stealing(Arc<StealPool>),
-}
-
-/// Router over N board queues.
+/// Router over the N board deques of one [`StealPool`].
 pub struct Router {
-    backend: Backend,
-    outstanding: Vec<Arc<AtomicUsize>>,
-    next: AtomicU64,
+    pool: Arc<StealPool>,
+    /// Per-board in-flight counts, each on its own cache line.
+    outstanding: Vec<Arc<Padded<AtomicUsize>>>,
+    next: Padded<AtomicU64>,
     policy: Policy,
 }
 
-/// RAII guard: decrements the chosen board's outstanding count.
+/// RAII guard for one routed shard (or single request): decrements
+/// the chosen board's outstanding count by the shard's fan-out when
+/// the reply resolves — one atomic op per shard, not per request.
 #[derive(Debug)]
 pub struct RouterGuard {
-    counter: Arc<AtomicUsize>,
+    counter: Arc<Padded<AtomicUsize>>,
+    n: usize,
 }
 
 impl Drop for RouterGuard {
     fn drop(&mut self) {
-        self.counter.fetch_sub(1, Ordering::Relaxed);
+        self.counter.fetch_sub(self.n, Ordering::Relaxed);
     }
 }
 
 impl Router {
-    /// Channel-backed router (`RoundRobin` / `LeastOutstanding`).
-    /// `WorkStealing` needs the shared pool — use [`Router::stealing`].
-    pub fn new(queues: Vec<SyncSender<Request>>, policy: Policy) -> Self {
-        debug_assert!(
-            policy != Policy::WorkStealing,
-            "WorkStealing needs Router::stealing(pool)"
-        );
-        let outstanding =
-            queues.iter().map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    /// Router over `pool` with an explicit policy.  Use a pinned pool
+    /// ([`StealPool::new_pinned`]) for `RoundRobin`/`LeastOutstanding`
+    /// and a stealing pool for `WorkStealing` — the policy only
+    /// drives the submit-side pick; the drain behaviour is the
+    /// pool's.
+    pub fn new(pool: Arc<StealPool>, policy: Policy) -> Self {
+        let outstanding = (0..pool.boards())
+            .map(|_| Arc::new(Padded::new(AtomicUsize::new(0))))
+            .collect();
         Router {
-            backend: Backend::Channels(queues),
+            pool,
             outstanding,
-            next: AtomicU64::new(0),
+            next: Padded::new(AtomicU64::new(0)),
             policy,
         }
     }
 
-    /// Pool-backed router: work-stealing policy.
+    /// Pool-backed router with the work-stealing policy.
     pub fn stealing(pool: Arc<StealPool>) -> Self {
-        let outstanding = (0..pool.boards())
-            .map(|_| Arc::new(AtomicUsize::new(0)))
-            .collect();
-        Router {
-            backend: Backend::Stealing(pool),
-            outstanding,
-            next: AtomicU64::new(0),
-            policy: Policy::WorkStealing,
-        }
+        Self::new(pool, Policy::WorkStealing)
     }
 
     pub fn boards(&self) -> usize {
-        match &self.backend {
-            Backend::Channels(q) => q.len(),
-            Backend::Stealing(p) => p.boards(),
-        }
+        self.pool.boards()
     }
 
     /// Pick a board index for a new request.
@@ -330,67 +412,80 @@ impl Router {
         }
         let counter = self.outstanding[idx].clone();
         counter.fetch_add(1, Ordering::Relaxed);
-        if !self.send(idx, req) {
+        if self.pool.push(idx, req).is_err() {
             counter.fetch_sub(1, Ordering::Relaxed);
             return Err(anyhow::anyhow!("board {idx} queue closed"));
         }
-        Ok(RouterGuard { counter })
-    }
-
-    /// Blocking enqueue on one board's backend; `false` once the
-    /// queue/pool has closed.  The single send path shared by
-    /// [`Router::route_to`] and [`Router::route_many`].
-    fn send(&self, idx: usize, req: Request) -> bool {
-        match &self.backend {
-            Backend::Channels(queues) => queues[idx].send(req).is_ok(),
-            Backend::Stealing(pool) => pool.push(idx, req).is_ok(),
-        }
+        Ok(RouterGuard { counter, n: 1 })
     }
 
     /// Route a whole shard to one board, accounting its full fan-out
-    /// on the outstanding counter **before** the first enqueue: a
-    /// concurrent dispatcher's `least_loaded` pick (and the
-    /// work-stealing affinity) sees the in-flight shard's entire load
-    /// at decision time instead of one image at a time, so two batches
-    /// submitted together spread over the fleet rather than stacking
-    /// on the same momentarily-idle board.
+    /// on the outstanding counter **before** the first enqueue (one
+    /// `fetch_add`, not one per request): a concurrent dispatcher's
+    /// `least_loaded` pick — and the work-stealing affinity — sees
+    /// the in-flight shard's entire load at decision time, so two
+    /// batches submitted together spread over the fleet instead of
+    /// stacking on the same momentarily-idle board.  The enqueue
+    /// itself is [`StealPool::push_many`]: one lock, one wake.
     ///
-    /// Returns one guard per request, aligned with `reqs`.  On a
-    /// closed queue mid-shard the error return drops every guard
-    /// (counters roll back); requests already enqueued are served
-    /// without a live guard, which only under-counts during shutdown.
+    /// Drains `reqs` and returns ONE guard covering the whole shard.
+    /// On a closed pool mid-shard the counter rolls back fully;
+    /// requests already enqueued are served without a live guard,
+    /// which only under-counts during shutdown.
     pub fn route_many(
         &self,
         idx: usize,
-        reqs: Vec<Request>,
-    ) -> Result<Vec<RouterGuard>> {
+        reqs: &mut Vec<Request>,
+    ) -> Result<RouterGuard> {
         if idx >= self.boards() {
             return Err(anyhow::anyhow!(
                 "board {idx} out of range ({} boards)",
                 self.boards()
             ));
         }
-        let counter = &self.outstanding[idx];
-        let mut guards = Vec::with_capacity(reqs.len());
-        for _ in 0..reqs.len() {
-            counter.fetch_add(1, Ordering::Relaxed);
-            guards.push(RouterGuard { counter: counter.clone() });
+        let n = reqs.len();
+        let counter = self.outstanding[idx].clone();
+        counter.fetch_add(n, Ordering::Relaxed);
+        if self.pool.push_many(idx, reqs).is_err() {
+            counter.fetch_sub(n, Ordering::Relaxed);
+            return Err(anyhow::anyhow!("board {idx} queue closed"));
         }
-        for req in reqs {
-            if !self.send(idx, req) {
-                return Err(anyhow::anyhow!("board {idx} queue closed"));
-            }
-        }
-        Ok(guards)
+        Ok(RouterGuard { counter, n })
     }
 
     /// The `k` least-loaded board indices (stable: ties keep index
     /// order) — the distinct targets a sharded batch fans out to.
     pub fn least_loaded(&self, k: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..self.boards()).collect();
-        idx.sort_by_key(|&i| self.outstanding[i].load(Ordering::Relaxed));
-        idx.truncate(k.max(1));
-        idx
+        let mut out = Vec::with_capacity(k.clamp(1, self.boards().max(1)));
+        self.least_loaded_into(k, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Router::least_loaded`]: fills `out` (cleared
+    /// first) with the `k` least-loaded indices by repeated selection
+    /// — no sort, no temporaries, so the steady-state dispatch path
+    /// can reuse one scratch `Vec` forever.
+    pub fn least_loaded_into(&self, k: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let boards = self.boards();
+        let k = k.clamp(1, boards.max(1));
+        for _ in 0..k.min(boards) {
+            let mut best: Option<(usize, usize)> = None;
+            for i in 0..boards {
+                if out.contains(&i) {
+                    continue;
+                }
+                let load = self.outstanding[i].load(Ordering::Relaxed);
+                // `<` keeps the earliest index on ties (stable).
+                if best.map_or(true, |(_, bl)| load < bl) {
+                    best = Some((i, load));
+                }
+            }
+            match best {
+                Some((i, _)) => out.push(i),
+                None => break,
+            }
+        }
     }
 
     /// Non-blocking admission: rejects immediately on a full queue.
@@ -398,20 +493,9 @@ impl Router {
         let idx = self.pick();
         let counter = self.outstanding[idx].clone();
         counter.fetch_add(1, Ordering::Relaxed);
-        let err = match &self.backend {
-            Backend::Channels(queues) => match queues[idx].try_send(req) {
-                Ok(()) => None,
-                Err(TrySendError::Full(_)) => Some(false),
-                Err(TrySendError::Disconnected(_)) => Some(true),
-            },
-            Backend::Stealing(pool) => match pool.try_push(idx, req) {
-                Ok(()) => None,
-                Err((_, closed)) => Some(closed),
-            },
-        };
-        match err {
-            None => Ok(RouterGuard { counter }),
-            Some(closed) => {
+        match self.pool.try_push(idx, req) {
+            Ok(()) => Ok(RouterGuard { counter, n: 1 }),
+            Err((_, closed)) => {
                 counter.fetch_sub(1, Ordering::Relaxed);
                 if closed {
                     Err(anyhow::anyhow!("board {idx} queue closed"))
@@ -430,37 +514,33 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+    use crate::coordinator::oneshot::OneShot;
 
     fn dummy_request(id: u64) -> Request {
-        let (tx, _rx) = mpsc::sync_channel(1);
+        let slot = Arc::new(OneShot::new());
         Request {
             id,
             image: Vec::new().into(),
             submitted: Instant::now(),
-            reply: tx,
+            reply: slot.sender(),
         }
     }
 
     #[test]
     fn round_robin_rotates() {
-        let (t1, r1) = mpsc::sync_channel(8);
-        let (t2, r2) = mpsc::sync_channel(8);
-        let router = Router::new(vec![t1, t2], Policy::RoundRobin);
+        let pool = StealPool::new_pinned(2, 8);
+        let router = Router::new(pool.clone(), Policy::RoundRobin);
         let mut guards = Vec::new();
         for i in 0..4 {
             guards.push(router.route(dummy_request(i)).unwrap());
         }
-        let c1 = r1.try_iter().count();
-        let c2 = r2.try_iter().count();
-        assert_eq!((c1, c2), (2, 2));
+        assert_eq!((pool.queued(0), pool.queued(1)), (2, 2));
     }
 
     #[test]
     fn least_outstanding_prefers_idle_board() {
-        let (t1, _r1) = mpsc::sync_channel(8);
-        let (t2, _r2) = mpsc::sync_channel(8);
-        let router = Router::new(vec![t1, t2], Policy::LeastOutstanding);
+        let pool = StealPool::new_pinned(2, 8);
+        let router = Router::new(pool, Policy::LeastOutstanding);
         let _g0 = router.route(dummy_request(0)).unwrap();
         // Next pick must be the idle board 1.
         assert_eq!(router.pick(), 1);
@@ -468,8 +548,8 @@ mod tests {
 
     #[test]
     fn guard_decrements_on_drop() {
-        let (t1, _r1) = mpsc::sync_channel(8);
-        let router = Router::new(vec![t1], Policy::LeastOutstanding);
+        let pool = StealPool::new_pinned(1, 8);
+        let router = Router::new(pool, Policy::LeastOutstanding);
         let g = router.route(dummy_request(0)).unwrap();
         assert_eq!(router.outstanding_of(0), 1);
         drop(g);
@@ -478,22 +558,30 @@ mod tests {
 
     #[test]
     fn closed_queue_is_an_error() {
-        let (t1, r1) = mpsc::sync_channel(1);
-        drop(r1);
-        let router = Router::new(vec![t1], Policy::RoundRobin);
+        let pool = StealPool::new_pinned(1, 4);
+        pool.close();
+        let router = Router::new(pool, Policy::RoundRobin);
         assert!(router.route(dummy_request(0)).is_err());
         assert_eq!(router.outstanding_of(0), 0);
     }
 
     #[test]
     fn try_route_rejects_when_full() {
-        let (t1, _r1) = mpsc::sync_channel(1);
-        let router = Router::new(vec![t1], Policy::RoundRobin);
+        let pool = StealPool::new_pinned(1, 1);
+        let router = Router::new(pool, Policy::RoundRobin);
         let _g = router.try_route(dummy_request(0)).unwrap();
         let err = router.try_route(dummy_request(1)).unwrap_err();
         assert!(err.to_string().contains("full"));
         // Rejected request must not leak an outstanding count.
         assert_eq!(router.outstanding_of(0), 1);
+    }
+
+    #[test]
+    fn pinned_pool_never_steals() {
+        let pool = StealPool::new_pinned(2, 8);
+        pool.try_push(0, dummy_request(0)).map_err(|_| ()).unwrap();
+        assert!(pool.try_pop(1).is_none(), "pinned pools must not steal");
+        assert_eq!(pool.try_pop(0).unwrap().id, 0);
     }
 
     // ------------------------------------------------- work stealing
@@ -516,8 +604,7 @@ mod tests {
     fn steal_pool_bounds_each_board_queue() {
         let pool = StealPool::new(2, 1);
         pool.try_push(0, dummy_request(0)).map_err(|_| ()).unwrap();
-        let (req, closed) =
-            pool.try_push(0, dummy_request(1)).err().unwrap();
+        let (req, closed) = pool.try_push(0, dummy_request(1)).err().unwrap();
         assert!(!closed);
         assert_eq!(req.id, 1);
         // The other board's deque is independent.
@@ -544,6 +631,52 @@ mod tests {
             Popped::TimedOut => {}
             _ => panic!("expected timeout"),
         }
+    }
+
+    #[test]
+    fn push_many_lands_in_submission_order_and_tracks_depth() {
+        let pool = StealPool::new(2, 64);
+        let mut reqs: Vec<Request> = (0..10).map(dummy_request).collect();
+        pool.push_many(1, &mut reqs).unwrap();
+        assert!(reqs.is_empty(), "push_many drains the batch");
+        assert_eq!(pool.queued(1), 10);
+        for want in 0..10 {
+            assert_eq!(pool.pop(1).unwrap().id, want);
+        }
+        assert_eq!(pool.queued(1), 0);
+    }
+
+    #[test]
+    fn push_many_blocks_on_full_then_completes() {
+        // Capacity 4, batch of 10: push_many must land everything once
+        // a consumer drains, in order, without losing the tail.
+        let pool = StealPool::new(1, 4);
+        let consumer = std::thread::spawn({
+            let pool = pool.clone();
+            move || {
+                let mut got = Vec::new();
+                while let Some(r) = pool.pop(0) {
+                    got.push(r.id);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                got
+            }
+        });
+        let mut reqs: Vec<Request> = (0..10).map(dummy_request).collect();
+        pool.push_many(0, &mut reqs).unwrap();
+        assert!(reqs.is_empty());
+        pool.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn push_many_on_closed_pool_keeps_the_tail() {
+        let pool = StealPool::new(1, 8);
+        pool.close();
+        let mut reqs: Vec<Request> = (0..3).map(dummy_request).collect();
+        assert!(pool.push_many(0, &mut reqs).is_err());
+        assert_eq!(reqs.len(), 3, "nothing sent on a closed pool");
     }
 
     #[test]
@@ -615,7 +748,6 @@ mod tests {
         // single-lock take() must deliver each request exactly once —
         // no duplicates (a double pop), no losses (a victim drained
         // between selection and pop).
-        use std::sync::Mutex;
         let pool = StealPool::new(4, 1024);
         let total: u64 = 400;
         let got: Mutex<Vec<u64>> = Mutex::new(Vec::new());
@@ -654,47 +786,49 @@ mod tests {
 
     #[test]
     fn route_many_accounts_shard_fanout_up_front() {
-        let (t1, _r1) = mpsc::sync_channel(8);
-        let (t2, _r2) = mpsc::sync_channel(8);
-        let router = Router::new(vec![t1, t2], Policy::LeastOutstanding);
-        let guards = router
-            .route_many(0, (0..3).map(dummy_request).collect())
-            .unwrap();
-        assert_eq!(guards.len(), 3);
+        let pool = StealPool::new_pinned(2, 8);
+        let router = Router::new(pool, Policy::LeastOutstanding);
+        let mut reqs: Vec<Request> = (0..3).map(dummy_request).collect();
+        let guard = router.route_many(0, &mut reqs).unwrap();
+        assert!(reqs.is_empty());
         // The whole shard's fan-out is on the counter, so the next
         // shard target must be the other board.
         assert_eq!(router.outstanding_of(0), 3);
         assert_eq!(router.least_loaded(1), vec![1]);
-        drop(guards);
+        drop(guard);
         assert_eq!(router.outstanding_of(0), 0);
         // Range check mirrors route_to.
-        assert!(router.route_many(2, vec![dummy_request(9)]).is_err());
+        let mut reqs = vec![dummy_request(9)];
+        assert!(router.route_many(2, &mut reqs).is_err());
         assert_eq!(router.outstanding_of(0), 0);
         assert_eq!(router.outstanding_of(1), 0);
     }
 
     #[test]
     fn route_many_on_closed_queue_rolls_counters_back() {
-        let (t1, r1) = mpsc::sync_channel(8);
-        drop(r1);
-        let router = Router::new(vec![t1], Policy::RoundRobin);
-        assert!(router
-            .route_many(0, (0..4).map(dummy_request).collect())
-            .is_err());
+        let pool = StealPool::new_pinned(1, 8);
+        pool.close();
+        let router = Router::new(pool, Policy::RoundRobin);
+        let mut reqs: Vec<Request> = (0..4).map(dummy_request).collect();
+        assert!(router.route_many(0, &mut reqs).is_err());
         assert_eq!(router.outstanding_of(0), 0);
     }
 
     #[test]
     fn least_loaded_orders_by_outstanding() {
-        let (t1, _r1) = mpsc::sync_channel(8);
-        let (t2, _r2) = mpsc::sync_channel(8);
-        let (t3, _r3) = mpsc::sync_channel(8);
-        let router = Router::new(vec![t1, t2, t3], Policy::LeastOutstanding);
+        let pool = StealPool::new_pinned(3, 8);
+        let router = Router::new(pool, Policy::LeastOutstanding);
         let _g = router.route_to(0, dummy_request(0)).unwrap();
         let _h = router.route_to(0, dummy_request(1)).unwrap();
         let _i = router.route_to(2, dummy_request(2)).unwrap();
         assert_eq!(router.least_loaded(2), vec![1, 2]);
         assert_eq!(router.least_loaded(9), vec![1, 2, 0]);
+        // The allocation-free form reuses caller scratch.
+        let mut scratch = Vec::with_capacity(3);
+        router.least_loaded_into(2, &mut scratch);
+        assert_eq!(scratch, vec![1, 2]);
+        router.least_loaded_into(9, &mut scratch);
+        assert_eq!(scratch, vec![1, 2, 0]);
     }
 
     #[test]

@@ -3,34 +3,54 @@
 //! This is the system a downstream user embeds: build a
 //! [`crate::plan::Plan`] and call `Deployment::serve()` (which lands
 //! in [`InferenceService::from_plan`]), then [`classify`] per image
-//! (or [`submit`] for pipelined submission), [`classify_batch`] for a
-//! whole batch — sharded across boards under
-//! [`ShardPolicy::SplitOver`] so one large batch keeps every board
-//! busy instead of parking on one — or replay a whole workload trace
-//! with [`run_trace`] (the E4 end-to-end experiment).  Pure std
-//! threads.  The historical
+//! (or [`submit`] for pipelined submission, [`submit_many`] for
+//! amortized bulk submission), [`classify_batch`] for a whole batch —
+//! sharded across boards under [`ShardPolicy::SplitOver`] so one
+//! large batch keeps every board busy instead of parking on one — or
+//! replay a whole workload trace with [`run_trace`] (the E4
+//! end-to-end experiment).  Pure std threads.  The historical
 //! `InferenceService::start(cfg, pace, policy)` loose-argument entry
 //! remains as a deprecated shim over the plan path.
 //!
+//! # Hot-path machinery (the raw-speed pass)
+//!
+//! Every request travels submit → route → batch → gather without a
+//! single steady-state heap allocation:
+//!
+//! - reply slots are reusable [`OneShot`]s drawn from a lock-free
+//!   [`ArcStack`] freelist and recycled on `wait`;
+//! - per-image buffers and batch gather buffers come from
+//!   [`StripedSlab`]s (per-thread stripes, no global slab mutex);
+//! - sharded submissions check out a pooled scratch bundle (request
+//!   vec, slot vec, per-board accumulators) and retire it on gather;
+//! - [`Router::route_many`] accounts a whole shard with ONE
+//!   outstanding-counter update and lands it under one pool lock with
+//!   one consumer wake.
+//!
+//! With `Pace::Immediate` the boards skip the engine entirely and the
+//! service boots without artifacts — `bench_service` saturates this
+//! configuration to measure the coordinator itself.
+//!
 //! [`classify`]: InferenceService::classify
 //! [`submit`]: InferenceService::submit
+//! [`submit_many`]: InferenceService::submit_many
 //! [`classify_batch`]: InferenceService::classify_batch
 //! [`run_trace`]: InferenceService::run_trace
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
 use super::batcher::{
-    argmax, run_batcher, BatcherConfig, Reply, ReplySlab, Request,
-    RequestSource,
+    argmax, run_batcher, BatcherConfig, Reply, Request, RequestSource,
 };
-use super::board::{BoardHandle, BoardSpec, Pace};
+use super::board::{BoardHandle, BoardSpec, Pace, ServeError};
 use super::metrics::{LatencyHistogram, LatencySummary};
+use super::oneshot::OneShot;
+use super::pool::{ArcStack, Padded, StripedSlab};
 use super::router::{Policy, Router, RouterGuard, StealPool};
 use crate::config::{RunConfig, ShardPolicy};
 use crate::data::TraceRequest;
@@ -73,31 +93,138 @@ impl std::fmt::Display for ServeReport {
     }
 }
 
-/// A pending reply: receiver + the router guard keeping the
-/// outstanding count honest until resolution.
-pub struct PendingReply {
-    rx: mpsc::Receiver<Result<Reply>>,
-    _guard: RouterGuard,
+/// Number of slab stripes (submitter threads hash onto these).
+const SLAB_STRIPES: usize = 8;
+
+/// Reusable scratch for one in-flight bulk submission: every vector a
+/// sharded dispatch or bulk wait needs, checked out of a pool at
+/// submit and retired (cleared, returned) at gather — steady-state
+/// bulk traffic allocates nothing.
+#[derive(Default)]
+struct BatchScratch {
+    slots: Vec<Arc<OneShot<Result<Reply>>>>,
+    guards: Vec<RouterGuard>,
+    reqs: Vec<Request>,
+    targets: Vec<usize>,
+    replies: Vec<Reply>,
+    host_acc: Vec<f64>,
+    fpga_acc: Vec<f64>,
 }
 
-impl PendingReply {
-    pub fn wait(self) -> Result<Reply> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("service dropped the request"))?
+/// State shared between the service and its in-flight pending
+/// handles: the recycled-buffer slabs, the reply-slot freelist and
+/// the scratch pool.
+struct Shared {
+    /// Recycled per-image request buffers for sharded batch dispatch.
+    image_slab: StripedSlab,
+    /// Recycled gather buffers for batch replies.
+    gather_slab: StripedSlab,
+    /// Lock-free freelist of reusable reply slots.
+    slots: ArcStack<OneShot<Result<Reply>>>,
+    scratch: Mutex<Vec<BatchScratch>>,
+    boards: usize,
+}
+
+impl Shared {
+    fn slot(&self) -> Arc<OneShot<Result<Reply>>> {
+        self.slots.pop().unwrap_or_else(|| Arc::new(OneShot::new()))
+    }
+
+    /// Return a slot to the freelist.  Callers recycle only after
+    /// `recv` (which always resets the slot to Idle), so a pooled
+    /// slot is always re-armable.
+    fn recycle(&self, slot: Arc<OneShot<Result<Reply>>>) {
+        self.slots.push(slot);
+    }
+
+    fn checkout(&self) -> BatchScratch {
+        self.scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn retire(&self, mut s: BatchScratch) {
+        s.slots.clear();
+        s.guards.clear();
+        s.reqs.clear();
+        s.targets.clear();
+        s.replies.clear();
+        s.host_acc.clear();
+        s.fpga_acc.clear();
+        self.scratch.lock().unwrap().push(s);
     }
 }
 
-/// A pending sharded batch: the per-image replies of every shard plus
-/// the gather slab that assembles them into one [`Reply`] (see
+/// A pending reply: the reusable reply slot plus the router guard
+/// keeping the outstanding count honest until resolution.
+pub struct PendingReply {
+    slot: Arc<OneShot<Result<Reply>>>,
+    /// The routed board (affinity under work stealing) — names the
+    /// board in a [`ServeError::BoardLost`].
+    board: usize,
+    _guard: RouterGuard,
+    shared: Arc<Shared>,
+}
+
+impl PendingReply {
+    /// Block for the reply.  If the serving stack died mid-flight the
+    /// error downcasts to [`ServeError::BoardLost`] — a typed failure,
+    /// never a hang.
+    pub fn wait(self) -> Result<Reply> {
+        let out = self.slot.recv().unwrap_or_else(|| {
+            Err(anyhow::Error::new(ServeError::BoardLost(self.board)))
+        });
+        self.shared.recycle(self.slot);
+        out
+    }
+}
+
+/// A bulk submission in flight ([`InferenceService::submit_many`]):
+/// one router guard covers the whole group, replies resolve in
+/// submission order.
+pub struct PendingSet {
+    scratch: BatchScratch,
+    board: usize,
+    shared: Arc<Shared>,
+}
+
+impl PendingSet {
+    /// Requests in the set.
+    pub fn len(&self) -> usize {
+        self.scratch.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scratch.slots.is_empty()
+    }
+
+    /// Block for every reply **in submission order**, handing each to
+    /// `f` as it resolves.  A dead board surfaces as a typed
+    /// [`ServeError::BoardLost`] per request.  Slots and scratch are
+    /// recycled on completion — the bulk steady state allocates
+    /// nothing.
+    pub fn wait_each(mut self, mut f: impl FnMut(Result<Reply>)) {
+        for slot in self.scratch.slots.drain(..) {
+            let out = slot.recv().unwrap_or_else(|| {
+                Err(anyhow::Error::new(ServeError::BoardLost(self.board)))
+            });
+            self.shared.recycle(slot);
+            f(out);
+        }
+        self.scratch.guards.clear();
+        self.shared.retire(std::mem::take(&mut self.scratch));
+    }
+}
+
+/// A pending sharded batch: per-image reply slots for every shard
+/// plus the pooled scratch that gathers them into one [`Reply`] (see
 /// [`InferenceService::submit_batch`]).
 pub struct PendingBatch {
-    parts: Vec<PendingReply>,
+    scratch: BatchScratch,
     batch: usize,
     classes: usize,
     shards: usize,
+    per_shard: usize,
     submitted: Instant,
-    slab: Arc<Mutex<ReplySlab>>,
+    shared: Arc<Shared>,
 }
 
 impl PendingBatch {
@@ -117,7 +244,9 @@ impl PendingBatch {
     /// logits into one reply **in submission order** — regardless of
     /// which board (or work-stealing thief) served each shard.  The
     /// gather buffer (`batch * classes` floats) is drawn from the
-    /// service's reply slab, so the steady state allocates nothing.
+    /// service's striped slab and the copy runs outside any lock, so
+    /// the steady state allocates nothing and concurrent gathers
+    /// interleave.
     ///
     /// The gathered [`Reply`] reports `batch` = the full batch,
     /// `argmax` of the *first* image (slice `logits` per `classes`
@@ -126,49 +255,69 @@ impl PendingBatch {
     /// per-image share of its executed chunk's time, shares sum per
     /// board (a 16-image shard that ran as two 8-image chunks counts
     /// both), and the slowest board bounds the concurrent batch.
-    pub fn wait(self) -> Result<Reply> {
-        let mut replies = Vec::with_capacity(self.parts.len());
-        for p in self.parts {
-            replies.push(p.wait()?);
+    ///
+    /// A board that died mid-batch resolves as a typed
+    /// [`ServeError::BoardLost`] — never a hang.
+    pub fn wait(mut self) -> Result<Reply> {
+        // Resolve every per-image slot in submission order.
+        for (k, slot) in self.scratch.slots.drain(..).enumerate() {
+            let shard = (k / self.per_shard.max(1))
+                .min(self.scratch.targets.len().saturating_sub(1));
+            let Some(out) = slot.recv() else {
+                return Err(anyhow::Error::new(ServeError::BoardLost(
+                    self.scratch.targets.get(shard).copied().unwrap_or(0),
+                )));
+            };
+            self.shared.recycle(slot);
+            self.scratch.replies.push(out?);
         }
-        let first = replies
+        let first = self
+            .scratch
+            .replies
             .first()
             .ok_or_else(|| anyhow!("empty batch reply"))?;
         let (id, board) = (first.id, first.board);
-        let mut per_board: HashMap<usize, (f64, f64)> = HashMap::new();
-        for r in &replies {
+        // Busiest-board accumulation into pooled per-board scalars
+        // (no hash map on the gather path).
+        self.scratch.host_acc.clear();
+        self.scratch.fpga_acc.clear();
+        self.scratch.host_acc.resize(self.shared.boards, 0.0);
+        self.scratch.fpga_acc.resize(self.shared.boards, 0.0);
+        for r in &self.scratch.replies {
             let share = r.batch.max(1) as f64;
-            let e = per_board.entry(r.board).or_insert((0.0, 0.0));
-            e.0 += r.host_ms / share;
-            e.1 += r.fpga_ms / share;
+            if let Some(acc) = self.scratch.host_acc.get_mut(r.board) {
+                *acc += r.host_ms / share;
+            }
+            if let Some(acc) = self.scratch.fpga_acc.get_mut(r.board) {
+                *acc += r.fpga_ms / share;
+            }
         }
         let host_ms =
-            per_board.values().fold(0.0f64, |acc, v| acc.max(v.0));
+            self.scratch.host_acc.iter().fold(0.0f64, |a, &v| a.max(v));
         let fpga_ms =
-            per_board.values().fold(0.0f64, |acc, v| acc.max(v.1));
+            self.scratch.fpga_acc.iter().fold(0.0f64, |a, &v| a.max(v));
         let classes = self.classes;
-        // Grab a recycled gather buffer under a short lock, run the
-        // O(batch * classes) gather copy UNLOCKED (concurrent batch
-        // gathers interleave instead of serializing), then re-retain
-        // the slot.
-        let mut buf: Arc<[f32]> = {
-            let grabbed =
-                self.slab.lock().unwrap().grab(self.batch * classes);
-            grabbed
-                .unwrap_or_else(|| vec![0.0f32; self.batch * classes].into())
-        };
+        // Grab a recycled gather buffer from the striped slab, run the
+        // O(batch * classes) gather copy outside any lock (concurrent
+        // batch gathers interleave instead of serializing), then
+        // re-retain the slot.
+        let mut buf: Arc<[f32]> = self
+            .shared
+            .gather_slab
+            .grab(self.batch * classes)
+            .unwrap_or_else(|| vec![0.0f32; self.batch * classes].into());
         {
             let dst = Arc::get_mut(&mut buf)
                 .expect("grabbed gather buffer is uniquely owned");
-            for (i, r) in replies.iter().enumerate() {
+            for (i, r) in self.scratch.replies.iter().enumerate() {
                 dst[i * classes..(i + 1) * classes]
                     .copy_from_slice(&r.logits);
             }
         }
-        self.slab.lock().unwrap().put_back(&buf);
+        self.shared.gather_slab.put_back(&buf);
         let logits = buf;
         let argmax = argmax(&logits[..classes]);
-        Ok(Reply {
+        let reply = Reply {
             id,
             logits,
             argmax,
@@ -177,7 +326,10 @@ impl PendingBatch {
             host_ms,
             fpga_ms,
             latency_ms: self.submitted.elapsed().as_secs_f64() * 1e3,
-        })
+        };
+        self.scratch.guards.clear();
+        self.shared.retire(std::mem::take(&mut self.scratch));
+        Ok(reply)
     }
 }
 
@@ -190,26 +342,18 @@ pub struct InferenceService {
     /// Multi-board placement of one incoming batch
     /// ([`InferenceService::submit_batch`]).
     shard: ShardPolicy,
-    next_id: AtomicU64,
-    /// Recycled per-image request buffers for sharded batch dispatch
-    /// (steady state splits a batch without allocating).
-    image_slab: Mutex<ReplySlab>,
-    /// Recycled gather buffers for batch replies; shared with every
-    /// in-flight [`PendingBatch`] so the gather side recycles too.
-    gather_slab: Arc<Mutex<ReplySlab>>,
-    /// The shared pool under `Policy::WorkStealing` (closed on drop so
-    /// the batcher threads exit; channel batchers exit when their
-    /// queue senders drop with the router).
-    steal_pool: Option<Arc<StealPool>>,
+    next_id: Padded<AtomicU64>,
+    shared: Arc<Shared>,
+    /// The shared request pool (every policy; closed on drop so the
+    /// batcher threads exit).
+    pool: Arc<StealPool>,
     /// Keep board handles alive (dropping them stops the workers).
     _boards: Vec<Arc<BoardHandle>>,
 }
 
 impl Drop for InferenceService {
     fn drop(&mut self) {
-        if let Some(pool) = &self.steal_pool {
-            pool.close();
-        }
+        self.pool.close();
     }
 }
 
@@ -218,6 +362,10 @@ impl InferenceService {
     /// entry.  The plan supplies everything the old loose-argument
     /// signature threaded separately: design point (incl. precision),
     /// overlap policy, board pacing, routing policy and serving knobs.
+    ///
+    /// With `Pace::Immediate` no artifacts are needed: every batch
+    /// size up to `serving.max_batch` is servable and the boards
+    /// synthesize shape-correct logits at raw host speed.
     pub fn from_plan(plan: &Plan) -> Result<Self> {
         // Serving consistency first (boards provisioned, shard policy
         // within them): a bad plan fails with a named-field error
@@ -230,49 +378,72 @@ impl InferenceService {
         let pace = plan.pace;
         let policy = plan.policy;
 
-        // Discover which batch sizes have artifacts.  Prefer the
-        // packed-weights layout — it executes identically but uploads
-        // ONE weight buffer per model (the batched-upload warm-up
-        // win) — but only when it covers every batch size the
-        // per-tensor layout offers: mixing layouts would keep two
-        // device-resident copies of the model's weights.
-        let manifest = Manifest::load(&plan.artifacts_dir)?;
-        let mut plain: HashMap<usize, String> = HashMap::new();
-        let mut packed: HashMap<usize, String> = HashMap::new();
-        for a in manifest.artifacts.iter().filter(|a| {
-            a.model == plan.model
-                && a.conv_impl == plan.conv_impl
-                && a.batch <= plan.serving.max_batch
-        }) {
-            let layout =
-                if a.packed_weights { &mut packed } else { &mut plain };
-            layout.entry(a.batch).or_insert_with(|| a.name.clone());
-        }
-        let use_packed = !packed.is_empty()
-            && plain.keys().all(|b| packed.contains_key(b));
-        let by_batch = if use_packed { packed } else { plain };
-        let mut sizes: Vec<usize> = by_batch.keys().copied().collect();
-        sizes.sort_unstable();
-        if sizes.first() != Some(&1) {
-            return Err(anyhow!(
-                "no batch-1 artifact for {} ({}); have {:?}",
-                plan.model,
-                plan.conv_impl,
-                sizes
-            ));
-        }
+        // Which batch sizes are servable, and under what artifact
+        // name.  Immediate pace is engine-less: every size up to
+        // max_batch exists by construction, under synthetic names.
+        // Otherwise discover what the manifest actually has —
+        // preferring the packed-weights layout (it executes
+        // identically but uploads ONE weight buffer per model, the
+        // batched-upload warm-up win), but only when it covers every
+        // batch size the per-tensor layout offers: mixing layouts
+        // would keep two device-resident copies of the weights.
+        let (sizes, names, warm) = if pace == Pace::Immediate {
+            let sizes: Vec<usize> =
+                (1..=plan.serving.max_batch.max(1)).collect();
+            let names: HashMap<usize, Arc<str>> = sizes
+                .iter()
+                .map(|&b| {
+                    (b, Arc::<str>::from(format!("immediate_b{b}")))
+                })
+                .collect();
+            (sizes, names, Vec::new())
+        } else {
+            let manifest = Manifest::load(&plan.artifacts_dir)?;
+            let mut plain: HashMap<usize, String> = HashMap::new();
+            let mut packed: HashMap<usize, String> = HashMap::new();
+            for a in manifest.artifacts.iter().filter(|a| {
+                a.model == plan.model
+                    && a.conv_impl == plan.conv_impl
+                    && a.batch <= plan.serving.max_batch
+            }) {
+                let layout =
+                    if a.packed_weights { &mut packed } else { &mut plain };
+                layout.entry(a.batch).or_insert_with(|| a.name.clone());
+            }
+            let use_packed = !packed.is_empty()
+                && plain.keys().all(|b| packed.contains_key(b));
+            let by_batch = if use_packed { packed } else { plain };
+            let mut sizes: Vec<usize> = by_batch.keys().copied().collect();
+            sizes.sort_unstable();
+            if sizes.first() != Some(&1) {
+                return Err(anyhow!(
+                    "no batch-1 artifact for {} ({}); have {:?}",
+                    plan.model,
+                    plan.conv_impl,
+                    sizes
+                ));
+            }
+            let warm: Vec<String> =
+                sizes.iter().map(|b| by_batch[b].clone()).collect();
+            let names: HashMap<usize, Arc<str>> = by_batch
+                .into_iter()
+                .map(|(b, n)| (b, Arc::<str>::from(n)))
+                .collect();
+            (sizes, names, warm)
+        };
 
         let (c, h, w) = model.in_shape;
         let image_numel = c * h * w;
         let classes = model.propagate().last().unwrap().out_shape.numel();
 
-        let warm: Vec<String> =
-            sizes.iter().map(|b| by_batch[b].clone()).collect();
-
+        // One pool backend for every policy: stealing drains at the
+        // speed of free boards; pinned keeps strict per-board queues.
         let board_count = plan.serving.boards;
-        let steal_pool = (policy == Policy::WorkStealing)
-            .then(|| StealPool::new(board_count, plan.serving.queue_depth));
-        let mut queues = Vec::new();
+        let pool = if policy == Policy::WorkStealing {
+            StealPool::new(board_count, plan.serving.queue_depth)
+        } else {
+            StealPool::new_pinned(board_count, plan.serving.queue_depth)
+        };
         let mut boards = Vec::new();
         for index in 0..board_count {
             let spec = BoardSpec {
@@ -286,26 +457,14 @@ impl InferenceService {
                 warm: warm.clone(),
             };
             let board = Arc::new(BoardHandle::spawn(spec)?);
-            let source = match &steal_pool {
-                Some(pool) => RequestSource::Stealing {
-                    pool: pool.clone(),
-                    board: index,
-                },
-                None => {
-                    let (tx, rx) = mpsc::sync_channel::<Request>(
-                        plan.serving.queue_depth,
-                    );
-                    queues.push(tx);
-                    RequestSource::Channel(rx)
-                }
-            };
+            let source = RequestSource { pool: pool.clone(), board: index };
             let bc = BatcherConfig {
                 max_batch: *sizes.last().unwrap(),
                 max_wait: Duration::from_millis(plan.serving.max_wait_ms),
                 sizes: sizes.clone(),
             };
             let board2 = board.clone();
-            let names = by_batch.clone();
+            let names = names.clone();
             std::thread::Builder::new()
                 .name(format!("batcher-{index}"))
                 .spawn(move || {
@@ -321,19 +480,24 @@ impl InferenceService {
             boards.push(board);
         }
 
-        let router = match &steal_pool {
-            Some(pool) => Router::stealing(pool.clone()),
-            None => Router::new(queues, policy),
-        };
+        let router = Router::new(pool.clone(), policy);
+        let slot_cap = (board_count * plan.serving.queue_depth * 2)
+            .clamp(64, 1024);
+        let shared = Arc::new(Shared {
+            image_slab: StripedSlab::new(SLAB_STRIPES),
+            gather_slab: StripedSlab::new(SLAB_STRIPES),
+            slots: ArcStack::new(slot_cap),
+            scratch: Mutex::new(Vec::new()),
+            boards: board_count,
+        });
         Ok(InferenceService {
             router,
             image_numel,
             classes,
             shard: plan.serving.shard,
-            next_id: AtomicU64::new(0),
-            image_slab: Mutex::new(ReplySlab::new()),
-            gather_slab: Arc::new(Mutex::new(ReplySlab::new())),
-            steal_pool,
+            next_id: Padded::new(AtomicU64::new(0)),
+            shared,
+            pool,
             _boards: boards,
         })
     }
@@ -360,6 +524,8 @@ impl InferenceService {
     /// Accepts anything convertible into a shared `Arc<[f32]>`; pass
     /// an `Arc<[f32]>` directly for true zero-copy submission (a `Vec`
     /// is converted once here and never copied again downstream).
+    /// Steady state: a pooled reply slot, one preallocated enqueue —
+    /// no heap allocation.
     pub fn submit(
         &self,
         image: impl Into<Arc<[f32]>>,
@@ -373,20 +539,76 @@ impl InferenceService {
             ));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = mpsc::sync_channel(1);
+        let slot = self.shared.slot();
+        let board = self.router.pick();
         let req = Request {
             id,
             image,
             submitted: Instant::now(),
-            reply: tx,
+            reply: slot.sender(),
         };
-        let guard = self.router.route(req)?;
-        Ok(PendingReply { rx, _guard: guard })
+        let guard = self.router.route_to(board, req)?;
+        Ok(PendingReply {
+            slot,
+            board,
+            _guard: guard,
+            shared: self.shared.clone(),
+        })
     }
 
     /// Submit one image and block for its classification.
     pub fn classify(&self, image: impl Into<Arc<[f32]>>) -> Result<Reply> {
         self.submit(image)?.wait()
+    }
+
+    /// Submit a group of independent single-image requests with bulk
+    /// amortization: ONE id reservation, ONE outstanding-counter
+    /// update, ONE pool lock and ONE consumer wake for the whole
+    /// group (vs. one each per request via [`submit`]).  All requests
+    /// carry the same board affinity (under work stealing, idle
+    /// boards still rebalance).  Replies resolve in submission order
+    /// through [`PendingSet::wait_each`].
+    ///
+    /// This is the closed-loop saturation path `bench_service` and
+    /// `ffcnn serve --saturate` drive.
+    ///
+    /// [`submit`]: InferenceService::submit
+    pub fn submit_many(
+        &self,
+        images: impl IntoIterator<Item = Arc<[f32]>>,
+    ) -> Result<PendingSet> {
+        let mut scratch = self.shared.checkout();
+        let submitted = Instant::now();
+        for image in images {
+            if image.len() != self.image_numel {
+                return Err(anyhow!(
+                    "image has {} elements, model wants {}",
+                    image.len(),
+                    self.image_numel
+                ));
+            }
+            let slot = self.shared.slot();
+            scratch.reqs.push(Request {
+                id: 0, // assigned below from one bulk reservation
+                image,
+                submitted,
+                reply: slot.sender(),
+            });
+            scratch.slots.push(slot);
+        }
+        if scratch.reqs.is_empty() {
+            self.shared.retire(scratch);
+            return Err(anyhow!("submit_many: empty image set"));
+        }
+        let n = scratch.reqs.len() as u64;
+        let base = self.next_id.fetch_add(n, Ordering::Relaxed);
+        for (k, r) in scratch.reqs.iter_mut().enumerate() {
+            r.id = base + k as u64;
+        }
+        let board = self.router.pick();
+        let guard = self.router.route_many(board, &mut scratch.reqs)?;
+        scratch.guards.push(guard);
+        Ok(PendingSet { scratch, board, shared: self.shared.clone() })
     }
 
     /// Submit one multi-image batch (flat NCHW, `B * image_numel`
@@ -398,8 +620,10 @@ impl InferenceService {
     /// through the normal router/batcher machinery (work stealing may
     /// still rebalance a shard off a slow board).  Under
     /// [`ShardPolicy::None`] the whole batch lands on one board — the
-    /// unsharded baseline.  Per-image request buffers come from a
-    /// recycled slab, so steady-state dispatch allocates nothing;
+    /// unsharded baseline.  Per-image request buffers come from the
+    /// striped slab and each shard dispatches through
+    /// [`Router::route_many`] (one counter update, one wake), so
+    /// steady-state dispatch allocates nothing;
     /// [`PendingBatch::wait`] gathers the logits back **in submission
     /// order** into one [`Reply`].
     pub fn submit_batch(
@@ -423,52 +647,47 @@ impl InferenceService {
         // shard counts can never drift.
         let (per_shard, shards) =
             crate::fpga::pipeline::shard_split(images, want);
-        let targets = self.router.least_loaded(shards);
+        let mut scratch = self.shared.checkout();
+        self.router.least_loaded_into(shards, &mut scratch.targets);
         let submitted = Instant::now();
+        let base = self.next_id.fetch_add(images as u64, Ordering::Relaxed);
 
-        // Per-image request buffers from the recycled slab: the copy
-        // out of the flat batch is the dispatch cost the simulator's
-        // per-shard overhead term models.  One short lock per take —
-        // concurrent batch dispatchers interleave their copies
-        // instead of serializing behind one long critical section.
-        let slices: Vec<Arc<[f32]>> = (0..images)
-            .map(|i| {
-                self.image_slab.lock().unwrap().take(
-                    &flat[i * self.image_numel..(i + 1) * self.image_numel],
-                )
-            })
-            .collect();
         // Dispatch shard-at-a-time through `route_many`, which puts
         // each shard's full fan-out on its board's outstanding count
         // before the first enqueue — a concurrent dispatcher's
         // `least_loaded` pick sees in-flight shards whole instead of
         // one image at a time.  Shards are contiguous, so gather order
-        // is submission order.
-        let mut parts = Vec::with_capacity(images);
-        let mut slices = slices.into_iter();
-        for (s, &board) in targets.iter().enumerate() {
+        // is submission order.  Per-image buffers come from the
+        // striped slab: the copy out of the flat batch is the dispatch
+        // cost the simulator's per-shard overhead term models.
+        for s in 0..shards {
+            let board = scratch.targets[s.min(scratch.targets.len() - 1)];
             let lo = s * per_shard;
             let hi = ((s + 1) * per_shard).min(images);
-            let mut reqs = Vec::with_capacity(hi - lo);
-            let mut rxs = Vec::with_capacity(hi - lo);
-            for image in slices.by_ref().take(hi - lo) {
-                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                let (tx, rx) = mpsc::sync_channel(1);
-                reqs.push(Request { id, image, submitted, reply: tx });
-                rxs.push(rx);
+            for i in lo..hi {
+                let image = self.shared.image_slab.take(
+                    &flat[i * self.image_numel..(i + 1) * self.image_numel],
+                );
+                let slot = self.shared.slot();
+                scratch.reqs.push(Request {
+                    id: base + i as u64,
+                    image,
+                    submitted,
+                    reply: slot.sender(),
+                });
+                scratch.slots.push(slot);
             }
-            let guards = self.router.route_many(board, reqs)?;
-            for (rx, guard) in rxs.into_iter().zip(guards) {
-                parts.push(PendingReply { rx, _guard: guard });
-            }
+            let guard = self.router.route_many(board, &mut scratch.reqs)?;
+            scratch.guards.push(guard);
         }
         Ok(PendingBatch {
-            parts,
+            scratch,
             batch: images,
             classes: self.classes,
             shards,
+            per_shard,
             submitted,
-            slab: self.gather_slab.clone(),
+            shared: self.shared.clone(),
         })
     }
 
@@ -523,7 +742,7 @@ impl InferenceService {
             }
         }
 
-        let mut hist = LatencyHistogram::new();
+        let hist = LatencyHistogram::new();
         let mut batch_sum = 0u64;
         let mut fpga_ms = 0.0;
         let mut host_ms = 0.0;
@@ -588,6 +807,23 @@ mod tests {
     /// Boot through the plan facade (what `Deployment::serve` does).
     fn serve(cfg: &RunConfig, pace: Pace, policy: Policy) -> Result<InferenceService> {
         InferenceService::from_plan(&Plan::from_run_config(cfg, pace, policy)?)
+    }
+
+    /// Engine-less service: Immediate pace, no artifacts required.
+    fn immediate_serve(
+        boards: usize,
+        policy: Policy,
+        shard: ShardPolicy,
+    ) -> InferenceService {
+        let mut cfg = RunConfig::default();
+        cfg.model = "tinynet".into();
+        cfg.serving.boards = boards;
+        cfg.serving.max_batch = 4;
+        cfg.serving.max_wait_ms = 1;
+        cfg.serving.shard = shard;
+        let plan =
+            Plan::from_run_config(&cfg, Pace::Immediate, policy).unwrap();
+        InferenceService::from_plan(&plan).unwrap()
     }
 
     #[test]
@@ -694,6 +930,77 @@ mod tests {
         let err =
             InferenceService::from_plan(&plan).unwrap_err().to_string();
         assert!(err.contains("serving.boards = 0"), "{err}");
+    }
+
+    #[test]
+    fn immediate_service_serves_without_artifacts() {
+        // The raw-speed mode: no manifest, no engine — the whole
+        // coordinator stack runs on synthetic logits that echo each
+        // image's first element (identity check below).
+        let svc =
+            immediate_serve(1, Policy::RoundRobin, ShardPolicy::None);
+        let numel = svc.image_numel();
+        let mut img = vec![0.0f32; numel];
+        img[0] = 42.0;
+        let reply = svc.classify(img).unwrap();
+        assert_eq!(reply.logits.len(), 10);
+        assert_eq!(reply.logits[0], 42.0, "image identity carried");
+        assert_eq!(reply.argmax, 0);
+        assert!(reply.fpga_ms > 0.0, "cost oracle runs engine-less");
+    }
+
+    #[test]
+    fn submit_many_resolves_in_submission_order() {
+        let svc =
+            immediate_serve(2, Policy::WorkStealing, ShardPolicy::None);
+        let numel = svc.image_numel();
+        let images: Vec<Arc<[f32]>> = (0..8)
+            .map(|i| {
+                let mut v = vec![0.0f32; numel];
+                v[0] = i as f32 + 1.0;
+                Arc::from(v)
+            })
+            .collect();
+        let set = svc.submit_many(images.iter().cloned()).unwrap();
+        assert_eq!(set.len(), 8);
+        assert!(!set.is_empty());
+        let mut got = Vec::new();
+        set.wait_each(|r| got.push(r.unwrap().logits[0]));
+        let want: Vec<f32> = (0..8).map(|i| i as f32 + 1.0).collect();
+        assert_eq!(got, want, "replies must resolve in submission order");
+        // Bulk validation: a wrong-sized image rejects the whole set.
+        assert!(svc
+            .submit_many(std::iter::once(Arc::<[f32]>::from(vec![0.0f32])))
+            .is_err());
+        assert!(svc.submit_many(std::iter::empty()).is_err());
+    }
+
+    #[test]
+    fn immediate_sharded_batch_gathers_in_order() {
+        let svc = immediate_serve(
+            2,
+            Policy::LeastOutstanding,
+            ShardPolicy::SplitOver(2),
+        );
+        let numel = svc.image_numel();
+        let n = 6usize;
+        let mut flat = vec![0.0f32; n * numel];
+        for i in 0..n {
+            flat[i * numel] = (i + 1) as f32;
+        }
+        let pending = svc.submit_batch(flat).unwrap();
+        assert_eq!(pending.batch(), n);
+        assert_eq!(pending.shards(), 2);
+        let reply = pending.wait().unwrap();
+        assert_eq!(reply.batch, n);
+        assert_eq!(reply.logits.len(), n * 10);
+        for i in 0..n {
+            assert_eq!(
+                reply.logits[i * 10],
+                (i + 1) as f32,
+                "row {i} out of order"
+            );
+        }
     }
 
     #[test]

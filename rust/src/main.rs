@@ -50,6 +50,12 @@ COMMANDS:
             [--device stratix10] [--iters 3]
   serve     [--model alexnet] [--device stratix10] [--requests 64]
             [--rate 0] [--boards 1] [--max-batch 8] [--pace-fpga]
+            [--pace-immediate]    engine-less boards (no artifacts
+                                  needed): measures the coordinator
+            [--saturate]          closed-loop bulk saturation via
+                                  submit_many — the raw-speed pass
+            [--bulk 64]           requests per bulk submission group
+                                  (with --saturate)
             [--seed 7]            Poisson trace seed (reproducible but
                                   variable replays)
             [--batch-size 1]      batch per request: with --rate this
@@ -573,19 +579,63 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
         .device(&args.get("device", "stratix10"))
         .artifacts_dir(artifacts)
         .serving(serving)
-        .pace(if args.has("pace-fpga") { Pace::Fpga } else { Pace::None })
+        .pace(if args.has("pace-immediate") {
+            Pace::Immediate
+        } else if args.has("pace-fpga") {
+            Pace::Fpga
+        } else {
+            Pace::None
+        })
         .policy(Policy::LeastOutstanding)
         .build()?;
     let dep = plan.deploy()?;
     let in_shape = dep.model().in_shape;
 
     let svc = dep.serve()?;
+    if args.has("saturate") {
+        // Closed-loop saturation: hammer submit_many as fast as
+        // replies resolve.  One shared image (zero-copy), bulk groups
+        // of --bulk requests — measures the coordinator's raw
+        // submit→route→batch→gather speed, which is the whole story
+        // under --pace-immediate.
+        use ffcnn::coordinator::LatencyHistogram;
+        let bulk = args.get_usize("bulk", 64)?.max(1);
+        let image: std::sync::Arc<[f32]> =
+            data::synth_images(1, in_shape, 1000).into();
+        let hist = LatencyHistogram::new();
+        let mut served = 0u64;
+        let mut errors = 0u64;
+        let t0 = std::time::Instant::now();
+        while ((served + errors) as usize) < requests {
+            let n = bulk.min(requests - (served + errors) as usize);
+            let set = svc.submit_many(
+                std::iter::repeat_with(|| image.clone()).take(n),
+            )?;
+            set.wait_each(|r| match r {
+                Ok(reply) => {
+                    hist.record_ms(reply.latency_ms);
+                    served += 1;
+                }
+                Err(_) => errors += 1,
+            });
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        println!(
+            "saturate: {served} ok / {errors} err in {wall_s:.3}s -> \
+             {:.0} req/s (pace {:?}, {} board(s), bulk {bulk})",
+            served as f64 / wall_s,
+            plan.pace,
+            plan.serving.boards
+        );
+        println!("latency: {}", hist.summary());
+        return Ok(());
+    }
     if batch_size > 1 && rate <= 0.0 {
         // Closed-loop whole-batch serving: each request is one flat
         // batch, split across boards per the shard policy and
         // gathered in order.
         use ffcnn::coordinator::LatencyHistogram;
-        let mut hist = LatencyHistogram::new();
+        let hist = LatencyHistogram::new();
         for r in 0..requests {
             let flat =
                 data::synth_images(batch_size, in_shape, 1000 + r as u64);

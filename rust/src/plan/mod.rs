@@ -606,6 +606,7 @@ pub(crate) fn pace_to_str(p: Pace) -> &'static str {
     match p {
         Pace::None => "none",
         Pace::Fpga => "fpga",
+        Pace::Immediate => "immediate",
     }
 }
 
@@ -613,6 +614,7 @@ pub(crate) fn pace_from_str(s: &str) -> Result<Pace> {
     Ok(match s {
         "none" => Pace::None,
         "fpga" => Pace::Fpga,
+        "immediate" => Pace::Immediate,
         _ => return Err(anyhow!("unknown pace {s:?}")),
     })
 }

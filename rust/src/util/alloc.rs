@@ -1,0 +1,66 @@
+//! Allocation-counting global allocator for perf tests and benches.
+//!
+//! The serving hot path promises **zero steady-state allocations per
+//! request** (ROADMAP item 4).  Promises rot; counters do not.  Test
+//! and bench binaries that care install [`CountingAlloc`] as their
+//! `#[global_allocator]` and assert the delta of
+//! [`allocation_count`] across a steady-state window:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: ffcnn::util::alloc::CountingAlloc =
+//!     ffcnn::util::alloc::CountingAlloc;
+//!
+//! let before = allocation_count();
+//! // ... steady-state window: N requests through a warm service ...
+//! assert_eq!(allocation_count() - before, 0);
+//! ```
+//!
+//! The counter is a single relaxed `AtomicU64` bump per
+//! `alloc`/`alloc_zeroed`/`realloc` — cheap enough to leave on for a
+//! whole bench binary.  `dealloc` is not counted: frees are the
+//! mirror of allocations and a free-only path cannot regress the
+//! zero-alloc claim.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of heap allocations since start (only bumped
+/// when [`CountingAlloc`] is installed as the global allocator).
+pub fn allocation_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// A [`System`]-backed allocator that counts every allocation.
+pub struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`, which upholds the GlobalAlloc
+// contract; the added atomic bump has no effect on the returned
+// memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}

@@ -3,6 +3,7 @@
 //! runner.  (DESIGN.md §7: every dependency the system needs that the
 //! environment does not provide is built here.)
 
+pub mod alloc;
 pub mod bench;
 pub mod json;
 pub mod prop;

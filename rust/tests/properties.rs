@@ -162,7 +162,7 @@ fn prop_histogram_quantiles_bounded_and_ordered() {
                 .collect::<Vec<u64>>()
         },
         |samples| {
-            let mut h = LatencyHistogram::new();
+            let h = LatencyHistogram::new();
             for &s in samples {
                 h.record_us(s);
             }
@@ -189,9 +189,9 @@ fn prop_histogram_merge_equals_combined() {
             (a, b)
         },
         |(a, b)| {
-            let mut ha = LatencyHistogram::new();
-            let mut hb = LatencyHistogram::new();
-            let mut hc = LatencyHistogram::new();
+            let ha = LatencyHistogram::new();
+            let hb = LatencyHistogram::new();
+            let hc = LatencyHistogram::new();
             for &x in a {
                 ha.record_us(x);
                 hc.record_us(x);

@@ -1,0 +1,297 @@
+//! Concurrency hammer for the serving hot path at `Pace::Immediate`
+//! (engine-less boards — no artifacts needed, so these always run).
+//!
+//! Pins the three claims the raw-speed pass makes:
+//!
+//! 1. **Ordering + isolation** — N submitters × M boards with work
+//!    stealing: every reply echoes its own request's payload (the
+//!    Immediate boards copy `image[0]` into `logits[0]`, so
+//!    cross-wiring is detectable), and bulk replies resolve in
+//!    submission order.
+//! 2. **Zero steady-state allocations** — a warm 1-board/1-submitter
+//!    window performs literally zero heap allocations end to end
+//!    (submit → route → batch → execute → scatter → gather), counted
+//!    by a process-wide counting allocator.
+//! 3. **Typed board loss** — a board that dies with jobs still queued
+//!    resolves every mid-flight waiter (no hang), and loss surfaces
+//!    through the typed [`ServeError::BoardLost`] channel rather than
+//!    a stringified shadow.
+//!
+//! Allocation counting is process-wide, so every test serializes on
+//! one lock.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use ffcnn::config::{RunConfig, ShardPolicy};
+use ffcnn::coordinator::{
+    BoardHandle, BoardSpec, InferenceService, OneShot, Pace, Policy,
+    ServeError,
+};
+use ffcnn::fpga::device::STRATIX10;
+use ffcnn::fpga::timing::ffcnn_stratix10_params;
+use ffcnn::models;
+use ffcnn::plan::Plan;
+use ffcnn::util::alloc::{allocation_count, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn lock() -> MutexGuard<'static, ()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Engine-less service on tinynet (768-float images, 10 classes).
+fn immediate(
+    boards: usize,
+    max_batch: usize,
+    policy: Policy,
+    shard: ShardPolicy,
+) -> InferenceService {
+    let mut cfg = RunConfig::default();
+    cfg.model = "tinynet".into();
+    cfg.serving.boards = boards;
+    cfg.serving.max_batch = max_batch;
+    cfg.serving.max_wait_ms = 0;
+    cfg.serving.shard = shard;
+    let plan = Plan::from_run_config(&cfg, Pace::Immediate, policy).unwrap();
+    InferenceService::from_plan(&plan).unwrap()
+}
+
+/// A distinct image whose payload the Immediate board echoes back as
+/// `logits[0]`.
+fn tagged(numel: usize, tag: f32) -> Arc<[f32]> {
+    let mut v = vec![0.0f32; numel];
+    v[0] = tag;
+    v.into()
+}
+
+#[test]
+fn hammer_submission_order_and_no_cross_wiring() {
+    let _g = lock();
+    const SUBMITTERS: usize = 4;
+    const PER_HALF: usize = 60;
+    let svc = immediate(2, 4, Policy::WorkStealing, ShardPolicy::None);
+    let numel = svc.image_numel();
+    std::thread::scope(|s| {
+        for t in 0..SUBMITTERS {
+            let svc = &svc;
+            s.spawn(move || {
+                // Tags unique across threads AND requests.
+                let tag = |i: usize| (t * 10_000 + i) as f32 + 1.0;
+                // Bulk half: one submit_many group; replies must come
+                // back in submission order with matching payloads.
+                let bulk: Vec<Arc<[f32]>> =
+                    (0..PER_HALF).map(|i| tagged(numel, tag(i))).collect();
+                let set = svc.submit_many(bulk.iter().cloned()).unwrap();
+                assert_eq!(set.len(), PER_HALF);
+                let mut k = 0usize;
+                set.wait_each(|r| {
+                    let reply = r.unwrap();
+                    assert_eq!(
+                        reply.logits[0],
+                        tag(k),
+                        "thread {t}: bulk reply {k} cross-wired or \
+                         out of order"
+                    );
+                    k += 1;
+                });
+                assert_eq!(k, PER_HALF);
+                // Pipelined half: per-request submits, waited in
+                // submission order.
+                let pend: Vec<_> = (0..PER_HALF)
+                    .map(|i| {
+                        svc.submit(tagged(numel, tag(PER_HALF + i)))
+                            .unwrap()
+                    })
+                    .collect();
+                for (i, p) in pend.into_iter().enumerate() {
+                    let reply = p.wait().unwrap();
+                    assert_eq!(
+                        reply.logits[0],
+                        tag(PER_HALF + i),
+                        "thread {t}: pipelined reply {i} cross-wired"
+                    );
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn concurrent_sharded_batches_gather_in_order() {
+    let _g = lock();
+    let svc = immediate(
+        2,
+        4,
+        Policy::LeastOutstanding,
+        ShardPolicy::SplitOver(2),
+    );
+    let numel = svc.image_numel();
+    std::thread::scope(|s| {
+        for t in 0..3usize {
+            let svc = &svc;
+            s.spawn(move || {
+                for round in 0..20usize {
+                    let n = 6usize;
+                    let mut flat = vec![0.0f32; n * numel];
+                    for (i, row) in flat.chunks_mut(numel).enumerate() {
+                        row[0] = (t * 1000 + round * 10 + i) as f32 + 1.0;
+                    }
+                    let tag0 = flat[0];
+                    let reply = svc.classify_batch(flat).unwrap();
+                    assert_eq!(reply.batch, n);
+                    for i in 0..n {
+                        assert_eq!(
+                            reply.logits[i * 10],
+                            tag0 + i as f32,
+                            "thread {t} round {round}: gather row {i} \
+                             out of order"
+                        );
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn zero_alloc_serial_window() {
+    let _g = lock();
+    // max_batch 1 makes the window deterministic: every chunk is a
+    // batch-1 execute, so the board's cost-oracle memo and reply slab
+    // see exactly the shapes the warmup saw.
+    let svc = immediate(1, 1, Policy::LeastOutstanding, ShardPolicy::None);
+    let image = tagged(svc.image_numel(), 3.5);
+    for _ in 0..64 {
+        let reply = svc.classify(image.clone()).unwrap();
+        assert_eq!(reply.logits[0], 3.5);
+    }
+    // Let any startup stragglers (thread spawn, first condvar waits)
+    // finish before opening the counted window.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let before = allocation_count();
+    for _ in 0..16 {
+        let pending = svc.submit(image.clone()).unwrap();
+        let reply = pending.wait().unwrap();
+        assert_eq!(reply.logits[0], 3.5);
+    }
+    let allocs = allocation_count() - before;
+    assert_eq!(
+        allocs, 0,
+        "warm submit→route→batch→gather window allocated {allocs} times \
+         (want literally zero)"
+    );
+}
+
+#[test]
+fn bulk_steady_state_reaches_zero_allocations() {
+    let _g = lock();
+    const GROUP: usize = 32;
+    let svc = immediate(1, 1, Policy::LeastOutstanding, ShardPolicy::None);
+    let image = tagged(svc.image_numel(), 1.25);
+    let round = |svc: &InferenceService| {
+        let set = svc
+            .submit_many(
+                std::iter::repeat_with(|| image.clone()).take(GROUP),
+            )
+            .unwrap();
+        set.wait_each(|r| {
+            assert_eq!(r.unwrap().logits[0], 1.25);
+        });
+    };
+    for _ in 0..8 {
+        round(&svc);
+    }
+    // The board-side reply slab grows to the *maximum concurrent*
+    // in-flight replies, which depends on scheduling — so require
+    // that the steady state is REACHED (some warm round allocates
+    // exactly zero), not that the first measured round is already
+    // there.
+    let mut best = u64::MAX;
+    for _ in 0..10 {
+        let before = allocation_count();
+        round(&svc);
+        best = best.min(allocation_count() - before);
+        if best == 0 {
+            break;
+        }
+    }
+    assert_eq!(
+        best, 0,
+        "bulk path never reached an allocation-free round \
+         (best round allocated {best} times)"
+    );
+}
+
+/// Engine-less board spec for the mid-flight loss test.
+fn immediate_board_spec() -> BoardSpec {
+    BoardSpec {
+        index: 3,
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        model: models::tinynet(),
+        device: &STRATIX10,
+        design: ffcnn_stratix10_params(),
+        overlap: ffcnn::fpga::timing::OverlapPolicy::WithinGroup,
+        pace: Pace::Immediate,
+        warm: vec![],
+    }
+}
+
+#[test]
+fn board_lost_mid_flight_resolves_every_waiter() {
+    let _g = lock();
+    // The fuller mid-flight variant of board.rs's drop test: queue a
+    // burst, drop the board while some jobs are still queued, and
+    // check every waiter resolves — served jobs with a real result,
+    // drained jobs with a dropped sender (which the service maps to
+    // `ServeError::BoardLost`).  Scheduling decides how many jobs the
+    // worker got to, so retry until a drop actually lands mid-flight.
+    let mut saw_lost = false;
+    for _ in 0..50 {
+        let board = BoardHandle::spawn(immediate_board_spec()).unwrap();
+        let artifact: Arc<str> = Arc::from("immediate_b1");
+        let input: Arc<[f32]> = vec![0.25f32; 3 * 16 * 16].into();
+        let slots: Vec<_> =
+            (0..8).map(|_| Arc::new(OneShot::new())).collect();
+        for slot in &slots {
+            board
+                .submit_to(artifact.clone(), 1, input.clone(), slot)
+                .unwrap();
+        }
+        drop(board); // close + drain + join
+        for slot in &slots {
+            match slot.recv() {
+                Some(Ok(r)) => assert_eq!(r.batch, 1),
+                Some(Err(e)) => panic!("unexpected execute error: {e:#}"),
+                // A drained job's sender dropped unresolved — the
+                // exact state `PendingReply::wait` maps to the typed
+                // `ServeError::BoardLost`.
+                None => saw_lost = true,
+            }
+        }
+        if saw_lost {
+            break;
+        }
+    }
+    assert!(
+        saw_lost,
+        "50 bursts all drained cleanly — mid-flight drop never exercised"
+    );
+}
+
+#[test]
+fn serve_error_stays_typed_through_anyhow() {
+    // The contract every layer (board submit/execute, batcher scatter,
+    // service wait) relies on: a `ServeError` wrapped in `anyhow`
+    // must stay downcastable and name the board in its message.
+    let e = anyhow::Error::new(ServeError::BoardLost(3));
+    assert_eq!(
+        e.downcast_ref::<ServeError>(),
+        Some(&ServeError::BoardLost(3))
+    );
+    assert!(e.to_string().contains("board-3"), "{e}");
+}
