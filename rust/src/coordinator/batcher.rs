@@ -31,11 +31,12 @@
 //! recycled) by the submitter.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::board::{BatchInput, BatchResult, BoardHandle, ServeError};
 use super::oneshot::{OneShot, OneShotSender};
 use super::router::{Popped, StealPool};
+use crate::util::sim::Nanos;
 use crate::Result;
 
 /// One in-flight inference request.
@@ -44,7 +45,10 @@ pub struct Request {
     /// Flat NCHW image, numel = C*H*W of the model input.  Shared:
     /// never copied on the submit/route path.
     pub image: Arc<[f32]>,
-    pub submitted: Instant,
+    /// Submit timestamp on the service clock ([`Nanos`]; virtual
+    /// under the simulation harness) — latency and the steal
+    /// tie-break both compare these.
+    pub submitted: Nanos,
     /// Resolves the submitter's reply slot; dropping it unresolved
     /// (worker death) surfaces as a typed error on the waiter's side.
     pub reply: OneShotSender<Result<Reply>>,
@@ -297,6 +301,10 @@ pub fn run_batcher(
     let mut slab = ReplySlab::new();
     // One reply slot, re-armed for every board round-trip.
     let slot = Arc::new(OneShot::new());
+    // The pool's clock drives the flush deadline (and, under the sim
+    // harness, parks this thread on the deterministic scheduler).
+    let clock = source.pool.clock().clone();
+    let max_wait = cfg.max_wait.as_nanos() as Nanos;
     loop {
         // Block for the first request of a batch.
         let Some(first) = source.recv() else { break };
@@ -317,18 +325,16 @@ pub fn run_batcher(
         // when the queue shows concurrent load do we hold the flush
         // until the deadline to accumulate a fuller batch.
         if pending.len() > 1 {
-            let deadline = Instant::now() + cfg.max_wait;
+            let deadline = clock.now_nanos().saturating_add(max_wait);
             while pending.len() < cfg.max_batch {
-                let now = Instant::now();
+                let now = clock.now_nanos();
                 if now >= deadline {
                     break;
                 }
                 // Saturating: a deadline already passed (max_wait_ms:
                 // 0, or the thread waking late) yields a zero wait,
-                // never an Instant-subtraction panic.
-                match source
-                    .recv_timeout(deadline.saturating_duration_since(now))
-                {
+                // never a time-subtraction panic.
+                match source.recv_timeout(Duration::from_nanos(deadline - now)) {
                     Popped::Req(r) => pending.push(r),
                     Popped::TimedOut | Popped::Closed => break,
                 }
@@ -336,6 +342,9 @@ pub fn run_batcher(
         }
 
         plan_chunks_into(pending.len(), &cfg.sizes, &mut chunks);
+        clock.log(|| {
+            format!("batcher[b{}] flush n={} chunks={:?}", board.index, pending.len(), chunks)
+        });
         for &chunk in &chunks {
             let input = if chunk == 1 {
                 // Single-request chunk: share the image, copy nothing.
@@ -365,6 +374,7 @@ pub fn run_batcher(
                 result,
                 board.index,
                 classes,
+                clock.now_nanos(),
                 &mut slab,
             );
         }
@@ -372,12 +382,15 @@ pub fn run_batcher(
 }
 
 /// Deliver a batch result (or error) to each of the `n` requesters.
+/// `now` is the resolve timestamp on the service clock (latency is
+/// `now - submitted`).
 fn scatter(
     reqs: impl Iterator<Item = Request>,
     n: usize,
     result: Result<BatchResult>,
     board: usize,
     classes: usize,
+    now: Nanos,
     slab: &mut ReplySlab,
 ) {
     match result {
@@ -396,8 +409,7 @@ fn scatter(
                         )
                     };
                 let argmax = argmax(&logits);
-                let latency_ms =
-                    r.submitted.elapsed().as_secs_f64() * 1e3;
+                let latency_ms = now.saturating_sub(r.submitted) as f64 / 1e6;
                 r.reply.send(Ok(Reply {
                     id: r.id,
                     logits,
@@ -439,13 +451,14 @@ pub fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::sim::real_now_nanos;
 
     fn slot_and_req(id: u64) -> (Arc<OneShot<Result<Reply>>>, Request) {
         let slot = Arc::new(OneShot::new());
         let req = Request {
             id,
             image: vec![0.0f32; 4].into(),
-            submitted: Instant::now(),
+            submitted: real_now_nanos(),
             reply: slot.sender(),
         };
         (slot, req)
@@ -498,7 +511,7 @@ mod tests {
         let mk = |id: u64| Request {
             id,
             image: img.clone(),
-            submitted: Instant::now(),
+            submitted: real_now_nanos(),
             reply: Arc::new(OneShot::new()).sender(),
         };
         let r1 = mk(0);
@@ -519,14 +532,7 @@ mod tests {
             staging: None,
         };
         let mut slab = ReplySlab::new();
-        scatter(
-            std::iter::once(req),
-            1,
-            Ok(result),
-            0,
-            3,
-            &mut slab,
-        );
+        scatter(std::iter::once(req), 1, Ok(result), 0, 3, 0, &mut slab);
         let reply = slot.recv().unwrap().unwrap();
         assert_eq!(reply.argmax, 1);
         assert!(Arc::ptr_eq(&reply.logits, &logits), "must share, not copy");
@@ -545,14 +551,7 @@ mod tests {
             staging: None,
         };
         let mut slab = ReplySlab::new();
-        scatter(
-            vec![r1, r2].into_iter(),
-            2,
-            Ok(result),
-            0,
-            2,
-            &mut slab,
-        );
+        scatter(vec![r1, r2].into_iter(), 2, Ok(result), 0, 2, 0, &mut slab);
         let a = s1.recv().unwrap().unwrap();
         let b = s2.recv().unwrap().unwrap();
         assert_eq!(&a.logits[..], &[0.9, 0.1]);
@@ -567,14 +566,8 @@ mod tests {
         let (s1, r1) = slot_and_req(0);
         let (s2, r2) = slot_and_req(1);
         let mut slab = ReplySlab::new();
-        scatter(
-            vec![r1, r2].into_iter(),
-            2,
-            Err(anyhow::anyhow!("board exploded")),
-            0,
-            2,
-            &mut slab,
-        );
+        let err = Err(anyhow::anyhow!("board exploded"));
+        scatter(vec![r1, r2].into_iter(), 2, err, 0, 2, 0, &mut slab);
         for s in [s1, s2] {
             let err = s.recv().unwrap().unwrap_err();
             assert!(err.to_string().contains("board exploded"));
@@ -589,14 +582,8 @@ mod tests {
         let (s1, r1) = slot_and_req(0);
         let (s2, r2) = slot_and_req(1);
         let mut slab = ReplySlab::new();
-        scatter(
-            vec![r1, r2].into_iter(),
-            2,
-            Err(anyhow::Error::new(ServeError::BoardLost(5))),
-            5,
-            2,
-            &mut slab,
-        );
+        let err = Err(anyhow::Error::new(ServeError::BoardLost(5)));
+        scatter(vec![r1, r2].into_iter(), 2, err, 5, 2, 0, &mut slab);
         for s in [s1, s2] {
             let err = s.recv().unwrap().unwrap_err();
             assert_eq!(

@@ -37,12 +37,22 @@
 //! and queued reply senders on unwind (a guard closes and drains the
 //! queue), so every waiter observes a typed
 //! [`ServeError::BoardLost`] instead of hanging.
+//!
+//! Simulated time: every blocking point (queue condvars, reply-slot
+//! waits, pacing sleep) routes through the board's
+//! [`Clock`](crate::util::sim::Clock).  Under [`Clock::Sim`] the
+//! worker registers with the deterministic scheduler, paces
+//! [`Pace::Fpga`] in *virtual* time, and never opens an engine (the
+//! synthetic path serves shape-correct logits, the cost oracle still
+//! runs).  A [`FaultPlan`] scripts failures at exact job indices —
+//! stalls, straggler pacing, worker death — so robustness scenarios
+//! exercise the recovery paths on a replayable schedule.
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::anyhow;
 
@@ -53,6 +63,7 @@ use crate::fpga::pipeline::Simulator;
 use crate::fpga::timing::{DesignParams, OverlapPolicy};
 use crate::models::Model;
 use crate::runtime::Engine;
+use crate::util::sim::{Clock, ClockCondvar, Nanos};
 use crate::Result;
 
 /// Typed serving-stack failure, downcastable from the `anyhow` chain.
@@ -61,6 +72,9 @@ pub enum ServeError {
     /// The board's worker thread died (panicked or shut down) while
     /// requests were queued or in flight.
     BoardLost(usize),
+    /// The service is stopping: the request was drained during a
+    /// graceful shutdown, not executed.
+    Shutdown,
 }
 
 impl std::fmt::Display for ServeError {
@@ -69,11 +83,59 @@ impl std::fmt::Display for ServeError {
             ServeError::BoardLost(i) => {
                 write!(f, "board-{i} lost: worker thread died mid-batch")
             }
+            ServeError::Shutdown => {
+                write!(f, "service shutting down: request drained before execution")
+            }
         }
     }
 }
 
 impl std::error::Error for ServeError {}
+
+/// Scripted fault injection for one board worker.  The default plan
+/// injects nothing and costs one branch per batch; scenarios build
+/// plans that fire at exact job indices so every failure lands at the
+/// same virtual instant on every replay of a seed.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Exit the worker loop (clean death) just before executing the
+    /// `n`-th job it dequeues (0-based).  The in-flight and queued
+    /// reply senders drop, resolving every waiter as
+    /// [`ServeError::BoardLost`].
+    pub die_before_job: Option<u64>,
+    /// One-shot extra stall injected before replying to job `n` —
+    /// models a board that goes quiet mid-chunk.
+    pub stall: Option<(u64, Duration)>,
+    /// Multiplier on the paced/reported `fpga_ms` (a straggler shard
+    /// in a multi-board gather).  `1.0` is a healthy board.
+    pub fpga_ms_factor: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { die_before_job: None, stall: None, fpga_ms_factor: 1.0 }
+    }
+}
+
+impl FaultPlan {
+    /// Kill the worker just before its `n`-th job.
+    pub fn die_before(mut self, n: u64) -> Self {
+        self.die_before_job = Some(n);
+        self
+    }
+
+    /// Stall for `d` before replying to job `n`.
+    pub fn stall_on(mut self, n: u64, d: Duration) -> Self {
+        self.stall = Some((n, d));
+        self
+    }
+
+    /// Scale the board's simulated batch time by `factor`.
+    pub fn straggle(mut self, factor: f64) -> Self {
+        self.fpga_ms_factor = factor;
+        self
+    }
+}
 
 /// Board pacing mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -159,9 +221,10 @@ const QUEUE_DEPTH: usize = 16;
 /// jobs (and thereby their reply senders).
 struct JobQueue {
     state: Mutex<QueueState>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    not_empty: ClockCondvar,
+    not_full: ClockCondvar,
     cap: usize,
+    clock: Clock,
 }
 
 struct QueueState {
@@ -170,15 +233,16 @@ struct QueueState {
 }
 
 impl JobQueue {
-    fn new(cap: usize) -> Self {
+    fn new(cap: usize, clock: Clock) -> Self {
         JobQueue {
             state: Mutex::new(QueueState {
                 jobs: VecDeque::with_capacity(cap),
                 closed: false,
             }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            not_empty: ClockCondvar::new(),
+            not_full: ClockCondvar::new(),
             cap,
+            clock,
         }
     }
 
@@ -186,7 +250,7 @@ impl JobQueue {
     fn push(&self, job: Job) -> std::result::Result<(), Job> {
         let mut st = self.state.lock().unwrap();
         while st.jobs.len() >= self.cap && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(&self.clock, &self.state, st);
         }
         if st.closed {
             return Err(job);
@@ -209,7 +273,7 @@ impl JobQueue {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(&self.clock, &self.state, st);
         }
     }
 
@@ -242,6 +306,7 @@ impl Drop for DrainOnExit {
 pub struct BoardHandle {
     queue: Arc<JobQueue>,
     pub index: usize,
+    clock: Clock,
     join: Option<JoinHandle<()>>,
 }
 
@@ -257,14 +322,25 @@ pub struct BoardSpec {
     pub pace: Pace,
     /// Artifact names to pre-compile at startup (warm cache).
     pub warm: Vec<String>,
+    /// Time/scheduling source.  [`Clock::Sim`] runs the worker on the
+    /// deterministic scheduler and forces the engine-less path.
+    pub clock: Clock,
+    /// Scripted failures (the default injects nothing).
+    pub faults: FaultPlan,
 }
 
 impl BoardHandle {
     /// Spawn the worker thread; fails fast if the engine cannot open.
+    ///
+    /// Under a sim clock the caller must be a registered sim thread:
+    /// the worker announces itself during spawn (so registration
+    /// order is the spawn order — deterministic), then parks until
+    /// the scheduler hands it the token.
     pub fn spawn(spec: BoardSpec) -> Result<Self> {
-        let queue = Arc::new(JobQueue::new(QUEUE_DEPTH));
+        let queue = Arc::new(JobQueue::new(QUEUE_DEPTH, spec.clock.clone()));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let index = spec.index;
+        let clock = spec.clock.clone();
         let worker_queue = queue.clone();
         let join = std::thread::Builder::new()
             .name(format!("board-{index}"))
@@ -272,7 +348,16 @@ impl BoardHandle {
         ready_rx
             .recv()
             .map_err(|_| anyhow!("board-{index} worker died on startup"))??;
-        Ok(BoardHandle { queue, index, join: Some(join) })
+        Ok(BoardHandle { queue, index, clock, join: Some(join) })
+    }
+
+    /// Stop accepting jobs and fail everything still queued (waiters
+    /// resolve with a typed error instead of hanging).  The worker
+    /// exits after its in-flight job; [`Drop`] still joins it.  Sim
+    /// callers drain the scheduler between `close` and the drop so
+    /// the join never waits on a parked sim thread.
+    pub fn close(&self) {
+        self.queue.close_and_drain();
     }
 
     /// Submit a batch onto a caller-provided reusable reply slot (the
@@ -290,7 +375,7 @@ impl BoardHandle {
             // Queue closed: the rejected job just dropped its sender,
             // resolving the slot as Dropped — consume that so the slot
             // resets to Idle for reuse.
-            let _ = slot.recv();
+            let _ = slot.recv_clocked(&self.clock);
             return Err(anyhow::Error::new(ServeError::BoardLost(self.index)));
         }
         Ok(())
@@ -317,7 +402,7 @@ impl BoardHandle {
         slot: &Arc<OneShot<Result<BatchResult>>>,
     ) -> Result<BatchResult> {
         self.submit_to(artifact, batch, input, slot)?;
-        slot.recv().unwrap_or_else(|| {
+        slot.recv_clocked(&self.clock).unwrap_or_else(|| {
             Err(anyhow::Error::new(ServeError::BoardLost(self.index)))
         })
     }
@@ -349,9 +434,16 @@ fn worker(
     queue: Arc<JobQueue>,
     ready: mpsc::Sender<Result<()>>,
 ) {
+    // Sim registration happens *before* the ready send, so the
+    // spawning thread (which blocks on the ready channel while still
+    // holding the sim token) observes a fixed registration order; the
+    // token-parking `start` happens after, once the spawner resumes.
+    let reg = spec.clock.register(&format!("board-{}", spec.index));
     // Immediate pace serves synthetic logits and must work without
-    // artifacts on disk; every other pace needs the engine.
-    let engine = if spec.pace == Pace::Immediate {
+    // artifacts on disk; every other pace needs the engine.  A sim
+    // clock forces the engine-less path too: simulated scenarios are
+    // about scheduling, not numerics, and must run artifact-free.
+    let engine = if spec.pace == Pace::Immediate || spec.clock.is_sim() {
         None
     } else {
         match Engine::open(&spec.artifacts_dir) {
@@ -371,10 +463,13 @@ fn worker(
         }
     }
     let _ = ready.send(Ok(()));
+    reg.start();
 
     // From here on, any exit — normal or a panic mid-batch — closes
     // and drains the queue so waiters resolve as BoardLost (typed
     // error) rather than hanging on a reply that will never come.
+    // Declared after `reg`, so the unwind drains the queue while the
+    // thread is still registered, then deregisters.
     let _drain = DrainOnExit(queue.clone());
 
     // Single serve-side cost oracle (ROADMAP item 5): the pipeline
@@ -396,9 +491,19 @@ fn worker(
         .unwrap_or(1);
     // Recycled output buffers for the engine-less Immediate path.
     let mut slab = ReplySlab::new();
+    let mut job_no: u64 = 0;
 
     while let Some(job) = queue.pop() {
-        let t0 = Instant::now();
+        if spec.faults.die_before_job == Some(job_no) {
+            // Injected death: a clean worker exit.  Dropping the job
+            // drops its reply sender; DrainOnExit fails the rest.
+            spec.clock.log(|| {
+                format!("board[{}] fault: dying before job {job_no}", spec.index)
+            });
+            drop(job);
+            break;
+        }
+        let t0 = spec.clock.now_nanos();
         let out: Result<Arc<[f32]>> = match &engine {
             Some(engine) => engine
                 .execute(&job.artifact, job.input.as_slice())
@@ -407,20 +512,44 @@ fn worker(
                 immediate_logits(&mut slab, &job, image_numel, classes)
             }
         };
-        let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let fpga_ms = *fpga_ms_memo
+        let host_ms = spec.clock.now_nanos().saturating_sub(t0) as f64 / 1e6;
+        let base_ms = *fpga_ms_memo
             .entry(job.batch)
             .or_insert_with(|| sim.run(job.batch).time_ms());
+        let fpga_ms = base_ms * spec.faults.fpga_ms_factor;
         if spec.pace == Pace::Fpga {
             // checked_sub, not compare-then-subtract: the elapsed time
-            // can race past the target between two `elapsed()` calls,
-            // and a bare `Duration - Duration` would panic the board
-            // worker (coordinator hardening pass).
-            let target = Duration::from_secs_f64(fpga_ms / 1e3);
-            if let Some(remaining) = target.checked_sub(t0.elapsed()) {
-                std::thread::sleep(remaining);
+            // can race past the target between two clock reads, and a
+            // bare subtraction would panic the board worker
+            // (coordinator hardening pass).  Under a sim clock this
+            // sleep advances *virtual* time, reproducing the FPGA's
+            // queueing behaviour on the deterministic scheduler.
+            let target = (fpga_ms * 1e6) as Nanos;
+            let elapsed = spec.clock.now_nanos().saturating_sub(t0);
+            if let Some(remaining) = target.checked_sub(elapsed) {
+                spec.clock.sleep(Duration::from_nanos(remaining));
             }
         }
+        if let Some((n, d)) = spec.faults.stall {
+            if n == job_no {
+                spec.clock.log(|| {
+                    format!(
+                        "board[{}] fault: stalling {}ns on job {job_no}",
+                        spec.index,
+                        d.as_nanos()
+                    )
+                });
+                spec.clock.sleep(d);
+            }
+        }
+        spec.clock.log(|| {
+            format!(
+                "board[{}] exec job={job_no} batch={} fpga_ms={:.6}",
+                spec.index,
+                job.batch,
+                fpga_ms
+            )
+        });
         let staging = job.input.into_staging();
         let result = out.map(|logits| BatchResult {
             logits,
@@ -430,6 +559,7 @@ fn worker(
             staging,
         });
         job.reply.send(result);
+        job_no += 1;
     }
 }
 
@@ -484,6 +614,8 @@ mod tests {
             overlap: OverlapPolicy::WithinGroup,
             pace,
             warm: vec!["tinynet_b1_jnp".into()],
+            clock: Clock::default(),
+            faults: FaultPlan::default(),
         })
     }
 
@@ -500,6 +632,8 @@ mod tests {
             overlap,
             pace: Pace::Immediate,
             warm: vec![],
+            clock: Clock::default(),
+            faults: FaultPlan::default(),
         }
     }
 
@@ -577,6 +711,8 @@ mod tests {
             overlap: OverlapPolicy::WithinGroup,
             pace: Pace::None,
             warm: vec![],
+            clock: Clock::default(),
+            faults: FaultPlan::default(),
         };
         assert!(BoardHandle::spawn(spec).is_err());
     }
@@ -636,5 +772,59 @@ mod tests {
         let board = BoardHandle::spawn(spec).unwrap();
         drop(board);
         // (A fuller mid-flight variant lives in tests/service_hammer.)
+    }
+
+    #[test]
+    fn sim_board_paces_fpga_in_virtual_time() {
+        // Under a sim clock, Pace::Fpga must advance *virtual* time
+        // by exactly the cost oracle's prediction — no wall waiting.
+        let mut spec = immediate_spec(OverlapPolicy::WithinGroup, 0);
+        spec.pace = Pace::Fpga;
+        spec.clock = Clock::sim(17);
+        let clock = spec.clock.clone();
+        let sched = clock.sched().unwrap().clone();
+        let reg = clock.register("driver");
+        reg.start();
+        let board = BoardHandle::spawn(spec).unwrap();
+        let numel = 3 * 16 * 16;
+        let r = board.execute("sim_b1".into(), 1, vec![0.5f32; numel]).unwrap();
+        assert!(r.fpga_ms > 0.0);
+        assert_eq!(clock.now_nanos(), (r.fpga_ms * 1e6) as Nanos);
+        board.close();
+        sched.drain_others();
+        drop(board);
+        assert!(!sched.is_poisoned());
+        drop(reg);
+    }
+
+    #[test]
+    fn fault_plan_kills_worker_at_exact_job_index() {
+        // Job 0 succeeds, job 1 hits the injected death: its waiter
+        // resolves as a typed BoardLost, never a hang.
+        let mut spec = immediate_spec(OverlapPolicy::WithinGroup, 0);
+        spec.faults = FaultPlan::default().die_before(1);
+        let board = BoardHandle::spawn(spec).unwrap();
+        let numel = 3 * 16 * 16;
+        let ok = board.execute("b1".into(), 1, vec![0.5f32; numel]);
+        assert!(ok.is_ok());
+        let err = board.execute("b1".into(), 1, vec![0.5f32; numel]).unwrap_err();
+        let served = err.downcast_ref::<ServeError>();
+        assert_eq!(served, Some(&ServeError::BoardLost(0)));
+    }
+
+    #[test]
+    fn fault_plan_straggler_scales_reported_fpga_ms() {
+        let mut spec = immediate_spec(OverlapPolicy::WithinGroup, 0);
+        spec.faults = FaultPlan::default().straggle(4.0);
+        let model = spec.model.clone();
+        let design = spec.design;
+        let board = BoardHandle::spawn(spec).unwrap();
+        let numel = 3 * 16 * 16;
+        let r = board.execute("b1".into(), 1, vec![0.5f32; numel]).unwrap();
+        let base = Simulator::new(&model, &STRATIX10, design)
+            .policy(OverlapPolicy::WithinGroup)
+            .run(1)
+            .time_ms();
+        assert!((r.fpga_ms - base * 4.0).abs() < 1e-12);
     }
 }

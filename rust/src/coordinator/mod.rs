@@ -50,6 +50,23 @@
 //! environment); the PJRT engine's `!Send` wrappers pin each engine to
 //! its board thread anyway, which keeps the design honest.
 //!
+//! # Simulated time
+//!
+//! Every blocking point above — pool parks, flush deadlines, reply
+//! waits, board pacing — routes through an injectable
+//! [`Clock`](crate::util::sim::Clock).  The default (`Clock::Real`)
+//! is the production wall-clock path.  `Clock::Sim` swaps in a
+//! seeded, cooperative, discrete-event scheduler
+//! ([`util::sim`](crate::util::sim)): one thread runs at a time,
+//! virtual time jumps to the earliest timer, and the whole stack's
+//! interleaving replays byte-identically from a single seed.  The
+//! [`sim`] module builds robustness scenarios on top — fault-injected
+//! boards ([`FaultPlan`]), bursty arrivals, graceful shutdown — each
+//! asserting the coordinator's invariants (typed errors, gather
+//! order, bounded queues, no hung waiters) across thousands of seeded
+//! schedules; `ffcnn simtest` fans those seeds across a thread fleet
+//! and prints the failing seed on any violation.
+//!
 //! [`ArcStack`]: pool::ArcStack
 //! [`Padded`]: pool::Padded
 //! [`StripedSlab`]: pool::StripedSlab
@@ -65,13 +82,16 @@ pub mod oneshot;
 pub mod pool;
 pub mod router;
 pub mod service;
+pub mod sim;
 
 pub use batcher::{
     argmax, plan_chunks, Reply, ReplySlab, Request, RequestSource,
 };
 pub use board::{
-    BatchInput, BatchResult, BoardHandle, BoardSpec, Pace, ServeError,
+    BatchInput, BatchResult, BoardHandle, BoardSpec, FaultPlan, Pace,
+    ServeError,
 };
+pub use sim::{run_scenario, run_seeds, scenario_names, SimtestReport};
 pub use metrics::{LatencyHistogram, LatencySummary};
 pub use oneshot::{OneShot, OneShotSender};
 pub use pool::{ArcStack, Padded, StripedSlab};

@@ -21,7 +21,9 @@
 //!   `ServeError::BoardLost` instead of a hang: the unwind drops the
 //!   queued senders, every waiter wakes with `None`.
 
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::util::sim::{Clock, ClockCondvar};
 
 enum State<T> {
     /// Not armed; safe to hand to `sender()`.
@@ -37,7 +39,7 @@ enum State<T> {
 /// A reusable single-value rendezvous point.  See module docs.
 pub struct OneShot<T> {
     state: Mutex<State<T>>,
-    cv: Condvar,
+    cv: ClockCondvar,
 }
 
 impl<T> Default for OneShot<T> {
@@ -48,7 +50,7 @@ impl<T> Default for OneShot<T> {
 
 impl<T> OneShot<T> {
     pub fn new() -> Self {
-        OneShot { state: Mutex::new(State::Idle), cv: Condvar::new() }
+        OneShot { state: Mutex::new(State::Idle), cv: ClockCondvar::new() }
     }
 
     /// Arm the slot and return the sending half.  Panics if the slot
@@ -67,6 +69,13 @@ impl<T> OneShot<T> {
     /// the outcome and reset the slot to `Idle` so it can be re-armed.
     /// Returns `None` if the sender was dropped without sending.
     pub fn recv(&self) -> Option<T> {
+        self.recv_clocked(&Clock::Real)
+    }
+
+    /// [`OneShot::recv`] with an explicit [`Clock`]: under a sim
+    /// clock the wait parks on the deterministic scheduler instead of
+    /// the OS condvar.  The send side needs no clock.
+    pub fn recv_clocked(&self, clock: &Clock) -> Option<T> {
         let mut st = self.state.lock().unwrap();
         loop {
             match std::mem::replace(&mut *st, State::Idle) {
@@ -75,7 +84,7 @@ impl<T> OneShot<T> {
                 other => {
                     // Not ready yet: restore and wait.
                     *st = other;
-                    st = self.cv.wait(st).unwrap();
+                    st = self.cv.wait(clock, &self.state, st);
                 }
             }
         }
@@ -210,5 +219,75 @@ mod tests {
         let tx = slot.sender();
         drop(slot);
         tx.send(5u8); // no receiver left; must not panic
+    }
+
+    #[test]
+    fn drop_while_armed_leaves_slot_consumable_by_try_recv() {
+        // Drop-while-Armed must surface as a ready `None` outcome,
+        // visible to the non-blocking path too, and reset to Idle.
+        let slot = Arc::new(OneShot::<u8>::new());
+        drop(slot.sender());
+        assert_eq!(slot.try_recv(), Some(None));
+        // The consumed Dropped outcome must not leak into the next
+        // arming: the slot is Idle again and a fresh cycle works.
+        let tx = slot.sender();
+        tx.send(1);
+        assert_eq!(slot.try_recv(), Some(Some(1)));
+    }
+
+    #[test]
+    fn rearm_after_dropped_peer_delivers_fresh_value() {
+        // Re-arming after the previous sender died mid-flight (the
+        // board-death path) must hand the *new* value to the waiter,
+        // never a stale Dropped marker.
+        let slot = Arc::new(OneShot::new());
+        for _ in 0..3 {
+            drop(slot.sender());
+            assert_eq!(slot.recv(), None);
+            let tx = slot.sender();
+            tx.send(77u32);
+            assert_eq!(slot.recv(), Some(77));
+        }
+    }
+
+    #[test]
+    fn explicit_send_suppresses_drop_marker() {
+        // After a successful send, the sender's Drop must not flip
+        // the delivered value back to Dropped.
+        let slot = Arc::new(OneShot::new());
+        let tx = slot.sender();
+        tx.send(8u8); // consumes tx; Drop runs with sent == true
+        assert_eq!(slot.recv(), Some(8));
+        // Slot must be Idle (re-armable), not Dropped.
+        let tx = slot.sender();
+        tx.send(9);
+        assert_eq!(slot.recv(), Some(9));
+    }
+
+    #[test]
+    fn recv_clocked_parks_on_sim_scheduler() {
+        // A sim-registered waiter blocked in recv_clocked must be
+        // woken by a send from another sim thread — the rendezvous
+        // the whole deterministic harness leans on.
+        let clock = Clock::sim(21);
+        let sched = clock.sched().unwrap().clone();
+        let reg = clock.register("driver");
+        reg.start();
+        let slot = Arc::new(OneShot::new());
+        let tx = slot.sender();
+        let clock2 = clock.clone();
+        let (rtx, rrx) = std::sync::mpsc::channel::<()>();
+        let t = std::thread::spawn(move || {
+            let r = clock2.register("sender");
+            rtx.send(()).unwrap();
+            r.start();
+            clock2.sleep(std::time::Duration::from_micros(5));
+            tx.send(42u64);
+        });
+        rrx.recv().unwrap();
+        assert_eq!(slot.recv_clocked(&clock), Some(42));
+        sched.drain_others();
+        drop(reg);
+        t.join().unwrap();
     }
 }

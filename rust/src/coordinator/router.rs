@@ -30,11 +30,12 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use super::batcher::Request;
 use super::pool::Padded;
+use crate::util::sim::{Clock, ClockCondvar, Nanos};
 use crate::Result;
 
 /// Routing policy.
@@ -68,29 +69,40 @@ struct PoolState {
 /// blocked pushers, never sibling poppers.
 pub struct StealPool {
     state: Mutex<PoolState>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    not_empty: ClockCondvar,
+    not_full: ClockCondvar,
     /// Lock-free mirror of each deque's length.
     depths: Box<[Padded<AtomicUsize>]>,
     capacity: usize,
     boards: usize,
     steal: bool,
+    /// Time source for flush deadlines and blocked waits (real in
+    /// production, virtual under the simulation harness).
+    clock: Clock,
 }
 
 impl StealPool {
     /// Stealing pool: `capacity` bounds each board's deque
     /// (admission control).
     pub fn new(boards: usize, capacity: usize) -> Arc<Self> {
-        Self::build(boards, capacity, true)
+        Self::build(boards, capacity, true, Clock::Real)
     }
 
     /// Pinned pool: same bounded per-board deques, no stealing — the
     /// backend of the `RoundRobin`/`LeastOutstanding` policies.
     pub fn new_pinned(boards: usize, capacity: usize) -> Arc<Self> {
-        Self::build(boards, capacity, false)
+        Self::build(boards, capacity, false, Clock::Real)
     }
 
-    fn build(boards: usize, capacity: usize, steal: bool) -> Arc<Self> {
+    /// [`StealPool::new`]/[`StealPool::new_pinned`] with an explicit
+    /// [`Clock`] — the simulation harness injects a virtual clock so
+    /// every park/deadline in the pool lands on the deterministic
+    /// scheduler.
+    pub fn with_clock(boards: usize, capacity: usize, steal: bool, clock: Clock) -> Arc<Self> {
+        Self::build(boards, capacity, steal, clock)
+    }
+
+    fn build(boards: usize, capacity: usize, steal: bool, clock: Clock) -> Arc<Self> {
         let capacity = capacity.max(1);
         Arc::new(StealPool {
             state: Mutex::new(PoolState {
@@ -101,8 +113,8 @@ impl StealPool {
                     .collect(),
                 closed: false,
             }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            not_empty: ClockCondvar::new(),
+            not_full: ClockCondvar::new(),
             depths: (0..boards)
                 .map(|_| Padded::new(AtomicUsize::new(0)))
                 .collect::<Vec<_>>()
@@ -110,11 +122,17 @@ impl StealPool {
             capacity,
             boards,
             steal,
+            clock,
         })
     }
 
     pub fn boards(&self) -> usize {
         self.boards
+    }
+
+    /// The clock this pool blocks and measures deadlines on.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     /// Whether idle boards steal from loaded peers.
@@ -168,7 +186,7 @@ impl StealPool {
                 self.not_empty.notify_all();
                 return Ok(());
             }
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(&self.clock, &self.state, st);
         }
     }
 
@@ -210,7 +228,7 @@ impl StealPool {
             // while still holding the lock — the wake lands after the
             // wait releases it.)
             self.not_empty.notify_all();
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(&self.clock, &self.state, st);
         }
     }
 
@@ -281,13 +299,13 @@ impl StealPool {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(&self.clock, &self.state, st);
         }
     }
 
     /// Dequeue with a deadline (the batcher's flush window).
     pub fn pop_timeout(&self, board: usize, timeout: Duration) -> Popped {
-        let deadline = Instant::now() + timeout;
+        let deadline = self.clock.now_nanos().saturating_add(timeout.as_nanos() as Nanos);
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(r) = self.take(&mut st, board) {
@@ -298,18 +316,15 @@ impl StealPool {
             if st.closed {
                 return Popped::Closed;
             }
-            let now = Instant::now();
-            if now >= deadline {
+            if self.clock.now_nanos() >= deadline {
                 return Popped::TimedOut;
             }
             // Saturating by construction: even a deadline that races
-            // past between the check and the subtraction cannot panic
-            // the batcher thread (the coordinator hardening pass).
-            let (guard, _) = self
-                .not_empty
-                .wait_timeout(st, deadline.saturating_duration_since(now))
-                .unwrap();
-            st = guard;
+            // past between the check and the wait cannot underflow and
+            // panic the batcher thread (the coordinator hardening
+            // pass); `wait_deadline` reports the timeout itself.
+            let (g, _) = self.not_empty.wait_deadline(&self.clock, &self.state, st, deadline);
+            st = g;
         }
     }
 
@@ -515,13 +530,14 @@ impl Router {
 mod tests {
     use super::*;
     use crate::coordinator::oneshot::OneShot;
+    use crate::util::sim::real_now_nanos;
 
     fn dummy_request(id: u64) -> Request {
         let slot = Arc::new(OneShot::new());
         Request {
             id,
             image: Vec::new().into(),
-            submitted: Instant::now(),
+            submitted: real_now_nanos(),
             reply: slot.sender(),
         }
     }

@@ -31,6 +31,19 @@
 //! service boots without artifacts — `bench_service` saturates this
 //! configuration to measure the coordinator itself.
 //!
+//! # Simulated time and graceful shutdown
+//!
+//! [`InferenceService::from_plan_with`] injects a
+//! [`Clock`](crate::util::sim::Clock) (plus per-board
+//! [`FaultPlan`]s): under `Clock::Sim` every timestamp, flush
+//! deadline, pacing sleep and blocking wait in the stack lands on the
+//! deterministic scheduler (`coordinator::sim` builds whole scenarios
+//! on this).  Dropping the service (or calling
+//! [`InferenceService::stop`]) is a graceful shutdown: intake closes,
+//! queued work fails with typed [`ServeError::Shutdown`], and every
+//! in-flight waiter resolves — never a hang against a torn-down
+//! board thread.
+//!
 //! [`classify`]: InferenceService::classify
 //! [`submit`]: InferenceService::submit
 //! [`submit_many`]: InferenceService::submit_many
@@ -38,16 +51,16 @@
 //! [`run_trace`]: InferenceService::run_trace
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::anyhow;
 
 use super::batcher::{
     argmax, run_batcher, BatcherConfig, Reply, Request, RequestSource,
 };
-use super::board::{BoardHandle, BoardSpec, Pace, ServeError};
+use super::board::{BoardHandle, BoardSpec, FaultPlan, Pace, ServeError};
 use super::metrics::{LatencyHistogram, LatencySummary};
 use super::oneshot::OneShot;
 use super::pool::{ArcStack, Padded, StripedSlab};
@@ -57,6 +70,7 @@ use crate::data::TraceRequest;
 use crate::models;
 use crate::plan::Plan;
 use crate::runtime::Manifest;
+use crate::util::sim::{Clock, Nanos};
 use crate::Result;
 
 /// Aggregate report of a served trace (EXPERIMENTS.md §E4 rows).
@@ -123,11 +137,38 @@ struct Shared {
     slots: ArcStack<OneShot<Result<Reply>>>,
     scratch: Mutex<Vec<BatchScratch>>,
     boards: usize,
+    /// The service time base; every waiter parks through this.
+    clock: Clock,
+    /// Set (before any queue closes) when the service starts tearing
+    /// down, so failures during the drain surface as
+    /// [`ServeError::Shutdown`], not board deaths.
+    stopping: AtomicBool,
 }
 
 impl Shared {
     fn slot(&self) -> Arc<OneShot<Result<Reply>>> {
         self.slots.pop().unwrap_or_else(|| Arc::new(OneShot::new()))
+    }
+
+    /// Resolve a reply-slot outcome: a dead channel (`None`) becomes
+    /// a typed error, and any `BoardLost` observed while the service
+    /// is stopping is rewritten to [`ServeError::Shutdown`] — the
+    /// request failed because of teardown, not a board death.
+    fn resolve(&self, board: usize, got: Option<Result<Reply>>) -> Result<Reply> {
+        let out = got.unwrap_or_else(|| {
+            Err(anyhow::Error::new(ServeError::BoardLost(board)))
+        });
+        if self.stopping.load(Ordering::Acquire) {
+            if let Err(e) = &out {
+                let lost = e
+                    .downcast_ref::<ServeError>()
+                    .is_some_and(|s| matches!(s, ServeError::BoardLost(_)));
+                if lost {
+                    return Err(anyhow::Error::new(ServeError::Shutdown));
+                }
+            }
+        }
+        out
     }
 
     /// Return a slot to the freelist.  Callers recycle only after
@@ -166,12 +207,12 @@ pub struct PendingReply {
 
 impl PendingReply {
     /// Block for the reply.  If the serving stack died mid-flight the
-    /// error downcasts to [`ServeError::BoardLost`] — a typed failure,
+    /// error downcasts to [`ServeError::BoardLost`] (or
+    /// [`ServeError::Shutdown`] during teardown) — a typed failure,
     /// never a hang.
     pub fn wait(self) -> Result<Reply> {
-        let out = self.slot.recv().unwrap_or_else(|| {
-            Err(anyhow::Error::new(ServeError::BoardLost(self.board)))
-        });
+        let got = self.slot.recv_clocked(&self.shared.clock);
+        let out = self.shared.resolve(self.board, got);
         self.shared.recycle(self.slot);
         out
     }
@@ -203,9 +244,8 @@ impl PendingSet {
     /// nothing.
     pub fn wait_each(mut self, mut f: impl FnMut(Result<Reply>)) {
         for slot in self.scratch.slots.drain(..) {
-            let out = slot.recv().unwrap_or_else(|| {
-                Err(anyhow::Error::new(ServeError::BoardLost(self.board)))
-            });
+            let got = slot.recv_clocked(&self.shared.clock);
+            let out = self.shared.resolve(self.board, got);
             self.shared.recycle(slot);
             f(out);
         }
@@ -223,7 +263,8 @@ pub struct PendingBatch {
     classes: usize,
     shards: usize,
     per_shard: usize,
-    submitted: Instant,
+    /// Service-clock submit timestamp (virtual under simulation).
+    submitted: Nanos,
     shared: Arc<Shared>,
 }
 
@@ -263,11 +304,9 @@ impl PendingBatch {
         for (k, slot) in self.scratch.slots.drain(..).enumerate() {
             let shard = (k / self.per_shard.max(1))
                 .min(self.scratch.targets.len().saturating_sub(1));
-            let Some(out) = slot.recv() else {
-                return Err(anyhow::Error::new(ServeError::BoardLost(
-                    self.scratch.targets.get(shard).copied().unwrap_or(0),
-                )));
-            };
+            let board = self.scratch.targets.get(shard).copied().unwrap_or(0);
+            let got = slot.recv_clocked(&self.shared.clock);
+            let out = self.shared.resolve(board, got);
             self.shared.recycle(slot);
             self.scratch.replies.push(out?);
         }
@@ -317,6 +356,7 @@ impl PendingBatch {
         self.shared.gather_slab.put_back(&buf);
         let logits = buf;
         let argmax = argmax(&logits[..classes]);
+        let now = self.shared.clock.now_nanos();
         let reply = Reply {
             id,
             logits,
@@ -325,7 +365,7 @@ impl PendingBatch {
             board,
             host_ms,
             fpga_ms,
-            latency_ms: self.submitted.elapsed().as_secs_f64() * 1e3,
+            latency_ms: now.saturating_sub(self.submitted) as f64 / 1e6,
         };
         self.scratch.guards.clear();
         self.shared.retire(std::mem::take(&mut self.scratch));
@@ -348,12 +388,24 @@ pub struct InferenceService {
     /// batcher threads exit).
     pool: Arc<StealPool>,
     /// Keep board handles alive (dropping them stops the workers).
-    _boards: Vec<Arc<BoardHandle>>,
+    boards: Vec<Arc<BoardHandle>>,
 }
 
 impl Drop for InferenceService {
     fn drop(&mut self) {
+        // Graceful teardown, in order: flag first (so waiters map
+        // drain failures to Shutdown), stop intake, fail the board
+        // queues, and — under a sim clock — run every worker to
+        // completion so the joins inside each BoardHandle drop return
+        // immediately instead of waiting on a parked sim thread.
+        self.shared.stopping.store(true, Ordering::Release);
         self.pool.close();
+        for b in &self.boards {
+            b.close();
+        }
+        if let Some(s) = self.shared.clock.sched() {
+            s.drain_others();
+        }
     }
 }
 
@@ -367,6 +419,21 @@ impl InferenceService {
     /// size up to `serving.max_batch` is servable and the boards
     /// synthesize shape-correct logits at raw host speed.
     pub fn from_plan(plan: &Plan) -> Result<Self> {
+        Self::from_plan_with(plan, Clock::default(), &[])
+    }
+
+    /// [`InferenceService::from_plan`] with an injected [`Clock`] and
+    /// per-board [`FaultPlan`]s (board `i` takes `faults[i]`; missing
+    /// entries inject nothing) — the deterministic-simulation entry
+    /// used by `coordinator::sim`.  Under [`Clock::Sim`] the caller
+    /// must be a registered sim thread; boards and batchers register
+    /// in spawn order (board-0, batcher-0, board-1, …), so a seed
+    /// fully determines the schedule.
+    pub fn from_plan_with(
+        plan: &Plan,
+        clock: Clock,
+        faults: &[FaultPlan],
+    ) -> Result<Self> {
         // Serving consistency first (boards provisioned, shard policy
         // within them): a bad plan fails with a named-field error
         // before any engine spawns — and never panics in the router.
@@ -379,15 +446,17 @@ impl InferenceService {
         let policy = plan.policy;
 
         // Which batch sizes are servable, and under what artifact
-        // name.  Immediate pace is engine-less: every size up to
-        // max_batch exists by construction, under synthetic names.
+        // name.  Immediate pace is engine-less — and so is every
+        // simulated-clock service (boards never open an engine under
+        // Clock::Sim): every size up to max_batch exists by
+        // construction, under synthetic names.
         // Otherwise discover what the manifest actually has —
         // preferring the packed-weights layout (it executes
         // identically but uploads ONE weight buffer per model, the
         // batched-upload warm-up win), but only when it covers every
         // batch size the per-tensor layout offers: mixing layouts
         // would keep two device-resident copies of the weights.
-        let (sizes, names, warm) = if pace == Pace::Immediate {
+        let (sizes, names, warm) = if pace == Pace::Immediate || clock.is_sim() {
             let sizes: Vec<usize> =
                 (1..=plan.serving.max_batch.max(1)).collect();
             let names: HashMap<usize, Arc<str>> = sizes
@@ -439,11 +508,12 @@ impl InferenceService {
         // One pool backend for every policy: stealing drains at the
         // speed of free boards; pinned keeps strict per-board queues.
         let board_count = plan.serving.boards;
-        let pool = if policy == Policy::WorkStealing {
-            StealPool::new(board_count, plan.serving.queue_depth)
-        } else {
-            StealPool::new_pinned(board_count, plan.serving.queue_depth)
-        };
+        let pool = StealPool::with_clock(
+            board_count,
+            plan.serving.queue_depth,
+            policy == Policy::WorkStealing,
+            clock.clone(),
+        );
         let mut boards = Vec::new();
         for index in 0..board_count {
             let spec = BoardSpec {
@@ -455,6 +525,8 @@ impl InferenceService {
                 overlap: plan.overlap,
                 pace,
                 warm: warm.clone(),
+                clock: clock.clone(),
+                faults: faults.get(index).cloned().unwrap_or_default(),
             };
             let board = Arc::new(BoardHandle::spawn(spec)?);
             let source = RequestSource { pool: pool.clone(), board: index };
@@ -465,9 +537,17 @@ impl InferenceService {
             };
             let board2 = board.clone();
             let names = names.clone();
+            let bclock = clock.clone();
+            let (btx, brx) = mpsc::channel::<()>();
             std::thread::Builder::new()
                 .name(format!("batcher-{index}"))
                 .spawn(move || {
+                    // Sim-deterministic spawn order: announce to the
+                    // scheduler, release the spawner (which blocks on
+                    // the channel below), then park for the token.
+                    let reg = bclock.register(&format!("batcher-{index}"));
+                    let _ = btx.send(());
+                    reg.start();
                     run_batcher(
                         source,
                         &board2,
@@ -475,8 +555,9 @@ impl InferenceService {
                         move |b| names[&b].clone(),
                         image_numel,
                         classes,
-                    )
+                    );
                 })?;
+            let _ = brx.recv();
             boards.push(board);
         }
 
@@ -489,6 +570,8 @@ impl InferenceService {
             slots: ArcStack::new(slot_cap),
             scratch: Mutex::new(Vec::new()),
             boards: board_count,
+            clock,
+            stopping: AtomicBool::new(false),
         });
         Ok(InferenceService {
             router,
@@ -498,8 +581,17 @@ impl InferenceService {
             next_id: Padded::new(AtomicU64::new(0)),
             shared,
             pool,
-            _boards: boards,
+            boards,
         })
+    }
+
+    /// Graceful shutdown with a name (this is exactly `drop`): stop
+    /// intake, fail queued work with typed [`ServeError::Shutdown`],
+    /// and join every board worker.  Outstanding [`PendingReply`]s
+    /// remain valid — each resolves with its value or a typed error,
+    /// never a hang against the torn-down stack.
+    pub fn stop(self) {
+        drop(self);
     }
 
     /// Build the service from a run configuration.
@@ -544,7 +636,7 @@ impl InferenceService {
         let req = Request {
             id,
             image,
-            submitted: Instant::now(),
+            submitted: self.shared.clock.now_nanos(),
             reply: slot.sender(),
         };
         let guard = self.router.route_to(board, req)?;
@@ -578,7 +670,7 @@ impl InferenceService {
         images: impl IntoIterator<Item = Arc<[f32]>>,
     ) -> Result<PendingSet> {
         let mut scratch = self.shared.checkout();
-        let submitted = Instant::now();
+        let submitted = self.shared.clock.now_nanos();
         for image in images {
             if image.len() != self.image_numel {
                 return Err(anyhow!(
@@ -649,7 +741,7 @@ impl InferenceService {
             crate::fpga::pipeline::shard_split(images, want);
         let mut scratch = self.shared.checkout();
         self.router.least_loaded_into(shards, &mut scratch.targets);
-        let submitted = Instant::now();
+        let submitted = self.shared.clock.now_nanos();
         let base = self.next_id.fetch_add(images as u64, Ordering::Relaxed);
 
         // Dispatch shard-at-a-time through `route_many`, which puts
@@ -722,14 +814,15 @@ impl InferenceService {
             One(PendingReply),
             Batch(PendingBatch),
         }
-        let started = Instant::now();
+        let clock = self.shared.clock.clone();
+        let started = clock.now_nanos();
         let mut pending = Vec::with_capacity(trace.len());
         let mut errors = 0u64;
         for t in trace {
             let due = t.arrival_s * time_scale;
-            let now = started.elapsed().as_secs_f64();
+            let now = clock.now_nanos().saturating_sub(started) as f64 / 1e9;
             if due > now {
-                std::thread::sleep(Duration::from_secs_f64(due - now));
+                clock.sleep(Duration::from_secs_f64(due - now));
             }
             let submitted = if t.batch > 1 {
                 self.submit_batch(images(t)).map(Pending::Batch)
@@ -765,12 +858,12 @@ impl InferenceService {
                 Err(_) => errors += 1,
             }
         }
-        let wall_s = started.elapsed().as_secs_f64();
+        let wall_s = clock.now_nanos().saturating_sub(started) as f64 / 1e9;
         ServeReport {
             requests: ok + errors,
             errors,
             wall_s,
-            throughput_rps: ok as f64 / wall_s,
+            throughput_rps: if wall_s > 0.0 { ok as f64 / wall_s } else { 0.0 },
             latency: hist.summary(),
             mean_batch: if ok > 0 {
                 batch_sum as f64 / ok as f64
@@ -1095,6 +1188,44 @@ mod tests {
         );
         assert_eq!(report.requests, 8);
         assert_eq!(report.errors, 0);
+    }
+
+    #[test]
+    fn wait_each_on_empty_group_completes_without_calls() {
+        // A drained/empty PendingSet must terminate immediately (and
+        // retire its scratch) — not park on a reply that will never
+        // come.
+        let svc = immediate_serve(1, Policy::RoundRobin, ShardPolicy::None);
+        let set = PendingSet {
+            scratch: BatchScratch::default(),
+            board: 0,
+            shared: svc.shared.clone(),
+        };
+        let mut calls = 0usize;
+        set.wait_each(|_| calls += 1);
+        assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn shutdown_with_inflight_requests_resolves_every_waiter_typed() {
+        // Graceful-shutdown regression: stop() with requests still in
+        // flight must resolve EVERY outstanding waiter — served
+        // replies or typed ServeErrors (Shutdown for drained work) —
+        // and never leave one hanging against the dead stack.
+        let svc = immediate_serve(2, Policy::WorkStealing, ShardPolicy::None);
+        let numel = svc.image_numel();
+        let img: Arc<[f32]> = vec![0.1f32; numel].into();
+        let mut pending = Vec::new();
+        for _ in 0..64 {
+            pending.push(svc.submit(img.clone()).unwrap());
+        }
+        svc.stop();
+        for p in pending {
+            if let Err(e) = p.wait() {
+                let typed = e.downcast_ref::<ServeError>();
+                assert!(typed.is_some(), "untyped shutdown failure: {e}");
+            }
+        }
     }
 
     #[test]

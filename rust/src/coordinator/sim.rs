@@ -1,0 +1,516 @@
+//! Deterministic robustness scenarios for the serving stack — the
+//! engine behind `ffcnn simtest`.
+//!
+//! Each scenario builds a real [`InferenceService`] on a seeded
+//! simulated clock ([`Clock::sim`]); the coordinator code under test
+//! is bit-identical to production, only the time base changes.  The
+//! cooperative scheduler in [`util::sim`](crate::util::sim) picks the
+//! next runnable thread from a ChaCha8 stream, so ONE `u64` seed
+//! fully determines every interleaving: arrival timing, flush
+//! deadlines, board pacing, fault firing and teardown order replay
+//! byte-identically.  A failing seed printed by [`run_seeds`] is a
+//! complete reproduction recipe:
+//!
+//! ```text
+//! ffcnn simtest --scenario NAME --seed SEED --num-seeds 1
+//! ```
+//!
+//! Faults come from [`FaultPlan`] (board death at an exact job index,
+//! a one-shot mid-chunk stall, straggler time scaling) and from the
+//! workload side (bursty arrival modulation, pathological batch
+//! mixes, shutdown with queued work).  Every scenario asserts the
+//! robustness invariants the coordinator promises: no hung waiters,
+//! typed [`ServeError`]s, gather order preserved under sharding, and
+//! — in `virtual_oracle` — board pacing that matches the
+//! [`Simulator`](crate::fpga::pipeline::Simulator) cost model
+//! exactly in virtual nanoseconds.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure};
+
+use super::board::{FaultPlan, Pace, ServeError};
+use super::router::Policy;
+use super::service::InferenceService;
+use crate::config::{RunConfig, ShardPolicy};
+use crate::data;
+use crate::fpga::pipeline::Simulator;
+use crate::models;
+use crate::plan::Plan;
+use crate::util::sim::{Clock, Nanos};
+use crate::Result;
+
+/// A scenario body: runs on the registered driver thread of a fresh
+/// simulated world.  The seed is the scenario's own (for seeding
+/// workload generators); the scheduler is already seeded with it.
+type ScenarioFn = fn(&Clock, u64) -> Result<()>;
+
+/// Every scenario, in the order a full `simtest` sweep runs them.
+const SCENARIOS: &[(&str, ScenarioFn)] = &[
+    ("steady_state", steady_state),
+    ("board_stall", board_stall),
+    ("straggler_shards", straggler_shards),
+    ("board_death", board_death),
+    ("slab_pressure", slab_pressure),
+    ("bursty_arrivals", bursty_arrivals),
+    ("graceful_shutdown", graceful_shutdown),
+    ("virtual_oracle", virtual_oracle),
+];
+
+/// Names of all registered scenarios (the `--scenario` values).
+pub fn scenario_names() -> Vec<&'static str> {
+    SCENARIOS.iter().map(|(n, _)| *n).collect()
+}
+
+/// One finished scenario execution: the deterministic event log plus
+/// the failure (assertion or panic), if any.
+#[derive(Debug)]
+pub struct ScenarioRun {
+    pub name: &'static str,
+    pub seed: u64,
+    /// The virtual event log
+    /// ([`SimSched::take_log`](crate::util::sim::SimSched::take_log));
+    /// the same seed yields a byte-identical log on every run.
+    pub log: Vec<String>,
+    /// `None` on success; the assertion/panic text otherwise.
+    pub error: Option<String>,
+}
+
+/// Run one scenario under one seed and collect its event log.
+///
+/// Panics inside the scenario (including the scheduler's deadlock
+/// poison) are caught and reported as the run's `error`, so a seed
+/// sweep keeps going past a failing seed.
+pub fn run_scenario(name: &str, seed: u64) -> Result<ScenarioRun> {
+    let (name, f) = SCENARIOS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .copied()
+        .ok_or_else(|| {
+            anyhow!("unknown scenario {name:?}; have {:?}", scenario_names())
+        })?;
+    let clock = Clock::sim(seed);
+    let sched = clock.sched().expect("sim clock has a scheduler").clone();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        // The driver registers like any sim thread: scenarios run
+        // services, submit work and block on replies, all in virtual
+        // time.  Dropping the registration at scope exit deregisters.
+        let reg = clock.register("driver");
+        reg.start();
+        f(&clock, seed)
+    }));
+    let log = sched.take_log();
+    let mut error = match outcome {
+        Ok(Ok(())) => None,
+        Ok(Err(e)) => Some(format!("{e:#}")),
+        Err(panic) => Some(panic_text(panic.as_ref())),
+    };
+    if error.is_none() && sched.is_poisoned() {
+        error = Some("scheduler poisoned: deadlock after scenario body".into());
+    }
+    Ok(ScenarioRun { name, seed, log, error })
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_text(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}
+
+/// One failing (scenario, seed) pair — the replay recipe.
+#[derive(Debug, Clone)]
+pub struct SeedFailure {
+    pub scenario: String,
+    pub seed: u64,
+    pub error: String,
+}
+
+/// Aggregate result of a seed sweep ([`run_seeds`]).
+#[derive(Debug)]
+pub struct SimtestReport {
+    /// Total (scenario, seed) runs executed.
+    pub runs: u64,
+    /// Every failure, sorted by (scenario, seed).
+    pub failures: Vec<SeedFailure>,
+}
+
+impl SimtestReport {
+    /// True when every run passed.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Run every scenario (or just `scenario`) across `num_seeds`
+/// consecutive seeds starting at `seed_start`, fanned over `workers`
+/// OS threads.  Each (scenario, seed) pair owns a private simulated
+/// world, so the fan-out shares nothing and the set of failures is
+/// independent of `workers`.  Failures print to stderr as they happen
+/// (`FAIL scenario=... seed=...`) and come back sorted in the report.
+pub fn run_seeds(
+    scenario: Option<&str>,
+    seed_start: u64,
+    num_seeds: u64,
+    workers: usize,
+) -> Result<SimtestReport> {
+    let names: Vec<&'static str> = match scenario {
+        Some(want) => {
+            let hit = SCENARIOS
+                .iter()
+                .find(|(n, _)| *n == want)
+                .map(|(n, _)| *n)
+                .ok_or_else(|| {
+                    anyhow!("unknown scenario {want:?}; have {:?}", scenario_names())
+                })?;
+            vec![hit]
+        }
+        None => scenario_names(),
+    };
+    let mut jobs: Vec<(&'static str, u64)> = Vec::new();
+    for seed in seed_start..seed_start.saturating_add(num_seeds) {
+        for &name in &names {
+            jobs.push((name, seed));
+        }
+    }
+    let next = AtomicUsize::new(0);
+    let failures = Mutex::new(Vec::new());
+    let workers = workers.clamp(1, jobs.len().max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                let Some(&(name, seed)) = jobs.get(k) else { break };
+                let error = match run_scenario(name, seed) {
+                    Ok(run) => run.error,
+                    Err(e) => Some(format!("{e:#}")),
+                };
+                if let Some(error) = error {
+                    eprintln!("FAIL scenario={name} seed={seed}: {error}");
+                    failures.lock().unwrap().push(SeedFailure {
+                        scenario: name.to_string(),
+                        seed,
+                        error,
+                    });
+                }
+            });
+        }
+    });
+    let mut failures = failures.into_inner().unwrap();
+    failures.sort_by(|a, b| (a.scenario.as_str(), a.seed).cmp(&(b.scenario.as_str(), b.seed)));
+    Ok(SimtestReport { runs: jobs.len() as u64, failures })
+}
+
+// ---- scenario plumbing --------------------------------------------------
+
+/// The shared scenario plan: tinynet (cheapest propagate), FPGA-paced
+/// boards (so virtual time reproduces the FPGA's queueing behaviour),
+/// a 1 ms batching window and batch sizes 1..=4.  Sim services never
+/// open an engine or touch artifacts on disk.
+fn sim_plan(boards: usize, policy: Policy, shard: ShardPolicy) -> Result<Plan> {
+    let mut cfg = RunConfig::default();
+    cfg.model = "tinynet".to_string();
+    cfg.serving.max_batch = 4;
+    cfg.serving.max_wait_ms = 1;
+    cfg.serving.boards = boards;
+    cfg.serving.shard = shard;
+    Plan::from_run_config(&cfg, Pace::Fpga, policy)
+}
+
+/// A single image whose first element carries `marker` — the
+/// engine-less board echoes it into logit 0, so replies can be
+/// matched back to submissions.
+fn marked(numel: usize, marker: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; numel];
+    v[0] = marker;
+    v
+}
+
+/// A flat batch whose image `i` carries marker `base + i`.
+fn marked_batch(numel: usize, batch: usize, base: f32) -> Vec<f32> {
+    let mut v = vec![0.0f32; numel * batch];
+    for i in 0..batch {
+        v[i * numel] = base + i as f32;
+    }
+    v
+}
+
+/// Check a gathered batch reply: right size, every image's logit 0
+/// still carries its submission marker (gather order preserved).
+fn check_gather(r: &super::batcher::Reply, batch: usize, base: f32) -> Result<()> {
+    ensure!(r.batch == batch, "reply batch {} != submitted {batch}", r.batch);
+    let classes = r.logits.len() / r.batch;
+    for i in 0..batch {
+        let got = r.logits[i * classes];
+        let want = base + i as f32;
+        ensure!(got == want, "gather order lost at image {i}: {got} != {want}");
+    }
+    Ok(())
+}
+
+// ---- scenarios ----------------------------------------------------------
+
+/// Healthy baseline: identity-marked singles resolve in order, then a
+/// Poisson whole-batch trace replays open-loop with zero errors.
+fn steady_state(clock: &Clock, seed: u64) -> Result<()> {
+    let plan = sim_plan(2, Policy::LeastOutstanding, ShardPolicy::None)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numel = svc.image_numel();
+    let mut pending = Vec::new();
+    for i in 0..8 {
+        pending.push(svc.submit(marked(numel, (i + 1) as f32))?);
+    }
+    for (i, p) in pending.into_iter().enumerate() {
+        let r = p.wait()?;
+        let want = (i + 1) as f32;
+        ensure!(r.logits[0] == want, "reply {i} lost identity: {}", r.logits[0]);
+    }
+    let trace = data::poisson_batch_trace(16, 1000.0, 3, seed);
+    let report = svc.run_trace(&trace, |t| marked_batch(numel, t.batch, t.id as f32), 1.0);
+    ensure!(report.errors == 0, "trace errors: {}", report.errors);
+    ensure!(report.requests == 16, "trace requests: {}", report.requests);
+    Ok(())
+}
+
+/// A board goes quiet mid-chunk (50 ms one-shot stall): every request
+/// still resolves Ok, nothing hangs, and the stall is visible in
+/// virtual time.
+fn board_stall(clock: &Clock, _seed: u64) -> Result<()> {
+    let faults = [
+        FaultPlan::default(),
+        FaultPlan::default().stall_on(0, Duration::from_millis(50)),
+    ];
+    let plan = sim_plan(2, Policy::RoundRobin, ShardPolicy::None)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &faults)?;
+    let numel = svc.image_numel();
+    let t0 = clock.now_nanos();
+    let mut pending = Vec::new();
+    for i in 0..8 {
+        pending.push(svc.submit(marked(numel, (i + 1) as f32))?);
+    }
+    for (i, p) in pending.into_iter().enumerate() {
+        let r = p.wait()?;
+        let want = (i + 1) as f32;
+        ensure!(r.logits[0] == want, "reply {i} lost identity: {}", r.logits[0]);
+    }
+    let waited = clock.now_nanos().saturating_sub(t0);
+    ensure!(waited >= 50_000_000, "stall not observed: {waited}ns < 50ms");
+    Ok(())
+}
+
+/// One board of a sharded gather is an 8x straggler: gather order is
+/// preserved and the reply reports the straggler (busiest-board
+/// `fpga_ms`), not the healthy board.
+fn straggler_shards(clock: &Clock, _seed: u64) -> Result<()> {
+    let faults = [FaultPlan::default(), FaultPlan::default().straggle(8.0)];
+    let plan = sim_plan(2, Policy::LeastOutstanding, ShardPolicy::SplitOver(2))?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &faults)?;
+    let numel = svc.image_numel();
+    let model = models::by_name(&plan.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", plan.model))?;
+    // Each 4-image batch splits 2+2; a shard executes as one batch-2
+    // chunk, so the straggler board reports 8x the simulator's batch-2
+    // time and the busiest-board rule must surface exactly that.
+    let base = Simulator::new(&model, plan.device_profile()?, plan.design)
+        .policy(plan.overlap)
+        .run(2)
+        .time_ms();
+    for round in 0..3 {
+        let base_marker = 1.0 + (round * 4) as f32;
+        let r = svc.submit_batch(marked_batch(numel, 4, base_marker))?.wait()?;
+        check_gather(&r, 4, base_marker)?;
+        let want = base * 8.0;
+        ensure!(
+            (r.fpga_ms - want).abs() <= want * 1e-9,
+            "busiest-board fpga_ms {} != straggler {want}",
+            r.fpga_ms
+        );
+    }
+    Ok(())
+}
+
+/// A board dies at an exact job index: the requests it already served
+/// stay Ok, every request stranded on it resolves as a typed
+/// [`ServeError::BoardLost`] (never a hang), and the healthy board is
+/// untouched.
+fn board_death(clock: &Clock, _seed: u64) -> Result<()> {
+    let faults = [FaultPlan::default().die_before(1), FaultPlan::default()];
+    let plan = sim_plan(2, Policy::RoundRobin, ShardPolicy::None)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &faults)?;
+    let numel = svc.image_numel();
+    let mut pending = Vec::new();
+    for i in 0..12 {
+        pending.push(svc.submit(marked(numel, (i + 1) as f32))?);
+    }
+    let (mut ok, mut lost) = (0, 0);
+    for p in pending {
+        match p.wait() {
+            Ok(_) => ok += 1,
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::BoardLost(0)) => lost += 1,
+                other => bail!("untyped or wrong error {other:?}: {e:#}"),
+            },
+        }
+    }
+    // Round-robin puts 6 singles on each board; the dead board serves
+    // its first 4-image chunk (job 0) and strands the 2-image rest.
+    ensure!(ok == 10 && lost == 2, "ok={ok} lost={lost}, want ok=10 lost=2");
+    Ok(())
+}
+
+/// Pathological batch mix against the reply slab and scratch pools:
+/// interleaved batch sizes gathered newest-first (so older scratch
+/// bundles stay checked out while newer ones resolve) across several
+/// recycling rounds — per-image identity must survive every round.
+fn slab_pressure(clock: &Clock, _seed: u64) -> Result<()> {
+    let plan = sim_plan(2, Policy::WorkStealing, ShardPolicy::None)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numel = svc.image_numel();
+    let mut marker = 1.0f32;
+    for _round in 0..3 {
+        let mut pending = Vec::new();
+        for &b in &[4usize, 1, 3, 2, 4] {
+            pending.push((marker, b, svc.submit_batch(marked_batch(numel, b, marker))?));
+            marker += b as f32;
+        }
+        for (base, b, p) in pending.into_iter().rev() {
+            check_gather(&p.wait()?, b, base)?;
+        }
+    }
+    Ok(())
+}
+
+/// Diurnal/bursty open-loop load (`data::bursty_trace`): the arrival
+/// rate swings 6x over a short period; the stack absorbs every burst
+/// with zero errors.
+fn bursty_arrivals(clock: &Clock, seed: u64) -> Result<()> {
+    let plan = sim_plan(2, Policy::LeastOutstanding, ShardPolicy::None)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numel = svc.image_numel();
+    let trace = data::bursty_trace(40, 1500.0, 6.0, 0.02, seed);
+    let report = svc.run_trace(&trace, |t| marked(numel, t.id as f32), 1.0);
+    ensure!(report.errors == 0, "trace errors: {}", report.errors);
+    ensure!(report.requests == 40, "trace requests: {}", report.requests);
+    Ok(())
+}
+
+/// Stop the service with queued work: completed traffic stays Ok, and
+/// every request drained by the teardown resolves as a typed
+/// [`ServeError::Shutdown`] — no waiter hangs against the torn-down
+/// stack, and none leaks out as a board death.
+fn graceful_shutdown(clock: &Clock, _seed: u64) -> Result<()> {
+    let plan = sim_plan(2, Policy::WorkStealing, ShardPolicy::None)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numel = svc.image_numel();
+    // Warm phase: normal traffic completes before teardown begins.
+    let mut warm = Vec::new();
+    for i in 0..8 {
+        warm.push(svc.submit(marked(numel, (i + 1) as f32))?);
+    }
+    for p in warm {
+        p.wait()?;
+    }
+    // In-flight phase: submit, then stop while the driver still holds
+    // the virtual-time token — none of these has executed yet, so
+    // every waiter must resolve as Shutdown.
+    let mut pending = Vec::new();
+    for i in 0..24 {
+        pending.push(svc.submit(marked(numel, (i + 1) as f32))?);
+    }
+    svc.stop();
+    let mut shutdown = 0;
+    for p in pending {
+        match p.wait() {
+            Ok(_) => bail!("request executed after stop()"),
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::Shutdown) => shutdown += 1,
+                other => bail!("untyped or wrong error {other:?}: {e:#}"),
+            },
+        }
+    }
+    ensure!(shutdown == 24, "only {shutdown}/24 waiters saw typed Shutdown");
+    Ok(())
+}
+
+/// Virtual-time oracle: for every servable batch size, the reply's
+/// `fpga_ms` must equal an independently built full-design-point
+/// [`Simulator`](crate::fpga::pipeline::Simulator) (a stale memo key
+/// or a wrong design point in the board worker trips this), and the
+/// end-to-end virtual latency must be EXACTLY the pacing target plus
+/// the batching window the batcher owes that size — nanosecond-exact
+/// determinism, not a tolerance band.
+fn virtual_oracle(clock: &Clock, _seed: u64) -> Result<()> {
+    let plan = sim_plan(1, Policy::LeastOutstanding, ShardPolicy::None)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numel = svc.image_numel();
+    let model = models::by_name(&plan.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", plan.model))?;
+    let oracle = Simulator::new(&model, plan.device_profile()?, plan.design)
+        .policy(plan.overlap);
+    let window = Duration::from_millis(plan.serving.max_wait_ms).as_nanos() as Nanos;
+    let max_batch = plan.serving.max_batch;
+    for b in 1..=max_batch {
+        let expect = oracle.run(b).time_ms();
+        let t0 = clock.now_nanos();
+        let r = svc.submit_batch(marked_batch(numel, b, 1.0))?.wait()?;
+        check_gather(&r, b, 1.0)?;
+        ensure!(
+            (r.fpga_ms - expect).abs() <= expect.abs() * 1e-9,
+            "b={b}: reply fpga_ms {} != simulator {expect} (stale memo?)",
+            r.fpga_ms
+        );
+        // A lone request flushes immediately; a full batch skips the
+        // window; a partial batch waits out the whole window first.
+        let wait = if b > 1 && b < max_batch { window } else { 0 };
+        let target = wait + (expect * 1e6) as Nanos;
+        let elapsed = clock.now_nanos().saturating_sub(t0);
+        ensure!(elapsed == target, "b={b}: virtual latency {elapsed}ns != target {target}ns");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_names_unique_and_nonempty() {
+        let names = scenario_names();
+        assert!(!names.is_empty());
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate scenario name");
+    }
+
+    #[test]
+    fn unknown_scenario_is_a_named_error() {
+        let err = run_scenario("no_such_scenario", 1).unwrap_err();
+        assert!(err.to_string().contains("no_such_scenario"));
+        let err = run_seeds(Some("nope"), 0, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn same_seed_same_event_log() {
+        let a = run_scenario("steady_state", 42).unwrap();
+        let b = run_scenario("steady_state", 42).unwrap();
+        assert_eq!(a.error, None, "{:?}", a.error);
+        assert_eq!(a.log, b.log);
+        assert!(!a.log.is_empty(), "sim run produced no event log");
+    }
+
+    #[test]
+    fn run_seeds_sweeps_all_scenarios() {
+        let report = run_seeds(None, 7, 2, 4).unwrap();
+        assert_eq!(report.runs, 2 * scenario_names().len() as u64);
+        assert!(report.passed(), "failures: {:?}", report.failures);
+    }
+}

@@ -94,6 +94,34 @@ pub fn poisson_batch_trace(
         .collect()
 }
 
+/// Bursty open-loop trace: a Poisson process whose instantaneous rate
+/// swings sinusoidally between `base_rate` and `base_rate * burst`
+/// req/s over a `period_s` cycle — a compressed diurnal load curve,
+/// the robustness workload `coordinator::sim`'s `bursty_arrivals`
+/// scenario replays.  Deterministic for a fixed seed, like every
+/// generator here; `burst` clamps to >= 1 and `period_s` to a sane
+/// positive floor.
+pub fn bursty_trace(
+    n: usize,
+    base_rate: f64,
+    burst: f64,
+    period_s: f64,
+    seed: u64,
+) -> Vec<TraceRequest> {
+    let burst = burst.max(1.0);
+    let period = period_s.max(1e-9);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n as u64)
+        .map(|id| {
+            let phase = (std::f64::consts::TAU * t / period).sin();
+            let rate = base_rate * (1.0 + (burst - 1.0) * 0.5 * (1.0 + phase));
+            t += rng.next_exp(rate);
+            TraceRequest { id, arrival_s: t, batch: 1 }
+        })
+        .collect()
+}
+
 /// Closed-loop trace: all requests available at t=0 (max-throughput).
 pub fn burst_trace(n: usize) -> Vec<TraceRequest> {
     (0..n as u64)
@@ -163,6 +191,30 @@ mod tests {
         assert_eq!(tr.len(), 5);
         assert!(tr.iter().all(|r| r.arrival_s == 0.0));
         assert!(tr.iter().all(|r| r.batch == 1));
+    }
+
+    #[test]
+    fn bursty_trace_deterministic_and_monotone() {
+        let a = bursty_trace(200, 100.0, 8.0, 0.5, 21);
+        let b = bursty_trace(200, 100.0, 8.0, 0.5, 21);
+        assert_eq!(a, b);
+        assert_ne!(a, bursty_trace(200, 100.0, 8.0, 0.5, 22));
+        assert!(a.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s));
+        assert!(a.iter().all(|r| r.batch == 1));
+    }
+
+    #[test]
+    fn bursty_trace_rate_between_base_and_peak() {
+        // The modulated rate averages between the trough and the peak,
+        // so the realized throughput must land strictly inside them.
+        let tr = bursty_trace(4000, 100.0, 8.0, 0.5, 13);
+        let span = tr.last().unwrap().arrival_s;
+        let rate = 4000.0 / span;
+        assert!(rate > 100.0 && rate < 800.0, "rate={rate}");
+        // burst <= 1 degrades to plain Poisson at base_rate.
+        let flat = bursty_trace(2000, 100.0, 1.0, 0.5, 11);
+        let frate = 2000.0 / flat.last().unwrap().arrival_s;
+        assert!((frate - 100.0).abs() / 100.0 < 0.15, "frate={frate}");
     }
 
     #[test]

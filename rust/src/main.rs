@@ -65,6 +65,15 @@ COMMANDS:
                                   classify_batch calls
             [--shards 1]          split each batch over this many boards
                                   (needs --batch-size > 1)
+  simtest   [--num-seeds 100] [--seed 0]   deterministic robustness
+            [--scenario NAME]     run one scenario (default: all; see
+                                  --list) on the seeded simulated
+                                  scheduler — every failure prints a
+                                  replayable (scenario, seed) pair
+            [--workers 0]         seed fan-out threads (0 = all cores)
+            [--fail-file PATH]    write failing (scenario, seed) pairs
+                                  (CI artifact; empty file on success)
+            [--list]              list scenario names and exit
   devices                                          list device profiles
 
 GLOBAL: --artifacts <dir>   artifact directory (default ./artifacts)
@@ -152,6 +161,7 @@ fn run(argv: &[String]) -> Result<()> {
         "pipeline" => cmd_pipeline(&args),
         "classify" => cmd_classify(&args, artifacts),
         "serve" => cmd_serve(&args, artifacts),
+        "simtest" => cmd_simtest(&args),
         "devices" => {
             println!(
                 "{:<12}{:<22}{:>8}{:>8}{:>10}{:>10}{:>10}",
@@ -667,5 +677,61 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
         1.0,
     );
     println!("{report}");
+    if report.errors > 0 && rate > 0.0 {
+        // Replayability on failure: the trace is fully determined by
+        // its seed, so print the exact flags that rebuild it.
+        println!(
+            "(trace had {} error(s); replay it with --rate {rate} \
+             --requests {requests} --batch-size {batch_size} --seed {seed})",
+            report.errors
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simtest(args: &Args) -> Result<()> {
+    use ffcnn::coordinator::{run_seeds, scenario_names};
+    if args.has("list") {
+        for n in scenario_names() {
+            println!("{n}");
+        }
+        return Ok(());
+    }
+    let num_seeds = args.get_usize("num-seeds", 100)? as u64;
+    let seed_start = args.get_usize("seed", 0)? as u64;
+    let scenario = args.kv.get("scenario").cloned();
+    let workers = match args.get_usize("workers", 0)? {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n,
+    };
+    let t0 = std::time::Instant::now();
+    let report = run_seeds(scenario.as_deref(), seed_start, num_seeds, workers)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let what = match &scenario {
+        Some(s) => s.clone(),
+        None => format!("{} scenarios", scenario_names().len()),
+    };
+    println!(
+        "simtest: {} run(s) ({num_seeds} seed(s) from {seed_start} x \
+         {what}) in {wall_s:.2}s — {} failed",
+        report.runs,
+        report.failures.len()
+    );
+    if let Some(path) = args.kv.get("fail-file") {
+        // Always written (empty on success) so CI can upload it
+        // unconditionally as the failing-seed artifact.
+        let mut out = String::new();
+        for f in &report.failures {
+            out.push_str(&format!("{} {}\n", f.scenario, f.seed));
+        }
+        std::fs::write(path, out)?;
+    }
+    if !report.passed() {
+        println!("failing seeds (replay: simtest --scenario NAME --seed SEED --num-seeds 1):");
+        for f in &report.failures {
+            println!("  {} {}", f.scenario, f.seed);
+        }
+        return Err(anyhow!("simtest: {} failing run(s)", report.failures.len()));
+    }
     Ok(())
 }

@@ -1,11 +1,13 @@
 //! In-tree substrates for the offline build environment: a JSON
-//! parser/writer, a micro-benchmark harness, and a property-test
-//! runner.  (DESIGN.md §7: every dependency the system needs that the
+//! parser/writer, a micro-benchmark harness, a property-test
+//! runner, and a deterministic-simulation clock/scheduler.
+//! (DESIGN.md §7: every dependency the system needs that the
 //! environment does not provide is built here.)
 
 pub mod alloc;
 pub mod bench;
 pub mod json;
 pub mod prop;
+pub mod sim;
 
 pub use json::Json;

@@ -1,0 +1,892 @@
+//! Deterministic simulation substrate: a virtual clock and a
+//! cooperative, seeded scheduler for the serving stack.
+//!
+//! # Why
+//!
+//! The coordinator (batcher, router, `StealPool`, board pacing) is
+//! real threads parked on real condvars with wall-clock deadlines —
+//! correct, but untestable at the interleaving level: a race seen
+//! once under load cannot be reproduced.  This module makes *time and
+//! scheduling injectable*: every blocking primitive in the
+//! coordinator routes through a [`Clock`], which is either
+//! [`Clock::Real`] (`Instant`/`Condvar`/`sleep`, byte-identical to
+//! the pre-sim behaviour) or [`Clock::Sim`] — a discrete-event
+//! [`SimSched`] where exactly **one** thread runs at a time, blocking
+//! points are the only yield points, the next runnable thread is
+//! picked by a seeded [`ChaCha8`] RNG, and virtual time jumps to the
+//! earliest timer when nobody is runnable.  Same seed, same
+//! interleaving, same event log — every run is a replay.
+//!
+//! # The cooperative token protocol
+//!
+//! Threads participating in a simulation register via
+//! [`Clock::register`] (deterministic registration order is the
+//! *caller's* job: the service handshakes each spawn before starting
+//! the next).  A registered thread owns the "token" while it runs; it
+//! surrenders the token only inside [`SimSched::block_on`] /
+//! [`SimSched::sleep`], where the scheduler picks the next runnable
+//! thread (seeded RNG), or — when none is runnable — fires the
+//! earliest timer and advances virtual time.
+//!
+//! # Hang == deadlock == detected
+//!
+//! When no thread is runnable and no timer is pending but blocked
+//! threads remain, the real system would hang forever.  The sim
+//! *detects* this: it poisons the schedule, wakes every parked thread
+//! with a poison reason (each panics, unwinding its own stack), and
+//! the scenario fails with a replayable seed — the "no hung waiters"
+//! invariant is a tripwire, not a timeout.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+/// Virtual (or epoch-relative real) timestamps, in nanoseconds.
+pub type Nanos = u64;
+
+/// Process-wide epoch for real-mode [`Clock::now_nanos`].
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic wall-clock nanoseconds since the first call in this
+/// process (the real-mode time base behind [`Clock::now_nanos`]).
+pub fn real_now_nanos() -> Nanos {
+    epoch().elapsed().as_nanos() as Nanos
+}
+
+// --------------------------------------------------------- ChaCha8
+
+/// Minimal in-tree ChaCha8 stream RNG (no external deps; the
+/// redlite-dst `TestRunner` idiom uses ChaCha8 for exactly this job:
+/// cheap, seedable, identical on every platform and run).
+pub struct ChaCha8 {
+    key: [u32; 8],
+    counter: u64,
+    block: [u32; 16],
+    idx: usize,
+}
+
+impl ChaCha8 {
+    /// Seed the stream; the 64-bit seed is expanded to the 256-bit
+    /// key with SplitMix64 (same expansion everywhere).
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let mut key = [0u32; 8];
+        for pair in key.chunks_mut(2) {
+            s = s.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^= z >> 31;
+            pair[0] = z as u32;
+            pair[1] = (z >> 32) as u32;
+        }
+        ChaCha8 { key, counter: 0, block: [0; 16], idx: 16 }
+    }
+
+    fn quarter(st: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+        st[a] = st[a].wrapping_add(st[b]);
+        st[d] = (st[d] ^ st[a]).rotate_left(16);
+        st[c] = st[c].wrapping_add(st[d]);
+        st[b] = (st[b] ^ st[c]).rotate_left(12);
+        st[a] = st[a].wrapping_add(st[b]);
+        st[d] = (st[d] ^ st[a]).rotate_left(8);
+        st[c] = st[c].wrapping_add(st[d]);
+        st[b] = (st[b] ^ st[c]).rotate_left(7);
+    }
+
+    fn refill(&mut self) {
+        let mut st = [0u32; 16];
+        st[0] = 0x6170_7865; // "expa"
+        st[1] = 0x3320_646e; // "nd 3"
+        st[2] = 0x7962_2d32; // "2-by"
+        st[3] = 0x6b20_6574; // "te k"
+        st[4..12].copy_from_slice(&self.key);
+        st[12] = self.counter as u32;
+        st[13] = (self.counter >> 32) as u32;
+        let input = st;
+        for _ in 0..4 {
+            // One double round (column + diagonal); 4 = 8 rounds.
+            Self::quarter(&mut st, 0, 4, 8, 12);
+            Self::quarter(&mut st, 1, 5, 9, 13);
+            Self::quarter(&mut st, 2, 6, 10, 14);
+            Self::quarter(&mut st, 3, 7, 11, 15);
+            Self::quarter(&mut st, 0, 5, 10, 15);
+            Self::quarter(&mut st, 1, 6, 11, 12);
+            Self::quarter(&mut st, 2, 7, 8, 13);
+            Self::quarter(&mut st, 3, 4, 9, 14);
+        }
+        for (o, i) in st.iter_mut().zip(input.iter()) {
+            *o = o.wrapping_add(*i);
+        }
+        self.block = st;
+        self.counter = self.counter.wrapping_add(1);
+        self.idx = 0;
+    }
+
+    /// Next 32 raw bits of the stream.
+    pub fn next_u32(&mut self) -> u32 {
+        if self.idx >= 16 {
+            self.refill();
+        }
+        let v = self.block[self.idx];
+        self.idx += 1;
+        v
+    }
+
+    /// Next 64 raw bits of the stream.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform pick in `0..n` (n > 0) via 64-bit modulo — bias is
+    /// negligible for scheduler-sized `n` and, crucially, identical
+    /// on every platform.
+    pub fn pick(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+// ----------------------------------------------------------- Clock
+
+/// Injectable time + scheduling: `Real` is the production mode (wall
+/// clock, OS scheduler); `Sim` routes every blocking point through a
+/// seeded deterministic scheduler.
+#[derive(Clone, Default)]
+pub enum Clock {
+    /// Wall-clock time, OS threads, real condvars.
+    #[default]
+    Real,
+    /// Virtual time on a cooperative seeded scheduler.
+    Sim(Arc<SimSched>),
+}
+
+impl Clock {
+    /// A fresh simulated clock seeded with `seed`.
+    pub fn sim(seed: u64) -> Self {
+        Clock::Sim(SimSched::new(seed))
+    }
+
+    /// Whether this is a simulated clock.
+    pub fn is_sim(&self) -> bool {
+        matches!(self, Clock::Sim(_))
+    }
+
+    /// The scheduler behind a sim clock (`None` in real mode).
+    pub fn sched(&self) -> Option<&Arc<SimSched>> {
+        match self {
+            Clock::Real => None,
+            Clock::Sim(s) => Some(s),
+        }
+    }
+
+    /// Current time in nanoseconds: virtual in sim mode, epoch-based
+    /// monotonic wall clock otherwise.
+    pub fn now_nanos(&self) -> Nanos {
+        match self {
+            Clock::Real => real_now_nanos(),
+            Clock::Sim(s) => s.now(),
+        }
+    }
+
+    /// Sleep: parks the OS thread in real mode; advances virtual time
+    /// (yielding the token) in sim mode.
+    pub fn sleep(&self, d: Duration) {
+        match self {
+            Clock::Real => std::thread::sleep(d),
+            Clock::Sim(s) => s.sleep(d.as_nanos() as Nanos),
+        }
+    }
+
+    /// Register the calling thread with the sim scheduler (no-op in
+    /// real mode).  Registration order is the deterministic thread
+    /// identity — callers must serialize spawns (handshake) so every
+    /// run registers threads in the same order.  The returned guard
+    /// deregisters on drop (including panic unwinds).  Non-first
+    /// threads must call [`SimThread::start`] once ready to run; it
+    /// parks until the scheduler hands them the token.
+    pub fn register(&self, name: &str) -> SimThread {
+        match self {
+            Clock::Real => SimThread { sched: None, tid: 0 },
+            Clock::Sim(s) => {
+                let tid = s.announce(name);
+                SimThread { sched: Some(s.clone()), tid }
+            }
+        }
+    }
+
+    /// Append to the sim event log.  No-op — and allocation-free —
+    /// in real mode: the closure only runs under a sim clock.
+    pub fn log(&self, msg: impl FnOnce() -> String) {
+        if let Clock::Sim(s) = self {
+            s.log(msg());
+        }
+    }
+}
+
+/// RAII registration of one thread with a [`SimSched`] (empty in real
+/// mode).  Dropping deregisters — on the normal exit path and when a
+/// panic unwinds a worker, so the scheduler never waits on a corpse.
+pub struct SimThread {
+    sched: Option<Arc<SimSched>>,
+    tid: usize,
+}
+
+impl SimThread {
+    /// Park until the scheduler grants the token (no-op in real mode
+    /// and for the first registered thread, which keeps running).
+    pub fn start(&self) {
+        if let Some(s) = &self.sched {
+            s.wait_for_token(self.tid);
+        }
+    }
+}
+
+impl Drop for SimThread {
+    fn drop(&mut self) {
+        if let Some(s) = &self.sched {
+            s.deregister(self.tid);
+        }
+    }
+}
+
+// -------------------------------------------------------- SimSched
+
+/// Why a parked sim thread was woken.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Wake {
+    /// Scheduled to run (plain yield / initial start / notify).
+    Token,
+    /// Its timer fired (sleep elapsed or timed-wait deadline hit).
+    Timer,
+    /// The schedule was poisoned (deadlock detected): panic.
+    Poison,
+}
+
+struct Park {
+    slot: Mutex<Option<Wake>>,
+    cv: Condvar,
+}
+
+struct ThreadSlot {
+    name: String,
+    park: Arc<Park>,
+    /// Bumps on every wake; invalidates stale timers after a notify.
+    gen: u64,
+    /// Reason recorded when made runnable; delivered at dispatch.
+    wake: Wake,
+    done: bool,
+}
+
+struct Inner {
+    now: Nanos,
+    rng: ChaCha8,
+    threads: Vec<ThreadSlot>,
+    /// Threads holding a pending token grant, in wake order.
+    runnable: Vec<usize>,
+    /// (deadline, seq) -> (tid, gen at arm time).  `seq` keeps
+    /// equal-deadline timers in arm order — a stable tie-break.
+    timers: BTreeMap<(Nanos, u64), (usize, u64)>,
+    timer_seq: u64,
+    /// Condvar id -> waiters in wait order.
+    waiting: BTreeMap<u64, Vec<usize>>,
+    /// The thread currently holding the token.
+    current: Option<usize>,
+    /// Threads registered and not yet done.
+    live: usize,
+    log: Vec<String>,
+}
+
+thread_local! {
+    /// This thread's tid in the sched it registered with.
+    static CURRENT_TID: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The cooperative deterministic scheduler behind [`Clock::Sim`].
+/// See the module docs for the token protocol.
+pub struct SimSched {
+    inner: Mutex<Inner>,
+    poisoned: AtomicBool,
+}
+
+impl SimSched {
+    /// A fresh scheduler whose dispatch decisions replay `seed`.
+    pub fn new(seed: u64) -> Arc<Self> {
+        Arc::new(SimSched {
+            inner: Mutex::new(Inner {
+                now: 0,
+                rng: ChaCha8::new(seed),
+                threads: Vec::new(),
+                runnable: Vec::new(),
+                timers: BTreeMap::new(),
+                timer_seq: 0,
+                waiting: BTreeMap::new(),
+                current: None,
+                live: 0,
+                log: Vec::new(),
+            }),
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// Virtual now, in nanoseconds.
+    pub fn now(&self) -> Nanos {
+        self.inner.lock().unwrap().now
+    }
+
+    /// Whether a detected deadlock poisoned this schedule.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Append one event line, stamped with virtual time and the
+    /// running thread's name.
+    pub fn log(&self, msg: String) {
+        let mut inner = self.inner.lock().unwrap();
+        let who = match inner.current {
+            Some(t) => inner.threads[t].name.clone(),
+            None => "?".to_string(),
+        };
+        let line = format!("[{:>12}ns {who}] {msg}", inner.now);
+        inner.log.push(line);
+    }
+
+    /// Drain the event log (the byte-identical replay artifact).
+    pub fn take_log(&self) -> Vec<String> {
+        std::mem::take(&mut self.inner.lock().unwrap().log)
+    }
+
+    /// Register the calling thread; returns its tid.  The first live
+    /// thread becomes current (keeps running); later threads are
+    /// queued runnable and park until granted the token.
+    fn announce(&self, name: &str) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let tid = inner.threads.len();
+        let park = Arc::new(Park { slot: Mutex::new(None), cv: Condvar::new() });
+        inner.threads.push(ThreadSlot {
+            name: name.to_string(),
+            park,
+            gen: 0,
+            wake: Wake::Token,
+            done: false,
+        });
+        inner.live += 1;
+        CURRENT_TID.with(|c| c.set(Some(tid)));
+        if inner.current.is_none() && inner.live == 1 {
+            inner.current = Some(tid);
+        } else {
+            inner.runnable.push(tid);
+        }
+        tid
+    }
+
+    fn wait_for_token(&self, tid: usize) {
+        {
+            let inner = self.inner.lock().unwrap();
+            if inner.current == Some(tid) {
+                return;
+            }
+        }
+        self.park(tid);
+    }
+
+    fn deregister(&self, tid: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.threads[tid].done {
+            return;
+        }
+        inner.threads[tid].done = true;
+        inner.threads[tid].gen += 1;
+        inner.live -= 1;
+        inner.runnable.retain(|&t| t != tid);
+        for ws in inner.waiting.values_mut() {
+            ws.retain(|&t| t != tid);
+        }
+        CURRENT_TID.with(|c| c.set(None));
+        if self.is_poisoned() {
+            return;
+        }
+        if inner.current == Some(tid) {
+            inner.current = None;
+            self.dispatch(&mut inner);
+        }
+    }
+
+    /// Block the current thread on condvar `cv_id`, optionally with
+    /// an absolute virtual deadline.  Returns `true` if the deadline
+    /// fired before a notify.  The caller must NOT hold user locks.
+    pub fn block_on(&self, cv_id: u64, deadline: Option<Nanos>) -> bool {
+        let me = CURRENT_TID.with(|c| c.get());
+        let me = me.expect("sim block from an unregistered thread");
+        let mut inner = self.inner.lock().unwrap();
+        if self.is_poisoned() {
+            drop(inner);
+            panic!("sim poisoned (deadlock detected elsewhere)");
+        }
+        debug_assert_eq!(inner.current, Some(me), "token protocol violated");
+        if let Some(d) = deadline {
+            if d <= inner.now {
+                return true;
+            }
+            let seq = inner.timer_seq;
+            inner.timer_seq += 1;
+            let gen = inner.threads[me].gen;
+            inner.timers.insert((d, seq), (me, gen));
+        }
+        inner.waiting.entry(cv_id).or_default().push(me);
+        inner.current = None;
+        self.dispatch(&mut inner);
+        drop(inner);
+        self.park(me) == Wake::Timer
+    }
+
+    /// Advance virtual time by `nanos`, yielding the token meanwhile
+    /// (`nanos == 0` is a pure yield).
+    pub fn sleep(&self, nanos: Nanos) {
+        let me = CURRENT_TID.with(|c| c.get());
+        let me = me.expect("sim sleep from an unregistered thread");
+        let mut inner = self.inner.lock().unwrap();
+        if self.is_poisoned() {
+            drop(inner);
+            panic!("sim poisoned (deadlock detected elsewhere)");
+        }
+        debug_assert_eq!(inner.current, Some(me), "token protocol violated");
+        if nanos == 0 {
+            inner.threads[me].wake = Wake::Token;
+            inner.runnable.push(me);
+        } else {
+            let d = inner.now + nanos;
+            let seq = inner.timer_seq;
+            inner.timer_seq += 1;
+            let gen = inner.threads[me].gen;
+            inner.timers.insert((d, seq), (me, gen));
+        }
+        inner.current = None;
+        self.dispatch(&mut inner);
+        drop(inner);
+        self.park(me);
+    }
+
+    /// Move every waiter of `cv_id` to the runnable queue.  The
+    /// notifier keeps the token; woken threads run when dispatched.
+    pub fn notify(&self, cv_id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if self.is_poisoned() {
+            return;
+        }
+        if let Some(ws) = inner.waiting.remove(&cv_id) {
+            for tid in ws {
+                inner.threads[tid].gen += 1; // invalidate pending timer
+                inner.threads[tid].wake = Wake::Token;
+                inner.runnable.push(tid);
+            }
+        }
+    }
+
+    /// Yield the token: requeue self and let the RNG pick.
+    pub fn yield_now(&self) {
+        self.sleep(0);
+    }
+
+    /// Run other registered threads until this thread is the only
+    /// live one — the shutdown drain: after closing every queue, the
+    /// driver calls this so workers observe the close, finish, and
+    /// deregister *before* the driver joins them (a join while
+    /// holding the token would hang the schedule).  Never panics: if
+    /// the others are irrecoverably blocked it poisons the schedule
+    /// (they wake, panic on their own stacks, and exit) and returns —
+    /// this may run inside `Drop` during an unwind, where a second
+    /// panic would abort.
+    pub fn drain_others(&self) {
+        let me = CURRENT_TID.with(|c| c.get());
+        let Some(me) = me else { return };
+        loop {
+            {
+                let mut inner = self.inner.lock().unwrap();
+                if self.is_poisoned() || inner.live <= 1 {
+                    return;
+                }
+                debug_assert_eq!(inner.current, Some(me));
+                let runnable = inner.runnable.iter().any(|&t| t != me);
+                if !runnable && inner.timers.is_empty() {
+                    // Everyone else is parked on condvars nobody will
+                    // ever notify: poison so they unwind and exit.
+                    self.poison(&mut inner);
+                    return;
+                }
+            }
+            self.yield_now();
+        }
+    }
+
+    /// Hand the token to the next runnable thread; when none, fire
+    /// the earliest valid timer (advancing `now`); when neither,
+    /// declare deadlock: poison and wake everyone.
+    ///
+    /// Called with `current == None` and the inner lock held.
+    fn dispatch(&self, inner: &mut Inner) {
+        loop {
+            if !inner.runnable.is_empty() {
+                let i = inner.rng.pick(inner.runnable.len());
+                let tid = inner.runnable.remove(i);
+                if inner.threads[tid].done {
+                    continue;
+                }
+                inner.current = Some(tid);
+                let reason = inner.threads[tid].wake;
+                Self::release(&inner.threads[tid].park, reason);
+                return;
+            }
+            if let Some(((t, _seq), (tid, gen))) = inner.timers.pop_first() {
+                if inner.threads[tid].done || inner.threads[tid].gen != gen {
+                    continue; // stale: woken by a notify meanwhile
+                }
+                inner.now = inner.now.max(t);
+                inner.threads[tid].gen += 1;
+                inner.threads[tid].wake = Wake::Timer;
+                for ws in inner.waiting.values_mut() {
+                    ws.retain(|&w| w != tid);
+                }
+                inner.runnable.push(tid);
+                continue;
+            }
+            if inner.live == 0 {
+                return; // everyone exited; nothing to schedule
+            }
+            // live > 0 but nothing runnable and no timers: the real
+            // system would hang here forever.  Detect, poison, fail.
+            self.poison(inner);
+            return;
+        }
+    }
+
+    /// Poison the schedule and wake every live thread with a poison
+    /// reason (each panics on its own stack and unwinds out).
+    fn poison(&self, inner: &mut Inner) {
+        self.poisoned.store(true, Ordering::Release);
+        let blocked: Vec<&str> = inner
+            .threads
+            .iter()
+            .filter(|t| !t.done)
+            .map(|t| t.name.as_str())
+            .collect();
+        let line = format!("[{:>12}ns sim] DEADLOCK: blocked={blocked:?}", inner.now);
+        inner.log.push(line);
+        inner.runnable.clear();
+        inner.timers.clear();
+        inner.waiting.clear();
+        for t in inner.threads.iter().filter(|t| !t.done) {
+            Self::release(&t.park, Wake::Poison);
+        }
+    }
+
+    fn release(park: &Park, reason: Wake) {
+        *park.slot.lock().unwrap() = Some(reason);
+        park.cv.notify_all();
+    }
+
+    /// Park until granted a wake reason; panics on poison.
+    fn park(&self, tid: usize) -> Wake {
+        let park = {
+            let inner = self.inner.lock().unwrap();
+            inner.threads[tid].park.clone()
+        };
+        let mut slot = park.slot.lock().unwrap();
+        while slot.is_none() {
+            slot = park.cv.wait(slot).unwrap();
+        }
+        let reason = slot.take().unwrap();
+        drop(slot);
+        if reason == Wake::Poison {
+            panic!("sim deadlock: parked with no possible waker (see DEADLOCK log line)");
+        }
+        reason
+    }
+}
+
+// ---------------------------------------------------- ClockCondvar
+
+static NEXT_CV_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A condvar that parks on the OS in real mode and on the sim
+/// scheduler in sim mode.  Only the *wait* side needs a [`Clock`];
+/// notifies are clock-free (the sim identity is captured at the
+/// first sim-mode wait).
+#[derive(Default)]
+pub struct ClockCondvar {
+    real: Condvar,
+    /// (cv id, owning sched) — assigned on the first sim-mode wait.
+    sim: OnceLock<(u64, Weak<SimSched>)>,
+}
+
+impl ClockCondvar {
+    /// A fresh condvar, usable under either clock.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn sim_id(&self, sched: &Arc<SimSched>) -> u64 {
+        let (id, _) = self.sim.get_or_init(|| {
+            let id = NEXT_CV_ID.fetch_add(1, Ordering::Relaxed);
+            (id, Arc::downgrade(sched))
+        });
+        *id
+    }
+
+    /// Wait until notified.  In sim mode the guard is released, the
+    /// token surrendered, and the mutex re-acquired on wake — the
+    /// caller's loop-on-predicate discipline is unchanged.
+    pub fn wait<'a, T>(
+        &self,
+        clock: &Clock,
+        lock: &'a Mutex<T>,
+        guard: MutexGuard<'a, T>,
+    ) -> MutexGuard<'a, T> {
+        match clock {
+            Clock::Real => self.real.wait(guard).unwrap(),
+            Clock::Sim(s) => {
+                let id = self.sim_id(s);
+                drop(guard);
+                s.block_on(id, None);
+                lock.lock().unwrap()
+            }
+        }
+    }
+
+    /// Wait until notified or the absolute `deadline` ([`Nanos`])
+    /// passes; the returned flag reports a timeout.
+    pub fn wait_deadline<'a, T>(
+        &self,
+        clock: &Clock,
+        lock: &'a Mutex<T>,
+        guard: MutexGuard<'a, T>,
+        deadline: Nanos,
+    ) -> (MutexGuard<'a, T>, bool) {
+        match clock {
+            Clock::Real => {
+                let now = real_now_nanos();
+                let dur = Duration::from_nanos(deadline.saturating_sub(now));
+                let (g, t) = self.real.wait_timeout(guard, dur).unwrap();
+                (g, t.timed_out() || deadline <= now)
+            }
+            Clock::Sim(s) => {
+                let id = self.sim_id(s);
+                drop(guard);
+                let timed_out = s.block_on(id, Some(deadline));
+                (lock.lock().unwrap(), timed_out)
+            }
+        }
+    }
+
+    /// Wake every waiter (both modes; the sim side is a no-op until
+    /// a sim thread has waited at least once).
+    pub fn notify_all(&self) {
+        self.real.notify_all();
+        if let Some((id, sched)) = self.sim.get() {
+            if let Some(s) = sched.upgrade() {
+                s.notify(*id);
+            }
+        }
+    }
+
+    /// Wake one waiter in real mode; in sim mode conservatively wakes
+    /// all (waiters re-check their predicates, so this is correct —
+    /// and keeps the schedule independent of condvar queue order).
+    pub fn notify_one(&self) {
+        self.real.notify_one();
+        if let Some((id, sched)) = self.sim.get() {
+            if let Some(s) = sched.upgrade() {
+                s.notify(*id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chacha8_is_deterministic_and_seed_sensitive() {
+        let mut a = ChaCha8::new(42);
+        let mut b = ChaCha8::new(42);
+        let mut c = ChaCha8::new(43);
+        let xs: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..64).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+        let mut d = ChaCha8::new(0);
+        let first = d.next_u64();
+        let mut e = ChaCha8::new(0);
+        assert_eq!(first, e.next_u64());
+    }
+
+    #[test]
+    fn real_clock_advances() {
+        let c = Clock::default();
+        let a = c.now_nanos();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.now_nanos() > a);
+        assert!(!c.is_sim());
+    }
+
+    #[test]
+    fn sim_sleep_advances_virtual_time_only() {
+        let clock = Clock::sim(1);
+        let reg = clock.register("driver");
+        reg.start();
+        let wall = Instant::now();
+        assert_eq!(clock.now_nanos(), 0);
+        clock.sleep(Duration::from_secs(3600));
+        assert_eq!(clock.now_nanos(), 3_600_000_000_000);
+        assert!(wall.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn sim_two_threads_interleave_deterministically() {
+        // Two workers ping-ponging on sleeps must produce the same
+        // event log for the same seed, across runs.
+        fn run(seed: u64) -> Vec<String> {
+            let clock = Clock::sim(seed);
+            let sched = clock.sched().unwrap().clone();
+            let reg = clock.register("driver");
+            reg.start();
+            let mut joins = Vec::new();
+            for w in 0..2u64 {
+                let clock2 = clock.clone();
+                let (tx, rx) = std::sync::mpsc::channel::<()>();
+                let h = std::thread::spawn(move || {
+                    let r = clock2.register(&format!("w{w}"));
+                    tx.send(()).unwrap();
+                    r.start();
+                    for i in 0..5u32 {
+                        clock2.log(|| format!("w{w} step {i}"));
+                        clock2.sleep(Duration::from_micros(10 + w));
+                    }
+                });
+                rx.recv().unwrap();
+                joins.push(h);
+            }
+            sched.drain_others();
+            let log = sched.take_log();
+            drop(reg);
+            for j in joins {
+                j.join().unwrap();
+            }
+            log
+        }
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 10);
+        // Different seeds could in principle coincide, but the RNG
+        // dispatch order makes that implausible for this workload.
+        assert_ne!(a, c, "different seed, different interleaving");
+    }
+
+    #[test]
+    fn sim_timers_fire_in_deadline_order() {
+        let clock = Clock::sim(3);
+        let sched = clock.sched().unwrap().clone();
+        let reg = clock.register("driver");
+        reg.start();
+        let mut joins = Vec::new();
+        // Spawn in an order opposite to the deadlines: w0 sleeps the
+        // longest.  The log must come out in deadline order.
+        for (w, us) in [(0u32, 30u64), (1, 20), (2, 10)] {
+            let clock2 = clock.clone();
+            let (tx, rx) = std::sync::mpsc::channel::<()>();
+            let h = std::thread::spawn(move || {
+                let r = clock2.register(&format!("w{w}"));
+                tx.send(()).unwrap();
+                r.start();
+                clock2.sleep(Duration::from_micros(us));
+                clock2.log(|| format!("w{w} woke"));
+            });
+            rx.recv().unwrap();
+            joins.push(h);
+        }
+        sched.drain_others();
+        let log = sched.take_log();
+        assert_eq!(log.len(), 3);
+        assert!(log[0].contains("w2 woke"), "{log:?}");
+        assert!(log[1].contains("w1 woke"), "{log:?}");
+        assert!(log[2].contains("w0 woke"), "{log:?}");
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn clock_condvar_roundtrip_in_sim() {
+        // One producer, one consumer over a mutex-guarded cell.
+        let clock = Clock::sim(11);
+        let sched = clock.sched().unwrap().clone();
+        let reg = clock.register("driver");
+        reg.start();
+        let cell = Arc::new((Mutex::new(0u32), ClockCondvar::new()));
+        let cell2 = cell.clone();
+        let clock2 = clock.clone();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let j = std::thread::spawn(move || {
+            let r = clock2.register("consumer");
+            tx.send(()).unwrap();
+            r.start();
+            let (m, cv) = &*cell2;
+            let mut g = m.lock().unwrap();
+            while *g == 0 {
+                g = cv.wait(&clock2, m, g);
+            }
+            *g
+        });
+        rx.recv().unwrap();
+        // Let the consumer reach its wait, then publish.
+        clock.sleep(Duration::from_micros(1));
+        *cell.0.lock().unwrap() = 99;
+        cell.1.notify_all();
+        sched.drain_others();
+        drop(reg);
+        assert_eq!(j.join().unwrap(), 99);
+    }
+
+    #[test]
+    fn clock_condvar_deadline_times_out_in_virtual_time() {
+        let clock = Clock::sim(5);
+        let reg = clock.register("driver");
+        reg.start();
+        let m = Mutex::new(());
+        let cv = ClockCondvar::new();
+        let g = m.lock().unwrap();
+        let deadline = clock.now_nanos() + 1_000_000; // +1ms virtual
+        let (_g, timed_out) = cv.wait_deadline(&clock, &m, g, deadline);
+        assert!(timed_out);
+        assert_eq!(clock.now_nanos(), 1_000_000);
+    }
+
+    #[test]
+    fn deadlock_is_detected_not_hung() {
+        // A lone driver waiting on a condvar nobody will notify must
+        // panic (poison), not hang the test suite.
+        let clock = Clock::sim(13);
+        let sched = clock.sched().unwrap().clone();
+        let reg = clock.register("driver");
+        reg.start();
+        let sched2 = sched.clone();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            sched2.block_on(999, None);
+        }));
+        assert!(err.is_err(), "deadlock must panic the blocked thread");
+        assert!(sched.is_poisoned());
+        let log = sched.take_log();
+        assert!(log.iter().any(|l| l.contains("DEADLOCK")), "{log:?}");
+        // Deregistration after poison must not panic again.
+        drop(reg);
+    }
+}

@@ -238,6 +238,8 @@ fn immediate_board_spec() -> BoardSpec {
         overlap: ffcnn::fpga::timing::OverlapPolicy::WithinGroup,
         pace: Pace::Immediate,
         warm: vec![],
+        clock: ffcnn::util::sim::Clock::default(),
+        faults: ffcnn::coordinator::FaultPlan::default(),
     }
 }
 
