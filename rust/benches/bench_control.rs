@@ -1,0 +1,181 @@
+//! Bench: closed-loop serving control (`coordinator::control`).
+//!
+//! Two kinds of rows in `BENCH_control.json`:
+//!
+//! - **Measured** (`b.run`): the controller's own overhead — a tick
+//!   with a full latency window, and the admission check on the
+//!   submit hot path.  Both are nanosecond-scale; the rows pin that
+//!   the closed loop costs nothing the coordinator would notice.
+//! - **Headline** (extras): the tentpole experiment, run in *virtual*
+//!   time (deterministic, engine-less, CI-fast) via
+//!   [`overload_stress`]: the same deployment driven at 2x its
+//!   oracle-predicted saturation rate, once with the SLO controller
+//!   and once with the static plan.  Controller-on holds p99 within
+//!   1.5x of target with a bounded shed fraction; the static plan's
+//!   p99 diverges past 5x target.  Both rows are asserted here (the
+//!   bench FAILS if the loop regresses) and schema-gated in CI via
+//!   `--check`.
+
+use std::path::Path;
+use std::time::Duration;
+
+use ffcnn::config::SloPolicy;
+use ffcnn::coordinator::sim::{overload_stress, OverloadOutcome, OVERLOAD_N};
+use ffcnn::coordinator::{ControlPlane, KnobValues, SloController};
+use ffcnn::util::bench::Bench;
+use ffcnn::util::sim::Clock;
+use ffcnn::util::Json;
+
+/// One overload-stress world: fresh seeded sim clock, registered
+/// driver, the shared experiment, clean teardown.
+fn stress(seed: u64, slo_on: bool) -> OverloadOutcome {
+    let clock = Clock::sim(seed);
+    let sched = clock.sched().expect("sim clock has a scheduler").clone();
+    let reg = clock.register("driver");
+    reg.start();
+    let out = overload_stress(&clock, slo_on).expect("overload stress");
+    let _ = sched.take_log();
+    assert!(!sched.is_poisoned(), "sim scheduler poisoned after stress");
+    out
+}
+
+fn base_knobs() -> KnobValues {
+    KnobValues {
+        max_batch: 4,
+        max_wait_nanos: 1_000_000,
+        max_shards: 1,
+        max_queue: 64,
+    }
+}
+
+fn main() {
+    // `--check` dry-run: validate the previously written artifact's
+    // schema and exit (the CI drift gate).
+    if ffcnn::util::bench::check_mode(Path::new("BENCH_control.json")) {
+        return;
+    }
+    let mut b = Bench::new("control").with_budget(Duration::from_secs(2));
+    let mut extra: Vec<(String, Json)> = Vec::new();
+
+    // Controller overhead: 64 ticks over an oscillating load, so the
+    // law walks tighten AND relax (plane construction included; it is
+    // a one-time boot cost).
+    b.run("controller_64_ticks", || {
+        let plane = ControlPlane::new(
+            SloPolicy::target_ms(10, 64),
+            base_knobs(),
+            2,
+            vec![1.0, 2.0, 4.0, 8.0],
+        );
+        let mut ctl = SloController::new(plane.clone());
+        for i in 0..64u64 {
+            let ms = if i % 2 == 0 { 50.0 } else { 1.0 };
+            for _ in 0..32 {
+                plane.hist.record_ms(ms);
+            }
+            ctl.tick(4);
+        }
+        plane.events().len()
+    });
+
+    // Admission on the submit hot path: alternate admitted and shed
+    // so both branches are priced.
+    {
+        let plane = ControlPlane::new(
+            SloPolicy::target_ms(10, 1_000_000),
+            KnobValues { max_queue: 1_000_000, ..base_knobs() },
+            2,
+            Vec::new(),
+        );
+        b.run("admit_mixed_1k", || {
+            let mut admitted = 0usize;
+            for i in 0..1000usize {
+                let queued = if i % 2 == 0 { 0 } else { 2_000_000 };
+                if plane.admit(1, queued, i as u64 * 1_000).is_ok() {
+                    admitted += 1;
+                }
+            }
+            admitted
+        });
+    }
+
+    // The headline: 2x saturation, controller on vs static plan, in
+    // virtual time.  Same world seed for both so the arrival schedule
+    // is identical.
+    let on = stress(1, true);
+    let off = stress(1, false);
+    println!(
+        "overload @2x saturation ({:.0} rps offered, target {:.1} ms):",
+        on.offered_rps, on.target_ms
+    );
+    println!(
+        "  controller-on : p99 {:.3} ms, served {}, shed {} ({:.0}%)",
+        on.p99_ms,
+        on.served,
+        on.shed,
+        on.shed_fraction * 100.0
+    );
+    println!(
+        "  static plan   : p99 {:.3} ms, served {}, shed {}",
+        off.p99_ms, off.served, off.shed
+    );
+
+    // The acceptance gates — a regression here FAILS the bench run.
+    assert_eq!(on.other_errors, 0, "controller-on run had untyped errors");
+    assert_eq!(off.other_errors, 0, "static run had untyped errors");
+    assert!(
+        on.p99_ms <= 1.5 * on.target_ms,
+        "controller-on p99 {:.3} ms blew 1.5x target {:.3} ms",
+        on.p99_ms,
+        on.target_ms
+    );
+    assert!(
+        off.p99_ms > 5.0 * on.target_ms,
+        "static p99 {:.3} ms did not diverge past 5x target {:.3} ms \
+         (overload too gentle to mean anything)",
+        off.p99_ms,
+        on.target_ms
+    );
+    assert!(on.shed > 0, "controller-on run shed nothing at 2x saturation");
+    assert!(
+        on.shed_fraction <= 0.75,
+        "shed fraction {:.2} unbounded",
+        on.shed_fraction
+    );
+    assert_eq!(off.shed, 0, "static plan has no admission control");
+    assert!(!on.events.is_empty(), "control plane logged no events");
+    // Deterministic replay: same seed, byte-identical control log.
+    let on2 = stress(1, true);
+    assert_eq!(on.events, on2.events, "control event log not reproducible");
+
+    extra.push(("overload_n".into(), Json::num(OVERLOAD_N as f64)));
+    extra.push(("p99_target_ms".into(), Json::num(on.target_ms)));
+    extra.push(("saturation_rps".into(), Json::num(on.saturation_rps)));
+    extra.push(("offered_rps".into(), Json::num(on.offered_rps)));
+    extra.push(("controller_on_p99_ms".into(), Json::num(on.p99_ms)));
+    extra.push((
+        "controller_on_shed_fraction".into(),
+        Json::num(on.shed_fraction),
+    ));
+    extra.push((
+        "controller_on_served".into(),
+        Json::num(on.served as f64),
+    ));
+    extra.push(("static_p99_ms".into(), Json::num(off.p99_ms)));
+    extra.push(("static_served".into(), Json::num(off.served as f64)));
+    extra.push((
+        "static_over_target".into(),
+        Json::num(off.p99_ms / on.target_ms),
+    ));
+    extra.push((
+        "control_events".into(),
+        Json::num(on.events.len() as f64),
+    ));
+
+    b.save_json(
+        Path::new("BENCH_control.json"),
+        extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+    )
+    .expect("writing BENCH_control.json");
+    b.finish();
+}

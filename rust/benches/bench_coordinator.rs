@@ -76,6 +76,40 @@ fn main() {
         ));
     }
 
+    // ROADMAP item 5, bench half: the serving-visible effect of the
+    // on-chip weight cache — the identical design point with the
+    // prefetch window sized to the paper's 4 MiB vs disabled.  The
+    // batch-1 row is the paper's exposed FC memory bound, where the
+    // win is largest; larger batches amortize the stream and the
+    // cache must still never hurt.
+    for &batch in &[1usize, 16] {
+        let cache_on = Simulator::new(&m, &STRATIX10, p)
+            .weight_cache_kib(4096)
+            .run(batch)
+            .time_ms();
+        let cache_off = Simulator::new(&m, &STRATIX10, p)
+            .weight_cache_kib(0)
+            .run(batch)
+            .time_ms();
+        assert!(
+            cache_on <= cache_off,
+            "weight cache slowed serving at b{batch}: \
+             {cache_on:.3} ms > {cache_off:.3} ms"
+        );
+        println!(
+            "sim alexnet b{batch}: cache-on {cache_on:.2} ms, \
+             cache-off {cache_off:.2} ms ({:.3}x)",
+            cache_off / cache_on
+        );
+        extra.push((format!("sim_cache_on_b{batch}_ms"), Json::num(cache_on)));
+        extra
+            .push((format!("sim_cache_off_b{batch}_ms"), Json::num(cache_off)));
+        extra.push((
+            format!("sim_cache_speedup_b{batch}"),
+            Json::num(cache_off / cache_on),
+        ));
+    }
+
     // End-to-end service (needs artifacts).
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -155,6 +189,34 @@ fn main() {
         extra
             .push((format!("serve_sharded_b{batch}_ms"), Json::num(sharded)));
     }
+
+    drop(svc_whole);
+    drop(svc_split);
+
+    // Measured cache axis through the serving stack: two FPGA-paced
+    // boards that differ only in `design.weight_cache_kib`, pinning
+    // that the knob reaches the paced execution path end to end.
+    // (tinynet's cache win is small by construction; the predicted
+    // alexnet rows above carry the headline.)
+    let mut cache_on_plan = plan.clone();
+    cache_on_plan.pace = Pace::Fpga;
+    cache_on_plan.design.weight_cache_kib = 4096;
+    let mut cache_off_plan = cache_on_plan.clone();
+    cache_off_plan.design.weight_cache_kib = 0;
+    let svc_con = cache_on_plan.deploy().unwrap().serve().unwrap();
+    let svc_coff = cache_off_plan.deploy().unwrap().serve().unwrap();
+    let on_ms = b
+        .run("serve_cache_on_b1", || {
+            svc_con.classify(img.clone()).unwrap().latency_ms as u64
+        })
+        .median_ms();
+    let off_ms = b
+        .run("serve_cache_off_b1", || {
+            svc_coff.classify(img.clone()).unwrap().latency_ms as u64
+        })
+        .median_ms();
+    extra.push(("serve_cache_on_b1_ms".to_string(), Json::num(on_ms)));
+    extra.push(("serve_cache_off_b1_ms".to_string(), Json::num(off_ms)));
 
     save(&b, &extra);
     b.finish();

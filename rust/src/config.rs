@@ -55,6 +55,52 @@ impl ShardPolicy {
     }
 }
 
+/// How the admission controller sheds load once the SLO intake bound
+/// is hit (`coordinator::control`).
+///
+/// Either way the rejection is a typed
+/// [`ServeError::Overloaded`](crate::coordinator::ServeError) carrying
+/// a `retry_after_ms` hint — overload degrades to bounded memory and
+/// fast sheds, never an unbounded queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Reject arrivals only once the intake queue bound
+    /// (`SloPolicy::max_queue`) is full.
+    RejectNewest,
+    /// Additionally rate-limit admission with a token bucket refilled
+    /// at this many requests per second (burst = one bucket).
+    RateLimit(u64),
+}
+
+/// The serving SLO the closed-loop controller
+/// (`coordinator::control`) holds: a p99 latency target, a bound on
+/// the intake queue, and the shed policy applied past that bound.
+/// Attached to [`ServingConfig::slo`]; `None` serves open-loop with
+/// the static plan knobs (the pre-control behavior, bit-identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SloPolicy {
+    /// Hold measured p99 at or below this many milliseconds.
+    pub p99_target_ms: u64,
+    /// Admission bound: total queued requests across all boards above
+    /// which new arrivals are shed (the controller may tighten this
+    /// online, never past the configured value).
+    pub max_queue: usize,
+    /// What happens to arrivals past the bound.
+    pub shed_policy: ShedPolicy,
+}
+
+impl SloPolicy {
+    /// An SLO with the given p99 target, a queue bound of `max_queue`,
+    /// shedding by rejection only.
+    pub fn target_ms(p99_target_ms: u64, max_queue: usize) -> Self {
+        SloPolicy {
+            p99_target_ms,
+            max_queue,
+            shed_policy: ShedPolicy::RejectNewest,
+        }
+    }
+}
+
 /// Serving-side knobs for the coordinator.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServingConfig {
@@ -68,6 +114,8 @@ pub struct ServingConfig {
     pub queue_depth: usize,
     /// Multi-board placement of one incoming batch.
     pub shard: ShardPolicy,
+    /// Closed-loop SLO policy (`None` = static open-loop serving).
+    pub slo: Option<SloPolicy>,
 }
 
 impl Default for ServingConfig {
@@ -78,6 +126,7 @@ impl Default for ServingConfig {
             boards: 1,
             queue_depth: 256,
             shard: ShardPolicy::None,
+            slo: None,
         }
     }
 }
@@ -312,6 +361,42 @@ mod tests {
         assert_eq!(ShardPolicy::None.max_shards(), 1);
         assert_eq!(ShardPolicy::SplitOver(0).max_shards(), 1);
         assert_eq!(ShardPolicy::SplitOver(3).max_shards(), 3);
+    }
+
+    #[test]
+    fn slo_policy_roundtrips_in_serving() {
+        // Off by default — the serialized default names no SLO and
+        // parses back to None.
+        let c = RunConfig::default();
+        let j = c.to_json().to_string();
+        let d = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(d.serving.slo, None);
+
+        let mut c = RunConfig::default();
+        c.serving.slo = Some(SloPolicy {
+            p99_target_ms: 25,
+            max_queue: 8,
+            shed_policy: ShedPolicy::RateLimit(500),
+        });
+        let j = c.to_json().to_string();
+        let d = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(d.serving.slo, c.serving.slo);
+
+        c.serving.slo = Some(SloPolicy::target_ms(10, 4));
+        let j = c.to_json().to_string();
+        let d = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(
+            d.serving.slo.unwrap().shed_policy,
+            ShedPolicy::RejectNewest
+        );
+
+        // Unknown nested slo keys fail by name, like every block.
+        let j = Json::parse(
+            r#"{"serving":{"slo":{"p99_target_ms":10,"p99":5}}}"#,
+        )
+        .unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("\"p99\""), "{err}");
     }
 
     #[test]

@@ -34,6 +34,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::board::{BatchInput, BatchResult, BoardHandle, ServeError};
+use super::control::ControlPlane;
 use super::oneshot::{OneShot, OneShotSender};
 use super::router::{Popped, StealPool};
 use crate::util::sim::Nanos;
@@ -255,6 +256,12 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// Batch sizes with an AOT artifact, ascending (must contain 1).
     pub sizes: Vec<usize>,
+    /// Closed-loop control plane.  When set, `max_batch` / `max_wait`
+    /// become *ceilings*: the batcher re-reads the controller's
+    /// adaptive knobs once per flush, and reply latencies are
+    /// recorded into the plane's histogram at scatter.  `None` is the
+    /// static open-loop batcher, bit-identical to pre-control.
+    pub control: Option<Arc<ControlPlane>>,
 }
 
 /// Split `n` queued requests into artifact-supported chunks,
@@ -304,15 +311,27 @@ pub fn run_batcher(
     // The pool's clock drives the flush deadline (and, under the sim
     // harness, parks this thread on the deterministic scheduler).
     let clock = source.pool.clock().clone();
-    let max_wait = cfg.max_wait.as_nanos() as Nanos;
+    let static_wait = cfg.max_wait.as_nanos() as Nanos;
     loop {
         // Block for the first request of a batch.
         let Some(first) = source.recv() else { break };
+        // Effective knobs for THIS flush: under closed-loop control
+        // the controller moves batch size and flush window between
+        // flushes (atomics, read once per flush — never mid-drain, so
+        // one flush sees one consistent pair).  The plan's static
+        // values are the ceilings; open-loop reads them directly.
+        let (max_batch, max_wait) = match &cfg.control {
+            Some(plane) => (
+                plane.knobs.max_batch().clamp(1, cfg.max_batch),
+                plane.knobs.max_wait_nanos().min(static_wait),
+            ),
+            None => (cfg.max_batch, static_wait),
+        };
         pending.clear();
         pending.push(first);
 
         // Eagerly drain whatever is already queued (no waiting).
-        while pending.len() < cfg.max_batch {
+        while pending.len() < max_batch {
             match source.try_recv() {
                 Some(r) => pending.push(r),
                 None => break,
@@ -326,7 +345,7 @@ pub fn run_batcher(
         // until the deadline to accumulate a fuller batch.
         if pending.len() > 1 {
             let deadline = clock.now_nanos().saturating_add(max_wait);
-            while pending.len() < cfg.max_batch {
+            while pending.len() < max_batch {
                 let now = clock.now_nanos();
                 if now >= deadline {
                     break;
@@ -375,6 +394,7 @@ pub fn run_batcher(
                 board.index,
                 classes,
                 clock.now_nanos(),
+                cfg.control.as_deref(),
                 &mut slab,
             );
         }
@@ -383,7 +403,9 @@ pub fn run_batcher(
 
 /// Deliver a batch result (or error) to each of the `n` requesters.
 /// `now` is the resolve timestamp on the service clock (latency is
-/// `now - submitted`).
+/// `now - submitted`).  With a control plane attached, every served
+/// latency is recorded into its histogram — the signal the SLO
+/// controller's windowed p99 steers on.
 fn scatter(
     reqs: impl Iterator<Item = Request>,
     n: usize,
@@ -391,6 +413,7 @@ fn scatter(
     board: usize,
     classes: usize,
     now: Nanos,
+    control: Option<&ControlPlane>,
     slab: &mut ReplySlab,
 ) {
     match result {
@@ -410,6 +433,9 @@ fn scatter(
                     };
                 let argmax = argmax(&logits);
                 let latency_ms = now.saturating_sub(r.submitted) as f64 / 1e6;
+                if let Some(plane) = control {
+                    plane.hist.record_ms(latency_ms);
+                }
                 r.reply.send(Ok(Reply {
                     id: r.id,
                     logits,
@@ -532,7 +558,7 @@ mod tests {
             staging: None,
         };
         let mut slab = ReplySlab::new();
-        scatter(std::iter::once(req), 1, Ok(result), 0, 3, 0, &mut slab);
+        scatter(std::iter::once(req), 1, Ok(result), 0, 3, 0, None, &mut slab);
         let reply = slot.recv().unwrap().unwrap();
         assert_eq!(reply.argmax, 1);
         assert!(Arc::ptr_eq(&reply.logits, &logits), "must share, not copy");
@@ -551,7 +577,16 @@ mod tests {
             staging: None,
         };
         let mut slab = ReplySlab::new();
-        scatter(vec![r1, r2].into_iter(), 2, Ok(result), 0, 2, 0, &mut slab);
+        scatter(
+            vec![r1, r2].into_iter(),
+            2,
+            Ok(result),
+            0,
+            2,
+            0,
+            None,
+            &mut slab,
+        );
         let a = s1.recv().unwrap().unwrap();
         let b = s2.recv().unwrap().unwrap();
         assert_eq!(&a.logits[..], &[0.9, 0.1]);
@@ -567,7 +602,7 @@ mod tests {
         let (s2, r2) = slot_and_req(1);
         let mut slab = ReplySlab::new();
         let err = Err(anyhow::anyhow!("board exploded"));
-        scatter(vec![r1, r2].into_iter(), 2, err, 0, 2, 0, &mut slab);
+        scatter(vec![r1, r2].into_iter(), 2, err, 0, 2, 0, None, &mut slab);
         for s in [s1, s2] {
             let err = s.recv().unwrap().unwrap_err();
             assert!(err.to_string().contains("board exploded"));
@@ -583,7 +618,7 @@ mod tests {
         let (s2, r2) = slot_and_req(1);
         let mut slab = ReplySlab::new();
         let err = Err(anyhow::Error::new(ServeError::BoardLost(5)));
-        scatter(vec![r1, r2].into_iter(), 2, err, 5, 2, 0, &mut slab);
+        scatter(vec![r1, r2].into_iter(), 2, err, 5, 2, 0, None, &mut slab);
         for s in [s1, s2] {
             let err = s.recv().unwrap().unwrap_err();
             assert_eq!(

@@ -75,6 +75,16 @@ pub enum ServeError {
     /// The service is stopping: the request was drained during a
     /// graceful shutdown, not executed.
     Shutdown,
+    /// Admission control shed the request before it touched a queue:
+    /// the intake is over its bound (or the rate limiter is dry).
+    /// Overload degrades to fast typed rejections with a retry hint,
+    /// never to unbounded queue growth.
+    Overloaded {
+        /// Suggested client back-off before retrying.
+        retry_after_ms: u64,
+        /// Requests queued across the service when the shed fired.
+        queue_depth: usize,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -85,6 +95,13 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::Shutdown => {
                 write!(f, "service shutting down: request drained before execution")
+            }
+            ServeError::Overloaded { retry_after_ms, queue_depth } => {
+                write!(
+                    f,
+                    "service overloaded: request shed at admission \
+                     (queue depth {queue_depth}); retry after {retry_after_ms}ms"
+                )
             }
         }
     }

@@ -165,6 +165,43 @@ impl LatencyHistogram {
             .fetch_min(other.min_us.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
+    /// Bucket-wise difference `self - prev`: the samples recorded
+    /// since `prev` was cloned off this histogram.  The SLO
+    /// controller's windowed quantiles come from here — a cumulative
+    /// p99 would average the incident away and the control loop would
+    /// never see it.  Saturating per bucket, so a `prev` that is not
+    /// actually an earlier snapshot degrades to zeros, not wraps.
+    /// Min/max are window-approximate (carried from `self`): the
+    /// controller steers on quantiles, which are exact per window.
+    pub fn delta(&self, prev: &LatencyHistogram) -> LatencyHistogram {
+        let d = LatencyHistogram::new();
+        for (out, (a, b)) in d
+            .buckets
+            .iter()
+            .zip(self.buckets.iter().zip(prev.buckets.iter()))
+        {
+            let diff = a
+                .load(Ordering::Relaxed)
+                .saturating_sub(b.load(Ordering::Relaxed));
+            out.store(diff, Ordering::Relaxed);
+        }
+        d.count.store(
+            self.count().saturating_sub(prev.count()),
+            Ordering::Relaxed,
+        );
+        d.sum_us.store(
+            self.sum_us
+                .load(Ordering::Relaxed)
+                .saturating_sub(prev.sum_us.load(Ordering::Relaxed)),
+            Ordering::Relaxed,
+        );
+        d.max_us
+            .store(self.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        d.min_us
+            .store(self.min_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        d
+    }
+
     pub fn summary(&self) -> LatencySummary {
         LatencySummary {
             count: self.count(),
@@ -289,6 +326,32 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!(a.mean_ms() > 0.0);
+    }
+
+    #[test]
+    fn delta_isolates_the_window() {
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record_ms(1.0); // fast era
+        }
+        let snap = h.clone();
+        for _ in 0..100 {
+            h.record_ms(100.0); // slow era
+        }
+        // Cumulative p50 straddles both eras; the delta sees only the
+        // slow window.
+        let w = h.delta(&snap);
+        assert_eq!(w.count(), 100);
+        let p50 = w.quantile_ms(0.5);
+        assert!((p50 - 100.0).abs() / 100.0 < 0.16, "window p50={p50}");
+        assert!(h.quantile_ms(0.5) < 10.0, "cumulative p50 stays fast");
+        // Mean comes from the window's own sum.
+        assert!((w.mean_ms() - 100.0).abs() / 100.0 < 0.01);
+        // A non-ancestor `prev` saturates to empty, never wraps.
+        let later = h.clone();
+        let z = snap.delta(&later);
+        assert_eq!(z.count(), 0);
+        assert_eq!(z.quantile_ms(0.99), 0.0);
     }
 
     #[test]

@@ -41,6 +41,8 @@
 //!   all recycle through [`service::InferenceService`]'s shared pools.
 //! - [`metrics`] — lock-free atomic latency histograms for the
 //!   reports.
+//! - [`control`] — the closed loop: admission control and the
+//!   SLO-driven knob controller (see below).
 //!
 //! `rust/benches/bench_service.rs` pins the resulting throughput
 //! (BENCH_service.json); `rust/tests/service_hammer.rs` asserts the
@@ -67,6 +69,47 @@
 //! schedules; `ffcnn simtest` fans those seeds across a thread fleet
 //! and prints the failing seed on any violation.
 //!
+//! # Closed-loop control
+//!
+//! With `serving.slo` set (`ffcnn serve --slo-p99 <ms>`), the service
+//! stops trusting the static plan knobs and closes the loop around
+//! measured latency.  A [`ControlPlane`] sits between the submit
+//! paths and the batchers: every `submit*` call passes admission
+//! first (live queue total vs. an adaptive bound, plus an optional
+//! token-bucket rate limit), group submissions are admitted
+//! all-or-nothing, and anything past the bound is shed with a typed
+//! [`ServeError::Overloaded`] carrying a `retry_after_ms` hint.  A
+//! dedicated controller thread ticks every `p99_target / 4` ms on the
+//! injected clock, reads the *windowed* p99 from
+//! [`LatencyHistogram::delta`], and applies a laddered control law —
+//! over target it shrinks the flush window, then the admission bound,
+//! then widens sharding, then caps the batch size at the
+//! `fpga::pipeline::Simulator` cost-oracle point; well under target
+//! it walks the same ladder in reverse, never past the plan's
+//! configured values.  A dead band (`[target/2, target]`) plus a
+//! cooldown after every move keeps the loop from oscillating, and
+//! every decision appends a typed [`ControlEvent`] whose rendered log
+//! replays byte-identically from a sim seed.
+//!
+//! The failure taxonomy the serving stack exposes to clients:
+//!
+//! | error                        | meaning                         | client action          |
+//! |------------------------------|---------------------------------|------------------------|
+//! | [`ServeError::BoardLost`]    | board thread died mid-flight    | retry elsewhere        |
+//! | [`ServeError::Shutdown`]     | service stopping, queue closed  | stop sending           |
+//! | [`ServeError::Overloaded`]   | shed at admission (queue/rate)  | back off `retry_after` |
+//!
+//! `coordinator::sim`'s `overload_shed` / `controller_recovery`
+//! scenarios assert the loop's invariants across seeded schedules;
+//! `rust/benches/bench_control.rs` pins the headline (controller-on
+//! holds p99 near target at 2× saturation while the static plan
+//! diverges) in `BENCH_control.json`.
+//!
+//! [`ControlPlane`]: control::ControlPlane
+//! [`ControlEvent`]: control::ControlEvent
+//! [`LatencyHistogram::delta`]: metrics::LatencyHistogram::delta
+//! [`ServeError::Shutdown`]: board::ServeError::Shutdown
+//! [`ServeError::Overloaded`]: board::ServeError::Overloaded
 //! [`ArcStack`]: pool::ArcStack
 //! [`Padded`]: pool::Padded
 //! [`StripedSlab`]: pool::StripedSlab
@@ -77,6 +120,7 @@
 
 pub mod batcher;
 pub mod board;
+pub mod control;
 pub mod metrics;
 pub mod oneshot;
 pub mod pool;
@@ -90,6 +134,10 @@ pub use batcher::{
 pub use board::{
     BatchInput, BatchResult, BoardHandle, BoardSpec, FaultPlan, Pace,
     ServeError,
+};
+pub use control::{
+    ControlEvent, ControlKnobs, ControlPlane, KnobValues, SloController,
+    TokenBucket,
 };
 pub use sim::{run_scenario, run_seeds, scenario_names, SimtestReport};
 pub use metrics::{LatencyHistogram, LatencySummary};

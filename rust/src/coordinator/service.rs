@@ -31,6 +31,16 @@
 //! service boots without artifacts — `bench_service` saturates this
 //! configuration to measure the coordinator itself.
 //!
+//! # Closed-loop serving
+//!
+//! With `serving.slo` set, a [`ControlPlane`] closes the loop: every
+//! `submit*` call passes admission first (whole groups at once —
+//! all-or-nothing, never a torn batch), overload sheds with typed
+//! [`ServeError::Overloaded`], the batchers read adaptive
+//! batch/window knobs per flush, and a dedicated controller thread
+//! steers the knobs toward the p99 target (see
+//! [`coordinator::control`](super::control)).
+//!
 //! # Simulated time and graceful shutdown
 //!
 //! [`InferenceService::from_plan_with`] injects a
@@ -61,6 +71,7 @@ use super::batcher::{
     argmax, run_batcher, BatcherConfig, Reply, Request, RequestSource,
 };
 use super::board::{BoardHandle, BoardSpec, FaultPlan, Pace, ServeError};
+use super::control::{ControlEvent, ControlPlane, KnobValues, SloController};
 use super::metrics::{LatencyHistogram, LatencySummary};
 use super::oneshot::OneShot;
 use super::pool::{ArcStack, Padded, StripedSlab};
@@ -389,6 +400,9 @@ pub struct InferenceService {
     pool: Arc<StealPool>,
     /// Keep board handles alive (dropping them stops the workers).
     boards: Vec<Arc<BoardHandle>>,
+    /// The closed-loop control plane (`None` = static open-loop
+    /// serving, bit-identical to the pre-control behavior).
+    control: Option<Arc<ControlPlane>>,
 }
 
 impl Drop for InferenceService {
@@ -514,6 +528,45 @@ impl InferenceService {
             policy == Policy::WorkStealing,
             clock.clone(),
         );
+
+        // Closed-loop control (serving.slo): the shared plane the
+        // submit paths (admission), batchers (adaptive knobs, latency
+        // recording) and the controller thread all hang off.  The
+        // cost oracle — Simulator-predicted per-batch latency on the
+        // deployed design point — is computed once at boot and opens
+        // the event log; it only means something when the cycle model
+        // actually paces the boards.
+        let control = plan.serving.slo.map(|slo| {
+            let oracle: Vec<f64> = if pace == Pace::Fpga {
+                let sim = crate::fpga::pipeline::Simulator::new(
+                    &model, device, design,
+                )
+                .policy(plan.overlap);
+                sizes.iter().map(|&b| sim.run(b).time_ms()).collect()
+            } else {
+                Vec::new()
+            };
+            ControlPlane::new(
+                slo,
+                KnobValues {
+                    max_batch: *sizes.last().unwrap(),
+                    max_wait_nanos: Duration::from_millis(
+                        plan.serving.max_wait_ms,
+                    )
+                    .as_nanos() as u64,
+                    max_shards: plan
+                        .serving
+                        .shard
+                        .max_shards()
+                        .min(board_count)
+                        .max(1),
+                    max_queue: slo.max_queue,
+                },
+                board_count,
+                oracle,
+            )
+        });
+
         let mut boards = Vec::new();
         for index in 0..board_count {
             let spec = BoardSpec {
@@ -534,6 +587,7 @@ impl InferenceService {
                 max_batch: *sizes.last().unwrap(),
                 max_wait: Duration::from_millis(plan.serving.max_wait_ms),
                 sizes: sizes.clone(),
+                control: control.clone(),
             };
             let board2 = board.clone();
             let names = names.clone();
@@ -573,6 +627,42 @@ impl InferenceService {
             clock,
             stopping: AtomicBool::new(false),
         });
+
+        // The SLO controller thread: registered LAST (after board-0,
+        // batcher-0, …, board-n, batcher-n) so the sim schedule stays
+        // fully determined by the seed.  It ticks on the injected
+        // clock, reads the live intake depth, and exits on the
+        // stopping flag — before Drop's `drain_others` under a sim
+        // clock, within one tick interval in production.
+        if let Some(plane) = control.clone() {
+            let pool2 = pool.clone();
+            let shared2 = shared.clone();
+            let (ctx, crx) = mpsc::channel::<()>();
+            std::thread::Builder::new()
+                .name("slo-controller".into())
+                .spawn(move || {
+                    let reg = shared2.clock.register("controller");
+                    let _ = ctx.send(());
+                    reg.start();
+                    let mut ctl = SloController::new(plane);
+                    let interval = ctl.tick_interval();
+                    loop {
+                        if shared2.stopping.load(Ordering::Acquire) {
+                            break;
+                        }
+                        shared2.clock.sleep(interval);
+                        if shared2.stopping.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let queued = (0..pool2.boards())
+                            .map(|b| pool2.queued(b))
+                            .sum();
+                        ctl.tick(queued);
+                    }
+                })?;
+            let _ = crx.recv();
+        }
+
         Ok(InferenceService {
             router,
             image_numel,
@@ -582,6 +672,7 @@ impl InferenceService {
             shared,
             pool,
             boards,
+            control,
         })
     }
 
@@ -611,6 +702,34 @@ impl InferenceService {
         self.image_numel
     }
 
+    /// The closed-loop control plane, when serving under an SLO
+    /// (`None` = static open-loop serving).
+    pub fn control(&self) -> Option<&ControlPlane> {
+        self.control.as_deref()
+    }
+
+    /// The controller's typed event log so far (empty when serving
+    /// open-loop) — oracle rows, knob moves, shed summaries.
+    pub fn control_events(&self) -> Vec<ControlEvent> {
+        self.control.as_ref().map(|p| p.events()).unwrap_or_default()
+    }
+
+    /// Admission control: admit a group of `n` requests whole, or
+    /// shed it with a typed [`ServeError::Overloaded`].  Open-loop
+    /// services admit everything (bounded only by the board queues'
+    /// own backpressure, exactly the pre-control behavior).
+    fn admit(&self, n: usize) -> Result<()> {
+        if let Some(plane) = &self.control {
+            let queued: usize = (0..self.pool.boards())
+                .map(|b| self.pool.queued(b))
+                .sum();
+            plane
+                .admit(n, queued, self.shared.clock.now_nanos())
+                .map_err(anyhow::Error::new)?;
+        }
+        Ok(())
+    }
+
     /// Submit one image without blocking for the result.
     ///
     /// Accepts anything convertible into a shared `Arc<[f32]>`; pass
@@ -630,6 +749,7 @@ impl InferenceService {
                 self.image_numel
             ));
         }
+        self.admit(1)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let slot = self.shared.slot();
         let board = self.router.pick();
@@ -692,6 +812,14 @@ impl InferenceService {
             self.shared.retire(scratch);
             return Err(anyhow!("submit_many: empty image set"));
         }
+        // Admission is all-or-nothing: the whole group is checked
+        // before the first request routes, so a shed never tears the
+        // set into an admitted half and a rejected half.  The built
+        // requests (and their reply senders) retire with the scratch.
+        if let Err(e) = self.admit(scratch.reqs.len()) {
+            self.shared.retire(scratch);
+            return Err(e);
+        }
         let n = scratch.reqs.len() as u64;
         let base = self.next_id.fetch_add(n, Ordering::Relaxed);
         for (k, r) in scratch.reqs.iter_mut().enumerate() {
@@ -732,7 +860,15 @@ impl InferenceService {
             ));
         }
         let images = flat.len() / self.image_numel;
-        let want = self.shard.max_shards().min(self.router.boards());
+        self.admit(images)?;
+        // Under closed-loop control the effective shard width is the
+        // controller's knob (it may widen past the plan to spread an
+        // overloaded batch); open-loop keeps the static policy.
+        let want = match &self.control {
+            Some(plane) => plane.knobs.max_shards(),
+            None => self.shard.max_shards(),
+        }
+        .min(self.router.boards());
         // The same clamp/ceil-split the simulator and DSE charge (a
         // 5-image batch over SplitOver(4) dispatches 2+2+1 on THREE
         // boards) — one shared rule, so predicted and dispatched
@@ -1224,6 +1360,120 @@ mod tests {
             if let Err(e) = p.wait() {
                 let typed = e.downcast_ref::<ServeError>();
                 assert!(typed.is_some(), "untyped shutdown failure: {e}");
+            }
+        }
+    }
+
+    /// Engine-less service with the closed loop on.
+    fn slo_serve(slo: crate::config::SloPolicy) -> InferenceService {
+        let mut cfg = RunConfig::default();
+        cfg.model = "tinynet".into();
+        cfg.serving.boards = 1;
+        cfg.serving.max_batch = 4;
+        cfg.serving.max_wait_ms = 1;
+        cfg.serving.slo = Some(slo);
+        let plan =
+            Plan::from_run_config(&cfg, Pace::Immediate, Policy::RoundRobin)
+                .unwrap();
+        InferenceService::from_plan(&plan).unwrap()
+    }
+
+    /// A 1 req/s token bucket (burst 1): the first submit drains it,
+    /// everything after sheds deterministically within the test's
+    /// microsecond lifetime.
+    fn one_rps_slo() -> crate::config::SloPolicy {
+        crate::config::SloPolicy {
+            p99_target_ms: 1_000,
+            max_queue: 1024,
+            shed_policy: crate::config::ShedPolicy::RateLimit(1),
+        }
+    }
+
+    #[test]
+    fn overloaded_shed_downcasts_to_typed_serve_error() {
+        // The admission contract: a shed surfaces through the anyhow
+        // chain as a downcastable ServeError::Overloaded carrying a
+        // usable retry hint — clients back off, they don't parse
+        // strings.
+        let svc = slo_serve(one_rps_slo());
+        let numel = svc.image_numel();
+        let img: Arc<[f32]> = vec![0.2f32; numel].into();
+        let ok = svc.submit(img.clone()).unwrap();
+        let err = svc.submit(img).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::Overloaded { retry_after_ms, .. }) => {
+                assert!(*retry_after_ms >= 1, "vacuous retry hint");
+            }
+            other => panic!("expected typed Overloaded, got {other:?}"),
+        }
+        // The admitted request is untouched by the shed next to it.
+        assert_eq!(ok.wait().unwrap().logits.len(), 10);
+        let plane = svc.control().expect("slo plan boots a control plane");
+        assert_eq!(plane.admitted_total(), 1);
+        assert_eq!(plane.shed_total(), 1);
+    }
+
+    #[test]
+    fn submit_many_sheds_whole_group_or_admits_whole_group() {
+        // All-or-nothing admission: a group that cannot be admitted
+        // in full leaves NOTHING behind — no torn batches, counters
+        // move by the whole group, earlier work is untouched.
+        let svc = slo_serve(one_rps_slo());
+        let numel = svc.image_numel();
+        let img: Arc<[f32]> = vec![0.3f32; numel].into();
+        let first = svc.submit(img.clone()).unwrap(); // drains the bucket
+        let err = svc
+            .submit_many(std::iter::repeat_with(|| img.clone()).take(4))
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<ServeError>(),
+                Some(ServeError::Overloaded { .. })
+            ),
+            "untyped group shed: {err}"
+        );
+        let plane = svc.control().unwrap();
+        assert_eq!(plane.admitted_total(), 1, "no partial admission");
+        assert_eq!(plane.shed_total(), 4, "whole group counts as shed");
+        assert_eq!(first.wait().unwrap().logits.len(), 10);
+    }
+
+    #[test]
+    fn stop_during_shedding_resolves_waiters_and_stays_typed() {
+        // Graceful shutdown while the admission gate is actively
+        // shedding: every admitted waiter resolves (reply or typed
+        // error), and post-stop submits still fail typed — never a
+        // hang, never an untyped error.
+        let svc = slo_serve(one_rps_slo());
+        let numel = svc.image_numel();
+        let img: Arc<[f32]> = vec![0.4f32; numel].into();
+        let mut admitted = vec![svc.submit(img.clone()).unwrap()];
+        let mut sheds = 0u32;
+        for _ in 0..8 {
+            match svc.submit(img.clone()) {
+                Ok(p) => admitted.push(p),
+                Err(e) => {
+                    assert!(
+                        matches!(
+                            e.downcast_ref::<ServeError>(),
+                            Some(ServeError::Overloaded { .. })
+                        ),
+                        "untyped shed during shutdown race: {e}"
+                    );
+                    sheds += 1;
+                }
+            }
+        }
+        assert!(sheds > 0, "rate limit never fired");
+        svc.stop();
+        // stop() consumed the service, but every outstanding waiter
+        // must still resolve — a reply or a typed error, never a hang.
+        for p in admitted {
+            if let Err(e) = p.wait() {
+                assert!(
+                    e.downcast_ref::<ServeError>().is_some(),
+                    "untyped waiter failure after stop: {e}"
+                );
             }
         }
     }

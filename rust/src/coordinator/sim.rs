@@ -33,9 +33,11 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, ensure};
 
 use super::board::{FaultPlan, Pace, ServeError};
+use super::control::ControlEvent;
+use super::metrics::LatencyHistogram;
 use super::router::Policy;
 use super::service::InferenceService;
-use crate::config::{RunConfig, ShardPolicy};
+use crate::config::{RunConfig, ShardPolicy, SloPolicy};
 use crate::data;
 use crate::fpga::pipeline::Simulator;
 use crate::models;
@@ -58,6 +60,8 @@ const SCENARIOS: &[(&str, ScenarioFn)] = &[
     ("bursty_arrivals", bursty_arrivals),
     ("graceful_shutdown", graceful_shutdown),
     ("virtual_oracle", virtual_oracle),
+    ("overload_shed", overload_shed),
+    ("controller_recovery", controller_recovery),
 ];
 
 /// Names of all registered scenarios (the `--scenario` values).
@@ -476,6 +480,226 @@ fn virtual_oracle(clock: &Clock, _seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Outcome of one [`overload_stress`] run — the numbers the
+/// `overload_shed` scenario asserts and `bench_control` pins as the
+/// headline rows (controller-on vs. static at 2x saturation).
+#[derive(Debug, Clone)]
+pub struct OverloadOutcome {
+    /// The SLO the controller-on run served under (derived from the
+    /// cost oracle: 4x the batch-4 latency).
+    pub target_ms: f64,
+    /// Oracle-predicted saturation throughput of the deployment.
+    pub saturation_rps: f64,
+    /// Offered arrival rate (2x saturation).
+    pub offered_rps: f64,
+    /// Requests served Ok.
+    pub served: u64,
+    /// Requests shed at admission with typed `Overloaded`.
+    pub shed: u64,
+    /// Anything else that failed (must stay 0).
+    pub other_errors: u64,
+    /// p99 of the served requests' end-to-end latency.
+    pub p99_ms: f64,
+    /// Shed arrivals over all arrivals.
+    pub shed_fraction: f64,
+    /// The control plane's rendered event log (empty when `slo_on`
+    /// was false).
+    pub events: Vec<String>,
+}
+
+/// Drive one deployment at 2x its oracle-predicted saturation rate
+/// for [`OVERLOAD_N`] open-loop arrivals, with (`slo_on`) or without
+/// the closed loop, and measure what happens — THE tentpole
+/// experiment.  Shared verbatim by the `overload_shed` scenario and
+/// `rust/benches/bench_control.rs`, so the CI-gated bench rows and
+/// the seed-swept invariants can never drift apart.
+///
+/// The flush window is 0 so latency is pure queueing + service; the
+/// board queues are deep (4096) so the *static* plan never blocks the
+/// submitter — its p99 diverges with the backlog, which is exactly
+/// the failure mode admission control exists to cap.
+pub fn overload_stress(clock: &Clock, slo_on: bool) -> Result<OverloadOutcome> {
+    const BOARDS: usize = 2;
+    let mut cfg = RunConfig::default();
+    cfg.model = "tinynet".to_string();
+    cfg.serving.max_batch = 4;
+    cfg.serving.max_wait_ms = 0;
+    cfg.serving.boards = BOARDS;
+    cfg.serving.queue_depth = 4096;
+    let mut plan =
+        Plan::from_run_config(&cfg, Pace::Fpga, Policy::LeastOutstanding)?;
+    let model = models::by_name(&plan.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", plan.model))?;
+    let t4_ms = Simulator::new(&model, plan.device_profile()?, plan.design)
+        .policy(plan.overlap)
+        .run(4)
+        .time_ms();
+    let target_ms = (4.0 * t4_ms).ceil().max(1.0);
+    if slo_on {
+        plan.serving.slo = Some(SloPolicy::target_ms(target_ms as u64, 8));
+    }
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numel = svc.image_numel();
+    // Saturation: both boards executing full batches back to back.
+    let saturation_rps = BOARDS as f64 * 4.0 / t4_ms * 1000.0;
+    let offered_rps = 2.0 * saturation_rps;
+    let gap = Duration::from_secs_f64(1.0 / offered_rps);
+    let mut pending = Vec::new();
+    let (mut shed, mut other_errors) = (0u64, 0u64);
+    for i in 0..OVERLOAD_N {
+        match svc.submit(marked(numel, (i + 1) as f32)) {
+            Ok(p) => pending.push(p),
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::Overloaded { retry_after_ms, .. }) => {
+                    ensure!(
+                        *retry_after_ms >= 1,
+                        "shed without a usable retry hint"
+                    );
+                    shed += 1;
+                }
+                _ => other_errors += 1,
+            },
+        }
+        clock.sleep(gap);
+    }
+    let hist = LatencyHistogram::new();
+    let mut served = 0u64;
+    for p in pending {
+        match p.wait() {
+            Ok(r) => {
+                hist.record_ms(r.latency_ms);
+                served += 1;
+            }
+            Err(_) => other_errors += 1,
+        }
+    }
+    let events = svc
+        .control()
+        .map(|plane| plane.event_log())
+        .unwrap_or_default();
+    // Fold the control trajectory into the sim event log so the
+    // same-seed replay test pins it byte-for-byte.
+    for line in &events {
+        clock.log(|| format!("control: {line}"));
+    }
+    svc.stop();
+    Ok(OverloadOutcome {
+        target_ms,
+        saturation_rps,
+        offered_rps,
+        served,
+        shed,
+        other_errors,
+        p99_ms: hist.quantile_ms(0.99),
+        shed_fraction: shed as f64 / OVERLOAD_N as f64,
+        events,
+    })
+}
+
+/// Arrivals per [`overload_stress`] run: long enough past saturation
+/// that the static plan's backlog latency clears 5x the SLO target
+/// with margin, short enough for the 64-seed CI sweep.
+pub const OVERLOAD_N: usize = 600;
+
+/// Overload at 2x saturation WITH the closed loop: sheds are typed
+/// `Overloaded` (with retry hints), the shed fraction stays bounded,
+/// served p99 holds within 1.5x of the SLO target, and the control
+/// plane logs a deterministic event trail.
+fn overload_shed(clock: &Clock, _seed: u64) -> Result<()> {
+    let out = overload_stress(clock, true)?;
+    ensure!(out.other_errors == 0, "untyped failures: {}", out.other_errors);
+    ensure!(out.shed > 0, "no shedding at 2x saturation");
+    ensure!(
+        out.shed_fraction <= 0.75,
+        "shed too aggressively: {:.2}",
+        out.shed_fraction
+    );
+    ensure!(
+        out.served + out.shed == OVERLOAD_N as u64,
+        "lost requests: served {} + shed {} != {OVERLOAD_N}",
+        out.served,
+        out.shed
+    );
+    ensure!(
+        out.p99_ms <= 1.5 * out.target_ms,
+        "closed-loop p99 {:.3}ms blew the target {:.3}ms",
+        out.p99_ms,
+        out.target_ms
+    );
+    ensure!(!out.events.is_empty(), "control plane logged nothing");
+    Ok(())
+}
+
+/// Overload then calm: the controller tightens under a closed-loop
+/// wave (knob events with reasons), then walks every knob back to the
+/// plan's configured values once sparse traffic shows p99 well under
+/// target — and the whole trajectory replays from the seed.
+fn controller_recovery(clock: &Clock, _seed: u64) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.model = "tinynet".to_string();
+    cfg.serving.max_batch = 4;
+    cfg.serving.max_wait_ms = 1;
+    cfg.serving.boards = 2;
+    cfg.serving.queue_depth = 256;
+    let mut plan =
+        Plan::from_run_config(&cfg, Pace::Fpga, Policy::LeastOutstanding)?;
+    let model = models::by_name(&plan.model)
+        .ok_or_else(|| anyhow!("unknown model {:?}", plan.model))?;
+    let t4_ms = Simulator::new(&model, plan.device_profile()?, plan.design)
+        .policy(plan.overlap)
+        .run(4)
+        .time_ms();
+    let target_ms = ((4.0 * t4_ms).ceil() as u64).max(1);
+    // A deep admission bound: this scenario is about the knob ladder,
+    // not shedding — the wave must be admitted to hurt.
+    plan.serving.slo = Some(SloPolicy::target_ms(target_ms, 512));
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numel = svc.image_numel();
+    let plane = svc.control().ok_or_else(|| anyhow!("no control plane"))?;
+    let base = plane.knobs.snapshot();
+
+    // Overload: one instant closed-loop wave (no virtual time passes
+    // while submitting), queueing ~24 batch-times of backlog — the
+    // drain takes many controller ticks with p99 far over target.
+    let mut pending = Vec::new();
+    for i in 0..192 {
+        pending.push(svc.submit(marked(numel, (i + 1) as f32))?);
+    }
+    for p in pending {
+        p.wait()?;
+    }
+    let tightened = svc
+        .control()
+        .ok_or_else(|| anyhow!("no control plane"))?
+        .events()
+        .iter()
+        .any(|e| matches!(e, ControlEvent::Knob { .. }));
+    ensure!(tightened, "controller never moved a knob under overload");
+
+    // Recovery: sparse singles, one per control tick, each well under
+    // target/2 — the relax ladder must restore the plan exactly.
+    let tick = Duration::from_millis((target_ms / 4).max(1));
+    for i in 0..120 {
+        let r = svc.submit(marked(numel, (i + 1) as f32))?.wait()?;
+        ensure!(
+            r.logits[0] == (i + 1) as f32,
+            "recovery reply {i} lost identity"
+        );
+        clock.sleep(tick);
+    }
+    let plane = svc.control().ok_or_else(|| anyhow!("no control plane"))?;
+    let snap = plane.knobs.snapshot();
+    ensure!(
+        snap == base,
+        "knobs did not recover to the plan: {snap:?} != {base:?}"
+    );
+    for line in plane.event_log() {
+        clock.log(|| format!("control: {line}"));
+    }
+    svc.stop();
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -505,6 +729,22 @@ mod tests {
         assert_eq!(a.error, None, "{:?}", a.error);
         assert_eq!(a.log, b.log);
         assert!(!a.log.is_empty(), "sim run produced no event log");
+    }
+
+    #[test]
+    fn overload_shed_replays_byte_identical() {
+        // The acceptance gate for the control loop's determinism: the
+        // whole trajectory — sheds, knob moves, oracle rows — folds
+        // into the sim event log, and one seed reproduces it
+        // byte-for-byte.
+        let a = run_scenario("overload_shed", 11).unwrap();
+        let b = run_scenario("overload_shed", 11).unwrap();
+        assert_eq!(a.error, None, "{:?}", a.error);
+        assert_eq!(a.log, b.log);
+        assert!(
+            a.log.iter().any(|l| l.contains("control: ")),
+            "control events missing from the sim log"
+        );
     }
 
     #[test]

@@ -109,6 +109,13 @@ pub const WEIGHT_CACHE_CANDIDATES: [usize; 4] = [0, 1024, 4096, 16384];
 /// break-even in (model, batch, boards).
 pub const SHARD_CANDIDATES: [usize; 4] = [1, 2, 4, 8];
 
+/// Prefetch-lookahead candidates: how many groups ahead each donor's
+/// spare DDR slack may stream weight tiles (`MemSystem::plan_prefetch`;
+/// 1 = the classic one-group-ahead window).  Costs no extra M20K —
+/// the window shares the one weight cache — so the sweep is about
+/// where the donated bytes land, not what they cost.
+pub const LOOKAHEAD_CANDIDATES: [usize; 3] = [1, 2, 4];
+
 /// Precision candidates for the extended sweep: the paper's fp32
 /// datapath plus the fixed-point variants the resource model prices
 /// (2 / 4 MACs per DSP, narrower DDR streams).
@@ -125,6 +132,8 @@ pub struct SweepSpace {
     pub depths: Vec<usize>,
     /// On-chip weight prefetch cache sizes (KiB); `[0]` = no cache.
     pub weight_caches: Vec<usize>,
+    /// Prefetch lookahead windows (groups); `[1]` = one group ahead.
+    pub lookaheads: Vec<usize>,
     pub overlaps: Vec<OverlapPolicy>,
     pub precisions: Vec<Precision>,
     /// Batch shard counts (boards per batch); `[1]` = unsharded.
@@ -138,6 +147,7 @@ impl Default for SweepSpace {
             lanes: LANE_CANDIDATES.to_vec(),
             depths: vec![DesignParams::new(1, 1).channel_depth],
             weight_caches: vec![0],
+            lookaheads: vec![1],
             overlaps: vec![OverlapPolicy::WithinGroup],
             precisions: vec![Precision::Fp32],
             shards: vec![1],
@@ -195,20 +205,40 @@ impl SweepSpace {
         }
     }
 
+    /// The weight-cache × lookahead plane under `Full` overlap: how
+    /// much M20K to spend on the prefetch cache AND how many groups
+    /// ahead each donor's slack may fill it
+    /// (`ffcnn dse --lookahead-sweep`).
+    pub fn with_weight_cache_and_lookahead() -> Self {
+        SweepSpace {
+            lookaheads: LOOKAHEAD_CANDIDATES.to_vec(),
+            ..Self::with_weight_cache()
+        }
+    }
+
     /// All grid points in deterministic order (vec outer → lane →
-    /// depth → weight cache → precision → shards → overlap inner;
-    /// overlap innermost keeps the on/off twins adjacent for the
-    /// bench pairing).
+    /// depth → weight cache → lookahead → precision → shards →
+    /// overlap inner; overlap innermost keeps the on/off twins
+    /// adjacent for the bench pairing).
     #[allow(clippy::type_complexity)]
     fn grid(
         &self,
-    ) -> Vec<(usize, usize, usize, usize, Precision, usize, OverlapPolicy)>
-    {
+    ) -> Vec<(
+        usize,
+        usize,
+        usize,
+        usize,
+        usize,
+        Precision,
+        usize,
+        OverlapPolicy,
+    )> {
         let mut out = Vec::with_capacity(
             self.vecs.len()
                 * self.lanes.len()
                 * self.depths.len()
                 * self.weight_caches.len()
+                * self.lookaheads.len()
                 * self.precisions.len()
                 * self.shards.len()
                 * self.overlaps.len(),
@@ -217,10 +247,14 @@ impl SweepSpace {
             for &l in &self.lanes {
                 for &d in &self.depths {
                     for &wc in &self.weight_caches {
-                        for &prec in &self.precisions {
-                            for &k in &self.shards {
-                                for &o in &self.overlaps {
-                                    out.push((v, l, d, wc, prec, k, o));
+                        for &la in &self.lookaheads {
+                            for &prec in &self.precisions {
+                                for &k in &self.shards {
+                                    for &o in &self.overlaps {
+                                        out.push((
+                                            v, l, d, wc, la, prec, k, o,
+                                        ));
+                                    }
                                 }
                             }
                         }
@@ -300,10 +334,10 @@ pub fn explore_space(
     if workers <= 1 || grid.len() <= 1 {
         return grid
             .iter()
-            .map(|&(v, l, d, wc, prec, k, o)| {
+            .map(|&(v, l, d, wc, la, prec, k, o)| {
                 eval_point(
                     model, device, batch, fidelity, ops_per_image, v, l, d,
-                    wc, prec, k, o,
+                    wc, la, prec, k, o,
                 )
             })
             .collect();
@@ -321,7 +355,7 @@ pub fn explore_space(
                 let mut local = Vec::new();
                 loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    let Some(&(v, l, d, wc, prec, k, o)) = grid.get(i)
+                    let Some(&(v, l, d, wc, la, prec, k, o)) = grid.get(i)
                     else {
                         break;
                     };
@@ -329,7 +363,7 @@ pub fn explore_space(
                         i,
                         eval_point(
                             model, device, batch, fidelity, ops_per_image,
-                            v, l, d, wc, prec, k, o,
+                            v, l, d, wc, la, prec, k, o,
                         ),
                     ));
                 }
@@ -355,6 +389,7 @@ fn eval_point(
     lane: usize,
     depth: usize,
     weight_cache_kib: usize,
+    lookahead: usize,
     precision: Precision,
     shards: usize,
     overlap: OverlapPolicy,
@@ -362,6 +397,7 @@ fn eval_point(
     let mut params = DesignParams::new(vec, lane);
     params.channel_depth = depth;
     params.weight_cache_kib = weight_cache_kib;
+    params.prefetch_lookahead = lookahead;
     params.precision = precision;
     // Effective split at this batch — the same `shard_split` the
     // serving dispatch and the simulator use, so a swept `shards = 8`
@@ -762,6 +798,7 @@ mod tests {
                 * space.lanes.len()
                 * space.depths.len()
                 * space.weight_caches.len()
+                * space.lookaheads.len()
                 * space.precisions.len()
                 * space.shards.len()
                 * space.overlaps.len()
@@ -771,19 +808,32 @@ mod tests {
             for &l in &space.lanes {
                 for &d in &space.depths {
                     for &wc in &space.weight_caches {
-                        for &prec in &space.precisions {
-                            for &k in &space.shards {
-                                for &o in &space.overlaps {
-                                    let p = it.next().unwrap();
-                                    assert_eq!(p.params.vec_size, v);
-                                    assert_eq!(p.params.lane_num, l);
-                                    assert_eq!(p.params.channel_depth, d);
-                                    assert_eq!(
-                                        p.params.weight_cache_kib, wc
-                                    );
-                                    assert_eq!(p.params.precision, prec);
-                                    assert_eq!(p.shards, k);
-                                    assert_eq!(p.overlap, o);
+                        for &la in &space.lookaheads {
+                            for &prec in &space.precisions {
+                                for &k in &space.shards {
+                                    for &o in &space.overlaps {
+                                        let p = it.next().unwrap();
+                                        assert_eq!(p.params.vec_size, v);
+                                        assert_eq!(p.params.lane_num, l);
+                                        assert_eq!(
+                                            p.params.channel_depth,
+                                            d
+                                        );
+                                        assert_eq!(
+                                            p.params.weight_cache_kib,
+                                            wc
+                                        );
+                                        assert_eq!(
+                                            p.params.prefetch_lookahead,
+                                            la
+                                        );
+                                        assert_eq!(
+                                            p.params.precision,
+                                            prec
+                                        );
+                                        assert_eq!(p.shards, k);
+                                        assert_eq!(p.overlap, o);
+                                    }
                                 }
                             }
                         }
@@ -1006,6 +1056,56 @@ mod tests {
         assert_eq!(per.len(), 2);
         assert_eq!((per[0].0, per[1].0), (0, 4096));
         assert!(per[1].1.time_ms < per[0].1.time_ms);
+    }
+
+    #[test]
+    fn lookahead_axis_swept_and_free_of_m20k() {
+        // The k-group prefetch window rides the same cache budget: the
+        // lookahead axis must appear in grid order, cost zero extra
+        // M20K, and never slow a point down — a deeper window is a
+        // pure relaxation of the one-ahead DDR bound.
+        let space = SweepSpace {
+            vecs: vec![16],
+            lanes: vec![11],
+            weight_caches: vec![1024],
+            lookaheads: vec![1, 4],
+            overlaps: vec![OverlapPolicy::Full],
+            ..SweepSpace::default()
+        };
+        let pts = explore_space(
+            &crate::models::vgg16(),
+            &STRATIX10,
+            1,
+            Fidelity::PipelineFast,
+            &space,
+        );
+        assert_eq!(pts.len(), 2);
+        let (one, four) = (&pts[0], &pts[1]);
+        assert_eq!(one.params.prefetch_lookahead, 1);
+        assert_eq!(four.params.prefetch_lookahead, 4);
+        assert!(one.feasible && four.feasible);
+        assert_eq!(
+            one.usage.m20k_bytes, four.usage.m20k_bytes,
+            "the window shares the one cache budget"
+        );
+        assert!(
+            four.time_ms <= one.time_ms,
+            "lookahead-4 {} slower than lookahead-1 {}",
+            four.time_ms,
+            one.time_ms
+        );
+        // k = 1 is bit-identical to the pre-lookahead sweep.
+        let classic =
+            SweepSpace { lookaheads: vec![1], ..space.clone() };
+        let base = explore_space(
+            &crate::models::vgg16(),
+            &STRATIX10,
+            1,
+            Fidelity::PipelineFast,
+            &classic,
+        );
+        assert_eq!(base.len(), 1);
+        assert_eq!(base[0].time_ms, one.time_ms);
     }
 
     #[test]

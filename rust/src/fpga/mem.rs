@@ -35,28 +35,37 @@
 //!
 //! ## The prefetch model
 //!
-//! For each group boundary `g-1 → g` the planner computes how many of
-//! group `g`'s weight bytes can already be resident when its MemRd
-//! stream starts:
-//!
-//! ```text
-//! prefetched[g] = min(cache_bytes,                 // on-chip capacity
-//!                     weight_bytes[g],             // the tile itself
-//!                     spare_ddr_bytes[g-1])        // donor port slack
-//! ```
-//!
-//! where the donor's slack is its *idle DDR-port time*: per token the
-//! group advances `max(compute_ii, rd_ii, wr_ii)` cycles while the
-//! port is busy only `rd_ii + wr_ii` of them, so
+//! Each group `d` is a *donor*: its spare DDR-port bytes may stream
+//! the weight tiles of up to the next `k` groups
+//! ([`DesignParams::prefetch_lookahead`]; `k = 1` is the classic
+//! one-group-ahead window) into the cache ahead of time.  The donor's
+//! slack is its *idle DDR-port time*: per token the group advances
+//! `max(compute_ii, rd_ii, wr_ii)` cycles while the port is busy only
+//! `rd_ii + wr_ii` of them, so
 //! `spare = tokens · (bottleneck − rd_ii − wr_ii) · bytes_per_cycle`
 //! (clamped at zero — a memory-bound donor has no slack to donate).
-//! The prefetched bytes move during the donor's window using that
-//! slack, so the donor's modeled rates are untouched; the recipient's
-//! MemRd stream simply shrinks.  This makes the cache a *pure
-//! relaxation*: zero cache reproduces the uncached schedule
-//! bit-for-bit, and more cache never slows a design (the planner is
-//! monotone in `cache_bytes`: a larger cache weakly grows every
-//! `prefetched[g]`, which weakly lowers every MemRd interval).
+//! Donors run in group order, and each donor hands its slack to the
+//! **nearest** unsatisfied recipient first:
+//!
+//! ```text
+//! give(d → r) = min(spare_left[d],                  // donor slack
+//!                   cache_left[d],                  // donor's cache budget
+//!                   min(weight_bytes[r], cache_bytes)
+//!                       − received[r])              // tile + capacity
+//! ```
+//!
+//! so at `k = 1` the plan is **bit-identical** to the historical
+//! single-boundary donation, and a larger `k` only lets slack that the
+//! nearest tile could not absorb flow further ahead — which is where
+//! the tail FC groups of VGG-class models win: one short conv donor
+//! cannot hold the whole FC chain, but the preceding compute-bound
+//! groups together can.  The prefetched bytes move during each donor's
+//! window using slack its schedule already paid for, so the cache
+//! stays a *pure relaxation*: zero cache reproduces the uncached
+//! schedule bit-for-bit, more cache never slows a design, and the plan
+//! is elementwise monotone in both `cache_bytes` and `k` (every
+//! `received[g]` weakly grows, which weakly lowers every MemRd
+//! interval).
 //!
 //! Because prefetch only adjusts the per-segment *rates*, the token
 //! solvers are unchanged: `run_stream_fast` stays O(depth + transient)
@@ -106,12 +115,16 @@ impl WeightCache {
 
 /// What MemRd may fetch ahead of the compute frontier: up to
 /// `depth_tokens` tokens of the *current* group (the channel FIFOs)
-/// plus up to one weight tile of the *next* group (the weight cache).
+/// plus weight tiles of the next `lookahead` groups (the weight
+/// cache).
 #[derive(Debug, Clone, Copy)]
 pub struct PrefetchWindow {
     /// Channel FIFO depth in tokens (`DesignParams::channel_depth`).
     pub depth_tokens: usize,
     pub cache: WeightCache,
+    /// Groups ahead each donor may prefetch weight tiles for
+    /// (`DesignParams::prefetch_lookahead`, >= 1).
+    pub lookahead: usize,
 }
 
 /// DDR traffic of one fused group (components, so the analytic model
@@ -181,6 +194,7 @@ impl<'a> MemSystem<'a> {
             prefetch: PrefetchWindow {
                 depth_tokens: params.channel_depth,
                 cache: WeightCache::from_kib(params.weight_cache_kib),
+                lookahead: params.prefetch_lookahead.max(1),
             },
             device,
             params,
@@ -228,32 +242,57 @@ impl<'a> MemSystem<'a> {
 
     /// Plan the weight-aware prefetch across group boundaries: bytes
     /// of each group's weight tile already on chip when its MemRd
-    /// stream starts (`prefetched[0]` is always 0 — nothing precedes
-    /// the first group).  See the module docs for the
-    /// capacity/tile/donor-slack bound and the monotonicity argument.
+    /// stream starts (`received[0]` is always 0 — nothing precedes
+    /// the first group).  Each donor group hands its spare port bytes
+    /// to the nearest unsatisfied recipients within the
+    /// `prefetch_lookahead` window; see the module docs for the bound
+    /// and the monotonicity arguments (`lookahead = 1` reproduces the
+    /// historical single-boundary donation bit-for-bit).
     pub fn plan_prefetch(&self, streams: &[GroupStream]) -> Vec<u64> {
-        let mut out = vec![0u64; streams.len()];
+        let mut received = vec![0u64; streams.len()];
         let cache = self.prefetch.cache.bytes;
         let bpc = self.ddr.bytes_per_cycle;
-        if cache == 0 || bpc <= 0.0 {
-            return out;
+        if cache == 0 || bpc <= 0.0 || streams.len() < 2 {
+            return received;
         }
-        for g in 1..streams.len() {
-            let d = &streams[g - 1];
-            let toks = d.tokens.max(1) as f64;
+        let k = self.prefetch.lookahead.max(1);
+        for d in 0..streams.len() - 1 {
+            let s = &streams[d];
+            let toks = s.tokens.max(1) as f64;
             // The donor's own received prefetch frees port time, so
             // its slack is computed on its *effective* read stream.
-            let rd_bytes = (d.in_bytes + d.weight_bytes) - out[g - 1];
+            // (`received[d]` is final here: only earlier donors feed
+            // group `d`, and they have all run.)
+            let rd_bytes = (s.in_bytes + s.weight_bytes) - received[d];
             let rd_ii = rd_bytes as f64 / bpc / toks;
-            let wr_ii = d.out_bytes as f64 / bpc / toks;
-            let bottleneck = d.compute_ii.max(rd_ii).max(wr_ii);
+            let wr_ii = s.out_bytes as f64 / bpc / toks;
+            let bottleneck = s.compute_ii.max(rd_ii).max(wr_ii);
             let spare_bytes =
                 ((bottleneck - rd_ii - wr_ii).max(0.0) * toks * bpc).floor();
-            out[g] = (spare_bytes as u64)
-                .min(cache)
-                .min(streams[g].weight_bytes);
+            let mut spare_left = spare_bytes as u64;
+            // One cache budget per donor window: the slack it streams
+            // ahead lands in the same physical cache the nearer tiles
+            // occupy.
+            let mut cache_left = cache;
+            for r in (d + 1)..streams.len().min(d + 1 + k) {
+                // The tile and the cache capacity cap what this
+                // recipient can still hold (a recipient never holds
+                // more than one cache's worth, however many donors
+                // feed it).
+                let want = streams[r]
+                    .weight_bytes
+                    .min(cache)
+                    .saturating_sub(received[r]);
+                let give = spare_left.min(cache_left).min(want);
+                received[r] += give;
+                spare_left -= give;
+                cache_left -= give;
+                if spare_left == 0 || cache_left == 0 {
+                    break;
+                }
+            }
         }
-        out
+        received
     }
 }
 
@@ -487,8 +526,137 @@ mod tests {
         let mut p = DesignParams::new(32, 11);
         p.channel_depth = 777;
         p.weight_cache_kib = 3;
+        p.prefetch_lookahead = 4;
         let mem = MemSystem::new(&ARRIA10, &p);
         assert_eq!(mem.prefetch.depth_tokens, 777);
         assert_eq!(mem.prefetch.cache.bytes, 3 * 1024);
+        assert_eq!(mem.prefetch.lookahead, 4);
+        // A degenerate 0 clamps to the classic one-group window.
+        p.prefetch_lookahead = 0;
+        assert_eq!(MemSystem::new(&ARRIA10, &p).prefetch.lookahead, 1);
+    }
+
+    /// The historical single-boundary donation, kept verbatim as the
+    /// oracle the `lookahead = 1` plan must reproduce bit-for-bit.
+    fn plan_one_ahead(mem: &MemSystem, streams: &[GroupStream]) -> Vec<u64> {
+        let mut out = vec![0u64; streams.len()];
+        let cache = mem.prefetch.cache.bytes;
+        let bpc = mem.ddr.bytes_per_cycle;
+        if cache == 0 || bpc <= 0.0 {
+            return out;
+        }
+        for g in 1..streams.len() {
+            let d = &streams[g - 1];
+            let toks = d.tokens.max(1) as f64;
+            let rd_bytes = (d.in_bytes + d.weight_bytes) - out[g - 1];
+            let rd_ii = rd_bytes as f64 / bpc / toks;
+            let wr_ii = d.out_bytes as f64 / bpc / toks;
+            let bottleneck = d.compute_ii.max(rd_ii).max(wr_ii);
+            let spare_bytes =
+                ((bottleneck - rd_ii - wr_ii).max(0.0) * toks * bpc).floor();
+            out[g] = (spare_bytes as u64)
+                .min(cache)
+                .min(streams[g].weight_bytes);
+        }
+        out
+    }
+
+    /// Deterministic pseudo-random stream chains for the lookahead
+    /// property tests (no RNG dependency: a bare LCG).
+    fn synth_chains() -> Vec<Vec<GroupStream>> {
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            state >> 33
+        };
+        let mut chains = Vec::new();
+        for _ in 0..32 {
+            let n = 2 + (next() % 7) as usize;
+            let mut chain = Vec::with_capacity(n);
+            for _ in 0..n {
+                chain.push(stream(
+                    1 + next() % 10_000,
+                    next() % (1 << 22),
+                    next() % (1 << 26),
+                    next() % (1 << 20),
+                    (next() % 512) as f64,
+                ));
+            }
+            chains.push(chain);
+        }
+        chains
+    }
+
+    #[test]
+    fn lookahead_one_bit_identical_to_single_boundary_plan() {
+        for chain in synth_chains() {
+            for kib in [64usize, 1024, 16384] {
+                let mut p = DesignParams::new(16, 11);
+                p.weight_cache_kib = kib;
+                p.prefetch_lookahead = 1;
+                let mem = mem_with_cache(&p);
+                assert_eq!(
+                    mem.plan_prefetch(&chain),
+                    plan_one_ahead(&mem, &chain),
+                    "kib={kib} chain={chain:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_monotone_in_lookahead() {
+        // Elementwise: every group's received bytes weakly grow with
+        // k — a longer window only adds donations.
+        for chain in synth_chains() {
+            let mut prev: Option<Vec<u64>> = None;
+            for k in 1..=8usize {
+                let mut p = DesignParams::new(16, 11);
+                p.weight_cache_kib = 4096;
+                p.prefetch_lookahead = k;
+                let plan = mem_with_cache(&p).plan_prefetch(&chain);
+                if let Some(prev) = &prev {
+                    for (g, (now, before)) in
+                        plan.iter().zip(prev).enumerate()
+                    {
+                        assert!(
+                            now >= before,
+                            "group {g} shrank {before} -> {now} at k={k}"
+                        );
+                    }
+                }
+                prev = Some(plan);
+            }
+        }
+    }
+
+    #[test]
+    fn lookahead_feeds_starved_tail_groups() {
+        // One long compute-bound conv donor followed by a short FC
+        // tile and two big ones.  The conv's slack dwarfs fc1's tile,
+        // but at k=1 the leftover is simply wasted: fc1 is the only
+        // recipient, and fc1 itself (pure rd-bound stream, no compute)
+        // has no slack of its own to pass on — fc2/fc3 starve.  At
+        // k=3 the same conv slack reaches the whole tail.
+        let mut p = DesignParams::new(16, 11);
+        p.weight_cache_kib = 1 << 20; // 1 GiB: capacity never binds
+        let conv = stream(1 << 20, 1 << 20, 1 << 16, 1 << 20, 256.0);
+        // Pure DDR streams: the port is the bottleneck, zero slack
+        // (even fully prefetched, a zero-compute group donates 0).
+        let fc = |w: u64| stream(100, 0, w, 0, 0.0);
+        let chain = [conv, fc(1 << 20), fc(64 << 20), fc(64 << 20)];
+
+        p.prefetch_lookahead = 1;
+        let near = mem_with_cache(&p).plan_prefetch(&chain);
+        assert_eq!(near[1], 1 << 20, "fc1's whole tile fits the slack");
+        assert_eq!(near[2], 0, "fc1 has no slack to pass on at k=1");
+        assert_eq!(near[3], 0);
+
+        p.prefetch_lookahead = 3;
+        let far = mem_with_cache(&p).plan_prefetch(&chain);
+        assert_eq!(far[1], near[1], "nearest tile still drinks first");
+        assert!(far[2] > 0, "k=3 reaches the starved tail");
+        assert!(far[3] > 0);
+        assert!(far.iter().sum::<u64>() > near.iter().sum::<u64>());
     }
 }

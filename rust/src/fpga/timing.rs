@@ -44,6 +44,12 @@ pub struct DesignParams {
     /// policies it lets MemRd pull the next group's weight tile during
     /// the previous group's compute (see [`super::mem`]).
     pub weight_cache_kib: usize,
+    /// How many groups ahead each donor's spare DDR slack may
+    /// prefetch weight tiles for (1 = the classic one-group-ahead
+    /// window; see `MemSystem::plan_prefetch`).  Only meaningful with
+    /// a nonzero `weight_cache_kib`; costs no extra M20K — the
+    /// lookahead shares the one cache budget.
+    pub prefetch_lookahead: usize,
     /// Host enqueue overhead per fused group, microseconds.
     pub host_us_per_group: f64,
     /// Datapath number format.  The paper deliberately uses fp32
@@ -91,6 +97,7 @@ impl DesignParams {
             lane_num,
             channel_depth: 512,
             weight_cache_kib: 0,
+            prefetch_lookahead: 1,
             host_us_per_group: 10.0,
             precision: Precision::Fp32,
         }
@@ -103,6 +110,12 @@ impl DesignParams {
 
     pub fn with_weight_cache(mut self, kib: usize) -> Self {
         self.weight_cache_kib = kib;
+        self
+    }
+
+    /// Prefetch lookahead window in groups (clamped to >= 1).
+    pub fn with_prefetch_lookahead(mut self, k: usize) -> Self {
+        self.prefetch_lookahead = k.max(1);
         self
     }
 

@@ -15,7 +15,9 @@ use std::path::PathBuf;
 
 use anyhow::anyhow;
 
-use ffcnn::config::{default_artifacts_dir, ServingConfig, ShardPolicy};
+use ffcnn::config::{
+    default_artifacts_dir, ServingConfig, ShardPolicy, SloPolicy,
+};
 use ffcnn::coordinator::{Pace, Policy};
 use ffcnn::data;
 use ffcnn::fpga::device::DEVICES;
@@ -65,6 +67,11 @@ COMMANDS:
                                   classify_batch calls
             [--shards 1]          split each batch over this many boards
                                   (needs --batch-size > 1)
+            [--slo-p99 0]         closed-loop control: admission +
+                                  adaptive knobs hold this p99 target
+                                  (ms; 0 = static plan, no shedding)
+            [--slo-queue 64]      admission bound (max pending
+                                  requests) while the SLO loop is on
   simtest   [--num-seeds 100] [--seed 0]   deterministic robustness
             [--scenario NAME]     run one scenario (default: all; see
                                   --list) on the seeded simulated
@@ -574,6 +581,7 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
              add --batch-size <B> (e.g. --batch-size 64)"
         ));
     }
+    let slo_p99 = args.get_usize("slo-p99", 0)? as u64;
     let serving = ServingConfig {
         boards: args.get_usize("boards", 1)?,
         max_batch: args.get_usize("max-batch", 8)?,
@@ -582,6 +590,10 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
         } else {
             ShardPolicy::None
         },
+        slo: (slo_p99 > 0).then_some(SloPolicy::target_ms(
+            slo_p99,
+            args.get_usize("slo-queue", 64)?,
+        )),
         ..Default::default()
     };
     let plan = Plan::builder()
@@ -677,7 +689,21 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
         1.0,
     );
     println!("{report}");
-    if report.errors > 0 && rate > 0.0 {
+    if let Some(plane) = svc.control() {
+        // With --slo-p99 on, trace "errors" are mostly typed sheds:
+        // show the closed loop's side of the story.
+        println!(
+            "control: {} admitted, {} shed ({:.1}% of arrivals), \
+             {} event(s) logged",
+            plane.admitted_total(),
+            plane.shed_total(),
+            plane.shed_fraction() * 100.0,
+            plane.events().len()
+        );
+        for line in plane.event_log() {
+            println!("  {line}");
+        }
+    } else if report.errors > 0 && rate > 0.0 {
         // Replayability on failure: the trace is fully determined by
         // its seed, so print the exact flags that rebuild it.
         println!(

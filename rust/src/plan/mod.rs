@@ -73,6 +73,7 @@ use anyhow::{anyhow, Context};
 
 use crate::config::{
     default_artifacts_dir, RunConfig, ServingConfig, ShardPolicy,
+    ShedPolicy, SloPolicy,
 };
 use crate::coordinator::{Pace, Policy};
 use crate::fpga::device::{self, DeviceProfile};
@@ -214,10 +215,17 @@ impl Plan {
         if self.design.channel_depth == 0 {
             return Err(anyhow!("channel_depth must be >= 1"));
         }
+        if self.design.prefetch_lookahead == 0 {
+            return Err(anyhow!(
+                "prefetch_lookahead must be >= 1 (1 = the classic \
+                 one-group-ahead window)"
+            ));
+        }
         if self.sweep.vecs.is_empty()
             || self.sweep.lanes.is_empty()
             || self.sweep.depths.is_empty()
             || self.sweep.weight_caches.is_empty()
+            || self.sweep.lookaheads.is_empty()
             || self.sweep.overlaps.is_empty()
             || self.sweep.precisions.is_empty()
             || self.sweep.shards.is_empty()
@@ -229,10 +237,11 @@ impl Plan {
         if self.sweep.vecs.contains(&0)
             || self.sweep.lanes.contains(&0)
             || self.sweep.depths.contains(&0)
+            || self.sweep.lookaheads.contains(&0)
             || self.sweep.shards.contains(&0)
         {
             return Err(anyhow!(
-                "sweep vec/lane/depth/shard values must be >= 1"
+                "sweep vec/lane/depth/lookahead/shard values must be >= 1"
             ));
         }
         if self.serving.max_batch == 0
@@ -248,6 +257,20 @@ impl Plan {
                 "serving.shard: split_over must be >= 1 \
                  (use \"none\" to disable sharding)"
             ));
+        }
+        if let Some(slo) = &self.serving.slo {
+            if slo.p99_target_ms == 0 || slo.max_queue == 0 {
+                return Err(anyhow!(
+                    "serving.slo needs p99_target_ms and max_queue >= 1 \
+                     (use \"off\" to disable the controller)"
+                ));
+            }
+            if let ShedPolicy::RateLimit(0) = slo.shed_policy {
+                return Err(anyhow!(
+                    "serving.slo.shed_policy: rate_limit must be >= 1 \
+                     req/s (use \"reject_newest\" for no rate limit)"
+                ));
+            }
         }
         Ok(())
     }
@@ -627,6 +650,7 @@ pub(crate) fn design_to_json(d: &DesignParams) -> Json {
         ("lane_num", Json::num(d.lane_num as f64)),
         ("channel_depth", Json::num(d.channel_depth as f64)),
         ("weight_cache_kib", Json::num(d.weight_cache_kib as f64)),
+        ("prefetch_lookahead", Json::num(d.prefetch_lookahead as f64)),
         ("host_us_per_group", Json::num(d.host_us_per_group)),
         ("precision", Json::str(precision_to_str(d.precision))),
     ])
@@ -639,6 +663,7 @@ pub(crate) fn design_from_json(v: &Json) -> Result<DesignParams> {
             "lane_num",
             "channel_depth",
             "weight_cache_kib",
+            "prefetch_lookahead",
             "host_us_per_group",
             "precision",
         ],
@@ -653,6 +678,9 @@ pub(crate) fn design_from_json(v: &Json) -> Result<DesignParams> {
     }
     if let Some(w) = v.opt("weight_cache_kib") {
         d.weight_cache_kib = w.as_usize()?;
+    }
+    if let Some(k) = v.opt("prefetch_lookahead") {
+        d.prefetch_lookahead = k.as_usize()?;
     }
     if let Some(h) = v.opt("host_us_per_group") {
         d.host_us_per_group = h.as_f64()?;
@@ -672,6 +700,7 @@ fn sweep_to_json(s: &SweepSpace) -> Json {
         ("lanes", nums(&s.lanes)),
         ("depths", nums(&s.depths)),
         ("weight_caches", nums(&s.weight_caches)),
+        ("lookaheads", nums(&s.lookaheads)),
         ("shards", nums(&s.shards)),
         (
             "overlaps",
@@ -701,6 +730,7 @@ fn sweep_from_json(v: &Json) -> Result<SweepSpace> {
             "lanes",
             "depths",
             "weight_caches",
+            "lookaheads",
             "shards",
             "overlaps",
             "precisions",
@@ -719,6 +749,9 @@ fn sweep_from_json(v: &Json) -> Result<SweepSpace> {
     }
     if let Some(x) = v.opt("weight_caches") {
         s.weight_caches = x.as_usize_vec()?;
+    }
+    if let Some(x) = v.opt("lookaheads") {
+        s.lookaheads = x.as_usize_vec()?;
     }
     if let Some(x) = v.opt("shards") {
         s.shards = x.as_usize_vec()?;
@@ -747,12 +780,20 @@ pub(crate) fn serving_to_json(s: &ServingConfig) -> Json {
         ("boards", Json::num(s.boards as f64)),
         ("queue_depth", Json::num(s.queue_depth as f64)),
         ("shard", shard_to_json(s.shard)),
+        ("slo", slo_to_json(s.slo)),
     ])
 }
 
 pub(crate) fn serving_from_json(v: &Json) -> Result<ServingConfig> {
     v.expect_keys(
-        &["max_batch", "max_wait_ms", "boards", "queue_depth", "shard"],
+        &[
+            "max_batch",
+            "max_wait_ms",
+            "boards",
+            "queue_depth",
+            "shard",
+            "slo",
+        ],
         "serving",
     )?;
     let mut s = ServingConfig::default();
@@ -771,7 +812,73 @@ pub(crate) fn serving_from_json(v: &Json) -> Result<ServingConfig> {
     if let Some(x) = v.opt("shard") {
         s.shard = shard_from_json(x)?;
     }
+    if let Some(x) = v.opt("slo") {
+        s.slo = slo_from_json(x)?;
+    }
     Ok(s)
+}
+
+/// `"off"` or `{"p99_target_ms": t, "max_queue": q, "shed_policy": p}`
+/// — the closed-loop [`SloPolicy`] block on the serving config.
+pub(crate) fn slo_to_json(s: Option<SloPolicy>) -> Json {
+    match s {
+        None => Json::str("off"),
+        Some(slo) => Json::obj(vec![
+            ("p99_target_ms", Json::num(slo.p99_target_ms as f64)),
+            ("max_queue", Json::num(slo.max_queue as f64)),
+            ("shed_policy", shed_to_json(slo.shed_policy)),
+        ]),
+    }
+}
+
+pub(crate) fn slo_from_json(v: &Json) -> Result<Option<SloPolicy>> {
+    if let Ok(s) = v.as_str() {
+        return match s {
+            "off" => Ok(None),
+            other => Err(anyhow!(
+                "unknown slo policy {other:?} (\"off\" or \
+                 {{\"p99_target_ms\": t, ...}})"
+            )),
+        };
+    }
+    v.expect_keys(
+        &["p99_target_ms", "max_queue", "shed_policy"],
+        "serving.slo",
+    )?;
+    // Missing max_queue falls back to a generous bound; the target is
+    // the one field an SLO cannot do without.
+    let mut slo = SloPolicy::target_ms(v.get("p99_target_ms")?.as_u64()?, 64);
+    if let Some(q) = v.opt("max_queue") {
+        slo.max_queue = q.as_usize()?;
+    }
+    if let Some(p) = v.opt("shed_policy") {
+        slo.shed_policy = shed_from_json(p)?;
+    }
+    Ok(Some(slo))
+}
+
+/// `"reject_newest"` or `{"rate_limit": rps}` — the [`ShedPolicy`].
+pub(crate) fn shed_to_json(s: ShedPolicy) -> Json {
+    match s {
+        ShedPolicy::RejectNewest => Json::str("reject_newest"),
+        ShedPolicy::RateLimit(rps) => {
+            Json::obj(vec![("rate_limit", Json::num(rps as f64))])
+        }
+    }
+}
+
+pub(crate) fn shed_from_json(v: &Json) -> Result<ShedPolicy> {
+    if let Ok(s) = v.as_str() {
+        return match s {
+            "reject_newest" => Ok(ShedPolicy::RejectNewest),
+            other => Err(anyhow!(
+                "unknown shed policy {other:?} \
+                 (\"reject_newest\" or {{\"rate_limit\": rps}})"
+            )),
+        };
+    }
+    v.expect_keys(&["rate_limit"], "serving.slo.shed_policy")?;
+    Ok(ShedPolicy::RateLimit(v.get("rate_limit")?.as_u64()?))
 }
 
 /// `"none"` or `{"split_over": k}` — the batch [`ShardPolicy`].
@@ -864,10 +971,47 @@ mod tests {
         plan.sweep = SweepSpace::with_precision_overlap_and_depth();
         plan.sweep.shards = vec![1, 2, 4];
         plan.sweep.weight_caches = vec![0, 1024, 16384];
+        plan.sweep.lookaheads = vec![1, 2, 4];
+        plan.design.prefetch_lookahead = 3;
         plan.serving.boards = 4;
         plan.serving.shard = ShardPolicy::SplitOver(4);
+        plan.serving.slo = Some(SloPolicy {
+            p99_target_ms: 40,
+            max_queue: 16,
+            shed_policy: ShedPolicy::RateLimit(2000),
+        });
         let j = plan.to_json().to_string();
         assert_eq!(Plan::from_json(&Json::parse(&j).unwrap()).unwrap(), plan);
+    }
+
+    #[test]
+    fn degenerate_slo_and_lookahead_rejected() {
+        let mut plan = Plan::default();
+        plan.serving.slo = Some(SloPolicy::target_ms(0, 8));
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.serving.slo = Some(SloPolicy::target_ms(10, 0));
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.serving.slo = Some(SloPolicy {
+            shed_policy: ShedPolicy::RateLimit(0),
+            ..SloPolicy::target_ms(10, 8)
+        });
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.design.prefetch_lookahead = 0;
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.sweep.lookaheads = vec![0];
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.sweep.lookaheads = vec![];
+        assert!(plan.validate().is_err());
+        // Spelled-out "off" round-trips to None.
+        let j = Json::parse(r#"{"serving":{"slo":"off"}}"#).unwrap();
+        assert_eq!(Plan::from_json(&j).unwrap().serving.slo, None);
+        let j = Json::parse(r#"{"serving":{"slo":"on"}}"#).unwrap();
+        assert!(Plan::from_json(&j).is_err());
     }
 
     #[test]
