@@ -1,0 +1,242 @@
+//! Bench: heterogeneous-fleet serving with model affinity
+//! (`coordinator::router::FleetState`).
+//!
+//! Two kinds of rows in `BENCH_fleet.json`:
+//!
+//! - **Measured** (`b.run`): the affinity-aware routing decision on
+//!   the submit hot path — `pick_for` over a warm fleet, alternating
+//!   models so both the warm-hit and the penalty branch are priced.
+//! - **Headline** (extras): a 70/30 alexnet/vgg16 mix served
+//!   closed-loop on a 2-device fleet, in *virtual* time
+//!   (deterministic, engine-less, CI-fast), once with affinity
+//!   routing and once without.  The two boards are same-speed
+//!   (2x stratix10) on purpose: with equal compute everywhere, the
+//!   ONLY difference between the runs is the swap churn, so
+//!   "affinity never worse" is a property of the router, not of a
+//!   lucky device assignment (the heterogeneous case is exercised by
+//!   the `slow_member_death` scenario and `ffcnn dse --fleet-sweep`).
+//!   Affinity keeps each model resident on its own board (zero
+//!   swaps); the baseline ping-pongs models across boards and pays a
+//!   weight-reload stall on every displacement.  The bench FAILS if
+//!   affinity is ever worse on throughput or p99, and the artifact is
+//!   schema-gated in CI via `--check`.
+
+use std::path::Path;
+use std::time::Duration;
+
+use ffcnn::config::RunConfig;
+use ffcnn::coordinator::{
+    InferenceService, LatencyHistogram, Pace, Policy,
+};
+use ffcnn::fpga::timing::ffcnn_stratix10_params;
+use ffcnn::plan::{FleetMember, FleetSpec, Plan};
+use ffcnn::util::bench::Bench;
+use ffcnn::util::sim::Clock;
+use ffcnn::util::Json;
+use ffcnn::Result;
+
+/// Requests per mixed-serve run: enough waves for residency to
+/// matter, short enough to keep the bench CI-fast.
+const MIX_N: usize = 400;
+
+/// Alexnet share of the request mix (vgg16 takes the rest).
+const MIX: [f64; 2] = [0.7, 0.3];
+
+/// Outcome of one closed-loop mixed-model run.
+struct FleetOutcome {
+    served: u64,
+    req_per_s: f64,
+    p99_ms: f64,
+    swaps: u64,
+    swap_stall_ms: f64,
+}
+
+/// The 2-device fleet under test: two stratix10 boards at the paper
+/// design point serving alexnet + vgg16 (same-speed boards so the
+/// affinity-on/off delta is pure swap cost — see the module doc).
+fn mixed_plan(affinity: bool) -> Result<Plan> {
+    let mut cfg = RunConfig::default();
+    cfg.model = "alexnet".to_string();
+    cfg.serving.max_batch = 4;
+    cfg.serving.max_wait_ms = 1;
+    cfg.serving.boards = 2;
+    let mut plan =
+        Plan::from_run_config(&cfg, Pace::Fpga, Policy::LeastOutstanding)?;
+    plan.fleet = Some(FleetSpec {
+        members: vec![FleetMember {
+            device: "stratix10".to_string(),
+            design: ffcnn_stratix10_params(),
+            count: 2,
+        }],
+        models: vec!["alexnet".to_string(), "vgg16".to_string()],
+        affinity,
+    });
+    Ok(plan)
+}
+
+/// Serve [`MIX_N`] requests closed-loop in waves of 4, picking models
+/// by error diffusion over [`MIX`] (exact deterministic shares, no
+/// RNG), and measure virtual-time throughput, p99, and swap cost.
+fn run_mix(clock: &Clock, affinity: bool) -> Result<FleetOutcome> {
+    let plan = mixed_plan(affinity)?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    let numels: Vec<usize> = (0..2)
+        .map(|m| svc.model_dims(m).expect("served model has dims").0)
+        .collect();
+    let sched = clock.sched().expect("sim clock").clone();
+    let hist = LatencyHistogram::new();
+    let mut acc = [0.0f64; 2];
+    let mut served = 0u64;
+    let t0 = sched.now();
+    let mut sent = 0usize;
+    while sent < MIX_N {
+        let wave = 4.min(MIX_N - sent);
+        let mut pending = Vec::with_capacity(wave);
+        for _ in 0..wave {
+            for m in 0..2 {
+                acc[m] += MIX[m];
+            }
+            let m = if acc[0] >= acc[1] { 0 } else { 1 };
+            acc[m] -= 1.0;
+            pending.push(svc.submit_model(m, vec![0.0f32; numels[m]])?);
+        }
+        sent += wave;
+        for p in pending {
+            let r = p.wait()?;
+            hist.record_ms(r.latency_ms);
+            served += 1;
+        }
+    }
+    let elapsed_s = sched.now().saturating_sub(t0) as f64 / 1e9;
+    let fleet = svc.fleet().expect("fleet service exposes FleetState");
+    let out = FleetOutcome {
+        served,
+        req_per_s: served as f64 / elapsed_s.max(f64::MIN_POSITIVE),
+        p99_ms: hist.quantile_ms(0.99),
+        swaps: fleet.total_swaps(),
+        swap_stall_ms: fleet.total_swap_nanos() as f64 / 1e6,
+    };
+    svc.stop();
+    Ok(out)
+}
+
+/// One mixed-serve world: fresh seeded sim clock, registered driver,
+/// the shared closed-loop experiment, clean teardown.
+fn stress(seed: u64, affinity: bool) -> FleetOutcome {
+    let clock = Clock::sim(seed);
+    let sched = clock.sched().expect("sim clock has a scheduler").clone();
+    let reg = clock.register("driver");
+    reg.start();
+    let out = run_mix(&clock, affinity).expect("fleet mix run");
+    let _ = sched.take_log();
+    assert!(!sched.is_poisoned(), "sim scheduler poisoned after run");
+    out
+}
+
+fn main() {
+    // `--check` dry-run: validate the previously written artifact's
+    // schema and exit (the CI drift gate).
+    if ffcnn::util::bench::check_mode(Path::new("BENCH_fleet.json")) {
+        return;
+    }
+    let mut b = Bench::new("fleet").with_budget(Duration::from_secs(2));
+
+    // Routing overhead: the affinity-aware pick on a warm 4-board
+    // fleet, alternating models so warm hits AND penalized misses are
+    // both on the measured path.
+    {
+        use ffcnn::coordinator::router::{FleetState, Router, StealPool};
+        let pool = StealPool::new_pinned(4, 8);
+        let fleet = FleetState::new(4, true);
+        fleet.claim(0, 0);
+        fleet.claim(1, 1);
+        let router =
+            Router::with_fleet(pool, Policy::LeastOutstanding, fleet);
+        b.run("pick_for_warm_fleet_1k", || {
+            let mut acc = 0usize;
+            for i in 0..1000usize {
+                acc += router.pick_for(i % 2);
+            }
+            acc
+        });
+    }
+
+    // The headline: same seed (identical arrival order and mix) with
+    // affinity routing on vs off.
+    let on = stress(1, true);
+    let off = stress(1, false);
+    println!(
+        "mixed serve ({} reqs, {:.0}/{:.0} alexnet/vgg16, \
+         2x stratix10):",
+        MIX_N,
+        MIX[0] * 100.0,
+        MIX[1] * 100.0
+    );
+    println!(
+        "  affinity-on : {:.1} req/s, p99 {:.3} ms, {} swaps \
+         ({:.3} ms stalled)",
+        on.req_per_s, on.p99_ms, on.swaps, on.swap_stall_ms
+    );
+    println!(
+        "  affinity-off: {:.1} req/s, p99 {:.3} ms, {} swaps \
+         ({:.3} ms stalled)",
+        off.req_per_s, off.p99_ms, off.swaps, off.swap_stall_ms
+    );
+
+    // The acceptance gates — a regression here FAILS the bench run.
+    assert_eq!(on.served, MIX_N as u64, "affinity-on lost requests");
+    assert_eq!(off.served, MIX_N as u64, "affinity-off lost requests");
+    assert!(
+        on.req_per_s >= off.req_per_s,
+        "affinity routing lost throughput: {:.1} < {:.1} req/s",
+        on.req_per_s,
+        off.req_per_s
+    );
+    assert!(
+        on.p99_ms <= off.p99_ms,
+        "affinity routing lost p99: {:.3} > {:.3} ms",
+        on.p99_ms,
+        off.p99_ms
+    );
+    assert!(
+        on.swaps < off.swaps,
+        "affinity did not reduce swaps: {} vs {}",
+        on.swaps,
+        off.swaps
+    );
+    assert!(
+        off.swap_stall_ms > 0.0,
+        "baseline paid no swap cost — the mix never displaced anything"
+    );
+
+    let extra: Vec<(String, Json)> = vec![
+        ("mix_n".into(), Json::num(MIX_N as f64)),
+        ("mix_alexnet".into(), Json::num(MIX[0])),
+        ("mix_vgg16".into(), Json::num(MIX[1])),
+        ("affinity_on_req_per_s".into(), Json::num(on.req_per_s)),
+        ("affinity_on_p99_ms".into(), Json::num(on.p99_ms)),
+        ("affinity_on_swaps".into(), Json::num(on.swaps as f64)),
+        (
+            "affinity_on_swap_stall_ms".into(),
+            Json::num(on.swap_stall_ms),
+        ),
+        ("affinity_off_req_per_s".into(), Json::num(off.req_per_s)),
+        ("affinity_off_p99_ms".into(), Json::num(off.p99_ms)),
+        ("affinity_off_swaps".into(), Json::num(off.swaps as f64)),
+        (
+            "affinity_off_swap_stall_ms".into(),
+            Json::num(off.swap_stall_ms),
+        ),
+        (
+            "speedup_req_per_s".into(),
+            Json::num(on.req_per_s / off.req_per_s.max(f64::MIN_POSITIVE)),
+        ),
+    ];
+
+    b.save_json(
+        Path::new("BENCH_fleet.json"),
+        extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+    )
+    .expect("writing BENCH_fleet.json");
+    b.finish();
+}

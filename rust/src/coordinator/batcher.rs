@@ -5,7 +5,11 @@
 //! requests are waiting or the oldest has waited `max_wait`
 //! (deadline-based, vLLM-router style).  A flush is *planned* into the
 //! batch sizes that actually exist as AOT artifacts (largest-fit,
-//! [`plan_chunks`]) — no padding, no recompilation.
+//! [`plan_chunks`]) — no padding, no recompilation.  Under multi-model
+//! serving a flush is first split into maximal same-model runs in
+//! arrival order (an artifact is model-specific, so a chunk never
+//! mixes models); single-model serving sees one run per flush,
+//! bit-identical to the pre-fleet batcher.
 //!
 //! Requests arrive over a [`RequestSource`]: the batcher's board index
 //! inside the shared [`StealPool`] — every routing policy uses the
@@ -43,6 +47,12 @@ use crate::Result;
 /// One in-flight inference request.
 pub struct Request {
     pub id: u64,
+    /// Index into the deployment's served-model table
+    /// ([`crate::plan::Plan::served_models`]); always 0 under
+    /// single-model serving.  The router uses it for cache affinity,
+    /// the batcher for same-model run planning, the board for
+    /// artifact/oracle selection.
+    pub model: usize,
     /// Flat NCHW image, numel = C*H*W of the model input.  Shared:
     /// never copied on the submit/route path.
     pub image: Arc<[f32]>,
@@ -59,6 +69,9 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Reply {
     pub id: u64,
+    /// Served-model index this request ran under (0 when a single
+    /// model is served).
+    pub model: usize,
     /// This request's logits.  For batch-1 chunks this shares the
     /// board's output buffer (no copy); larger chunks borrow a slab
     /// slot.  Clones only bump a refcount.
@@ -254,8 +267,10 @@ impl ReplySlab {
 pub struct BatcherConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
-    /// Batch sizes with an AOT artifact, ascending (must contain 1).
-    pub sizes: Vec<usize>,
+    /// Batch sizes with an AOT artifact, ascending (must contain 1) —
+    /// one list per *served model*, indexed by `Request::model`.
+    /// Single-model serving passes `vec![sizes]`.
+    pub sizes: Vec<Vec<usize>>,
     /// Closed-loop control plane.  When set, `max_batch` / `max_wait`
     /// become *ceilings*: the batcher re-reads the controller's
     /// adaptive knobs once per flush, and reply latencies are
@@ -286,17 +301,29 @@ pub fn plan_chunks_into(mut n: usize, sizes: &[usize], out: &mut Vec<usize>) {
 }
 
 /// Per-board batching loop: drain the source, plan chunks, execute,
-/// scatter replies.  Runs until the pool closes.  `artifact_for_batch`
-/// returns a shared name (`Arc<str>`) so the steady state clones a
-/// refcount, not a `String`.
+/// scatter replies.  Runs until the pool closes.  `artifact_for`
+/// maps `(model, batch)` to a shared artifact name (`Arc<str>`) so
+/// the steady state clones a refcount, not a `String`.  `dims` gives
+/// each served model's `(image_numel, classes)`, indexed like
+/// `cfg.sizes`.
+///
+/// Multi-model flushes are served as maximal *same-model runs* in
+/// arrival order (FIFO preserved; a chunk never mixes models because
+/// each AOT artifact is model-specific).  A single-model batcher sees
+/// exactly one run covering the whole flush — bit-identical to the
+/// pre-fleet path.
 pub fn run_batcher(
     source: RequestSource,
     board: &BoardHandle,
     cfg: &BatcherConfig,
-    artifact_for_batch: impl Fn(usize) -> Arc<str>,
-    image_numel: usize,
-    classes: usize,
+    artifact_for: impl Fn(usize, usize) -> Arc<str>,
+    dims: &[(usize, usize)],
 ) {
+    debug_assert_eq!(
+        cfg.sizes.len(),
+        dims.len(),
+        "one (image_numel, classes) entry per served model"
+    );
     // Everything the loop touches per flush is hoisted and reused:
     // zero allocations per batch once warm.
     let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
@@ -312,6 +339,7 @@ pub fn run_batcher(
     // harness, parks this thread on the deterministic scheduler).
     let clock = source.pool.clock().clone();
     let static_wait = cfg.max_wait.as_nanos() as Nanos;
+    let multi = cfg.sizes.len() > 1;
     loop {
         // Block for the first request of a batch.
         let Some(first) = source.recv() else { break };
@@ -360,43 +388,63 @@ pub fn run_batcher(
             }
         }
 
-        plan_chunks_into(pending.len(), &cfg.sizes, &mut chunks);
-        clock.log(|| {
-            format!("batcher[b{}] flush n={} chunks={:?}", board.index, pending.len(), chunks)
-        });
-        for &chunk in &chunks {
-            let input = if chunk == 1 {
-                // Single-request chunk: share the image, copy nothing.
-                debug_assert_eq!(pending[0].image.len(), image_numel);
-                BatchInput::Shared(pending[0].image.clone())
-            } else {
-                staging.clear();
-                staging.reserve(chunk * image_numel);
-                for r in &pending[..chunk] {
-                    debug_assert_eq!(r.image.len(), image_numel);
-                    staging.extend_from_slice(&r.image);
+        // Serve the flush front-to-back as maximal same-model runs.
+        while !pending.is_empty() {
+            let model = pending[0].model;
+            let run = pending
+                .iter()
+                .take_while(|r| r.model == model)
+                .count();
+            let (image_numel, classes) = dims[model];
+            plan_chunks_into(run, &cfg.sizes[model], &mut chunks);
+            clock.log(|| {
+                if multi {
+                    format!(
+                        "batcher[b{}] flush model={} n={} chunks={:?}",
+                        board.index, model, run, chunks
+                    )
+                } else {
+                    format!(
+                        "batcher[b{}] flush n={} chunks={:?}",
+                        board.index, run, chunks
+                    )
                 }
-                BatchInput::Staged(std::mem::take(&mut staging))
-            };
-            let artifact = artifact_for_batch(chunk);
-            let mut result =
-                board.execute_with(artifact, chunk, input, &slot);
-            if let Ok(batch) = &mut result {
-                // Reclaim the staging buffer for the next gather.
-                if let Some(buf) = batch.staging.take() {
-                    staging = buf;
+            });
+            for &chunk in &chunks {
+                let input = if chunk == 1 {
+                    // Single-request chunk: share the image, copy nothing.
+                    debug_assert_eq!(pending[0].image.len(), image_numel);
+                    BatchInput::Shared(pending[0].image.clone())
+                } else {
+                    staging.clear();
+                    staging.reserve(chunk * image_numel);
+                    for r in &pending[..chunk] {
+                        debug_assert_eq!(r.image.len(), image_numel);
+                        staging.extend_from_slice(&r.image);
+                    }
+                    BatchInput::Staged(std::mem::take(&mut staging))
+                };
+                let artifact = artifact_for(model, chunk);
+                let mut result =
+                    board.execute_with(artifact, model, chunk, input, &slot);
+                if let Ok(batch) = &mut result {
+                    // Reclaim the staging buffer for the next gather.
+                    if let Some(buf) = batch.staging.take() {
+                        staging = buf;
+                    }
                 }
+                scatter(
+                    pending.drain(..chunk),
+                    chunk,
+                    model,
+                    result,
+                    board.index,
+                    classes,
+                    clock.now_nanos(),
+                    cfg.control.as_deref(),
+                    &mut slab,
+                );
             }
-            scatter(
-                pending.drain(..chunk),
-                chunk,
-                result,
-                board.index,
-                classes,
-                clock.now_nanos(),
-                cfg.control.as_deref(),
-                &mut slab,
-            );
         }
     }
 }
@@ -409,6 +457,7 @@ pub fn run_batcher(
 fn scatter(
     reqs: impl Iterator<Item = Request>,
     n: usize,
+    model: usize,
     result: Result<BatchResult>,
     board: usize,
     classes: usize,
@@ -418,6 +467,14 @@ fn scatter(
 ) {
     match result {
         Ok(batch) => {
+            if let Some(plane) = control {
+                // Measured-latency feedback (one sample per executed
+                // batch, not per request): the plane EWMA-corrects its
+                // pipeline oracle toward what boards actually deliver.
+                // No-op unless the plane armed FPGA feedback
+                // (`Pace::Fpga` with an oracle present).
+                plane.observe_fpga_ms(batch.batch, batch.fpga_ms);
+            }
             for (i, r) in reqs.enumerate() {
                 // Batch of one: the whole output buffer is this
                 // request's logits — share it.  Larger batches copy
@@ -438,6 +495,7 @@ fn scatter(
                 }
                 r.reply.send(Ok(Reply {
                     id: r.id,
+                    model,
                     logits,
                     argmax,
                     batch: batch.batch,
@@ -483,6 +541,7 @@ mod tests {
         let slot = Arc::new(OneShot::new());
         let req = Request {
             id,
+            model: 0,
             image: vec![0.0f32; 4].into(),
             submitted: real_now_nanos(),
             reply: slot.sender(),
@@ -536,6 +595,7 @@ mod tests {
         let img: Arc<[f32]> = vec![0.5f32; 8].into();
         let mk = |id: u64| Request {
             id,
+            model: 0,
             image: img.clone(),
             submitted: real_now_nanos(),
             reply: Arc::new(OneShot::new()).sender(),
@@ -558,7 +618,7 @@ mod tests {
             staging: None,
         };
         let mut slab = ReplySlab::new();
-        scatter(std::iter::once(req), 1, Ok(result), 0, 3, 0, None, &mut slab);
+        scatter(std::iter::once(req), 1, 0, Ok(result), 0, 3, 0, None, &mut slab);
         let reply = slot.recv().unwrap().unwrap();
         assert_eq!(reply.argmax, 1);
         assert!(Arc::ptr_eq(&reply.logits, &logits), "must share, not copy");
@@ -580,6 +640,7 @@ mod tests {
         scatter(
             vec![r1, r2].into_iter(),
             2,
+            0,
             Ok(result),
             0,
             2,
@@ -602,7 +663,7 @@ mod tests {
         let (s2, r2) = slot_and_req(1);
         let mut slab = ReplySlab::new();
         let err = Err(anyhow::anyhow!("board exploded"));
-        scatter(vec![r1, r2].into_iter(), 2, err, 0, 2, 0, None, &mut slab);
+        scatter(vec![r1, r2].into_iter(), 2, 0, err, 0, 2, 0, None, &mut slab);
         for s in [s1, s2] {
             let err = s.recv().unwrap().unwrap_err();
             assert!(err.to_string().contains("board exploded"));
@@ -618,7 +679,7 @@ mod tests {
         let (s2, r2) = slot_and_req(1);
         let mut slab = ReplySlab::new();
         let err = Err(anyhow::Error::new(ServeError::BoardLost(5)));
-        scatter(vec![r1, r2].into_iter(), 2, err, 5, 2, 0, None, &mut slab);
+        scatter(vec![r1, r2].into_iter(), 2, 0, err, 5, 2, 0, None, &mut slab);
         for s in [s1, s2] {
             let err = s.recv().unwrap().unwrap_err();
             assert_eq!(

@@ -47,6 +47,18 @@
 //! runs).  A [`FaultPlan`] scripts failures at exact job indices —
 //! stalls, straggler pacing, worker death — so robustness scenarios
 //! exercise the recovery paths on a replayable schedule.
+//!
+//! Multi-model fleets: a board serves any of [`BoardSpec::models`];
+//! each job names its model by index and the worker keeps one cost
+//! oracle per model.  When a shared
+//! [`FleetState`](super::router::FleetState) is attached, executing a
+//! model different from the board's resident one charges a **swap**:
+//! the model's full DDR weight working set (per fused group, via
+//! [`MemSystem`]) over the board's effective DDR bandwidth, added to
+//! the [`Pace::Fpga`] occupancy and recorded as a typed counter the
+//! `ServeReport` surfaces.  A cold board's first load is free (that's
+//! boot-time weight upload), so single-model serving counts exactly
+//! zero swaps.
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
@@ -58,10 +70,12 @@ use anyhow::anyhow;
 
 use super::batcher::ReplySlab;
 use super::oneshot::{OneShot, OneShotSender};
+use super::router::FleetState;
 use crate::fpga::device::DeviceProfile;
+use crate::fpga::mem::MemSystem;
 use crate::fpga::pipeline::Simulator;
 use crate::fpga::timing::{DesignParams, OverlapPolicy};
-use crate::models::Model;
+use crate::models::{fusion_groups, LayerInfo, LayerKind, Model};
 use crate::runtime::Engine;
 use crate::util::sim::{Clock, ClockCondvar, Nanos};
 use crate::Result;
@@ -223,6 +237,9 @@ struct Job {
     /// Shared artifact name: cloning on submit bumps a refcount
     /// instead of copying a `String`.
     artifact: Arc<str>,
+    /// Index into [`BoardSpec::models`] — which served model this
+    /// batch belongs to (0 on the classic single-model path).
+    model: usize,
     batch: usize,
     input: BatchInput,
     reply: OneShotSender<Result<BatchResult>>,
@@ -332,7 +349,9 @@ pub struct BoardHandle {
 pub struct BoardSpec {
     pub index: usize,
     pub artifacts_dir: PathBuf,
-    pub model: Model,
+    /// Models this board can serve; jobs index into this list (the
+    /// classic single-model path is a one-element vec).
+    pub models: Vec<Model>,
     pub device: &'static DeviceProfile,
     pub design: DesignParams,
     pub overlap: OverlapPolicy,
@@ -344,6 +363,10 @@ pub struct BoardSpec {
     pub clock: Clock,
     /// Scripted failures (the default injects nothing).
     pub faults: FaultPlan,
+    /// Shared model-residency state of a multi-model fleet: the
+    /// worker claims residency per job and charges swap costs into
+    /// it.  `None` = single-model path, no swap accounting at all.
+    pub fleet: Option<Arc<FleetState>>,
 }
 
 impl BoardHandle {
@@ -354,6 +377,13 @@ impl BoardHandle {
     /// order is the spawn order — deterministic), then parks until
     /// the scheduler hands it the token.
     pub fn spawn(spec: BoardSpec) -> Result<Self> {
+        if spec.models.is_empty() {
+            return Err(anyhow!(
+                "board-{}: spec.models is empty (a board must serve \
+                 at least one model)",
+                spec.index
+            ));
+        }
         let queue = Arc::new(JobQueue::new(QUEUE_DEPTH, spec.clock.clone()));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let index = spec.index;
@@ -379,15 +409,18 @@ impl BoardHandle {
 
     /// Submit a batch onto a caller-provided reusable reply slot (the
     /// allocation-free path — the batcher re-arms one slot forever).
+    /// `model` indexes [`BoardSpec::models`] (0 on the single-model
+    /// path).
     pub fn submit_to(
         &self,
         artifact: Arc<str>,
+        model: usize,
         batch: usize,
         input: impl Into<BatchInput>,
         slot: &Arc<OneShot<Result<BatchResult>>>,
     ) -> Result<()> {
         let reply = slot.sender();
-        let job = Job { artifact, batch, input: input.into(), reply };
+        let job = Job { artifact, model, batch, input: input.into(), reply };
         if self.queue.push(job).is_err() {
             // Queue closed: the rejected job just dropped its sender,
             // resolving the slot as Dropped — consume that so the slot
@@ -402,11 +435,12 @@ impl BoardHandle {
     pub fn submit(
         &self,
         artifact: Arc<str>,
+        model: usize,
         batch: usize,
         input: impl Into<BatchInput>,
     ) -> Result<Arc<OneShot<Result<BatchResult>>>> {
         let slot = Arc::new(OneShot::new());
-        self.submit_to(artifact, batch, input, &slot)?;
+        self.submit_to(artifact, model, batch, input, &slot)?;
         Ok(slot)
     }
 
@@ -414,11 +448,12 @@ impl BoardHandle {
     pub fn execute_with(
         &self,
         artifact: Arc<str>,
+        model: usize,
         batch: usize,
         input: impl Into<BatchInput>,
         slot: &Arc<OneShot<Result<BatchResult>>>,
     ) -> Result<BatchResult> {
-        self.submit_to(artifact, batch, input, slot)?;
+        self.submit_to(artifact, model, batch, input, slot)?;
         slot.recv_clocked(&self.clock).unwrap_or_else(|| {
             Err(anyhow::Error::new(ServeError::BoardLost(self.index)))
         })
@@ -428,11 +463,12 @@ impl BoardHandle {
     pub fn execute(
         &self,
         artifact: Arc<str>,
+        model: usize,
         batch: usize,
         input: impl Into<BatchInput>,
     ) -> Result<BatchResult> {
         let slot = Arc::new(OneShot::new());
-        self.execute_with(artifact, batch, input, &slot)
+        self.execute_with(artifact, model, batch, input, &slot)
     }
 }
 
@@ -489,23 +525,37 @@ fn worker(
     // thread is still registered, then deregisters.
     let _drain = DrainOnExit(queue.clone());
 
-    // Single serve-side cost oracle (ROADMAP item 5): the pipeline
+    // Serve-side cost oracles (ROADMAP item 5): the pipeline
     // simulator at the board's FULL design point — device, params
-    // including weight_cache_kib, overlap policy — memoized per batch
-    // size.  The prediction is deterministic for a fixed spec, so the
-    // steady state pays one HashMap probe, no simulation.
-    let sim = Simulator::new(&spec.model, spec.device, spec.design)
-        .policy(spec.overlap);
-    let mut fpga_ms_memo: HashMap<usize, f64> = HashMap::new();
+    // including weight_cache_kib, overlap policy — one per served
+    // model, memoized per (model, batch).  The prediction is
+    // deterministic for a fixed spec, so the steady state pays one
+    // HashMap probe, no simulation.
+    let sims: Vec<Simulator> = spec
+        .models
+        .iter()
+        .map(|m| {
+            Simulator::new(m, spec.device, spec.design).policy(spec.overlap)
+        })
+        .collect();
+    let mut fpga_ms_memo: HashMap<(usize, usize), f64> = HashMap::new();
+    // Modeled weight-reload cost per model, charged on swaps (lazy:
+    // a board that never swaps never computes it).
+    let mut swap_ms_memo: HashMap<usize, f64> = HashMap::new();
 
-    let (c, h, w) = spec.model.in_shape;
-    let image_numel = c * h * w;
-    let classes = spec
-        .model
-        .propagate()
-        .last()
-        .map(|l| l.out_shape.numel())
-        .unwrap_or(1);
+    let dims: Vec<(usize, usize)> = spec
+        .models
+        .iter()
+        .map(|m| {
+            let (c, h, w) = m.in_shape;
+            let classes = m
+                .propagate()
+                .last()
+                .map(|l| l.out_shape.numel())
+                .unwrap_or(1);
+            (c * h * w, classes)
+        })
+        .collect();
     // Recycled output buffers for the engine-less Immediate path.
     let mut slab = ReplySlab::new();
     let mut job_no: u64 = 0;
@@ -520,7 +570,33 @@ fn worker(
             drop(job);
             break;
         }
+        // Model swap: executing a model other than the board's
+        // resident one reloads the weight working set from DDR first.
+        // Cold boards load for free (boot-time upload) — `claim` only
+        // reports displacements, so single-model serving charges and
+        // counts exactly zero swaps.
+        let mut swap_ms = 0.0;
+        if let Some(fleet) = &spec.fleet {
+            if fleet.claim(spec.index, job.model) {
+                let ms = *swap_ms_memo.entry(job.model).or_insert_with(|| {
+                    model_swap_ms(
+                        &spec.models[job.model],
+                        spec.device,
+                        &spec.design,
+                    )
+                });
+                swap_ms = ms;
+                fleet.record_swap(spec.index, (ms * 1e6) as u64);
+                spec.clock.log(|| {
+                    format!(
+                        "board[{}] swap model={} cost_ms={:.6}",
+                        spec.index, job.model, ms
+                    )
+                });
+            }
+        }
         let t0 = spec.clock.now_nanos();
+        let (image_numel, classes) = dims[job.model];
         let out: Result<Arc<[f32]>> = match &engine {
             Some(engine) => engine
                 .execute(&job.artifact, job.input.as_slice())
@@ -531,8 +607,8 @@ fn worker(
         };
         let host_ms = spec.clock.now_nanos().saturating_sub(t0) as f64 / 1e6;
         let base_ms = *fpga_ms_memo
-            .entry(job.batch)
-            .or_insert_with(|| sim.run(job.batch).time_ms());
+            .entry((job.model, job.batch))
+            .or_insert_with(|| sims[job.model].run(job.batch).time_ms());
         let fpga_ms = base_ms * spec.faults.fpga_ms_factor;
         if spec.pace == Pace::Fpga {
             // checked_sub, not compare-then-subtract: the elapsed time
@@ -540,8 +616,10 @@ fn worker(
             // bare subtraction would panic the board worker
             // (coordinator hardening pass).  Under a sim clock this
             // sleep advances *virtual* time, reproducing the FPGA's
-            // queueing behaviour on the deterministic scheduler.
-            let target = (fpga_ms * 1e6) as Nanos;
+            // queueing behaviour on the deterministic scheduler.  A
+            // charged model swap extends the occupancy: the board is
+            // busy reloading weights before it computes.
+            let target = ((fpga_ms + swap_ms) * 1e6) as Nanos;
             let elapsed = spec.clock.now_nanos().saturating_sub(t0);
             if let Some(remaining) = target.checked_sub(elapsed) {
                 spec.clock.sleep(Duration::from_nanos(remaining));
@@ -578,6 +656,34 @@ fn worker(
         job.reply.send(result);
         job_no += 1;
     }
+}
+
+/// Modeled cost (ms) of swapping `model`'s weights onto a board: the
+/// model's full DDR weight working set — the sum of every fused
+/// group's `weight_bytes` from [`MemSystem::group_traffic`] at the
+/// board's datapath precision — streamed over the device's effective
+/// DDR bandwidth.  Deterministic for a fixed (model, device, design),
+/// so sim replays charge identical swap costs.
+pub fn model_swap_ms(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+) -> f64 {
+    let infos = model.propagate();
+    let mem = MemSystem::new(device, params);
+    let mut bytes: u64 = 0;
+    for g in fusion_groups(model) {
+        let rows: Vec<&LayerInfo> =
+            g.rows.iter().map(|&i| &infos[i]).collect();
+        let kinds: Vec<&LayerKind> =
+            g.rows.iter().map(|&i| &model.layers[i].kind).collect();
+        bytes += mem.group_traffic(&rows, &kinds, 1).weight_bytes;
+    }
+    let bytes_per_sec = device.ddr_bytes_per_cycle() * device.fmax_mhz * 1e6;
+    if bytes_per_sec <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / bytes_per_sec * 1e3
 }
 
 /// Shape-correct synthetic logits for [`Pace::Immediate`]: logit 0 of
@@ -625,7 +731,7 @@ mod tests {
         Some(BoardSpec {
             index: 0,
             artifacts_dir: dir,
-            model: models::tinynet(),
+            models: vec![models::tinynet()],
             device: &STRATIX10,
             design: ffcnn_stratix10_params(),
             overlap: OverlapPolicy::WithinGroup,
@@ -633,6 +739,7 @@ mod tests {
             warm: vec!["tinynet_b1_jnp".into()],
             clock: Clock::default(),
             faults: FaultPlan::default(),
+            fleet: None,
         })
     }
 
@@ -643,7 +750,7 @@ mod tests {
         BoardSpec {
             index: 0,
             artifacts_dir: PathBuf::from("/nonexistent"),
-            model: models::tinynet(),
+            models: vec![models::tinynet()],
             device: &STRATIX10,
             design,
             overlap,
@@ -651,6 +758,7 @@ mod tests {
             warm: vec![],
             clock: Clock::default(),
             faults: FaultPlan::default(),
+            fleet: None,
         }
     }
 
@@ -670,7 +778,7 @@ mod tests {
         let Some(spec) = spec_or_skip(Pace::None) else { return };
         let board = BoardHandle::spawn(spec).unwrap();
         let input = vec![0.05f32; 3 * 16 * 16];
-        let r = board.execute("tinynet_b1_jnp".into(), 1, input).unwrap();
+        let r = board.execute("tinynet_b1_jnp".into(), 0, 1, input).unwrap();
         assert_eq!(r.logits.len(), 10);
         assert!(r.host_ms > 0.0);
         assert!(r.fpga_ms > 0.0);
@@ -683,13 +791,14 @@ mod tests {
         let r = board
             .execute(
                 "tinynet_b1_jnp".into(),
+                0,
                 1,
                 BatchInput::Staged(vec![0.05f32; 3 * 16 * 16]),
             )
             .unwrap();
         assert_eq!(r.staging.as_ref().map(|v| v.len()), Some(3 * 16 * 16));
         let shared: Arc<[f32]> = vec![0.05f32; 3 * 16 * 16].into();
-        let r2 = board.execute("tinynet_b1_jnp".into(), 1, shared).unwrap();
+        let r2 = board.execute("tinynet_b1_jnp".into(), 0, 1, shared).unwrap();
         assert!(r2.staging.is_none());
     }
 
@@ -708,10 +817,10 @@ mod tests {
         let Some(spec) = spec_or_skip(Pace::None) else { return };
         let board = BoardHandle::spawn(spec).unwrap();
         let s1 = board
-            .submit("tinynet_b1_jnp".into(), 1, vec![0.1f32; 3 * 16 * 16])
+            .submit("tinynet_b1_jnp".into(), 0, 1, vec![0.1f32; 3 * 16 * 16])
             .unwrap();
         let s2 = board
-            .submit("tinynet_b1_jnp".into(), 1, vec![0.2f32; 3 * 16 * 16])
+            .submit("tinynet_b1_jnp".into(), 0, 1, vec![0.2f32; 3 * 16 * 16])
             .unwrap();
         assert!(s1.recv().expect("board alive").is_ok());
         assert!(s2.recv().expect("board alive").is_ok());
@@ -722,7 +831,7 @@ mod tests {
         let spec = BoardSpec {
             index: 9,
             artifacts_dir: PathBuf::from("/nonexistent"),
-            model: models::tinynet(),
+            models: vec![models::tinynet()],
             device: &STRATIX10,
             design: ffcnn_stratix10_params(),
             overlap: OverlapPolicy::WithinGroup,
@@ -730,6 +839,7 @@ mod tests {
             warm: vec![],
             clock: Clock::default(),
             faults: FaultPlan::default(),
+            fleet: None,
         };
         assert!(BoardHandle::spawn(spec).is_err());
     }
@@ -742,14 +852,14 @@ mod tests {
         let mut input = vec![0.0f32; 2 * numel];
         input[0] = 7.0;
         input[numel] = 9.0;
-        let r = board.execute("immediate_b2".into(), 2, input).unwrap();
+        let r = board.execute("immediate_b2".into(), 0, 2, input).unwrap();
         assert_eq!(r.logits.len(), 2 * 10);
         assert_eq!(r.logits[0], 7.0, "image identity carried to logit 0");
         assert_eq!(r.logits[10], 9.0);
         assert!(r.fpga_ms > 0.0, "cost oracle still runs engine-less");
         // Wrong-sized inputs surface as typed engine-style errors.
         let err = board
-            .execute("immediate_b1".into(), 1, vec![0.0f32; 5])
+            .execute("immediate_b1".into(), 0, 1, vec![0.0f32; 5])
             .unwrap_err();
         assert!(err.to_string().contains("input has 5"));
     }
@@ -762,12 +872,12 @@ mod tests {
         // analytic model.
         for cache_kib in [0usize, 512] {
             let spec = immediate_spec(OverlapPolicy::Full, cache_kib);
-            let model = spec.model.clone();
+            let model = spec.models[0].clone();
             let design = spec.design;
             let board = BoardHandle::spawn(spec).unwrap();
             let numel = 3 * 16 * 16;
             let r = board
-                .execute("immediate_b4".into(), 4, vec![0.5f32; 4 * numel])
+                .execute("immediate_b4".into(), 0, 4, vec![0.5f32; 4 * numel])
                 .unwrap();
             let expect = Simulator::new(&model, &STRATIX10, design)
                 .policy(OverlapPolicy::Full)
@@ -804,7 +914,7 @@ mod tests {
         reg.start();
         let board = BoardHandle::spawn(spec).unwrap();
         let numel = 3 * 16 * 16;
-        let r = board.execute("sim_b1".into(), 1, vec![0.5f32; numel]).unwrap();
+        let r = board.execute("sim_b1".into(), 0, 1, vec![0.5f32; numel]).unwrap();
         assert!(r.fpga_ms > 0.0);
         assert_eq!(clock.now_nanos(), (r.fpga_ms * 1e6) as Nanos);
         board.close();
@@ -815,6 +925,54 @@ mod tests {
     }
 
     #[test]
+    fn multi_model_board_charges_swaps_only_on_displacement() {
+        // Two models on one engine-less board: the first touch is a
+        // free cold load, switching models charges exactly one swap,
+        // and staying on a model charges none.
+        let mut spec = immediate_spec(OverlapPolicy::WithinGroup, 0);
+        spec.models = vec![models::tinynet(), models::alexnet()];
+        let fleet = FleetState::new(1, true);
+        spec.fleet = Some(fleet.clone());
+        let board = BoardHandle::spawn(spec).unwrap();
+        let tiny_numel = 3 * 16 * 16;
+        let alex_numel = 3 * 227 * 227;
+
+        board.execute("t_b1".into(), 0, 1, vec![0.5f32; tiny_numel]).unwrap();
+        assert_eq!(fleet.total_swaps(), 0, "cold first load is free");
+
+        let r = board
+            .execute("a_b1".into(), 1, 1, vec![0.5f32; alex_numel])
+            .unwrap();
+        assert_eq!(r.logits.len(), 1000, "alexnet classes, not tinynet's");
+        assert_eq!(fleet.total_swaps(), 1, "model switch is a swap");
+        let expect_ns = (model_swap_ms(
+            &models::alexnet(),
+            &STRATIX10,
+            &ffcnn_stratix10_params(),
+        ) * 1e6) as u64;
+        assert!(expect_ns > 0);
+        assert_eq!(fleet.total_swap_nanos(), expect_ns);
+
+        board.execute("a_b1".into(), 1, 1, vec![0.5f32; alex_numel]).unwrap();
+        assert_eq!(fleet.total_swaps(), 1, "resident model swaps nothing");
+
+        board.execute("t_b1".into(), 0, 1, vec![0.5f32; tiny_numel]).unwrap();
+        assert_eq!(fleet.total_swaps(), 2, "switching back swaps again");
+    }
+
+    #[test]
+    fn swap_cost_scales_with_model_weights_and_bandwidth() {
+        let p = ffcnn_stratix10_params();
+        let tiny = model_swap_ms(&models::tinynet(), &STRATIX10, &p);
+        let alex = model_swap_ms(&models::alexnet(), &STRATIX10, &p);
+        assert!(alex > tiny, "bigger weight set costs more to swap");
+        // Same model over the slower Arria 10 DDR3 costs more.
+        use crate::fpga::device::ARRIA10;
+        let alex_a10 = model_swap_ms(&models::alexnet(), &ARRIA10, &p);
+        assert!(alex_a10 > alex);
+    }
+
+    #[test]
     fn fault_plan_kills_worker_at_exact_job_index() {
         // Job 0 succeeds, job 1 hits the injected death: its waiter
         // resolves as a typed BoardLost, never a hang.
@@ -822,9 +980,9 @@ mod tests {
         spec.faults = FaultPlan::default().die_before(1);
         let board = BoardHandle::spawn(spec).unwrap();
         let numel = 3 * 16 * 16;
-        let ok = board.execute("b1".into(), 1, vec![0.5f32; numel]);
+        let ok = board.execute("b1".into(), 0, 1, vec![0.5f32; numel]);
         assert!(ok.is_ok());
-        let err = board.execute("b1".into(), 1, vec![0.5f32; numel]).unwrap_err();
+        let err = board.execute("b1".into(), 0, 1, vec![0.5f32; numel]).unwrap_err();
         let served = err.downcast_ref::<ServeError>();
         assert_eq!(served, Some(&ServeError::BoardLost(0)));
     }
@@ -833,11 +991,11 @@ mod tests {
     fn fault_plan_straggler_scales_reported_fpga_ms() {
         let mut spec = immediate_spec(OverlapPolicy::WithinGroup, 0);
         spec.faults = FaultPlan::default().straggle(4.0);
-        let model = spec.model.clone();
+        let model = spec.models[0].clone();
         let design = spec.design;
         let board = BoardHandle::spawn(spec).unwrap();
         let numel = 3 * 16 * 16;
-        let r = board.execute("b1".into(), 1, vec![0.5f32; numel]).unwrap();
+        let r = board.execute("b1".into(), 0, 1, vec![0.5f32; numel]).unwrap();
         let base = Simulator::new(&model, &STRATIX10, design)
             .policy(OverlapPolicy::WithinGroup)
             .run(1)

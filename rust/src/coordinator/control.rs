@@ -38,6 +38,13 @@
 //!   Every move starts a cooldown of [`COOLDOWN_TICKS`] ticks so a
 //!   knob's effect is observed before the law moves again — the dead
 //!   band plus cooldown is what keeps the loop from oscillating.
+//! - **Measured feedback** ([`ControlPlane::observe_fpga_ms`]): under
+//!   `Pace::Fpga` the batcher reports each executed batch's measured
+//!   `fpga_ms`; the plane keeps an EWMA of the measured/predicted
+//!   ratio and rescales oracle rows with it before the batch-cap
+//!   decision — so on a heterogeneous fleet (or under model-swap
+//!   stalls) the ladder caps batches against delivered latency, not
+//!   the plan-level prediction.
 //! - **Replay** ([`ControlEvent`]): the startup oracle table and every
 //!   knob move, with old → new values and the reason, append to a
 //!   typed event log with a deterministic `Display`.  Under
@@ -49,7 +56,7 @@
 //! [`ServeError::Overloaded`]: crate::coordinator::board::ServeError::Overloaded
 //! [`ShedPolicy::RateLimit`]: crate::config::ShedPolicy::RateLimit
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -66,6 +73,11 @@ pub const MIN_WAIT_NANOS: u64 = 100_000;
 /// Ticks the controller holds after any knob move so the change can
 /// show up in the next latency window before the law acts again.
 pub const COOLDOWN_TICKS: u32 = 2;
+
+/// EWMA weight for the measured-`fpga_ms` oracle correction: light
+/// enough that the factor converges within a few dozen batches, heavy
+/// enough that one outlier batch cannot swing a knob decision.
+pub const FPGA_CORR_ALPHA: f64 = 0.2;
 
 /// A point-in-time copy of the four adaptive knobs.  The plan's
 /// configured values are kept as one of these (`base`) to bound the
@@ -288,6 +300,16 @@ pub struct ControlPlane {
     /// Simulator-predicted per-batch latency, `oracle[i]` = batch
     /// `i + 1`.  Empty when no cycle model paces the boards.
     oracle: Vec<f64>,
+    /// Measured/predicted latency ratio (EWMA, `f64` bits): the
+    /// scoped correction [`ControlPlane::oracle_batch_for`] applies
+    /// to oracle rows.  1.0 until armed and observed.
+    fpga_corr: AtomicU64,
+    /// Whether measured-`fpga_ms` feedback is armed.  The service
+    /// arms it only under `Pace::Fpga` (with an oracle present) —
+    /// under `Immediate`/`Host` pacing the measured number is not
+    /// commensurable with the cycle model and the correction must
+    /// stay 1.0.
+    fpga_feedback: AtomicBool,
     events: Mutex<Vec<ControlEvent>>,
     shed: AtomicU64,
     admitted: AtomicU64,
@@ -324,6 +346,8 @@ impl ControlPlane {
             boards: boards.max(1),
             bucket,
             oracle,
+            fpga_corr: AtomicU64::new(1.0f64.to_bits()),
+            fpga_feedback: AtomicBool::new(false),
             events: Mutex::new(events),
             shed: AtomicU64::new(0),
             admitted: AtomicU64::new(0),
@@ -375,16 +399,66 @@ impl ControlPlane {
         ((queued.max(1) as f64 * per_item_ms).ceil() as u64).clamp(1, 1000)
     }
 
-    /// Largest batch size whose oracle-predicted latency fits
-    /// `budget_ms` (1 when no row fits or no oracle exists).
+    /// Largest batch size whose oracle-predicted latency — rescaled
+    /// by the measured-feedback correction — fits `budget_ms` (1 when
+    /// no row fits or no oracle exists).
     fn oracle_batch_for(&self, budget_ms: f64) -> usize {
+        let corr = self.fpga_correction();
         let mut best = 1;
         for (i, &ms) in self.oracle.iter().enumerate() {
-            if ms <= budget_ms {
+            if ms * corr <= budget_ms {
                 best = i + 1;
             }
         }
         best
+    }
+
+    /// Arm measured-`fpga_ms` feedback.  Call only when boards pace
+    /// on the cycle model (`Pace::Fpga`); a plane without oracle rows
+    /// stays unarmed regardless.
+    pub fn arm_fpga_feedback(&self) {
+        if !self.oracle.is_empty() {
+            self.fpga_feedback.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Current measured/predicted correction factor (1.0 until armed
+    /// and fed).
+    pub fn fpga_correction(&self) -> f64 {
+        f64::from_bits(self.fpga_corr.load(Ordering::Relaxed))
+    }
+
+    /// Record one executed batch's measured FPGA latency against the
+    /// oracle row for that batch size (PR 8 headroom: close the loop
+    /// between the cost model and what boards actually deliver — on a
+    /// heterogeneous fleet the plan-level oracle only describes one
+    /// member, and model-swap stalls push real occupancy past it).
+    /// The batcher calls this once per executed batch at scatter.
+    /// Scoped: the EWMA ratio only multiplies oracle rows inside
+    /// [`ControlPlane::oracle_batch_for`]; admission, the latency
+    /// histogram and the p99 window are untouched.
+    pub fn observe_fpga_ms(&self, batch: usize, measured_ms: f64) {
+        if !self.fpga_feedback.load(Ordering::Relaxed) {
+            return;
+        }
+        let Some(&predicted) = self.oracle.get(batch.wrapping_sub(1))
+        else {
+            return;
+        };
+        if !(predicted > 0.0) || !(measured_ms > 0.0) {
+            return;
+        }
+        let ratio = measured_ms / predicted;
+        let _ = self.fpga_corr.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |bits| {
+                let old = f64::from_bits(bits);
+                let new =
+                    (1.0 - FPGA_CORR_ALPHA) * old + FPGA_CORR_ALPHA * ratio;
+                Some(new.to_bits())
+            },
+        );
     }
 
     /// Requests shed at admission so far.
@@ -811,6 +885,31 @@ mod tests {
         let (_, _, log2) = run();
         assert_eq!(log, log2);
         assert!(!log.is_empty());
+    }
+
+    #[test]
+    fn fpga_feedback_converges_and_rescales_the_oracle() {
+        let plane = plane_with(SloPolicy::target_ms(10, 64));
+        // Unarmed (Immediate/Host pacing): observations are ignored.
+        plane.observe_fpga_ms(2, 100.0);
+        assert_eq!(plane.fpga_correction(), 1.0);
+        plane.arm_fpga_feedback();
+        // Boards consistently deliver 1.5x the oracle (a slower fleet
+        // member, swap stalls): the EWMA converges onto the ratio.
+        for _ in 0..60 {
+            plane.observe_fpga_ms(2, 3.0); // oracle row for b2 is 2.0
+        }
+        let corr = plane.fpga_correction();
+        assert!((corr - 1.5).abs() < 1e-3, "corr = {corr}");
+        // The batch-cap decision now uses corrected rows: budget 5ms
+        // picks batch 2 (4ms * 1.5 = 6 > 5), where the uncorrected
+        // oracle picked batch 3.
+        assert_eq!(plane.oracle_batch_for(5.0), 2);
+        // Degenerate or out-of-range observations are ignored.
+        plane.observe_fpga_ms(0, 1.0);
+        plane.observe_fpga_ms(99, 1.0);
+        plane.observe_fpga_ms(2, -1.0);
+        assert_eq!(plane.fpga_correction(), corr);
     }
 
     #[test]

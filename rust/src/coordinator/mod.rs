@@ -24,7 +24,20 @@
 //!   round-robin / least-outstanding / work-stealing with admission
 //!   control.  Queue depths and outstanding counts are padded atomics
 //!   read lock-free; [`Router::route_many`] lands a whole group under
-//!   ONE lock, one counter update and one consumer wake.
+//!   ONE lock, one counter update and one consumer wake.  Under a
+//!   [`FleetSpec`](crate::plan::FleetSpec) the router also carries a
+//!   shared [`FleetState`]: each board's *resident model* is tracked,
+//!   and `pick_for(model)` charges a board holding a *different*
+//!   model a fixed phantom-load penalty (`AFFINITY_SLACK`), so equal
+//!   load keeps every model on its warm board while real imbalance
+//!   (beyond the slack) still wins — affinity is a preference, never
+//!   a pin.  When a dispatch does displace a resident model, the
+//!   board charges a swap stall (the model's weight-tile bytes over
+//!   the board's DDR bandwidth), logs a typed `swap` event, and bumps
+//!   the per-board swap counters that [`ServeReport`] surfaces as
+//!   `swaps` / `swap_ms`.  `plan.fleet.affinity = false` disables the
+//!   routing preference only — swap costs are still charged, which is
+//!   exactly what `rust/benches/bench_fleet.rs` measures.
 //! - [`batcher`] — dynamic batching onto the AOT'd batch sizes over a
 //!   zero-copy data plane (`Arc<[f32]>` images/logits, reusable
 //!   staging buffers, slab-recycled reply logits, chunk plans and the
@@ -98,6 +111,14 @@
 //! | [`ServeError::BoardLost`]    | board thread died mid-flight    | retry elsewhere        |
 //! | [`ServeError::Shutdown`]     | service stopping, queue closed  | stop sending           |
 //! | [`ServeError::Overloaded`]   | shed at admission (queue/rate)  | back off `retry_after` |
+//! | bad model index (`submit_model`) | index ≥ models served        | fix the caller         |
+//! | unknown device/model in plan | named-field error at deploy     | fix the [`FleetSpec`](crate::plan::FleetSpec) |
+//!
+//! Degradations that are *not* errors still surface in the report: a
+//! model swap (a board reloading weights after displacement) shows up
+//! as [`ServeReport`] `swaps` / `swap_ms` and as a `swap` line in the
+//! sim event log — rising swap time under a mixed workload means the
+//! fleet is too small for its model set, not that anything failed.
 //!
 //! `coordinator::sim`'s `overload_shed` / `controller_recovery`
 //! scenarios assert the loop's invariants across seeded schedules;
@@ -143,7 +164,7 @@ pub use sim::{run_scenario, run_seeds, scenario_names, SimtestReport};
 pub use metrics::{LatencyHistogram, LatencySummary};
 pub use oneshot::{OneShot, OneShotSender};
 pub use pool::{ArcStack, Padded, StripedSlab};
-pub use router::{Policy, Router, RouterGuard, StealPool};
+pub use router::{FleetState, Policy, Router, RouterGuard, StealPool};
 pub use service::{
     InferenceService, PendingBatch, PendingReply, PendingSet, ServeReport,
 };

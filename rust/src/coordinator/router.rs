@@ -27,6 +27,21 @@
 //! one consumer wake — the amortizations `bench_service` measures.
 //! Outstanding counters are decremented by [`RouterGuard`] when the
 //! reply resolves.
+//!
+//! ## Model affinity (heterogeneous fleets)
+//!
+//! A multi-model fleet adds a second routing signal: which model's
+//! weight tiles each board's `weight_cache_kib` currently holds.
+//! [`FleetState`] tracks the resident model per board (plus typed
+//! swap counters); [`Router::least_loaded_for`] /
+//! [`Router::pick_for`] rank boards by load **plus an affinity
+//! penalty** — a board that would have to swap weights is charged
+//! [`AFFINITY_SLACK`] phantom requests, so warm boards win until they
+//! run more than that far ahead of the coldest peer (affinity never
+//! starves a warm board into a hotspot).  A board with *nothing*
+//! resident loads for free (first touch is boot-time weight upload,
+//! not a swap), which keeps the swap counter at exactly 0 when a
+//! single model is served — the parity suite pins that.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -51,6 +66,104 @@ pub enum Popped {
     Req(Request),
     TimedOut,
     Closed,
+}
+
+/// Sentinel resident-model value: nothing loaded yet.
+const NO_MODEL: usize = usize::MAX;
+
+/// Load penalty (in outstanding requests) charged to a board that
+/// would have to swap models before serving: warm boards are
+/// preferred until they are this many requests more loaded than the
+/// best cold/mismatched alternative.
+pub const AFFINITY_SLACK: usize = 8;
+
+/// Shared per-board model residency for a multi-model fleet: which
+/// model's weights each board currently holds, plus typed swap
+/// counters (count + modeled DDR reload time).  One instance is
+/// shared by the router (routing reads), the board workers (claim +
+/// charge at execute time) and the service report (counters).
+pub struct FleetState {
+    /// Resident model index per board (`NO_MODEL` = cold).
+    resident: Box<[Padded<AtomicUsize>]>,
+    /// Model swaps per board (cold first-touch loads excluded).
+    swaps: Box<[Padded<AtomicU64>]>,
+    /// Modeled nanoseconds spent reloading weights, per board.
+    swap_nanos: Box<[Padded<AtomicU64>]>,
+    /// Whether routing should prefer warm boards.
+    affinity: bool,
+}
+
+impl FleetState {
+    pub fn new(boards: usize, affinity: bool) -> Arc<Self> {
+        Arc::new(FleetState {
+            resident: (0..boards)
+                .map(|_| Padded::new(AtomicUsize::new(NO_MODEL)))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            swaps: (0..boards)
+                .map(|_| Padded::new(AtomicU64::new(0)))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            swap_nanos: (0..boards)
+                .map(|_| Padded::new(AtomicU64::new(0)))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            affinity,
+        })
+    }
+
+    pub fn boards(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Whether routing prefers warm boards (the plan's
+    /// `fleet.affinity` knob; swap *accounting* happens either way).
+    pub fn affinity(&self) -> bool {
+        self.affinity
+    }
+
+    /// The model currently resident on `board` (`None` = cold).
+    pub fn resident(&self, board: usize) -> Option<usize> {
+        match self.resident[board].load(Ordering::Relaxed) {
+            NO_MODEL => None,
+            m => Some(m),
+        }
+    }
+
+    /// Whether serving `model` on `board` would require a weight
+    /// swap.  A cold board loads for free (boot-time upload, not a
+    /// swap).
+    pub fn needs_swap(&self, board: usize, model: usize) -> bool {
+        let r = self.resident[board].load(Ordering::Relaxed);
+        r != NO_MODEL && r != model
+    }
+
+    /// Board worker entry point: make `model` resident on `board` and
+    /// report whether that displaced a *different* model (a swap the
+    /// worker must charge).  Cold first-touch returns false.
+    pub fn claim(&self, board: usize, model: usize) -> bool {
+        let prev = self.resident[board].swap(model, Ordering::Relaxed);
+        prev != NO_MODEL && prev != model
+    }
+
+    /// Record one charged swap on `board` (`nanos` = modeled DDR
+    /// weight-reload time).
+    pub fn record_swap(&self, board: usize, nanos: u64) {
+        self.swaps[board].fetch_add(1, Ordering::Relaxed);
+        self.swap_nanos[board].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn swaps_of(&self, board: usize) -> u64 {
+        self.swaps[board].load(Ordering::Relaxed)
+    }
+
+    pub fn total_swaps(&self) -> u64 {
+        self.swaps.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_swap_nanos(&self) -> u64 {
+        self.swap_nanos.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
 }
 
 struct PoolState {
@@ -344,6 +457,9 @@ pub struct Router {
     outstanding: Vec<Arc<Padded<AtomicUsize>>>,
     next: Padded<AtomicU64>,
     policy: Policy,
+    /// Model residency of a multi-model fleet (`None` = the classic
+    /// single-model path; routing is then purely load-based).
+    fleet: Option<Arc<FleetState>>,
 }
 
 /// RAII guard for one routed shard (or single request): decrements
@@ -376,12 +492,45 @@ impl Router {
             outstanding,
             next: Padded::new(AtomicU64::new(0)),
             policy,
+            fleet: None,
         }
     }
 
     /// Pool-backed router with the work-stealing policy.
     pub fn stealing(pool: Arc<StealPool>) -> Self {
         Self::new(pool, Policy::WorkStealing)
+    }
+
+    /// Attach the fleet's model-residency state: `pick_for` /
+    /// `least_loaded_for` become affinity-aware (when
+    /// `fleet.affinity()` is on), and board workers share the same
+    /// state to claim residency and charge swaps.
+    pub fn with_fleet(
+        pool: Arc<StealPool>,
+        policy: Policy,
+        fleet: Arc<FleetState>,
+    ) -> Self {
+        let mut r = Self::new(pool, policy);
+        r.fleet = Some(fleet);
+        r
+    }
+
+    /// The fleet residency state, when serving a multi-model fleet.
+    pub fn fleet(&self) -> Option<&Arc<FleetState>> {
+        self.fleet.as_ref()
+    }
+
+    /// Affinity penalty of serving `model` on board `i`: warm (or
+    /// cold — first touch is free) boards are unpenalized, a board
+    /// holding a *different* model is charged [`AFFINITY_SLACK`]
+    /// phantom requests.
+    fn penalty(&self, i: usize, model: usize) -> usize {
+        match &self.fleet {
+            Some(f) if f.affinity() && f.needs_swap(i, model) => {
+                AFFINITY_SLACK
+            }
+            _ => 0,
+        }
     }
 
     pub fn boards(&self) -> usize {
@@ -402,6 +551,27 @@ impl Router {
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, c)| c.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    /// [`Router::pick`] for a specific model: on a multi-model fleet
+    /// with affinity on, boards that would have to swap weights are
+    /// charged [`AFFINITY_SLACK`] phantom requests, so a warm board
+    /// wins unless it has fallen that far behind.  `RoundRobin` (and
+    /// single-model fleets) ignore the model and route exactly like
+    /// [`Router::pick`].
+    pub fn pick_for(&self, model: usize) -> usize {
+        match self.policy {
+            Policy::RoundRobin => self.pick(),
+            Policy::LeastOutstanding | Policy::WorkStealing => self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, c)| {
+                    c.load(Ordering::Relaxed) + self.penalty(*i, model)
+                })
                 .map(|(i, _)| i)
                 .unwrap_or(0),
         }
@@ -503,6 +673,43 @@ impl Router {
         }
     }
 
+    /// [`Router::least_loaded_into`] for a specific model: ranks by
+    /// `outstanding + affinity penalty` (see [`Router::pick_for`]),
+    /// so a sharded or bulk dispatch prefers boards already holding
+    /// the model's weights.  Identical to `least_loaded_into` on a
+    /// single-model fleet or with affinity off — the parity suite
+    /// relies on that.
+    pub fn least_loaded_for(
+        &self,
+        model: usize,
+        k: usize,
+        out: &mut Vec<usize>,
+    ) {
+        if self.fleet.as_ref().map_or(true, |f| !f.affinity()) {
+            return self.least_loaded_into(k, out);
+        }
+        out.clear();
+        let boards = self.boards();
+        let k = k.clamp(1, boards.max(1));
+        for _ in 0..k.min(boards) {
+            let mut best: Option<(usize, usize)> = None;
+            for i in 0..boards {
+                if out.contains(&i) {
+                    continue;
+                }
+                let load = self.outstanding[i].load(Ordering::Relaxed)
+                    + self.penalty(i, model);
+                if best.map_or(true, |(_, bl)| load < bl) {
+                    best = Some((i, load));
+                }
+            }
+            match best {
+                Some((i, _)) => out.push(i),
+                None => break,
+            }
+        }
+    }
+
     /// Non-blocking admission: rejects immediately on a full queue.
     pub fn try_route(&self, req: Request) -> Result<RouterGuard> {
         let idx = self.pick();
@@ -536,6 +743,7 @@ mod tests {
         let slot = Arc::new(OneShot::new());
         Request {
             id,
+            model: 0,
             image: Vec::new().into(),
             submitted: real_now_nanos(),
             reply: slot.sender(),
@@ -861,6 +1069,94 @@ mod tests {
             Popped::Req(r) => assert_eq!(r.id, 5),
             _ => panic!("queued work must still pop at a zero deadline"),
         }
+    }
+
+    // ------------------------------------------------- model affinity
+
+    #[test]
+    fn fleet_state_claims_and_counts_swaps() {
+        let fleet = FleetState::new(2, true);
+        // Cold first touch: residency set, no swap.
+        assert_eq!(fleet.resident(0), None);
+        assert!(!fleet.claim(0, 3));
+        assert_eq!(fleet.resident(0), Some(3));
+        // Same model again: no swap.
+        assert!(!fleet.claim(0, 3));
+        // Different model: a swap the worker must charge.
+        assert!(fleet.claim(0, 5));
+        fleet.record_swap(0, 1_000);
+        assert_eq!(fleet.swaps_of(0), 1);
+        assert_eq!(fleet.swaps_of(1), 0);
+        assert_eq!(fleet.total_swaps(), 1);
+        assert_eq!(fleet.total_swap_nanos(), 1_000);
+    }
+
+    #[test]
+    fn affinity_prefers_warm_board_under_equal_load() {
+        let pool = StealPool::new_pinned(3, 8);
+        let fleet = FleetState::new(3, true);
+        fleet.claim(1, 7); // board 1 holds model 7
+        fleet.claim(2, 9); // board 2 holds model 9
+        let router =
+            Router::with_fleet(pool, Policy::LeastOutstanding, fleet);
+        // Equal (zero) load everywhere: model 7 goes to its warm
+        // board, model 9 to its own; an unseen model lands on the
+        // cold board 0 (free first touch).
+        assert_eq!(router.pick_for(7), 1);
+        assert_eq!(router.pick_for(9), 2);
+        assert_eq!(router.pick_for(4), 0);
+        let mut out = Vec::new();
+        router.least_loaded_for(9, 1, &mut out);
+        assert_eq!(out, vec![2]);
+        // k > 1 still orders warm-first.
+        router.least_loaded_for(7, 3, &mut out);
+        assert_eq!(out[0], 1);
+    }
+
+    #[test]
+    fn affinity_yields_once_warm_board_is_slack_behind() {
+        let pool = StealPool::new_pinned(2, 8);
+        let fleet = FleetState::new(2, true);
+        fleet.claim(0, 1); // board 0 warm for model 1
+        fleet.claim(1, 2);
+        let router =
+            Router::with_fleet(pool, Policy::LeastOutstanding, fleet);
+        // Warm board slightly loaded (< slack): still wins.
+        router.outstanding[0]
+            .store(AFFINITY_SLACK - 1, Ordering::Relaxed);
+        assert_eq!(router.pick_for(1), 0);
+        // Warm board more than slack ahead: the mismatched board is
+        // cheaper even paying the swap penalty.
+        router.outstanding[0]
+            .store(AFFINITY_SLACK + 1, Ordering::Relaxed);
+        assert_eq!(router.pick_for(1), 1);
+    }
+
+    #[test]
+    fn affinity_off_routes_purely_by_load() {
+        let pool = StealPool::new_pinned(2, 8);
+        let fleet = FleetState::new(2, false);
+        fleet.claim(1, 7);
+        let router =
+            Router::with_fleet(pool.clone(), Policy::LeastOutstanding, fleet);
+        router.outstanding[1].store(1, Ordering::Relaxed);
+        // Board 1 is warm for model 7 but affinity is off: load wins.
+        assert_eq!(router.pick_for(7), 0);
+        let mut out = Vec::new();
+        router.least_loaded_for(7, 2, &mut out);
+        assert_eq!(out, vec![0, 1]);
+    }
+
+    #[test]
+    fn no_fleet_pick_for_matches_pick() {
+        let pool = StealPool::new_pinned(3, 8);
+        let router = Router::new(pool, Policy::LeastOutstanding);
+        router.outstanding[0].store(2, Ordering::Relaxed);
+        assert_eq!(router.pick_for(42), router.pick());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        router.least_loaded_for(42, 3, &mut a);
+        router.least_loaded_into(3, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -41,6 +41,17 @@
 //! steers the knobs toward the p99 target (see
 //! [`coordinator::control`](super::control)).
 //!
+//! # Heterogeneous fleets and multi-model serving
+//!
+//! A plan carrying a [`crate::plan::FleetSpec`] boots each board with
+//! its own member's `(device, design)` pair and its own per-model
+//! cost oracles, serves every model in `served_models()` (submit via
+//! [`submit_model`]/[`classify_model`]; the classic single-image API
+//! is model 0), and shares one [`FleetState`] between the router
+//! (model/cache-affinity routing), the board workers (swap
+//! accounting) and the [`ServeReport`] (swap counters).  A fleet-less
+//! plan takes exactly the pre-fleet path.
+//!
 //! # Simulated time and graceful shutdown
 //!
 //! [`InferenceService::from_plan_with`] injects a
@@ -56,6 +67,8 @@
 //!
 //! [`classify`]: InferenceService::classify
 //! [`submit`]: InferenceService::submit
+//! [`submit_model`]: InferenceService::submit_model
+//! [`classify_model`]: InferenceService::classify_model
 //! [`submit_many`]: InferenceService::submit_many
 //! [`classify_batch`]: InferenceService::classify_batch
 //! [`run_trace`]: InferenceService::run_trace
@@ -75,7 +88,7 @@ use super::control::{ControlEvent, ControlPlane, KnobValues, SloController};
 use super::metrics::{LatencyHistogram, LatencySummary};
 use super::oneshot::OneShot;
 use super::pool::{ArcStack, Padded, StripedSlab};
-use super::router::{Policy, Router, RouterGuard, StealPool};
+use super::router::{FleetState, Policy, Router, RouterGuard, StealPool};
 use crate::config::{RunConfig, ShardPolicy};
 use crate::data::TraceRequest;
 use crate::models;
@@ -98,6 +111,11 @@ pub struct ServeReport {
     pub fpga_busy_ms: f64,
     /// Sum of host PJRT time across requests' batches, ms.
     pub host_busy_ms: f64,
+    /// Model swaps charged across the fleet (always 0 under
+    /// single-model serving or without a [`FleetState`]).
+    pub swaps: u64,
+    /// Total model-swap stall charged across the fleet, ms.
+    pub swap_ms: f64,
 }
 
 impl std::fmt::Display for ServeReport {
@@ -112,8 +130,9 @@ impl std::fmt::Display for ServeReport {
         writeln!(f, "latency: {}", self.latency)?;
         write!(
             f,
-            "busy: fpga(sim)={:.1}ms host(pjrt)={:.1}ms",
-            self.fpga_busy_ms, self.host_busy_ms
+            "busy: fpga(sim)={:.1}ms host(pjrt)={:.1}ms \
+             swaps={} swap_ms={:.1}",
+            self.fpga_busy_ms, self.host_busy_ms, self.swaps, self.swap_ms
         )
     }
 }
@@ -387,8 +406,13 @@ impl PendingBatch {
 /// The running service.
 pub struct InferenceService {
     router: Router,
+    /// Per served model `(image_numel, classes)`; entry 0 is the
+    /// primary model — what the classic single-model API talks to.
+    dims: Vec<(usize, usize)>,
+    /// Primary model's image numel (`dims[0].0`, kept hot for the
+    /// single-model submit path).
     image_numel: usize,
-    /// Logits per image (the model's class count).
+    /// Logits per image of the primary model (`dims[0].1`).
     classes: usize,
     /// Multi-board placement of one incoming batch
     /// ([`InferenceService::submit_batch`]).
@@ -449,20 +473,30 @@ impl InferenceService {
         faults: &[FaultPlan],
     ) -> Result<Self> {
         // Serving consistency first (boards provisioned, shard policy
-        // within them): a bad plan fails with a named-field error
-        // before any engine spawns — and never panics in the router.
+        // within them, fleet members/models known): a bad plan fails
+        // with a named-field error before any engine spawns — and
+        // never panics in the router.
         plan.validate_deploy()?;
-        let model = models::by_name(&plan.model)
-            .ok_or_else(|| anyhow!("unknown model {:?}", plan.model))?;
-        let device = plan.device_profile()?;
-        let design = plan.design;
+        let served = plan.served_models();
+        let mut fleet_models = Vec::with_capacity(served.len());
+        for name in &served {
+            fleet_models.push(
+                models::by_name(name)
+                    .ok_or_else(|| anyhow!("unknown model {:?}", name))?,
+            );
+        }
+        // One (device, design) per board, in fleet-member order —
+        // `serving.boards` copies of the plan's own pair without a
+        // fleet (the classic homogeneous path).
+        let boards_hw = plan.resolved_boards()?;
         let pace = plan.pace;
         let policy = plan.policy;
+        let multi = fleet_models.len() > 1;
 
-        // Which batch sizes are servable, and under what artifact
-        // name.  Immediate pace is engine-less — and so is every
-        // simulated-clock service (boards never open an engine under
-        // Clock::Sim): every size up to max_batch exists by
+        // Which batch sizes are servable per model, and under what
+        // artifact name.  Immediate pace is engine-less — and so is
+        // every simulated-clock service (boards never open an engine
+        // under Clock::Sim): every size up to max_batch exists by
         // construction, under synthetic names.
         // Otherwise discover what the manifest actually has —
         // preferring the packed-weights layout (it executes
@@ -470,54 +504,73 @@ impl InferenceService {
         // batched-upload warm-up win), but only when it covers every
         // batch size the per-tensor layout offers: mixing layouts
         // would keep two device-resident copies of the weights.
-        let (sizes, names, warm) = if pace == Pace::Immediate || clock.is_sim() {
-            let sizes: Vec<usize> =
-                (1..=plan.serving.max_batch.max(1)).collect();
-            let names: HashMap<usize, Arc<str>> = sizes
-                .iter()
-                .map(|&b| {
-                    (b, Arc::<str>::from(format!("immediate_b{b}")))
-                })
-                .collect();
-            (sizes, names, Vec::new())
+        let mut sizes: Vec<Vec<usize>> =
+            Vec::with_capacity(fleet_models.len());
+        let mut names: HashMap<(usize, usize), Arc<str>> = HashMap::new();
+        let mut warm: Vec<String> = Vec::new();
+        if pace == Pace::Immediate || clock.is_sim() {
+            for m in 0..fleet_models.len() {
+                let s: Vec<usize> =
+                    (1..=plan.serving.max_batch.max(1)).collect();
+                for &b in &s {
+                    let name = if multi {
+                        format!("immediate_m{m}_b{b}")
+                    } else {
+                        format!("immediate_b{b}")
+                    };
+                    names.insert((m, b), Arc::<str>::from(name));
+                }
+                sizes.push(s);
+            }
         } else {
             let manifest = Manifest::load(&plan.artifacts_dir)?;
-            let mut plain: HashMap<usize, String> = HashMap::new();
-            let mut packed: HashMap<usize, String> = HashMap::new();
-            for a in manifest.artifacts.iter().filter(|a| {
-                a.model == plan.model
-                    && a.conv_impl == plan.conv_impl
-                    && a.batch <= plan.serving.max_batch
-            }) {
-                let layout =
-                    if a.packed_weights { &mut packed } else { &mut plain };
-                layout.entry(a.batch).or_insert_with(|| a.name.clone());
+            for (m, model_name) in served.iter().enumerate() {
+                let mut plain: HashMap<usize, String> = HashMap::new();
+                let mut packed: HashMap<usize, String> = HashMap::new();
+                for a in manifest.artifacts.iter().filter(|a| {
+                    a.model == *model_name
+                        && a.conv_impl == plan.conv_impl
+                        && a.batch <= plan.serving.max_batch
+                }) {
+                    let layout =
+                        if a.packed_weights { &mut packed } else { &mut plain };
+                    layout.entry(a.batch).or_insert_with(|| a.name.clone());
+                }
+                let use_packed = !packed.is_empty()
+                    && plain.keys().all(|b| packed.contains_key(b));
+                let by_batch = if use_packed { packed } else { plain };
+                let mut s: Vec<usize> = by_batch.keys().copied().collect();
+                s.sort_unstable();
+                if s.first() != Some(&1) {
+                    return Err(anyhow!(
+                        "no batch-1 artifact for {} ({}); have {:?}",
+                        model_name,
+                        plan.conv_impl,
+                        s
+                    ));
+                }
+                warm.extend(s.iter().map(|b| by_batch[b].clone()));
+                for (b, n) in by_batch {
+                    names.insert((m, b), Arc::<str>::from(n));
+                }
+                sizes.push(s);
             }
-            let use_packed = !packed.is_empty()
-                && plain.keys().all(|b| packed.contains_key(b));
-            let by_batch = if use_packed { packed } else { plain };
-            let mut sizes: Vec<usize> = by_batch.keys().copied().collect();
-            sizes.sort_unstable();
-            if sizes.first() != Some(&1) {
-                return Err(anyhow!(
-                    "no batch-1 artifact for {} ({}); have {:?}",
-                    plan.model,
-                    plan.conv_impl,
-                    sizes
-                ));
-            }
-            let warm: Vec<String> =
-                sizes.iter().map(|b| by_batch[b].clone()).collect();
-            let names: HashMap<usize, Arc<str>> = by_batch
-                .into_iter()
-                .map(|(b, n)| (b, Arc::<str>::from(n)))
-                .collect();
-            (sizes, names, warm)
-        };
+        }
+        // The flush-assembly ceiling across every served model; each
+        // run still plans chunks against its own model's sizes.
+        let max_batch_all =
+            sizes.iter().map(|s| *s.last().unwrap()).max().unwrap();
 
-        let (c, h, w) = model.in_shape;
-        let image_numel = c * h * w;
-        let classes = model.propagate().last().unwrap().out_shape.numel();
+        let dims: Vec<(usize, usize)> = fleet_models
+            .iter()
+            .map(|model| {
+                let (c, h, w) = model.in_shape;
+                let classes =
+                    model.propagate().last().unwrap().out_shape.numel();
+                (c * h * w, classes)
+            })
+            .collect();
+        let (image_numel, classes) = dims[0];
 
         // One pool backend for every policy: stealing drains at the
         // speed of free boards; pinned keeps strict per-board queues.
@@ -529,27 +582,49 @@ impl InferenceService {
             clock.clone(),
         );
 
+        // Fleet residency/swap state: shared between the router
+        // (affinity reads), the board workers (claim + swap charge)
+        // and the report (counters).  Only a plan with a FleetSpec
+        // carries one — the fleet-less path has nothing to track and
+        // stays bit-identical to the pre-fleet service.
+        let fleet: Option<Arc<FleetState>> = plan
+            .fleet
+            .as_ref()
+            .map(|_| FleetState::new(board_count, plan.affinity()));
+
         // Closed-loop control (serving.slo): the shared plane the
         // submit paths (admission), batchers (adaptive knobs, latency
         // recording) and the controller thread all hang off.  The
-        // cost oracle — Simulator-predicted per-batch latency on the
-        // deployed design point — is computed once at boot and opens
-        // the event log; it only means something when the cycle model
-        // actually paces the boards.
+        // cost oracle — Simulator-predicted per-batch latency — is
+        // computed once at boot and opens the event log; it only
+        // means something when the cycle model actually paces the
+        // boards.  On a heterogeneous fleet each row is the SLOWEST
+        // (member, model) pair at that batch size: the conservative
+        // bound the batch-cap ladder steers on (measured feedback
+        // then corrects it toward delivered latency).
         let control = plan.serving.slo.map(|slo| {
             let oracle: Vec<f64> = if pace == Pace::Fpga {
-                let sim = crate::fpga::pipeline::Simulator::new(
-                    &model, device, design,
-                )
-                .policy(plan.overlap);
-                sizes.iter().map(|&b| sim.run(b).time_ms()).collect()
+                let base_sizes = &sizes[0];
+                let mut rows = vec![0.0f64; base_sizes.len()];
+                for &(device, design) in &boards_hw {
+                    for model in &fleet_models {
+                        let sim = crate::fpga::pipeline::Simulator::new(
+                            model, device, design,
+                        )
+                        .policy(plan.overlap);
+                        for (i, &b) in base_sizes.iter().enumerate() {
+                            rows[i] = rows[i].max(sim.run(b).time_ms());
+                        }
+                    }
+                }
+                rows
             } else {
                 Vec::new()
             };
             ControlPlane::new(
                 slo,
                 KnobValues {
-                    max_batch: *sizes.last().unwrap(),
+                    max_batch: max_batch_all,
                     max_wait_nanos: Duration::from_millis(
                         plan.serving.max_wait_ms,
                     )
@@ -566,13 +641,21 @@ impl InferenceService {
                 oracle,
             )
         });
+        // Measured-latency feedback is only commensurable with the
+        // oracle when the cycle model paces the boards.
+        if pace == Pace::Fpga {
+            if let Some(plane) = &control {
+                plane.arm_fpga_feedback();
+            }
+        }
 
         let mut boards = Vec::new();
         for index in 0..board_count {
+            let (device, design) = boards_hw[index];
             let spec = BoardSpec {
                 index,
                 artifacts_dir: plan.artifacts_dir.clone(),
-                model: model.clone(),
+                models: fleet_models.clone(),
                 device,
                 design,
                 overlap: plan.overlap,
@@ -580,17 +663,19 @@ impl InferenceService {
                 warm: warm.clone(),
                 clock: clock.clone(),
                 faults: faults.get(index).cloned().unwrap_or_default(),
+                fleet: fleet.clone(),
             };
             let board = Arc::new(BoardHandle::spawn(spec)?);
             let source = RequestSource { pool: pool.clone(), board: index };
             let bc = BatcherConfig {
-                max_batch: *sizes.last().unwrap(),
+                max_batch: max_batch_all,
                 max_wait: Duration::from_millis(plan.serving.max_wait_ms),
                 sizes: sizes.clone(),
                 control: control.clone(),
             };
             let board2 = board.clone();
             let names = names.clone();
+            let bdims = dims.clone();
             let bclock = clock.clone();
             let (btx, brx) = mpsc::channel::<()>();
             std::thread::Builder::new()
@@ -606,16 +691,18 @@ impl InferenceService {
                         source,
                         &board2,
                         &bc,
-                        move |b| names[&b].clone(),
-                        image_numel,
-                        classes,
+                        move |m, b| names[&(m, b)].clone(),
+                        &bdims,
                     );
                 })?;
             let _ = brx.recv();
             boards.push(board);
         }
 
-        let router = Router::new(pool.clone(), policy);
+        let router = match fleet {
+            Some(fleet) => Router::with_fleet(pool.clone(), policy, fleet),
+            None => Router::new(pool.clone(), policy),
+        };
         let slot_cap = (board_count * plan.serving.queue_depth * 2)
             .clamp(64, 1024);
         let shared = Arc::new(Shared {
@@ -665,6 +752,7 @@ impl InferenceService {
 
         Ok(InferenceService {
             router,
+            dims,
             image_numel,
             classes,
             shard: plan.serving.shard,
@@ -700,6 +788,24 @@ impl InferenceService {
 
     pub fn image_numel(&self) -> usize {
         self.image_numel
+    }
+
+    /// Number of models this service serves (≥ 1).  Indexes for the
+    /// `*_model` submission APIs run `0..models_served()` in the
+    /// plan's [`crate::plan::Plan::served_models`] order.
+    pub fn models_served(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// `(image_numel, classes)` of served model `model`.
+    pub fn model_dims(&self, model: usize) -> Option<(usize, usize)> {
+        self.dims.get(model).copied()
+    }
+
+    /// Fleet residency/swap counters — `None` when the plan carries
+    /// no [`crate::plan::FleetSpec`].
+    pub fn fleet(&self) -> Option<&FleetState> {
+        self.router.fleet().map(|f| f.as_ref())
     }
 
     /// The closed-loop control plane, when serving under an SLO
@@ -741,20 +847,41 @@ impl InferenceService {
         &self,
         image: impl Into<Arc<[f32]>>,
     ) -> Result<PendingReply> {
+        self.submit_model(0, image)
+    }
+
+    /// Submit one image for served model `model` (see
+    /// [`InferenceService::submit`]).  Under a fleet with affinity
+    /// the router prefers a board whose weight cache already holds
+    /// this model's tiles; a miss charges the swap cost on the board
+    /// that executes it — see the router module docs.
+    pub fn submit_model(
+        &self,
+        model: usize,
+        image: impl Into<Arc<[f32]>>,
+    ) -> Result<PendingReply> {
         let image: Arc<[f32]> = image.into();
-        if image.len() != self.image_numel {
+        let Some(&(numel, _)) = self.dims.get(model) else {
+            return Err(anyhow!(
+                "model index {} out of range: {} model(s) served",
+                model,
+                self.dims.len()
+            ));
+        };
+        if image.len() != numel {
             return Err(anyhow!(
                 "image has {} elements, model wants {}",
                 image.len(),
-                self.image_numel
+                numel
             ));
         }
         self.admit(1)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let slot = self.shared.slot();
-        let board = self.router.pick();
+        let board = self.router.pick_for(model);
         let req = Request {
             id,
+            model,
             image,
             submitted: self.shared.clock.now_nanos(),
             reply: slot.sender(),
@@ -771,6 +898,16 @@ impl InferenceService {
     /// Submit one image and block for its classification.
     pub fn classify(&self, image: impl Into<Arc<[f32]>>) -> Result<Reply> {
         self.submit(image)?.wait()
+    }
+
+    /// Submit one image for served model `model` and block for its
+    /// classification.
+    pub fn classify_model(
+        &self,
+        model: usize,
+        image: impl Into<Arc<[f32]>>,
+    ) -> Result<Reply> {
+        self.submit_model(model, image)?.wait()
     }
 
     /// Submit a group of independent single-image requests with bulk
@@ -802,6 +939,7 @@ impl InferenceService {
             let slot = self.shared.slot();
             scratch.reqs.push(Request {
                 id: 0, // assigned below from one bulk reservation
+                model: 0,
                 image,
                 submitted,
                 reply: slot.sender(),
@@ -825,7 +963,7 @@ impl InferenceService {
         for (k, r) in scratch.reqs.iter_mut().enumerate() {
             r.id = base + k as u64;
         }
-        let board = self.router.pick();
+        let board = self.router.pick_for(0);
         let guard = self.router.route_many(board, &mut scratch.reqs)?;
         scratch.guards.push(guard);
         Ok(PendingSet { scratch, board, shared: self.shared.clone() })
@@ -876,7 +1014,7 @@ impl InferenceService {
         let (per_shard, shards) =
             crate::fpga::pipeline::shard_split(images, want);
         let mut scratch = self.shared.checkout();
-        self.router.least_loaded_into(shards, &mut scratch.targets);
+        self.router.least_loaded_for(0, shards, &mut scratch.targets);
         let submitted = self.shared.clock.now_nanos();
         let base = self.next_id.fetch_add(images as u64, Ordering::Relaxed);
 
@@ -899,6 +1037,7 @@ impl InferenceService {
                 let slot = self.shared.slot();
                 scratch.reqs.push(Request {
                     id: base + i as u64,
+                    model: 0,
                     image,
                     submitted,
                     reply: slot.sender(),
@@ -995,6 +1134,10 @@ impl InferenceService {
             }
         }
         let wall_s = clock.now_nanos().saturating_sub(started) as f64 / 1e9;
+        let (swaps, swap_ms) = match self.router.fleet() {
+            Some(f) => (f.total_swaps(), f.total_swap_nanos() as f64 / 1e6),
+            None => (0, 0.0),
+        };
         ServeReport {
             requests: ok + errors,
             errors,
@@ -1008,6 +1151,8 @@ impl InferenceService {
             },
             fpga_busy_ms: fpga_ms,
             host_busy_ms: host_ms,
+            swaps,
+            swap_ms,
         }
     }
 }
@@ -1476,6 +1621,110 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Engine-less service over an explicit homogeneous fleet spec
+    /// serving `model_names` concurrently.
+    fn fleet_serve(
+        boards: usize,
+        model_names: &[&str],
+        affinity: bool,
+    ) -> InferenceService {
+        let mut cfg = RunConfig::default();
+        cfg.model = model_names[0].into();
+        cfg.serving.boards = boards;
+        cfg.serving.max_batch = 4;
+        cfg.serving.max_wait_ms = 1;
+        let mut plan = Plan::from_run_config(
+            &cfg,
+            Pace::Immediate,
+            Policy::LeastOutstanding,
+        )
+        .unwrap();
+        plan.fleet = Some(crate::plan::FleetSpec {
+            members: vec![crate::plan::FleetMember {
+                device: plan.device.clone(),
+                design: plan.design,
+                count: boards,
+            }],
+            models: model_names.iter().map(|m| m.to_string()).collect(),
+            affinity,
+        });
+        InferenceService::from_plan(&plan).unwrap()
+    }
+
+    #[test]
+    fn multi_model_service_serves_both_and_counts_swaps() {
+        // ONE board serving two models: every model switch displaces
+        // the resident weights, so the swap counter tracks the
+        // alternation exactly.
+        let svc = fleet_serve(1, &["tinynet", "alexnet"], true);
+        assert_eq!(svc.models_served(), 2);
+        let (n0, c0) = svc.model_dims(0).unwrap();
+        let (n1, c1) = svc.model_dims(1).unwrap();
+        assert_eq!(c0, 10);
+        assert_eq!(c1, 1000);
+        // Typed submit-time failures: unknown index, wrong numel.
+        assert!(svc.submit_model(2, vec![0.0f32; n0]).is_err());
+        assert!(svc.submit_model(1, vec![0.0f32; n0]).is_err());
+        let mut img0 = vec![0.0f32; n0];
+        img0[0] = 1.0;
+        let r0 = svc.classify_model(0, img0.clone()).unwrap();
+        assert_eq!(r0.model, 0);
+        assert_eq!(r0.logits.len(), c0);
+        assert_eq!(r0.logits[0], 1.0, "image identity carried");
+        let fleet = svc.fleet().expect("fleet plan carries FleetState");
+        assert_eq!(fleet.total_swaps(), 0, "cold load is free");
+        let mut img1 = vec![0.0f32; n1];
+        img1[0] = 2.0;
+        let r1 = svc.classify_model(1, img1).unwrap();
+        assert_eq!(r1.model, 1);
+        assert_eq!(r1.logits.len(), c1);
+        assert_eq!(r1.logits[0], 2.0);
+        assert_eq!(fleet.total_swaps(), 1, "displacement charged");
+        assert!(fleet.total_swap_nanos() > 0);
+        let r0b = svc.classify_model(0, img0).unwrap();
+        assert_eq!(r0b.logits.len(), c0);
+        assert_eq!(fleet.total_swaps(), 2, "switch-back charged");
+    }
+
+    #[test]
+    fn two_board_fleet_with_affinity_splits_models_without_swaps() {
+        // Two boards, two models, affinity on: each model settles on
+        // its own board (cold loads are free) and steady alternating
+        // traffic never swaps.
+        let svc = fleet_serve(2, &["tinynet", "alexnet"], true);
+        let (n0, _) = svc.model_dims(0).unwrap();
+        let (n1, _) = svc.model_dims(1).unwrap();
+        for _ in 0..8 {
+            svc.classify_model(0, vec![0.5f32; n0]).unwrap();
+            svc.classify_model(1, vec![0.5f32; n1]).unwrap();
+        }
+        let fleet = svc.fleet().unwrap();
+        assert_eq!(
+            fleet.total_swaps(),
+            0,
+            "affinity keeps each model on its warm board"
+        );
+    }
+
+    #[test]
+    fn single_model_fleet_charges_zero_swaps() {
+        // The parity guarantee behind the single-model swap-counter
+        // acceptance check: one served model can never displace
+        // anything, whatever board it lands on.
+        let svc = fleet_serve(2, &["tinynet"], true);
+        let numel = svc.image_numel();
+        for i in 0..16 {
+            let mut img = vec![0.0f32; numel];
+            img[0] = i as f32;
+            let r = svc.classify(img).unwrap();
+            assert_eq!(r.model, 0);
+            assert_eq!(r.logits.len(), 10);
+        }
+        let fleet = svc.fleet().unwrap();
+        assert_eq!(fleet.total_swaps(), 0, "single model never swaps");
+        assert_eq!(fleet.total_swap_nanos(), 0);
     }
 
     #[test]

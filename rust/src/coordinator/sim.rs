@@ -18,7 +18,11 @@
 //! Faults come from [`FaultPlan`] (board death at an exact job index,
 //! a one-shot mid-chunk stall, straggler time scaling) and from the
 //! workload side (bursty arrival modulation, pathological batch
-//! mixes, shutdown with queued work).  Every scenario asserts the
+//! mixes, shutdown with queued work).  The `mixed_fleet_*` /
+//! `affinity_vs_swap` / `slow_member_death` scenarios run the same
+//! machinery over heterogeneous multi-model fleets
+//! ([`FleetSpec`](crate::plan::FleetSpec)): affinity routing, weight
+//! swap accounting and member death all replay from the seed.  Every scenario asserts the
 //! robustness invariants the coordinator promises: no hung waiters,
 //! typed [`ServeError`]s, gather order preserved under sharding, and
 //! — in `virtual_oracle` — board pacing that matches the
@@ -41,7 +45,7 @@ use crate::config::{RunConfig, ShardPolicy, SloPolicy};
 use crate::data;
 use crate::fpga::pipeline::Simulator;
 use crate::models;
-use crate::plan::Plan;
+use crate::plan::{default_design_for, FleetMember, FleetSpec, Plan};
 use crate::util::sim::{Clock, Nanos};
 use crate::Result;
 
@@ -62,6 +66,9 @@ const SCENARIOS: &[(&str, ScenarioFn)] = &[
     ("virtual_oracle", virtual_oracle),
     ("overload_shed", overload_shed),
     ("controller_recovery", controller_recovery),
+    ("mixed_fleet_steady", mixed_fleet_steady),
+    ("affinity_vs_swap", affinity_vs_swap),
+    ("slow_member_death", slow_member_death),
 ];
 
 /// Names of all registered scenarios (the `--scenario` values).
@@ -226,6 +233,41 @@ fn sim_plan(boards: usize, policy: Policy, shard: ShardPolicy) -> Result<Plan> {
     cfg.serving.boards = boards;
     cfg.serving.shard = shard;
     Plan::from_run_config(&cfg, Pace::Fpga, policy)
+}
+
+/// One fleet member on `device`, running that device's default design
+/// point — heterogeneous scenarios mix members without hand-tuning
+/// unroll factors per device.
+fn member(device: &str, count: usize) -> FleetMember {
+    FleetMember {
+        device: device.to_string(),
+        design: default_design_for(device),
+        count,
+    }
+}
+
+/// [`sim_plan`] for a heterogeneous / multi-model fleet: same batch
+/// window and sizes, but `serving.boards` expands from the member
+/// counts and the plan carries a [`FleetSpec`] (primary model =
+/// `models[0]`).
+fn fleet_plan(
+    members: Vec<FleetMember>,
+    models: &[&str],
+    affinity: bool,
+    policy: Policy,
+) -> Result<Plan> {
+    let mut cfg = RunConfig::default();
+    cfg.model = models[0].to_string();
+    cfg.serving.max_batch = 4;
+    cfg.serving.max_wait_ms = 1;
+    cfg.serving.boards = members.iter().map(|m| m.count).sum();
+    let mut plan = Plan::from_run_config(&cfg, Pace::Fpga, policy)?;
+    plan.fleet = Some(FleetSpec {
+        members,
+        models: models.iter().map(|m| m.to_string()).collect(),
+        affinity,
+    });
+    Ok(plan)
 }
 
 /// A single image whose first element carries `marker` — the
@@ -700,6 +742,151 @@ fn controller_recovery(clock: &Clock, _seed: u64) -> Result<()> {
     Ok(())
 }
 
+/// Two boards, two models, affinity on: interleaved open-loop traffic
+/// settles each model onto its own board — every reply keeps its
+/// identity AND its model tag, and the swap counter stays at exactly
+/// zero (first-touch weight uploads are free).
+fn mixed_fleet_steady(clock: &Clock, _seed: u64) -> Result<()> {
+    let plan = fleet_plan(
+        vec![member("stratix10", 2)],
+        &["tinynet", "alexnet"],
+        true,
+        Policy::LeastOutstanding,
+    )?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+    ensure!(svc.models_served() == 2, "served {} models, want 2", svc.models_served());
+    let numels: Vec<usize> = (0..2)
+        .map(|m| {
+            svc.model_dims(m)
+                .map(|(numel, _)| numel)
+                .ok_or_else(|| anyhow!("model {m} has no dims"))
+        })
+        .collect::<Result<_>>()?;
+    // Each round puts BOTH models in flight before waiting, so the
+    // router decides under concurrent mixed load, not one at a time.
+    let mut marker = 1.0f32;
+    for _round in 0..6 {
+        let mut pending = Vec::new();
+        for m in 0..2 {
+            pending.push((m, marker, svc.submit_model(m, marked(numels[m], marker))?));
+            marker += 1.0;
+        }
+        for (m, want, p) in pending {
+            let r = p.wait()?;
+            ensure!(r.model == m, "reply model {} != submitted {m}", r.model);
+            ensure!(r.logits[0] == want, "model {m} reply lost identity: {}", r.logits[0]);
+        }
+    }
+    let fleet = svc.fleet().ok_or_else(|| anyhow!("fleet state missing"))?;
+    ensure!(
+        fleet.total_swaps() == 0,
+        "affinity routing swapped {} time(s) on a 2-board/2-model fleet",
+        fleet.total_swaps()
+    );
+    ensure!(
+        fleet.resident(0).is_some() && fleet.resident(1).is_some(),
+        "steady mixed load left a board cold"
+    );
+    Ok(())
+}
+
+/// The affinity knob's teeth: the same alternating two-model workload
+/// on the same 2-board fleet, with affinity on vs. off.  On: each
+/// model keeps its warm board, zero swaps.  Off: load-only routing
+/// ping-pongs both models onto the same board, every switch charges a
+/// weight swap (counted AND billed in virtual nanoseconds) — and the
+/// traffic still completes correctly either way.
+fn affinity_vs_swap(clock: &Clock, _seed: u64) -> Result<()> {
+    let mut swaps = [0u64; 2];
+    for (k, aff) in [true, false].into_iter().enumerate() {
+        let plan = fleet_plan(
+            vec![member("stratix10", 2)],
+            &["tinynet", "alexnet"],
+            aff,
+            Policy::LeastOutstanding,
+        )?;
+        let svc = InferenceService::from_plan_with(&plan, clock.clone(), &[])?;
+        let mut marker = 1.0f32;
+        for _round in 0..8 {
+            for m in 0..2 {
+                let numel = svc
+                    .model_dims(m)
+                    .map(|(numel, _)| numel)
+                    .ok_or_else(|| anyhow!("model {m} has no dims"))?;
+                let r = svc.submit_model(m, marked(numel, marker))?.wait()?;
+                ensure!(r.model == m, "affinity={aff}: reply model {} != {m}", r.model);
+                ensure!(
+                    r.logits[0] == marker,
+                    "affinity={aff}: model {m} reply lost identity: {}",
+                    r.logits[0]
+                );
+                marker += 1.0;
+            }
+        }
+        let fleet = svc.fleet().ok_or_else(|| anyhow!("fleet state missing"))?;
+        swaps[k] = fleet.total_swaps();
+        if !aff {
+            ensure!(
+                fleet.total_swap_nanos() > 0,
+                "swaps happened but charged no virtual time"
+            );
+        }
+        svc.stop();
+    }
+    ensure!(swaps[0] == 0, "affinity-on fleet still swapped {} time(s)", swaps[0]);
+    ensure!(swaps[1] > 0, "affinity-off fleet never swapped — scenario lost its teeth");
+    Ok(())
+}
+
+/// Heterogeneous fleet fault: a stratix10 + arria10 pair where the
+/// slower arria10 member straggles 8x and then dies after its first
+/// chunk.  Requests it already served stay Ok, everything stranded on
+/// it resolves as a typed [`ServeError::BoardLost`] naming THAT board,
+/// the healthy member is untouched, and the single served model means
+/// the swap counter stays at zero.
+fn slow_member_death(clock: &Clock, _seed: u64) -> Result<()> {
+    let faults = [
+        FaultPlan::default(),
+        FaultPlan::default().straggle(8.0).die_before(1),
+    ];
+    let plan = fleet_plan(
+        vec![member("stratix10", 1), member("arria10", 1)],
+        &["tinynet"],
+        true,
+        Policy::RoundRobin,
+    )?;
+    let svc = InferenceService::from_plan_with(&plan, clock.clone(), &faults)?;
+    let numel = svc.image_numel();
+    let mut pending = Vec::new();
+    for i in 0..12 {
+        pending.push(svc.submit(marked(numel, (i + 1) as f32))?);
+    }
+    let (mut ok, mut lost) = (0, 0);
+    for p in pending {
+        match p.wait() {
+            Ok(r) => {
+                ensure!(r.model == 0, "single-model fleet tagged reply model {}", r.model);
+                ok += 1;
+            }
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::BoardLost(1)) => lost += 1,
+                other => bail!("untyped or wrong error {other:?}: {e:#}"),
+            },
+        }
+    }
+    // Round-robin puts 6 singles on each member; the dying arria10
+    // serves its first 4-image chunk (job 0) and strands the 2-image
+    // rest.
+    ensure!(ok == 10 && lost == 2, "ok={ok} lost={lost}, want ok=10 lost=2");
+    let fleet = svc.fleet().ok_or_else(|| anyhow!("fleet state missing"))?;
+    ensure!(
+        fleet.total_swaps() == 0,
+        "single-model fleet charged {} swap(s)",
+        fleet.total_swaps()
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -744,6 +931,25 @@ mod tests {
         assert!(
             a.log.iter().any(|l| l.contains("control: ")),
             "control events missing from the sim log"
+        );
+    }
+
+    #[test]
+    fn mixed_fleet_scenarios_replay_byte_identical() {
+        // The fleet acceptance gate: heterogeneous / multi-model
+        // serving — residency claims, swap charges, member death —
+        // folds into the sim event log and replays byte-for-byte.
+        for name in ["mixed_fleet_steady", "affinity_vs_swap", "slow_member_death"] {
+            let a = run_scenario(name, 5).unwrap();
+            let b = run_scenario(name, 5).unwrap();
+            assert_eq!(a.error, None, "{name}: {:?}", a.error);
+            assert_eq!(a.log, b.log, "{name}: log differs across replays");
+            assert!(!a.log.is_empty(), "{name}: sim run produced no event log");
+        }
+        let a = run_scenario("affinity_vs_swap", 5).unwrap();
+        assert!(
+            a.log.iter().any(|l| l.contains("swap model=")),
+            "swap events missing from the affinity_vs_swap sim log"
         );
     }
 

@@ -35,6 +35,13 @@
 //!   dispatch+gather overhead — all charged through the same
 //!   resource/timing models, so the sweep finds the serving
 //!   `ShardPolicy` break-even per (model, batch).
+//! - **fleet composition** — one level above the per-board grid,
+//!   [`fleet_sweep`] enumerates small heterogeneous fleets (mixed
+//!   devices, each running its own best design point) against a
+//!   multi-model demand mix (per-model QPS + p99) and ranks the
+//!   feasible compositions by aggregate purchased DSPs — the
+//!   capacity-planning answer to "which boards do I buy?"
+//!   (`ffcnn dse --fleet-sweep`).
 //!
 //! The canonical entry is `plan::Deployment::sweep` (one call over the
 //! plan's [`SweepSpace`]); [`explore_space`] is the underlying
@@ -603,6 +610,264 @@ pub fn pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
     frontier
 }
 
+// ---- fleet composition sweep -------------------------------------------
+//
+// "Which boards do I buy?" — the capacity-planning layer above the
+// per-board design sweep.  A serving deployment is no longer one
+// design replicated k times: it is a FLEET (mixed devices, mixed
+// design points) serving a MIX of models, each with its own rate and
+// latency bound.  `fleet_sweep` enumerates small fleet compositions
+// over candidate devices, checks each against the mix with a
+// deterministic greedy board-to-model assignment, and ranks the
+// survivors by aggregate purchased DSPs — the cheapest silicon that
+// holds the mix (`ffcnn dse --fleet-sweep`).
+
+/// One model's slice of a served mix: the sustained rate it must
+/// absorb and the per-request latency bound it must hold.
+#[derive(Debug, Clone)]
+pub struct FleetDemand {
+    pub model: Model,
+    /// Required sustained throughput (requests/second).
+    pub qps: f64,
+    /// Per-request latency bound (ms): under steady full-batch
+    /// service a board's batch execution time must stay within it.
+    pub p99_ms: f64,
+}
+
+/// Knobs of [`fleet_sweep`].
+#[derive(Debug, Clone)]
+pub struct FleetSweepConfig {
+    /// Largest total board count per enumerated composition.
+    pub max_boards: usize,
+    /// Batching ceiling when deriving a board's capacity.
+    pub max_batch: usize,
+    pub overlap: OverlapPolicy,
+}
+
+impl Default for FleetSweepConfig {
+    fn default() -> Self {
+        FleetSweepConfig {
+            max_boards: 4,
+            max_batch: 16,
+            overlap: OverlapPolicy::Full,
+        }
+    }
+}
+
+/// One board type a composition may buy: a device plus the design
+/// point its boards run, with per-demand capacity precomputed.
+#[derive(Debug, Clone)]
+pub struct FleetBoardChoice {
+    pub device: &'static DeviceProfile,
+    pub params: DesignParams,
+    /// `capacity[m]`: sustainable QPS of ONE such board dedicated to
+    /// demand `m` (0.0 when no batch size meets that demand's p99).
+    pub capacity: Vec<f64>,
+}
+
+/// One member row of a ranked fleet composition.
+#[derive(Debug, Clone)]
+pub struct FleetMemberSpec {
+    pub device: String,
+    pub params: DesignParams,
+    pub count: usize,
+}
+
+/// One enumerated fleet composition, scored against the mix.
+#[derive(Debug, Clone)]
+pub struct FleetPlanOption {
+    /// Member rows in device-candidate order (zero counts omitted).
+    pub members: Vec<FleetMemberSpec>,
+    pub total_boards: usize,
+    /// Aggregate DSPs of the purchased parts (`device.dsps * count`)
+    /// — the ranking metric: you buy boards, not placed LUTs.
+    pub total_dsps: u64,
+    pub feasible: bool,
+    /// `served[m]`: aggregate QPS the assignment dedicates to demand
+    /// `m` (>= the demand's own `qps` when the option is feasible).
+    pub served: Vec<f64>,
+}
+
+/// Sustainable QPS of one `(device, params)` board dedicated to
+/// `model` under a per-request bound of `p99_ms`: steady-state
+/// back-to-back batches at the best batch size `b <= max_batch` whose
+/// batch execution time holds the bound — throughput `b / t(b)`.
+/// Returns 0.0 when even batch 1 misses the bound.
+pub fn board_capacity(
+    model: &Model,
+    device: &DeviceProfile,
+    params: &DesignParams,
+    overlap: OverlapPolicy,
+    p99_ms: f64,
+    max_batch: usize,
+) -> f64 {
+    let mut best = 0.0f64;
+    for b in 1..=max_batch.max(1) {
+        let t_ms = simulate_model(model, device, params, b, overlap).time_ms();
+        if t_ms <= p99_ms {
+            best = best.max(b as f64 / t_ms * 1000.0);
+        }
+    }
+    best
+}
+
+/// The board candidates [`fleet_sweep`] buys from: per device, the
+/// latency-optimal feasible design point of the classic `(vec, lane)`
+/// sweep for the heaviest model in the mix, with per-demand capacity
+/// filled in.  Devices where nothing places are dropped.
+pub fn fleet_board_candidates(
+    demands: &[FleetDemand],
+    devices: &[&'static DeviceProfile],
+    cfg: &FleetSweepConfig,
+) -> Vec<FleetBoardChoice> {
+    let Some(heaviest) = demands
+        .iter()
+        .max_by_key(|d| d.model.total_ops())
+        .map(|d| &d.model)
+    else {
+        return Vec::new();
+    };
+    devices
+        .iter()
+        .filter_map(|&device| {
+            let pts = explore_space(
+                heaviest,
+                device,
+                1,
+                Fidelity::Analytic,
+                &SweepSpace::default(),
+            );
+            let params = best_latency(&pts)?.params;
+            let capacity = demands
+                .iter()
+                .map(|d| {
+                    board_capacity(
+                        &d.model,
+                        device,
+                        &params,
+                        cfg.overlap,
+                        d.p99_ms,
+                        cfg.max_batch,
+                    )
+                })
+                .collect();
+            Some(FleetBoardChoice { device, params, capacity })
+        })
+        .collect()
+}
+
+/// Score one composition (`counts[c]` boards of `choices[c]`) against
+/// the mix.  The assignment is greedy and deterministic — demands in
+/// descending-QPS order each grab the available board type with the
+/// highest capacity for them until satisfied — so it is conservative:
+/// every composition it accepts is servable with boards dedicated
+/// per model (the affinity steady state), while a rejected one might
+/// still have a cleverer assignment.
+fn score_composition(
+    counts: &[usize],
+    choices: &[FleetBoardChoice],
+    demands: &[FleetDemand],
+) -> FleetPlanOption {
+    let mut avail = counts.to_vec();
+    let mut served = vec![0.0f64; demands.len()];
+    let mut order: Vec<usize> = (0..demands.len()).collect();
+    order.sort_by(|&a, &b| demands[b].qps.total_cmp(&demands[a].qps));
+    let mut feasible = true;
+    'demands: for &m in &order {
+        while served[m] < demands[m].qps {
+            let pick = (0..choices.len())
+                .filter(|&c| avail[c] > 0 && choices[c].capacity[m] > 0.0)
+                .max_by(|&a, &b| {
+                    choices[a].capacity[m]
+                        .total_cmp(&choices[b].capacity[m])
+                });
+            match pick {
+                Some(c) => {
+                    avail[c] -= 1;
+                    served[m] += choices[c].capacity[m];
+                }
+                None => {
+                    feasible = false;
+                    break 'demands;
+                }
+            }
+        }
+    }
+    let members = counts
+        .iter()
+        .enumerate()
+        .filter(|&(_, &n)| n > 0)
+        .map(|(c, &n)| FleetMemberSpec {
+            device: choices[c].device.name.to_string(),
+            params: choices[c].params,
+            count: n,
+        })
+        .collect();
+    FleetPlanOption {
+        members,
+        total_boards: counts.iter().sum(),
+        total_dsps: counts
+            .iter()
+            .enumerate()
+            .map(|(c, &n)| n as u64 * choices[c].device.dsps as u64)
+            .sum(),
+        feasible,
+        served,
+    }
+}
+
+/// Enumerate every fleet composition of up to `cfg.max_boards` boards
+/// over the candidate `devices`, score each against the mix, and
+/// return all of them sorted best-first: feasible before infeasible,
+/// then cheapest aggregate DSPs, then fewest boards (ties keep the
+/// deterministic enumeration order).  `options[0]` of a run with any
+/// feasible row IS the cheapest fleet that holds the mix.
+pub fn fleet_sweep(
+    demands: &[FleetDemand],
+    devices: &[&'static DeviceProfile],
+    cfg: &FleetSweepConfig,
+) -> Vec<FleetPlanOption> {
+    let choices = fleet_board_candidates(demands, devices, cfg);
+    if choices.is_empty() || demands.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut counts = vec![0usize; choices.len()];
+    'odometer: loop {
+        // Advance the per-choice odometer (digit base max_boards + 1).
+        let mut i = 0;
+        loop {
+            if i == counts.len() {
+                break 'odometer;
+            }
+            counts[i] += 1;
+            if counts[i] > cfg.max_boards {
+                counts[i] = 0;
+                i += 1;
+            } else {
+                break;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        if total == 0 || total > cfg.max_boards {
+            continue;
+        }
+        out.push(score_composition(&counts, &choices, demands));
+    }
+    out.sort_by(|a, b| {
+        b.feasible
+            .cmp(&a.feasible)
+            .then(a.total_dsps.cmp(&b.total_dsps))
+            .then(a.total_boards.cmp(&b.total_boards))
+    });
+    out
+}
+
+/// The cheapest feasible composition of a [`fleet_sweep`] result.
+pub fn best_fleet(options: &[FleetPlanOption]) -> Option<&FleetPlanOption> {
+    options.iter().find(|o| o.feasible)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1128,6 +1393,126 @@ mod tests {
         assert!(pts[0].feasible);
         assert!(!pts[1].feasible);
         assert!(pts[1].time_ms.is_infinite());
+    }
+
+    #[test]
+    fn fleet_sweep_single_model_scales_board_count() {
+        let demand = |qps| {
+            vec![FleetDemand { model: models::tinynet(), qps, p99_ms: 100.0 }]
+        };
+        let cfg = FleetSweepConfig::default();
+        let opts = fleet_sweep(&demand(1.0), &[&STRATIX10], &cfg);
+        assert!(opts[0].feasible, "trivial demand must be servable");
+        let best = best_fleet(&opts).unwrap();
+        assert_eq!(best.total_boards, 1);
+        assert_eq!(best.total_dsps, STRATIX10.dsps as u64);
+        // The 1-board greedy assignment dedicates exactly one board,
+        // so `served[0]` IS one board's capacity for the model.
+        let cap1 = best.served[0];
+        assert!(cap1 >= 1.0);
+        // 2.5x one board's capacity needs exactly 3 boards.
+        let opts = fleet_sweep(&demand(2.5 * cap1), &[&STRATIX10], &cfg);
+        let best = best_fleet(&opts).unwrap();
+        assert_eq!(best.total_boards, 3);
+        assert!(best.served[0] >= 2.5 * cap1);
+    }
+
+    #[test]
+    fn fleet_sweep_prefers_heterogeneous_when_cheaper() {
+        // alexnet's latency bound is set between the two devices'
+        // batch-1 latencies, so only stratix10 boards can hold it;
+        // tinynet is easy anywhere.  The cheapest fleet pairs ONE
+        // stratix10 (alexnet) with ONE 256-DSP stratixv (tinynet)
+        // instead of buying a second big part.
+        let alexnet = models::alexnet();
+        let cfg = FleetSweepConfig::default();
+        let point = |device| {
+            best_latency(&explore_space(
+                &alexnet,
+                device,
+                1,
+                Fidelity::Analytic,
+                &SweepSpace::default(),
+            ))
+            .unwrap()
+            .params
+        };
+        let (p_sv, p_s10) = (point(&STRATIXV), point(&STRATIX10));
+        let t_sv =
+            simulate_model(&alexnet, &STRATIXV, &p_sv, 1, cfg.overlap).time_ms();
+        let t_s10 =
+            simulate_model(&alexnet, &STRATIX10, &p_s10, 1, cfg.overlap)
+                .time_ms();
+        assert!(t_s10 < t_sv, "stratix10 must out-run stratixv on alexnet");
+        let p99 = 0.5 * (t_s10 + t_sv);
+        let cap_s10 = board_capacity(
+            &alexnet, &STRATIX10, &p_s10, cfg.overlap, p99, cfg.max_batch,
+        );
+        assert!(cap_s10 > 0.0);
+        assert_eq!(
+            board_capacity(
+                &alexnet, &STRATIXV, &p_sv, cfg.overlap, p99, cfg.max_batch,
+            ),
+            0.0,
+            "the bound must shut stratixv out of serving alexnet"
+        );
+        let demands = vec![
+            FleetDemand { model: alexnet.clone(), qps: 0.5 * cap_s10, p99_ms: p99 },
+            FleetDemand { model: models::tinynet(), qps: 1.0, p99_ms: 100.0 },
+        ];
+        let opts = fleet_sweep(&demands, &[&STRATIXV, &STRATIX10], &cfg);
+        let best = best_fleet(&opts).expect("mix must be servable");
+        assert_eq!(best.total_boards, 2);
+        assert_eq!(
+            best.total_dsps,
+            STRATIXV.dsps as u64 + STRATIX10.dsps as u64,
+            "cheapest fleet is the mixed pair, not two big parts: {best:?}"
+        );
+        let devs: Vec<&str> =
+            best.members.iter().map(|m| m.device.as_str()).collect();
+        assert!(devs.contains(&"stratixv") && devs.contains(&"stratix10"));
+        assert!(best.served[0] >= demands[0].qps);
+        assert!(best.served[1] >= demands[1].qps);
+    }
+
+    #[test]
+    fn fleet_sweep_unattainable_p99_has_no_feasible_option() {
+        let demands = vec![FleetDemand {
+            model: models::alexnet(),
+            qps: 1.0,
+            p99_ms: 1e-6,
+        }];
+        let opts = fleet_sweep(
+            &demands,
+            &[&STRATIX10, &ARRIA10],
+            &FleetSweepConfig::default(),
+        );
+        assert!(!opts.is_empty());
+        assert!(opts.iter().all(|o| !o.feasible));
+        assert!(best_fleet(&opts).is_none());
+    }
+
+    #[test]
+    fn board_capacity_monotone_in_latency_bound() {
+        let m = models::alexnet();
+        let params = best_latency(&explore_space(
+            &m,
+            &STRATIX10,
+            1,
+            Fidelity::Analytic,
+            &SweepSpace::default(),
+        ))
+        .unwrap()
+        .params;
+        let t1 = simulate_model(&m, &STRATIX10, &params, 1, OverlapPolicy::Full)
+            .time_ms();
+        let cap = |p99| {
+            board_capacity(&m, &STRATIX10, &params, OverlapPolicy::Full, p99, 16)
+        };
+        let (loose, tight) = (cap(50.0 * t1), cap(1.5 * t1));
+        assert!(tight > 0.0);
+        assert!(loose >= tight, "a looser bound can only add batch sizes");
+        assert_eq!(cap(0.5 * t1), 0.0, "an unattainable bound has no capacity");
     }
 
     #[test]

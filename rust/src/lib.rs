@@ -38,7 +38,7 @@
 //! let sim = deployment.simulate(1); // token-level pipeline simulator
 //! let sweep = deployment.sweep(); // DSE over the plan's SweepSpace
 //! if let Some(best) = sweep.best_latency() {
-//!     plan.adopt(best); // write the tuned point back into the plan
+//!     plan.adopt(best)?; // write the tuned point back into the plan
 //! }
 //! // deployment.serve()? boots boards + batchers + router (needs
 //! // `make artifacts`).

@@ -20,9 +20,13 @@ use ffcnn::config::{
 };
 use ffcnn::coordinator::{Pace, Policy};
 use ffcnn::data;
-use ffcnn::fpga::device::DEVICES;
-use ffcnn::fpga::dse::{Fidelity, SweepSpace};
+use ffcnn::fpga::device::{self, DEVICES};
+use ffcnn::fpga::dse::{
+    best_fleet, fleet_sweep, Fidelity, FleetDemand, FleetSweepConfig,
+    SweepSpace,
+};
 use ffcnn::fpga::timing::OverlapPolicy;
+use ffcnn::models;
 use ffcnn::plan::Plan;
 use ffcnn::report::{render_fig1, render_table1, table1_rows_with};
 use ffcnn::Result;
@@ -45,6 +49,18 @@ COMMANDS:
                                   (boards per batch; break-even table)
             [--weight-cache-sweep] also sweep the on-chip weight
                                   prefetch cache (KiB; M20K trade)
+            [--fleet-sweep]       capacity planning: the cheapest
+                                  mixed-device fleet (by aggregate
+                                  DSPs) holding a multi-model mix; uses
+                                  --models/--mix/--qps/--p99 below
+            [--models alexnet,vgg16]  served mix for --fleet-sweep
+            [--mix 0.7,0.3]       request share per model (normalized;
+                                  default equal)
+            [--qps 100]           total rate the fleet must sustain
+            [--p99 50]            per-request bound (ms); one value or
+                                  one per model
+            [--fleet-devices arria10,stratix10]  candidate board types
+            [--max-boards 4]      largest fleet enumerated
   layers    [--model alexnet] [--device stratix10] [--batch 1]
   pipeline  [--model alexnet] [--device stratix10] [--batch 1] [--exact]
             [--overlap within_group|full|none]
@@ -72,6 +88,16 @@ COMMANDS:
                                   (ms; 0 = static plan, no shedding)
             [--slo-queue 64]      admission bound (max pending
                                   requests) while the SLO loop is on
+            [--models a,b]        serve several models on one fleet
+                                  (closed-loop mixed workload with
+                                  per-model latency and weight-swap
+                                  accounting; unknown names are
+                                  rejected up front)
+            [--mix 0.7,0.3]       request share per model (with
+                                  --models; normalized, default equal)
+            [--affinity-off]      disable model-affinity routing —
+                                  boards take any model and the swap
+                                  counters show what that costs
   simtest   [--num-seeds 100] [--seed 0]   deterministic robustness
             [--scenario NAME]     run one scenario (default: all; see
                                   --list) on the seeded simulated
@@ -192,6 +218,59 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
+/// Parse a comma-separated `--models` list, rejecting unknown names
+/// before any plan is built — the error carries the full catalog.
+fn parse_model_list(arg: &str) -> Result<Vec<String>> {
+    let names: Vec<String> = arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        return Err(anyhow!(
+            "--models wants a comma-separated list of model names \
+             (have {:?})",
+            models::model_names()
+        ));
+    }
+    for n in &names {
+        if models::by_name(n).is_none() {
+            return Err(anyhow!(
+                "unknown model {n:?} in --models (have {:?})",
+                models::model_names()
+            ));
+        }
+    }
+    Ok(names)
+}
+
+/// Parse `--mix` into normalized per-model request shares (default:
+/// equal shares).
+fn parse_mix(args: &Args, n: usize) -> Result<Vec<f64>> {
+    let Some(raw) = args.kv.get("mix") else {
+        return Ok(vec![1.0 / n as f64; n]);
+    };
+    let parts: Vec<f64> = raw
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<f64>().map_err(|_| {
+                anyhow!("--mix wants comma-separated numbers, got {raw:?}")
+            })
+        })
+        .collect::<Result<_>>()?;
+    if parts.len() != n {
+        return Err(anyhow!(
+            "--mix has {} weight(s) for {n} model(s)",
+            parts.len()
+        ));
+    }
+    let total: f64 = parts.iter().sum();
+    if !(total > 0.0) || parts.iter().any(|w| *w < 0.0) {
+        return Err(anyhow!("--mix weights must be non-negative and sum > 0"));
+    }
+    Ok(parts.iter().map(|w| w / total).collect())
+}
+
 fn overlap_arg(args: &Args, default: &str) -> Result<OverlapPolicy> {
     match args.get("overlap", default).as_str() {
         "none" => Ok(OverlapPolicy::None),
@@ -247,6 +326,9 @@ fn cmd_fig1(args: &Args) -> Result<()> {
 }
 
 fn cmd_dse(args: &Args) -> Result<()> {
+    if args.has("fleet-sweep") {
+        return cmd_fleet_sweep(args);
+    }
     let batch = args.get_usize("batch", 1)?;
     let fidelity = match args.get("fidelity", "analytic").as_str() {
         "analytic" => Fidelity::Analytic,
@@ -416,7 +498,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
     // Reify the winner: the adopted plan is what a follow-up
     // `simulate`/`serve` run would consume (Plan::adopt).
     if let Some(best) = sweep.best_latency() {
-        plan.adopt(best);
+        plan.adopt(best)?;
         println!(
             "plan adopted the latency optimum (design {}x{} depth {} \
              cache {}K {:?}, overlap {:?}, shard policy {:?} over {} \
@@ -430,6 +512,138 @@ fn cmd_dse(args: &Args) -> Result<()> {
             plan.serving.shard,
             plan.serving.boards
         );
+    }
+    Ok(())
+}
+
+/// `ffcnn dse --fleet-sweep` — the capacity-planning table: enumerate
+/// small fleet compositions over the candidate devices and print the
+/// cheapest (by aggregate purchased DSPs) that holds every model's
+/// QPS share within its p99 bound.
+fn cmd_fleet_sweep(args: &Args) -> Result<()> {
+    let names = parse_model_list(&args.get("models", "alexnet,vgg16"))?;
+    let mix = parse_mix(args, names.len())?;
+    let qps = args.get_f64("qps", 100.0)?;
+    let p99: Vec<f64> = {
+        let raw = args.get("p99", "50");
+        let parts: Vec<f64> = raw
+            .split(',')
+            .map(|s| {
+                s.trim().parse::<f64>().map_err(|_| {
+                    anyhow!("--p99 wants ms value(s), got {raw:?}")
+                })
+            })
+            .collect::<Result<_>>()?;
+        match parts.len() {
+            1 => vec![parts[0]; names.len()],
+            n if n == names.len() => parts,
+            n => {
+                return Err(anyhow!(
+                    "--p99 has {n} bound(s) for {} model(s)",
+                    names.len()
+                ))
+            }
+        }
+    };
+    let devices: Vec<&'static device::DeviceProfile> = args
+        .get("fleet-devices", "arria10,stratix10")
+        .split(',')
+        .map(|s| {
+            let s = s.trim();
+            device::by_name(s).ok_or_else(|| {
+                anyhow!("unknown device {s:?} in --fleet-devices")
+            })
+        })
+        .collect::<Result<_>>()?;
+    let cfg = FleetSweepConfig {
+        max_boards: args.get_usize("max-boards", 4)?,
+        max_batch: args.get_usize("max-batch", 16)?,
+        ..Default::default()
+    };
+    let demands: Vec<FleetDemand> = names
+        .iter()
+        .zip(&mix)
+        .zip(&p99)
+        .map(|((name, &share), &p99_ms)| FleetDemand {
+            model: models::by_name(name).expect("validated by parse_model_list"),
+            qps: share * qps,
+            p99_ms,
+        })
+        .collect();
+    println!(
+        "fleet sweep: {qps:.0} req/s over {} model(s), up to {} board(s) \
+         from {:?}",
+        names.len(),
+        cfg.max_boards,
+        devices.iter().map(|d| d.name).collect::<Vec<_>>()
+    );
+    for (d, name) in demands.iter().zip(&names) {
+        println!(
+            "  {name:<10} {:>8.1} req/s, p99 <= {:.1} ms",
+            d.qps, d.p99_ms
+        );
+    }
+    let options = fleet_sweep(&demands, &devices, &cfg);
+    if options.is_empty() {
+        return Err(anyhow!(
+            "no candidate device can place the mix's heaviest model"
+        ));
+    }
+    println!(
+        "\n{:<36}{:>8}{:>10}{:>8}  {}",
+        "fleet", "boards", "DSPs", "holds?", "served req/s per model"
+    );
+    for o in options.iter().take(8) {
+        let members = o
+            .members
+            .iter()
+            .map(|m| {
+                format!(
+                    "{}x {} ({}x{})",
+                    m.count, m.device, m.params.vec_size, m.params.lane_num
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" + ");
+        let served = o
+            .served
+            .iter()
+            .map(|s| format!("{s:.1}"))
+            .collect::<Vec<_>>()
+            .join(" / ");
+        println!(
+            "{:<36}{:>8}{:>10}{:>8}  {}",
+            members,
+            o.total_boards,
+            o.total_dsps,
+            if o.feasible { "yes" } else { "no" },
+            served
+        );
+    }
+    match best_fleet(&options) {
+        Some(best) => {
+            let members = best
+                .members
+                .iter()
+                .map(|m| format!("{}x {}", m.count, m.device))
+                .collect::<Vec<_>>()
+                .join(" + ");
+            let headroom = demands
+                .iter()
+                .enumerate()
+                .map(|(m, d)| best.served[m] / d.qps.max(f64::MIN_POSITIVE))
+                .fold(f64::INFINITY, f64::min);
+            println!(
+                "\ncheapest fleet holding the mix: {members} ({} DSPs \
+                 aggregate); slimmest model has {headroom:.2}x its \
+                 required rate",
+                best.total_dsps
+            );
+        }
+        None => println!(
+            "\nno enumerated fleet holds the mix — raise --max-boards, \
+             relax --p99, or widen --fleet-devices"
+        ),
     }
     Ok(())
 }
@@ -596,8 +810,23 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
         )),
         ..Default::default()
     };
-    let plan = Plan::builder()
-        .model(&args.get("model", "alexnet"))
+    // Multi-model serving: `--models` names are validated here, at
+    // parse time, before any plan or service is built.
+    let fleet_models = match args.kv.get("models") {
+        Some(raw) => parse_model_list(raw)?,
+        None => Vec::new(),
+    };
+    // With --models (and no explicit --model) the first served model
+    // is the plan's primary.
+    let primary = if args.kv.contains_key("model") {
+        args.get("model", "alexnet")
+    } else if let Some(first) = fleet_models.first() {
+        first.clone()
+    } else {
+        "alexnet".to_string()
+    };
+    let mut builder = Plan::builder()
+        .model(&primary)
         .device(&args.get("device", "stratix10"))
         .artifacts_dir(artifacts)
         .serving(serving)
@@ -608,12 +837,84 @@ fn cmd_serve(args: &Args, artifacts: PathBuf) -> Result<()> {
         } else {
             Pace::None
         })
-        .policy(Policy::LeastOutstanding)
-        .build()?;
+        .policy(Policy::LeastOutstanding);
+    for name in &fleet_models {
+        builder = builder.serve_model(name);
+    }
+    if args.has("affinity-off") {
+        builder = builder.affinity(false);
+    }
+    let plan = builder.build()?;
     let dep = plan.deploy()?;
     let in_shape = dep.model().in_shape;
 
     let svc = dep.serve()?;
+    if fleet_models.len() > 1 {
+        // Closed-loop mixed workload: requests split over the served
+        // models by --mix (deterministic error-diffusion proportioning,
+        // so shares are exact), with per-model latency and the fleet's
+        // weight-swap bill at the end.
+        use ffcnn::coordinator::LatencyHistogram;
+        let mix = parse_mix(args, fleet_models.len())?;
+        let shapes: Vec<(usize, usize, usize)> = fleet_models
+            .iter()
+            .map(|n| models::by_name(n).expect("validated").in_shape)
+            .collect();
+        let hists: Vec<LatencyHistogram> =
+            fleet_models.iter().map(|_| LatencyHistogram::new()).collect();
+        let mut counts = vec![0u64; fleet_models.len()];
+        let mut acc = vec![0.0f64; fleet_models.len()];
+        for r in 0..requests {
+            for (a, w) in acc.iter_mut().zip(&mix) {
+                *a += *w;
+            }
+            let m = acc
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            acc[m] -= 1.0;
+            let image = data::synth_images(1, shapes[m], 1000 + r as u64);
+            let reply = svc.classify_model(m, image)?;
+            hists[m].record_ms(reply.latency_ms);
+            counts[m] += 1;
+        }
+        println!(
+            "served {requests} mixed requests over {} model(s) \
+             ({} board(s), affinity {})",
+            fleet_models.len(),
+            plan.serving.boards,
+            if plan.affinity() { "on" } else { "off" }
+        );
+        for (m, name) in fleet_models.iter().enumerate() {
+            println!(
+                "  {name:<10} {:>6} req ({:>5.1}%) | latency: {}",
+                counts[m],
+                counts[m] as f64 / requests.max(1) as f64 * 100.0,
+                hists[m].summary()
+            );
+        }
+        if let Some(fleet) = svc.fleet() {
+            println!(
+                "weight swaps: {} total, {:.3} ms stalled",
+                fleet.total_swaps(),
+                fleet.total_swap_nanos() as f64 / 1e6
+            );
+            for b in 0..fleet.boards() {
+                let resident = fleet
+                    .resident(b)
+                    .and_then(|m| fleet_models.get(m))
+                    .map(|s| s.as_str())
+                    .unwrap_or("-");
+                println!(
+                    "  board[{b}]: resident {resident}, {} swap(s)",
+                    fleet.swaps_of(b)
+                );
+            }
+        }
+        return Ok(());
+    }
     if args.has("saturate") {
         // Closed-loop saturation: hammer submit_many as fast as
         // replies resolve.  One shared image (zero-copy), bulk groups

@@ -52,7 +52,7 @@
 //! let sim = deployment.simulate(1); // token-level cycle model
 //! let sweep = deployment.sweep(); // DSE over the plan's SweepSpace
 //! if let Some(best) = sweep.best_latency() {
-//!     plan.adopt(best); // reify the tuned point back into the plan
+//!     plan.adopt(best)?; // reify the tuned point back into the plan
 //! }
 //! assert!(sim.total_cycles > 0);
 //! # Ok::<(), anyhow::Error>(())
@@ -112,6 +112,51 @@ pub struct Plan {
     /// Conv implementation of the artifact to execute (`jnp`/`pallas`).
     pub conv_impl: String,
     pub serving: ServingConfig,
+    /// Heterogeneous fleet description (`None` = the classic
+    /// homogeneous fleet: `serving.boards` copies of
+    /// `(device, design)` serving `model` — bit-identical to the
+    /// pre-fleet path, pinned in `tests/plan_facade.rs`).
+    pub fleet: Option<FleetSpec>,
+}
+
+/// One member class of a heterogeneous fleet: `count` boards of one
+/// `(device, design)` point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetMember {
+    /// Device short name (`arria10`, `stratix10`, `stratixv`,
+    /// `virtex7`).
+    pub device: String,
+    /// The design point every board of this member runs.
+    pub design: DesignParams,
+    /// Boards of this member (>= 1).
+    pub count: usize,
+}
+
+/// A fleet of mixed `(device, design, count)` members serving a set
+/// of models concurrently — ROADMAP item 3's capacity-planning unit.
+///
+/// The member list expands, in order, into the board indices of the
+/// serving stack (member 0's boards first), so `serving.boards` must
+/// equal [`FleetSpec::total_boards`] (checked with a named-field
+/// error at deploy time).  `models` is the set served concurrently;
+/// empty means "just the plan's primary model".  `affinity` toggles
+/// the router's model/weight-cache affinity (on by default; the
+/// `bench_fleet` baseline turns it off).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub members: Vec<FleetMember>,
+    /// Model names served concurrently (the primary `Plan::model`
+    /// when empty).
+    pub models: Vec<String>,
+    /// Model/weight-cache-affinity-aware routing (default on).
+    pub affinity: bool,
+}
+
+impl FleetSpec {
+    /// Total boards across every member.
+    pub fn total_boards(&self) -> usize {
+        self.members.iter().map(|m| m.count).sum()
+    }
 }
 
 impl Default for Plan {
@@ -128,6 +173,7 @@ impl Default for Plan {
             artifacts_dir: default_artifacts_dir(),
             conv_impl: "jnp".to_string(),
             serving: ServingConfig::default(),
+            fleet: None,
         }
     }
 }
@@ -168,8 +214,13 @@ impl Plan {
     /// Write a sweep's winning design point back into the plan: the
     /// full design params (vec/lane/depth/precision), the overlap
     /// policy the point was timed under, and — when the winning point
-    /// was timed sharded — the batch [`ShardPolicy`], raising
-    /// `serving.boards` so the adopted plan still deploys.
+    /// was timed sharded — the batch [`ShardPolicy`].  On a classic
+    /// homogeneous plan (`fleet == None`) a sharded winner raises
+    /// `serving.boards` so the adopted plan still deploys; under a
+    /// [`FleetSpec`] the board count is *defined by the members*, so a
+    /// winner needing more boards than the fleet provides is an error
+    /// naming both fields (grow a member's `count` explicitly — the
+    /// plan won't guess which member is cheapest to grow).
     ///
     /// A `shards == 1` winner leaves the existing shard policy alone:
     /// the point cannot distinguish "the shards axis was swept and 1
@@ -177,13 +228,77 @@ impl Plan {
     /// configured `SplitOver` to `None` would be a large latency
     /// regression with no error.  Set `serving.shard` explicitly to
     /// force unsharded serving.
-    pub fn adopt(&mut self, point: &DesignPoint) {
+    pub fn adopt(&mut self, point: &DesignPoint) -> Result<()> {
+        if point.shards > 1 {
+            if let Some(fleet) = &self.fleet {
+                let total = fleet.total_boards();
+                if point.shards > total {
+                    return Err(anyhow!(
+                        "adopt: winning point needs serving.shard = \
+                         split_over({}) but fleet.members total {} \
+                         board(s) — grow a member's count (cheapest by \
+                         DSPs) or drop the shards axis from the sweep",
+                        point.shards,
+                        total
+                    ));
+                }
+            }
+        }
         self.design = point.params;
         self.overlap = point.overlap;
         if point.shards > 1 {
             self.serving.shard = ShardPolicy::SplitOver(point.shards);
-            if point.shards > self.serving.boards {
+            if self.fleet.is_none() && point.shards > self.serving.boards {
                 self.serving.boards = point.shards;
+            }
+        }
+        Ok(())
+    }
+
+    /// The models this plan serves concurrently: the fleet's model set
+    /// when one is declared (falling back to the primary model if the
+    /// set is empty), else just [`Plan::model`].
+    pub fn served_models(&self) -> Vec<String> {
+        match &self.fleet {
+            Some(f) if !f.models.is_empty() => f.models.clone(),
+            _ => vec![self.model.clone()],
+        }
+    }
+
+    /// Whether the router should route model-affinity-aware (only
+    /// meaningful with a fleet; defaults to true).
+    pub fn affinity(&self) -> bool {
+        self.fleet.as_ref().map(|f| f.affinity).unwrap_or(true)
+    }
+
+    /// Expand the fleet into one `(device, design)` pair per board, in
+    /// member order (member 0's boards first) — the board-index order
+    /// the serving stack boots them in.  Without a fleet this is
+    /// `serving.boards` copies of the plan's own `(device, design)`,
+    /// i.e. the classic homogeneous path.
+    pub fn resolved_boards(
+        &self,
+    ) -> Result<Vec<(&'static DeviceProfile, DesignParams)>> {
+        match &self.fleet {
+            None => {
+                let dev = self.device_profile()?;
+                Ok(vec![(dev, self.design); self.serving.boards])
+            }
+            Some(fleet) => {
+                let mut out = Vec::with_capacity(fleet.total_boards());
+                for (i, m) in fleet.members.iter().enumerate() {
+                    let dev = device::by_name(&m.device).ok_or_else(|| {
+                        anyhow!(
+                            "fleet.members[{i}].device = {:?}: unknown \
+                             device",
+                            m.device
+                        )
+                    })?;
+                    for _ in 0..m.count {
+                        out.push((dev, m.design));
+                    }
+                }
+                Ok(out)
             }
         }
     }
@@ -258,6 +373,32 @@ impl Plan {
                  (use \"none\" to disable sharding)"
             ));
         }
+        if let Some(fleet) = &self.fleet {
+            if fleet.members.is_empty() {
+                return Err(anyhow!(
+                    "fleet.members is empty (use \"fleet\": \"off\" for \
+                     the homogeneous path)"
+                ));
+            }
+            for (i, m) in fleet.members.iter().enumerate() {
+                if m.count == 0 {
+                    return Err(anyhow!(
+                        "fleet.members[{i}].count = 0: every member \
+                         must provision at least one board"
+                    ));
+                }
+                if m.design.vec_size == 0
+                    || m.design.lane_num == 0
+                    || m.design.channel_depth == 0
+                    || m.design.prefetch_lookahead == 0
+                {
+                    return Err(anyhow!(
+                        "fleet.members[{i}].design has a degenerate \
+                         value (vec/lane/depth/lookahead must be >= 1)"
+                    ));
+                }
+            }
+        }
         if let Some(slo) = &self.serving.slo {
             if slo.p99_target_ms == 0 || slo.max_queue == 0 {
                 return Err(anyhow!(
@@ -296,6 +437,42 @@ impl Plan {
                  over (raise serving.boards or lower the shard count)",
                 self.serving.boards
             ));
+        }
+        if let Some(fleet) = &self.fleet {
+            let total = fleet.total_boards();
+            if total != self.serving.boards {
+                return Err(anyhow!(
+                    "serving.boards = {} but fleet.members total {} \
+                     board(s): the fleet defines the board count — set \
+                     serving.boards = {} (the builder does this for \
+                     you)",
+                    self.serving.boards,
+                    total,
+                    total
+                ));
+            }
+            for (i, m) in fleet.members.iter().enumerate() {
+                if device::by_name(&m.device).is_none() {
+                    return Err(anyhow!(
+                        "fleet.members[{i}].device = {:?}: unknown \
+                         device (have {:?})",
+                        m.device,
+                        device::DEVICES
+                            .iter()
+                            .map(|d| d.name)
+                            .collect::<Vec<_>>()
+                    ));
+                }
+            }
+            for (i, name) in fleet.models.iter().enumerate() {
+                if models::by_name(name).is_none() {
+                    return Err(anyhow!(
+                        "fleet.models[{i}] = {name:?}: unknown model \
+                         (have {:?})",
+                        models::model_names()
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -341,6 +518,7 @@ impl Plan {
             ),
             ("conv_impl", Json::str(&self.conv_impl)),
             ("serving", serving_to_json(&self.serving)),
+            ("fleet", fleet_to_json(&self.fleet)),
         ])
     }
 
@@ -361,6 +539,7 @@ impl Plan {
                 "artifacts_dir",
                 "conv_impl",
                 "serving",
+                "fleet",
             ],
             "plan",
         )?;
@@ -398,6 +577,9 @@ impl Plan {
         if let Some(s) = v.opt("serving") {
             plan.serving = serving_from_json(s)?;
         }
+        if let Some(f) = v.opt("fleet") {
+            plan.fleet = fleet_from_json(f)?;
+        }
         plan.validate()?;
         Ok(plan)
     }
@@ -433,6 +615,9 @@ pub struct PlanBuilder {
     artifacts_dir: Option<PathBuf>,
     conv_impl: Option<String>,
     serving: Option<ServingConfig>,
+    fleet_members: Vec<FleetMember>,
+    fleet_models: Vec<String>,
+    fleet_affinity: Option<bool>,
 }
 
 impl PlanBuilder {
@@ -511,6 +696,41 @@ impl PlanBuilder {
         self
     }
 
+    /// Add `count` boards of `(device, design)` to the plan's fleet.
+    /// The first call switches the plan from the homogeneous path to a
+    /// [`FleetSpec`]; `build` then sets `serving.boards` to the fleet
+    /// total (member order = board-index order).
+    pub fn fleet_member(
+        mut self,
+        device: &str,
+        design: DesignParams,
+        count: usize,
+    ) -> Self {
+        self.fleet_members.push(FleetMember {
+            device: device.to_string(),
+            design,
+            count,
+        });
+        self
+    }
+
+    /// Add a model to the set served concurrently.  Without any
+    /// `fleet_member` calls this still builds a fleet — one member
+    /// mirroring the plan's own `(device, design)` at
+    /// `serving.boards` copies — so `serve --models a,b` works on a
+    /// homogeneous fleet.
+    pub fn serve_model(mut self, name: &str) -> Self {
+        self.fleet_models.push(name.to_string());
+        self
+    }
+
+    /// Toggle model/weight-cache-affinity-aware routing (default on;
+    /// only meaningful once a fleet exists).
+    pub fn affinity(mut self, on: bool) -> Self {
+        self.fleet_affinity = Some(on);
+        self
+    }
+
     /// Validate and assemble the plan.
     pub fn build(self) -> Result<Plan> {
         let base = Plan::default();
@@ -536,6 +756,50 @@ impl PlanBuilder {
         if let Some(w) = self.weight_cache_kib {
             design.weight_cache_kib = w;
         }
+        let mut serving = self.serving.unwrap_or(base.serving);
+        let fleet = if self.fleet_members.is_empty()
+            && self.fleet_models.is_empty()
+        {
+            None
+        } else {
+            let members = if self.fleet_members.is_empty() {
+                // `serve_model` without explicit members: one member
+                // mirroring the plan's own point.
+                vec![FleetMember {
+                    device: device.clone(),
+                    design,
+                    count: serving.boards,
+                }]
+            } else {
+                self.fleet_members
+            };
+            for (i, m) in members.iter().enumerate() {
+                if device::by_name(&m.device).is_none() {
+                    return Err(anyhow!(
+                        "fleet.members[{i}].device = {:?}: unknown \
+                         device",
+                        m.device
+                    ));
+                }
+            }
+            for (i, name) in self.fleet_models.iter().enumerate() {
+                if models::by_name(name).is_none() {
+                    return Err(anyhow!(
+                        "fleet.models[{i}] = {name:?}: unknown model \
+                         (have {:?})",
+                        models::model_names()
+                    ));
+                }
+            }
+            let fleet = FleetSpec {
+                members,
+                models: self.fleet_models,
+                affinity: self.fleet_affinity.unwrap_or(true),
+            };
+            // The fleet defines the board count.
+            serving.boards = fleet.total_boards();
+            Some(fleet)
+        };
         let plan = Plan {
             model,
             device,
@@ -547,7 +811,8 @@ impl PlanBuilder {
             sweep: self.sweep.unwrap_or(base.sweep),
             artifacts_dir: self.artifacts_dir.unwrap_or(base.artifacts_dir),
             conv_impl: self.conv_impl.unwrap_or(base.conv_impl),
-            serving: self.serving.unwrap_or(base.serving),
+            serving,
+            fleet,
         };
         plan.validate()?;
         Ok(plan)
@@ -905,6 +1170,77 @@ pub(crate) fn shard_from_json(v: &Json) -> Result<ShardPolicy> {
     Ok(ShardPolicy::SplitOver(v.get("split_over")?.as_usize()?))
 }
 
+/// `"off"` or `{"members": [{"device": d, "design": {...}, "count":
+/// n}, ...], "models": [...], "affinity": b}` — the heterogeneous
+/// [`FleetSpec`] block on the plan.
+pub(crate) fn fleet_to_json(f: &Option<FleetSpec>) -> Json {
+    match f {
+        None => Json::str("off"),
+        Some(fleet) => Json::obj(vec![
+            (
+                "members",
+                Json::Arr(
+                    fleet
+                        .members
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("device", Json::str(&m.device)),
+                                ("design", design_to_json(&m.design)),
+                                ("count", Json::num(m.count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "models",
+                Json::Arr(
+                    fleet.models.iter().map(|m| Json::str(m)).collect(),
+                ),
+            ),
+            ("affinity", Json::Bool(fleet.affinity)),
+        ]),
+    }
+}
+
+pub(crate) fn fleet_from_json(v: &Json) -> Result<Option<FleetSpec>> {
+    if let Ok(s) = v.as_str() {
+        return match s {
+            "off" => Ok(None),
+            other => Err(anyhow!(
+                "unknown fleet spec {other:?} (\"off\" or \
+                 {{\"members\": [...], ...}})"
+            )),
+        };
+    }
+    v.expect_keys(&["members", "models", "affinity"], "fleet")?;
+    let mut fleet = FleetSpec {
+        members: Vec::new(),
+        models: Vec::new(),
+        affinity: true,
+    };
+    if let Some(ms) = v.opt("members") {
+        for m in ms.as_arr()? {
+            m.expect_keys(&["device", "design", "count"], "fleet.members")?;
+            fleet.members.push(FleetMember {
+                device: m.get("device")?.as_str()?.to_string(),
+                design: design_from_json(m.get("design")?)?,
+                count: m.get("count")?.as_usize()?,
+            });
+        }
+    }
+    if let Some(ms) = v.opt("models") {
+        for m in ms.as_arr()? {
+            fleet.models.push(m.as_str()?.to_string());
+        }
+    }
+    if let Some(a) = v.opt("affinity") {
+        fleet.affinity = a.as_bool()?;
+    }
+    Ok(Some(fleet))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1076,7 +1412,7 @@ mod tests {
             &plan.sweep,
         );
         let best = best_latency(&pts).unwrap();
-        plan.adopt(best);
+        plan.adopt(best).unwrap();
         assert_eq!(plan.design, best.params);
         assert_eq!(plan.overlap, best.overlap);
     }
@@ -1097,7 +1433,7 @@ mod tests {
             gops: 1.0,
             gops_per_dsp: 1.0,
         };
-        plan.adopt(&point);
+        plan.adopt(&point).unwrap();
         assert_eq!(plan.serving.shard, ShardPolicy::SplitOver(4));
         // Boards are raised so the adopted plan still deploys.
         assert_eq!(plan.serving.boards, 4);
@@ -1105,10 +1441,123 @@ mod tests {
 
         // A shards=1 winner (axis not swept, or 1 won) must NOT
         // silently reset a configured shard policy.
-        let unsharded = DesignPoint { shards: 1, ..point };
-        plan.adopt(&unsharded);
+        let unsharded = DesignPoint { shards: 1, ..point.clone() };
+        plan.adopt(&unsharded).unwrap();
         assert_eq!(plan.serving.shard, ShardPolicy::SplitOver(4));
         assert_eq!(plan.serving.boards, 4);
+    }
+
+    #[test]
+    fn adopt_under_fleet_errors_instead_of_raising_boards() {
+        use crate::fpga::device::STRATIX10;
+        use crate::fpga::resources::resource_usage;
+        let mut plan = Plan::builder()
+            .fleet_member("stratix10", ffcnn_stratix10_params(), 2)
+            .build()
+            .unwrap();
+        assert_eq!(plan.serving.boards, 2);
+        let params = DesignParams::new(16, 11);
+        let point = DesignPoint {
+            params,
+            overlap: OverlapPolicy::Full,
+            usage: resource_usage(&params, &STRATIX10),
+            feasible: true,
+            shards: 4,
+            time_ms: 1.0,
+            gops: 1.0,
+            gops_per_dsp: 1.0,
+        };
+        // 4-shard winner on a 2-board fleet: named-field error, and
+        // the plan is left untouched (no silent board raise).
+        let err = plan.adopt(&point).unwrap_err().to_string();
+        assert!(err.contains("split_over(4)"), "{err}");
+        assert!(err.contains("fleet.members"), "{err}");
+        assert_eq!(plan.serving.boards, 2);
+        assert_eq!(plan.serving.shard, ShardPolicy::None);
+
+        // A winner that fits the fleet adopts fine.
+        let fits = DesignPoint { shards: 2, ..point };
+        plan.adopt(&fits).unwrap();
+        assert_eq!(plan.serving.shard, ShardPolicy::SplitOver(2));
+        assert_eq!(plan.serving.boards, 2);
+        assert!(plan.validate_deploy().is_ok());
+    }
+
+    #[test]
+    fn fleet_json_roundtrip_and_validation() {
+        let mut plan = Plan::builder()
+            .fleet_member("stratix10", ffcnn_stratix10_params(), 2)
+            .fleet_member("arria10", ffcnn_arria10_params(), 1)
+            .serve_model("alexnet")
+            .serve_model("vgg16")
+            .affinity(false)
+            .build()
+            .unwrap();
+        assert_eq!(plan.serving.boards, 3);
+        assert_eq!(plan.served_models(), vec!["alexnet", "vgg16"]);
+        assert!(!plan.affinity());
+        let boards = plan.resolved_boards().unwrap();
+        assert_eq!(boards.len(), 3);
+        assert_eq!(boards[0].0.name, "stratix10");
+        assert_eq!(boards[2].0.name, "arria10");
+
+        let j = plan.to_json().to_string();
+        assert_eq!(Plan::from_json(&Json::parse(&j).unwrap()).unwrap(), plan);
+
+        // The fleet defines the board count: a mismatch is a
+        // named-field deploy error.
+        plan.serving.boards = 5;
+        let err = plan.validate_deploy().unwrap_err().to_string();
+        assert!(err.contains("serving.boards = 5"), "{err}");
+        assert!(err.contains("fleet.members total 3"), "{err}");
+
+        // Degenerate fleets fail validate().
+        let mut plan = Plan::default();
+        plan.fleet = Some(FleetSpec {
+            members: vec![],
+            models: vec![],
+            affinity: true,
+        });
+        assert!(plan.validate().is_err());
+        let mut plan = Plan::default();
+        plan.fleet = Some(FleetSpec {
+            members: vec![FleetMember {
+                device: "stratix10".into(),
+                design: ffcnn_stratix10_params(),
+                count: 0,
+            }],
+            models: vec![],
+            affinity: true,
+        });
+        assert!(plan.validate().is_err());
+
+        // Unknown member devices / models are named at build time.
+        let err = Plan::builder()
+            .fleet_member("nope", ffcnn_stratix10_params(), 1)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fleet.members[0].device"), "{err}");
+        let err = Plan::builder()
+            .serve_model("nope")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fleet.models[0]"), "{err}");
+
+        // serve_model alone mirrors the homogeneous point as one
+        // member.
+        let plan = Plan::builder().serve_model("alexnet").build().unwrap();
+        let fleet = plan.fleet.as_ref().unwrap();
+        assert_eq!(fleet.members.len(), 1);
+        assert_eq!(fleet.members[0].device, plan.device);
+        assert_eq!(fleet.total_boards(), plan.serving.boards);
+
+        // "off" round-trips to None; junk strings error.
+        let j = Json::parse(r#"{"fleet":"off"}"#).unwrap();
+        assert_eq!(Plan::from_json(&j).unwrap().fleet, None);
+        let j = Json::parse(r#"{"fleet":"on"}"#).unwrap();
+        assert!(Plan::from_json(&j).is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use ffcnn::fpga::timing::{
     simulate_model, DesignParams, OverlapPolicy, Precision,
 };
 use ffcnn::models;
-use ffcnn::plan::Plan;
+use ffcnn::plan::{FleetMember, FleetSpec, Plan};
 use ffcnn::util::prop::{forall, int_in, pick};
 use ffcnn::util::Json;
 
@@ -93,6 +93,19 @@ fn prop_plan_json_roundtrip_lossless() {
                     ShardPolicy::SplitOver(int_in(r, 1, boards))
                 },
             };
+            if r.next_u64() % 2 == 0 {
+                let count = int_in(r, 1, 3);
+                plan.fleet = Some(FleetSpec {
+                    members: vec![FleetMember {
+                        device: plan.device.clone(),
+                        design: plan.design,
+                        count,
+                    }],
+                    models: vec![plan.model.clone()],
+                    affinity: r.next_u64() % 2 == 0,
+                });
+                plan.serving.boards = count;
+            }
             plan
         },
         |plan| {
@@ -275,7 +288,7 @@ fn sweep_covers_precision_overlap_depth_in_one_call() {
     assert_eq!(sweep.best_latency_per_precision().len(), 3);
     let best = sweep.best_latency().unwrap();
     let (params, overlap) = (best.params, best.overlap);
-    plan.adopt(best);
+    plan.adopt(best).unwrap();
     assert_eq!(plan.design, params);
     assert_eq!(plan.overlap, overlap);
 }
@@ -303,6 +316,51 @@ fn sweep_parity_with_deprecated_explore() {
     let new_fast = plan.deploy().unwrap().sweep_at(2);
     for (a, b) in old_fast.iter().zip(&new_fast.points) {
         assert_eq!(a.time_ms, b.time_ms);
+    }
+}
+
+// ------------------------------------------------- fleet parity (PR 9)
+
+/// A homogeneous single-model `FleetSpec` — one member mirroring the
+/// plan's own `(device, design)` — is a pure re-description of the
+/// classic `serving.boards` fleet: simulate, analytic, and sweep all
+/// stay bit-equal to the fleet-less plan on alexnet AND vgg16 at
+/// batch 1 and 16.
+#[test]
+fn homogeneous_fleet_simulate_and_sweep_bit_equal() {
+    for model in ["alexnet", "vgg16"] {
+        let plain = Plan::builder().model(model).build().unwrap();
+        let fleet = Plan::builder()
+            .model(model)
+            .serve_model(model)
+            .build()
+            .unwrap();
+        assert!(fleet.fleet.is_some(), "serve_model must build a fleet");
+        assert_eq!(plain.serving.boards, fleet.serving.boards);
+        assert_eq!(plain.design, fleet.design);
+        for batch in [1usize, 16] {
+            let a = plain.deploy().unwrap().simulate(batch);
+            let b = fleet.deploy().unwrap().simulate(batch);
+            assert_eq!(a.total_cycles, b.total_cycles, "{model} b{batch}");
+            for (x, y) in a.groups.iter().zip(&b.groups) {
+                assert_eq!(x.cycles, y.cycles, "{model} b{batch}");
+            }
+            let a = plain.deploy().unwrap().analytic(batch);
+            let b = fleet.deploy().unwrap().analytic(batch);
+            assert_eq!(
+                a.total_cycles, b.total_cycles,
+                "{model} b{batch} analytic"
+            );
+        }
+        let a = plain.deploy().unwrap().sweep();
+        let b = fleet.deploy().unwrap().sweep();
+        assert_eq!(a.points.len(), b.points.len(), "{model}");
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.params, y.params, "{model}");
+            assert_eq!(x.feasible, y.feasible, "{model}");
+            assert_eq!(x.time_ms, y.time_ms, "{model}");
+            assert_eq!(x.gops, y.gops, "{model}");
+        }
     }
 }
 
@@ -339,6 +397,47 @@ fn serve_parity_with_deprecated_start() {
     let b = new.classify(img).unwrap();
     assert_eq!(a.argmax, b.argmax);
     assert_eq!(&a.logits[..], &b.logits[..]);
+}
+
+/// A one-member fleet serving one model answers bit-identically to
+/// the fleet-less service, and — with a single model — the swap
+/// counters never move: the resident model is never displaced.
+#[test]
+fn homogeneous_fleet_serve_bit_equal_with_zero_swaps() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let serving = ServingConfig {
+        max_batch: 2,
+        max_wait_ms: 1,
+        boards: 2,
+        ..Default::default()
+    };
+    let plain = Plan::builder()
+        .model("tinynet")
+        .conv_impl("pallas")
+        .artifacts_dir(dir.clone())
+        .serving(serving.clone())
+        .build()
+        .unwrap();
+    let fleet = Plan::builder()
+        .model("tinynet")
+        .conv_impl("pallas")
+        .artifacts_dir(dir)
+        .serve_model("tinynet")
+        .serving(serving)
+        .build()
+        .unwrap();
+    let old = plain.deploy().unwrap().serve().unwrap();
+    let new = fleet.deploy().unwrap().serve().unwrap();
+    for i in 0..4u64 {
+        let img = data::synth_images(1, (3, 16, 16), 40 + i);
+        let a = old.classify(img.clone()).unwrap();
+        let b = new.classify(img).unwrap();
+        assert_eq!(a.argmax, b.argmax, "request {i}");
+        assert_eq!(&a.logits[..], &b.logits[..], "request {i}");
+    }
+    let fs = new.fleet().expect("fleet service exposes FleetState");
+    assert_eq!(fs.total_swaps(), 0, "one model never swaps");
+    assert_eq!(fs.total_swap_nanos(), 0);
 }
 
 // ------------------------------------------------- sharding parity
