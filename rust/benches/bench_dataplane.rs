@@ -1,0 +1,287 @@
+//! Bench: the data plane itself — the `util::vecops` wide kernels
+//! against per-element scalar baselines, plus a 1 → N submitter-thread
+//! scaling row over the striped-lane coordinator.  Pinned into
+//! `BENCH_dataplane.json`.
+//!
+//! Two claims are asserted, not just recorded:
+//!
+//! - the wide gather and byte→f32 convert kernels move bytes at least
+//!   `KERNEL_SPEEDUP_FLOOR`× faster than the per-element scalar code
+//!   shape they replaced;
+//! - N submitter threads over N striped lanes retain at least
+//!   `SCALING_EFFICIENCY_FLOOR` of linear throughput scaling
+//!   (asserted only when the machine actually has ≥ 2 cores — set
+//!   `FFCNN_BENCH_CORES=1` to degrade gracefully on single-core CI).
+//!
+//! The scalar baselines pin every element through
+//! `std::hint::black_box`: without it LLVM auto-vectorizes the naive
+//! loop and the row measures the *same* SIMD code as the wide kernel.
+//! The pessimized loop is the honest stand-in for the pre-PR
+//! one-element-at-a-time copy shape.  Both shapes are checked
+//! bit-equal before timing — the speedup never buys a numerics drift.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ffcnn::config::{ServingConfig, SloPolicy};
+use ffcnn::coordinator::{InferenceService, Pace, Policy};
+use ffcnn::plan::Plan;
+use ffcnn::util::bench::Bench;
+use ffcnn::util::{vecops, Json};
+
+/// Gather shape: one large reply slab (rows × tinynet logit rows are
+/// too small to time; this is the shard-reassembly shape).
+const ROWS: usize = 512;
+/// tinynet image numel (3 × 16 × 16).
+const ROW_LEN: usize = 768;
+/// Bytes fed to the byte→f32 convert rows (1 MiB, a weight-blob chunk).
+const CONVERT_FLOATS: usize = 256 * 1024;
+/// Elements per quantize row.
+const QUANT_N: usize = 256 * 1024;
+/// Requests per `submit_many` group in the scaling rows.
+const GROUP: usize = 128;
+/// Groups pumped per thread per iteration.
+const GROUPS: usize = 4;
+/// Wide kernels must beat the scalar code shape by at least this.
+const KERNEL_SPEEDUP_FLOOR: f64 = 1.5;
+/// N threads must retain at least this fraction of linear scaling.
+const SCALING_EFFICIENCY_FLOOR: f64 = 0.35;
+
+/// Submitter-thread count: `FFCNN_BENCH_CORES` wins (CI runners lie
+/// about their usable parallelism), else the detected core count,
+/// capped at 8 like the service's parallel gather.
+fn bench_threads() -> usize {
+    std::env::var("FFCNN_BENCH_CORES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .min(8)
+}
+
+/// One closed-loop pump: `groups` bulk groups of `GROUP` requests.
+fn pump(svc: &InferenceService, image: &Arc<[f32]>, groups: usize) -> usize {
+    let mut served = 0usize;
+    for _ in 0..groups {
+        let set = svc
+            .submit_many(std::iter::repeat_with(|| image.clone()).take(GROUP))
+            .unwrap();
+        set.wait_each(|r| {
+            r.unwrap();
+            served += 1;
+        });
+    }
+    served
+}
+
+fn main() {
+    // `--check` dry-run: validate the previously written artifact's
+    // schema and exit (the CI drift gate).
+    if ffcnn::util::bench::check_mode(Path::new("BENCH_dataplane.json")) {
+        return;
+    }
+    let mut b = Bench::new("dataplane").with_budget(Duration::from_secs(2));
+    // bytes / ns == GB/s exactly (both are 1e9-based).
+    let gbps = |bytes: usize, ns: u128| bytes as f64 / ns as f64;
+
+    // ---- gather: rows → one flat slab --------------------------------
+    let rows: Vec<Vec<f32>> = (0..ROWS)
+        .map(|i| ffcnn::data::synth_images(1, (3, 16, 16), 100 + i as u64))
+        .collect();
+    let total = ROWS * ROW_LEN;
+    let mut dst = vec![0.0f32; total];
+    let mut dst_scalar = vec![0.0f32; total];
+    vecops::gather_rows(&mut dst, rows.iter().map(|r| r.as_slice()));
+    vecops::gather_rows_scalar(
+        &mut dst_scalar,
+        rows.iter().map(|r| r.as_slice()),
+    );
+    assert_eq!(dst, dst_scalar, "wide gather must stay bit-equal");
+
+    let gather_wide_ns = b
+        .run(&format!("gather_rows_wide_{total}"), || {
+            vecops::gather_rows(&mut dst, rows.iter().map(|r| r.as_slice()));
+            dst[total - 1]
+        })
+        .median_ns;
+    let gather_scalar_ns = b
+        .run(&format!("gather_rows_scalar_{total}"), || {
+            let mut off = 0usize;
+            for row in &rows {
+                for &x in row {
+                    dst[off] = std::hint::black_box(x);
+                    off += 1;
+                }
+            }
+            dst[total - 1]
+        })
+        .median_ns;
+
+    // ---- convert: little-endian bytes → f32 --------------------------
+    let bytes: Vec<u8> = (0..CONVERT_FLOATS)
+        .flat_map(|i| (i as f32 * 0.25 - 1000.0).to_le_bytes())
+        .collect();
+    assert_eq!(
+        vecops::bytes_to_f32_wide(&bytes),
+        vecops::bytes_to_f32_scalar(&bytes),
+        "wide convert must stay bit-equal"
+    );
+    let convert_wide_ns = b
+        .run(&format!("bytes_to_f32_wide_{}", bytes.len()), || {
+            vecops::bytes_to_f32_wide(&bytes).len()
+        })
+        .median_ns;
+    let convert_scalar_ns = b
+        .run(&format!("bytes_to_f32_scalar_{}", bytes.len()), || {
+            let mut out = Vec::with_capacity(bytes.len() / 4);
+            for c in bytes.chunks_exact(4) {
+                out.push(std::hint::black_box(f32::from_le_bytes([
+                    c[0], c[1], c[2], c[3],
+                ])));
+            }
+            out.len()
+        })
+        .median_ns;
+
+    // ---- quantize paths (recorded, not floor-asserted: the fp16
+    // convert is compute-bound, not a memcpy shape) ---------------------
+    let q_src: Vec<f32> = ffcnn::data::synth_images(1, (1, 512, 512), 9);
+    assert_eq!(q_src.len(), QUANT_N);
+    let mut q16 = vec![0u16; QUANT_N];
+    let mut q8 = vec![0i8; QUANT_N];
+    let mut deq = vec![0.0f32; QUANT_N];
+    let scale = vecops::i8_scale(1.0);
+    let f16_ns = b
+        .run(&format!("f16_quant_dequant_{QUANT_N}"), || {
+            vecops::quantize_f16(&q_src, &mut q16);
+            vecops::dequantize_f16(&q16, &mut deq);
+            deq[QUANT_N - 1]
+        })
+        .median_ns;
+    let i8_ns = b
+        .run(&format!("i8_quant_dequant_{QUANT_N}"), || {
+            vecops::quantize_i8(&q_src, &mut q8, scale);
+            vecops::dequantize_i8(&q8, &mut deq, scale);
+            deq[QUANT_N - 1]
+        })
+        .median_ns;
+
+    // ---- service scaling: 1 → N submitter threads --------------------
+    let threads = bench_threads();
+    let plan = Plan::builder()
+        .model("tinynet")
+        .pace(Pace::Immediate)
+        .policy(Policy::LeastOutstanding)
+        .serving(ServingConfig {
+            boards: threads,
+            max_batch: 8,
+            max_wait_ms: 0,
+            // Host-latency feedback on, so the scaling rows and the
+            // SLO controller see the same measured numbers.  The
+            // bounds are far above anything this bench reaches — the
+            // loop observes, it never sheds or tightens here.
+            slo: Some(
+                SloPolicy::target_ms(60_000, 1 << 20).with_host_feedback(),
+            ),
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let svc = plan.deploy().unwrap().serve().unwrap();
+    let image: Arc<[f32]> = ffcnn::data::synth_images(1, (3, 16, 16), 7).into();
+    for _ in 0..4 {
+        pump(&svc, &image, 1);
+    }
+
+    let one_ns = b
+        .run(&format!("service_scale_1t_{}", GROUP * GROUPS), || {
+            pump(&svc, &image, GROUPS)
+        })
+        .median_ns;
+    let n_ns = if threads >= 2 {
+        b.run(&format!("service_scale_{threads}t_{}", GROUP * GROUPS), || {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|_| {
+                        let image = image.clone();
+                        let svc = &svc;
+                        s.spawn(move || pump(svc, &image, GROUPS))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+            })
+        })
+        .median_ns
+    } else {
+        one_ns
+    };
+    let host_ewma_ms =
+        svc.control().map(|p| p.host_ms_per_item()).unwrap_or(0.0);
+
+    // ---- derived metrics + floors ------------------------------------
+    let fbytes = total * 4;
+    let gather_gbps = gbps(fbytes, gather_wide_ns);
+    let gather_speedup = gather_scalar_ns as f64 / gather_wide_ns as f64;
+    let convert_gbps = gbps(bytes.len(), convert_wide_ns);
+    let convert_speedup = convert_scalar_ns as f64 / convert_wide_ns as f64;
+    let rps = |n: usize, ns: u128| n as f64 / (ns as f64 / 1e9);
+    let rps_1t = rps(GROUP * GROUPS, one_ns);
+    let rps_nt = rps(threads * GROUP * GROUPS, n_ns);
+    let efficiency = if threads >= 2 {
+        rps_nt / (rps_1t * threads as f64)
+    } else {
+        1.0
+    };
+
+    println!(
+        "gather:  {gather_gbps:.2} GB/s, {gather_speedup:.2}x vs scalar\n\
+         convert: {convert_gbps:.2} GB/s, {convert_speedup:.2}x vs scalar\n\
+         f16 quant+dequant: {:.2} GB/s | i8 quant+dequant: {:.2} GB/s\n\
+         service: {rps_1t:.0} req/s @1t, {rps_nt:.0} req/s @{threads}t \
+         (efficiency {efficiency:.2}) | host EWMA {host_ewma_ms:.4} ms/item",
+        gbps(QUANT_N * 4, f16_ns),
+        gbps(QUANT_N * 4, i8_ns),
+    );
+
+    assert!(
+        gather_speedup >= KERNEL_SPEEDUP_FLOOR,
+        "wide gather regressed to {gather_speedup:.2}x vs scalar \
+         (floor {KERNEL_SPEEDUP_FLOOR}x)"
+    );
+    assert!(
+        convert_speedup >= KERNEL_SPEEDUP_FLOOR,
+        "wide byte→f32 convert regressed to {convert_speedup:.2}x vs \
+         scalar (floor {KERNEL_SPEEDUP_FLOOR}x)"
+    );
+    if threads >= 2 {
+        assert!(
+            efficiency >= SCALING_EFFICIENCY_FLOOR,
+            "striped-lane scaling collapsed: {efficiency:.2} efficiency \
+             at {threads} threads (floor {SCALING_EFFICIENCY_FLOOR})"
+        );
+    }
+
+    b.save_json(
+        Path::new("BENCH_dataplane.json"),
+        vec![
+            ("gather_gbps", Json::num(gather_gbps)),
+            ("gather_speedup_vs_scalar", Json::num(gather_speedup)),
+            ("convert_gbps", Json::num(convert_gbps)),
+            ("convert_speedup_vs_scalar", Json::num(convert_speedup)),
+            ("f16_quant_dequant_gbps", Json::num(gbps(QUANT_N * 4, f16_ns))),
+            ("i8_quant_dequant_gbps", Json::num(gbps(QUANT_N * 4, i8_ns))),
+            ("service_scale_threads", Json::num(threads as f64)),
+            ("requests_per_sec_1t", Json::num(rps_1t)),
+            ("requests_per_sec_nt", Json::num(rps_nt)),
+            ("scaling_efficiency", Json::num(efficiency)),
+            ("host_ewma_ms_per_item", Json::num(host_ewma_ms)),
+        ],
+    )
+    .expect("writing BENCH_dataplane.json");
+    b.finish();
+}

@@ -87,17 +87,31 @@ pub struct SloPolicy {
     pub max_queue: usize,
     /// What happens to arrivals past the bound.
     pub shed_policy: ShedPolicy,
+    /// Opt in to measured host-latency feedback: on non-FPGA-paced
+    /// boards the batcher feeds each executed batch's host latency
+    /// into a per-item EWMA that replaces the `retry_after_ms`
+    /// fallback constant (`ControlPlane::observe_host_ms`).  Off by
+    /// default — the hint then derives from the cost oracle alone,
+    /// the pre-opt-in behavior.
+    pub host_feedback: bool,
 }
 
 impl SloPolicy {
     /// An SLO with the given p99 target, a queue bound of `max_queue`,
-    /// shedding by rejection only.
+    /// shedding by rejection only, host feedback off.
     pub fn target_ms(p99_target_ms: u64, max_queue: usize) -> Self {
         SloPolicy {
             p99_target_ms,
             max_queue,
             shed_policy: ShedPolicy::RejectNewest,
+            host_feedback: false,
         }
+    }
+
+    /// This policy with measured host-latency feedback opted in.
+    pub fn with_host_feedback(mut self) -> Self {
+        self.host_feedback = true;
+        self
     }
 }
 
@@ -377,6 +391,7 @@ mod tests {
             p99_target_ms: 25,
             max_queue: 8,
             shed_policy: ShedPolicy::RateLimit(500),
+            host_feedback: true,
         });
         let j = c.to_json().to_string();
         let d = RunConfig::from_json(&Json::parse(&j).unwrap()).unwrap();

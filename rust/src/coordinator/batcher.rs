@@ -416,12 +416,18 @@ pub fn run_batcher(
                     debug_assert_eq!(pending[0].image.len(), image_numel);
                     BatchInput::Shared(pending[0].image.clone())
                 } else {
-                    staging.clear();
-                    staging.reserve(chunk * image_numel);
-                    for r in &pending[..chunk] {
-                        debug_assert_eq!(r.image.len(), image_numel);
-                        staging.extend_from_slice(&r.image);
-                    }
+                    // Wide gather kernel over the recycled staging
+                    // buffer: resize only adjusts the tail (steady
+                    // state with a stable chunk size writes nothing
+                    // here), then every row lands via one wide copy.
+                    staging.resize(chunk * image_numel, 0.0);
+                    crate::util::vecops::gather_rows(
+                        &mut staging,
+                        pending[..chunk].iter().map(|r| {
+                            debug_assert_eq!(r.image.len(), image_numel);
+                            &r.image[..]
+                        }),
+                    );
                     BatchInput::Staged(std::mem::take(&mut staging))
                 };
                 let artifact = artifact_for(model, chunk);
@@ -470,10 +476,13 @@ fn scatter(
             if let Some(plane) = control {
                 // Measured-latency feedback (one sample per executed
                 // batch, not per request): the plane EWMA-corrects its
-                // pipeline oracle toward what boards actually deliver.
-                // No-op unless the plane armed FPGA feedback
-                // (`Pace::Fpga` with an oracle present).
+                // pipeline oracle toward what boards actually deliver,
+                // or — on engine-less boards that opted in via
+                // `SloPolicy::host_feedback` — tracks the measured
+                // host latency directly.  Each call is a no-op unless
+                // its channel armed, and the service arms at most one.
                 plane.observe_fpga_ms(batch.batch, batch.fpga_ms);
+                plane.observe_host_ms(batch.batch, batch.host_ms);
             }
             for (i, r) in reqs.enumerate() {
                 // Batch of one: the whole output buffer is this

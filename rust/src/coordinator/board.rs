@@ -508,6 +508,12 @@ fn worker(
         }
     };
     if let Some(engine) = &engine {
+        // The CPU reference engine *models* the design point's
+        // datapath precision (quantize–dequantize round trips, see
+        // `runtime::cpu_ref`); the PJRT engine executes AOT artifacts
+        // whose precision is baked in at export.
+        #[cfg(not(feature = "pjrt"))]
+        engine.set_precision(spec.design.precision);
         for name in &spec.warm {
             if let Err(e) = engine.warm(name) {
                 let _ = ready.send(Err(e));
@@ -707,10 +713,10 @@ fn immediate_logits(
         ));
     }
     Ok(slab.take_with(job.batch * classes, |out| {
+        // Wide fill + strided scatter kernel: logit 0 of image i takes
+        // the image's first element, one strided store per image.
         out.fill(0.0);
-        for i in 0..job.batch {
-            out[i * classes] = input[i * image_numel];
-        }
+        crate::util::vecops::scatter_stride(out, classes, input, image_numel);
     }))
 }
 

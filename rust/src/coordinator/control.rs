@@ -44,7 +44,14 @@
 //!   ratio and rescales oracle rows with it before the batch-cap
 //!   decision — so on a heterogeneous fleet (or under model-swap
 //!   stalls) the ladder caps batches against delivered latency, not
-//!   the plan-level prediction.
+//!   the plan-level prediction.  Engine-less pacing has its own
+//!   channel ([`ControlPlane::observe_host_ms`]): with
+//!   `SloPolicy::host_feedback` opted in, `Pace::Immediate` batches
+//!   feed a measured per-item host-latency EWMA that replaces the
+//!   `retry_after_ms` fallback constant, so shed hints (and anything
+//!   reading [`ControlPlane::host_ms_per_item`], like
+//!   `bench_dataplane`'s scaling rows) quote the same numbers the
+//!   host actually delivers.
 //! - **Replay** ([`ControlEvent`]): the startup oracle table and every
 //!   knob move, with old → new values and the reason, append to a
 //!   typed event log with a deterministic `Display`.  Under
@@ -63,7 +70,13 @@ use std::time::Duration;
 use crate::config::{ShedPolicy, SloPolicy};
 use crate::coordinator::board::ServeError;
 use crate::coordinator::metrics::LatencyHistogram;
+use crate::coordinator::pool::ShardedCounter;
 use crate::util::sim::Nanos;
+
+/// Shards for the admitted/shed totals: every submitter core bumps
+/// these on every group, so they stripe like the slab (8 matches the
+/// service's `SLAB_STRIPES`).
+const COUNTER_SHARDS: usize = 8;
 
 /// Floor on the adaptive flush window: below ~0.1 ms the deadline is
 /// noise against thread-wake latency and tightening it further only
@@ -310,9 +323,17 @@ pub struct ControlPlane {
     /// commensurable with the cycle model and the correction must
     /// stay 1.0.
     fpga_feedback: AtomicBool,
+    /// Measured per-item host latency (EWMA, `f64` bits; 0.0 =
+    /// unobserved).  Fed by the batcher under `Pace::Immediate` when
+    /// [`ControlPlane::arm_host_feedback`] opted in.
+    host_ms: AtomicU64,
+    /// Whether measured host-latency feedback is armed
+    /// (`SloPolicy::host_feedback`; the service arms it only when the
+    /// boards are *not* FPGA-paced, so the two channels never mix).
+    host_feedback: AtomicBool,
     events: Mutex<Vec<ControlEvent>>,
-    shed: AtomicU64,
-    admitted: AtomicU64,
+    shed: ShardedCounter,
+    admitted: ShardedCounter,
 }
 
 impl ControlPlane {
@@ -348,9 +369,11 @@ impl ControlPlane {
             oracle,
             fpga_corr: AtomicU64::new(1.0f64.to_bits()),
             fpga_feedback: AtomicBool::new(false),
+            host_ms: AtomicU64::new(0.0f64.to_bits()),
+            host_feedback: AtomicBool::new(false),
             events: Mutex::new(events),
-            shed: AtomicU64::new(0),
-            admitted: AtomicU64::new(0),
+            shed: ShardedCounter::new(COUNTER_SHARDS),
+            admitted: ShardedCounter::new(COUNTER_SHARDS),
         })
     }
 
@@ -370,7 +393,7 @@ impl ControlPlane {
         now: Nanos,
     ) -> Result<(), ServeError> {
         if queued + n > self.knobs.max_queue() {
-            self.shed.fetch_add(n as u64, Ordering::Relaxed);
+            self.shed.add(n as u64);
             return Err(ServeError::Overloaded {
                 retry_after_ms: self.retry_after_ms(queued),
                 queue_depth: queued,
@@ -378,23 +401,31 @@ impl ControlPlane {
         }
         if let Some(bucket) = &self.bucket {
             if let Err(retry_after_ms) = bucket.try_take(n as u64, now) {
-                self.shed.fetch_add(n as u64, Ordering::Relaxed);
+                self.shed.add(n as u64);
                 return Err(ServeError::Overloaded {
                     retry_after_ms,
                     queue_depth: queued,
                 });
             }
         }
-        self.admitted.fetch_add(n as u64, Ordering::Relaxed);
+        self.admitted.add(n as u64);
         Ok(())
     }
 
-    /// Suggested client back-off: the oracle-predicted time to drain
-    /// the current queue, clamped to `[1, 1000]` ms.
+    /// Suggested client back-off: the predicted time to drain the
+    /// current queue, clamped to `[1, 1000]` ms.  Prefers the
+    /// measured host-latency EWMA when host feedback is armed and
+    /// fed; otherwise the cost oracle's per-item estimate; otherwise
+    /// a 1 ms/item placeholder.
     fn retry_after_ms(&self, queued: usize) -> u64 {
-        let per_item_ms = match self.oracle.last() {
-            Some(&ms) => ms / self.oracle.len() as f64,
-            None => 1.0,
+        let host = self.host_ms_per_item();
+        let per_item_ms = if host > 0.0 {
+            host
+        } else {
+            match self.oracle.last() {
+                Some(&ms) => ms / self.oracle.len() as f64,
+                None => 1.0,
+            }
         };
         ((queued.max(1) as f64 * per_item_ms).ceil() as u64).clamp(1, 1000)
     }
@@ -461,14 +492,61 @@ impl ControlPlane {
         );
     }
 
+    /// Arm measured host-latency feedback (the `SloPolicy`'s
+    /// `host_feedback` opt-in).  Call only when boards are *not*
+    /// FPGA-paced: the host EWMA and the fpga correction are separate
+    /// channels and the service arms exactly one.
+    pub fn arm_host_feedback(&self) {
+        self.host_feedback.store(true, Ordering::Relaxed);
+    }
+
+    /// Measured per-item host latency in milliseconds (EWMA), or 0.0
+    /// until armed and fed.
+    pub fn host_ms_per_item(&self) -> f64 {
+        f64::from_bits(self.host_ms.load(Ordering::Relaxed))
+    }
+
+    /// Record one executed batch's measured *host* latency (ROADMAP
+    /// item 2 leftover: feed real, non-paced engine latencies back
+    /// into the control loop).  The batcher calls this once per
+    /// executed batch at scatter, alongside
+    /// [`ControlPlane::observe_fpga_ms`]; only the armed channel
+    /// listens.  Normalized per item so batches of different sizes
+    /// feed one comparable series; consumed by the `retry_after_ms`
+    /// shed hint and exported via
+    /// [`ControlPlane::host_ms_per_item`].
+    pub fn observe_host_ms(&self, batch: usize, measured_ms: f64) {
+        if !self.host_feedback.load(Ordering::Relaxed) {
+            return;
+        }
+        if batch == 0 || !(measured_ms > 0.0) {
+            return;
+        }
+        let per_item = measured_ms / batch as f64;
+        let _ = self.host_ms.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |bits| {
+                let old = f64::from_bits(bits);
+                let new = if old == 0.0 {
+                    per_item // first observation seeds the EWMA
+                } else {
+                    (1.0 - FPGA_CORR_ALPHA) * old
+                        + FPGA_CORR_ALPHA * per_item
+                };
+                Some(new.to_bits())
+            },
+        );
+    }
+
     /// Requests shed at admission so far.
     pub fn shed_total(&self) -> u64 {
-        self.shed.load(Ordering::Relaxed)
+        self.shed.sum()
     }
 
     /// Requests admitted so far.
     pub fn admitted_total(&self) -> u64 {
-        self.admitted.load(Ordering::Relaxed)
+        self.admitted.sum()
     }
 
     /// Shed requests as a fraction of all arrivals (0 when idle).
@@ -764,6 +842,7 @@ mod tests {
             p99_target_ms: 10,
             max_queue: 64,
             shed_policy: ShedPolicy::RateLimit(100),
+            host_feedback: false,
         });
         assert!(plane.admit(100, 0, 0).is_ok(), "burst admits");
         match plane.admit(1, 0, 0).unwrap_err() {
@@ -910,6 +989,45 @@ mod tests {
         plane.observe_fpga_ms(99, 1.0);
         plane.observe_fpga_ms(2, -1.0);
         assert_eq!(plane.fpga_correction(), corr);
+    }
+
+    #[test]
+    fn host_feedback_feeds_the_retry_hint() {
+        // No oracle rows (the engine-less Immediate path).
+        let mut base = base_knobs();
+        base.max_queue = 4;
+        let plane = ControlPlane::new(
+            SloPolicy::target_ms(10, 4),
+            base,
+            1,
+            Vec::new(),
+        );
+        // Unarmed: observations are ignored and the hint falls back
+        // to the 1 ms/item placeholder.
+        plane.observe_host_ms(4, 40.0);
+        assert_eq!(plane.host_ms_per_item(), 0.0);
+        let hint_before = match plane.admit(8, 4, 0).unwrap_err() {
+            ServeError::Overloaded { retry_after_ms, .. } => retry_after_ms,
+            other => panic!("expected Overloaded, got {other:?}"),
+        };
+        assert_eq!(hint_before, 4, "placeholder: 1 ms x 4 queued");
+        // Armed: the measured per-item EWMA takes over.
+        plane.arm_host_feedback();
+        for _ in 0..60 {
+            plane.observe_host_ms(4, 40.0); // 10 ms per item
+        }
+        let per_item = plane.host_ms_per_item();
+        assert!((per_item - 10.0).abs() < 1e-6, "per_item = {per_item}");
+        match plane.admit(8, 4, 0).unwrap_err() {
+            ServeError::Overloaded { retry_after_ms, .. } => {
+                assert_eq!(retry_after_ms, 40, "measured: 10 ms x 4 queued");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // Degenerate observations are ignored.
+        plane.observe_host_ms(0, 5.0);
+        plane.observe_host_ms(4, -1.0);
+        assert_eq!(plane.host_ms_per_item(), per_item);
     }
 
     #[test]

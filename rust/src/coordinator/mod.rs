@@ -16,9 +16,11 @@
 //!   [`ServeError::BoardLost`] instead of a hang.
 //! - [`pool`] — the memory machinery: [`Padded`] (cache-line-aligned
 //!   atomics, no false sharing between hot counters), [`ArcStack`]
-//!   (lock-free `Arc` slot pool) and [`StripedSlab`] (per-thread
-//!   stripes over the reply-buffer slab, so N submitters never
-//!   serialize on one slab mutex).
+//!   (lock-free `Arc` slot pool), [`StripedSlab`] / [`StripedPool`]
+//!   (per-thread stripes over the reply-buffer slab and the scratch
+//!   freelist, so N submitters never serialize on one mutex) and
+//!   [`ShardedCounter`] (per-thread-striped statistics counters —
+//!   one relaxed `fetch_add` on the home shard, summed on read).
 //! - [`router`] — a shared [`StealPool`] (bounded per-board queues,
 //!   pinned or work-stealing) plus the [`Router`] policy layer:
 //!   round-robin / least-outstanding / work-stealing with admission
@@ -64,6 +66,32 @@
 //! Everything is std threads (no async runtime in the offline build
 //! environment); the PJRT engine's `!Send` wrappers pin each engine to
 //! its board thread anyway, which keeps the design honest.
+//!
+//! # Hot-path data plane
+//!
+//! Every bulk copy on the submit→gather path runs through the wide
+//! kernels in [`util::vecops`](crate::util::vecops), each of which is
+//! pinned bit-equal to a scalar reference oracle by property tests:
+//!
+//! - the batcher's staging fill and the service's reply-slab gather
+//!   use `gather_rows` (whole-row `copy_from_slice`, which LLVM turns
+//!   into SIMD moves);
+//! - `Pace::Immediate` boards fill their echo logits with one
+//!   `fill` + `scatter_stride` pass instead of a per-image loop;
+//! - weight-blob decode goes through `bytes_to_f32_wide` (aligned
+//!   zero-copy reinterpret with a misaligned per-element fallback).
+//!
+//! Multi-core scaling rides the same layout: in pinned mode the
+//! [`StealPool`] keeps **per-core striped submission lanes** (each
+//! lane its own mutex + condvars, submitters hash to a home lane) so
+//! concurrent `submit_many` groups never contend on one intake lock;
+//! scratch bundles check out of a [`StripedPool`] and shed/admit
+//! statistics land on a [`ShardedCounter`].  Reply gathers beyond
+//! `PAR_GATHER_MIN` floats fan out across a bounded scoped-thread
+//! team over disjoint row ranges (never under the sim clock, so
+//! seeded replays stay byte-identical).
+//! `rust/benches/bench_dataplane.rs` pins the kernel speedups and the
+//! 1→N-thread scaling efficiency in `BENCH_dataplane.json`.
 //!
 //! # Simulated time
 //!
@@ -134,6 +162,8 @@
 //! [`ArcStack`]: pool::ArcStack
 //! [`Padded`]: pool::Padded
 //! [`StripedSlab`]: pool::StripedSlab
+//! [`StripedPool`]: pool::StripedPool
+//! [`ShardedCounter`]: pool::ShardedCounter
 //! [`StealPool`]: router::StealPool
 //! [`Router`]: router::Router
 //! [`Router::route_many`]: router::Router::route_many
@@ -163,7 +193,7 @@ pub use control::{
 pub use sim::{run_scenario, run_seeds, scenario_names, SimtestReport};
 pub use metrics::{LatencyHistogram, LatencySummary};
 pub use oneshot::{OneShot, OneShotSender};
-pub use pool::{ArcStack, Padded, StripedSlab};
+pub use pool::{ArcStack, Padded, ShardedCounter, StripedPool, StripedSlab};
 pub use router::{FleetState, Policy, Router, RouterGuard, StealPool};
 pub use service::{
     InferenceService, PendingBatch, PendingReply, PendingSet, ServeReport,

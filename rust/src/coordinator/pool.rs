@@ -1,6 +1,6 @@
 //! Contention-control primitives for the serving hot path: padded
-//! counters, a lock-free stack of reusable `Arc` slots, and a striped
-//! buffer slab.
+//! counters, a lock-free stack of reusable `Arc` slots, striped
+//! buffer slabs/object pools, and sharded counters.
 //!
 //! The raw-speed pass (ROADMAP item 4) found two scaling walls in the
 //! coordinator: false sharing between per-board counters packed into
@@ -9,6 +9,10 @@
 //! hot atomic its own cache line; [`StripedSlab`] fixes the second by
 //! sharding the slab across stripes keyed on the calling thread; and
 //! [`ArcStack`] keeps the reply-slot freelist entirely lock-free.
+//! The multi-core pass generalized the stripe idea: [`StripedPool`]
+//! stripes any recycled object (the service's batch scratch), and
+//! [`ShardedCounter`] stripes a hot statistics counter so N cores
+//! increment N cache lines instead of bouncing one.
 
 use std::cell::Cell;
 use std::ops::Deref;
@@ -153,19 +157,7 @@ impl StripedSlab {
     }
 
     fn home(&self) -> &Mutex<ReplySlab> {
-        let idx = HOME_STRIPE.with(|h| {
-            let cur = h.get();
-            if cur != 0 {
-                cur - 1
-            } else {
-                let assigned = NEXT_STRIPE
-                    .fetch_add(1, Ordering::Relaxed)
-                    % self.stripes.len().max(1);
-                h.set(assigned + 1);
-                assigned
-            }
-        });
-        &self.stripes[idx % self.stripes.len()].0
+        &self.stripes[home_stripe(self.stripes.len())].0
     }
 
     /// Copy `src` into a recycled (or new) shared buffer.
@@ -182,6 +174,97 @@ impl StripedSlab {
     /// Retain a filled buffer in the calling thread's stripe.
     pub fn put_back(&self, buf: &Arc<[f32]>) {
         self.home().lock().unwrap().put_back(buf);
+    }
+}
+
+/// The calling thread's home stripe index modulo `n` (round-robin
+/// assigned at first touch, sticky thereafter).  All striped
+/// structures share one assignment so a submitter thread touches the
+/// same stripe of every pool.
+pub fn home_stripe(n: usize) -> usize {
+    let idx = HOME_STRIPE.with(|h| {
+        let cur = h.get();
+        if cur != 0 {
+            cur - 1
+        } else {
+            let assigned = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed);
+            h.set(assigned + 1);
+            assigned
+        }
+    });
+    idx % n.max(1)
+}
+
+/// A per-thread-striped freelist of recycled objects (the service's
+/// `BatchScratch`, for example).  Each stripe is its own padded
+/// mutex, so N submitter cores check out / retire scratch through N
+/// independent locks instead of serializing on one.  Objects may
+/// retire to a different stripe than they were drawn from; every
+/// stripe caps its depth so the pool stays bounded.
+pub struct StripedPool<T> {
+    stripes: Box<[Padded<Mutex<Vec<T>>>]>,
+    per_stripe_cap: usize,
+}
+
+impl<T> StripedPool<T> {
+    pub fn new(stripes: usize, per_stripe_cap: usize) -> Self {
+        let stripes = (0..stripes.max(1))
+            .map(|_| Padded::new(Mutex::new(Vec::new())))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        StripedPool { stripes, per_stripe_cap: per_stripe_cap.max(1) }
+    }
+
+    /// Draw a recycled object from the calling thread's stripe, or
+    /// `None` if that stripe is empty (the caller constructs fresh —
+    /// a cold-path allocation, never steady state).
+    pub fn checkout(&self) -> Option<T> {
+        let home = home_stripe(self.stripes.len());
+        self.stripes[home].0.lock().unwrap().pop()
+    }
+
+    /// Return an object to the calling thread's stripe; dropped if
+    /// the stripe is at capacity (the pool never grows unbounded).
+    pub fn retire(&self, value: T) {
+        let home = home_stripe(self.stripes.len());
+        let mut stripe = self.stripes[home].0.lock().unwrap();
+        if stripe.len() < self.per_stripe_cap {
+            stripe.push(value);
+        }
+    }
+}
+
+/// A statistics counter sharded across padded per-stripe atomics.
+/// `add` touches only the calling thread's stripe (one uncontended
+/// cache line); `sum` folds all stripes.  Totals are exact once
+/// writers quiesce — reads racing writers may miss in-flight
+/// increments, which is the same contract a single relaxed atomic
+/// gives.  Used for the control plane's admitted/shed totals, which
+/// every submitter core bumps on every group.
+#[derive(Debug)]
+pub struct ShardedCounter {
+    shards: Box<[Padded<std::sync::atomic::AtomicU64>]>,
+}
+
+impl ShardedCounter {
+    pub fn new(shards: usize) -> Self {
+        let shards = (0..shards.max(1))
+            .map(|_| Padded::new(std::sync::atomic::AtomicU64::new(0)))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ShardedCounter { shards }
+    }
+
+    pub fn add(&self, n: u64) {
+        let home = home_stripe(self.shards.len());
+        self.shards[home].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
     }
 }
 
@@ -263,6 +346,45 @@ mod tests {
         slab.put_back(&buf);
         drop(buf);
         assert!(slab.grab(8).is_some(), "slot recycled within stripe");
+    }
+
+    #[test]
+    fn striped_pool_checkout_retire_roundtrip() {
+        let pool: StripedPool<Vec<u8>> = StripedPool::new(4, 2);
+        assert!(pool.checkout().is_none(), "fresh pool is empty");
+        pool.retire(vec![1, 2, 3]);
+        let got = pool.checkout().expect("retired object recycled");
+        assert_eq!(got, vec![1, 2, 3]);
+        assert!(pool.checkout().is_none());
+    }
+
+    #[test]
+    fn striped_pool_caps_per_stripe_depth() {
+        let pool: StripedPool<u64> = StripedPool::new(1, 2);
+        for i in 0..5 {
+            pool.retire(i);
+        }
+        assert!(pool.checkout().is_some());
+        assert!(pool.checkout().is_some());
+        assert!(pool.checkout().is_none(), "depth capped at 2");
+    }
+
+    #[test]
+    fn sharded_counter_sums_across_threads() {
+        let ctr = Arc::new(ShardedCounter::new(8));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = ctr.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.add(1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(ctr.sum(), 4000);
     }
 
     #[test]

@@ -13,13 +13,18 @@
 //!   stealing the pool drains at the speed of whichever boards are
 //!   free (the starvation regression test pins this).
 //!
-//! Every policy now shares one backend: the [`StealPool`], built with
-//! stealing on ([`StealPool::new`]) or off
-//! ([`StealPool::new_pinned`], the channel-per-board semantics of the
-//! round-robin/least-outstanding policies).  Each board's deque is
+//! Every policy shares one [`StealPool`] facade over two backends:
+//! a stealing pool ([`StealPool::new`]) keeps every deque under one
+//! mutex, because victim selection must observe all queues
+//! atomically; a pinned pool ([`StealPool::new_pinned`], the
+//! channel-per-board semantics of the round-robin/least-outstanding
+//! policies) **stripes** into one independent intake lane per board —
+//! its own mutex + condvar pair on its own cache-line pair — so N
+//! submitter threads feeding N boards never serialize on a shared
+//! pool lock or wake each other's consumers.  Each board's deque is
 //! bounded by the admission-control queue depth and **preallocated**,
 //! so the enqueue path never allocates; per-board depths mirror into
-//! padded atomics so [`StealPool::queued`] never takes the pool lock.
+//! padded atomics so [`StealPool::queued`] never takes a pool lock.
 //!
 //! Bulk is the default: [`Router::route_many`] accounts a whole
 //! shard's fan-out with **one** outstanding-counter update and
@@ -171,19 +176,47 @@ struct PoolState {
     closed: bool,
 }
 
+/// One board's private intake lane in a striped (pinned) pool: deque,
+/// mutex and both condvars live together on their own cache-line
+/// pair, so traffic on one board's lane never touches another's.
+struct Lane {
+    state: Mutex<LaneState>,
+    not_empty: ClockCondvar,
+    not_full: ClockCondvar,
+}
+
+struct LaneState {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Storage behind a [`StealPool`] (see module docs).
+enum Backend {
+    /// Every deque under one mutex — the stealing pool, where victim
+    /// selection must see all queues atomically under the caller's
+    /// single lock acquisition.
+    Unified {
+        state: Mutex<PoolState>,
+        not_empty: ClockCondvar,
+        not_full: ClockCondvar,
+    },
+    /// One independent [`Lane`] per board — pinned pools, where a
+    /// push or pop only ever touches its own board's queue, so each
+    /// lane gets its own lock and wakes.
+    Striped(Box<[Padded<Lane>]>),
+}
+
 /// Shared per-board request deques, with or without stealing (see
 /// module docs).
 ///
 /// Submitters push onto a chosen board's deque; each board pops its
 /// own deque first and — when built with [`StealPool::new`] — steals
-/// the oldest request from the most loaded peer when idle.  All
-/// deques share one mutex; producers and consumers park on separate
-/// condvars (`not_empty` / `not_full`) so a pop only ever wakes
-/// blocked pushers, never sibling poppers.
+/// the oldest request from the most loaded peer when idle.  Producers
+/// and consumers park on separate condvars (`not_empty` / `not_full`)
+/// so a pop only ever wakes blocked pushers, never sibling poppers;
+/// pinned pools further stripe lock + condvars per board.
 pub struct StealPool {
-    state: Mutex<PoolState>,
-    not_empty: ClockCondvar,
-    not_full: ClockCondvar,
+    backend: Backend,
     /// Lock-free mirror of each deque's length.
     depths: Box<[Padded<AtomicUsize>]>,
     capacity: usize,
@@ -217,17 +250,38 @@ impl StealPool {
 
     fn build(boards: usize, capacity: usize, steal: bool, clock: Clock) -> Arc<Self> {
         let capacity = capacity.max(1);
+        // Preallocated at the admission bound either way: pushes up
+        // to `capacity` never reallocate.
+        let backend = if steal {
+            Backend::Unified {
+                state: Mutex::new(PoolState {
+                    queues: (0..boards)
+                        .map(|_| VecDeque::with_capacity(capacity))
+                        .collect(),
+                    closed: false,
+                }),
+                not_empty: ClockCondvar::new(),
+                not_full: ClockCondvar::new(),
+            }
+        } else {
+            Backend::Striped(
+                (0..boards)
+                    .map(|_| {
+                        Padded::new(Lane {
+                            state: Mutex::new(LaneState {
+                                queue: VecDeque::with_capacity(capacity),
+                                closed: false,
+                            }),
+                            not_empty: ClockCondvar::new(),
+                            not_full: ClockCondvar::new(),
+                        })
+                    })
+                    .collect::<Vec<_>>()
+                    .into_boxed_slice(),
+            )
+        };
         Arc::new(StealPool {
-            state: Mutex::new(PoolState {
-                // Preallocated at the admission bound: pushes up to
-                // `capacity` never reallocate.
-                queues: (0..boards)
-                    .map(|_| VecDeque::with_capacity(capacity))
-                    .collect(),
-                closed: false,
-            }),
-            not_empty: ClockCondvar::new(),
-            not_full: ClockCondvar::new(),
+            backend,
             depths: (0..boards)
                 .map(|_| Padded::new(AtomicUsize::new(0)))
                 .collect::<Vec<_>>()
@@ -266,18 +320,37 @@ impl StealPool {
         board: usize,
         req: Request,
     ) -> std::result::Result<(), (Request, bool)> {
-        let mut st = self.state.lock().unwrap();
-        if st.closed {
-            return Err((req, true));
+        match &self.backend {
+            Backend::Unified { state, not_empty, .. } => {
+                let mut st = state.lock().unwrap();
+                if st.closed {
+                    return Err((req, true));
+                }
+                if st.queues[board].len() >= self.capacity {
+                    return Err((req, false));
+                }
+                st.queues[board].push_back(req);
+                self.depths[board].fetch_add(1, Ordering::Relaxed);
+                drop(st);
+                not_empty.notify_all();
+                Ok(())
+            }
+            Backend::Striped(lanes) => {
+                let lane = &lanes[board].0;
+                let mut st = lane.state.lock().unwrap();
+                if st.closed {
+                    return Err((req, true));
+                }
+                if st.queue.len() >= self.capacity {
+                    return Err((req, false));
+                }
+                st.queue.push_back(req);
+                self.depths[board].fetch_add(1, Ordering::Relaxed);
+                drop(st);
+                lane.not_empty.notify_all();
+                Ok(())
+            }
         }
-        if st.queues[board].len() >= self.capacity {
-            return Err((req, false));
-        }
-        st.queues[board].push_back(req);
-        self.depths[board].fetch_add(1, Ordering::Relaxed);
-        drop(st);
-        self.not_empty.notify_all();
-        Ok(())
     }
 
     /// Blocking enqueue (parks while the board's deque is full);
@@ -287,19 +360,40 @@ impl StealPool {
         board: usize,
         req: Request,
     ) -> std::result::Result<(), Request> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if st.closed {
-                return Err(req);
+        match &self.backend {
+            Backend::Unified { state, not_empty, not_full } => {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if st.closed {
+                        return Err(req);
+                    }
+                    if st.queues[board].len() < self.capacity {
+                        st.queues[board].push_back(req);
+                        self.depths[board].fetch_add(1, Ordering::Relaxed);
+                        drop(st);
+                        not_empty.notify_all();
+                        return Ok(());
+                    }
+                    st = not_full.wait(&self.clock, state, st);
+                }
             }
-            if st.queues[board].len() < self.capacity {
-                st.queues[board].push_back(req);
-                self.depths[board].fetch_add(1, Ordering::Relaxed);
-                drop(st);
-                self.not_empty.notify_all();
-                return Ok(());
+            Backend::Striped(lanes) => {
+                let lane = &lanes[board].0;
+                let mut st = lane.state.lock().unwrap();
+                loop {
+                    if st.closed {
+                        return Err(req);
+                    }
+                    if st.queue.len() < self.capacity {
+                        st.queue.push_back(req);
+                        self.depths[board].fetch_add(1, Ordering::Relaxed);
+                        drop(st);
+                        lane.not_empty.notify_all();
+                        return Ok(());
+                    }
+                    st = lane.not_full.wait(&self.clock, &lane.state, st);
+                }
             }
-            st = self.not_full.wait(&self.clock, &self.state, st);
         }
     }
 
@@ -308,6 +402,10 @@ impl StealPool {
     /// request).  Drains `reqs` front-to-back; blocks while the deque
     /// is full.  On a closed pool the unsent tail (including the
     /// current request) stays in `reqs` and `Err` is returned.
+    ///
+    /// On a striped pool the lock (and wake) taken is the target
+    /// board's private lane, so concurrent bulk submitters targeting
+    /// different boards land their groups fully in parallel.
     pub fn push_many(
         &self,
         board: usize,
@@ -316,32 +414,64 @@ impl StealPool {
         if reqs.is_empty() {
             return Ok(());
         }
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if st.closed {
-                drop(st);
-                self.not_empty.notify_all();
-                return Err(());
-            }
-            let space = self.capacity.saturating_sub(st.queues[board].len());
-            let take = space.min(reqs.len());
-            if take > 0 {
-                for req in reqs.drain(..take) {
-                    st.queues[board].push_back(req);
+        match &self.backend {
+            Backend::Unified { state, not_empty, not_full } => {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if st.closed {
+                        drop(st);
+                        not_empty.notify_all();
+                        return Err(());
+                    }
+                    let space =
+                        self.capacity.saturating_sub(st.queues[board].len());
+                    let take = space.min(reqs.len());
+                    if take > 0 {
+                        for req in reqs.drain(..take) {
+                            st.queues[board].push_back(req);
+                        }
+                        self.depths[board].fetch_add(take, Ordering::Relaxed);
+                    }
+                    if reqs.is_empty() {
+                        drop(st);
+                        not_empty.notify_all();
+                        return Ok(());
+                    }
+                    // Deque full with work left: publish what landed so
+                    // consumers run, then park until space frees.
+                    // (notify while still holding the lock — the wake
+                    // lands after the wait releases it.)
+                    not_empty.notify_all();
+                    st = not_full.wait(&self.clock, state, st);
                 }
-                self.depths[board].fetch_add(take, Ordering::Relaxed);
             }
-            if reqs.is_empty() {
-                drop(st);
-                self.not_empty.notify_all();
-                return Ok(());
+            Backend::Striped(lanes) => {
+                let lane = &lanes[board].0;
+                let mut st = lane.state.lock().unwrap();
+                loop {
+                    if st.closed {
+                        drop(st);
+                        lane.not_empty.notify_all();
+                        return Err(());
+                    }
+                    let space =
+                        self.capacity.saturating_sub(st.queue.len());
+                    let take = space.min(reqs.len());
+                    if take > 0 {
+                        for req in reqs.drain(..take) {
+                            st.queue.push_back(req);
+                        }
+                        self.depths[board].fetch_add(take, Ordering::Relaxed);
+                    }
+                    if reqs.is_empty() {
+                        drop(st);
+                        lane.not_empty.notify_all();
+                        return Ok(());
+                    }
+                    lane.not_empty.notify_all();
+                    st = lane.not_full.wait(&self.clock, &lane.state, st);
+                }
             }
-            // Deque full with work left: publish what landed so
-            // consumers run, then park until space frees.  (notify
-            // while still holding the lock — the wake lands after the
-            // wait releases it.)
-            self.not_empty.notify_all();
-            st = self.not_full.wait(&self.clock, &self.state, st);
         }
     }
 
@@ -388,65 +518,148 @@ impl StealPool {
         r
     }
 
-    /// Non-blocking dequeue for `board` (own deque, then steal).
-    pub fn try_pop(&self, board: usize) -> Option<Request> {
-        let mut st = self.state.lock().unwrap();
-        let r = self.take(&mut st, board);
+    /// Pop a striped lane's own queue (no stealing by construction).
+    fn lane_take(&self, st: &mut LaneState, board: usize) -> Option<Request> {
+        let r = st.queue.pop_front();
         if r.is_some() {
-            drop(st);
-            // A slot freed: wake blocked pushers.
-            self.not_full.notify_all();
+            self.depths[board].fetch_sub(1, Ordering::Relaxed);
         }
         r
     }
 
+    /// Non-blocking dequeue for `board` (own deque, then steal).
+    pub fn try_pop(&self, board: usize) -> Option<Request> {
+        match &self.backend {
+            Backend::Unified { state, not_full, .. } => {
+                let mut st = state.lock().unwrap();
+                let r = self.take(&mut st, board);
+                if r.is_some() {
+                    drop(st);
+                    // A slot freed: wake blocked pushers.
+                    not_full.notify_all();
+                }
+                r
+            }
+            Backend::Striped(lanes) => {
+                let lane = &lanes[board].0;
+                let mut st = lane.state.lock().unwrap();
+                let r = self.lane_take(&mut st, board);
+                if r.is_some() {
+                    drop(st);
+                    lane.not_full.notify_all();
+                }
+                r
+            }
+        }
+    }
+
     /// Blocking dequeue; `None` once the pool is closed and drained.
     pub fn pop(&self, board: usize) -> Option<Request> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if let Some(r) = self.take(&mut st, board) {
-                drop(st);
-                self.not_full.notify_all();
-                return Some(r);
+        match &self.backend {
+            Backend::Unified { state, not_empty, not_full } => {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if let Some(r) = self.take(&mut st, board) {
+                        drop(st);
+                        not_full.notify_all();
+                        return Some(r);
+                    }
+                    if st.closed {
+                        return None;
+                    }
+                    st = not_empty.wait(&self.clock, state, st);
+                }
             }
-            if st.closed {
-                return None;
+            Backend::Striped(lanes) => {
+                let lane = &lanes[board].0;
+                let mut st = lane.state.lock().unwrap();
+                loop {
+                    if let Some(r) = self.lane_take(&mut st, board) {
+                        drop(st);
+                        lane.not_full.notify_all();
+                        return Some(r);
+                    }
+                    if st.closed {
+                        return None;
+                    }
+                    st = lane.not_empty.wait(&self.clock, &lane.state, st);
+                }
             }
-            st = self.not_empty.wait(&self.clock, &self.state, st);
         }
     }
 
     /// Dequeue with a deadline (the batcher's flush window).
     pub fn pop_timeout(&self, board: usize, timeout: Duration) -> Popped {
         let deadline = self.clock.now_nanos().saturating_add(timeout.as_nanos() as Nanos);
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if let Some(r) = self.take(&mut st, board) {
-                drop(st);
-                self.not_full.notify_all();
-                return Popped::Req(r);
+        match &self.backend {
+            Backend::Unified { state, not_empty, not_full } => {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if let Some(r) = self.take(&mut st, board) {
+                        drop(st);
+                        not_full.notify_all();
+                        return Popped::Req(r);
+                    }
+                    if st.closed {
+                        return Popped::Closed;
+                    }
+                    if self.clock.now_nanos() >= deadline {
+                        return Popped::TimedOut;
+                    }
+                    // Saturating by construction: even a deadline that
+                    // races past between the check and the wait cannot
+                    // underflow and panic the batcher thread (the
+                    // coordinator hardening pass); `wait_deadline`
+                    // reports the timeout itself.
+                    let (g, _) = not_empty
+                        .wait_deadline(&self.clock, state, st, deadline);
+                    st = g;
+                }
             }
-            if st.closed {
-                return Popped::Closed;
+            Backend::Striped(lanes) => {
+                let lane = &lanes[board].0;
+                let mut st = lane.state.lock().unwrap();
+                loop {
+                    if let Some(r) = self.lane_take(&mut st, board) {
+                        drop(st);
+                        lane.not_full.notify_all();
+                        return Popped::Req(r);
+                    }
+                    if st.closed {
+                        return Popped::Closed;
+                    }
+                    if self.clock.now_nanos() >= deadline {
+                        return Popped::TimedOut;
+                    }
+                    let (g, _) = lane.not_empty.wait_deadline(
+                        &self.clock,
+                        &lane.state,
+                        st,
+                        deadline,
+                    );
+                    st = g;
+                }
             }
-            if self.clock.now_nanos() >= deadline {
-                return Popped::TimedOut;
-            }
-            // Saturating by construction: even a deadline that races
-            // past between the check and the wait cannot underflow and
-            // panic the batcher thread (the coordinator hardening
-            // pass); `wait_deadline` reports the timeout itself.
-            let (g, _) = self.not_empty.wait_deadline(&self.clock, &self.state, st, deadline);
-            st = g;
         }
     }
 
     /// Close the pool: pops drain what is queued then return
     /// `None`/`Closed`; pushes fail.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
+        match &self.backend {
+            Backend::Unified { state, not_empty, not_full } => {
+                state.lock().unwrap().closed = true;
+                not_empty.notify_all();
+                not_full.notify_all();
+            }
+            Backend::Striped(lanes) => {
+                for lane in lanes.iter() {
+                    lane.0.state.lock().unwrap().closed = true;
+                    lane.0.not_empty.notify_all();
+                    lane.0.not_full.notify_all();
+                }
+            }
+        }
     }
 }
 
@@ -806,6 +1019,72 @@ mod tests {
         pool.try_push(0, dummy_request(0)).map_err(|_| ()).unwrap();
         assert!(pool.try_pop(1).is_none(), "pinned pools must not steal");
         assert_eq!(pool.try_pop(0).unwrap().id, 0);
+    }
+
+    #[test]
+    fn pinned_full_lane_does_not_block_other_lanes() {
+        // Striped intake: board 0's lane being at capacity must not
+        // reject or delay traffic to board 1's independent lane.
+        let pool = StealPool::new_pinned(2, 1);
+        pool.try_push(0, dummy_request(0)).map_err(|_| ()).unwrap();
+        let (req, closed) =
+            pool.try_push(0, dummy_request(1)).err().unwrap();
+        assert!(!closed);
+        assert_eq!(req.id, 1);
+        pool.try_push(1, dummy_request(2)).map_err(|_| ()).unwrap();
+        assert_eq!((pool.queued(0), pool.queued(1)), (1, 1));
+    }
+
+    #[test]
+    fn striped_lanes_preserve_per_lane_fifo_under_concurrency() {
+        // 4 producer threads blocking-push into 4 distinct lanes
+        // (capacity 2, so the not_full park path runs) while 4
+        // consumers drain.  Each lane must deliver its own stream in
+        // exact FIFO order with nothing lost or cross-wired.
+        const PER_LANE: u64 = 200;
+        let pool = StealPool::new_pinned(4, 2);
+        std::thread::scope(|scope| {
+            let consumers: Vec<_> = (0..4usize)
+                .map(|board| {
+                    let pool = &pool;
+                    scope.spawn(move || {
+                        let mut got = Vec::new();
+                        while let Some(r) = pool.pop(board) {
+                            got.push(r.id);
+                        }
+                        let want: Vec<u64> = (0..PER_LANE)
+                            .map(|i| board as u64 * 1000 + i)
+                            .collect();
+                        assert_eq!(got, want, "lane {board} misordered");
+                    })
+                })
+                .collect();
+            let producers: Vec<_> = (0..4usize)
+                .map(|board| {
+                    let pool = &pool;
+                    scope.spawn(move || {
+                        for i in 0..PER_LANE {
+                            pool.push(
+                                board,
+                                dummy_request(board as u64 * 1000 + i),
+                            )
+                            .map_err(|_| ())
+                            .unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for p in producers {
+                p.join().unwrap();
+            }
+            pool.close();
+            for c in consumers {
+                c.join().unwrap();
+            }
+        });
+        for board in 0..4 {
+            assert_eq!(pool.queued(board), 0);
+        }
     }
 
     // ------------------------------------------------- work stealing

@@ -22,7 +22,13 @@
 //! - per-image buffers and batch gather buffers come from
 //!   [`StripedSlab`]s (per-thread stripes, no global slab mutex);
 //! - sharded submissions check out a pooled scratch bundle (request
-//!   vec, slot vec, per-board accumulators) and retire it on gather;
+//!   vec, slot vec, per-board accumulators) from a per-thread-striped
+//!   [`StripedPool`] and retire it on gather — N submitter threads
+//!   never serialize on one scratch mutex;
+//! - batch gathers run through the wide-copy kernels in
+//!   [`crate::util::vecops`], and a gather large enough to amortize
+//!   thread handoff ([`PAR_GATHER_MIN`] floats, real clock only)
+//!   splits across scoped workers over disjoint row ranges;
 //! - [`Router::route_many`] accounts a whole shard with ONE
 //!   outstanding-counter update and lands it under one pool lock with
 //!   one consumer wake.
@@ -75,7 +81,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use anyhow::anyhow;
@@ -87,7 +93,7 @@ use super::board::{BoardHandle, BoardSpec, FaultPlan, Pace, ServeError};
 use super::control::{ControlEvent, ControlPlane, KnobValues, SloController};
 use super::metrics::{LatencyHistogram, LatencySummary};
 use super::oneshot::OneShot;
-use super::pool::{ArcStack, Padded, StripedSlab};
+use super::pool::{ArcStack, Padded, StripedPool, StripedSlab};
 use super::router::{FleetState, Policy, Router, RouterGuard, StealPool};
 use crate::config::{RunConfig, ShardPolicy};
 use crate::data::TraceRequest;
@@ -140,6 +146,65 @@ impl std::fmt::Display for ServeReport {
 /// Number of slab stripes (submitter threads hash onto these).
 const SLAB_STRIPES: usize = 8;
 
+/// Scratch bundles kept per stripe; beyond this a retired bundle is
+/// dropped so an in-flight burst can't pin memory forever.
+const SCRATCH_PER_STRIPE: usize = 32;
+
+/// Gather sizes (total floats) below this always copy serially: the
+/// wide single-thread kernel beats thread handoff until the buffer is
+/// large enough to amortize the scoped-spawn cost.
+const PAR_GATHER_MIN: usize = 1 << 16;
+
+/// Gather per-image reply logits into one flat buffer through the
+/// wide-copy kernel.  Gathers of at least [`PAR_GATHER_MIN`] floats
+/// split across scoped worker threads over disjoint row ranges
+/// (`split_at_mut`, so the copy itself stays the same kernel per
+/// chunk) — but only on the real clock: scoped workers are not
+/// registered sim threads, and a sim gather must stay deterministic.
+fn gather_replies(
+    dst: &mut [f32],
+    replies: &[Reply],
+    classes: usize,
+    clock: &Clock,
+) {
+    debug_assert_eq!(dst.len(), replies.len() * classes);
+    let serial = dst.len() < PAR_GATHER_MIN || clock.is_sim();
+    let workers = if serial {
+        1
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(replies.len())
+            .min(8)
+    };
+    if workers <= 1 {
+        crate::util::vecops::gather_rows(
+            dst,
+            replies.iter().map(|r| &r.logits[..classes]),
+        );
+        return;
+    }
+    let rows_per = replies.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = dst;
+        let mut rows = replies;
+        while !rows.is_empty() {
+            let take = rows_per.min(rows.len());
+            let (chunk_rows, tail_rows) = rows.split_at(take);
+            let (chunk_dst, tail_dst) = rest.split_at_mut(take * classes);
+            rows = tail_rows;
+            rest = tail_dst;
+            s.spawn(move || {
+                crate::util::vecops::gather_rows(
+                    chunk_dst,
+                    chunk_rows.iter().map(|r| &r.logits[..classes]),
+                );
+            });
+        }
+    });
+}
+
 /// Reusable scratch for one in-flight bulk submission: every vector a
 /// sharded dispatch or bulk wait needs, checked out of a pool at
 /// submit and retired (cleared, returned) at gather — steady-state
@@ -165,7 +230,9 @@ struct Shared {
     gather_slab: StripedSlab,
     /// Lock-free freelist of reusable reply slots.
     slots: ArcStack<OneShot<Result<Reply>>>,
-    scratch: Mutex<Vec<BatchScratch>>,
+    /// Per-thread-striped pool of scratch bundles: concurrent bulk
+    /// submitters check out and retire on their own stripe.
+    scratch: StripedPool<BatchScratch>,
     boards: usize,
     /// The service time base; every waiter parks through this.
     clock: Clock,
@@ -209,7 +276,7 @@ impl Shared {
     }
 
     fn checkout(&self) -> BatchScratch {
-        self.scratch.lock().unwrap().pop().unwrap_or_default()
+        self.scratch.checkout().unwrap_or_default()
     }
 
     fn retire(&self, mut s: BatchScratch) {
@@ -220,7 +287,7 @@ impl Shared {
         s.replies.clear();
         s.host_acc.clear();
         s.fpga_acc.clear();
-        self.scratch.lock().unwrap().push(s);
+        self.scratch.retire(s);
     }
 }
 
@@ -369,7 +436,9 @@ impl PendingBatch {
         // Grab a recycled gather buffer from the striped slab, run the
         // O(batch * classes) gather copy outside any lock (concurrent
         // batch gathers interleave instead of serializing), then
-        // re-retain the slot.
+        // re-retain the slot.  The copy is the wide-kernel gather —
+        // parallelized across scoped workers when the buffer is large
+        // enough to amortize the handoff (see [`gather_replies`]).
         let mut buf: Arc<[f32]> = self
             .shared
             .gather_slab
@@ -378,10 +447,12 @@ impl PendingBatch {
         {
             let dst = Arc::get_mut(&mut buf)
                 .expect("grabbed gather buffer is uniquely owned");
-            for (i, r) in self.scratch.replies.iter().enumerate() {
-                dst[i * classes..(i + 1) * classes]
-                    .copy_from_slice(&r.logits);
-            }
+            gather_replies(
+                dst,
+                &self.scratch.replies,
+                classes,
+                &self.shared.clock,
+            );
         }
         self.shared.gather_slab.put_back(&buf);
         let logits = buf;
@@ -641,11 +712,17 @@ impl InferenceService {
                 oracle,
             )
         });
-        // Measured-latency feedback is only commensurable with the
-        // oracle when the cycle model paces the boards.
-        if pace == Pace::Fpga {
-            if let Some(plane) = &control {
+        // Measured-latency feedback: FPGA-paced boards feed the
+        // oracle-correction channel (only commensurable with the
+        // oracle when the cycle model paces the boards); engine-less
+        // boards can instead opt in to the measured host-latency EWMA
+        // (`SloPolicy::host_feedback`), so shed hints and scaling
+        // benches quote delivered numbers.  Exactly one channel arms.
+        if let Some(plane) = &control {
+            if pace == Pace::Fpga {
                 plane.arm_fpga_feedback();
+            } else if plane.policy().host_feedback {
+                plane.arm_host_feedback();
             }
         }
 
@@ -709,7 +786,7 @@ impl InferenceService {
             image_slab: StripedSlab::new(SLAB_STRIPES),
             gather_slab: StripedSlab::new(SLAB_STRIPES),
             slots: ArcStack::new(slot_cap),
-            scratch: Mutex::new(Vec::new()),
+            scratch: StripedPool::new(SLAB_STRIPES, SCRATCH_PER_STRIPE),
             boards: board_count,
             clock,
             stopping: AtomicBool::new(false),
@@ -1531,6 +1608,7 @@ mod tests {
             p99_target_ms: 1_000,
             max_queue: 1024,
             shed_policy: crate::config::ShedPolicy::RateLimit(1),
+            host_feedback: false,
         }
     }
 
@@ -1621,6 +1699,42 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn host_feedback_policy_feeds_measured_latency() {
+        // ROADMAP item 2 leftover: with `host_feedback` opted in, an
+        // engine-less (Immediate) service feeds measured host batch
+        // latencies into the control plane, so retry hints and the
+        // scaling benches read delivered numbers instead of the
+        // placeholder fallback.
+        let slo = crate::config::SloPolicy::target_ms(1_000, 1024)
+            .with_host_feedback();
+        let svc = slo_serve(slo);
+        let plane = svc.control().expect("slo plan boots a control plane");
+        assert_eq!(plane.host_ms_per_item(), 0.0, "unobserved at boot");
+        let numel = svc.image_numel();
+        for i in 0..32 {
+            let mut img = vec![0.0f32; numel];
+            img[0] = i as f32;
+            let reply = svc.classify(img).unwrap();
+            assert_eq!(reply.logits[0], i as f32);
+        }
+        assert!(
+            plane.host_ms_per_item() > 0.0,
+            "measured host latency never reached the plane"
+        );
+    }
+
+    #[test]
+    fn without_host_feedback_measured_latency_is_ignored() {
+        // The opt-in is real: the same engine-less service without the
+        // flag leaves the host channel unobserved.
+        let svc = slo_serve(one_rps_slo());
+        let plane = svc.control().unwrap();
+        let numel = svc.image_numel();
+        svc.classify(vec![0.0f32; numel]).unwrap();
+        assert_eq!(plane.host_ms_per_item(), 0.0, "channel must stay dark");
     }
 
     /// Engine-less service over an explicit homogeneous fleet spec

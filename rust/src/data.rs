@@ -57,6 +57,25 @@ pub fn synth_images(
         .collect()
 }
 
+/// Assemble per-image rows into one flat NCHW batch through the wide
+/// gather kernel — the staging shape `submit_batch` wants.  Every row
+/// must have the same length; the result is `rows.len() * numel`
+/// floats.  Benches use this to build batch payloads without paying a
+/// per-element copy in setup.
+pub fn flat_batch(rows: &[Vec<f32>]) -> Vec<f32> {
+    let numel = rows.first().map(|r| r.len()).unwrap_or(0);
+    debug_assert!(
+        rows.iter().all(|r| r.len() == numel),
+        "ragged rows cannot form a flat batch"
+    );
+    let mut flat = vec![0.0f32; rows.len() * numel];
+    crate::util::vecops::gather_rows(
+        &mut flat,
+        rows.iter().map(|r| r.as_slice()),
+    );
+    flat
+}
+
 /// One inference request in a generated workload trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceRequest {
@@ -174,6 +193,21 @@ mod tests {
         assert_eq!(a.len(), 2 * 3 * 4 * 4);
         assert_eq!(a, b);
         assert_ne!(a, synth_images(2, (3, 4, 4), 10));
+    }
+
+    #[test]
+    fn flat_batch_concatenates_rows_in_order() {
+        let rows = vec![
+            synth_images(1, (1, 2, 2), 1),
+            synth_images(1, (1, 2, 2), 2),
+            synth_images(1, (1, 2, 2), 3),
+        ];
+        let flat = flat_batch(&rows);
+        assert_eq!(flat.len(), 12);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(&flat[i * 4..(i + 1) * 4], &row[..], "row {i}");
+        }
+        assert!(flat_batch(&[]).is_empty());
     }
 
     #[test]

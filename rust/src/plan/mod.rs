@@ -1083,8 +1083,9 @@ pub(crate) fn serving_from_json(v: &Json) -> Result<ServingConfig> {
     Ok(s)
 }
 
-/// `"off"` or `{"p99_target_ms": t, "max_queue": q, "shed_policy": p}`
-/// — the closed-loop [`SloPolicy`] block on the serving config.
+/// `"off"` or `{"p99_target_ms": t, "max_queue": q, "shed_policy": p,
+/// "host_feedback": b}` — the closed-loop [`SloPolicy`] block on the
+/// serving config.
 pub(crate) fn slo_to_json(s: Option<SloPolicy>) -> Json {
     match s {
         None => Json::str("off"),
@@ -1092,6 +1093,7 @@ pub(crate) fn slo_to_json(s: Option<SloPolicy>) -> Json {
             ("p99_target_ms", Json::num(slo.p99_target_ms as f64)),
             ("max_queue", Json::num(slo.max_queue as f64)),
             ("shed_policy", shed_to_json(slo.shed_policy)),
+            ("host_feedback", Json::Bool(slo.host_feedback)),
         ]),
     }
 }
@@ -1107,7 +1109,7 @@ pub(crate) fn slo_from_json(v: &Json) -> Result<Option<SloPolicy>> {
         };
     }
     v.expect_keys(
-        &["p99_target_ms", "max_queue", "shed_policy"],
+        &["p99_target_ms", "max_queue", "shed_policy", "host_feedback"],
         "serving.slo",
     )?;
     // Missing max_queue falls back to a generous bound; the target is
@@ -1118,6 +1120,9 @@ pub(crate) fn slo_from_json(v: &Json) -> Result<Option<SloPolicy>> {
     }
     if let Some(p) = v.opt("shed_policy") {
         slo.shed_policy = shed_from_json(p)?;
+    }
+    if let Some(h) = v.opt("host_feedback") {
+        slo.host_feedback = h.as_bool()?;
     }
     Ok(Some(slo))
 }
@@ -1315,6 +1320,7 @@ mod tests {
             p99_target_ms: 40,
             max_queue: 16,
             shed_policy: ShedPolicy::RateLimit(2000),
+            host_feedback: true,
         });
         let j = plan.to_json().to_string();
         assert_eq!(Plan::from_json(&Json::parse(&j).unwrap()).unwrap(), plan);

@@ -18,8 +18,19 @@
 //! The numerics are an arbitrary-but-fixed strided projection of the
 //! input through the weight blob — a stand-in, not an approximation
 //! of the real network.  Golden-output tests are `pjrt`-gated.
+//!
+//! # Precision modelling
+//!
+//! [`Engine::set_precision`] selects the board's datapath number
+//! format (EXPERIMENTS.md §E5 ablation).  `Fp32` (the default) is the
+//! bit-identical classic path.  `Fixed16`/`Fixed8` round-trip every
+//! sampled input and weight value through the quantize–dequantize
+//! kernels in [`crate::util::vecops`] before the dot product —
+//! deterministic and batch-invariant like the fp32 path (the i8
+//! scales calibrate per image / per weight blob over the same strided
+//! sample walk, never across batch rows).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -29,6 +40,8 @@ use anyhow::anyhow;
 
 use super::manifest::{ArtifactMeta, Manifest, WeightViews};
 use super::ExecStats;
+use crate::fpga::timing::Precision;
+use crate::util::vecops;
 use crate::Result;
 
 /// Inputs sampled per logit (bounds the cost on big models).
@@ -44,6 +57,9 @@ pub struct Engine {
     /// PJRT engine's one-upload-per-model packed contract.
     weights: RefCell<HashMap<String, Rc<WeightViews>>>,
     stats: RefCell<ExecStats>,
+    /// Modelled datapath format; `Fp32` executes the classic
+    /// bit-identical path.
+    precision: Cell<Precision>,
 }
 
 impl Engine {
@@ -54,7 +70,15 @@ impl Engine {
             manifest,
             weights: RefCell::new(HashMap::new()),
             stats: RefCell::new(ExecStats::default()),
+            precision: Cell::new(Precision::Fp32),
         })
+    }
+
+    /// Select the modelled datapath precision (the board applies its
+    /// design point's format at spawn).  `Fp32` restores the exact
+    /// pre-precision numerics.
+    pub fn set_precision(&self, p: Precision) {
+        self.precision.set(p);
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -106,9 +130,39 @@ impl Engine {
         let per_image = meta.input.numel() / batch;
         let classes = meta.output.numel() / batch;
         let step = (per_image / SAMPLE_TAPS).max(1);
+        let precision = self.precision.get();
+        // Weight-side int8 scale: calibrated once per execute over an
+        // evenly strided sample of the blob — deterministic for a
+        // fixed model, so replays and conv-impl siblings agree.
+        let w_scale = if precision == Precision::Fixed8 {
+            let wstep = (weights.len() / SAMPLE_TAPS).max(1);
+            let mut max_abs = 0.0f32;
+            let mut k = 0;
+            while k < weights.len() {
+                max_abs = max_abs.max(weights[k].abs());
+                k += wstep;
+            }
+            vecops::i8_scale(max_abs)
+        } else {
+            1.0
+        };
         let mut out = Vec::with_capacity(meta.output.numel());
         for b in 0..batch {
             let img = &input[b * per_image..(b + 1) * per_image];
+            // Input-side int8 scale calibrates per image (the same
+            // taps the dot product reads), so batching never changes
+            // a row's numerics.
+            let in_scale = if precision == Precision::Fixed8 {
+                let mut max_abs = 0.0f32;
+                let mut j = 0;
+                while j < per_image {
+                    max_abs = max_abs.max(img[j].abs());
+                    j += step;
+                }
+                vecops::i8_scale(max_abs)
+            } else {
+                1.0
+            };
             for c in 0..classes {
                 // Strided dot product of the image against a
                 // class-dependent walk through the weight blob; f64
@@ -117,11 +171,22 @@ impl Engine {
                 let mut j = 0;
                 while j < per_image {
                     let w = if weights.is_empty() {
-                        0.125
+                        0.125f32
                     } else {
-                        weights[(c * 131 + j) % weights.len()] as f64
+                        weights[(c * 131 + j) % weights.len()]
                     };
-                    acc += img[j] as f64 * w;
+                    let (x, w) = match precision {
+                        Precision::Fp32 => (img[j], w),
+                        Precision::Fixed16 => (
+                            vecops::f16_round_trip(img[j]),
+                            vecops::f16_round_trip(w),
+                        ),
+                        Precision::Fixed8 => (
+                            vecops::i8_round_trip(img[j], in_scale),
+                            vecops::i8_round_trip(w, w_scale),
+                        ),
+                    };
+                    acc += x as f64 * w as f64;
                     j += step;
                 }
                 out.push(acc as f32);
@@ -225,6 +290,29 @@ mod tests {
         // Second lookup (any artifact of the model) shares the decode.
         let v2 = e.weights_for(&art).unwrap();
         assert!(Rc::ptr_eq(&v, &v2));
+    }
+
+    #[test]
+    fn precision_paths_are_deterministic_and_fp32_restores() {
+        let Some(e) = engine_or_skip() else { return };
+        let art = e.manifest().artifact("tinynet_b1_jnp").unwrap().clone();
+        // 0.05 is not f16-representable, so Fixed16 must actually
+        // perturb the inputs it samples.
+        let input = vec![0.05f32; art.input.numel()];
+        let fp32 = e.execute("tinynet_b1_jnp", &input).unwrap();
+        e.set_precision(Precision::Fixed16);
+        let a = e.execute("tinynet_b1_jnp", &input).unwrap();
+        let b = e.execute("tinynet_b1_jnp", &input).unwrap();
+        assert_eq!(a, b, "fixed16 path must stay deterministic");
+        assert_eq!(a.len(), fp32.len());
+        assert!(a.iter().all(|v| v.is_finite()));
+        e.set_precision(Precision::Fixed8);
+        let c = e.execute("tinynet_b1_jnp", &input).unwrap();
+        assert_eq!(c.len(), fp32.len());
+        assert!(c.iter().all(|v| v.is_finite()));
+        // Back to Fp32: bit-identical to the pre-precision engine.
+        e.set_precision(Precision::Fp32);
+        assert_eq!(e.execute("tinynet_b1_jnp", &input).unwrap(), fp32);
     }
 
     #[test]

@@ -347,21 +347,22 @@ impl Manifest {
     }
 }
 
-/// Little-endian byte buffer to f32 vector — single pass over
-/// 4-byte chunks.  A length that is not a multiple of 4 is a corrupt
-/// blob and returns an error instead of silently truncating the tail.
+/// Little-endian byte buffer to f32 vector.  A length that is not a
+/// multiple of 4 is a corrupt blob and returns an error instead of
+/// silently truncating the tail.  Valid input decodes through
+/// [`crate::util::vecops::bytes_to_f32_wide`]: an alignment-checked
+/// reinterpret-in-place fast path (one wide copy on little-endian
+/// targets) with a bit-identical `from_le_bytes` fallback for
+/// misaligned views.
 pub fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
-    let chunks = bytes.chunks_exact(4);
-    if !chunks.remainder().is_empty() {
+    if bytes.len() % 4 != 0 {
         return Err(anyhow!(
             "f32 blob length {} is not a multiple of 4 ({} trailing bytes)",
             bytes.len(),
             bytes.len() % 4
         ));
     }
-    Ok(chunks
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    Ok(crate::util::vecops::bytes_to_f32_wide(bytes))
 }
 
 #[cfg(test)]
@@ -395,6 +396,33 @@ mod tests {
             "{err}"
         );
         assert!(err.to_string().contains("1 trailing"), "{err}");
+    }
+
+    #[test]
+    fn bytes_to_f32_aligned_and_misaligned_views_agree() {
+        // Regression for the wide fast path: decoding an aligned
+        // blob and a deliberately misaligned view of the same
+        // payload must both succeed and agree bit-for-bit, whichever
+        // internal branch each takes.
+        let vals: Vec<f32> = (0..64).map(|i| i as f32 * 0.37 - 9.5).collect();
+        let payload: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        // Pad on the left so at least one of the four offsets is
+        // guaranteed misaligned relative to a 4-byte boundary.
+        let mut padded = vec![0u8; 4];
+        padded.extend_from_slice(&payload);
+        for off in 0..4usize {
+            let view = &padded[off..off + payload.len()];
+            let got = bytes_to_f32(view).unwrap();
+            let want: Vec<f32> = view
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "offset {off}");
+            }
+        }
     }
 
     fn pm(name: &str, offset: usize, numel: usize) -> ParamMeta {

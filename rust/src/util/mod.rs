@@ -9,5 +9,6 @@ pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod sim;
+pub mod vecops;
 
 pub use json::Json;

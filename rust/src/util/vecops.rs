@@ -1,0 +1,634 @@
+//! Vectorized data-plane kernels with scalar oracles.
+//!
+//! FFCNN's throughput argument is a data-movement argument: the deep
+//! pipeline only pays off while the kernels stay fed.  The host-side
+//! analog of that lesson lives here — every bulk copy/convert on the
+//! serving request path (gather/scatter for shard reassembly and
+//! staging, the `bytes_to_f32` weight-blob decode, fp16/int8
+//! quantize–dequantize for the precision paths) is a chunked,
+//! autovectorization-friendly kernel instead of an effectively
+//! single-lane byte loop.
+//!
+//! # The per-kernel equivalence contract
+//!
+//! Every wide kernel keeps a `*_scalar` reference implementation in
+//! this module as its oracle, and the in-module property tests pin
+//! the pair **bit-equal** over random lengths (including 0, 1,
+//! lane−1, lane, lane+1) and misaligned offsets:
+//!
+//! | kernel              | oracle                     | contract   |
+//! |---------------------|----------------------------|------------|
+//! | [`copy_f32`]        | [`copy_f32_scalar`]        | bit-equal  |
+//! | [`gather_rows`]     | [`gather_rows_scalar`]     | bit-equal  |
+//! | [`scatter_stride`]  | [`scatter_stride_scalar`]  | bit-equal  |
+//! | [`bytes_to_f32_wide`] | [`bytes_to_f32_scalar`]  | bit-equal  |
+//! | [`quantize_f16`]    | [`f32_to_f16`] per element | bit-equal  |
+//! | [`dequantize_f16`]  | [`f16_to_f32`] per element | bit-equal  |
+//! | [`quantize_i8`]     | [`quantize_i8_scalar`]     | bit-equal  |
+//! | [`dequantize_i8`]   | [`dequantize_i8_scalar`]   | bit-equal  |
+//!
+//! No kernel here is allowed a pinned-ULP tolerance: the f32 copy and
+//! convert paths move bits, and the quantizers are deterministic
+//! functions of their input bits, so "vectorized" can never mean
+//! "slightly different".  The fp16 conversion itself is IEEE 754
+//! binary16 with round-to-nearest-even, pinned against a
+//! numpy-generated table and an exhaustive 65536-value round-trip.
+//!
+//! `rust/benches/bench_dataplane.rs` measures the resulting
+//! throughput (GB/s, wide vs scalar) into `BENCH_dataplane.json`.
+
+/// Wide f32 copy: the compiler lowers this to a plain `memcpy`, which
+/// the backend expands into full-width vector moves.  Kept as a named
+/// kernel so call sites document *why* the copy is shaped this way
+/// and so the bench can pit it against [`copy_f32_scalar`].
+///
+/// Panics if the lengths differ (same contract as `copy_from_slice`).
+#[inline]
+pub fn copy_f32(dst: &mut [f32], src: &[f32]) {
+    dst.copy_from_slice(src);
+}
+
+/// Scalar oracle for [`copy_f32`]: one element per iteration.
+pub fn copy_f32_scalar(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for i in 0..src.len() {
+        dst[i] = src[i];
+    }
+}
+
+/// Gather variable-length rows into one contiguous buffer: row `k`
+/// lands at the offset where row `k-1` ended.  The shard-reassembly
+/// and batch-staging kernel — each row is one reply's logits (or one
+/// request's image) and `dst` is the flat gather target.
+///
+/// The rows must tile `dst` exactly (debug-asserted); each row copy
+/// is a wide [`copy_f32`].
+pub fn gather_rows<'a>(
+    dst: &mut [f32],
+    rows: impl IntoIterator<Item = &'a [f32]>,
+) {
+    let mut off = 0;
+    for row in rows {
+        copy_f32(&mut dst[off..off + row.len()], row);
+        off += row.len();
+    }
+    debug_assert_eq!(off, dst.len(), "rows must tile dst exactly");
+}
+
+/// Scalar oracle for [`gather_rows`].
+pub fn gather_rows_scalar<'a>(
+    dst: &mut [f32],
+    rows: impl IntoIterator<Item = &'a [f32]>,
+) {
+    let mut off = 0;
+    for row in rows {
+        for (i, &v) in row.iter().enumerate() {
+            dst[off + i] = v;
+        }
+        off += row.len();
+    }
+    debug_assert_eq!(off, dst.len(), "rows must tile dst exactly");
+}
+
+/// Strided scatter: `dst[i * dst_stride] = src[i * src_stride]` for
+/// `i` in `0..dst.len() / dst_stride`.  The engine-less board uses
+/// this to echo each image's tag into its logits row after a wide
+/// zero fill (`dst_stride` = classes, `src_stride` = image numel).
+pub fn scatter_stride(
+    dst: &mut [f32],
+    dst_stride: usize,
+    src: &[f32],
+    src_stride: usize,
+) {
+    if dst_stride == 0 {
+        return;
+    }
+    let n = dst.len() / dst_stride;
+    for i in 0..n {
+        dst[i * dst_stride] = src[i * src_stride];
+    }
+}
+
+/// Scalar oracle for [`scatter_stride`] (the strided walk *is*
+/// scalar; the oracle exists so the contract stays test-pinned if the
+/// kernel ever grows a gather-based wide form).
+pub fn scatter_stride_scalar(
+    dst: &mut [f32],
+    dst_stride: usize,
+    src: &[f32],
+    src_stride: usize,
+) {
+    if dst_stride == 0 {
+        return;
+    }
+    let n = dst.len() / dst_stride;
+    let mut d = 0;
+    let mut s = 0;
+    for _ in 0..n {
+        dst[d] = src[s];
+        d += dst_stride;
+        s += src_stride;
+    }
+}
+
+/// Little-endian `&[u8]` → `Vec<f32>` with an alignment-checked wide
+/// fast path.
+///
+/// `bytes.len()` must be a multiple of 4 (debug-asserted; the public
+/// entry point [`crate::runtime::bytes_to_f32`] validates and reports
+/// trailing bytes before calling here).  When the slice happens to be
+/// 4-byte aligned — every allocator-fresh weight blob is — the bytes
+/// reinterpret in place as `u32` words (any bit pattern is a valid
+/// `u32`) and convert via `u32::from_le`, which is a no-op on
+/// little-endian targets: the whole decode becomes one wide copy.
+/// Misaligned input (a sliced view into a larger blob) falls back to
+/// the chunked `from_le_bytes` path, bit-identical.
+pub fn bytes_to_f32_wide(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    // SAFETY: u32 has no invalid bit patterns and no alignment
+    // requirement beyond its own, which `align_to` enforces.
+    let (head, words, tail) = unsafe { bytes.align_to::<u32>() };
+    if head.is_empty() && tail.is_empty() {
+        out.extend(words.iter().map(|&w| f32::from_bits(u32::from_le(w))));
+    } else {
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+    }
+    out
+}
+
+/// Scalar oracle for [`bytes_to_f32_wide`]: byte-at-a-time
+/// little-endian assembly, one element per iteration.
+pub fn bytes_to_f32_scalar(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for i in 0..bytes.len() / 4 {
+        let mut bits = 0u32;
+        for b in 0..4 {
+            bits |= (bytes[i * 4 + b] as u32) << (8 * b);
+        }
+        out.push(f32::from_bits(bits));
+    }
+    out
+}
+
+/// f32 → IEEE 754 binary16, round-to-nearest-even.
+///
+/// Overflow (|x| ≥ 65520) maps to ±infinity, underflow through the
+/// half subnormal range is rounded (not flushed), and NaN payloads
+/// keep their top 10 bits — forced nonzero so a NaN can never round
+/// into an infinity.  Pinned bit-exact against numpy's
+/// `float32 → float16` cast in the tests below.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let man = bits & 0x007f_ffff;
+    if exp == 128 {
+        // Inf or NaN.
+        if man == 0 {
+            return sign | 0x7c00;
+        }
+        let mut payload = (man >> 13) as u16;
+        if payload == 0 {
+            payload = 1; // stay NaN: payload must not vanish
+        }
+        return sign | 0x7c00 | payload;
+    }
+    if exp > 15 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp >= -14 {
+        // Normal half: 10 mantissa bits, round-to-nearest-even on
+        // the 13 dropped bits (a mantissa carry walks into the
+        // exponent, which is exactly the right rounding there too).
+        let half_man = (man >> 13) as u16;
+        let round = man & 0x1fff;
+        let mut h = sign | (((exp + 15) as u16) << 10) | half_man;
+        if round > 0x1000 || (round == 0x1000 && half_man & 1 == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    if exp < -25 {
+        return sign; // below half the smallest subnormal → ±0
+    }
+    // Subnormal half: value = m · 2^(exp−23) with the implicit bit
+    // restored; shift into units of 2^−24 and round to nearest even.
+    let m = man | 0x0080_0000;
+    let shift = (-exp - 1) as u32; // 14..=24
+    let half_man = (m >> shift) as u16;
+    let round = m & ((1 << shift) - 1);
+    let halfway = 1 << (shift - 1);
+    let mut h = sign | half_man;
+    if round > halfway || (round == halfway && half_man & 1 == 1) {
+        h += 1;
+    }
+    h
+}
+
+/// IEEE 754 binary16 → f32 (exact: every half value is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: normalize into an f32 exponent.
+        let pos = 31 - man.leading_zeros(); // highest set bit, 0..=9
+        let f_man = (man << (23 - pos)) & 0x007f_ffff;
+        let f_exp = pos + 103; // (pos − 24) + 127
+        return f32::from_bits(sign | (f_exp << 23) | f_man);
+    }
+    if exp == 31 {
+        // Inf / NaN: widen the payload into the f32 mantissa.
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Slice fp16 quantize: `dst[i] = f32_to_f16(src[i])`.
+pub fn quantize_f16(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_f16(s);
+    }
+}
+
+/// Slice fp16 dequantize: `dst[i] = f16_to_f32(src[i])`.
+pub fn dequantize_f16(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f16_to_f32(s);
+    }
+}
+
+/// One fp16 round trip for a single value — the precision-emulation
+/// primitive `runtime::cpu_ref` applies to sampled weights and
+/// activations under `Precision::Fixed16`.
+#[inline]
+pub fn f16_round_trip(x: f32) -> f32 {
+    f16_to_f32(f32_to_f16(x))
+}
+
+/// Symmetric int8 scale for a tensor with this maximum magnitude:
+/// the full ±127 range covers ±max_abs.  Zero (or non-finite)
+/// magnitude yields scale 1.0 so the quantizer stays total.
+pub fn i8_scale(max_abs: f32) -> f32 {
+    if max_abs > 0.0 && max_abs.is_finite() {
+        max_abs / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Slice symmetric int8 quantize: `dst[i] = round(src[i] / scale)`
+/// clamped to ±127 (round-half-away-from-zero, the hardware
+/// convention for fixed-point conversion).  NaN clamps to 0.
+pub fn quantize_i8(src: &[f32], dst: &mut [i8], scale: f32) {
+    assert_eq!(src.len(), dst.len());
+    let inv = 1.0 / scale;
+    for (d, &s) in dst.iter_mut().zip(src) {
+        let q = (s * inv).round();
+        *d = if q.is_nan() { 0 } else { q.clamp(-127.0, 127.0) as i8 };
+    }
+}
+
+/// Scalar oracle for [`quantize_i8`].
+pub fn quantize_i8_scalar(src: &[f32], dst: &mut [i8], scale: f32) {
+    assert_eq!(src.len(), dst.len());
+    let inv = 1.0 / scale;
+    for i in 0..src.len() {
+        let q = (src[i] * inv).round();
+        dst[i] =
+            if q.is_nan() { 0 } else { q.clamp(-127.0, 127.0) as i8 };
+    }
+}
+
+/// Slice int8 dequantize: `dst[i] = src[i] as f32 * scale`.
+pub fn dequantize_i8(src: &[i8], dst: &mut [f32], scale: f32) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32 * scale;
+    }
+}
+
+/// Scalar oracle for [`dequantize_i8`].
+pub fn dequantize_i8_scalar(src: &[i8], dst: &mut [f32], scale: f32) {
+    assert_eq!(src.len(), dst.len());
+    for i in 0..src.len() {
+        dst[i] = src[i] as f32 * scale;
+    }
+}
+
+/// One int8 round trip for a single value at a given scale — the
+/// `Precision::Fixed8` emulation primitive.
+#[inline]
+pub fn i8_round_trip(x: f32, scale: f32) -> f32 {
+    let mut q = [0i8];
+    let mut d = [0.0f32];
+    quantize_i8(&[x], &mut q, scale);
+    dequantize_i8(&q, &mut d, scale);
+    d[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, int_in, pick};
+
+    /// Lengths every kernel property sweeps: the SIMD edge cases
+    /// (0, 1, lane−1, lane, lane+1 for 4/8/16-lane widths) plus a
+    /// random tail.
+    const EDGE_LENS: &[usize] =
+        &[0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65];
+
+    fn rand_f32(rng: &mut crate::data::Rng) -> f32 {
+        // Mix magnitudes (including denormal-half territory) and the
+        // occasional special value.
+        match int_in(rng, 0, 9) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::from_bits(rng.next_u64() as u32), // any bits
+            _ => {
+                let m = (rng.next_u64() % (1 << 24)) as f32 / (1 << 12) as f32;
+                let s = if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                m * s
+            }
+        }
+    }
+
+    #[test]
+    fn copy_wide_matches_scalar_oracle() {
+        forall(
+            "copy_f32 == scalar",
+            |rng| {
+                let n = *pick(rng, EDGE_LENS);
+                (0..n).map(|_| rand_f32(rng)).collect::<Vec<f32>>()
+            },
+            |src| {
+                let mut wide = vec![0.0f32; src.len()];
+                let mut scalar = vec![0.0f32; src.len()];
+                copy_f32(&mut wide, src);
+                copy_f32_scalar(&mut scalar, src);
+                wide.iter().zip(&scalar).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn gather_rows_matches_scalar_oracle() {
+        forall(
+            "gather_rows == scalar",
+            |rng| {
+                let rows = int_in(rng, 0, 9);
+                (0..rows)
+                    .map(|_| {
+                        let n = *pick(rng, EDGE_LENS);
+                        (0..n).map(|_| rand_f32(rng)).collect::<Vec<f32>>()
+                    })
+                    .collect::<Vec<Vec<f32>>>()
+            },
+            |rows| {
+                let total: usize = rows.iter().map(|r| r.len()).sum();
+                let mut wide = vec![0.0f32; total];
+                let mut scalar = vec![0.0f32; total];
+                gather_rows(&mut wide, rows.iter().map(|r| &r[..]));
+                gather_rows_scalar(
+                    &mut scalar,
+                    rows.iter().map(|r| &r[..]),
+                );
+                wide.iter().zip(&scalar).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn scatter_stride_matches_scalar_oracle() {
+        forall(
+            "scatter_stride == scalar",
+            |rng| {
+                let n = int_in(rng, 0, 16);
+                let dst_stride = int_in(rng, 1, 8);
+                let src_stride = int_in(rng, 1, 8);
+                let src: Vec<f32> = (0..n.max(1) * src_stride)
+                    .map(|_| rand_f32(rng))
+                    .collect();
+                (n, dst_stride, src_stride, src)
+            },
+            |(n, dst_stride, src_stride, src)| {
+                let mut wide = vec![0.0f32; n * dst_stride];
+                let mut scalar = vec![0.0f32; n * dst_stride];
+                scatter_stride(&mut wide, *dst_stride, src, *src_stride);
+                scatter_stride_scalar(
+                    &mut scalar,
+                    *dst_stride,
+                    src,
+                    *src_stride,
+                );
+                wide.iter().zip(&scalar).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn scatter_stride_zero_stride_is_a_noop() {
+        let mut dst = vec![1.0f32; 4];
+        scatter_stride(&mut dst, 0, &[9.0], 1);
+        assert_eq!(dst, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn bytes_to_f32_wide_matches_scalar_at_every_alignment() {
+        forall(
+            "bytes_to_f32 wide == scalar (incl. misaligned)",
+            |rng| {
+                let words = *pick(rng, EDGE_LENS);
+                let offset = int_in(rng, 0, 3);
+                let bytes: Vec<u8> = (0..offset + words * 4)
+                    .map(|_| rng.next_u64() as u8)
+                    .collect();
+                (offset, bytes)
+            },
+            |(offset, bytes)| {
+                // Slicing at `offset` exercises both the aligned
+                // fast path and the misaligned fallback.
+                let view = &bytes[*offset..];
+                let wide = bytes_to_f32_wide(view);
+                let scalar = bytes_to_f32_scalar(view);
+                wide.len() == scalar.len()
+                    && wide.iter().zip(&scalar).all(|(a, b)| {
+                        a.to_bits() == b.to_bits()
+                    })
+            },
+        );
+    }
+
+    #[test]
+    fn bytes_to_f32_round_trips_values() {
+        let vals = [0.0f32, -1.5, 3.25, f32::MIN_POSITIVE, 1e30];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let back = bytes_to_f32_wide(&bytes);
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in back.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f16_conversion_matches_numpy_table() {
+        // (f32 bits, expected f16 bits), generated with numpy 2.0's
+        // float32 → float16 cast (IEEE round-to-nearest-even).
+        const TABLE: &[(u32, u16)] = &[
+            (0x0000_0000, 0x0000), // 0.0
+            (0x8000_0000, 0x8000), // -0.0
+            (0x3f80_0000, 0x3c00), // 1.0
+            (0xbf80_0000, 0xbc00), // -1.0
+            (0x3f00_0000, 0x3800), // 0.5
+            (0x4000_0000, 0x4000), // 2.0
+            (0x477f_e000, 0x7bff), // 65504.0 (max finite half)
+            (0xc77f_e000, 0xfbff), // -65504.0
+            (0x477f_f000, 0x7c00), // 65520.0 → inf
+            (0x322b_cc77, 0x0000), // 1e-8 → 0 (underflow)
+            (0x3880_0000, 0x0400), // smallest normal half
+            (0x387f_c000, 0x03ff), // largest subnormal half
+            (0x3380_0000, 0x0001), // smallest subnormal half
+            (0x3300_0000, 0x0000), // half of smallest subnormal → 0 (ties-to-even)
+            (0x3300_d959, 0x0001), // just above the tie → smallest subnormal
+            (0x3dcc_cccd, 0x2e66), // 0.1
+            (0x4049_0fdb, 0x4248), // pi
+            (0xc02d_f854, 0xc170), // -e
+            (0x449a_522b, 0x64d3), // 1234.5678 (mantissa carry on round)
+            (0x3f80_2000, 0x3c01), // 1.0009765625 (1 + 1 ulp of half)
+            (0x3f80_1000, 0x3c00), // 1.00048828125 (tie → even)
+            (0x7f80_0000, 0x7c00), // inf
+            (0xff80_0000, 0xfc00), // -inf
+            (0x7fc0_0000, 0x7e00), // quiet NaN
+            (0x7f80_0001, 0x7c01), // NaN whose payload would vanish
+        ];
+        for &(f_bits, h_bits) in TABLE {
+            let got = f32_to_f16(f32::from_bits(f_bits));
+            assert_eq!(
+                got, h_bits,
+                "f32_to_f16({f_bits:#010x}) = {got:#06x}, want {h_bits:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn f16_round_trips_every_half_value_exhaustively() {
+        // Every one of the 65536 half bit patterns must survive
+        // h → f32 → h bit-exactly (subnormals, infinities and NaN
+        // payloads included) — this is what makes Fixed16 emulation
+        // idempotent.
+        for h in 0..=u16::MAX {
+            let back = f32_to_f16(f16_to_f32(h));
+            assert_eq!(back, h, "half {h:#06x} round-tripped to {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_slice_kernels_match_per_element_oracle() {
+        forall(
+            "quantize/dequantize_f16 == per-element",
+            |rng| {
+                let n = *pick(rng, EDGE_LENS);
+                (0..n).map(|_| rand_f32(rng)).collect::<Vec<f32>>()
+            },
+            |src| {
+                let mut q = vec![0u16; src.len()];
+                quantize_f16(src, &mut q);
+                if !q
+                    .iter()
+                    .zip(src)
+                    .all(|(&h, &s)| h == f32_to_f16(s))
+                {
+                    return false;
+                }
+                let mut d = vec![0.0f32; src.len()];
+                dequantize_f16(&q, &mut d);
+                d.iter().zip(&q).all(|(&f, &h)| {
+                    f.to_bits() == f16_to_f32(h).to_bits()
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn i8_kernels_match_scalar_oracle() {
+        forall(
+            "quantize/dequantize_i8 == scalar",
+            |rng| {
+                let n = *pick(rng, EDGE_LENS);
+                let scale = i8_scale(
+                    (int_in(rng, 1, 1000) as f32) / 8.0,
+                );
+                let src: Vec<f32> =
+                    (0..n).map(|_| rand_f32(rng)).collect();
+                (scale, src)
+            },
+            |(scale, src)| {
+                let mut wide = vec![0i8; src.len()];
+                let mut scalar = vec![0i8; src.len()];
+                quantize_i8(src, &mut wide, *scale);
+                quantize_i8_scalar(src, &mut scalar, *scale);
+                if wide != scalar {
+                    return false;
+                }
+                let mut dw = vec![0.0f32; src.len()];
+                let mut ds = vec![0.0f32; src.len()];
+                dequantize_i8(&wide, &mut dw, *scale);
+                dequantize_i8_scalar(&scalar, &mut ds, *scale);
+                dw.iter().zip(&ds).all(|(a, b)| {
+                    a.to_bits() == b.to_bits()
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn i8_round_trip_exact_where_representable() {
+        // Grid points k · scale with |k| ≤ 127 and a power-of-two
+        // scale are exactly representable in f32, so the round trip
+        // must return them bit-equal.
+        let scale = 0.03125f32; // 2^-5
+        for k in -127i32..=127 {
+            let x = k as f32 * scale;
+            let back = i8_round_trip(x, scale);
+            assert_eq!(
+                back.to_bits(),
+                x.to_bits(),
+                "k={k}: {x} came back as {back}"
+            );
+        }
+        // Saturation clamps, it does not wrap.
+        assert_eq!(i8_round_trip(10.0, scale), 127.0 * scale);
+        assert_eq!(i8_round_trip(-10.0, scale), -127.0 * scale);
+        // NaN quantizes to 0, not UB.
+        assert_eq!(i8_round_trip(f32::NAN, scale), 0.0);
+    }
+
+    #[test]
+    fn i8_scale_is_total() {
+        assert_eq!(i8_scale(0.0), 1.0);
+        assert_eq!(i8_scale(-1.0), 1.0);
+        assert_eq!(i8_scale(f32::INFINITY), 1.0);
+        assert_eq!(i8_scale(f32::NAN), 1.0);
+        assert_eq!(i8_scale(127.0), 1.0);
+    }
+}

@@ -1,7 +1,7 @@
 //! Concurrency hammer for the serving hot path at `Pace::Immediate`
 //! (engine-less boards — no artifacts needed, so these always run).
 //!
-//! Pins the three claims the raw-speed pass makes:
+//! Pins the claims the raw-speed and multi-core scaling passes make:
 //!
 //! 1. **Ordering + isolation** — N submitters × M boards with work
 //!    stealing: every reply echoes its own request's payload (the
@@ -16,6 +16,9 @@
 //!    resolves every mid-flight waiter (no hang), and loss surfaces
 //!    through the typed [`ServeError::BoardLost`] channel rather than
 //!    a stringified shadow.
+//! 4. **Striped intake** — pinned routing runs one lane per board;
+//!    concurrent submitters on separate lanes keep per-thread
+//!    submission order and the warm bulk path stays allocation-free.
 //!
 //! Allocation counting is process-wide, so every test serializes on
 //! one lock.
@@ -227,12 +230,89 @@ fn bulk_steady_state_reaches_zero_allocations() {
     );
 }
 
+#[test]
+fn striped_lanes_preserve_order_and_reach_zero_alloc() {
+    let _g = lock();
+    // Pinned routing (LeastOutstanding) selects the pool's striped
+    // backend: one lane (mutex + condvars) per board, so N submitter
+    // threads never serialize on one pool lock.  Pre-spawned
+    // submitters released by a barrier hammer the lanes concurrently;
+    // every thread's bulk groups must still resolve in its own
+    // submission order.
+    const LANES: usize = 4;
+    const PER_GROUP: usize = 24;
+    let svc =
+        immediate(LANES, 4, Policy::LeastOutstanding, ShardPolicy::None);
+    let numel = svc.image_numel();
+    let barrier = std::sync::Barrier::new(LANES);
+    std::thread::scope(|s| {
+        for t in 0..LANES {
+            let svc = &svc;
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                for round in 0..8usize {
+                    let tag = |i: usize| {
+                        (t * 100_000 + round * 1_000 + i) as f32 + 1.0
+                    };
+                    let set = svc
+                        .submit_many(
+                            (0..PER_GROUP).map(|i| tagged(numel, tag(i))),
+                        )
+                        .unwrap();
+                    let mut k = 0usize;
+                    set.wait_each(|r| {
+                        assert_eq!(
+                            r.unwrap().logits[0],
+                            tag(k),
+                            "thread {t} round {round}: reply {k} \
+                             out of order on the striped intake"
+                        );
+                        k += 1;
+                    });
+                    assert_eq!(k, PER_GROUP);
+                }
+            });
+        }
+    });
+    // The multi-lane machinery must not cost the zero-alloc steady
+    // state: after the hammer, a warm bulk round on the same service
+    // reaches literally zero heap allocations (best-of, like the
+    // single-lane bulk test — slab high-water depends on scheduling).
+    let image = tagged(numel, 9.5);
+    let round = |svc: &InferenceService| {
+        let set = svc
+            .submit_many(std::iter::repeat_with(|| image.clone()).take(16))
+            .unwrap();
+        set.wait_each(|r| {
+            assert_eq!(r.unwrap().logits[0], 9.5);
+        });
+    };
+    for _ in 0..8 {
+        round(&svc);
+    }
+    let mut best = u64::MAX;
+    for _ in 0..10 {
+        let before = allocation_count();
+        round(&svc);
+        best = best.min(allocation_count() - before);
+        if best == 0 {
+            break;
+        }
+    }
+    assert_eq!(
+        best, 0,
+        "striped multi-lane submit path never reached an \
+         allocation-free round (best round allocated {best} times)"
+    );
+}
+
 /// Engine-less board spec for the mid-flight loss test.
 fn immediate_board_spec() -> BoardSpec {
     BoardSpec {
         index: 3,
         artifacts_dir: PathBuf::from("/nonexistent"),
-        model: models::tinynet(),
+        models: vec![models::tinynet()],
         device: &STRATIX10,
         design: ffcnn_stratix10_params(),
         overlap: ffcnn::fpga::timing::OverlapPolicy::WithinGroup,
@@ -240,6 +320,7 @@ fn immediate_board_spec() -> BoardSpec {
         warm: vec![],
         clock: ffcnn::util::sim::Clock::default(),
         faults: ffcnn::coordinator::FaultPlan::default(),
+        fleet: None,
     }
 }
 
@@ -261,7 +342,7 @@ fn board_lost_mid_flight_resolves_every_waiter() {
             (0..8).map(|_| Arc::new(OneShot::new())).collect();
         for slot in &slots {
             board
-                .submit_to(artifact.clone(), 1, input.clone(), slot)
+                .submit_to(artifact.clone(), 0, 1, input.clone(), slot)
                 .unwrap();
         }
         drop(board); // close + drain + join
